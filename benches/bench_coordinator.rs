@@ -1,0 +1,33 @@
+//! Coordinator/router bench: request throughput across the worker pool —
+//! the L3 serving claim (EXPERIMENTS.md §Perf).
+
+use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use repro::util::bench::{bench, header};
+use repro::util::rng::Rng;
+
+fn main() {
+    header("coordinator");
+    let mut rng = Rng::seed_from_u64(4);
+    for workers in [1usize, 4] {
+        for dim in [16usize, 64, 256] {
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                workers,
+                ..Default::default()
+            });
+            let reqs: Vec<TransformRequest> = (0..32)
+                .map(|_| TransformRequest {
+                    x: (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect(),
+                    thresholds_units: vec![0.0; dim],
+                })
+                .collect();
+            let r = bench(
+                &format!("batch32 dim={dim} workers={workers}"),
+                || {
+                    coord.transform_batch(&reqs).unwrap();
+                },
+            );
+            r.report_throughput(32.0, "req");
+            coord.shutdown();
+        }
+    }
+}

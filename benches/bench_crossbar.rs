@@ -1,0 +1,35 @@
+//! Analog-simulator bench: full 4-step bitplane op per tile size/backend
+//! (Fig. 11 Monte-Carlo cost driver) — per-table target: Table I / Fig 11.
+
+use repro::analog::crossbar::CrossbarConfig;
+use repro::analog::variability::{measure_failure, sample_instance};
+use repro::util::bench::{bench, black_box, header};
+use repro::util::rng::Rng;
+
+fn main() {
+    header("crossbar");
+    for n in [16usize, 32] {
+        let mut rng = Rng::seed_from_u64(1);
+        let xb = sample_instance(CrossbarConfig::new(n, 0.9), &mut rng);
+        let input: Vec<i8> = (0..n).map(|_| rng.ternary()).collect();
+        let r = bench(&format!("analog bitplane op {n}x{n}"), || {
+            black_box(xb.execute_bitplane(black_box(&input), &mut rng));
+        });
+        r.report_throughput((n * n) as f64, "1b-MAC");
+        bench(&format!("ideal_psums {n}x{n}"), || {
+            black_box(xb.ideal_psums(black_box(&input)));
+        })
+        .report();
+    }
+    let mut rng = Rng::seed_from_u64(2);
+    bench("fig11b point (16x16, 20 vec x 2 inst)", || {
+        black_box(measure_failure(
+            &CrossbarConfig::new(16, 0.9),
+            0.03,
+            20,
+            2,
+            &mut rng,
+        ));
+    })
+    .report();
+}

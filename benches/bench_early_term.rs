@@ -1,0 +1,36 @@
+//! Early-termination scheduler bench (Fig. 9c / Table I cycle savings).
+
+use repro::bitplane::early_term::{run_element, sample_threshold, ThresholdDist};
+use repro::coordinator::{schedule_transform, Tile, TileKind};
+use repro::util::bench::{bench, black_box, header};
+use repro::util::rng::Rng;
+
+fn main() {
+    header("early_term");
+    let mut rng = Rng::seed_from_u64(3);
+    let obits: Vec<i8> = (0..8).map(|_| rng.ternary()).collect();
+    bench("run_element 8 planes, T=0", || {
+        black_box(run_element(black_box(&obits), 8, 0.0));
+    })
+    .report();
+    bench("run_element 8 planes, wald T", || {
+        let t = sample_threshold(&mut rng, ThresholdDist::Wald, 1.0).abs() * 255.0;
+        black_box(run_element(black_box(&obits), 8, t));
+    })
+    .report();
+
+    let x: Vec<f32> = (0..16).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let mut tile = Tile::new(16, &TileKind::Digital, 0);
+    let zero = vec![0.0f64; 16];
+    bench("schedule_transform 16x16 no-ET", || {
+        black_box(schedule_transform(&mut tile, black_box(&x), 8, &zero));
+    })
+    .report();
+    let wald: Vec<f64> = (0..16)
+        .map(|_| sample_threshold(&mut rng, ThresholdDist::Wald, 1.0).abs() * 255.0)
+        .collect();
+    bench("schedule_transform 16x16 wald-ET", || {
+        black_box(schedule_transform(&mut tile, black_box(&x), 8, &wald));
+    })
+    .report();
+}

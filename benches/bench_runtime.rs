@@ -1,0 +1,48 @@
+//! PJRT runtime bench: artifact execution latency (the digital-reference
+//! path used by the E2E driver).  Needs `make artifacts`.
+
+use repro::npy;
+use repro::runtime::{HostTensor, Runtime};
+use repro::util::bench::{bench, black_box, header};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    header("runtime");
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let params: Vec<HostTensor> = ["fc1_w", "fc1_b", "bwht_t", "fc2_w", "fc2_b"]
+        .iter()
+        .map(|n| {
+            let a = npy::load_f32(format!("artifacts/init_{n}.npy")).unwrap();
+            HostTensor::f32(&a.shape, a.data)
+        })
+        .collect();
+    let xtr = npy::load_f32("artifacts/train_x.npy").unwrap();
+    let x64 = HostTensor::f32(&[64, 64], xtr.data[..64 * 64].to_vec());
+    let y64 = HostTensor::i32(&[64], vec![1; 64]);
+
+    let mut fwd_inputs = params.clone();
+    fwd_inputs.push(x64.clone());
+    bench("mlp_fwd (batch 64)", || {
+        black_box(rt.run("mlp_fwd", &fwd_inputs).unwrap());
+    })
+    .report();
+    bench("mlp_fwd_qat (batch 64, Eq.4 path)", || {
+        black_box(rt.run("mlp_fwd_qat", &fwd_inputs).unwrap());
+    })
+    .report();
+    let mut ts_inputs = params.clone();
+    ts_inputs.push(x64);
+    ts_inputs.push(y64);
+    bench("train_step (batch 64, fwd+bwd+sgd)", || {
+        black_box(rt.run("train_step", &ts_inputs).unwrap());
+    })
+    .report();
+    let w = HostTensor::f32(&[16, 16], xtr.data[..256].to_vec());
+    bench("wht16 pallas kernel artifact", || {
+        black_box(rt.run("wht16", std::slice::from_ref(&w)).unwrap());
+    })
+    .report();
+}

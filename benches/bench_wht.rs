@@ -1,0 +1,34 @@
+//! Substrate bench: fast WHT butterfly vs dense Walsh matvec.
+//! Regenerates the L3 compute-primitive numbers in EXPERIMENTS.md §Perf.
+
+use repro::util::bench::{bench, black_box, header};
+use repro::util::rng::Rng;
+use repro::wht;
+
+fn main() {
+    header("wht");
+    let mut rng = Rng::seed_from_u64(0);
+    for k in [4usize, 6, 8, 10] {
+        let n = 1 << k;
+        let x: Vec<f32> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let mut buf = x.clone();
+        bench(&format!("fwht_sequency n={n}"), || {
+            buf.copy_from_slice(&x);
+            wht::wht_sequency(black_box(&mut buf));
+        })
+        .report();
+        let w = wht::walsh(k);
+        bench(&format!("dense_matvec   n={n}"), || {
+            black_box(w.matvec(black_box(&x)));
+        })
+        .report();
+    }
+    // the bitplane integer path used by tiles
+    let xi: Vec<i64> = (0..64).map(|i| (i * 7 % 5) - 2).collect();
+    let mut bi = xi.clone();
+    bench("fwht_sequency_i64 n=64", || {
+        bi.copy_from_slice(&xi);
+        wht::fast::wht_sequency_i64(black_box(&mut bi));
+    })
+    .report();
+}

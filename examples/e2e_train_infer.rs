@@ -1,0 +1,215 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §5).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train_infer
+//! ```
+//!
+//! Proves the full three-layer stack composes on a real workload:
+//!
+//! 1. **L2/L1 → artifact**: the QAT train step (jax model + pallas-lowered
+//!    Eq. 4 arithmetic + surrogate gradients) was AOT-lowered to HLO text
+//!    at build time;
+//! 2. **L3 runtime**: this binary loads it via the PJRT C API and trains
+//!    the BWHT classifier for several hundred steps on the synthetic
+//!    dataset, logging the loss curve — python never runs;
+//! 3. **L3 inference**: the trained weights run through (a) the exact
+//!    float engine, (b) the ADC-free digital golden model, and (c) the
+//!    analog crossbar Monte-Carlo simulator with early termination via
+//!    the coordinator — reporting accuracy, avg bitplane cycles, energy
+//!    and TOPS/W.  Numbers are recorded in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use repro::energy::EnergyModel;
+use repro::nn::layers::{accuracy, relu, soft_threshold, Dense};
+use repro::nn::{Backend, Mlp};
+use repro::npy;
+use repro::runtime::{HostTensor, Runtime};
+use repro::util::rng::Rng;
+
+const STEPS: usize = 300;
+const BATCH: usize = 64;
+
+fn main() -> Result<()> {
+    let dir = "artifacts";
+    let mut rt = Runtime::new(dir)?;
+    println!("== L3 runtime: PJRT platform {} ==", rt.platform());
+
+    // ---- load dataset + init params (exported once at build time) ----
+    let mut params: Vec<HostTensor> = ["fc1_w", "fc1_b", "bwht_t", "fc2_w", "fc2_b"]
+        .iter()
+        .map(|n| {
+            let a = npy::load_f32(format!("{dir}/init_{n}.npy")).unwrap();
+            HostTensor::f32(&a.shape, a.data)
+        })
+        .collect();
+    let xtr = npy::load_f32(format!("{dir}/train_x.npy"))?;
+    let ytr = npy::load_i32(format!("{dir}/train_y.npy"))?;
+    let xte = npy::load_f32(format!("{dir}/test_x.npy"))?;
+    let yte = npy::load_i32(format!("{dir}/test_y.npy"))?;
+    let din = xtr.shape[1];
+
+    // ---- train via the AOT train_step artifact ----
+    println!("== training {STEPS} steps (QAT forward, surrogate grads) ==");
+    let mut rng = Rng::seed_from_u64(0);
+    let t0 = Instant::now();
+    let mut curve = Vec::new();
+    for step in 0..STEPS {
+        let mut bx = Vec::with_capacity(BATCH * din);
+        let mut by = Vec::with_capacity(BATCH);
+        for _ in 0..BATCH {
+            let i = rng.int_range(0, xtr.shape[0] as i64 - 1) as usize;
+            bx.extend_from_slice(xtr.row(i));
+            by.push(ytr.data[i]);
+        }
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::f32(&[BATCH, din], bx));
+        inputs.push(HostTensor::i32(&[BATCH], by));
+        let mut out = rt.run("train_step", &inputs)?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        params = out;
+        curve.push(loss);
+        if step % 25 == 0 || step == STEPS - 1 {
+            println!("  step {step:>4}  loss {loss:.4}");
+        }
+    }
+    println!("  trained in {:?} (loss {:.3} -> {:.3})", t0.elapsed(), curve[0], curve[STEPS - 1]);
+
+    // ---- rebuild the model in the rust inference engine ----
+    let flat: Vec<Vec<f32>> = params.iter().map(|t| t.as_f32().unwrap().to_vec()).collect();
+    let mlp = Mlp::from_flat(
+        din, 64, 10,
+        flat[0].clone(), flat[1].clone(), flat[2].clone(),
+        flat[3].clone(), flat[4].clone(),
+    );
+
+    println!("== inference across backends ==");
+    let mut r = Rng::seed_from_u64(1);
+    let acc_float = mlp.evaluate(&xte.data, &yte.data, Backend::Float, &mut r, 256);
+    let acc_quant = mlp.evaluate(&xte.data, &yte.data, Backend::Quantized { bits: 8 }, &mut r, 256);
+    println!("  float (with-ADC baseline):   {:.2}%", acc_float * 100.0);
+    println!("  ADC-free digital (Eq. 4):    {:.2}%", acc_quant * 100.0);
+
+    // ---- full analog path through the coordinator, with ET ----
+    // The BWHT layer runs its two transforms on analog 16x16 tiles at
+    // 0.9 V; thresholds convert to comparator units per input batch.
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: 16,
+        bits: 8,
+        kind: repro::coordinator::TileKind::Analog {
+            config: repro::analog::crossbar::CrossbarConfig::new(16, 0.9),
+        },
+        ..Default::default()
+    });
+    let hidden = 64usize;
+    let fc1 = Dense::new(din, hidden, flat[0].clone(), flat[1].clone());
+    let fc2 = Dense::new(hidden, 10, flat[3].clone(), flat[4].clone());
+    let tvec = &flat[2];
+    let norm = 1.0f32 / (16f32).sqrt(); // 16-wide tiles => 4 blocks of 16
+    let n_eval = 500.min(yte.data.len());
+    let mut logits_all = Vec::with_capacity(n_eval * 10);
+    let t1 = Instant::now();
+    for i in 0..n_eval {
+        let mut h = fc1.forward(xte.row(i), 1);
+        relu(&mut h);
+        // forward transform on analog tiles, thresholds in units
+        let q = repro::quant::Quantizer::new(8).quantize(&h);
+        let th_units: Vec<f64> = tvec
+            .iter()
+            .map(|t| (t.abs() / (norm * q.scale).max(1e-12)) as f64)
+            .collect();
+        let f1 = coord.transform(&TransformRequest {
+            x: h.clone(),
+            thresholds_units: th_units,
+        })?;
+        let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
+        soft_threshold(&mut freq, tvec);
+        let f2 = coord.transform(&TransformRequest {
+            x: freq,
+            thresholds_units: vec![0.0; hidden],
+        })?;
+        let spatial: Vec<f32> = f2.iter().map(|v| v * norm).collect();
+        logits_all.extend(fc2.forward(&spatial[..hidden], 1));
+    }
+    let analog_time = t1.elapsed();
+    let acc_analog = accuracy(&logits_all, &yte.data[..n_eval], 10);
+    let m = coord.metrics();
+    let model = EnergyModel::new(16, 0.9);
+    println!(
+        "  analog crossbar + ET @0.9V:  {:.2}% ({n_eval} samples, {:?})",
+        acc_analog * 100.0,
+        analog_time
+    );
+    println!("== coordinator metrics (analog path) ==");
+    println!("  avg bitplane cycles/element: {:.2} (8 without ET)", m.average_cycles());
+    println!(
+        "  early-terminated: {:.1}%  |  modelled energy {:.2} nJ  |  {:.0} TOPS/W",
+        100.0 * m.cycles.terminated_early as f64 / m.cycles.total_elements as f64,
+        m.energy_fj(&model) / 1e6,
+        m.tops_per_watt(&model)
+    );
+    coord.shutdown();
+
+    // ---- ET-regularized weights (Eq. 8, lambda = 0.05): the paper's
+    // workload-reduction story.  `make weights` exports mlp_et.json.
+    if std::path::Path::new("artifacts/mlp_et.json").exists() {
+        println!("== ET-regularized model (Eq. 8) on the same analog path ==");
+        let w = repro::nn::loader::Weights::load("artifacts/mlp_et.json")?;
+        let mlp_et = Mlp::from_weights(&w)?;
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            tile_n: 16,
+            bits: 8,
+            kind: repro::coordinator::TileKind::Analog {
+                config: repro::analog::crossbar::CrossbarConfig::new(16, 0.9),
+            },
+            ..Default::default()
+        });
+        let tvec_et = &mlp_et.bwht.t;
+        let mut logits = Vec::with_capacity(n_eval * 10);
+        for i in 0..n_eval {
+            let mut h = mlp_et.fc1.forward(xte.row(i), 1);
+            relu(&mut h);
+            let q = repro::quant::Quantizer::new(8).quantize(&h);
+            let th_units: Vec<f64> = tvec_et
+                .iter()
+                .map(|t| (t.abs() / (norm * q.scale).max(1e-12)) as f64)
+                .collect();
+            let f1 = coord.transform(&TransformRequest {
+                x: h.clone(),
+                thresholds_units: th_units,
+            })?;
+            let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
+            soft_threshold(&mut freq, tvec_et);
+            let f2 = coord.transform(&TransformRequest {
+                x: freq,
+                thresholds_units: vec![0.0; hidden],
+            })?;
+            let spatial: Vec<f32> = f2.iter().map(|v| v * norm).collect();
+            logits.extend(mlp_et.fc2.forward(&spatial[..hidden], 1));
+        }
+        let acc_et = accuracy(&logits, &yte.data[..n_eval], 10);
+        let met = coord.metrics();
+        println!(
+            "  accuracy {:.2}% | avg cycles {:.2} | early-terminated {:.1}% | {:.0} TOPS/W",
+            acc_et * 100.0,
+            met.average_cycles(),
+            100.0 * met.cycles.terminated_early as f64 / met.cycles.total_elements as f64,
+            met.tops_per_watt(&model)
+        );
+        coord.shutdown();
+    }
+
+    println!("== E2E summary ==");
+    println!(
+        "  loss {:.3} -> {:.3} | float {:.1}% | ADC-free {:.1}% | analog {:.1}%",
+        curve[0],
+        curve[STEPS - 1],
+        acc_float * 100.0,
+        acc_quant * 100.0,
+        acc_analog * 100.0
+    );
+    Ok(())
+}

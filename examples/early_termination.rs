@@ -1,0 +1,83 @@
+//! Predictive early termination walkthrough (paper Sec. III-C, Figs 9-10).
+//!
+//! ```bash
+//! cargo run --release --example early_termination
+//! ```
+//!
+//! Shows (1) one element's PSUM bounds tightening plane by plane, and
+//! (2) the Fig. 9(c) statistics: Uniform- vs Wald-distributed thresholds
+//! over 10,000 random 8-bit cases, with the energy consequence.
+
+use repro::bitplane::early_term::{
+    run_element, sample_threshold, CycleStats, EarlyTerminator, ThresholdDist,
+};
+use repro::bitplane::{comparator, QuantBwht};
+use repro::energy::EnergyModel;
+use repro::quant::Quantizer;
+use repro::util::rng::Rng;
+
+fn main() {
+    // ---- single-element trace (Fig. 9b) ----
+    let mut rng = Rng::seed_from_u64(4);
+    let x: Vec<f32> = (0..16).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let q = Quantizer::new(8).quantize(&x);
+    let eng = QuantBwht::new(16, 128, 8);
+    let t_units = 120.0;
+    println!("tracing output element 5 with |T| = {t_units} comparator units:");
+    let mut et = EarlyTerminator::new(8, t_units);
+    for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
+        let obit = comparator(eng.plane_psums(plane)[5]);
+        let d = et.step(obit);
+        let (lb, ub) = et.bounds();
+        println!(
+            "  plane {p} (obit {obit:+}): running {:>5}, bounds [{lb:>5}, {ub:>5}] -> {d:?}",
+            et.running()
+        );
+        if d != repro::bitplane::early_term::Decision::Continue {
+            break;
+        }
+    }
+
+    // ---- Fig. 9(c): 10,000 random cases ----
+    println!("\n10,000 random 8-bit input/weight cases (16-wide rows):");
+    for dist in [ThresholdDist::Uniform, ThresholdDist::Wald] {
+        let mut rng = Rng::seed_from_u64(9);
+        let mut stats = CycleStats::new(8);
+        for _ in 0..10_000 {
+            let x: Vec<f32> = (0..16).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+            let row: Vec<i8> = (0..16).map(|_| if rng.coin() { 1 } else { -1 }).collect();
+            let q = Quantizer::new(8).quantize(&x);
+            let obits: Vec<i8> = q
+                .bitplanes_msb_first()
+                .iter()
+                .map(|plane| {
+                    comparator(
+                        plane
+                            .iter()
+                            .zip(&row)
+                            .map(|(&p, &w)| p as i64 * w as i64)
+                            .sum(),
+                    )
+                })
+                .collect();
+            let t = sample_threshold(&mut rng, dist, 1.0).abs() * 255.0;
+            stats.record(&run_element(&obits, 8, t));
+        }
+        let hist: Vec<String> = stats
+            .histogram
+            .iter()
+            .enumerate()
+            .map(|(c, &n)| format!("{}:{:>5}", c + 1, n))
+            .collect();
+        println!(
+            "  {dist:?}: avg {:.2} cycles | histogram {}",
+            stats.average_cycles(),
+            hist.join(" ")
+        );
+        let model = EnergyModel::new(16, 0.8);
+        println!(
+            "    -> {:.0} TOPS/W at this cycle count (paper: 5311 at 1.34 avg)",
+            model.tops_per_watt_et(8, stats.average_cycles())
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Quickstart: one BWHT transform on the ADC/DAC-free crossbar stack.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the core API: exact transform (substrate), digital golden model
+//! of the crossbar arithmetic (Eq. 4), the full analog Monte-Carlo tile,
+//! and the coordinator with early termination — and prints the energy
+//! model's verdict.
+
+use repro::analog::crossbar::CrossbarConfig;
+use repro::bitplane::early_term::{sample_threshold, ThresholdDist};
+use repro::bitplane::QuantBwht;
+use repro::coordinator::{Coordinator, CoordinatorConfig, TileKind, TransformRequest};
+use repro::energy::EnergyModel;
+use repro::util::rng::Rng;
+use repro::wht;
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|v| v * v).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt();
+    dot / (na * nb).max(1e-12)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dim = 64usize;
+    let bits = 8u32;
+    let mut rng = Rng::seed_from_u64(0);
+    let x: Vec<f32> = (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+
+    // 1. The exact float blockwise Walsh-Hadamard transform (substrate).
+    let exact = wht::bwht_apply(&x, dim, 16);
+    println!("exact BWHT (16-wide blocks): first 4 = {:?}", &exact[..4]);
+
+    // 2. The ADC-free arithmetic the crossbar actually computes (Eq. 4):
+    //    bitplane streaming + 1-bit comparators + binary recombination.
+    let golden = QuantBwht::new(dim, 16, bits).transform(&x);
+    println!(
+        "ADC-free digital golden model: cosine vs exact = {:.3}",
+        cosine(&golden, &exact)
+    );
+
+    // 3. The same transform on analog tiles with process variability.
+    let mut analog = Coordinator::new(CoordinatorConfig {
+        tile_n: 16,
+        bits,
+        kind: TileKind::Analog {
+            config: CrossbarConfig::new(16, 0.9),
+        },
+        ..Default::default()
+    });
+    let y_analog = analog.transform(&TransformRequest {
+        x: x.clone(),
+        thresholds_units: vec![0.0; dim],
+    })?;
+    println!(
+        "analog tiles @0.9V:            cosine vs golden = {:.3}",
+        cosine(&y_analog, &golden)
+    );
+    analog.shutdown();
+
+    // 4. Early termination with Wald-trained thresholds: fewer cycles,
+    //    same post-activation outputs.
+    let th: Vec<f64> = (0..dim)
+        .map(|_| sample_threshold(&mut rng, ThresholdDist::Wald, 1.0).abs() * 255.0)
+        .collect();
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: 16,
+        bits,
+        ..Default::default()
+    });
+    coord.transform(&TransformRequest {
+        x: x.clone(),
+        thresholds_units: th,
+    })?;
+    let m = coord.metrics();
+    let model = EnergyModel::new(16, 0.8);
+    println!(
+        "early termination: avg {:.2} of {} bitplane cycles/element",
+        m.average_cycles(),
+        bits
+    );
+    println!(
+        "energy model @0.8V: {:.0} TOPS/W without ET, {:.0} TOPS/W at this cycle count",
+        model.tops_per_watt(bits),
+        m.tops_per_watt(&model)
+    );
+    coord.shutdown();
+    Ok(())
+}

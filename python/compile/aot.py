@@ -1,0 +1,215 @@
+"""AOT lowering: jax/pallas -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE at build time (`make artifacts`); the rust binary is
+self-contained afterwards.  Artifact set (shapes in manifest.json):
+
+  wht16             pallas WHT kernel, one 16-wide Walsh block
+  quant_bwht64      Eq. 4 ADC-free quantized transform (pallas, 8-bit)
+  bwht_layer64      fused transform->S_T->inverse layer (pallas)
+  mlp_fwd           float MLP forward (params..., x) -> logits
+  mlp_fwd_qat       hardware-arithmetic MLP forward (Eq. 4 path)
+  train_step        one fused fwd+bwd+SGD step -> (params'..., loss)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import losses, model
+from compile.kernels import bitplane, bwht
+
+TAU_AOT = 24.0  # fixed (final) annealing temperature baked into train_step
+BITS_AOT = 8
+SGD_LR = 0.02
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides the
+    # baked Walsh matrices as literal "{...}", which the rust-side text
+    # parser silently reads back as zeros.
+    return comp.as_hlo_text(True)
+
+
+# --------------------------------------------------------------------------
+# Artifact functions.  Flat positional params (the xla crate executes with
+# a positional &[Literal] — manifest.json documents the order).
+# --------------------------------------------------------------------------
+
+MLP_ARGS = ("fc1_w", "fc1_b", "bwht_t", "fc2_w", "fc2_b")
+
+
+def _pack_mlp(w1, b1, t, w2, b2) -> model.Params:
+    return {"fc1": {"w": w1, "b": b1}, "bwht": {"t": t}, "fc2": {"w": w2, "b": b2}}
+
+
+def mlp_fwd(w1, b1, t, w2, b2, x):
+    return (model.mlp_forward(_pack_mlp(w1, b1, t, w2, b2), x, mode="float"),)
+
+
+def mlp_fwd_qat(w1, b1, t, w2, b2, x):
+    return (
+        model.mlp_forward(
+            _pack_mlp(w1, b1, t, w2, b2), x, mode="qat", bits=BITS_AOT, tau=TAU_AOT
+        ),
+    )
+
+
+def train_step(w1, b1, t, w2, b2, x, y):
+    """One SGD step with the QAT forward; returns (params..., loss)."""
+
+    def loss_fn(flat):
+        p = _pack_mlp(*flat)
+        logits = model.mlp_forward(
+            p, x, mode="qat", bits=BITS_AOT, tau=TAU_AOT
+        )
+        ts = model.collect_thresholds(p)
+        return losses.et_regularized_loss(logits, y, ts, lam=1e-4, t_max=1.0)
+
+    flat = (w1, b1, t, w2, b2)
+    loss, grads = jax.value_and_grad(loss_fn)(flat)
+    new = tuple(p - SGD_LR * g for p, g in zip(flat, grads))
+    return (*new, loss)
+
+
+def wht16(x):
+    return (bwht.wht_pallas(x),)
+
+
+def quant_bwht64(x):
+    return (bitplane.quant_bwht_pallas(x, bits=BITS_AOT),)
+
+
+def bwht_layer64(x, t):
+    return (bwht.bwht_layer_pallas(x, t),)
+
+
+# --------------------------------------------------------------------------
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifacts(out_dir: str, batch: int = 64) -> dict:
+    din, hidden, classes = 64, 64, 10
+    specs = {
+        "wht16": (wht16, [("x", f32(16, 16))]),
+        "quant_bwht64": (quant_bwht64, [("x", f32(32, 64))]),
+        "bwht_layer64": (bwht_layer64, [("x", f32(32, 64)), ("t", f32(64))]),
+        "mlp_fwd": (
+            mlp_fwd,
+            [
+                ("fc1_w", f32(din, hidden)),
+                ("fc1_b", f32(hidden)),
+                ("bwht_t", f32(hidden)),
+                ("fc2_w", f32(hidden, classes)),
+                ("fc2_b", f32(classes)),
+                ("x", f32(batch, din)),
+            ],
+        ),
+        "mlp_fwd_qat": (
+            mlp_fwd_qat,
+            [
+                ("fc1_w", f32(din, hidden)),
+                ("fc1_b", f32(hidden)),
+                ("bwht_t", f32(hidden)),
+                ("fc2_w", f32(hidden, classes)),
+                ("fc2_b", f32(classes)),
+                ("x", f32(batch, din)),
+            ],
+        ),
+        "train_step": (
+            train_step,
+            [
+                ("fc1_w", f32(din, hidden)),
+                ("fc1_b", f32(hidden)),
+                ("bwht_t", f32(hidden)),
+                ("fc2_w", f32(hidden, classes)),
+                ("fc2_b", f32(classes)),
+                ("x", f32(batch, din)),
+                ("y", i32(batch)),
+            ],
+        ),
+    }
+    manifest = {"tau": TAU_AOT, "bits": BITS_AOT, "sgd_lr": SGD_LR, "artifacts": {}}
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (fn, args) in specs.items():
+        arg_specs = [s for _, s in args]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {
+                    "name": n,
+                    "shape": list(s.shape),
+                    "dtype": str(np.dtype(s.dtype)),
+                }
+                for n, s in args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def export_dataset(out_dir: str) -> None:
+    """Dump the E2E training dataset + init params for the rust driver."""
+    from compile import data as data_mod
+
+    (xtr, ytr), (xte, yte) = (
+        lambda d: (d[0], d[1])
+    )(data_mod.train_test_split(*data_mod.make_vector_dataset()))
+    np.save(os.path.join(out_dir, "train_x.npy"), xtr)
+    np.save(os.path.join(out_dir, "train_y.npy"), ytr)
+    np.save(os.path.join(out_dir, "test_x.npy"), xte)
+    np.save(os.path.join(out_dir, "test_y.npy"), yte)
+    p = model.init_mlp(0)
+    flat = {
+        "fc1_w": p["fc1"]["w"],
+        "fc1_b": p["fc1"]["b"],
+        "bwht_t": p["bwht"]["t"],
+        "fc2_w": p["fc2"]["w"],
+        "fc2_b": p["fc2"]["b"],
+    }
+    for k, v in flat.items():
+        np.save(os.path.join(out_dir, f"init_{k}.npy"), np.asarray(v))
+    print(f"wrote dataset + init params to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir")
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+    out_dir = args.out if os.path.isabs(args.out) else os.path.abspath(args.out)
+    build_artifacts(out_dir, args.batch)
+    export_dataset(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Synthetic datasets standing in for CIFAR-10 (DESIGN.md §1 substitution).
+
+The paper's algorithmic results (Figs 1b, 8, 9a, 11a, Table I accuracy row)
+are trends over CIFAR-10 training runs.  Full CIFAR-10 training is out of
+scope for a CPU build box, so we use deterministic synthetic datasets with
+the same *structure* — multi-class images whose class signal lives in a mix
+of low- and mid-frequency content, so frequency-domain thresholding faces
+the same trade-off the paper measures.
+
+Two generators:
+  * make_image_dataset — (N, H, W, C) "CIFAR-like" images: per-class random
+    smooth templates (low-frequency) + class-specific Walsh patterns
+    (mid-frequency) + i.i.d. noise.
+  * make_vector_dataset — flat feature vectors for the MLP/E2E-training
+    artifacts.
+
+Everything is seeded and reproducible; the rust side regenerates identical
+data from the same seed via a documented xorshift-free path (we export
+.npy files instead — see export_npy).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from compile import walsh as walsh_mod
+
+
+def _smooth_template(rng: np.random.RandomState, h: int, w: int, c: int):
+    """Low-frequency class template: upsampled coarse noise."""
+    coarse = rng.randn(max(h // 4, 1), max(w // 4, 1), c)
+    t = np.kron(coarse, np.ones((4, 4, 1)))[:h, :w, :]
+    return t / (np.abs(t).max() + 1e-8)
+
+
+def make_image_dataset(
+    n: int = 2048,
+    h: int = 16,
+    w: int = 16,
+    c: int = 3,
+    classes: int = 10,
+    noise: float = 0.35,
+    seed: int = 0,
+):
+    """Deterministic CIFAR-like dataset: returns (x, y) float32/int32.
+
+    Class signal = smooth template + a class-indexed Walsh row stamped
+    into the channel-mean (mid-frequency content that survives BWHT but is
+    attenuated by aggressive soft-thresholding — reproducing the accuracy
+    vs. compression tension of Fig. 1b).
+    """
+    rng = np.random.RandomState(seed)
+    templates = [_smooth_template(rng, h, w, c) for _ in range(classes)]
+    k = int(np.log2(walsh_mod.next_pow2(w)))
+    wm = walsh_mod.walsh(k).astype(np.float32)
+    x = np.empty((n, h, w, c), dtype=np.float32)
+    y = rng.randint(0, classes, size=n).astype(np.int32)
+    for i in range(n):
+        cls = y[i]
+        img = templates[cls].copy()
+        # Mid-frequency stripe: Walsh row (cls+2) along width, faded rows.
+        row = wm[(cls + 2) % wm.shape[0], :w].astype(np.float32)
+        fade = np.linspace(1.0, 0.3, h)[:, None]
+        img += 0.5 * (fade * row[None, :])[:, :, None]
+        img += noise * rng.randn(h, w, c)
+        x[i] = img
+    return x, y
+
+
+def make_vector_dataset(
+    n: int = 4096,
+    dim: int = 64,
+    classes: int = 10,
+    noise: float = 0.6,
+    seed: int = 1,
+):
+    """Flat-vector dataset for the MLP artifacts: Walsh-structured classes."""
+    rng = np.random.RandomState(seed)
+    k = int(np.log2(walsh_mod.next_pow2(dim)))
+    wm = walsh_mod.walsh(k).astype(np.float32)[:, :dim]
+    protos = np.stack(
+        [
+            wm[(3 * c + 1) % wm.shape[0]] + 0.5 * wm[(5 * c + 2) % wm.shape[0]]
+            for c in range(classes)
+        ]
+    )
+    y = rng.randint(0, classes, size=n).astype(np.int32)
+    x = protos[y] + noise * rng.randn(n, dim).astype(np.float32)
+    return x.astype(np.float32), y
+
+
+def train_test_split(x, y, test_frac: float = 0.2, seed: int = 7):
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(len(x))
+    cut = int(len(x) * (1.0 - test_frac))
+    tr, te = idx[:cut], idx[cut:]
+    return (x[tr], y[tr]), (x[te], y[te])
+
+
+def export_npy(path_prefix: str, x: np.ndarray, y: np.ndarray) -> None:
+    """Dump dataset as .npy for the rust side (exact same bytes)."""
+    np.save(path_prefix + "_x.npy", x)
+    np.save(path_prefix + "_y.npy", y)

@@ -1,0 +1,51 @@
+"""`make weights`: train the artifact models and export weights for rust.
+
+Produces (in artifacts/):
+  mlp_float.json   float-trained MLP weights
+  mlp_qat.json     QAT-trained (Eq. 4 forward) MLP weights
+  mlp_et.json      QAT + Eq. 8 early-termination-regularized weights
+  train_hist.json  loss/accuracy histories for all three runs
+
+Build-time only; rust's nn::loader consumes the JSON.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from compile import model, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=250)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    (xtr, ytr), (xte, yte) = train.mlp_dataset()
+    hists = {}
+
+    runs = {
+        "mlp_float": dict(mode="float", lam=0.0),
+        "mlp_qat": dict(mode="qat", bits=8, lam=0.0),
+        "mlp_et": dict(mode="qat", bits=8, lam=0.05, t_max=1.0),
+    }
+    for name, kw in runs.items():
+        p, hist = train.train(
+            model.mlp_forward, model.init_mlp(0), xtr, ytr, xte, yte,
+            steps=args.steps, **kw,
+        )
+        train.export_weights(p, os.path.join(out, f"{name}.json"))
+        hists[name] = hist
+        print(f"{name}: final test acc {hist['test_acc'][-1]:.3f}")
+
+    with open(os.path.join(out, "train_hist.json"), "w") as f:
+        json.dump(hists, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

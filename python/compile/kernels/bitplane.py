@@ -1,0 +1,105 @@
+"""Pallas kernel for the ADC/DAC-free quantized transform (Eq. 4).
+
+This is the exact arithmetic the analog crossbar performs (Fig. 6):
+
+  1. the input vector is quantized to sign-magnitude bitplanes (DAC-free
+     input streaming: one bitplane per 2-clock crossbar operation),
+  2. each bitplane's +/-1 entries multiply the hardwired +/-1 Walsh block —
+     in hardware a conditional discharge of local nodes O/OB,
+  3. the row-wise charge average is collapsed to ONE bit by the comparator
+     (sign()) — this is what makes the design ADC-free,
+  4. per-bitplane output bits are recombined with binary weights 2^(b-1).
+
+On TPU the B bitplanes become B dense +/-1 matmuls on the MXU over the same
+VMEM-resident Walsh block (unrolled loop — B is a small static constant, and
+each iteration is an independent MXU pass so the unroll pipelines cleanly).
+Early termination is deliberately NOT in this kernel: it is data-dependent
+control flow that would stall the MXU; the paper likewise implements it in
+digital peripherals (Fig. 10), which for us is the rust L3 scheduler.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from compile import walsh as walsh_mod
+
+DEFAULT_BATCH_TILE = 64
+
+
+def _quant_bwht_kernel(q_ref, w_ref, o_ref, *, bits: int):
+    """One grid step of Eq. (4) on a (tile_b, n) tile of quantized inputs.
+
+    q_ref holds signed integers (float-carried).  The bitplane loop is
+    unrolled: plane b extracts sign(q) * bit_b(|q|) in the VPU, the +/-1
+    matvec runs on the MXU, the comparator is jnp.sign.
+    """
+    q = q_ref[...]
+    w_t = w_ref[...].T.astype(jnp.float32)
+    sign = jnp.sign(q)
+    mag = jnp.abs(q).astype(jnp.int32)
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for b in range(bits):
+        plane = sign * ((mag >> b) & 1).astype(jnp.float32)
+        psum = jnp.dot(plane, w_t, preferred_element_type=jnp.float32)
+        acc = acc + jnp.sign(psum) * jnp.float32(2.0**b)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "batch_tile"))
+def quant_wht_pallas(
+    q: jnp.ndarray, bits: int = 8, batch_tile: int = DEFAULT_BATCH_TILE
+) -> jnp.ndarray:
+    """Eq. (4) over one power-of-two Walsh block.
+
+    q: (batch, n) integer-valued (already quantized; scale handled by the
+    caller so the kernel matches the hardware bit-for-bit).  Returns the
+    integer-valued recombined output (scale NOT applied).
+    """
+    b, n = q.shape
+    k = int(np.log2(n))
+    assert 1 << k == n, f"dim {n} not a power of two"
+    w = jnp.asarray(walsh_mod.walsh(k), dtype=jnp.float32)
+    tile = min(batch_tile, b)
+    kernel = functools.partial(_quant_bwht_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(b, tile),),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(q, w)
+
+
+def quant_bwht_pallas(
+    x: jnp.ndarray,
+    bits: int = 8,
+    max_block: int = 128,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+) -> jnp.ndarray:
+    """Full Eq. (4) pipeline: quantize -> blockwise kernel -> rescale.
+
+    Matches ref.quant_bwht_ref exactly (same quantizer, same sign(0)=0
+    comparator convention).
+    """
+    dim = x.shape[-1]
+    blocks = walsh_mod.bwht_blocks(dim, max_block)
+    assert sum(blocks) == dim, f"input must be padded to {sum(blocks)}"
+    qmax = float(2**bits - 1)  # sign-magnitude: `bits` magnitude planes
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    outs = []
+    off = 0
+    for blk in blocks:
+        outs.append(quant_wht_pallas(q[:, off : off + blk], bits, batch_tile))
+        off += blk
+    return jnp.concatenate(outs, axis=-1) * scale

@@ -1,0 +1,152 @@
+"""Pallas kernels for the (blockwise) Walsh-Hadamard transform.
+
+Hardware adaptation (DESIGN.md §2): the paper's analog crossbar hardwires a
++/-1 Walsh block per 16x16 tile and computes the transform as a single
+charge-domain matvec.  On TPU the equivalent mapping is a dense matmul on
+the MXU with the Walsh block resident in VMEM — for block sizes <= 1024 the
+dense systolic form beats the O(N log N) butterfly because every butterfly
+stage would round-trip through VPU adds while the MXU does the whole block
+in one pass.  BlockSpec keeps one (batch-tile, block) pair in VMEM per grid
+step, which is the software analog of stitching a BWHT block onto one
+crossbar tile.
+
+All kernels run with interpret=True: CPU PJRT cannot execute Mosaic
+custom-calls, and correctness (vs. ref.py) is the build-time signal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from compile import walsh as walsh_mod
+
+# Batch tile: multiple of 8 to stay MXU/VPU-shaped on real hardware.
+DEFAULT_BATCH_TILE = 64
+
+
+def _wht_kernel(x_ref, w_ref, o_ref):
+    """One grid step: (tile_b, n) @ (n, n)^T with the block in VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile",))
+def wht_pallas(
+    x: jnp.ndarray, batch_tile: int = DEFAULT_BATCH_TILE
+) -> jnp.ndarray:
+    """Sequency-ordered WHT along the last axis of a 2-D (batch, n) array.
+
+    n must be a power of two.  Grid is over batch tiles only; the whole
+    Walsh block rides along each step (it is parameter-free and tiny:
+    a 128x128 f32 block is 64 KiB — comfortably VMEM-resident next to the
+    batch tile).
+    """
+    b, n = x.shape
+    k = int(np.log2(n))
+    assert 1 << k == n, f"dim {n} not a power of two"
+    w = jnp.asarray(walsh_mod.walsh(k), dtype=x.dtype)
+    tile = min(batch_tile, b)
+    grid = (pl.cdiv(b, tile),)
+    return pl.pallas_call(
+        _wht_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def bwht_pallas(
+    x: jnp.ndarray,
+    max_block: int = 128,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+) -> jnp.ndarray:
+    """Blockwise WHT: one wht_pallas call per BWHT block (pre-padded input).
+
+    Each block is an independent crossbar tile in hardware; here each is an
+    independent pallas_call, which XLA schedules back-to-back over disjoint
+    slices (no inter-block data dependence).
+    """
+    dim = x.shape[-1]
+    blocks = walsh_mod.bwht_blocks(dim, max_block)
+    assert sum(blocks) == dim, (
+        f"input must be padded to {sum(blocks)} (got {dim})"
+    )
+    outs = []
+    off = 0
+    for blk in blocks:
+        outs.append(wht_pallas(x[:, off : off + blk], batch_tile))
+        off += blk
+    return jnp.concatenate(outs, axis=-1)
+
+
+def _bwht_layer_kernel(x_ref, w_ref, t_ref, o_ref):
+    """Fused BWHT -> soft-threshold -> inverse BWHT for one block.
+
+    Uses the orthonormal Walsh form (W/sqrt(n) is its own inverse), so the
+    round trip is x @ Wn^T -> S_T -> @ Wn^T.  Fusing keeps the intermediate
+    frequency-domain tile in VMEM — the analog of the paper never
+    materializing the transform outside the crossbar.
+    """
+    n = w_ref.shape[0]
+    inv_sqrt_n = 1.0 / jnp.sqrt(jnp.float32(n))
+    wn = w_ref[...].astype(jnp.float32) * inv_sqrt_n
+    y = jnp.dot(x_ref[...], wn.T, preferred_element_type=jnp.float32)
+    t = jnp.abs(t_ref[...])
+    y = jnp.sign(y) * jnp.maximum(jnp.abs(y) - t, 0.0)
+    o_ref[...] = jnp.dot(y, wn.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile",))
+def _wht_layer_block_pallas(
+    x: jnp.ndarray, t: jnp.ndarray, batch_tile: int = DEFAULT_BATCH_TILE
+) -> jnp.ndarray:
+    b, n = x.shape
+    k = int(np.log2(n))
+    assert 1 << k == n
+    w = jnp.asarray(walsh_mod.walsh(k), dtype=jnp.float32)
+    tile = min(batch_tile, b)
+    return pl.pallas_call(
+        _bwht_layer_kernel,
+        grid=(pl.cdiv(b, tile),),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, w, t)
+
+
+def bwht_layer_pallas(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    max_block: int = 128,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+) -> jnp.ndarray:
+    """Fused blockwise transform->threshold->inverse layer (Fig. 2 flow)."""
+    dim = x.shape[-1]
+    blocks = walsh_mod.bwht_blocks(dim, max_block)
+    assert sum(blocks) == dim
+    outs = []
+    off = 0
+    for blk in blocks:
+        outs.append(
+            _wht_layer_block_pallas(
+                x[:, off : off + blk], t[off : off + blk], batch_tile
+            )
+        )
+        off += blk
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,125 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the pytest/hypothesis suites compare kernels
+against, and the "exact digital" baseline the rust side cross-checks via
+the AOT artifacts.  No pallas, no tricks — straightforward jnp.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import walsh as walsh_mod
+
+
+def wht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact sequency-ordered WHT along the last axis (power-of-two dim)."""
+    n = x.shape[-1]
+    k = int(np.log2(n))
+    assert 1 << k == n, f"dim {n} not a power of two"
+    w = jnp.asarray(walsh_mod.walsh(k), dtype=x.dtype)
+    return x @ w.T
+
+
+def bwht_ref(x: jnp.ndarray, max_block: int = 128) -> jnp.ndarray:
+    """Blockwise WHT along the last (channel) axis; input pre-padded."""
+    dim = x.shape[-1]
+    m = jnp.asarray(walsh_mod.bwht_matrix(dim, max_block), dtype=x.dtype)
+    assert m.shape[0] == dim, (
+        f"input must be padded to {m.shape[0]} (got {dim}); "
+        "use walsh.bwht_padded_dim"
+    )
+    return x @ m.T
+
+
+def soft_threshold_ref(x: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """S_T(x) = sign(x) * max(|x| - T, 0)  (Eq. 3). t broadcasts over x."""
+    t = jnp.abs(t)
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def quantize_ref(x: jnp.ndarray, bits: int):
+    """Symmetric sign-magnitude quantization to ``bits`` magnitude bitplanes.
+
+    The hardware streams the sign on CL/CLB and ``bits`` magnitude
+    bitplanes (Fig. 6), so the integer range is +/-(2^bits - 1).  Returns
+    (q, scale): q as float-held ints, scale such that x ~= q * scale.
+    bits=1 is the extreme DAC-free case: q in {-1, 0, +1}.
+    """
+    qmax = float(2**bits - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q, scale
+
+
+def bitplanes_ref(q: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Sign-magnitude bitplane decomposition (Fig. 6 input streaming).
+
+    q: integer-valued array (float dtype ok).  Returns planes of shape
+    (bits, *q.shape) with values in {-1, 0, +1}: plane b holds
+    sign(q) * bit_b(|q|), b=0 is the LSB.  This mirrors the hardware's
+    CL/CLB encoding: magnitude bit gated onto the positive or negative
+    column line by the sign.
+    """
+    sign = jnp.sign(q)
+    mag = jnp.abs(q).astype(jnp.int32)
+    planes = [
+        (sign * ((mag >> b) & 1).astype(q.dtype)) for b in range(bits)
+    ]
+    return jnp.stack(planes, axis=0)
+
+
+def quant_bwht_ref(
+    x: jnp.ndarray, bits: int, max_block: int = 128
+) -> jnp.ndarray:
+    """Eq. (4): the exact function the ADC-free crossbar computes.
+
+    F0_i(x) = sum_b sign( sum_j I_jb * B_ij ) * 2^(b-1)
+
+    Input is quantized to ``bits`` sign-magnitude bitplanes; each bitplane's
+    +/-1 matvec against the BWHT matrix is collapsed to 1 bit by sign()
+    (the row comparator), then recombined with binary weights.  Output is
+    rescaled by the input quantization scale so it approximates bwht_ref.
+
+    sign() here maps 0 -> 0 (an exactly balanced charge share trips neither
+    way; the hardware comparator resolves randomly, training treats it as 0).
+    """
+    dim = x.shape[-1]
+    m = jnp.asarray(
+        walsh_mod.bwht_matrix(dim, max_block), dtype=x.dtype
+    )
+    q, scale = quantize_ref(x, bits)
+    planes = bitplanes_ref(q, bits)  # (bits, ..., dim)
+    psum = planes @ m.T  # (bits, ..., dim)
+    obits = jnp.sign(psum)
+    weights = (2.0 ** jnp.arange(bits, dtype=x.dtype)).reshape(
+        (bits,) + (1,) * x.ndim
+    )
+    y = jnp.sum(obits * weights, axis=0)
+    # Rescale: the comparator output is +/-1 per plane; the natural
+    # magnitude is the input scale (training absorbs residual gain into T
+    # and downstream normalization).
+    return y * scale
+
+
+def bwht_layer_ref(
+    x: jnp.ndarray, t: jnp.ndarray, max_block: int = 128
+) -> jnp.ndarray:
+    """Full float BWHT layer: transform -> soft-threshold -> inverse.
+
+    The WHT is (up to scale) its own inverse: W W^T = N I per block, so we
+    use the orthonormal form (1/sqrt(N) each way) for numerical symmetry.
+    """
+    dim = x.shape[-1]
+    blocks = walsh_mod.bwht_blocks(dim, max_block)
+    m = jnp.asarray(walsh_mod.bwht_matrix(dim, max_block), dtype=x.dtype)
+    norm = jnp.concatenate(
+        [
+            jnp.full((b,), 1.0 / np.sqrt(float(b)), dtype=x.dtype)
+            for b in blocks
+        ]
+    )
+    y = (x @ m.T) * norm
+    y = soft_threshold_ref(y, t)
+    return (y @ m.T) * norm

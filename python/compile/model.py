@@ -1,0 +1,425 @@
+"""Layer-2 JAX models: BWHT-compressed networks (Figs 2, 3).
+
+Functional, pytree-parameterized models.  Three execution modes for every
+BWHT layer, selected by ``mode``:
+
+  * "float" — exact float BWHT (transform -> S_T -> inverse); the paper's
+    algorithmic baseline (Fig 1b),
+  * "qat"   — exact hardware arithmetic (Eq. 4) on the forward pass with
+    surrogate gradients (Eqs. 6-7 via STE) on the backward — what the
+    paper trains against so the deployed crossbar sees no train/test skew,
+  * "soft"  — fully smoothed forward (tanh comparator) for early-phase
+    tau annealing.
+
+Architecture mirrors the paper's Fig. 3: BWHT layers replace the 1x1
+convolutions of residual (ResNet20-style) and inverted-bottleneck
+(MobileNetV2-style) blocks; a ``freq_layers`` knob converts the first k
+1x1 convs to BWHT, reproducing the Fig. 1b sweep.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import surrogate, walsh as walsh_mod
+from compile.kernels import ref
+
+Params = dict[str, Any]
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+
+def _he(rng, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return (rng.randn(*shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def init_dense(rng, din: int, dout: int) -> Params:
+    return {
+        "w": jnp.asarray(_he(rng, (din, dout))),
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def init_conv(rng, kh: int, kw: int, cin: int, cout: int) -> Params:
+    return {
+        "w": jnp.asarray(_he(rng, (kh, kw, cin, cout))),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def init_bwht(rng, dim: int, t_init: float = 0.05, max_block: int = 128) -> Params:
+    """A BWHT layer's ONLY trainable parameters: the thresholds T."""
+    padded = walsh_mod.bwht_padded_dim(dim, max_block)
+    t = np.full((padded,), t_init, dtype=np.float32)
+    t += 0.01 * rng.randn(padded).astype(np.float32)
+    return {"t": jnp.asarray(t)}
+
+
+def init_scale_bias(dim: int) -> Params:
+    """Lightweight normalization (scale+bias; stats-free for short runs)."""
+    return {"g": jnp.ones((dim,), jnp.float32), "b": jnp.zeros((dim,), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# Primitive layers
+# --------------------------------------------------------------------------
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def conv2d(p: Params, x: jnp.ndarray, stride: int = 1, groups: int = 1) -> jnp.ndarray:
+    """NHWC conv with SAME padding."""
+    return (
+        jax.lax.conv_general_dilated(
+            x,
+            p["w"],
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups,
+        )
+        + p["b"]
+    )
+
+
+def scale_bias(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x * p["g"] + p["b"]
+
+
+def _pad_channels(x: jnp.ndarray, dim: int) -> jnp.ndarray:
+    cur = x.shape[-1]
+    if cur == dim:
+        return x
+    assert cur < dim
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, dim - cur)]
+    return jnp.pad(x, pad)
+
+
+def bwht_core(
+    x2d: jnp.ndarray,
+    t: jnp.ndarray,
+    mode: str,
+    bits: int,
+    tau: float,
+    max_block: int,
+) -> jnp.ndarray:
+    """Transform -> S_T -> inverse on a (batch, padded_dim) matrix."""
+    dim = x2d.shape[-1]
+    blocks = walsh_mod.bwht_blocks(dim, max_block)
+    assert sum(blocks) == dim
+    norm = jnp.concatenate(
+        [jnp.full((b,), 1.0 / np.sqrt(float(b)), jnp.float32) for b in blocks]
+    )
+    if mode == "float":
+        fwd = ref.bwht_ref(x2d, max_block) * norm
+        thr = ref.soft_threshold_ref(fwd, t)
+        return ref.bwht_ref(thr, max_block) * norm
+    if mode == "qat":
+        fwd = surrogate.quant_bwht_ste(x2d, bits, max_block, tau) * norm
+        thr = ref.soft_threshold_ref(fwd, t)
+        return surrogate.quant_bwht_ste(thr, bits, max_block, tau) * norm
+    if mode == "soft":
+        fwd = surrogate.quant_bwht_soft(x2d, bits, max_block, tau) * norm
+        thr = ref.soft_threshold_ref(fwd, t)
+        return surrogate.quant_bwht_soft(thr, bits, max_block, tau) * norm
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def bwht_layer(
+    p: Params,
+    x: jnp.ndarray,
+    out_dim: int,
+    mode: str = "float",
+    bits: int = 8,
+    tau: float = 8.0,
+    max_block: int = 128,
+) -> jnp.ndarray:
+    """1D-BWHT channel expansion/projection (Fig. 2).
+
+    x: (..., cin).  Expansion (out_dim > cin): zero-pad channels to the
+    padded transform width, transform, threshold, inverse, keep out_dim.
+    Projection (out_dim < cin): transform at cin width, threshold, inverse,
+    truncate to out_dim (low-sequency channels carry the energy).
+    """
+    cin = x.shape[-1]
+    width = max(cin, out_dim)
+    padded = walsh_mod.bwht_padded_dim(width, max_block)
+    assert p["t"].shape == (padded,), (p["t"].shape, padded)
+    lead = x.shape[:-1]
+    x2d = _pad_channels(x, padded).reshape((-1, padded))
+    y2d = bwht_core(x2d, p["t"], mode, bits, tau, max_block)
+    return y2d.reshape((*lead, padded))[..., :out_dim]
+
+
+# --------------------------------------------------------------------------
+# Blocks (Fig. 3)
+# --------------------------------------------------------------------------
+
+
+def init_residual_block(
+    rng, cin: int, cout: int, use_bwht: bool, max_block: int = 128
+) -> Params:
+    """Residual block: depthwise 3x3 (spatial) + 1x1/BWHT (channel mixing).
+
+    The channel-mixing 1x1 conv carries the bulk of the parameters (cin*cout
+    vs 9*cin for the depthwise), matching the regime of the paper's Fig. 3
+    where replacing 1x1 convs with parameter-free BWHT yields the ~55%
+    model-size reduction of Fig. 1b.
+    """
+    p: Params = {
+        "dw": init_conv(rng, 3, 3, 1, cin),  # depthwise: HWIO with I=1
+        "norm1": init_scale_bias(cin),
+        "norm2": init_scale_bias(cout),
+        "use_bwht": use_bwht,
+    }
+    if use_bwht:
+        p["mix"] = init_bwht(rng, max(cin, cout), max_block=max_block)
+    else:
+        p["mix"] = init_conv(rng, 1, 1, cin, cout)
+    if cin != cout:
+        p["skip"] = init_dense(rng, cin, cout)  # 1x1-equivalent skip
+    return p
+
+
+def residual_block(
+    p: Params,
+    x: jnp.ndarray,
+    mode: str,
+    bits: int,
+    tau: float,
+    max_block: int = 128,
+) -> jnp.ndarray:
+    """ResNet20-style block with the 1x1 conv replaceable by BWHT (Fig 3a)."""
+    cin = x.shape[-1]
+    h = jax.nn.relu(scale_bias(p["norm1"], conv2d(p["dw"], x, groups=cin)))
+    cout = p["norm2"]["g"].shape[0]
+    if p["use_bwht"]:
+        h = bwht_layer(p["mix"], h, cout, mode, bits, tau, max_block)
+    else:
+        h = conv2d(p["mix"], h)
+    h = scale_bias(p["norm2"], h)
+    skip = dense(p["skip"], x) if "skip" in p else x
+    return jax.nn.relu(h + skip)
+
+
+def init_bottleneck_block(
+    rng, cin: int, expand: int, cout: int, use_bwht: bool, max_block: int = 128
+) -> Params:
+    mid = cin * expand
+    p: Params = {
+        "dw": init_conv(rng, 3, 3, 1, mid),  # depthwise: HWIO with I=1
+        "norm": init_scale_bias(mid),
+        "use_bwht": use_bwht,
+        "mid": mid,
+    }
+    if use_bwht:
+        p["expand"] = init_bwht(rng, max(cin, mid), max_block=max_block)
+        p["project"] = init_bwht(rng, max(mid, cout), max_block=max_block)
+    else:
+        p["expand"] = init_conv(rng, 1, 1, cin, mid)
+        p["project"] = init_conv(rng, 1, 1, mid, cout)
+    return p
+
+
+def bottleneck_block(
+    p: Params,
+    x: jnp.ndarray,
+    mode: str,
+    bits: int,
+    tau: float,
+    max_block: int = 128,
+) -> jnp.ndarray:
+    """MobileNetV2 inverted bottleneck, 1x1 convs -> BWHT (Fig 3b)."""
+    mid = p["mid"]
+    if p["use_bwht"]:
+        h = bwht_layer(p["expand"], x, mid, mode, bits, tau, max_block)
+    else:
+        h = jax.nn.relu6(conv2d(p["expand"], x))
+    h = jax.nn.relu6(scale_bias(p["norm"], conv2d(p["dw"], h, groups=mid)))
+    if p["use_bwht"]:
+        h = bwht_layer(p["project"], h, x.shape[-1], mode, bits, tau, max_block)
+    else:
+        h = conv2d(p["project"], h)
+    return x + h if h.shape == x.shape else h
+
+
+# --------------------------------------------------------------------------
+# Full models
+# --------------------------------------------------------------------------
+
+RESNET_STAGES = ((16, 2), (32, 2), (64, 2))  # (channels, blocks) per stage
+
+
+def init_bwht_resnet(
+    seed: int, freq_layers: int, classes: int = 10, max_block: int = 128
+) -> Params:
+    """Small ResNet20-style net; the first ``freq_layers`` mixing layers
+    (in depth order) use BWHT instead of 1x1 convs (Fig 1b sweep knob)."""
+    rng = np.random.RandomState(seed)
+    p: Params = {
+        "stem": init_conv(rng, 3, 3, 3, 16),
+        "blocks": [],
+        "freq_layers": freq_layers,
+    }
+    cin = 16
+    idx = 0
+    for cout, nblocks in RESNET_STAGES:
+        for _ in range(nblocks):
+            p["blocks"].append(
+                init_residual_block(
+                    rng, cin, cout, use_bwht=idx < freq_layers, max_block=max_block
+                )
+            )
+            cin = cout
+            idx += 1
+    p["head"] = init_dense(rng, cin, classes)
+    return p
+
+
+def num_mixing_layers() -> int:
+    return sum(n for _, n in RESNET_STAGES)
+
+
+def bwht_resnet(
+    p: Params,
+    x: jnp.ndarray,
+    mode: str = "float",
+    bits: int = 8,
+    tau: float = 8.0,
+    max_block: int = 128,
+) -> jnp.ndarray:
+    h = jax.nn.relu(conv2d(p["stem"], x))
+    for i, bp in enumerate(p["blocks"]):
+        # Downsample at stage boundaries via stride-2 average pooling.
+        if i in (2, 4):
+            h = (
+                jax.lax.reduce_window(
+                    h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+                / 4.0
+            )
+        h = residual_block(bp, h, mode, bits, tau, max_block)
+    h = jnp.mean(h, axis=(1, 2))  # GAP
+    return dense(p["head"], h)
+
+
+def init_mlp(seed: int, din: int = 64, hidden: int = 64, classes: int = 10) -> Params:
+    """The E2E-training artifact model: dense -> BWHT layer -> dense."""
+    rng = np.random.RandomState(seed)
+    return {
+        "fc1": init_dense(rng, din, hidden),
+        "bwht": init_bwht(rng, hidden),
+        "fc2": init_dense(rng, hidden, classes),
+    }
+
+
+def mlp_forward(
+    p: Params,
+    x: jnp.ndarray,
+    mode: str = "float",
+    bits: int = 8,
+    tau: float = 8.0,
+    max_block: int = 128,
+) -> jnp.ndarray:
+    h = jax.nn.relu(dense(p["fc1"], x))
+    h = bwht_layer(p["bwht"], h, h.shape[-1], mode, bits, tau, max_block)
+    return dense(p["fc2"], h)
+
+
+def collect_thresholds(p: Params) -> list[jnp.ndarray]:
+    """All T vectors in a params tree (for the Eq. 8 regularizer)."""
+    ts: list[jnp.ndarray] = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "t" and isinstance(v, jnp.ndarray):
+                    ts.append(v)
+                else:
+                    walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(p)
+    return ts
+
+
+_STATIC_KEYS = ("use_bwht", "mid", "freq_layers")
+
+
+def split_params(p: Params):
+    """Split a params tree into (trainable arrays, static config).
+
+    jax.grad cannot differentiate through bool/int leaves; training code
+    grads over the arrays tree and re-merges the static tree before the
+    forward pass (see train.py).
+    """
+
+    def walk(node):
+        if isinstance(node, dict):
+            arrs, stat = {}, {}
+            for k, v in node.items():
+                if k in _STATIC_KEYS:
+                    stat[k] = v
+                else:
+                    a, s = walk(v)
+                    arrs[k] = a
+                    if s is not None:
+                        stat[k] = s
+            return arrs, (stat or None)
+        if isinstance(node, list):
+            pairs = [walk(v) for v in node]
+            arrs = [a for a, _ in pairs]
+            stats = [s for _, s in pairs]
+            return arrs, (stats if any(s is not None for s in stats) else None)
+        return node, None
+
+    return walk(p)
+
+
+def merge_params(arrs, stat) -> Params:
+    """Inverse of split_params."""
+    if stat is None:
+        return arrs
+    if isinstance(arrs, dict):
+        out = dict(arrs)
+        for k, v in stat.items():
+            if k in _STATIC_KEYS:
+                out[k] = v
+            else:
+                out[k] = merge_params(arrs[k], v)
+        return out
+    if isinstance(arrs, list):
+        return [merge_params(a, s) for a, s in zip(arrs, stat)]
+    return arrs
+
+
+def count_params(p: Params) -> int:
+    """Trainable parameter count (Fig 1b compression metric)."""
+    total = 0
+
+    def walk(node):
+        nonlocal total
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k in ("use_bwht", "mid", "freq_layers"):
+                    continue
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+        elif hasattr(node, "shape"):
+            total += int(np.prod(node.shape))
+
+    walk(p)
+    return total

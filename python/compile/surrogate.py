@@ -1,0 +1,133 @@
+"""Surrogate gradients for the non-differentiable quantized transform.
+
+The ADC-free forward path (Eq. 4) composes two discontinuous functions:
+the comparator sign() and the bitplane quantizer I_b().  The paper trains
+through them with the continuous approximations
+
+  sign(x)  ~ tanh(tau * x)                                   (Eq. 6)
+  I_b(x)   ~ sigmoid(-tau * sin(2*pi * 2^(bmax-b) * x/xmax)) (Eq. 7)
+
+annealing tau upward over training so the surrogate sharpens toward the
+true staircase without creating sharp local minima early on.
+
+We expose both (a) the raw approximation functions (used to regenerate
+Fig. 7 and by the "soft" forward mode), and (b) a straight-through
+custom_vjp wrapper ``quant_bwht_ste`` whose forward is the *exact*
+hardware arithmetic (bit-for-bit Eq. 4) and whose backward is the
+tanh-surrogate derivative chained through the float transform — the
+standard way Eq. (5b) is realized in an autodiff framework.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile import walsh as walsh_mod
+from compile.kernels import ref
+
+
+def sign_approx(x: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """Eq. (6): tanh(tau*x) -> sign(x) as tau -> inf."""
+    return jnp.tanh(x * tau)
+
+
+def sign_approx_grad(x: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """d/dx tanh(tau*x) = tau * sech^2(tau*x)."""
+    t = jnp.tanh(x * tau)
+    return tau * (1.0 - t * t)
+
+
+def bit_approx(
+    x: jnp.ndarray, b: int, bmax: int, xmax: float, tau: float
+) -> jnp.ndarray:
+    """Eq. (7): smooth approximation to the b-th magnitude bit of x.
+
+    b is 1-indexed from the MSB side as in the paper (b=1 is the MSB,
+    b=bmax the LSB); the sin term's period doubles with significance so
+    the logistic staircase matches the true bit pattern as tau -> inf.
+    """
+    arg = -tau * jnp.sin(2.0 * jnp.pi * (2.0 ** (bmax - b)) * x / xmax)
+    # exp(arg)/(1+exp(arg)) as printed overflows for arg > ~88 in f32;
+    # sigmoid(arg) is the same function, numerically stable.
+    return jax.nn.sigmoid(arg)
+
+
+def tau_schedule(
+    step: int, total_steps: int, tau_min: float = 1.0, tau_max: float = 32.0
+) -> float:
+    """Geometric tau annealing: sharpen the surrogate as training proceeds."""
+    if total_steps <= 1:
+        return tau_max
+    frac = min(max(step / (total_steps - 1), 0.0), 1.0)
+    return float(tau_min * (tau_max / tau_min) ** frac)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def quant_bwht_ste(
+    x: jnp.ndarray, bits: int, max_block: int, tau: float
+) -> jnp.ndarray:
+    """Exact Eq. (4) forward with a surrogate backward (Eq. 5b).
+
+    Forward: bit-for-bit the crossbar arithmetic (ref.quant_bwht_ref).
+    Backward: gradient of the tau-smoothed transform
+      y_i ~ scale * sum_b tanh(tau_n * psum_ib) * 2^(b-1)
+    where psum flows through the float +/-1 matmul, i.e. dL/dx gets
+    sign'(psum) ~ tau*sech^2 chained with B_ij, and the bitplane
+    decomposition is treated straight-through (dI_jb/dx_j ~ 2^-(b-1) share
+    of the quantizer slope, which telescopes to 1/scale).
+    """
+    return ref.quant_bwht_ref(x, bits, max_block)
+
+
+def _quant_bwht_fwd(x, bits, max_block, tau):
+    return ref.quant_bwht_ref(x, bits, max_block), x
+
+
+def _quant_bwht_bwd(bits, max_block, tau, x, g):
+    m = jnp.asarray(walsh_mod.bwht_matrix(x.shape[-1], max_block), x.dtype)
+    q, scale = ref.quantize_ref(x, bits)
+    planes = ref.bitplanes_ref(q, bits)  # (bits, ..., n)
+    psum = planes @ m.T
+    # Normalized PSUM so tau operates on an O(1) operand regardless of n.
+    n = x.shape[-1]
+    sg = sign_approx_grad(psum / n, tau) / n  # (bits, ..., n)
+    w = (2.0 ** jnp.arange(bits, dtype=x.dtype)).reshape(
+        (bits,) + (1,) * x.ndim
+    )
+    # dL/dpsum_b = g * 2^(b-1) * sign'(psum_b); chain through B: @ m.
+    dplane = (g[None] * w * sg) @ m  # (bits, ..., n)
+    # Straight-through across the bitplane quantizer: plane b contributes
+    # 2^(b-1)/ (2^bits - 1) of x/scale; summing the weighted planes
+    # recovers a unit pass-through (then the final *scale cancels 1/scale).
+    wsum = float(2**bits - 1)
+    dx = jnp.sum(dplane * w, axis=0) / wsum
+    return (dx * scale / jnp.maximum(scale, 1e-8),)
+
+
+quant_bwht_ste.defvjp(_quant_bwht_fwd, _quant_bwht_bwd)
+
+
+def quant_bwht_soft(
+    x: jnp.ndarray, bits: int, max_block: int, tau: float
+) -> jnp.ndarray:
+    """Fully-smooth version of Eq. (4) (used early in tau annealing).
+
+    Replaces sign() with tanh(tau .) on the normalized PSUM.  Keeps the
+    exact bitplane decomposition (it is piecewise-constant but the STE
+    above handles it; for the soft forward we simply reuse the hard
+    planes — the smoothness that matters for loss geometry is the
+    comparator's).
+    """
+    m = jnp.asarray(walsh_mod.bwht_matrix(x.shape[-1], max_block), x.dtype)
+    q, scale = ref.quantize_ref(x, bits)
+    planes = ref.bitplanes_ref(q, bits)
+    n = x.shape[-1]
+    psum = planes @ m.T
+    obits = sign_approx(psum / n, tau)
+    w = (2.0 ** jnp.arange(bits, dtype=x.dtype)).reshape(
+        (bits,) + (1,) * x.ndim
+    )
+    return jnp.sum(obits * w, axis=0) * scale

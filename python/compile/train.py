@@ -1,0 +1,201 @@
+"""Training loops (build-time only — rust never imports this).
+
+Implements the paper's training methodology (Sec. III-B/C):
+  * float baseline training,
+  * quantization-aware training (QAT) against the exact Eq. 4 forward with
+    surrogate gradients and tau annealing (Fig. 8),
+  * early-termination training with the Eq. 8 Wald regularizer (Fig. 9a).
+
+Hand-rolled Adam (no optax on the box).  Models are the DESIGN.md §1
+substitutes: same structure as the paper's ResNet20/MobileNetV2 edits,
+synthetic data, a few hundred steps.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as data_mod
+from compile import losses, model, surrogate
+
+# --------------------------------------------------------------------------
+# Hand-rolled Adam
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p
+        - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Generic trainer
+# --------------------------------------------------------------------------
+
+
+def make_loss_fn(
+    forward: Callable, stat, mode: str, bits: int, lam: float, t_max: float
+):
+    """Loss over trainable arrays (static config closed over)."""
+
+    def loss_fn(arrs, x, y, tau):
+        params = model.merge_params(arrs, stat)
+        logits = forward(params, x, mode=mode, bits=bits, tau=tau)
+        ts = model.collect_thresholds(params)
+        return losses.et_regularized_loss(logits, y, ts, lam=lam, t_max=t_max)
+
+    return loss_fn
+
+
+def train(
+    forward: Callable,
+    params: model.Params,
+    xtr: np.ndarray,
+    ytr: np.ndarray,
+    xte: np.ndarray,
+    yte: np.ndarray,
+    mode: str = "float",
+    bits: int = 8,
+    lam: float = 0.0,
+    t_max: float = 1.0,
+    steps: int = 300,
+    batch: int = 64,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log_every: int = 50,
+    tau_min: float = 2.0,
+    tau_max: float = 24.0,
+) -> tuple[model.Params, dict]:
+    """Run SGD; returns (trained params, history dict)."""
+    arrs, stat = model.split_params(params)
+    loss_fn = make_loss_fn(forward, stat, mode, bits, lam, t_max)
+    # tau is static (the STE custom_vjp takes it as a nondiff python float);
+    # annealing would recompile per step, so tau is quantized to 8 levels
+    # below and jit caches one executable per level.
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn), static_argnums=(3,))
+
+    opt = adam_init(arrs)
+    rng = np.random.RandomState(seed)
+    hist = {"step": [], "loss": [], "test_acc": [], "tau": []}
+
+    @functools.lru_cache(maxsize=8)
+    def _eval_fn(tau):
+        def f(arrs_, x, y):
+            p = model.merge_params(arrs_, stat)
+            logits = forward(p, x, mode=mode, bits=bits, tau=tau)
+            return losses.accuracy(logits, y)
+
+        return jax.jit(f)
+
+    n = len(xtr)
+    for step in range(steps):
+        tau_raw = surrogate.tau_schedule(step, steps, tau_min, tau_max)
+        # Quantize tau to 8 annealing levels to bound recompiles.
+        levels = np.geomspace(tau_min, tau_max, 8)
+        tau = float(levels[np.argmin(np.abs(levels - tau_raw))])
+        idx = rng.randint(0, n, size=batch)
+        x = jnp.asarray(xtr[idx])
+        y = jnp.asarray(ytr[idx])
+        loss, grads = grad_fn(arrs, x, y, tau)
+        arrs, opt = adam_update(arrs, grads, opt, lr=lr)
+        if step % log_every == 0 or step == steps - 1:
+            acc = float(
+                _eval_fn(tau)(arrs, jnp.asarray(xte), jnp.asarray(yte))
+            )
+            hist["step"].append(step)
+            hist["loss"].append(float(loss))
+            hist["test_acc"].append(acc)
+            hist["tau"].append(tau)
+    return model.merge_params(arrs, stat), hist
+
+
+def evaluate(
+    forward: Callable,
+    params: model.Params,
+    x: np.ndarray,
+    y: np.ndarray,
+    mode: str,
+    bits: int = 8,
+    tau: float = 24.0,
+    batch: int = 256,
+) -> float:
+    accs = []
+    for i in range(0, len(x), batch):
+        logits = forward(
+            params, jnp.asarray(x[i : i + batch]), mode=mode, bits=bits, tau=tau
+        )
+        accs.append(
+            float(losses.accuracy(logits, jnp.asarray(y[i : i + batch])))
+            * len(x[i : i + batch])
+        )
+    return sum(accs) / len(x)
+
+
+# --------------------------------------------------------------------------
+# Weight export for the rust inference engine
+# --------------------------------------------------------------------------
+
+
+def export_weights(params: model.Params, path: str) -> None:
+    """Flat JSON export: {name: {shape, data(row-major floats)}}.
+
+    Rust's nn::loader reads this; JSON keeps the loader dependency-free
+    (sizes here are tiny — thresholds and small conv stacks).
+    """
+    flat: dict[str, dict] = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{prefix}.{k}" if prefix else k)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                walk(v, f"{prefix}[{i}]")
+        elif hasattr(node, "shape"):
+            arr = np.asarray(node, dtype=np.float32)
+            flat[prefix] = {
+                "shape": list(arr.shape),
+                "data": [float(v) for v in arr.reshape(-1)],
+            }
+        else:
+            flat[prefix] = {"static": node}
+
+    walk(params, "")
+    with open(path, "w") as f:
+        json.dump(flat, f)
+
+
+def mlp_dataset():
+    x, y = data_mod.make_vector_dataset()
+    return data_mod.train_test_split(x, y)
+
+
+def image_dataset():
+    x, y = data_mod.make_image_dataset()
+    return data_mod.train_test_split(x, y)

@@ -1,0 +1,113 @@
+"""Walsh-Hadamard matrix construction and blockwise (BWHT) partitioning.
+
+Implements the paper's Sec. II-A:
+  * Sylvester Hadamard matrices H_k (Eq. 2),
+  * Walsh (sequency-ordered) matrices W_k — rows of H_k reordered by the
+    number of sign changes,
+  * blockwise partitioning for input dims that are not powers of two
+    (BWHT, Pan et al. [26]): split the transform into power-of-two blocks
+    so only the last block is zero-padded.
+
+Everything here is parameter-free and deterministic; these matrices are the
+"weights" the analog crossbar hardwires as +1/-1 cells.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+def hadamard(k: int) -> np.ndarray:
+    """Sylvester Hadamard matrix H_k of size 2^k x 2^k (Eq. 2)."""
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    h = np.array([[1]], dtype=np.int8)
+    for _ in range(k):
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def sign_changes(row: np.ndarray) -> int:
+    """Number of sign changes along a +/-1 row (the row's sequency)."""
+    return int(np.sum(row[:-1] != row[1:]))
+
+
+@functools.lru_cache(maxsize=32)
+def _walsh_cached(k: int) -> np.ndarray:
+    h = hadamard(k)
+    order = np.argsort([sign_changes(r) for r in h], kind="stable")
+    w = h[order]
+    w.setflags(write=False)
+    return w
+
+
+def walsh(k: int) -> np.ndarray:
+    """Walsh matrix W_k: rows of H_k in increasing sequency order.
+
+    Row i has exactly i sign changes; rows are mutually orthogonal and
+    W_k @ W_k.T == 2^k * I.
+    """
+    return _walsh_cached(k)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+MIN_BLOCK = 4
+
+
+def bwht_blocks(dim: int, max_block: int = 128) -> list[int]:
+    """BWHT block sizes covering ``dim`` channels (Pan et al. [26]).
+
+    Greedy largest-power-of-two-that-fits partition, capped at
+    ``max_block`` (the crossbar tile-size budget) and floored at
+    ``MIN_BLOCK`` (a 1- or 2-point WHT carries no frequency content).
+    Only the final block may require zero-padding, and only when the
+    remainder is smaller than MIN_BLOCK — this mitigates the worst-case
+    excessive zero-padding of a single full-size transform (e.g. dim=20
+    gives [16, 4] with no padding instead of one 32-block padding 12).
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    if max_block & (max_block - 1) or max_block < MIN_BLOCK:
+        raise ValueError(
+            f"max_block must be a power of two >= {MIN_BLOCK}, got {max_block}"
+        )
+    blocks: list[int] = []
+    rem = dim
+    while rem >= MIN_BLOCK:
+        b = min(1 << (rem.bit_length() - 1), max_block)
+        blocks.append(b)
+        rem -= b
+    if rem > 0:
+        # Final sub-MIN_BLOCK remainder: one zero-padded MIN_BLOCK block.
+        blocks.append(MIN_BLOCK)
+    return blocks
+
+
+def bwht_matrix(dim: int, max_block: int = 128) -> np.ndarray:
+    """Dense block-diagonal BWHT matrix for ``dim`` channels.
+
+    Output is padded_dim x padded_dim where padded_dim = sum(bwht_blocks).
+    Callers zero-pad inputs to padded_dim.  Entries are +/-1 within blocks
+    and 0 elsewhere; this is the exact matrix the crossbar tiles implement.
+    """
+    blocks = bwht_blocks(dim, max_block)
+    padded = sum(blocks)
+    m = np.zeros((padded, padded), dtype=np.int8)
+    off = 0
+    for b in blocks:
+        k = int(np.log2(b))
+        m[off : off + b, off : off + b] = walsh(k)
+        off += b
+    return m
+
+
+def bwht_padded_dim(dim: int, max_block: int = 128) -> int:
+    return sum(bwht_blocks(dim, max_block))

@@ -1,0 +1,107 @@
+"""AOT artifact generation: HLO text validity and manifest consistency.
+
+These tests exercise the same code path as `make artifacts` but into a
+tmpdir, on the small artifacts only (train_step is covered by the checked-in
+artifacts + the rust integration tests).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+class TestHloText:
+    def test_wht16_lowers_to_hlo_text(self):
+        lowered = jax.jit(aot.wht16).lower(jax.ShapeDtypeStruct((16, 16), jnp.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "HloModule" in text
+
+    def test_mlp_fwd_matches_model(self):
+        """The artifact function must equal the model's float forward."""
+        p = model.init_mlp(0)
+        x = jnp.asarray(np.random.RandomState(0).randn(8, 64).astype(np.float32))
+        (got,) = aot.mlp_fwd(
+            p["fc1"]["w"], p["fc1"]["b"], p["bwht"]["t"],
+            p["fc2"]["w"], p["fc2"]["b"], x,
+        )
+        want = model.mlp_forward(p, x, mode="float")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_train_step_reduces_loss(self):
+        """Iterating the artifact's train_step must reduce its loss output."""
+        p = model.init_mlp(0)
+        rng = np.random.RandomState(1)
+        x = jnp.asarray(rng.randn(64, 64).astype(np.float32))
+        y = jnp.asarray(rng.randint(0, 10, 64).astype(np.int32))
+        flat = [
+            p["fc1"]["w"], p["fc1"]["b"], p["bwht"]["t"],
+            p["fc2"]["w"], p["fc2"]["b"],
+        ]
+        losses_seen = []
+        step = jax.jit(aot.train_step)
+        for _ in range(12):
+            *flat, loss = step(*flat, x, y)
+            losses_seen.append(float(loss))
+        assert losses_seen[-1] < losses_seen[0], losses_seen
+
+    def test_quant_artifact_matches_ref(self):
+        x = jnp.asarray(np.random.RandomState(2).randn(32, 64).astype(np.float32))
+        (got,) = aot.quant_bwht64(x)
+        want = ref.quant_bwht_ref(x, bits=aot.BITS_AOT)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+class TestNoElidedConstants:
+    def test_large_constants_are_printed(self):
+        """Regression: default as_hlo_text() elides the baked Walsh
+        matrices as literal "{...}", which the rust text parser silently
+        reads back as ZEROS (the E2E model then trains to a flat loss).
+        """
+        lowered = jax.jit(aot.quant_bwht64).lower(
+            jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "constant({...})" not in text
+        # the 64-wide Walsh block must appear as a real f32 literal
+        assert "f32[64,64]" in text
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = str(tmp_path_factory.mktemp("artifacts"))
+        manifest = aot.build_artifacts(out, batch=64)
+        return out, manifest
+
+    def test_all_files_exist(self, built):
+        out, manifest = built
+        for name, meta in manifest["artifacts"].items():
+            path = os.path.join(out, meta["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+    def test_manifest_json_parses(self, built):
+        out, _ = built
+        with open(os.path.join(out, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["bits"] == aot.BITS_AOT
+        ts = m["artifacts"]["train_step"]["args"]
+        assert [a["name"] for a in ts] == [
+            "fc1_w", "fc1_b", "bwht_t", "fc2_w", "fc2_b", "x", "y",
+        ]
+        assert ts[-1]["dtype"] == "int32"
+
+    def test_arg_shapes_recorded(self, built):
+        _, manifest = built
+        args = {a["name"]: a for a in manifest["artifacts"]["mlp_fwd"]["args"]}
+        assert args["x"]["shape"] == [64, 64]
+        assert args["fc2_w"]["shape"] == [64, 10]

@@ -1,0 +1,82 @@
+"""Synthetic dataset generators: determinism, shapes, learnability signal."""
+
+import numpy as np
+
+from compile import data
+
+
+class TestImageDataset:
+    def test_shapes_and_dtypes(self):
+        x, y = data.make_image_dataset(n=64, h=16, w=16, c=3)
+        assert x.shape == (64, 16, 16, 3) and x.dtype == np.float32
+        assert y.shape == (64,) and y.dtype == np.int32
+
+    def test_deterministic(self):
+        x1, y1 = data.make_image_dataset(n=32, seed=5)
+        x2, y2 = data.make_image_dataset(n=32, seed=5)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_seed_changes_data(self):
+        x1, _ = data.make_image_dataset(n=32, seed=1)
+        x2, _ = data.make_image_dataset(n=32, seed=2)
+        assert not np.allclose(x1, x2)
+
+    def test_all_classes_present(self):
+        _, y = data.make_image_dataset(n=512)
+        assert set(np.unique(y)) == set(range(10))
+
+    def test_class_signal_exists(self):
+        """Same-class images must correlate more than cross-class ones."""
+        x, y = data.make_image_dataset(n=256, noise=0.2)
+        flat = x.reshape(len(x), -1)
+        flat = flat - flat.mean(0)
+        c0 = flat[y == 0][:10]
+        c1 = flat[y == 1][:10]
+        intra = np.mean([np.corrcoef(a, b)[0, 1] for a in c0[:5] for b in c0[5:]])
+        inter = np.mean([np.corrcoef(a, b)[0, 1] for a in c0[:5] for b in c1[:5]])
+        assert intra > inter
+
+
+class TestVectorDataset:
+    def test_shapes(self):
+        x, y = data.make_vector_dataset(n=128, dim=64)
+        assert x.shape == (128, 64) and y.shape == (128,)
+
+    def test_deterministic(self):
+        a = data.make_vector_dataset(n=64, seed=9)
+        b = data.make_vector_dataset(n=64, seed=9)
+        np.testing.assert_array_equal(a[0], b[0])
+
+    def test_linearly_separable_enough(self):
+        """Nearest-prototype classification must beat chance by far."""
+        x, y = data.make_vector_dataset(n=1000, noise=0.6, seed=1)
+        protos = np.stack([x[y == c].mean(0) for c in range(10)])
+        pred = np.argmax(x @ protos.T, axis=1)
+        assert (pred == y).mean() > 0.6
+
+
+class TestSplit:
+    def test_sizes_and_disjoint(self):
+        x, y = data.make_vector_dataset(n=100)
+        (xtr, ytr), (xte, yte) = data.train_test_split(x, y, test_frac=0.2)
+        assert len(xtr) == 80 and len(xte) == 20
+        # disjoint row multisets (vectors are continuous: collision ~ 0)
+        tr_set = {tuple(np.round(r, 5)) for r in xtr[:, :4]}
+        te_set = {tuple(np.round(r, 5)) for r in xte[:, :4]}
+        assert not (tr_set & te_set)
+
+    def test_deterministic(self):
+        x, y = data.make_vector_dataset(n=50)
+        s1 = data.train_test_split(x, y, seed=3)
+        s2 = data.train_test_split(x, y, seed=3)
+        np.testing.assert_array_equal(s1[0][0], s2[0][0])
+
+
+class TestExport:
+    def test_npy_roundtrip(self, tmp_path):
+        x, y = data.make_vector_dataset(n=16)
+        prefix = str(tmp_path / "ds")
+        data.export_npy(prefix, x, y)
+        np.testing.assert_array_equal(np.load(prefix + "_x.npy"), x)
+        np.testing.assert_array_equal(np.load(prefix + "_y.npy"), y)

@@ -1,0 +1,195 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/seeds; every kernel must match ref.py to float32
+tolerance (the quantized kernel must match bit-for-bit: identical sign
+decisions, exact integer recombination).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import walsh
+from compile.kernels import bitplane, bwht, ref, soft_threshold
+
+
+def randn(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+    )
+
+
+class TestWhtPallas:
+    @pytest.mark.parametrize("n", [4, 8, 16, 32, 64, 128])
+    def test_matches_ref(self, n):
+        x = randn((12, n), seed=n)
+        np.testing.assert_allclose(
+            bwht.wht_pallas(x), ref.wht_ref(x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_batch_not_multiple_of_tile(self):
+        x = randn((7, 16), seed=1)
+        np.testing.assert_allclose(
+            bwht.wht_pallas(x, batch_tile=4), ref.wht_ref(x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_linearity(self):
+        x, y = randn((5, 32), 2), randn((5, 32), 3)
+        got = bwht.wht_pallas(x + 2.0 * y)
+        want = bwht.wht_pallas(x) + 2.0 * bwht.wht_pallas(y)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_involution_up_to_n(self):
+        """W(W(x)) == n * x for the sequency-ordered transform."""
+        x = randn((3, 16), 4)
+        twice = bwht.wht_pallas(bwht.wht_pallas(x))
+        np.testing.assert_allclose(twice, 16.0 * x, rtol=1e-4, atol=1e-4)
+
+    @given(
+        b=st.integers(1, 40),
+        k=st.integers(2, 6),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_shapes(self, b, k, seed):
+        x = randn((b, 1 << k), seed)
+        np.testing.assert_allclose(
+            bwht.wht_pallas(x), ref.wht_ref(x), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestBwhtPallas:
+    @pytest.mark.parametrize("dim", [20, 48, 160])
+    def test_matches_ref(self, dim):
+        padded = walsh.bwht_padded_dim(dim)
+        x = randn((9, padded), dim)
+        np.testing.assert_allclose(
+            bwht.bwht_pallas(x), ref.bwht_ref(x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_block_independence(self):
+        """Zeroing one block's input zeroes only that block's output."""
+        padded = walsh.bwht_padded_dim(20)  # [16, 4]
+        x = randn((4, padded), 5)
+        x0 = x.at[:, 16:].set(0.0)
+        y = bwht.bwht_pallas(x0)
+        assert np.allclose(y[:, 16:], 0.0)
+        np.testing.assert_allclose(
+            y[:, :16], bwht.bwht_pallas(x)[:, :16], rtol=1e-5
+        )
+
+
+class TestSoftThresholdPallas:
+    @pytest.mark.parametrize("n", [8, 64, 100])
+    def test_matches_ref(self, n):
+        x = randn((17, n), n, scale=2.0)
+        t = jnp.abs(randn((n,), n + 1, scale=0.5))
+        np.testing.assert_allclose(
+            soft_threshold.soft_threshold_pallas(x, t),
+            ref.soft_threshold_ref(x, t),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+    def test_dead_zone(self):
+        x = jnp.asarray([[-0.5, -0.1, 0.0, 0.1, 0.5]], dtype=jnp.float32)
+        t = jnp.full((5,), 0.2, jnp.float32)
+        y = soft_threshold.soft_threshold_pallas(x, t)
+        np.testing.assert_allclose(
+            y, [[-0.3, 0.0, 0.0, 0.0, 0.3]], rtol=1e-6, atol=1e-7
+        )
+
+    def test_negative_t_treated_as_abs(self):
+        x = randn((3, 8), 9)
+        tpos = jnp.full((8,), 0.3, jnp.float32)
+        np.testing.assert_allclose(
+            soft_threshold.soft_threshold_pallas(x, -tpos),
+            soft_threshold.soft_threshold_pallas(x, tpos),
+        )
+
+    @given(b=st.integers(1, 30), n=st.integers(2, 80), seed=st.integers(0, 99))
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis(self, b, n, seed):
+        x = randn((b, n), seed, scale=3.0)
+        t = jnp.abs(randn((n,), seed + 1))
+        np.testing.assert_allclose(
+            soft_threshold.soft_threshold_pallas(x, t),
+            ref.soft_threshold_ref(x, t),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+
+class TestBwhtLayerPallas:
+    @pytest.mark.parametrize("dim", [16, 20, 96])
+    def test_matches_ref(self, dim):
+        padded = walsh.bwht_padded_dim(dim)
+        x = randn((8, padded), dim)
+        t = jnp.abs(randn((padded,), dim + 1, scale=0.3))
+        np.testing.assert_allclose(
+            bwht.bwht_layer_pallas(x, t),
+            ref.bwht_layer_ref(x, t),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_zero_threshold_is_identity(self):
+        """T=0: transform then inverse reproduces the input exactly."""
+        x = randn((4, 32), 11)
+        t = jnp.zeros((32,), jnp.float32)
+        np.testing.assert_allclose(
+            bwht.bwht_layer_pallas(x, t), x, rtol=1e-4, atol=1e-5
+        )
+
+    def test_huge_threshold_kills_everything(self):
+        x = randn((4, 32), 12)
+        t = jnp.full((32,), 1e6, jnp.float32)
+        np.testing.assert_allclose(
+            bwht.bwht_layer_pallas(x, t), jnp.zeros_like(x), atol=1e-6
+        )
+
+
+class TestQuantBwhtPallas:
+    @pytest.mark.parametrize("bits", [1, 2, 4, 8])
+    def test_matches_ref_bitexact(self, bits):
+        x = randn((16, 64), bits, scale=2.0)
+        got = bitplane.quant_bwht_pallas(x, bits=bits)
+        want = ref.quant_bwht_ref(x, bits=bits)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_output_values_are_quantized(self):
+        """Outputs / scale must be integers in [-(2^B - 1), 2^B - 1]."""
+        bits = 4
+        x = randn((8, 16), 21)
+        qmax = 2**bits - 1
+        scale = float(jnp.max(jnp.abs(x))) / qmax
+        y = np.asarray(bitplane.quant_bwht_pallas(x, bits=bits)) / scale
+        np.testing.assert_allclose(y, np.round(y), atol=1e-3)
+        assert np.abs(y).max() <= 2**bits - 1
+
+    @given(
+        b=st.integers(1, 20),
+        k=st.integers(2, 6),
+        bits=st.integers(1, 8),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_hypothesis(self, b, k, bits, seed):
+        x = randn((b, 1 << k), seed, scale=1.5)
+        np.testing.assert_allclose(
+            bitplane.quant_bwht_pallas(x, bits=bits),
+            ref.quant_bwht_ref(x, bits=bits),
+            rtol=1e-6,
+            atol=1e-7,
+        )
+
+    def test_nonpow2_blocks(self):
+        dim = walsh.bwht_padded_dim(20)
+        x = randn((6, dim), 33)
+        np.testing.assert_allclose(
+            bitplane.quant_bwht_pallas(x, bits=6),
+            ref.quant_bwht_ref(x, bits=6),
+            rtol=1e-6,
+            atol=1e-7,
+        )

@@ -1,0 +1,108 @@
+"""Loss functions and the Eq. 8 early-termination regularizer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses
+
+
+class TestCrossEntropy:
+    def test_uniform_logits(self):
+        logits = jnp.zeros((4, 10))
+        labels = jnp.asarray([0, 3, 5, 9])
+        assert float(losses.cross_entropy(logits, labels)) == pytest.approx(
+            np.log(10.0), rel=1e-5
+        )
+
+    def test_confident_correct_is_small(self):
+        logits = jnp.asarray([[10.0, 0.0, 0.0]])
+        labels = jnp.asarray([0])
+        assert float(losses.cross_entropy(logits, labels)) < 1e-3
+
+    def test_matches_manual(self):
+        rng = np.random.RandomState(0)
+        logits = jnp.asarray(rng.randn(6, 5).astype(np.float32))
+        labels = jnp.asarray(rng.randint(0, 5, 6))
+        p = np.exp(np.asarray(logits))
+        p /= p.sum(-1, keepdims=True)
+        manual = -np.mean(np.log(p[np.arange(6), np.asarray(labels)]))
+        assert float(losses.cross_entropy(logits, labels)) == pytest.approx(
+            manual, rel=1e-5
+        )
+
+
+class TestAccuracy:
+    def test_perfect(self):
+        logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0]])
+        assert float(losses.accuracy(logits, jnp.asarray([0, 1]))) == 1.0
+
+    def test_half(self):
+        logits = jnp.asarray([[1.0, 0.0], [1.0, 0.0]])
+        assert float(losses.accuracy(logits, jnp.asarray([0, 1]))) == 0.5
+
+
+class TestWaldRegularizer:
+    def test_gradient_pushes_t_toward_tmax(self):
+        """The combined loss term must *increase* |T| (Fig. 9a behaviour)."""
+        t = jnp.asarray([0.2, -0.4, 0.7])
+
+        def reg_term(t_):
+            # as used in et_regularized_loss: loss -= lam * wald_nll
+            return -losses.wald_neg_log_likelihood(t_, t_max=1.0)
+
+        g = jax.grad(reg_term)(t)
+        # d(loss)/dT must have opposite sign to T => -g/ sign ... gradient
+        # descent step t <- t - lr*g should move |t| up.
+        t2 = t - 0.01 * g
+        assert (np.abs(np.asarray(t2)) > np.abs(np.asarray(t))).all()
+
+    def test_minimum_at_g_equals_1(self):
+        """Over (0,1], the term is minimized (most negative) at |T|=T_max."""
+        vals = [
+            -float(losses.wald_neg_log_likelihood(jnp.asarray([g])))
+            for g in (0.1, 0.5, 0.99)
+        ]
+        assert vals[0] > vals[1] > vals[2]
+
+    def test_eps_clip_keeps_finite(self):
+        v = losses.wald_neg_log_likelihood(jnp.asarray([0.0, 1e-9]))
+        assert np.isfinite(float(v))
+
+
+class TestEtRegularizedLoss:
+    def _setup(self):
+        rng = np.random.RandomState(1)
+        logits = jnp.asarray(rng.randn(8, 10).astype(np.float32))
+        labels = jnp.asarray(rng.randint(0, 10, 8))
+        ts = [jnp.asarray([0.1, 0.5]), jnp.asarray([-0.3])]
+        return logits, labels, ts
+
+    def test_lam_zero_is_plain_ce(self):
+        logits, labels, ts = self._setup()
+        assert float(
+            losses.et_regularized_loss(logits, labels, ts, lam=0.0)
+        ) == pytest.approx(float(losses.cross_entropy(logits, labels)))
+
+    def test_larger_t_lowers_loss(self):
+        logits, labels, _ = self._setup()
+        small = losses.et_regularized_loss(
+            logits, labels, [jnp.asarray([0.1])], lam=0.1
+        )
+        large = losses.et_regularized_loss(
+            logits, labels, [jnp.asarray([0.9])], lam=0.1
+        )
+        assert float(large) < float(small)
+
+    def test_gradient_through_thresholds(self):
+        logits, labels, _ = self._setup()
+
+        def f(t):
+            return losses.et_regularized_loss(logits, labels, [t], lam=0.05)
+
+        g = jax.grad(f)(jnp.asarray([0.3, -0.6]))
+        assert np.isfinite(np.asarray(g)).all()
+        # descent moves both toward +/-1
+        t2 = np.asarray(jnp.asarray([0.3, -0.6]) - 0.1 * g)
+        assert abs(t2[0]) > 0.3 and abs(t2[1]) > 0.6

@@ -1,0 +1,148 @@
+"""Model shapes, modes, parameter accounting, split/merge round-trip."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, walsh
+
+
+def randx(shape, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+class TestBwhtLayer:
+    def test_expansion_shape(self):
+        p = model.init_bwht(np.random.RandomState(0), 32)
+        x = randx((4, 6, 6, 16))
+        y = model.bwht_layer(p, x, 32)
+        assert y.shape == (4, 6, 6, 32)
+
+    def test_projection_shape(self):
+        p = model.init_bwht(np.random.RandomState(0), 32)
+        x = randx((4, 6, 6, 32))
+        y = model.bwht_layer(p, x, 8)
+        assert y.shape == (4, 6, 6, 8)
+
+    @pytest.mark.parametrize("mode", ["float", "qat", "soft"])
+    def test_all_modes_run(self, mode):
+        p = model.init_bwht(np.random.RandomState(0), 16)
+        x = randx((2, 16))
+        y = model.bwht_layer(p, x, 16, mode=mode, bits=4, tau=8.0)
+        assert y.shape == (2, 16)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_parameter_count_is_thresholds_only(self):
+        p = model.init_bwht(np.random.RandomState(0), 64)
+        assert model.count_params(p) == walsh.bwht_padded_dim(64)
+
+
+class TestBlocks:
+    def test_residual_block_conv_vs_bwht_params(self):
+        rng = np.random.RandomState(0)
+        p_conv = model.init_residual_block(rng, 32, 32, use_bwht=False)
+        p_bwht = model.init_residual_block(rng, 32, 32, use_bwht=True)
+        # BWHT block replaces the 32x32 1x1 conv (1024+32 params) with 32 T.
+        assert model.count_params(p_bwht) < model.count_params(p_conv)
+        diff = model.count_params(p_conv) - model.count_params(p_bwht)
+        assert diff == (32 * 32 + 32) - 32
+
+    @pytest.mark.parametrize("use_bwht", [False, True])
+    def test_residual_block_shape(self, use_bwht):
+        rng = np.random.RandomState(1)
+        p = model.init_residual_block(rng, 16, 32, use_bwht=use_bwht)
+        y = model.residual_block(p, randx((2, 8, 8, 16)), "float", 8, 8.0)
+        assert y.shape == (2, 8, 8, 32)
+
+    @pytest.mark.parametrize("use_bwht", [False, True])
+    def test_bottleneck_block_shape(self, use_bwht):
+        rng = np.random.RandomState(2)
+        p = model.init_bottleneck_block(rng, 16, 4, 16, use_bwht=use_bwht)
+        y = model.bottleneck_block(p, randx((2, 8, 8, 16)), "float", 8, 8.0)
+        assert y.shape == (2, 8, 8, 16)
+
+    def test_bottleneck_bwht_fewer_params(self):
+        rng = np.random.RandomState(3)
+        p_conv = model.init_bottleneck_block(rng, 16, 4, 16, use_bwht=False)
+        p_bwht = model.init_bottleneck_block(rng, 16, 4, 16, use_bwht=True)
+        assert model.count_params(p_bwht) < model.count_params(p_conv)
+
+
+class TestResnet:
+    def test_forward_shape(self):
+        p = model.init_bwht_resnet(0, freq_layers=3)
+        y = model.bwht_resnet(p, randx((2, 16, 16, 3)))
+        assert y.shape == (2, 10)
+
+    def test_param_count_monotone_in_freq_layers(self):
+        counts = [
+            model.count_params(model.init_bwht_resnet(0, k))
+            for k in range(model.num_mixing_layers() + 1)
+        ]
+        assert counts == sorted(counts, reverse=True), counts
+        # Full frequency processing must compress substantially (Fig 1b).
+        assert counts[-1] < 0.75 * counts[0]
+
+    @pytest.mark.parametrize("mode", ["float", "qat"])
+    def test_modes_finite(self, mode):
+        p = model.init_bwht_resnet(1, freq_layers=6)
+        y = model.bwht_resnet(p, randx((2, 16, 16, 3)), mode=mode, bits=4)
+        assert np.isfinite(np.asarray(y)).all()
+
+
+class TestMlp:
+    def test_shapes(self):
+        p = model.init_mlp(0)
+        y = model.mlp_forward(p, randx((8, 64)))
+        assert y.shape == (8, 10)
+
+    @pytest.mark.parametrize("mode", ["float", "qat", "soft"])
+    def test_modes(self, mode):
+        p = model.init_mlp(0)
+        y = model.mlp_forward(p, randx((4, 64)), mode=mode, bits=4)
+        assert np.isfinite(np.asarray(y)).all()
+
+
+class TestSplitMerge:
+    @pytest.mark.parametrize(
+        "make",
+        [
+            lambda: model.init_mlp(0),
+            lambda: model.init_bwht_resnet(0, 2),
+            lambda: model.init_bottleneck_block(
+                np.random.RandomState(0), 8, 2, 8, True
+            ),
+        ],
+    )
+    def test_roundtrip(self, make):
+        p = make()
+        arrs, stat = model.split_params(p)
+        p2 = model.merge_params(arrs, stat)
+
+        def compare(a, b):
+            if isinstance(a, dict):
+                assert set(a) == set(b)
+                for k in a:
+                    compare(a[k], b[k])
+            elif isinstance(a, list):
+                assert len(a) == len(b)
+                for x, y in zip(a, b):
+                    compare(x, y)
+            elif hasattr(a, "shape"):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            else:
+                assert a == b
+
+        compare(p, p2)
+
+    def test_arrays_tree_has_no_static_leaves(self):
+        arrs, _ = model.split_params(model.init_bwht_resnet(0, 3))
+        import jax
+
+        for leaf in jax.tree_util.tree_leaves(arrs):
+            assert hasattr(leaf, "shape"), f"non-array leaf {leaf!r}"
+
+    def test_collect_thresholds(self):
+        p = model.init_bwht_resnet(0, freq_layers=4)
+        ts = model.collect_thresholds(p)
+        assert len(ts) == 4

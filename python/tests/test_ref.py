@@ -1,0 +1,116 @@
+"""Properties of the pure-jnp oracle itself (it anchors everything else)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import walsh
+from compile.kernels import ref
+
+
+def randn(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (np.random.RandomState(seed).randn(*shape) * scale).astype(np.float32)
+    )
+
+
+class TestQuantize:
+    def test_roundtrip_error_bounded(self):
+        x = randn((100,), 0, scale=3.0)
+        for bits in [2, 4, 8]:
+            q, scale = ref.quantize_ref(x, bits)
+            err = np.abs(np.asarray(q * scale - x))
+            assert err.max() <= float(scale) / 2 + 1e-6
+
+    def test_range(self):
+        x = randn((64,), 1)
+        q, _ = ref.quantize_ref(x, 8)
+        assert np.abs(np.asarray(q)).max() <= 255
+
+    def test_extremes_hit_qmax(self):
+        x = jnp.asarray([1.0, -1.0, 0.5], jnp.float32)
+        q, s = ref.quantize_ref(x, 8)
+        assert float(jnp.max(jnp.abs(q))) == 255
+
+    def test_1bit_is_ternary(self):
+        x = randn((64,), 2)
+        q, _ = ref.quantize_ref(x, 1)
+        assert set(np.unique(np.asarray(q))) <= {-1.0, 0.0, 1.0}
+
+    @given(bits=st.integers(1, 8), seed=st.integers(0, 500))
+    @settings(max_examples=40, deadline=None)
+    def test_q_is_integer(self, bits, seed):
+        x = randn((32,), seed)
+        q, _ = ref.quantize_ref(x, bits)
+        np.testing.assert_allclose(np.asarray(q), np.round(np.asarray(q)))
+
+
+class TestBitplanes:
+    def test_reconstruction(self):
+        """sum_b plane_b * 2^b must reconstruct the signed integer."""
+        rng = np.random.RandomState(3)
+        q = jnp.asarray(rng.randint(-127, 128, size=(5, 7)).astype(np.float32))
+        planes = ref.bitplanes_ref(q, 8)
+        w = 2.0 ** np.arange(8)
+        recon = np.tensordot(w, np.asarray(planes), axes=(0, 0))
+        np.testing.assert_allclose(recon, np.asarray(q))
+
+    def test_values_in_pm1(self):
+        q = jnp.asarray([[-5.0, 3.0, 0.0]])
+        planes = np.asarray(ref.bitplanes_ref(q, 4))
+        assert set(np.unique(planes)) <= {-1.0, 0.0, 1.0}
+
+    def test_sign_magnitude_symmetry(self):
+        q = jnp.asarray([[37.0]])
+        p_pos = np.asarray(ref.bitplanes_ref(q, 8))
+        p_neg = np.asarray(ref.bitplanes_ref(-q, 8))
+        np.testing.assert_allclose(p_pos, -p_neg)
+
+
+class TestQuantBwhtConvergence:
+    """Eq. 4 must converge to the true transform direction as bits grow."""
+
+    def _cosine(self, a, b):
+        a, b = np.asarray(a).ravel(), np.asarray(b).ravel()
+        return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+
+    def test_sign_agreement_increases_with_bits(self):
+        x = randn((32, 64), 7)
+        exact = ref.bwht_ref(x)
+        cos = [
+            self._cosine(jnp.sign(ref.quant_bwht_ref(x, bits=b)), jnp.sign(exact))
+            for b in (1, 4, 8)
+        ]
+        assert cos[-1] > cos[0] - 1e-9
+        # Eq. 4 is a *crude* approximation (hence the paper's 3-4% accuracy
+        # loss and the need to retrain) — require correlation, not fidelity.
+        assert cos[-1] > 0.4, f"8-bit Eq.4 should track transform signs, got {cos}"
+
+    def test_1bit_output_is_pm_scale(self):
+        x = randn((4, 16), 8)
+        y = ref.quant_bwht_ref(x, bits=1)
+        q, scale = ref.quantize_ref(x, 1)
+        vals = np.unique(np.round(np.asarray(y / scale), 5))
+        assert set(vals) <= {-1.0, 0.0, 1.0}
+
+
+class TestBwhtLayerRef:
+    def test_energy_nonincreasing(self):
+        """Soft-thresholding in an orthonormal basis shrinks the norm."""
+        x = randn((10, 32), 9, scale=2.0)
+        t = jnp.full((32,), 0.4, jnp.float32)
+        y = ref.bwht_layer_ref(x, t)
+        assert np.linalg.norm(np.asarray(y)) <= np.linalg.norm(np.asarray(x)) + 1e-4
+
+    def test_sparsity_increases_with_t(self):
+        x = randn((10, 32), 10)
+        w = jnp.asarray(walsh.walsh(5).astype(np.float32)) / np.sqrt(32.0)
+        sparsity = []
+        for tval in [0.0, 0.3, 1.0]:
+            t = jnp.full((32,), tval, jnp.float32)
+            freq = (x @ w.T)
+            thr = ref.soft_threshold_ref(freq, t)
+            sparsity.append(float(jnp.mean(thr == 0.0)))
+        assert sparsity[0] <= sparsity[1] <= sparsity[2]
+        assert sparsity[2] > 0.5

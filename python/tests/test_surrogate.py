@@ -1,0 +1,152 @@
+"""Surrogate gradient machinery (Eqs. 6-7, Fig. 7) and the STE wrapper."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import surrogate
+from compile.kernels import ref
+
+
+class TestSignApprox:
+    def test_converges_to_sign(self):
+        # Stay off the discontinuity at 0 (float32 linspace lands a ~1e-8
+        # residue there where sign() and tanh() legitimately disagree).
+        x = jnp.asarray(np.r_[-2:-0.01:50j, 0.01:2:50j].astype(np.float32))
+        approx = surrogate.sign_approx(x, tau=500.0)
+        np.testing.assert_allclose(
+            np.asarray(approx), np.sign(np.asarray(x)), atol=1e-2
+        )
+
+    def test_monotone_in_tau(self):
+        """Higher tau sharpens: |tanh(tau x)| grows with tau off zero."""
+        x = jnp.asarray([0.1, -0.3])
+        a1 = jnp.abs(surrogate.sign_approx(x, 2.0))
+        a2 = jnp.abs(surrogate.sign_approx(x, 8.0))
+        assert (np.asarray(a2) >= np.asarray(a1)).all()
+
+    def test_grad_peak_at_zero(self):
+        g0 = surrogate.sign_approx_grad(jnp.asarray(0.0), 4.0)
+        g1 = surrogate.sign_approx_grad(jnp.asarray(1.0), 4.0)
+        assert float(g0) == pytest.approx(4.0)
+        assert float(g0) > float(g1)
+
+    def test_grad_matches_autodiff(self):
+        f = lambda x: surrogate.sign_approx(x, 3.0)
+        x = jnp.asarray(0.37)
+        auto = jax.grad(f)(x)
+        manual = surrogate.sign_approx_grad(x, 3.0)
+        np.testing.assert_allclose(float(auto), float(manual), rtol=1e-6)
+
+
+class TestBitApprox:
+    def test_high_tau_matches_true_bit(self):
+        """Eq. 7 at high tau reproduces the magnitude-bit staircase.
+
+        Eq. 4's b is 1-indexed from the LSB (weight 2^(b-1)); Eq. 7's sin
+        argument 2pi*2^(bmax-b)*x/xmax with xmax=2^bmax has period 2^b in
+        x, i.e. plane p = b-1 of floor(x).  Sample at integer+0.5 so we sit
+        mid-staircase, away from the sigmoid's 0.5-crossings.
+        """
+        bmax = 4
+        xmax = float(2**bmax)
+        ns = np.arange(0, 16)
+        xs = jnp.asarray((ns + 0.5).astype(np.float32))
+        for b in range(1, bmax + 1):
+            approx = surrogate.bit_approx(xs, b, bmax, xmax, tau=200.0)
+            true_bit = (ns >> (b - 1)) & 1
+            agree = np.mean((np.asarray(approx) > 0.5) == (true_bit == 1))
+            assert agree == 1.0, f"bit {b}: agreement {agree}"
+
+    def test_output_in_unit_interval(self):
+        xs = jnp.linspace(0.0, 8.0, 64)
+        y = surrogate.bit_approx(xs, 2, 4, 8.0, tau=5.0)
+        assert float(jnp.min(y)) >= 0.0 and float(jnp.max(y)) <= 1.0
+
+    def test_differentiable(self):
+        g = jax.grad(lambda x: surrogate.bit_approx(x, 2, 4, 8.0, 5.0))(
+            jnp.asarray(3.3)
+        )
+        assert np.isfinite(float(g))
+
+
+class TestTauSchedule:
+    def test_endpoints(self):
+        assert surrogate.tau_schedule(0, 100, 1.0, 32.0) == pytest.approx(1.0)
+        assert surrogate.tau_schedule(99, 100, 1.0, 32.0) == pytest.approx(32.0)
+
+    def test_monotone(self):
+        vals = [surrogate.tau_schedule(s, 50) for s in range(50)]
+        assert vals == sorted(vals)
+
+    def test_degenerate_total(self):
+        assert surrogate.tau_schedule(0, 1, 1.0, 8.0) == 8.0
+
+
+class TestQuantBwhtSte:
+    def test_forward_is_exact_hardware_math(self):
+        x = jnp.asarray(np.random.RandomState(0).randn(8, 32).astype(np.float32))
+        got = surrogate.quant_bwht_ste(x, 8, 128, 8.0)
+        want = ref.quant_bwht_ref(x, 8, 128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_gradient_finite_and_nonzero(self):
+        x = jnp.asarray(np.random.RandomState(1).randn(4, 16).astype(np.float32))
+
+        def loss(x_):
+            return jnp.sum(surrogate.quant_bwht_ste(x_, 4, 128, 8.0) ** 2)
+
+        g = jax.grad(loss)(x)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.max(jnp.abs(g))) > 0.0
+
+    def test_gradient_descends(self):
+        """A few surrogate-gradient steps must reduce a simple loss."""
+        rng = np.random.RandomState(2)
+        x = jnp.asarray(rng.randn(8, 16).astype(np.float32))
+        target = jnp.asarray(rng.randn(8, 16).astype(np.float32)) * 2.0
+
+        def loss(x_):
+            y = surrogate.quant_bwht_ste(x_, 8, 128, 16.0)
+            return jnp.mean((y - target) ** 2)
+
+        l0 = float(loss(x))
+        g = jax.grad(loss)
+        for _ in range(30):
+            x = x - 0.05 * g(x)
+        l1 = float(loss(x))
+        assert l1 < l0, f"surrogate descent failed: {l0} -> {l1}"
+
+    @given(bits=st.integers(1, 8), seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_forward_hypothesis(self, bits, seed):
+        x = jnp.asarray(
+            np.random.RandomState(seed).randn(4, 16).astype(np.float32)
+        )
+        np.testing.assert_allclose(
+            np.asarray(surrogate.quant_bwht_ste(x, bits, 128, 8.0)),
+            np.asarray(ref.quant_bwht_ref(x, bits, 128)),
+            rtol=1e-6,
+        )
+
+
+class TestQuantBwhtSoft:
+    def test_converges_to_hard_at_high_tau(self):
+        x = jnp.asarray(np.random.RandomState(3).randn(8, 32).astype(np.float32))
+        soft = surrogate.quant_bwht_soft(x, 8, 128, tau=5000.0)
+        hard = ref.quant_bwht_ref(x, 8, 128)
+        # Off exact-zero PSUMs, tanh(5000*psum/n) ~ sign.
+        close = np.mean(
+            np.abs(np.asarray(soft) - np.asarray(hard))
+            < 0.05 * float(jnp.max(jnp.abs(hard)))
+        )
+        assert close > 0.9
+
+    def test_smooth_everywhere(self):
+        x = jnp.asarray(np.random.RandomState(4).randn(2, 8).astype(np.float32))
+        g = jax.grad(
+            lambda x_: jnp.sum(surrogate.quant_bwht_soft(x_, 4, 128, 3.0))
+        )(x)
+        assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,82 @@
+"""Training loop: optimizer correctness and learning signal in every mode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train
+
+
+class TestAdam:
+    def test_step_reduces_quadratic(self):
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = train.adam_init(params)
+        for _ in range(200):
+            grads = {"w": 2.0 * params["w"]}
+            params, state = train.adam_update(params, grads, state, lr=0.1)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+    def test_bias_correction_first_step(self):
+        """First Adam step must be ~lr * sign(grad), not lr*(1-b1)*g."""
+        params = {"w": jnp.asarray([0.0])}
+        state = train.adam_init(params)
+        params, _ = train.adam_update(params, {"w": jnp.asarray([1.0])}, state, lr=0.1)
+        assert float(params["w"][0]) == pytest.approx(-0.1, rel=1e-3)
+
+
+class TestTrainMlp:
+    @pytest.fixture(scope="class")
+    def dataset(self):
+        return train.mlp_dataset()
+
+    def test_float_training_learns(self, dataset):
+        (xtr, ytr), (xte, yte) = dataset
+        p, hist = train.train(
+            model.mlp_forward, model.init_mlp(0), xtr, ytr, xte, yte,
+            mode="float", steps=80, log_every=40,
+        )
+        assert hist["test_acc"][-1] > 0.9
+        assert hist["loss"][-1] < hist["loss"][0]
+
+    def test_qat_training_learns(self, dataset):
+        (xtr, ytr), (xte, yte) = dataset
+        p, hist = train.train(
+            model.mlp_forward, model.init_mlp(0), xtr, ytr, xte, yte,
+            mode="qat", bits=4, steps=60, log_every=30,
+        )
+        assert hist["test_acc"][-1] > 0.5, hist
+
+    def test_et_regularizer_grows_thresholds(self, dataset):
+        (xtr, ytr), (xte, yte) = dataset
+        p0 = model.init_mlp(0)
+        t0 = float(np.mean(np.abs(np.asarray(p0["bwht"]["t"]))))
+        p, _ = train.train(
+            model.mlp_forward, p0, xtr, ytr, xte, yte,
+            mode="float", lam=0.05, t_max=1.0, steps=80, log_every=80,
+        )
+        t1 = float(np.mean(np.abs(np.asarray(p["bwht"]["t"]))))
+        assert t1 > t0, f"Wald regularizer should grow |T|: {t0} -> {t1}"
+
+    def test_evaluate_consistency(self, dataset):
+        (xtr, ytr), (xte, yte) = dataset
+        p = model.init_mlp(0)
+        acc = train.evaluate(model.mlp_forward, p, xte, yte, mode="float")
+        assert 0.0 <= acc <= 1.0
+
+
+class TestExportWeights:
+    def test_json_roundtrip(self, tmp_path):
+        import json
+
+        p = model.init_mlp(0)
+        path = str(tmp_path / "w.json")
+        train.export_weights(p, path)
+        with open(path) as f:
+            flat = json.load(f)
+        assert flat["fc1.w"]["shape"] == [64, 64]
+        assert len(flat["fc1.w"]["data"]) == 64 * 64
+        np.testing.assert_allclose(
+            np.asarray(flat["bwht.t"]["data"]),
+            np.asarray(p["bwht"]["t"]),
+            rtol=1e-6,
+        )

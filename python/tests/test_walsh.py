@@ -1,0 +1,134 @@
+"""Walsh/Hadamard matrix and BWHT partition properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import walsh
+
+
+class TestHadamard:
+    def test_base_case(self):
+        assert walsh.hadamard(0).tolist() == [[1]]
+
+    def test_recursion(self):
+        h1 = walsh.hadamard(1)
+        assert h1.tolist() == [[1, 1], [1, -1]]
+        h2 = walsh.hadamard(2)
+        assert h2[:2, :2].tolist() == h1.tolist()
+        assert h2[2:, 2:].tolist() == (-h1).tolist()
+
+    @pytest.mark.parametrize("k", range(8))
+    def test_orthogonality(self, k):
+        h = walsh.hadamard(k).astype(np.int64)
+        n = 1 << k
+        assert (h @ h.T == n * np.eye(n, dtype=np.int64)).all()
+
+    @pytest.mark.parametrize("k", range(8))
+    def test_entries_pm1(self, k):
+        assert set(np.unique(walsh.hadamard(k))) <= {-1, 1}
+
+    def test_negative_k_raises(self):
+        with pytest.raises(ValueError):
+            walsh.hadamard(-1)
+
+
+class TestWalsh:
+    @pytest.mark.parametrize("k", range(1, 8))
+    def test_sequency_order(self, k):
+        w = walsh.walsh(k)
+        seq = [walsh.sign_changes(r) for r in w]
+        assert seq == list(range(1 << k)), "row i must have i sign changes"
+
+    @pytest.mark.parametrize("k", range(7))
+    def test_row_permutation_of_hadamard(self, k):
+        h = {tuple(r) for r in walsh.hadamard(k)}
+        w = {tuple(r) for r in walsh.walsh(k)}
+        assert h == w
+
+    @pytest.mark.parametrize("k", range(7))
+    def test_orthogonality(self, k):
+        w = walsh.walsh(k).astype(np.int64)
+        n = 1 << k
+        assert (w @ w.T == n * np.eye(n, dtype=np.int64)).all()
+
+    def test_first_row_constant(self):
+        assert (walsh.walsh(5)[0] == 1).all()
+
+    def test_cached_immutable(self):
+        w = walsh.walsh(3)
+        with pytest.raises(ValueError):
+            w[0, 0] = 5
+
+
+class TestNextPow2:
+    @pytest.mark.parametrize(
+        "n,expect", [(1, 1), (2, 2), (3, 4), (5, 8), (16, 16), (17, 32), (1000, 1024)]
+    )
+    def test_values(self, n, expect):
+        assert walsh.next_pow2(n) == expect
+
+    def test_nonpositive_raises(self):
+        with pytest.raises(ValueError):
+            walsh.next_pow2(0)
+
+
+class TestBwhtBlocks:
+    def test_exact_pow2(self):
+        assert walsh.bwht_blocks(64) == [64]
+        assert walsh.bwht_blocks(128) == [128]
+
+    def test_cap(self):
+        assert walsh.bwht_blocks(256, max_block=128) == [128, 128]
+
+    def test_mixed(self):
+        assert walsh.bwht_blocks(20) == [16, 4]
+        assert walsh.bwht_blocks(300) == [128, 128, 32, 8, 4]
+
+    def test_small_remainder_pads(self):
+        # 5 = 4 + 1; the 1-remainder becomes one padded MIN_BLOCK block.
+        assert walsh.bwht_blocks(5) == [4, walsh.MIN_BLOCK]
+
+    def test_invalid_max_block(self):
+        with pytest.raises(ValueError):
+            walsh.bwht_blocks(10, max_block=24)
+        with pytest.raises(ValueError):
+            walsh.bwht_blocks(10, max_block=2)
+
+    @given(dim=st.integers(1, 4096), cap_k=st.integers(2, 10))
+    @settings(max_examples=200, deadline=None)
+    def test_properties(self, dim, cap_k):
+        cap = 1 << cap_k
+        blocks = walsh.bwht_blocks(dim, cap)
+        # every block a power of two within [MIN_BLOCK, cap]
+        for b in blocks:
+            assert b & (b - 1) == 0
+            assert walsh.MIN_BLOCK <= b <= cap
+        total = sum(blocks)
+        # covers dim, pads strictly less than MIN_BLOCK
+        assert dim <= total < dim + walsh.MIN_BLOCK
+        # non-increasing (greedy largest-first)
+        assert blocks == sorted(blocks, reverse=True)
+
+
+class TestBwhtMatrix:
+    def test_block_diagonal(self):
+        m = walsh.bwht_matrix(20)
+        assert m.shape == (20, 20)
+        assert (m[:16, 16:] == 0).all() and (m[16:, :16] == 0).all()
+        assert (m[:16, :16] == walsh.walsh(4)).all()
+        assert (m[16:, 16:] == walsh.walsh(2)).all()
+
+    @pytest.mark.parametrize("dim", [4, 7, 16, 20, 100, 300])
+    def test_blockwise_orthogonality(self, dim):
+        m = walsh.bwht_matrix(dim).astype(np.int64)
+        gram = m @ m.T
+        # Gram matrix is diagonal with block sizes on the diagonal.
+        assert (gram == np.diag(np.diag(gram))).all()
+        blocks = walsh.bwht_blocks(dim)
+        expect = np.concatenate([np.full(b, b) for b in blocks])
+        assert (np.diag(gram) == expect).all()
+
+    def test_padded_dim_consistency(self):
+        for dim in [1, 3, 5, 20, 64, 129, 300]:
+            assert walsh.bwht_padded_dim(dim) == walsh.bwht_matrix(dim).shape[0]

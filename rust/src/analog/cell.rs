@@ -1,0 +1,175 @@
+//! Behavioral model of one 6T NMOS compute cell (Fig. 4, right).
+//!
+//! Each cell hardwires one Walsh-matrix entry (+1 or −1) in its wiring:
+//! the '+1' and '−1' variants swap which local node (O vs OB) each column
+//! line discharges.  During the local-compute step the cell output nodes
+//! either retain the precharge voltage or discharge toward ground through
+//! the NMOS pull-down; how *completely* they discharge depends on the gate
+//! overdrive `VDD − Vth`, which is where per-cell threshold mismatch
+//! enters the computation.
+
+/// Hardwired cell polarity: the sign of the Walsh-matrix entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellPolarity {
+    Plus,
+    Minus,
+}
+
+impl CellPolarity {
+    pub fn from_sign(sign: i8) -> Self {
+        match sign {
+            1 => CellPolarity::Plus,
+            -1 => CellPolarity::Minus,
+            _ => panic!("walsh entries are ±1, got {sign}"),
+        }
+    }
+
+    pub fn sign(&self) -> i8 {
+        match self {
+            CellPolarity::Plus => 1,
+            CellPolarity::Minus => -1,
+        }
+    }
+}
+
+/// Electrical parameters of the discharge path (behavioral).
+#[derive(Debug, Clone, Copy)]
+pub struct CellParams {
+    /// Nominal threshold voltage (V).
+    pub vth: f64,
+    /// Discharge time-constant factor: residual voltage after the compute
+    /// window is `VDD * exp(-k_discharge * max(Vgs - vth, 0.01))`.
+    /// Larger ⇒ more complete discharge.  Calibrated so the residual is
+    /// <2% at nominal overdrive and degrades sharply as VDD -> Vth
+    /// (reproducing Fig. 11(c)'s low-VDD failure wall).
+    pub k_discharge: f64,
+    /// Droop on a *retained* node during the compute window (fraction of
+    /// VDD lost to leakage/charge injection).
+    pub retention_droop: f64,
+}
+
+impl Default for CellParams {
+    fn default() -> Self {
+        CellParams {
+            vth: super::VTH_NOMINAL,
+            k_discharge: 10.0,
+            retention_droop: 0.01,
+        }
+    }
+}
+
+/// Voltages on a cell's local nodes after the local-compute step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeState {
+    pub o: f64,
+    pub ob: f64,
+}
+
+impl CellParams {
+    /// Residual voltage of a *discharging* node (V).
+    ///
+    /// `vgs` is the effective gate drive of the pull-down path and
+    /// `vth_actual` the mismatched threshold of this cell's transistor.
+    pub fn residual(&self, vdd: f64, vgs: f64, vth_actual: f64) -> f64 {
+        let overdrive = (vgs - vth_actual).max(0.01);
+        vdd * (-self.k_discharge * overdrive).exp()
+    }
+
+    /// Evaluate the cell for one bitplane input.
+    ///
+    /// * `input` ∈ {-1, 0, +1}: the sign-magnitude bit on CL/CLB,
+    /// * `polarity`: the hardwired Walsh entry,
+    /// * `vth_actual`: this cell's mismatched threshold,
+    /// * `vdd`: supply (also the gate drive of the pull-down; the paper
+    ///   boosts merge signals, not the cell gates).
+    ///
+    /// Product `p = input * polarity`: `p = +1` discharges OB (O retains),
+    /// `p = -1` discharges O, `p = 0` (magnitude bit 0) retains both —
+    /// contributing zero differential charge, exactly Kirchhoff-summed
+    /// "multiplication by zero without a multiplier".
+    pub fn evaluate(
+        &self,
+        input: i8,
+        polarity: CellPolarity,
+        vth_actual: f64,
+        vdd: f64,
+    ) -> NodeState {
+        debug_assert!((-1..=1).contains(&input));
+        let retained = vdd * (1.0 - self.retention_droop);
+        let discharged = self.residual(vdd, vdd, vth_actual);
+        match input * polarity.sign() {
+            1 => NodeState {
+                o: retained,
+                ob: discharged,
+            },
+            -1 => NodeState {
+                o: discharged,
+                ob: retained,
+            },
+            _ => NodeState {
+                o: retained,
+                ob: retained,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polarity_roundtrip() {
+        assert_eq!(CellPolarity::from_sign(1).sign(), 1);
+        assert_eq!(CellPolarity::from_sign(-1).sign(), -1);
+    }
+
+    #[test]
+    #[should_panic(expected = "±1")]
+    fn zero_polarity_panics() {
+        CellPolarity::from_sign(0);
+    }
+
+    #[test]
+    fn discharge_nearly_complete_at_nominal() {
+        let p = CellParams::default();
+        let res = p.residual(0.9, 0.9, super::super::VTH_NOMINAL);
+        assert!(res < 0.02 * 0.9, "residual {res} too high at nominal VDD");
+    }
+
+    #[test]
+    fn discharge_degrades_toward_vth() {
+        let p = CellParams::default();
+        let hi = p.residual(0.9, 0.9, 0.48);
+        let lo = p.residual(0.55, 0.55, 0.48);
+        assert!(lo > hi * 5.0, "low-VDD residual must blow up: {hi} vs {lo}");
+    }
+
+    #[test]
+    fn vth_mismatch_shifts_residual() {
+        let p = CellParams::default();
+        let slow = p.residual(0.9, 0.9, 0.48 + 0.05); // slow transistor
+        let fast = p.residual(0.9, 0.9, 0.48 - 0.05);
+        assert!(slow > fast);
+    }
+
+    #[test]
+    fn product_sign_selects_node() {
+        let p = CellParams::default();
+        let vdd = 0.9;
+        let plus_one = p.evaluate(1, CellPolarity::Plus, 0.48, vdd);
+        assert!(plus_one.o > plus_one.ob, "p=+1 keeps O high");
+        let minus_one = p.evaluate(1, CellPolarity::Minus, 0.48, vdd);
+        assert!(minus_one.ob > minus_one.o, "p=-1 keeps OB high");
+        let zero = p.evaluate(0, CellPolarity::Plus, 0.48, vdd);
+        assert!((zero.o - zero.ob).abs() < 1e-12, "p=0 is differential-neutral");
+    }
+
+    #[test]
+    fn negative_input_flips() {
+        let p = CellParams::default();
+        let a = p.evaluate(-1, CellPolarity::Plus, 0.48, 0.9);
+        let b = p.evaluate(1, CellPolarity::Minus, 0.48, 0.9);
+        assert_eq!(a, b);
+    }
+}

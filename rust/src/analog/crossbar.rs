@@ -1,0 +1,318 @@
+//! The N×N analog crossbar and its 4-step operation (Fig. 4).
+//!
+//! Step 1  PCH: precharge BL/BLB to VDD, CM high (columns stitched), load
+//!         the input bitplane on CL/CLB (sign selects the line).
+//! Step 2  RL: columns un-stitched, every cell computes its product into
+//!         its *local* nodes O/OB in parallel (the design's key deviation
+//!         from bit-line-compute CiM: local nodes are far less capacitive).
+//! Step 3  RM: rows stitched; O (resp. OB) voltages charge-average onto
+//!         SL (resp. SLB) per row.
+//! Step 4  compare SL vs SLB per row ⇒ one output bit per row: ADC-free.
+//!
+//! The simulator reproduces this with per-cell residual/droop voltages,
+//! charge-averaging with a merge-settling error that grows with array size
+//! and shrinks with the RM/CM boost, a comparator with offset + thermal
+//! noise, and per-cell Vth mismatch supplied by
+//! [`variability`](super::variability).
+
+use crate::util::rng::Rng;
+
+use super::cell::{CellParams, CellPolarity};
+use crate::wht;
+
+/// Static configuration of one crossbar tile.
+#[derive(Debug, Clone)]
+pub struct CrossbarConfig {
+    /// Array dimension N (the paper evaluates 16 and 32).
+    pub n: usize,
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Extra boost on the CM/RM merge-switch gates (V); the paper uses
+    /// +0.2 V to rescue 32×32 arrays at low VDD.
+    pub merge_boost: f64,
+    /// Comparator input-referred offset sigma (V).
+    pub sigma_comparator: f64,
+    /// Thermal noise sigma per comparison (V).
+    pub sigma_thermal: f64,
+    /// Cell electrical parameters.
+    pub cell: CellParams,
+    /// Merge-settling coefficient: the charge-share reaches its final
+    /// average up to a relative error `exp(-k_merge * drive / sqrt(n))`
+    /// where `drive = vdd + merge_boost - vth` (the merge switches' gate
+    /// overdrive).  Larger arrays settle worse (longer stitched wire, same
+    /// window) and the error explodes as VDD approaches Vth — the
+    /// vulnerability of Fig. 11(c) that the +0.2 V boost rescues.
+    pub k_merge: f64,
+}
+
+impl CrossbarConfig {
+    pub fn new(n: usize, vdd: f64) -> Self {
+        assert!(n.is_power_of_two(), "crossbar dimension must be 2^k");
+        CrossbarConfig {
+            n,
+            vdd,
+            merge_boost: 0.0,
+            sigma_comparator: 0.004,
+            sigma_thermal: 0.001,
+            cell: CellParams::default(),
+            k_merge: 80.0,
+        }
+    }
+
+    pub fn with_boost(mut self, boost: f64) -> Self {
+        self.merge_boost = boost;
+        self
+    }
+}
+
+/// An instantiated tile: configuration + one sample of process variability
+/// (per-cell Vth, per-row comparator offsets).  Create via
+/// [`variability::sample_instance`](super::variability::sample_instance)
+/// or [`Crossbar::ideal`] for a mismatch-free tile.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    pub config: CrossbarConfig,
+    /// Hardwired Walsh polarities, row-major N×N.
+    polarity: Vec<CellPolarity>,
+    /// Per-cell threshold voltages (row-major N×N).
+    pub vth: Vec<f64>,
+    /// Per-row comparator offsets (V).
+    pub comparator_offset: Vec<f64>,
+    /// PERF: per-cell discharged-node residual voltage, precomputed at
+    /// construction (it depends only on the instance-fixed VDD and Vth,
+    /// and the exp() dominated the bitplane hot loop — see
+    /// EXPERIMENTS.md §Perf).  Signed by polarity so the inner loop is a
+    /// single multiply-free lookup: `signed_drop[c] = polarity * (retained
+    /// - discharged)`.
+    signed_drop: Vec<f64>,
+    /// Retained-node voltage (common to all cells of the instance).
+    retained: f64,
+    /// PERF: (1 − merge_error)/n, cached (exp() of instance constants).
+    merge_scale: f64,
+}
+
+impl Crossbar {
+    /// Mismatch-free instance (Vth nominal everywhere, zero offsets).
+    pub fn ideal(config: CrossbarConfig) -> Self {
+        let n = config.n;
+        let k = n.trailing_zeros() as usize;
+        let w = wht::walsh(k);
+        let mut polarity = Vec::with_capacity(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                polarity.push(CellPolarity::from_sign(w.get(i, j)));
+            }
+        }
+        let mut xb = Crossbar {
+            polarity,
+            vth: vec![config.cell.vth; n * n],
+            comparator_offset: vec![0.0; n],
+            signed_drop: Vec::new(),
+            retained: 0.0,
+            merge_scale: 0.0,
+            config,
+        };
+        xb.precompute();
+        xb
+    }
+
+    /// Replace variability fields (used by the Monte-Carlo harness).
+    pub fn with_variability(mut self, vth: Vec<f64>, offsets: Vec<f64>) -> Self {
+        assert_eq!(vth.len(), self.config.n * self.config.n);
+        assert_eq!(offsets.len(), self.config.n);
+        self.vth = vth;
+        self.comparator_offset = offsets;
+        self.precompute();
+        self
+    }
+
+    /// Precompute the per-cell differential drop (retained − discharged),
+    /// signed by the hardwired polarity.
+    fn precompute(&mut self) {
+        self.merge_scale = (1.0 - self.merge_error()) / self.config.n as f64;
+        let vdd = self.config.vdd;
+        let cell = self.config.cell;
+        self.retained = vdd * (1.0 - cell.retention_droop);
+        self.signed_drop = self
+            .polarity
+            .iter()
+            .zip(&self.vth)
+            .map(|(pol, &vth)| {
+                let discharged = cell.residual(vdd, vdd, vth);
+                pol.sign() as f64 * (self.retained - discharged)
+            })
+            .collect();
+    }
+
+    pub fn n(&self) -> usize {
+        self.config.n
+    }
+
+    #[inline]
+    fn polarity(&self, row: usize, col: usize) -> CellPolarity {
+        self.polarity[row * self.config.n + col]
+    }
+
+    /// Merge-settling relative error for this configuration.
+    fn merge_error(&self) -> f64 {
+        let drive =
+            (self.config.vdd + self.config.merge_boost - self.config.cell.vth).max(0.01);
+        (-self.config.k_merge * drive / (self.config.n as f64).sqrt()).exp()
+    }
+
+    /// Execute the 4-step operation on one input bitplane.
+    ///
+    /// `input[j] ∈ {-1, 0, +1}` is the sign-magnitude bit on column `j`.
+    /// Returns one comparator bit per row.  `rng` supplies the thermal
+    /// noise of step 4 (offset and Vth mismatch are instance-fixed).
+    pub fn execute_bitplane(&self, input: &[i8], rng: &mut Rng) -> Vec<i8> {
+        let diffs = self.differential(input);
+        let sigma = self.config.sigma_thermal;
+        // PERF: thermal noise can only flip a decision within ~6σ of the
+        // trip point; beyond that the comparator outcome is deterministic
+        // (flip probability < 1e-9), so skip the Box–Muller draw.
+        let det_margin = 6.0 * sigma;
+        diffs
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| {
+                let v0 = d + self.comparator_offset[i];
+                let v = if v0.abs() > det_margin {
+                    v0
+                } else {
+                    v0 + rng.normal(0.0, sigma)
+                };
+                if v > 0.0 {
+                    1
+                } else if v < 0.0 {
+                    -1
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    /// Steps 1-3: per-row differential voltage SL − SLB before comparison.
+    ///
+    /// Derivation of the fast form: per cell, product p = input*polarity.
+    /// p=+1 keeps O at `retained` and drops OB to the cell residual; p=−1
+    /// mirrors; p=0 leaves both retained (zero differential).  So
+    /// `O − OB = p * (retained − discharged)`, and with the polarity
+    /// folded into `signed_drop` the row sum is a 3-way-select accumulate
+    /// over precomputed constants — no exp() in the hot loop.
+    pub fn differential(&self, input: &[i8]) -> Vec<f64> {
+        let n = self.config.n;
+        assert_eq!(input.len(), n, "input length must equal array dim");
+        let scale = self.merge_scale;
+        (0..n)
+            .map(|i| {
+                let row = &self.signed_drop[i * n..(i + 1) * n];
+                let mut diff = 0.0f64;
+                for (&drop, &x) in row.iter().zip(input) {
+                    // x ∈ {-1, 0, +1}
+                    diff += x as f64 * drop;
+                }
+                diff * scale
+            })
+            .collect()
+    }
+
+    /// Ideal (mismatch-free, noise-free) integer PSUM for reference.
+    ///
+    /// PERF: the hardwired polarities ARE the sequency-ordered Walsh
+    /// matrix, so the O(n²) sign loop is the fast O(n log n) butterfly.
+    pub fn ideal_psums(&self, input: &[i8]) -> Vec<i64> {
+        let mut x: Vec<i64> = input.iter().map(|&v| v as i64).collect();
+        crate::wht::fast::wht_sequency_i64(&mut x);
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(7)
+    }
+
+    #[test]
+    fn ideal_crossbar_matches_digital_psums() {
+        let xb = Crossbar::ideal(CrossbarConfig::new(16, 0.9));
+        let mut r = rng();
+        for trial in 0..50 {
+            let input: Vec<i8> = (0..16).map(|j| (((trial * 31 + j * 7) % 3) as i8) - 1).collect();
+            let bits = xb.execute_bitplane(&input, &mut r);
+            let psums = xb.ideal_psums(&input);
+            for (b, p) in bits.iter().zip(&psums) {
+                if *p != 0 {
+                    assert_eq!(
+                        *b as i64,
+                        p.signum(),
+                        "ideal crossbar must reproduce sign(PSUM)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn differential_scales_with_psum() {
+        let xb = Crossbar::ideal(CrossbarConfig::new(16, 0.9));
+        // all-ones input: row 0 of the Walsh matrix is all +1 => PSUM=16
+        let input = vec![1i8; 16];
+        let d = xb.differential(&input);
+        let psums = xb.ideal_psums(&input);
+        assert_eq!(psums[0], 16);
+        assert!(d[0] > 0.8, "full-scale PSUM should give ~VDD differential");
+        // rows with PSUM 0 give ~0 differential
+        for (i, &p) in psums.iter().enumerate() {
+            if p == 0 {
+                assert!(d[i].abs() < 1e-6, "row {i}: {}", d[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_gives_zero_bits_mostly() {
+        let xb = Crossbar::ideal(CrossbarConfig::new(16, 0.9));
+        let d = xb.differential(&vec![0i8; 16]);
+        assert!(d.iter().all(|v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn merge_error_grows_with_array_size() {
+        let e16 = Crossbar::ideal(CrossbarConfig::new(16, 0.7)).merge_error();
+        let e32 = Crossbar::ideal(CrossbarConfig::new(32, 0.7)).merge_error();
+        assert!(e32 > e16);
+    }
+
+    #[test]
+    fn boost_reduces_merge_error() {
+        let plain = Crossbar::ideal(CrossbarConfig::new(32, 0.7)).merge_error();
+        let boosted =
+            Crossbar::ideal(CrossbarConfig::new(32, 0.7).with_boost(0.2)).merge_error();
+        assert!(boosted < plain);
+    }
+
+    #[test]
+    #[should_panic(expected = "input length")]
+    fn wrong_input_length_panics() {
+        let xb = Crossbar::ideal(CrossbarConfig::new(16, 0.9));
+        xb.differential(&[1i8; 8]);
+    }
+
+    #[test]
+    fn comparator_offset_biases_decisions() {
+        let cfg = CrossbarConfig::new(16, 0.9);
+        let n = cfg.n;
+        let xb = Crossbar::ideal(cfg).with_variability(
+            vec![super::super::VTH_NOMINAL; 16 * 16],
+            vec![0.5; n], // huge positive offset
+        );
+        let mut r = rng();
+        let bits = xb.execute_bitplane(&vec![0i8; 16], &mut r);
+        assert!(bits.iter().all(|&b| b == 1));
+    }
+}

@@ -1,0 +1,42 @@
+//! Analog crossbar behavioral simulator — the HSPICE/16nm-PTM substitute
+//! (DESIGN.md §1).
+//!
+//! The paper evaluates its 6T-NMOS crossbar with HSPICE and predictive
+//! technology models.  We reproduce the *statistics* those simulations
+//! produce (Figs. 5, 11b-d, 12) with a charge-domain behavioral model:
+//!
+//! * [`cell`] — one ±1 cell: precharged local nodes O/OB, conditional
+//!   discharge with a residual-voltage model whose completeness depends on
+//!   gate overdrive (VDD − Vth), per-cell Vth mismatch included;
+//! * [`crossbar`] — the N×N array and the 4-step / 2-clock operation
+//!   (precharge+input, local compute, row-merge charge share, compare);
+//! * [`variability`] — Pelgrom-scaled Vth sampling and the Monte-Carlo
+//!   failure harness behind Fig. 11(b)/(c);
+//! * [`timing`] — the Fig. 5 signal schedule as a checked state machine;
+//! * [`noise`] — the algorithmic-noise-tolerance (ANT) injection of
+//!   Fig. 11(a).
+//!
+//! Absolute voltages/capacitances are calibrated to the paper's operating
+//! point (16×16 @ 0.8 V ⇒ 1602 TOPS/W, see [`crate::energy`]); the claims
+//! we reproduce are the *relative* trends.
+
+pub mod cell;
+pub mod crossbar;
+pub mod noise;
+pub mod timing;
+pub mod variability;
+
+pub use cell::{CellParams, CellPolarity};
+pub use crossbar::{Crossbar, CrossbarConfig};
+
+/// Nominal NMOS threshold voltage, 16 nm LSTP-class (V).
+pub const VTH_NOMINAL: f64 = 0.48;
+
+/// Vth mismatch sigma for a minimum-sized transistor (paper: 24 mV).
+pub const SIGMA_VTH_MIN: f64 = 0.024;
+
+/// Nominal supply voltage used by the paper's Fig. 11(b) evaluation.
+pub const VDD_NOMINAL: f64 = 0.90;
+
+/// RM/CM boost used to rescue 32×32 arrays at low VDD (paper: +0.2 V).
+pub const MERGE_BOOST: f64 = 0.20;

@@ -1,0 +1,146 @@
+//! Algorithmic noise tolerance (ANT) injection — Fig. 11(a).
+//!
+//! The paper probes how much PSUM noise BWHT processing absorbs by adding
+//! `N(0, L_I * σ_ANT)` to each product sum *before* digitization and
+//! measuring end accuracy.  The same injection is reused by the nn engine
+//! (`nn::bwht_layer` with a [`NoiseModel`]) to regenerate the accuracy
+//! curve, and by the coordinator to emulate non-ideal tiles without paying
+//! for the full electrical simulation.
+
+use crate::util::rng::Rng;
+
+/// Gaussian PSUM noise model: `psum <- psum + N(0, l_i * sigma_ant)`.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseModel {
+    /// Standard-deviation knob σ_ANT (the paper sweeps 1e-4 .. 1e-1;
+    /// < 2e-3 is inconsequential for accuracy).
+    pub sigma_ant: f64,
+    /// Input vector length L_I that the PSUM accumulates over.
+    pub l_i: usize,
+}
+
+impl NoiseModel {
+    pub fn new(sigma_ant: f64, l_i: usize) -> Self {
+        assert!(sigma_ant >= 0.0);
+        assert!(l_i > 0);
+        NoiseModel { sigma_ant, l_i }
+    }
+
+    /// Noise sigma in PSUM units.
+    pub fn sigma_psum(&self) -> f64 {
+        self.l_i as f64 * self.sigma_ant
+    }
+
+    /// Inject noise into one PSUM value.
+    pub fn perturb(&self, psum: f64, rng: &mut Rng) -> f64 {
+        if self.sigma_ant == 0.0 {
+            return psum;
+        }
+        psum + rng.normal(0.0, self.sigma_psum())
+    }
+
+    /// Inject into a whole PSUM vector, then re-quantize with the
+    /// comparator (`sign`), exactly as the hardware digitizes (Fig. 6).
+    pub fn perturb_and_compare(&self, psums: &[i64], rng: &mut Rng) -> Vec<i8> {
+        psums
+            .iter()
+            .map(|&p| {
+                let v = self.perturb(p as f64, rng);
+                if v > 0.0 {
+                    1
+                } else if v < 0.0 {
+                    -1
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    /// Probability that a PSUM of magnitude `m` flips sign under this
+    /// noise (analytic check for the Monte-Carlo paths).
+    pub fn flip_probability(&self, m: f64) -> f64 {
+        if self.sigma_ant == 0.0 {
+            return 0.0;
+        }
+        // P(N(0,σ) < -m) = Φ(-m/σ)
+        normal_cdf(-m.abs() / self.sigma_psum())
+    }
+}
+
+/// Standard normal CDF via erf approximation (Abramowitz-Stegun 7.1.26).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn zero_sigma_is_identity() {
+        let nm = NoiseModel::new(0.0, 16);
+        let mut r = rng(0);
+        assert_eq!(nm.perturb(3.5, &mut r), 3.5);
+        assert_eq!(nm.perturb_and_compare(&[5, -5, 0], &mut r), vec![1, -1, 0]);
+    }
+
+    #[test]
+    fn sigma_scales_with_input_length() {
+        assert_eq!(NoiseModel::new(0.01, 16).sigma_psum(), 0.16);
+        assert_eq!(NoiseModel::new(0.01, 32).sigma_psum(), 0.32);
+    }
+
+    #[test]
+    fn empirical_flip_rate_matches_analytic() {
+        let nm = NoiseModel::new(0.02, 16); // σ_psum = 0.32
+        let m = 0.4f64;
+        let mut r = rng(1);
+        let trials = 20000;
+        let flips = (0..trials)
+            .filter(|_| nm.perturb(m, &mut r) < 0.0)
+            .count();
+        let emp = flips as f64 / trials as f64;
+        let ana = nm.flip_probability(m);
+        assert!(
+            (emp - ana).abs() < 0.01,
+            "empirical {emp} vs analytic {ana}"
+        );
+    }
+
+    #[test]
+    fn small_sigma_rarely_flips_large_psums() {
+        // The paper's knee: σ_ANT < 2e-3 is inconsequential.
+        let nm = NoiseModel::new(2e-3, 16);
+        assert!(nm.flip_probability(1.0) < 1e-10);
+    }
+
+    #[test]
+    fn large_sigma_randomizes() {
+        let nm = NoiseModel::new(0.5, 16);
+        assert!(nm.flip_probability(1.0) > 0.4);
+    }
+
+    #[test]
+    fn erf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!(normal_cdf(3.0) > 0.998);
+        assert!(normal_cdf(-3.0) < 0.002);
+    }
+}

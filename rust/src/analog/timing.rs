@@ -1,0 +1,223 @@
+//! The Fig. 5 signal schedule as a checked state machine.
+//!
+//! The 4-step compute-in-memory operation completes in two clock cycles:
+//!
+//! | step | phase        | PCH | CM | CL/CLB | RL | RM | action                    |
+//! |------|--------------|-----|----|--------|----|----|---------------------------|
+//! | 1    | clk0 (high)  |  1  | 1  | input  | 0  | 0  | precharge + load input    |
+//! | 2    | clk0 (low)   |  0  | 0  | hold   | 1  | 0  | local compute in O/OB     |
+//! | 3    | clk1 (high)  |  0  | 0  | 0      | 0  | 1  | row-merge charge share    |
+//! | 4    | clk1 (low)   |  0  | 0  | 0      | 0  | 0  | compare SL/SLB, latch out |
+//!
+//! Step transitions assert the signal invariants (e.g. CM and RM are never
+//! simultaneously high — that would short columns to rows), so any
+//! scheduler bug in the coordinator surfaces as a panic in tests rather
+//! than silently wrong charge math.  `waveform()` dumps the trace that
+//! regenerates Fig. 5.
+
+/// One step of the CIM operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Step {
+    PrechargeLoad,
+    LocalCompute,
+    RowMerge,
+    Compare,
+}
+
+impl Step {
+    pub const ALL: [Step; 4] = [
+        Step::PrechargeLoad,
+        Step::LocalCompute,
+        Step::RowMerge,
+        Step::Compare,
+    ];
+
+    /// (clock cycle index, high-phase?) of this step.
+    pub fn clock_phase(&self) -> (u32, bool) {
+        match self {
+            Step::PrechargeLoad => (0, true),
+            Step::LocalCompute => (0, false),
+            Step::RowMerge => (1, true),
+            Step::Compare => (1, false),
+        }
+    }
+}
+
+/// Control-signal levels during one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Signals {
+    pub pch: bool,
+    pub cm: bool,
+    pub cl_active: bool,
+    pub rl: bool,
+    pub rm: bool,
+}
+
+impl Signals {
+    pub fn for_step(step: Step) -> Signals {
+        match step {
+            Step::PrechargeLoad => Signals {
+                pch: true,
+                cm: true,
+                cl_active: true,
+                rl: false,
+                rm: false,
+            },
+            Step::LocalCompute => Signals {
+                pch: false,
+                cm: false,
+                cl_active: true,
+                rl: true,
+                rm: false,
+            },
+            Step::RowMerge => Signals {
+                pch: false,
+                cm: false,
+                cl_active: false,
+                rl: false,
+                rm: true,
+            },
+            Step::Compare => Signals {
+                pch: false,
+                cm: false,
+                cl_active: false,
+                rl: false,
+                rm: false,
+            },
+        }
+    }
+
+    /// Electrical invariants that must hold in *every* step.
+    pub fn check_invariants(&self) {
+        assert!(
+            !(self.cm && self.rm),
+            "CM and RM high together shorts columns to rows"
+        );
+        assert!(
+            !(self.pch && self.rl),
+            "precharging while RL is high fights the pull-downs"
+        );
+        assert!(
+            !(self.rm && self.rl),
+            "row merge during local compute corrupts the charge share"
+        );
+    }
+}
+
+/// Sequencer that walks the 4 steps and accounts clock cycles.
+#[derive(Debug, Default)]
+pub struct Sequencer {
+    ops_completed: u64,
+    step_index: usize,
+}
+
+impl Sequencer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance one step; returns the signals for the new step.
+    pub fn advance(&mut self) -> (Step, Signals) {
+        let step = Step::ALL[self.step_index];
+        let sig = Signals::for_step(step);
+        sig.check_invariants();
+        self.step_index = (self.step_index + 1) % 4;
+        if self.step_index == 0 {
+            self.ops_completed += 1;
+        }
+        (step, sig)
+    }
+
+    /// Total completed bitplane operations.
+    pub fn ops_completed(&self) -> u64 {
+        self.ops_completed
+    }
+
+    /// Clock cycles consumed so far (2 per completed op).
+    pub fn clock_cycles(&self) -> u64 {
+        self.ops_completed * 2 + (self.step_index as u64).div_ceil(2)
+    }
+}
+
+/// One waveform sample for the Fig. 5 dump.
+#[derive(Debug, Clone)]
+pub struct WaveformSample {
+    pub time_step: usize,
+    pub step: Step,
+    pub clk: bool,
+    pub signals: Signals,
+}
+
+/// Generate the waveform trace for `ops` back-to-back bitplane operations.
+pub fn waveform(ops: usize) -> Vec<WaveformSample> {
+    let mut seq = Sequencer::new();
+    (0..ops * 4)
+        .map(|t| {
+            let (step, signals) = seq.advance();
+            let (_, high) = step.clock_phase();
+            WaveformSample {
+                time_step: t,
+                step,
+                clk: high,
+                signals,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_steps_two_cycles() {
+        let mut seq = Sequencer::new();
+        for _ in 0..4 {
+            seq.advance();
+        }
+        assert_eq!(seq.ops_completed(), 1);
+        assert_eq!(seq.clock_cycles(), 2);
+    }
+
+    #[test]
+    fn all_steps_satisfy_invariants() {
+        for step in Step::ALL {
+            Signals::for_step(step).check_invariants();
+        }
+    }
+
+    #[test]
+    fn step_order_matches_paper() {
+        let wf = waveform(1);
+        assert_eq!(
+            wf.iter().map(|s| s.step).collect::<Vec<_>>(),
+            vec![
+                Step::PrechargeLoad,
+                Step::LocalCompute,
+                Step::RowMerge,
+                Step::Compare
+            ]
+        );
+    }
+
+    #[test]
+    fn precharge_only_in_step_one() {
+        let wf = waveform(3);
+        for s in &wf {
+            assert_eq!(s.signals.pch, s.step == Step::PrechargeLoad);
+        }
+    }
+
+    #[test]
+    fn merge_signals_mutually_exclusive() {
+        for s in waveform(2) {
+            assert!(!(s.signals.cm && s.signals.rm));
+        }
+    }
+
+    #[test]
+    fn clock_phases() {
+        assert_eq!(Step::PrechargeLoad.clock_phase(), (0, true));
+        assert_eq!(Step::Compare.clock_phase(), (1, false));
+    }
+}

@@ -1,0 +1,184 @@
+//! Process variability: Pelgrom-scaled Vth mismatch and the Monte-Carlo
+//! processing-failure harness (Fig. 11(b)/(c)).
+//!
+//! The paper simulates local Vth mismatch with σ_TH = 24 mV for minimum-
+//! sized transistors, scaled by Pelgrom's law (σ ∝ 1/√(WL)) for larger
+//! devices; cell transistors are minimum-sized and peripherals are scaled
+//! with array size for drive strength.
+
+use crate::util::rng::Rng;
+
+use super::crossbar::{Crossbar, CrossbarConfig};
+use super::SIGMA_VTH_MIN;
+
+/// Pelgrom scaling: mismatch sigma of a device `area_ratio`× the minimum
+/// size: `σ = σ_min / sqrt(area_ratio)`.
+pub fn pelgrom_sigma(sigma_min: f64, area_ratio: f64) -> f64 {
+    assert!(area_ratio > 0.0);
+    sigma_min / area_ratio.sqrt()
+}
+
+/// Sample one crossbar instance with process variability.
+///
+/// * cell transistors: minimum-sized ⇒ full σ_TH;
+/// * row comparators: input pair sized `n/4`× minimum (peripherals scale
+///   with the array for drive strength) ⇒ Pelgrom-reduced offset.
+pub fn sample_instance(config: CrossbarConfig, rng: &mut Rng) -> Crossbar {
+    let n = config.n;
+    let vth: Vec<f64> = (0..n * n)
+        .map(|_| rng.normal(config.cell.vth, SIGMA_VTH_MIN))
+        .collect();
+    let cmp_sigma = pelgrom_sigma(config.sigma_comparator, (n as f64 / 16.0).max(0.25));
+    let offsets: Vec<f64> = (0..n).map(|_| rng.normal(0.0, cmp_sigma)).collect();
+    Crossbar::ideal(config).with_variability(vth, offsets)
+}
+
+/// Result of the Fig. 11(b)/(c) Monte-Carlo: fraction of output bits whose
+/// comparator decision disagrees with the true `sign(PSUM)` *outside* the
+/// safety margin.
+#[derive(Debug, Clone, Copy)]
+pub struct FailureStats {
+    pub failures: u64,
+    pub checked: u64,
+}
+
+impl FailureStats {
+    pub fn rate(&self) -> f64 {
+        if self.checked == 0 {
+            0.0
+        } else {
+            self.failures as f64 / self.checked as f64
+        }
+    }
+}
+
+/// Measure processing failure at the given safety margin (fraction of the
+/// full-scale PSUM range): bits with `|PSUM| < L_I * sm` are excused
+/// (BWHT's algorithmic noise tolerance, Fig. 11(a)); any other comparator
+/// mismatch counts as a failure.
+pub fn measure_failure(
+    config: &CrossbarConfig,
+    safety_margin: f64,
+    vectors: usize,
+    instances: usize,
+    rng: &mut Rng,
+) -> FailureStats {
+    let n = config.n;
+    let mut stats = FailureStats {
+        failures: 0,
+        checked: 0,
+    };
+    for _ in 0..instances {
+        let xb = sample_instance(config.clone(), rng);
+        for _ in 0..vectors {
+            let input: Vec<i8> = (0..n).map(|_| rng.ternary()).collect();
+            let bits = xb.execute_bitplane(&input, rng);
+            let psums = xb.ideal_psums(&input);
+            for (b, p) in bits.iter().zip(&psums) {
+                if (p.unsigned_abs() as f64) < n as f64 * safety_margin {
+                    continue; // inside the ANT margin: excused
+                }
+                stats.checked += 1;
+                if *p != 0 && (*b as i64) != p.signum() {
+                    stats.failures += 1;
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng(seed: u64) -> Rng {
+        Rng::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn pelgrom_scaling() {
+        assert!((pelgrom_sigma(0.024, 1.0) - 0.024).abs() < 1e-12);
+        assert!((pelgrom_sigma(0.024, 4.0) - 0.012).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_instance_has_spread() {
+        let mut r = rng(1);
+        let xb = sample_instance(CrossbarConfig::new(16, 0.9), &mut r);
+        let mean: f64 = xb.vth.iter().sum::<f64>() / xb.vth.len() as f64;
+        let var: f64 =
+            xb.vth.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / xb.vth.len() as f64;
+        assert!((mean - super::super::VTH_NOMINAL).abs() < 0.01);
+        let sd = var.sqrt();
+        assert!(
+            (sd - SIGMA_VTH_MIN).abs() < 0.01,
+            "vth sd {sd} should be ~{SIGMA_VTH_MIN}"
+        );
+    }
+
+    #[test]
+    fn failure_rate_low_at_nominal_conditions() {
+        // Paper: >95% accuracy at SM ~ 2e-3-equivalent at 0.90 V.
+        let mut r = rng(2);
+        let stats = measure_failure(&CrossbarConfig::new(16, 0.9), 0.05, 50, 4, &mut r);
+        assert!(
+            stats.rate() < 0.05,
+            "16x16 @ 0.9V should be >95% accurate, failure={}",
+            stats.rate()
+        );
+    }
+
+    #[test]
+    fn failure_increases_at_low_vdd() {
+        let mut r = rng(3);
+        let hi = measure_failure(&CrossbarConfig::new(32, 0.9), 0.03, 40, 3, &mut r);
+        let lo = measure_failure(&CrossbarConfig::new(32, 0.6), 0.03, 40, 3, &mut r);
+        assert!(
+            lo.rate() >= hi.rate(),
+            "low VDD must not improve failures: {} vs {}",
+            lo.rate(),
+            hi.rate()
+        );
+    }
+
+    #[test]
+    fn bigger_array_worse_at_low_vdd() {
+        let mut r = rng(4);
+        let s16 = measure_failure(&CrossbarConfig::new(16, 0.65), 0.03, 40, 3, &mut r);
+        let s32 = measure_failure(&CrossbarConfig::new(32, 0.65), 0.03, 40, 3, &mut r);
+        assert!(
+            s32.rate() >= s16.rate(),
+            "32x32 must fail at least as often at low VDD: {} vs {}",
+            s32.rate(),
+            s16.rate()
+        );
+    }
+
+    #[test]
+    fn boost_rescues_large_array() {
+        let mut r = rng(5);
+        let plain = measure_failure(&CrossbarConfig::new(32, 0.65), 0.03, 60, 4, &mut r);
+        let boosted = measure_failure(
+            &CrossbarConfig::new(32, 0.65).with_boost(0.2),
+            0.03,
+            60,
+            4,
+            &mut r,
+        );
+        assert!(
+            boosted.rate() <= plain.rate(),
+            "merge boost must not hurt: {} vs {}",
+            boosted.rate(),
+            plain.rate()
+        );
+    }
+
+    #[test]
+    fn wider_safety_margin_reduces_failures() {
+        let mut r = rng(6);
+        let tight = measure_failure(&CrossbarConfig::new(16, 0.7), 0.0, 60, 4, &mut r);
+        let wide = measure_failure(&CrossbarConfig::new(16, 0.7), 0.1, 60, 4, &mut r);
+        assert!(wide.rate() <= tight.rate());
+    }
+}

@@ -1,0 +1,210 @@
+//! Bitplane-wise ADC-free transform engine (Eq. 4, Fig. 6) — digital
+//! golden model.
+//!
+//! This is the exact arithmetic the analog crossbar implements: the
+//! multi-bit input is quantized to sign-magnitude bitplanes, each plane's
+//! ±1 matvec against the Walsh block is collapsed to one bit per output by
+//! the row comparator (`sign`, with `sign(0) = 0`), and per-plane bits are
+//! recombined with binary weights.  The analog simulator ([`crate::analog`])
+//! is validated against this model, and [`early_term`] implements the
+//! paper's predictive termination on top of the same plane stream.
+
+pub mod early_term;
+
+use crate::quant::{Quantized, Quantizer};
+use crate::wht;
+
+/// Comparator convention: `sign(0) = 0` (an exactly balanced charge share
+/// trips neither way; training treats it as 0) — matches `ref.py`.
+#[inline]
+pub fn comparator(psum: i64) -> i8 {
+    match psum.cmp(&0) {
+        std::cmp::Ordering::Greater => 1,
+        std::cmp::Ordering::Less => -1,
+        std::cmp::Ordering::Equal => 0,
+    }
+}
+
+/// Exact digital Eq. 4 engine over a BWHT-partitioned width.
+#[derive(Debug, Clone)]
+pub struct QuantBwht {
+    pub dim: usize,
+    pub max_block: usize,
+    pub quantizer: Quantizer,
+}
+
+/// Per-plane comparator outputs plus the recombined result.
+#[derive(Debug, Clone)]
+pub struct PlaneTrace {
+    /// `obits[p][i]`: comparator output of output element `i` during the
+    /// processing of plane `p` (index 0 = MSB, matching hardware order).
+    pub obits: Vec<Vec<i8>>,
+    /// Input quantization scale (output rescale factor).
+    pub scale: f32,
+    /// Number of magnitude bitplanes.
+    pub bits: u32,
+}
+
+impl PlaneTrace {
+    /// Recombine all planes: `y_i = scale * sum_b obit_b,i * 2^(b-1)`.
+    pub fn recombine(&self) -> Vec<f32> {
+        let n = self.obits[0].len();
+        let mut acc = vec![0f32; n];
+        for (p, plane) in self.obits.iter().enumerate() {
+            // plane index 0 is the MSB => weight 2^(bits-1-p).
+            let w = (1i64 << (self.bits as usize - 1 - p)) as f32;
+            for (a, &o) in acc.iter_mut().zip(plane) {
+                *a += o as f32 * w;
+            }
+        }
+        acc.iter().map(|v| v * self.scale).collect()
+    }
+}
+
+impl QuantBwht {
+    pub fn new(dim: usize, max_block: usize, bits: u32) -> Self {
+        QuantBwht {
+            dim,
+            max_block,
+            quantizer: Quantizer::new(bits),
+        }
+    }
+
+    pub fn padded_dim(&self) -> usize {
+        wht::bwht_padded_dim(self.dim, self.max_block)
+    }
+
+    /// Per-plane integer PSUMs (pre-comparator) of one plane's ±1 inputs.
+    pub fn plane_psums(&self, plane: &[i8]) -> Vec<i64> {
+        let x: Vec<i64> = plane.iter().map(|&v| v as i64).collect();
+        wht::bwht_apply_i64(&x, self.dim, self.max_block)
+    }
+
+    /// Full trace: quantize → stream planes MSB-first → comparator bits.
+    pub fn trace(&self, x: &[f32]) -> PlaneTrace {
+        assert_eq!(x.len(), self.padded_dim(), "input must be padded");
+        let q: Quantized = self.quantizer.quantize(x);
+        let obits = q
+            .bitplanes_msb_first()
+            .iter()
+            .map(|plane| {
+                self.plane_psums(plane)
+                    .into_iter()
+                    .map(comparator)
+                    .collect()
+            })
+            .collect();
+        PlaneTrace {
+            obits,
+            scale: q.scale,
+            bits: self.quantizer.bits,
+        }
+    }
+
+    /// The transform a downstream consumer sees (matches
+    /// `ref.quant_bwht_ref` bit-for-bit).
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        self.trace(x).recombine()
+    }
+
+    /// Float (non-quantized) blockwise transform — the "with ADC" baseline.
+    pub fn transform_exact(&self, x: &[f32]) -> Vec<f32> {
+        wht::bwht_apply(x, self.dim, self.max_block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s % 4000) as f32 / 1000.0) - 2.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comparator_sign_convention() {
+        assert_eq!(comparator(5), 1);
+        assert_eq!(comparator(-5), -1);
+        assert_eq!(comparator(0), 0);
+    }
+
+    #[test]
+    fn recombined_outputs_are_bounded() {
+        let eng = QuantBwht::new(16, 128, 8);
+        let x = sample(16, 1);
+        let y = eng.transform(&x);
+        let q = eng.quantizer.quantize(&x);
+        let bound = (q.scale) * ((1 << 8) - 1) as f32;
+        assert!(y.iter().all(|v| v.abs() <= bound + 1e-4));
+    }
+
+    #[test]
+    fn one_bit_trace_single_plane() {
+        let eng = QuantBwht::new(16, 128, 1);
+        let t = eng.trace(&sample(16, 2));
+        assert_eq!(t.obits.len(), 1);
+        assert!(t.obits[0].iter().all(|&o| (-1..=1).contains(&o)));
+    }
+
+    #[test]
+    fn sign_tracks_exact_transform() {
+        // Eq. 4 output signs must correlate strongly with the exact
+        // transform's signs (the paper's trainability premise).
+        let eng = QuantBwht::new(64, 128, 8);
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for seed in 0..20 {
+            let x = sample(64, seed + 10);
+            let approx = eng.transform(&x);
+            let exact = eng.transform_exact(&x);
+            for (a, e) in approx.iter().zip(&exact) {
+                if e.abs() > 1e-3 {
+                    total += 1;
+                    if (a.signum() - e.signum()).abs() < 0.5 {
+                        agree += 1;
+                    }
+                }
+            }
+        }
+        let frac = agree as f64 / total as f64;
+        assert!(frac > 0.7, "sign agreement too low: {frac}");
+    }
+
+    #[test]
+    fn trace_matches_manual_eq4() {
+        let eng = QuantBwht::new(4, 128, 2);
+        let x = vec![1.0, -0.5, 0.25, -1.0];
+        let y = eng.transform(&x);
+        // manual: quantize to ±3 range
+        let q = eng.quantizer.quantize(&x);
+        let w = crate::wht::walsh(2);
+        let mut want = vec![0f32; 4];
+        for b in 0..2u32 {
+            let plane = q.bitplane(b);
+            for i in 0..4 {
+                let psum: i64 = (0..4)
+                    .map(|j| w.get(i, j) as i64 * plane[j] as i64)
+                    .sum();
+                want[i] += comparator(psum) as f32 * (1 << b) as f32;
+            }
+        }
+        for w_ in want.iter_mut() {
+            *w_ *= q.scale;
+        }
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "padded")]
+    fn unpadded_input_panics() {
+        QuantBwht::new(20, 128, 4).transform(&[0.0; 19]);
+    }
+}

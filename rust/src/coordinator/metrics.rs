@@ -1,0 +1,130 @@
+//! Cycle / energy / latency accounting for the coordinator.
+
+use std::time::Duration;
+
+use crate::bitplane::early_term::CycleStats;
+use crate::energy::EnergyModel;
+
+/// Aggregated service metrics.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Per-element bitplane cycle stats (Fig. 9(c)).
+    pub cycles: CycleStats,
+    /// Tile-level bitplane operations issued.
+    pub planes_issued: u64,
+    /// Row-cycles executed (energy-relevant granularity).
+    pub row_cycles: u64,
+    /// Requests served.
+    pub requests: u64,
+    /// Total wall-clock busy time across workers.
+    pub busy: Duration,
+    bits: u32,
+}
+
+impl Metrics {
+    pub fn new(bits: u32) -> Metrics {
+        Metrics {
+            cycles: CycleStats::new(bits),
+            planes_issued: 0,
+            row_cycles: 0,
+            requests: 0,
+            busy: Duration::ZERO,
+            bits,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn merge_outcome(
+        &mut self,
+        outcome: &crate::coordinator::scheduler::TransformOutcome,
+        elapsed: Duration,
+    ) {
+        self.cycles.merge(&outcome.stats);
+        self.planes_issued += outcome.planes_issued as u64;
+        self.row_cycles += outcome.row_cycles;
+        self.requests += 1;
+        self.busy += elapsed;
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        self.cycles.merge(&other.cycles);
+        self.planes_issued += other.planes_issued;
+        self.row_cycles += other.row_cycles;
+        self.requests += other.requests;
+        self.busy += other.busy;
+    }
+
+    /// Modelled energy for the work done (fJ), with the ET digital
+    /// overhead applied to every *executed* row-cycle.
+    ///
+    /// Energy granularity: one full-tile bitplane op costs
+    /// `model.bitplane_energy_fj()`; a row that terminated early gates its
+    /// share, so we bill `row_cycles / n` fractional ops (+ ET overhead).
+    pub fn energy_fj(&self, model: &EnergyModel) -> f64 {
+        let frac_ops = self.row_cycles as f64 / model.n as f64;
+        frac_ops * model.bitplane_energy_fj() * (1.0 + crate::energy::ET_OVERHEAD)
+    }
+
+    /// Effective TOPS/W given the useful ops (bits × 2N² per request row).
+    pub fn tops_per_watt(&self, model: &EnergyModel) -> f64 {
+        let useful_ops =
+            self.cycles.total_elements as f64 * self.bits as f64 * 2.0 * model.n as f64;
+        let energy_j = self.energy_fj(model) * 1e-15;
+        if energy_j == 0.0 {
+            return 0.0;
+        }
+        useful_ops / energy_j / 1e12
+    }
+
+    /// Average executed bitplane cycles per output element.
+    pub fn average_cycles(&self) -> f64 {
+        self.cycles.average_cycles()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::schedule_transform;
+    use crate::coordinator::tile::{Tile, TileKind};
+
+    #[test]
+    fn merge_outcome_accumulates() {
+        let mut m = Metrics::new(8);
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let out = schedule_transform(&mut tile, &x, 8, &vec![0.0; 16]);
+        m.merge_outcome(&out, Duration::from_micros(5));
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.cycles.total_elements, 16);
+        assert!(m.row_cycles > 0);
+    }
+
+    #[test]
+    fn energy_scales_with_row_cycles() {
+        let model = EnergyModel::new(16, 0.8);
+        let mut a = Metrics::new(8);
+        a.row_cycles = 16; // one full-tile op worth of rows
+        let mut b = Metrics::new(8);
+        b.row_cycles = 32;
+        assert!((b.energy_fj(&model) - 2.0 * a.energy_fj(&model)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tops_per_watt_matches_energy_model_at_full_cycles() {
+        // With zero thresholds (no ET savings) every element runs all 8
+        // planes: row_cycles = 8 * elements, and TOPS/W collapses to the
+        // energy model's ET-overhead-corrected no-savings figure.
+        let model = EnergyModel::new(16, 0.8);
+        let mut m = Metrics::new(8);
+        m.cycles = crate::bitplane::early_term::CycleStats::new(8);
+        m.cycles.total_elements = 16;
+        m.row_cycles = 8 * 16;
+        let t = m.tops_per_watt(&model);
+        let want = model.tops_per_watt(8) / (1.0 + crate::energy::ET_OVERHEAD);
+        assert!((t - want).abs() / want < 1e-9, "{t} vs {want}");
+    }
+}

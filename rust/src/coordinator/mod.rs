@@ -1,0 +1,23 @@
+//! L3 coordinator: mapping frequency transforms onto a crossbar tile pool.
+//!
+//! This is the serving layer a deployment would run: BWHT transform
+//! requests are routed to fixed-size crossbar tiles (16×16/32×32 macros),
+//! scheduled bitplane-by-bitplane with the paper's predictive early
+//! termination (Fig. 10), accounted for cycles and energy, and executed in
+//! parallel by a worker pool (one OS thread per simulated macro — the
+//! tokio-free analog of a vLLM-style router on this offline box).
+//!
+//! * [`tile`] — the execution backends a tile can run on (digital golden
+//!   model, ANT-noisy, full analog Monte-Carlo);
+//! * [`scheduler`] — per-tile bitplane scheduling + early termination;
+//! * [`pool`] — the request router/batcher and worker threads;
+//! * [`metrics`] — cycle/energy/latency accounting.
+
+pub mod metrics;
+pub mod pool;
+pub mod scheduler;
+pub mod tile;
+
+pub use pool::{Coordinator, CoordinatorConfig, TransformRequest};
+pub use scheduler::{schedule_transform, TransformOutcome};
+pub use tile::{Tile, TileKind};

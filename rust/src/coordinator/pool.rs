@@ -1,0 +1,413 @@
+//! The request router / worker pool (leader-worker, std threads).
+//!
+//! Architecture (vLLM-router-like, scaled to a simulated device):
+//!
+//! ```text
+//!   clients ──▶ bounded request queue (backpressure)
+//!                    │ leader: splits width-W vectors into N-wide
+//!                    ▼         tile jobs, round-robins across workers
+//!              worker 0..P-1   each owns its own Tile instances
+//!                    │         (process variability sampled per worker)
+//!                    ▼
+//!              response channel → recombined outputs + metrics
+//! ```
+//!
+//! Every worker owns private tiles and a private RNG, so runs are
+//! deterministic for a fixed (seed, worker count) and workers never
+//! contend on shared state — the hot loop is allocation-light.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use super::scheduler::schedule_transform;
+use super::tile::{Tile, TileKind};
+use crate::wht;
+
+/// Pool configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Tile dimension (16 or 32 in the paper).
+    pub tile_n: usize,
+    /// Input magnitude bitplanes.
+    pub bits: u32,
+    /// Worker threads (each simulating one crossbar macro chain).
+    pub workers: usize,
+    /// Bounded queue depth (backpressure limit).
+    pub queue_depth: usize,
+    /// Tile execution backend.
+    pub kind: TileKind,
+    /// RNG seed (variability sampling + analog noise).
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            tile_n: 16,
+            bits: 8,
+            workers: 4,
+            queue_depth: 256,
+            kind: TileKind::Digital,
+            seed: 0,
+        }
+    }
+}
+
+/// One transform request: a width-W vector (padded to a multiple of the
+/// tile width by the router) and per-output thresholds in comparator
+/// units.
+#[derive(Debug, Clone)]
+pub struct TransformRequest {
+    pub x: Vec<f32>,
+    pub thresholds_units: Vec<f64>,
+}
+
+/// Internal job: one whole (padded) request.
+///
+/// PERF: jobs were originally one per tile-sized block; the per-job
+/// channel + allocation overhead dominated at small tiles (≈14 µs per
+/// dim-64 request vs ≈11 µs of useful tile work).  One job per request
+/// amortizes the dispatch; the worker walks the blocks on its own tile.
+struct TileJob {
+    request_id: u64,
+    x: Vec<f32>,
+    thresholds: Vec<f64>,
+}
+
+struct TileResult {
+    request_id: u64,
+    values: Vec<f32>,
+    outcome_stats: crate::bitplane::early_term::CycleStats,
+    planes_issued: u32,
+    row_cycles: u64,
+    elapsed: std::time::Duration,
+}
+
+/// The leader + worker pool.
+pub struct Coordinator {
+    config: CoordinatorConfig,
+    job_tx: SyncSender<TileJob>,
+    result_rx: Receiver<TileResult>,
+    workers: Vec<JoinHandle<Metrics>>,
+    next_request: u64,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Coordinator {
+        assert!(config.workers >= 1);
+        let (job_tx, job_rx) = sync_channel::<TileJob>(config.queue_depth);
+        let (result_tx, result_rx) = sync_channel::<TileResult>(config.queue_depth);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let metrics = Arc::new(Mutex::new(Metrics::new(config.bits)));
+        let mut workers = Vec::new();
+        for w in 0..config.workers {
+            let job_rx = Arc::clone(&job_rx);
+            let result_tx = result_tx.clone();
+            let kind = config.kind.clone();
+            let tile_n = config.tile_n;
+            let bits = config.bits;
+            let seed = config.seed.wrapping_add(w as u64 * 0x9E37);
+            workers.push(std::thread::spawn(move || {
+                let mut tile = Tile::new(tile_n, &kind, seed);
+                let mut local = Metrics::new(bits);
+                loop {
+                    let job = {
+                        let guard = job_rx.lock().expect("job queue poisoned");
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    let t0 = Instant::now();
+                    let blocks = job.x.len() / tile_n;
+                    let mut values = Vec::with_capacity(job.x.len());
+                    let mut stats =
+                        crate::bitplane::early_term::CycleStats::new(bits);
+                    let mut planes_issued = 0u32;
+                    let mut row_cycles = 0u64;
+                    for b in 0..blocks {
+                        let outcome = schedule_transform(
+                            &mut tile,
+                            &job.x[b * tile_n..(b + 1) * tile_n],
+                            bits,
+                            &job.thresholds[b * tile_n..(b + 1) * tile_n],
+                        );
+                        values.extend_from_slice(&outcome.values);
+                        stats.merge(&outcome.stats);
+                        planes_issued += outcome.planes_issued;
+                        row_cycles += outcome.row_cycles;
+                    }
+                    let elapsed = t0.elapsed();
+                    local.cycles.merge(&stats);
+                    local.planes_issued += planes_issued as u64;
+                    local.row_cycles += row_cycles;
+                    local.requests += 1;
+                    local.busy += elapsed;
+                    let _ = result_tx.send(TileResult {
+                        request_id: job.request_id,
+                        values,
+                        outcome_stats: stats,
+                        planes_issued,
+                        row_cycles,
+                        elapsed,
+                    });
+                }
+                local
+            }));
+        }
+        Coordinator {
+            config,
+            job_tx,
+            result_rx,
+            workers,
+            next_request: 0,
+            metrics,
+        }
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+
+    /// Pad `x` to a multiple of the tile width.
+    fn pad(&self, x: &[f32]) -> Vec<f32> {
+        let n = self.config.tile_n;
+        let padded = x.len().div_ceil(n) * n;
+        let mut out = x.to_vec();
+        out.resize(padded, 0.0);
+        out
+    }
+
+    /// Build the job for one request (padded to the tile width).
+    fn make_job(&mut self, req: &TransformRequest) -> TileJob {
+        let x = self.pad(&req.x);
+        let mut th = req.thresholds_units.clone();
+        th.resize(x.len(), 0.0);
+        let id = self.next_request;
+        self.next_request += 1;
+        TileJob {
+            request_id: id,
+            x,
+            thresholds: th,
+        }
+    }
+
+    /// Record one tile result into the shared metrics.
+    fn record(&self, r: &TileResult) {
+        let mut m = self.metrics.lock().expect("metrics poisoned");
+        m.cycles.merge(&r.outcome_stats);
+        m.planes_issued += r.planes_issued as u64;
+        m.row_cycles += r.row_cycles;
+        m.requests += 1;
+        m.busy += r.elapsed;
+    }
+
+    /// Dispatch jobs and collect exactly `total` results.
+    ///
+    /// Sending happens on a helper thread so a job list deeper than the
+    /// bounded queues cannot deadlock the leader against the workers
+    /// (leader blocked on job_tx while workers block on result_tx).
+    fn dispatch_collect(&mut self, jobs: Vec<TileJob>) -> Result<Vec<TileResult>> {
+        let total = jobs.len();
+        let job_tx = self.job_tx.clone();
+        let mut results = Vec::with_capacity(total);
+        std::thread::scope(|scope| -> Result<()> {
+            let sender = scope.spawn(move || {
+                for job in jobs {
+                    if job_tx.send(job).is_err() {
+                        return Err(anyhow!("worker pool shut down"));
+                    }
+                }
+                Ok(())
+            });
+            for _ in 0..total {
+                let r = self
+                    .result_rx
+                    .recv()
+                    .map_err(|_| anyhow!("workers disconnected"))?;
+                self.record(&r);
+                results.push(r);
+            }
+            sender.join().expect("sender thread panicked")
+        })?;
+        Ok(results)
+    }
+
+    /// Execute one transform request synchronously.  Returns outputs at
+    /// padded width.
+    pub fn transform(&mut self, req: &TransformRequest) -> Result<Vec<f32>> {
+        let job = self.make_job(req);
+        let id = job.request_id;
+        let mut results = self.dispatch_collect(vec![job])?;
+        let r = results.pop().expect("one job, one result");
+        assert_eq!(r.request_id, id, "single-flight transform");
+        Ok(r.values)
+    }
+
+    /// Execute a batch of requests, pipelining all jobs across the pool
+    /// before collecting (the batcher path).
+    pub fn transform_batch(&mut self, reqs: &[TransformRequest]) -> Result<Vec<Vec<f32>>> {
+        let base = self.next_request;
+        let jobs: Vec<TileJob> = reqs.iter().map(|r| self.make_job(r)).collect();
+        let results = self.dispatch_collect(jobs)?;
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
+        for r in results {
+            let req_idx = (r.request_id - base) as usize;
+            outs[req_idx] = r.values;
+        }
+        Ok(outs)
+    }
+
+    /// Snapshot of aggregated metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().expect("metrics poisoned").clone()
+    }
+
+    /// Shut the pool down and collect per-worker metrics.
+    pub fn shutdown(self) -> Metrics {
+        drop(self.job_tx);
+        let mut total = Metrics::new(self.config.bits);
+        for w in self.workers {
+            if let Ok(m) = w.join() {
+                total.merge(&m);
+            }
+        }
+        total
+    }
+
+    /// BWHT blocks a width-W request maps onto (for callers sizing work).
+    pub fn blocks_for(&self, width: usize) -> Vec<usize> {
+        wht::bwht_blocks(width, self.config.tile_n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::QuantBwht;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = crate::util::rng::Rng::seed_from_u64(seed);
+        (0..n).map(|_| r.uniform_range(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn single_tile_request_matches_golden_model() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let x = sample(16, 1);
+        let out = c
+            .transform(&TransformRequest {
+                x: x.clone(),
+                thresholds_units: vec![0.0; 16],
+            })
+            .unwrap();
+        let golden = QuantBwht::new(16, 128, 8).transform(&x);
+        assert_eq!(out, golden);
+        c.shutdown();
+    }
+
+    #[test]
+    fn multi_block_request_reassembles_in_order() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let x = sample(64, 2); // 4 tile blocks
+        let out = c
+            .transform(&TransformRequest {
+                x: x.clone(),
+                thresholds_units: vec![0.0; 64],
+            })
+            .unwrap();
+        // blockwise golden: each 16-slice transformed independently
+        for b in 0..4 {
+            let golden = QuantBwht::new(16, 128, 8).transform(&x[b * 16..(b + 1) * 16]);
+            assert_eq!(&out[b * 16..(b + 1) * 16], &golden[..], "block {b}");
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let reqs: Vec<TransformRequest> = (0..6)
+            .map(|i| TransformRequest {
+                x: sample(32, 10 + i),
+                thresholds_units: vec![0.0; 32],
+            })
+            .collect();
+        let mut c1 = Coordinator::new(CoordinatorConfig::default());
+        let batch = c1.transform_batch(&reqs).unwrap();
+        let mut c2 = Coordinator::new(CoordinatorConfig::default());
+        for (i, r) in reqs.iter().enumerate() {
+            let single = c2.transform(r).unwrap();
+            assert_eq!(batch[i], single, "request {i}");
+        }
+        c1.shutdown();
+        c2.shutdown();
+    }
+
+    #[test]
+    fn pads_non_multiple_widths() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let out = c
+            .transform(&TransformRequest {
+                x: sample(20, 3),
+                thresholds_units: vec![0.0; 20],
+            })
+            .unwrap();
+        assert_eq!(out.len(), 32);
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_accumulate_across_requests() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        for i in 0..5 {
+            c.transform(&TransformRequest {
+                x: sample(16, 20 + i),
+                thresholds_units: vec![0.0; 16],
+            })
+            .unwrap();
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.cycles.total_elements, 5 * 16);
+        assert_eq!(m.row_cycles, 5 * 16 * 8, "T=0: no early termination");
+        c.shutdown();
+    }
+
+    #[test]
+    fn early_termination_reduces_row_cycles() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        c.transform(&TransformRequest {
+            x: sample(16, 30),
+            thresholds_units: vec![1e9; 16],
+        })
+        .unwrap();
+        let m = c.metrics();
+        assert!(m.row_cycles < 16 * 8);
+        assert!(m.average_cycles() < 2.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts_digital() {
+        let x = sample(48, 40);
+        let run = |workers| {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                workers,
+                ..Default::default()
+            });
+            let out = c
+                .transform(&TransformRequest {
+                    x: x.clone(),
+                    thresholds_units: vec![0.0; 48],
+                })
+                .unwrap();
+            c.shutdown();
+            out
+        };
+        assert_eq!(run(1), run(4), "digital path must be worker-count invariant");
+    }
+}

@@ -1,0 +1,180 @@
+//! Bitplane scheduling with predictive early termination on one tile.
+//!
+//! Hardware model: each crossbar op processes one bitplane across all
+//! rows in parallel (2 clock cycles).  Each row owns a Fig.-10 digital
+//! terminator; a row that proves its output zero stops consuming cycles
+//! (its comparator and recombination logic are gated off).  The *tile*
+//! keeps issuing planes while any row is live — mirroring the per-element
+//! cycle accounting of Fig. 9(c).
+
+use crate::bitplane::early_term::{CycleStats, Decision, EarlyTerminator};
+use crate::quant::Quantizer;
+
+use super::tile::Tile;
+
+/// Result of one full vector transform on a tile.
+#[derive(Debug, Clone)]
+pub struct TransformOutcome {
+    /// Post-threshold outputs, rescaled to input units.
+    pub values: Vec<f32>,
+    /// Per-element cycle statistics (merged into pool metrics).
+    pub stats: CycleStats,
+    /// Bitplane operations the tile actually issued (= max row cycles).
+    pub planes_issued: u32,
+    /// Sum over rows of executed row-cycles (the energy-relevant count).
+    pub row_cycles: u64,
+}
+
+/// Quantize `x`, stream its bitplanes MSB-first through `tile`, apply
+/// per-row early termination against `thresholds_units` (comparator
+/// units), and recombine.
+///
+/// `thresholds_units[i]` is the |T| of output element `i` divided by the
+/// input quantization scale and basis norm (see
+/// [`crate::nn::BwhtLayer::thresholds_units`]).
+pub fn schedule_transform(
+    tile: &mut Tile,
+    x: &[f32],
+    bits: u32,
+    thresholds_units: &[f64],
+) -> TransformOutcome {
+    let n = tile.n();
+    assert_eq!(x.len(), n);
+    assert_eq!(thresholds_units.len(), n);
+    let q = Quantizer::new(bits).quantize(x);
+    let planes = q.bitplanes_msb_first();
+
+    let mut terminators: Vec<EarlyTerminator> = thresholds_units
+        .iter()
+        .map(|&t| EarlyTerminator::new(bits, t))
+        .collect();
+    let mut live: Vec<bool> = vec![true; n];
+    let mut done_value: Vec<i64> = vec![0; n];
+    let mut cycles: Vec<u32> = vec![0; n];
+    let mut terminated: Vec<bool> = vec![false; n];
+    let mut planes_issued = 0u32;
+    let mut row_cycles = 0u64;
+
+    for plane in &planes {
+        if !live.iter().any(|&l| l) {
+            break;
+        }
+        planes_issued += 1;
+        let obits = tile.execute_bitplane(plane);
+        for i in 0..n {
+            if !live[i] {
+                continue;
+            }
+            row_cycles += 1;
+            cycles[i] += 1;
+            match terminators[i].step(obits[i]) {
+                Decision::Continue => {}
+                Decision::TerminateZero => {
+                    live[i] = false;
+                    terminated[i] = true;
+                    done_value[i] = 0;
+                }
+                Decision::Complete => {
+                    live[i] = false;
+                    let v = terminators[i].running();
+                    done_value[i] = if (v.unsigned_abs() as f64) <= thresholds_units[i] {
+                        0
+                    } else {
+                        v
+                    };
+                }
+            }
+        }
+    }
+
+    let mut stats = CycleStats::new(bits);
+    for i in 0..n {
+        stats.record(&crate::bitplane::early_term::ElementOutcome {
+            cycles: cycles[i],
+            terminated: terminated[i],
+            value_units: done_value[i],
+        });
+    }
+    let values = done_value
+        .iter()
+        .map(|&v| v as f32 * q.scale)
+        .collect();
+    TransformOutcome {
+        values,
+        stats,
+        planes_issued,
+        row_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::QuantBwht;
+    use crate::coordinator::tile::TileKind;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = crate::util::rng::Rng::seed_from_u64(seed);
+        (0..n).map(|_| r.uniform_range(-1.5, 1.5) as f32).collect()
+    }
+
+    #[test]
+    fn zero_thresholds_match_digital_golden_model() {
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let x = sample(16, 1);
+        let out = schedule_transform(&mut tile, &x, 8, &vec![0.0; 16]);
+        let golden = QuantBwht::new(16, 128, 8).transform(&x);
+        assert_eq!(out.values, golden, "ET with T=0 must be lossless");
+        assert_eq!(out.planes_issued, 8);
+    }
+
+    #[test]
+    fn high_thresholds_save_cycles_and_zero_outputs() {
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let x = sample(16, 2);
+        let out = schedule_transform(&mut tile, &x, 8, &vec![1e9; 16]);
+        assert!(out.values.iter().all(|&v| v == 0.0));
+        assert_eq!(out.planes_issued, 1, "everything terminates after MSB");
+        assert!(out.stats.average_cycles() < 1.5);
+    }
+
+    #[test]
+    fn termination_is_sound_vs_full_run() {
+        // With ET at threshold T, outputs must equal the full (no-ET)
+        // recombination passed through the same |y|<=T zeroing.
+        let x = sample(16, 3);
+        let t_units = 40.0;
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let et = schedule_transform(&mut tile, &x, 8, &vec![t_units; 16]);
+        let mut tile2 = Tile::new(16, &TileKind::Digital, 0);
+        let full = schedule_transform(&mut tile2, &x, 8, &vec![0.0; 16]);
+        let q = Quantizer::new(8).quantize(&x);
+        for i in 0..16 {
+            let full_units = (full.values[i] / q.scale).round() as i64;
+            let want = if (full_units.unsigned_abs() as f64) <= t_units {
+                0.0
+            } else {
+                full.values[i]
+            };
+            assert_eq!(et.values[i], want, "element {i}");
+        }
+    }
+
+    #[test]
+    fn row_cycles_bounded_by_planes_times_rows() {
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let x = sample(16, 4);
+        let out = schedule_transform(&mut tile, &x, 8, &vec![100.0; 16]);
+        assert!(out.row_cycles <= 8 * 16);
+        assert!(out.row_cycles >= 16, "every row runs at least one cycle");
+        assert_eq!(out.stats.total_elements, 16);
+    }
+
+    #[test]
+    fn one_bit_input_single_plane() {
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let x = sample(16, 5);
+        let out = schedule_transform(&mut tile, &x, 1, &vec![0.0; 16]);
+        assert_eq!(out.planes_issued, 1);
+    }
+}

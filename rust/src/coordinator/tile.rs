@@ -1,0 +1,160 @@
+//! Crossbar tile execution backends.
+//!
+//! A tile is one N×N macro hardwired with the Walsh block `W_k`
+//! (N = 2^k).  All backends implement the same single-bitplane contract:
+//! ternary input column bits in, one comparator bit per row out.
+
+use crate::analog::crossbar::{Crossbar, CrossbarConfig};
+use crate::analog::noise::NoiseModel;
+use crate::analog::variability;
+use crate::bitplane::comparator;
+use crate::util::rng::Rng;
+use crate::wht;
+
+/// Which physical model executes the tile.
+#[derive(Debug, Clone)]
+pub enum TileKind {
+    /// Digital golden model: exact integer PSUM + ideal comparator.
+    Digital,
+    /// Digital PSUM with ANT noise before the comparator (Fig. 11(a)).
+    Noisy { sigma_ant: f64 },
+    /// Full analog behavioral model with sampled process variability.
+    Analog { config: CrossbarConfig },
+}
+
+/// One instantiated N×N tile.
+#[derive(Debug)]
+pub struct Tile {
+    n: usize,
+    kind: TileKindInstance,
+    rng: Rng,
+    /// PERF: reusable PSUM scratch for the digital/noisy paths (the
+    /// per-plane Vec<i64> allocation showed up in the scheduler profile).
+    scratch: Vec<i64>,
+}
+
+#[derive(Debug)]
+enum TileKindInstance {
+    Digital,
+    Noisy(NoiseModel),
+    Analog(Box<Crossbar>),
+}
+
+impl Tile {
+    /// Instantiate a tile (sampling process variability for analog tiles).
+    pub fn new(n: usize, kind: &TileKind, seed: u64) -> Tile {
+        assert!(n.is_power_of_two(), "tile dim must be a power of two");
+        let mut rng = Rng::seed_from_u64(seed);
+        let kind = match kind {
+            TileKind::Digital => TileKindInstance::Digital,
+            TileKind::Noisy { sigma_ant } => {
+                TileKindInstance::Noisy(NoiseModel::new(*sigma_ant, n))
+            }
+            TileKind::Analog { config } => {
+                assert_eq!(config.n, n, "analog config dim mismatch");
+                TileKindInstance::Analog(Box::new(variability::sample_instance(
+                    config.clone(),
+                    &mut rng,
+                )))
+            }
+        };
+        Tile {
+            n,
+            kind,
+            rng,
+            scratch: vec![0; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Exact integer PSUMs of this tile's Walsh block into the scratch
+    /// buffer (shared helper).
+    fn psums_into_scratch(&mut self, input: &[i8]) {
+        for (dst, &v) in self.scratch.iter_mut().zip(input) {
+            *dst = v as i64;
+        }
+        wht::fast::wht_sequency_i64(&mut self.scratch);
+    }
+
+    /// Execute one bitplane: 2 clock cycles of the Fig. 5 schedule.
+    pub fn execute_bitplane(&mut self, input: &[i8]) -> Vec<i8> {
+        assert_eq!(input.len(), self.n, "input width must match tile");
+        match &self.kind {
+            TileKindInstance::Digital => {
+                self.psums_into_scratch(input);
+                self.scratch.iter().map(|&p| comparator(p)).collect()
+            }
+            TileKindInstance::Noisy(nm) => {
+                let nm = *nm;
+                self.psums_into_scratch(input);
+                nm.perturb_and_compare(&self.scratch, &mut self.rng)
+            }
+            TileKindInstance::Analog(xb) => xb.execute_bitplane(input, &mut self.rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digital_tile_matches_walsh_signs() {
+        let mut t = Tile::new(16, &TileKind::Digital, 0);
+        let input: Vec<i8> = (0..16).map(|i| ((i % 3) as i8) - 1).collect();
+        let bits = t.execute_bitplane(&input);
+        let w = wht::walsh(4);
+        for i in 0..16 {
+            let psum: i64 = (0..16)
+                .map(|j| w.get(i, j) as i64 * input[j] as i64)
+                .sum();
+            assert_eq!(bits[i] as i64, psum.signum());
+        }
+    }
+
+    #[test]
+    fn noisy_tile_zero_sigma_equals_digital() {
+        let mut d = Tile::new(16, &TileKind::Digital, 1);
+        let mut n = Tile::new(16, &TileKind::Noisy { sigma_ant: 0.0 }, 1);
+        let input = vec![1i8; 16];
+        assert_eq!(d.execute_bitplane(&input), n.execute_bitplane(&input));
+    }
+
+    #[test]
+    fn analog_tile_mostly_agrees_at_nominal() {
+        let kind = TileKind::Analog {
+            config: CrossbarConfig::new(16, 0.9),
+        };
+        let mut a = Tile::new(16, &kind, 2);
+        let mut d = Tile::new(16, &TileKind::Digital, 2);
+        let mut agree = 0;
+        let mut total = 0;
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..50 {
+            let input: Vec<i8> = (0..16).map(|_| rng.ternary()).collect();
+            let ab = a.execute_bitplane(&input);
+            let db = d.execute_bitplane(&input);
+            for (x, y) in ab.iter().zip(&db) {
+                if *y != 0 {
+                    total += 1;
+                    if x == y {
+                        agree += 1;
+                    }
+                }
+            }
+        }
+        assert!(
+            agree as f64 / total as f64 > 0.95,
+            "analog tile disagrees too much: {agree}/{total}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "width")]
+    fn wrong_width_panics() {
+        Tile::new(16, &TileKind::Digital, 0).execute_bitplane(&[0i8; 8]);
+    }
+}

@@ -1,0 +1,28 @@
+//! # repro — ADC/DAC-free analog acceleration of frequency-domain DNNs
+//!
+//! Rust + JAX + Pallas reproduction of Darabi et al., *"ADC/DAC-Free Analog
+//! Acceleration of Deep Neural Networks with Frequency Transformation"*
+//! (2023).  See `DESIGN.md` for the system inventory and the mapping of
+//! every paper table/figure to a module and bench target.
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the coordinator: crossbar tile pool, bitplane
+//!   scheduling with predictive early termination, request batching, plus
+//!   every substrate the paper depends on (Walsh transforms, sign-magnitude
+//!   quantization, the analog crossbar behavioral simulator standing in for
+//!   the paper's HSPICE/PTM testbed, and the energy model).
+//! * **L2/L1 (python/, build-time only)** — the JAX model and Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt` and loaded at runtime by
+//!   [`runtime`] through the PJRT C API.  Python never runs on the request
+//!   path.
+
+pub mod analog;
+pub mod bitplane;
+pub mod coordinator;
+pub mod energy;
+pub mod nn;
+pub mod npy;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+pub mod wht;

@@ -1,0 +1,360 @@
+//! `repro` — CLI for the ADC/DAC-free frequency-domain accelerator stack.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!
+//! ```text
+//! repro transform [--dim D] [--bits B] [--backend digital|noisy|analog]
+//!                 [--tile N] [--vdd V] [--sigma-ant S] [--seed K]
+//! repro infer     [--weights PATH] [--artifacts DIR] [--backend ...]
+//! repro train     [--artifacts DIR] [--steps N] [--log-every K]
+//! repro serve     [--requests N] [--workers W] [--tile N] [--bits B]
+//! repro report    [--vdd V] [--avg-cycles C]
+//! ```
+//!
+//! `train` is the end-to-end driver: it loads the AOT `train_step`
+//! artifact via PJRT and trains the BWHT classifier from rust — python
+//! never runs.  See examples/ for library-level versions of each flow.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use repro::analog::crossbar::CrossbarConfig;
+use repro::bitplane::QuantBwht;
+use repro::coordinator::{Coordinator, CoordinatorConfig, TileKind, TransformRequest};
+use repro::energy::{table1, EnergyModel};
+use repro::nn::{loader::Weights, Backend, Mlp};
+use repro::npy;
+use repro::runtime::{HostTensor, Runtime};
+use repro::util::rng::Rng;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn backend_from_flags(flags: &HashMap<String, String>) -> Backend {
+    match flags.get("backend").map(|s| s.as_str()).unwrap_or("quantized") {
+        "float" => Backend::Float,
+        "noisy" => Backend::Noisy {
+            bits: flag(flags, "bits", 8u32),
+            sigma_ant: flag(flags, "sigma-ant", 2e-3f64),
+        },
+        _ => Backend::Quantized {
+            bits: flag(flags, "bits", 8u32),
+        },
+    }
+}
+
+fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
+    let dim: usize = flag(flags, "dim", 64);
+    let bits: u32 = flag(flags, "bits", 8);
+    let tile: usize = flag(flags, "tile", 16);
+    let seed: u64 = flag(flags, "seed", 0);
+    let vdd: f64 = flag(flags, "vdd", 0.8);
+    let kind = match flags.get("backend").map(|s| s.as_str()).unwrap_or("digital") {
+        "noisy" => TileKind::Noisy {
+            sigma_ant: flag(flags, "sigma-ant", 2e-3f64),
+        },
+        "analog" => TileKind::Analog {
+            config: CrossbarConfig::new(tile, vdd),
+        },
+        _ => TileKind::Digital,
+    };
+    let mut rng = Rng::seed_from_u64(seed);
+    let x: Vec<f32> = (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: tile,
+        bits,
+        kind,
+        seed,
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    let out = coord.transform(&TransformRequest {
+        x: x.clone(),
+        thresholds_units: vec![0.0; dim],
+    })?;
+    let dt = t0.elapsed();
+    let exact = {
+        let padded = repro::wht::bwht_padded_dim(dim, tile);
+        let mut xp = x.clone();
+        xp.resize(padded, 0.0);
+        QuantBwht::new(dim, tile, bits).transform_exact(&xp)
+    };
+    let cos = {
+        let dot: f32 = out.iter().zip(&exact).map(|(a, b)| a * b).sum();
+        let na: f32 = out.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nb: f32 = exact.iter().map(|v| v * v).sum::<f32>().sqrt();
+        dot / (na * nb).max(1e-12)
+    };
+    let m = coord.metrics();
+    let model = EnergyModel::new(tile, vdd);
+    println!("transform dim={dim} bits={bits} tile={tile} ({dt:?})");
+    println!("  cosine vs exact float transform: {cos:.4}");
+    println!(
+        "  planes issued: {}  row-cycles: {}",
+        m.planes_issued, m.row_cycles
+    );
+    println!("  modelled energy: {:.1} fJ", m.energy_fj(&model));
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
+    let weights_path = flags
+        .get("weights")
+        .cloned()
+        .unwrap_or_else(|| "artifacts/mlp_qat.json".into());
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let backend = backend_from_flags(flags);
+    let w = Weights::load(&weights_path)?;
+    let mlp = Mlp::from_weights(&w)?;
+    let x = npy::load_f32(format!("{dir}/test_x.npy"))?;
+    let y = npy::load_i32(format!("{dir}/test_y.npy"))?;
+    let mut rng = Rng::seed_from_u64(flag(flags, "seed", 0u64));
+    let t0 = Instant::now();
+    let acc = mlp.evaluate(&x.data, &y.data, backend, &mut rng, 256);
+    println!(
+        "infer {} on {} samples [{:?}]: accuracy {:.2}% ({:?})",
+        weights_path,
+        y.len(),
+        backend,
+        acc * 100.0,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// The E2E driver: PJRT-load train_step, train from rust, report.
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".into());
+    let steps: usize = flag(flags, "steps", 300);
+    let log_every: usize = flag(flags, "log-every", 25);
+    let batch = 64usize;
+
+    let mut rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Initial parameters + dataset, exported by `make artifacts`.
+    let mut params: Vec<HostTensor> = ["fc1_w", "fc1_b", "bwht_t", "fc2_w", "fc2_b"]
+        .iter()
+        .map(|name| {
+            let arr = npy::load_f32(format!("{dir}/init_{name}.npy"))?;
+            Ok(HostTensor::f32(&arr.shape, arr.data))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let xtr = npy::load_f32(format!("{dir}/train_x.npy"))?;
+    let ytr = npy::load_i32(format!("{dir}/train_y.npy"))?;
+    let xte = npy::load_f32(format!("{dir}/test_x.npy"))?;
+    let yte = npy::load_i32(format!("{dir}/test_y.npy"))?;
+    let din = xtr.shape[1];
+    let ntrain = xtr.shape[0];
+
+    let mut rng = Rng::seed_from_u64(flag(flags, "seed", 0u64));
+    let t0 = Instant::now();
+    println!("step,loss");
+    for step in 0..steps {
+        let mut bx = Vec::with_capacity(batch * din);
+        let mut by = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let i = rng.int_range(0, ntrain as i64 - 1) as usize;
+            bx.extend_from_slice(xtr.row(i));
+            by.push(ytr.data[i]);
+        }
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::f32(&[batch, din], bx));
+        inputs.push(HostTensor::i32(&[batch], by));
+        let mut outputs = rt.run("train_step", &inputs)?;
+        let loss = outputs.pop().ok_or_else(|| anyhow!("missing loss"))?;
+        params = outputs;
+        if step % log_every == 0 || step == steps - 1 {
+            println!("{step},{:.4}", loss.scalar_f32()?);
+        }
+    }
+    let train_time = t0.elapsed();
+
+    // Evaluate the trained weights through the rust inference engine on
+    // (a) the exact float path, (b) the digital ADC-free quantized path.
+    let flat: Vec<Vec<f32>> = params
+        .iter()
+        .map(|t| t.as_f32().map(|d| d.to_vec()))
+        .collect::<Result<_>>()?;
+    let hidden = 64;
+    let mlp = Mlp::from_flat(
+        din,
+        hidden,
+        10,
+        flat[0].clone(),
+        flat[1].clone(),
+        flat[2].clone(),
+        flat[3].clone(),
+        flat[4].clone(),
+    );
+    let mut r2 = Rng::seed_from_u64(1);
+    let acc_q = mlp.evaluate(
+        &xte.data,
+        &yte.data,
+        Backend::Quantized { bits: 8 },
+        &mut r2,
+        256,
+    );
+    let acc_f = mlp.evaluate(&xte.data, &yte.data, Backend::Float, &mut r2, 256);
+    println!("trained {steps} steps in {train_time:?}");
+    println!(
+        "test accuracy: float backend {:.2}%  quantized(8b) backend {:.2}%",
+        acc_f * 100.0,
+        acc_q * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let requests: usize = flag(flags, "requests", 1000);
+    let workers: usize = flag(flags, "workers", 4);
+    let tile: usize = flag(flags, "tile", 16);
+    let bits: u32 = flag(flags, "bits", 8);
+    let dim: usize = flag(flags, "dim", 64);
+    let vdd: f64 = flag(flags, "vdd", 0.8);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: tile,
+        bits,
+        workers,
+        kind: TileKind::Digital,
+        ..Default::default()
+    });
+    let mut rng = Rng::seed_from_u64(7);
+    let reqs: Vec<TransformRequest> = (0..requests)
+        .map(|_| {
+            let x: Vec<f32> = (0..dim)
+                .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+                .collect();
+            let th: Vec<f64> = (0..dim)
+                .map(|_| {
+                    repro::bitplane::early_term::sample_threshold(
+                        &mut rng,
+                        repro::bitplane::early_term::ThresholdDist::Wald,
+                        1.0,
+                    )
+                    .abs()
+                        * 255.0
+                })
+                .collect();
+            TransformRequest {
+                x,
+                thresholds_units: th,
+            }
+        })
+        .collect();
+    let t0 = Instant::now();
+    coord.transform_batch(&reqs)?;
+    let dt = t0.elapsed();
+    let m = coord.metrics();
+    let model = EnergyModel::new(tile, vdd);
+    println!("served {requests} transform requests (dim {dim}) in {dt:?}");
+    println!(
+        "  throughput: {:.0} req/s | avg cycles/elem {:.2} | early-terminated {:.1}%",
+        requests as f64 / dt.as_secs_f64(),
+        m.average_cycles(),
+        100.0 * m.cycles.terminated_early as f64 / m.cycles.total_elements as f64
+    );
+    println!(
+        "  modelled energy {:.2} nJ | effective {:.0} TOPS/W",
+        m.energy_fj(&model) / 1e6,
+        m.tops_per_watt(&model)
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {
+    let vdd: f64 = flag(flags, "vdd", 0.8);
+    let avg_cycles: f64 = flag(flags, "avg-cycles", 1.34);
+    let model = EnergyModel::new(16, vdd);
+    let no_et = model.tops_per_watt(8);
+    let et = model.tops_per_watt_et(8, avg_cycles);
+    println!("Energy model @ VDD={vdd} V, 16x16, 8-bit inputs");
+    println!("  1-bit MAC energy: {:.0} aJ/op", model.mac_energy_aj());
+    println!("  TOPS/W no ET: {no_et:.0} | with ET (avg {avg_cycles} cycles): {et:.0}");
+    println!("\nTable I comparison:");
+    println!(
+        "{:<16} {:>6} {:>14} {:>6} {:>6} {:>12} {:>9} {:>16}",
+        "design", "tech", "mode", "ADC", "DAC", "network", "accuracy", "TOPS/W"
+    );
+    for row in table1(no_et, et, 91.04) {
+        println!(
+            "{:<16} {:>6} {:>14} {:>6} {:>6} {:>12} {:>9} {:>16}",
+            row.label,
+            row.technology,
+            row.computing_mode,
+            row.adc,
+            row.dac,
+            row.network,
+            row.accuracy,
+            row.tops_per_watt
+        );
+    }
+    println!("\nPower breakdown (Fig. 12):");
+    for (name, fj, share) in model.bitplane_breakdown().rows() {
+        println!("  {name:<26} {fj:>8.2} fJ  {:>5.1}%", share * 100.0);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(if args.is_empty() { &[] } else { &args[1..] });
+    match cmd {
+        "transform" => cmd_transform(&flags),
+        "infer" => cmd_infer(&flags),
+        "train" => cmd_train(&flags),
+        "serve" => cmd_serve(&flags),
+        "report" => cmd_report(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other}; see `repro help`"),
+    }
+}
+
+const HELP: &str = "repro — ADC/DAC-free analog frequency-domain DNN accelerator (reproduction)
+
+USAGE: repro <SUBCOMMAND> [flags]
+
+SUBCOMMANDS:
+  transform   run one BWHT transform through the coordinator
+  infer       evaluate exported MLP weights on the test set
+  train       E2E: train via the PJRT train_step artifact (no python)
+  serve       batch-serve transform requests; report throughput + TOPS/W
+  report      energy model: Table I, Fig. 12 power breakdown
+  help        this text
+";

@@ -1,0 +1,238 @@
+//! The BWHT layer (Fig. 2): transform → soft-threshold → inverse, with
+//! channel expansion/projection, executable on multiple backends.
+//!
+//! Matches `python/compile/model.py::bwht_layer` numerically in Float mode
+//! and `ref.quant_bwht_ref` bit-for-bit in Quantized mode.
+
+use crate::analog::noise::NoiseModel;
+use crate::bitplane::QuantBwht;
+use crate::util::rng::Rng;
+use crate::wht;
+
+use super::layers::soft_threshold;
+
+/// Execution backend for the two transforms inside a BWHT layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Backend {
+    /// Exact float transform — the "with ADC" algorithmic baseline.
+    Float,
+    /// Digital golden model of the ADC-free crossbar (Eq. 4).
+    Quantized { bits: u32 },
+    /// Eq. 4 with ANT noise on every PSUM before the comparator
+    /// (Fig. 11(a) emulation of analog non-idealities).
+    Noisy { bits: u32, sigma_ant: f64 },
+}
+
+/// A BWHT channel-mixing layer with per-channel thresholds `t`.
+#[derive(Debug, Clone)]
+pub struct BwhtLayer {
+    /// Transform width (padded); `t.len() == width`.
+    pub width: usize,
+    pub max_block: usize,
+    /// Trainable soft thresholds (the layer's ONLY parameters).
+    pub t: Vec<f32>,
+    /// Orthonormal scaling 1/sqrt(block) per channel.
+    norm: Vec<f32>,
+}
+
+impl BwhtLayer {
+    /// Build for mixing `cin -> cout` channels; `t` must cover the padded
+    /// width of `max(cin, cout)`.
+    pub fn new(cin: usize, cout: usize, t: Vec<f32>, max_block: usize) -> Self {
+        let width = wht::bwht_padded_dim(cin.max(cout), max_block);
+        assert_eq!(t.len(), width, "t must have padded width {width}");
+        let blocks = wht::bwht_blocks(cin.max(cout), max_block);
+        let mut norm = Vec::with_capacity(width);
+        for &b in &blocks {
+            norm.extend(std::iter::repeat(1.0 / (b as f32).sqrt()).take(b));
+        }
+        BwhtLayer {
+            width,
+            max_block,
+            t,
+            norm,
+        }
+    }
+
+    fn transform(&self, x: &[f32], backend: Backend, rng: &mut Rng) -> Vec<f32> {
+        match backend {
+            Backend::Float => wht::bwht_apply(x, self.width, self.max_block),
+            Backend::Quantized { bits } => {
+                QuantBwht::new(self.width, self.max_block, bits).transform(x)
+            }
+            Backend::Noisy { bits, sigma_ant } => {
+                let eng = QuantBwht::new(self.width, self.max_block, bits);
+                let q = eng.quantizer.quantize(x);
+                let nm = NoiseModel::new(sigma_ant, self.width);
+                let mut acc = vec![0f32; self.width];
+                for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
+                    let psums = eng.plane_psums(plane);
+                    let obits = nm.perturb_and_compare(&psums, rng);
+                    let w = (1i64 << (bits as usize - 1 - p)) as f32;
+                    for (a, &o) in acc.iter_mut().zip(&obits) {
+                        *a += o as f32 * w;
+                    }
+                }
+                acc.iter().map(|v| v * q.scale).collect()
+            }
+        }
+    }
+
+    /// Forward one `(batch, cin)` activation to `(batch, cout)`.
+    ///
+    /// Expansion (`cout > cin`) zero-pads channels before the transform;
+    /// projection truncates after the inverse (low-sequency channels carry
+    /// the energy).  Thresholding happens in the frequency domain between
+    /// the two transforms, exactly the Fig. 2 flow.
+    pub fn forward(
+        &self,
+        x: &[f32],
+        batch: usize,
+        cin: usize,
+        cout: usize,
+        backend: Backend,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), batch * cin);
+        assert!(cin <= self.width && cout <= self.width);
+        let mut out = vec![0f32; batch * cout];
+        let mut padded = vec![0f32; self.width];
+        for bi in 0..batch {
+            padded.fill(0.0);
+            padded[..cin].copy_from_slice(&x[bi * cin..(bi + 1) * cin]);
+            // forward transform + orthonormal scale
+            let mut freq = self.transform(&padded, backend, rng);
+            for (f, &n) in freq.iter_mut().zip(&self.norm) {
+                *f *= n;
+            }
+            soft_threshold(&mut freq, &self.t);
+            // inverse transform (+ scale): W/sqrt(n) is its own inverse
+            let mut spatial = self.transform(&freq, backend, rng);
+            for (s, &n) in spatial.iter_mut().zip(&self.norm) {
+                *s *= n;
+            }
+            out[bi * cout..(bi + 1) * cout].copy_from_slice(&spatial[..cout]);
+        }
+        out
+    }
+
+    /// Thresholds in comparator units for the early-termination scheduler:
+    /// `T_units[i] = |t_i| / (norm_i * scale)`.
+    pub fn thresholds_units(&self, scale: f32) -> Vec<f64> {
+        self.t
+            .iter()
+            .zip(&self.norm)
+            .map(|(&t, &n)| (t.abs() / (n * scale).max(1e-12)) as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(width_src: usize, t_val: f32) -> BwhtLayer {
+        let width = wht::bwht_padded_dim(width_src, 128);
+        BwhtLayer::new(width_src, width_src, vec![t_val; width], 128)
+    }
+
+    fn rng() -> Rng {
+        Rng::seed_from_u64(3)
+    }
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from_u64(seed);
+        (0..n).map(|_| r.uniform_range(-2.0, 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn zero_threshold_float_is_identity() {
+        let l = layer(32, 0.0);
+        let x = sample(2 * 32, 1);
+        let y = l.forward(&x, 2, 32, 32, Backend::Float, &mut rng());
+        for (a, b) in y.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn huge_threshold_zeroes_output() {
+        let l = layer(16, 1e6);
+        let x = sample(16, 2);
+        let y = l.forward(&x, 1, 16, 16, Backend::Float, &mut rng());
+        assert!(y.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn expansion_and_projection_shapes() {
+        let width = wht::bwht_padded_dim(32, 128);
+        let l = BwhtLayer::new(16, 32, vec![0.1; width], 128);
+        let x = sample(3 * 16, 3);
+        let y = l.forward(&x, 3, 16, 32, Backend::Float, &mut rng());
+        assert_eq!(y.len(), 3 * 32);
+        let l2 = BwhtLayer::new(32, 8, vec![0.1; width], 128);
+        let y2 = l2.forward(&sample(2 * 32, 4), 2, 32, 8, Backend::Float, &mut rng());
+        assert_eq!(y2.len(), 2 * 8);
+    }
+
+    #[test]
+    fn quantized_backend_approximates_float() {
+        let l = layer(64, 0.05);
+        let x = sample(64, 5);
+        let yf = l.forward(&x, 1, 64, 64, Backend::Float, &mut rng());
+        let yq = l.forward(&x, 1, 64, 64, Backend::Quantized { bits: 8 }, &mut rng());
+        // crude approximation: require correlation, not fidelity
+        let dot: f32 = yf.iter().zip(&yq).map(|(a, b)| a * b).sum();
+        let na: f32 = yf.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nb: f32 = yq.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if na > 1e-6 && nb > 1e-6 {
+            assert!(dot / (na * nb) > 0.2, "cosine {}", dot / (na * nb));
+        }
+    }
+
+    #[test]
+    fn noisy_backend_zero_sigma_equals_quantized() {
+        let l = layer(16, 0.1);
+        let x = sample(16, 6);
+        let yq = l.forward(&x, 1, 16, 16, Backend::Quantized { bits: 4 }, &mut rng());
+        let yn = l.forward(
+            &x,
+            1,
+            16,
+            16,
+            Backend::Noisy {
+                bits: 4,
+                sigma_ant: 0.0,
+            },
+            &mut rng(),
+        );
+        assert_eq!(yq, yn);
+    }
+
+    #[test]
+    fn noisy_backend_perturbs() {
+        let l = layer(16, 0.0);
+        let x = sample(16, 7);
+        let yq = l.forward(&x, 1, 16, 16, Backend::Quantized { bits: 8 }, &mut rng());
+        let yn = l.forward(
+            &x,
+            1,
+            16,
+            16,
+            Backend::Noisy {
+                bits: 8,
+                sigma_ant: 0.3,
+            },
+            &mut rng(),
+        );
+        assert_ne!(yq, yn);
+    }
+
+    #[test]
+    fn threshold_units_scaling() {
+        let l = layer(16, 0.5);
+        let units = l.thresholds_units(0.25);
+        // norm = 1/4 for a 16-block; units = 0.5 / (0.25 * 0.25) = 8
+        assert!((units[0] - 8.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,149 @@
+//! Primitive float layers (dense, activations, metrics) for the inference
+//! engine.  Row-major matrices, batch-major activations `(batch, dim)`.
+
+/// Dense layer: `y = x W + b`, `w` is `(din, dout)` row-major.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub din: usize,
+    pub dout: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Dense {
+    pub fn new(din: usize, dout: usize, w: Vec<f32>, b: Vec<f32>) -> Self {
+        assert_eq!(w.len(), din * dout, "weight size mismatch");
+        assert_eq!(b.len(), dout, "bias size mismatch");
+        Dense { din, dout, w, b }
+    }
+
+    /// Forward one batch: `x` is `(batch, din)` flat; returns `(batch, dout)`.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.din);
+        let mut out = vec![0f32; batch * self.dout];
+        for bi in 0..batch {
+            let xi = &x[bi * self.din..(bi + 1) * self.din];
+            let oi = &mut out[bi * self.dout..(bi + 1) * self.dout];
+            oi.copy_from_slice(&self.b);
+            for (k, &xv) in xi.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w[k * self.dout..(k + 1) * self.dout];
+                for (o, &wv) in oi.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Soft threshold S_T (Eq. 3), per-channel t over a `(batch, dim)` buffer.
+pub fn soft_threshold(x: &mut [f32], t: &[f32]) {
+    let dim = t.len();
+    for (i, v) in x.iter_mut().enumerate() {
+        let th = t[i % dim].abs();
+        let a = v.abs() - th;
+        *v = if a > 0.0 { v.signum() * a } else { 0.0 };
+    }
+}
+
+/// Row-wise argmax of a `(batch, classes)` buffer.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Classification accuracy against integer labels.
+pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    let preds = argmax_rows(logits, classes);
+    assert_eq!(preds.len(), labels.len());
+    let correct = preds
+        .iter()
+        .zip(labels)
+        .filter(|&(&p, &l)| p as i32 == l)
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Fraction of exactly-zero activations (the paper's output sparsity).
+pub fn sparsity(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().filter(|v| **v == 0.0).count() as f64 / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matches_manual() {
+        // 2x3 weight, batch 2
+        let d = Dense::new(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![0.1, 0.2, 0.3]);
+        let out = d.forward(&[1.0, 1.0, 2.0, 0.0], 2);
+        assert_eq!(out.len(), 6);
+        // row0: [1+4, 2+5, 3+6] + b
+        assert!((out[0] - 5.1).abs() < 1e-6);
+        assert!((out[1] - 7.2).abs() < 1e-6);
+        assert!((out[2] - 9.3).abs() < 1e-6);
+        // row1: 2*[1,2,3] + b
+        assert!((out[3] - 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn soft_threshold_dead_zone() {
+        let mut x = vec![-0.5, -0.1, 0.0, 0.1, 0.5];
+        soft_threshold(&mut x, &[0.2, 0.2, 0.2, 0.2, 0.2]);
+        let want = [-0.3, 0.0, 0.0, 0.0, 0.3];
+        for (a, b) in x.iter().zip(want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn soft_threshold_broadcasts_over_batch() {
+        let mut x = vec![1.0, 1.0, 1.0, 1.0]; // batch 2, dim 2
+        soft_threshold(&mut x, &[0.5, 2.0]);
+        assert_eq!(x, vec![0.5, 0.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn accuracy_and_argmax() {
+        let logits = vec![0.1, 0.9, 0.8, 0.2]; // batch 2, classes 2
+        assert_eq!(argmax_rows(&logits, 2), vec![1, 0]);
+        assert_eq!(accuracy(&logits, &[1, 1], 2), 0.5);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        assert_eq!(sparsity(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(sparsity(&[]), 0.0);
+    }
+}

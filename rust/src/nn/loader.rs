@@ -1,0 +1,107 @@
+//! Weight loading from the JSON exports of `python/compile/train.py`
+//! (`make weights`): flat `{name: {shape, data}}` maps.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// A named weight tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Weight {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// All weights from one JSON export.
+#[derive(Debug, Clone, Default)]
+pub struct Weights {
+    map: HashMap<String, Weight>,
+}
+
+impl Weights {
+    pub fn load(path: impl AsRef<Path>) -> Result<Weights> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Weights> {
+        let root = json::parse(text)?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("root must be object"))?;
+        let mut map = HashMap::new();
+        for (name, entry) in obj {
+            if entry.get("static").is_some() {
+                continue; // non-array config leaf
+            }
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                .collect::<Result<_>>()?;
+            let data: Vec<f32> = entry
+                .get("data")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing data"))?
+                .iter()
+                .map(|v| v.as_f64().map(|f| f as f32).ok_or_else(|| anyhow!("bad datum")))
+                .collect::<Result<_>>()?;
+            if shape.iter().product::<usize>() != data.len() {
+                bail!("{name}: shape/data mismatch");
+            }
+            map.insert(name.clone(), Weight { shape, data });
+        }
+        Ok(Weights { map })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Weight> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("missing weight {name}"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.map.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn insert(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+        self.map.insert(name.to_string(), Weight { shape, data });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "fc1.w": {"shape": [2, 3], "data": [1, 2, 3, 4, 5, 6]},
+        "bwht.t": {"shape": [4], "data": [0.1, 0.2, 0.3, 0.4]},
+        "flag": {"static": true}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let w = Weights::parse(SAMPLE).unwrap();
+        assert_eq!(w.get("fc1.w").unwrap().shape, vec![2, 3]);
+        assert_eq!(w.get("bwht.t").unwrap().data.len(), 4);
+        assert!(w.get("flag").is_err(), "static leaves are skipped");
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let bad = r#"{"x": {"shape": [3], "data": [1, 2]}}"#;
+        assert!(Weights::parse(bad).is_err());
+    }
+
+    #[test]
+    fn names_sorted() {
+        let w = Weights::parse(SAMPLE).unwrap();
+        assert_eq!(w.names(), vec!["bwht.t", "fc1.w"]);
+    }
+}

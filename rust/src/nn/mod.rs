@@ -1,0 +1,25 @@
+//! Pure-rust inference substrate for BWHT-compressed networks.
+//!
+//! Mirrors the python L2 models (`python/compile/model.py`) closely enough
+//! that weights trained there (exported as JSON by `make weights`) run
+//! here comparably, with the BWHT layers executable on three backends:
+//!
+//! * [`Backend::Float`] — exact float transform (the algorithmic baseline),
+//! * [`Backend::Quantized`] — the digital golden model of the ADC-free
+//!   crossbar arithmetic (Eq. 4),
+//! * [`Backend::Noisy`] — Eq. 4 with ANT noise injection (Fig. 11(a)),
+//!
+//! plus the full analog path when driven through
+//! [`crate::coordinator`]'s tile pool.
+//!
+//! [`counter`] reproduces the Fig. 1(b)/(c) parameter and MAC accounting
+//! for the *real* ResNet20 / MobileNetV2 architectures.
+
+pub mod bwht_layer;
+pub mod counter;
+pub mod layers;
+pub mod loader;
+pub mod model;
+
+pub use bwht_layer::{Backend, BwhtLayer};
+pub use model::Mlp;

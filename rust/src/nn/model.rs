@@ -1,0 +1,159 @@
+//! The MLP classifier matching `python/compile/model.py::init_mlp`:
+//! dense → ReLU → BWHT layer → dense.  This is the model the AOT
+//! artifacts embed and the E2E driver trains; the rust engine runs the
+//! same weights for inference on any [`Backend`].
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+use super::bwht_layer::{Backend, BwhtLayer};
+use super::layers::{accuracy, relu, Dense};
+use super::loader::Weights;
+
+/// dense(din→hidden) → ReLU → BWHT(hidden) → dense(hidden→classes).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub fc1: Dense,
+    pub bwht: BwhtLayer,
+    pub fc2: Dense,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl Mlp {
+    /// Build from a python-exported weight file (`mlp_*.json`).
+    pub fn from_weights(w: &Weights) -> Result<Mlp> {
+        let fc1w = w.get("fc1.w")?;
+        let fc1b = w.get("fc1.b")?;
+        let t = w.get("bwht.t")?;
+        let fc2w = w.get("fc2.w")?;
+        let fc2b = w.get("fc2.b")?;
+        let (din, hidden) = (fc1w.shape[0], fc1w.shape[1]);
+        let classes = fc2w.shape[1];
+        Ok(Mlp {
+            fc1: Dense::new(din, hidden, fc1w.data.clone(), fc1b.data.clone()),
+            bwht: BwhtLayer::new(hidden, hidden, t.data.clone(), 128),
+            fc2: Dense::new(hidden, classes, fc2w.data.clone(), fc2b.data.clone()),
+            hidden,
+            classes,
+        })
+    }
+
+    /// Build from flat parameter vectors (e.g. PJRT training output).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_flat(
+        din: usize,
+        hidden: usize,
+        classes: usize,
+        fc1_w: Vec<f32>,
+        fc1_b: Vec<f32>,
+        t: Vec<f32>,
+        fc2_w: Vec<f32>,
+        fc2_b: Vec<f32>,
+    ) -> Mlp {
+        Mlp {
+            fc1: Dense::new(din, hidden, fc1_w, fc1_b),
+            bwht: BwhtLayer::new(hidden, hidden, t, 128),
+            fc2: Dense::new(hidden, classes, fc2_w, fc2_b),
+            hidden,
+            classes,
+        }
+    }
+
+    /// Logits for a `(batch, din)` input.
+    pub fn forward(&self, x: &[f32], batch: usize, backend: Backend, rng: &mut Rng) -> Vec<f32> {
+        let mut h = self.fc1.forward(x, batch);
+        relu(&mut h);
+        let h = self
+            .bwht
+            .forward(&h, batch, self.hidden, self.hidden, backend, rng);
+        self.fc2.forward(&h, batch)
+    }
+
+    /// Batched accuracy evaluation.
+    pub fn evaluate(
+        &self,
+        x: &[f32],
+        labels: &[i32],
+        backend: Backend,
+        rng: &mut Rng,
+        batch: usize,
+    ) -> f64 {
+        let din = self.fc1.din;
+        let n = labels.len();
+        assert_eq!(x.len(), n * din);
+        let mut correct_weighted = 0.0;
+        let mut i = 0;
+        while i < n {
+            let b = batch.min(n - i);
+            let logits = self.forward(&x[i * din..(i + b) * din], b, backend, rng);
+            correct_weighted += accuracy(&logits, &labels[i..i + b], self.classes) * b as f64;
+            i += b;
+        }
+        correct_weighted / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mlp() -> Mlp {
+        let mut r = Rng::seed_from_u64(1);
+        let din = 8;
+        let hidden = 8;
+        let classes = 3;
+        Mlp::from_flat(
+            din,
+            hidden,
+            classes,
+            r.normal_vec_f32(din * hidden, 0.0, 0.5),
+            vec![0.0; hidden],
+            vec![0.05; hidden],
+            r.normal_vec_f32(hidden * classes, 0.0, 0.5),
+            vec![0.0; classes],
+        )
+    }
+
+    #[test]
+    fn forward_shape() {
+        let m = tiny_mlp();
+        let mut r = Rng::seed_from_u64(2);
+        let x: Vec<f32> = (0..4 * 8).map(|i| (i as f32 * 0.3).sin()).collect();
+        let y = m.forward(&x, 4, Backend::Float, &mut r);
+        assert_eq!(y.len(), 4 * 3);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn evaluate_in_unit_interval() {
+        let m = tiny_mlp();
+        let mut r = Rng::seed_from_u64(3);
+        let x: Vec<f32> = (0..10 * 8).map(|i| (i as f32 * 0.7).cos()).collect();
+        let labels = vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0];
+        let acc = m.evaluate(&x, &labels, Backend::Float, &mut r, 4);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn from_weights_roundtrip() {
+        let json = r#"{
+            "fc1.w": {"shape": [4, 8], "data": [0.1,0.1,0.1,0.1,0.1,0.1,0.1,0.1,
+                                                 0.1,0.1,0.1,0.1,0.1,0.1,0.1,0.1,
+                                                 0.1,0.1,0.1,0.1,0.1,0.1,0.1,0.1,
+                                                 0.1,0.1,0.1,0.1,0.1,0.1,0.1,0.1]},
+            "fc1.b": {"shape": [8], "data": [0,0,0,0,0,0,0,0]},
+            "bwht.t": {"shape": [8], "data": [0.1,0.1,0.1,0.1,0.1,0.1,0.1,0.1]},
+            "fc2.w": {"shape": [8, 2], "data": [1,0, 0,1, 1,0, 0,1, 1,0, 0,1, 1,0, 0,1]},
+            "fc2.b": {"shape": [2], "data": [0, 0]}
+        }"#;
+        let w = Weights::parse(json).unwrap();
+        let m = Mlp::from_weights(&w).unwrap();
+        assert_eq!(m.fc1.din, 4);
+        assert_eq!(m.classes, 2);
+        let mut r = Rng::seed_from_u64(4);
+        let y = m.forward(&[1.0, 2.0, 3.0, 4.0], 1, Backend::Float, &mut r);
+        assert_eq!(y.len(), 2);
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal `.npy` reader/writer for the build-time data interchange
+//! (datasets and init params exported by `python/compile/aot.py`).
+//!
+//! Supports the subset numpy actually emits for our arrays: format v1.0/
+//! v2.0 headers, little-endian `<f4`/`<i4`, C order, no pickles.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A loaded array: shape + flat data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T> NpyArray<T> {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a 2-D array.
+    pub fn row(&self, i: usize) -> &[T] {
+        assert_eq!(self.shape.len(), 2, "row() requires a 2-D array");
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+}
+
+fn parse_header(buf: &[u8]) -> Result<(String, bool, Vec<usize>, usize)> {
+    if buf.len() < 10 || &buf[..6] != b"\x93NUMPY" {
+        bail!("not a .npy file");
+    }
+    let major = buf[6];
+    let (hlen, start) = match major {
+        1 => (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10),
+        2 => (
+            u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
+            12,
+        ),
+        v => bail!("unsupported .npy version {v}"),
+    };
+    let header = std::str::from_utf8(&buf[start..start + hlen])
+        .map_err(|e| anyhow!("bad header utf8: {e}"))?;
+    // header is a python dict literal:
+    // {'descr': '<f4', 'fortran_order': False, 'shape': (64, 64), }
+    let descr = header
+        .split("'descr':")
+        .nth(1)
+        .and_then(|s| s.split('\'').nth(1))
+        .ok_or_else(|| anyhow!("missing descr"))?
+        .to_string();
+    let fortran = header.contains("'fortran_order': True");
+    let shape_str = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| anyhow!("missing shape"))?;
+    let shape: Vec<usize> = shape_str
+        .split(',')
+        .filter_map(|t| {
+            let t = t.trim();
+            if t.is_empty() {
+                None
+            } else {
+                Some(t.parse::<usize>())
+            }
+        })
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow!("bad shape: {e}"))?;
+    Ok((descr, fortran, shape, start + hlen))
+}
+
+macro_rules! impl_load {
+    ($fn_name:ident, $ty:ty, $descr:literal, $width:literal) => {
+        /// Load a `.npy` file of this element type.
+        pub fn $fn_name(path: impl AsRef<Path>) -> Result<NpyArray<$ty>> {
+            let buf = fs::read(path.as_ref())
+                .map_err(|e| anyhow!("read {:?}: {e}", path.as_ref()))?;
+            let (descr, fortran, shape, off) = parse_header(&buf)?;
+            if descr != $descr {
+                bail!("expected dtype {}, got {descr}", $descr);
+            }
+            if fortran {
+                bail!("fortran order unsupported");
+            }
+            let count: usize = shape.iter().product::<usize>().max(1);
+            let body = &buf[off..];
+            if body.len() < count * $width {
+                bail!("truncated data: {} < {}", body.len(), count * $width);
+            }
+            let data = body[..count * $width]
+                .chunks_exact($width)
+                .map(|c| <$ty>::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(NpyArray { shape, data })
+        }
+    };
+}
+
+impl_load!(load_f32, f32, "<f4", 4);
+impl_load!(load_i32, i32, "<i4", 4);
+
+/// Write a v1.0 `.npy` file (little-endian f32, C order).
+pub fn save_f32(path: impl AsRef<Path>, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    let base = 10 + header.len() + 1;
+    let pad = (64 - base % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut out = Vec::with_capacity(10 + header.len() + data.len() * 4);
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = crate::util::tempdir::TempDir::new("npy").unwrap();
+        let path = dir.join("a.npy");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 3.0).collect();
+        save_f32(&path, &[3, 4], &data).unwrap();
+        let arr = load_f32(&path).unwrap();
+        assert_eq!(arr.shape, vec![3, 4]);
+        assert_eq!(arr.data, data);
+        assert_eq!(arr.row(1), &data[4..8]);
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let dir = crate::util::tempdir::TempDir::new("npy").unwrap();
+        let path = dir.join("a.npy");
+        save_f32(&path, &[4], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!(load_i32(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = crate::util::tempdir::TempDir::new("npy").unwrap();
+        let path = dir.join("g.npy");
+        fs::write(&path, b"not numpy at all").unwrap();
+        assert!(load_f32(&path).is_err());
+    }
+
+    #[test]
+    fn one_dim_shape() {
+        let dir = crate::util::tempdir::TempDir::new("npy").unwrap();
+        let path = dir.join("v.npy");
+        save_f32(&path, &[5], &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let arr = load_f32(&path).unwrap();
+        assert_eq!(arr.shape, vec![5]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Sign-magnitude quantization and bitplane encoding (Fig. 6 input path).
+//!
+//! The crossbar is DAC-free: a multi-bit input vector is streamed as
+//! sign-magnitude *bitplanes* — the sign selects CL vs CLB, the magnitude
+//! bit gates the selected column line.  This module is the digital
+//! front-end that performs that encoding, bit-identical to
+//! `python/compile/kernels/ref.py::quantize_ref`/`bitplanes_ref`.
+
+/// Symmetric sign-magnitude quantizer with `bits` magnitude bitplanes.
+///
+/// Integer range is `±(2^bits - 1)`; `bits = 1` is the extreme ternary
+/// case (`{-1, 0, +1}`) of Fig. 8's sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Quantizer {
+    pub bits: u32,
+}
+
+/// A quantized vector: integers plus the scale such that `x ≈ q * scale`.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub q: Vec<i32>,
+    pub scale: f32,
+    pub bits: u32,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+        Quantizer { bits }
+    }
+
+    pub fn qmax(&self) -> i32 {
+        (1i32 << self.bits) - 1
+    }
+
+    /// Per-tensor symmetric quantization (matches `quantize_ref`).
+    pub fn quantize(&self, x: &[f32]) -> Quantized {
+        let amax = x.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-8);
+        let qmax = self.qmax() as f32;
+        let scale = amax / qmax;
+        let q = x
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32)
+            .collect();
+        Quantized {
+            q,
+            scale,
+            bits: self.bits,
+        }
+    }
+}
+
+impl Quantized {
+    /// Dequantize back to floats.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.q.iter().map(|&q| q as f32 * self.scale).collect()
+    }
+
+    /// Sign-magnitude bitplane `b` (0 = LSB): values in `{-1, 0, +1}`.
+    ///
+    /// `plane_b[j] = sign(q_j) * bit_b(|q_j|)` — exactly the CL/CLB drive
+    /// pattern for one 2-clock crossbar operation.
+    pub fn bitplane(&self, b: u32) -> Vec<i8> {
+        assert!(b < self.bits);
+        self.q
+            .iter()
+            .map(|&q| {
+                let bit = ((q.unsigned_abs() >> b) & 1) as i8;
+                if q < 0 {
+                    -bit
+                } else {
+                    bit
+                }
+            })
+            .collect()
+    }
+
+    /// All bitplanes, MSB first (the early-termination processing order).
+    pub fn bitplanes_msb_first(&self) -> Vec<Vec<i8>> {
+        (0..self.bits).rev().map(|b| self.bitplane(b)).collect()
+    }
+
+    /// Reconstruct the integers from the bitplanes (sanity identity).
+    pub fn reconstruct_from_planes(&self) -> Vec<i32> {
+        let mut acc = vec![0i32; self.q.len()];
+        for b in 0..self.bits {
+            let plane = self.bitplane(b);
+            for (a, &p) in acc.iter_mut().zip(&plane) {
+                *a += (p as i32) << b;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        // deterministic pseudo-random floats in [-3, 3]
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s % 6000) as f32 / 1000.0) - 3.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        for bits in [1, 2, 4, 8] {
+            let x = sample(100, bits as u64);
+            let q = Quantizer::new(bits).quantize(&x);
+            for (orig, deq) in x.iter().zip(q.dequantize()) {
+                assert!(
+                    (orig - deq).abs() <= q.scale / 2.0 + 1e-6,
+                    "bits={bits}: {orig} vs {deq} (scale {})",
+                    q.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn range_respects_qmax() {
+        let x = sample(256, 7);
+        let q = Quantizer::new(8).quantize(&x);
+        assert!(q.q.iter().all(|&v| v.abs() <= 255));
+        assert!(q.q.iter().any(|&v| v.abs() == 255), "max must hit qmax");
+    }
+
+    #[test]
+    fn one_bit_is_ternary() {
+        let x = sample(64, 3);
+        let q = Quantizer::new(1).quantize(&x);
+        assert!(q.q.iter().all(|&v| (-1..=1).contains(&v)));
+    }
+
+    #[test]
+    fn bitplane_values_are_sign_magnitude() {
+        let q = Quantized {
+            q: vec![-5, 3, 0, -1],
+            scale: 1.0,
+            bits: 4,
+        };
+        // |-5| = 0b0101
+        assert_eq!(q.bitplane(0), vec![-1, 1, 0, -1]);
+        assert_eq!(q.bitplane(1), vec![0, 1, 0, 0]);
+        assert_eq!(q.bitplane(2), vec![-1, 0, 0, 0]);
+        assert_eq!(q.bitplane(3), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn planes_reconstruct_integers() {
+        let x = sample(128, 11);
+        for bits in [1, 3, 8] {
+            let q = Quantizer::new(bits).quantize(&x);
+            assert_eq!(q.reconstruct_from_planes(), q.q, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn msb_first_ordering() {
+        let q = Quantized {
+            q: vec![4],
+            scale: 1.0,
+            bits: 3,
+        };
+        let planes = q.bitplanes_msb_first();
+        assert_eq!(planes, vec![vec![1], vec![0], vec![0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits")]
+    fn zero_bits_panics() {
+        Quantizer::new(0);
+    }
+
+    #[test]
+    fn zero_vector_stable() {
+        let q = Quantizer::new(8).quantize(&[0.0; 16]);
+        assert!(q.q.iter().all(|&v| v == 0));
+        assert!(q.scale > 0.0);
+    }
+}

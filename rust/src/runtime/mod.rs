@@ -1,0 +1,299 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! The interchange format is HLO *text* (NOT a serialized HloModuleProto:
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).  Each artifact is compiled
+//! once per process and cached; the rust request path never touches
+//! python.
+//!
+//! Artifacts are lowered with `return_tuple=True`, so executions return a
+//! 1-level tuple that we unpack into a `Vec<Literal>`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape/dtype of one artifact argument (from manifest.json).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tau: f64,
+    pub bits: u32,
+    pub sgd_lr: f64,
+    pub artifacts: HashMap<String, (String, Vec<ArgSpec>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = json::parse(text)?;
+        let get_num = |k: &str| -> Result<f64> {
+            root.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let mut artifacts = HashMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            let args = meta
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing args"))?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("bad arg name"))?
+                            .to_string(),
+                        shape: a
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("bad arg shape"))?
+                            .iter()
+                            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<_>>()?,
+                        dtype: a
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(name.clone(), (file, args));
+        }
+        Ok(Manifest {
+            tau: get_num("tau")?,
+            bits: get_num("bits")? as u32,
+            sgd_lr: get_num("sgd_lr")?,
+            artifacts,
+        })
+    }
+}
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: CPU client + compiled artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+/// A typed host tensor for artifact I/O.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32(shape.to_vec(), data)
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32(shape.to_vec(), data)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(_, d) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(shape, data) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32(shape, data) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::I32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and fetch an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let (file, args) = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+                .clone();
+            let path = self.dir.join(&file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable {
+                    name: name.to_string(),
+                    args,
+                    exe,
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact with host tensors; returns the unpacked tuple.
+    pub fn run(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(name)?;
+        if inputs.len() != exe.args.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                exe.args.len(),
+                inputs.len()
+            );
+        }
+        for (inp, spec) in inputs.iter().zip(&exe.args) {
+            let shape = match inp {
+                HostTensor::F32(s, _) => s,
+                HostTensor::I32(s, _) => s,
+            };
+            if shape != &spec.shape {
+                bail!(
+                    "{name}: arg {} shape mismatch: got {shape:?}, want {:?}",
+                    spec.name,
+                    spec.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let mut result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e}"))?;
+        // Artifacts are lowered with return_tuple=True: unpack the tuple.
+        let elements = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        elements.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "tau": 24.0, "bits": 8, "sgd_lr": 0.02,
+        "artifacts": {
+            "wht16": {"file": "wht16.hlo.txt",
+                       "args": [{"name": "x", "shape": [16, 16], "dtype": "float32"}]}
+        }
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.bits, 8);
+        let (file, args) = &m.artifacts["wht16"];
+        assert_eq!(file, "wht16.hlo.txt");
+        assert_eq!(args[0].shape, vec![16, 16]);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"tau": 1}"#).is_err());
+    }
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.as_f32().unwrap().len(), 4);
+        assert!(t.scalar_f32().is_err());
+        let s = HostTensor::f32(&[1], vec![7.0]);
+        assert_eq!(s.scalar_f32().unwrap(), 7.0);
+    }
+
+    // Full PJRT round-trips are exercised by tests/runtime_integration.rs
+    // (they need the artifacts directory built by `make artifacts`).
+}

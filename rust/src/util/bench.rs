@@ -1,0 +1,123 @@
+//! Tiny criterion-style bench harness (criterion is unavailable offline).
+//!
+//! Warm-up, repeated timed batches, median/mean/min reporting, optional
+//! throughput.  Used by every file under `benches/` (harness = false).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.min),
+            self.iters,
+        );
+    }
+
+    pub fn report_throughput(&self, elems_per_iter: f64, unit: &str) {
+        let per_sec = elems_per_iter / self.mean.as_secs_f64();
+        println!(
+            "{:<44} {:>12} mean   {:>14.3e} {unit}/s",
+            self.name,
+            fmt_dur(self.mean),
+            per_sec
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Run `f` repeatedly: ~0.5 s warm-up then ~2 s of timed samples.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warm-up and batch-size estimation.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < Duration::from_millis(300) {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    let batch = ((0.05 / per_iter).ceil() as u64).max(1);
+    let samples = 31usize;
+
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    let mut total_iters = 0u64;
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t0.elapsed() / batch as u32);
+        total_iters += batch;
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / samples as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean,
+        median: times[samples / 2],
+        min: times[0],
+    }
+}
+
+/// Print the standard header for a bench binary.
+pub fn header(group: &str) {
+    println!("\n=== bench group: {group} ===");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "name", "mean", "median", "min"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(500)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

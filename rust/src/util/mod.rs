@@ -1,0 +1,9 @@
+//! In-tree utilities replacing crates unavailable on the offline build box:
+//! [`rng`] (rand/rand_distr), [`json`] (serde_json), [`bench`] (criterion),
+//! [`prop`] (proptest-style property loops), [`tempdir`] (tempfile).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tempdir;

@@ -1,0 +1,71 @@
+//! Proptest-style property loops (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, check)` runs `check` on `cases` generated
+//! inputs; on failure it reports the failing seed/iteration so the case
+//! can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` generated inputs.  Panics (with the
+/// reproducing iteration index) on the first violated property.
+pub fn forall<T, G, C>(cases: usize, seed: u64, mut gen: G, mut check: C)
+where
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for i in 0..cases {
+        let mut rng = Rng::seed_from_u64(seed.wrapping_add(i as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {i} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generate a random f32 vector with entries in [-scale, scale].
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| rng.uniform_range(-scale as f64, scale as f64) as f32)
+        .collect()
+}
+
+/// Generate a random ternary vector ({-1, 0, 1}).
+pub fn vec_ternary(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.ternary()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(
+            50,
+            0,
+            |r| vec_f32(r, 8, 2.0),
+            |v| {
+                if v.len() == 8 {
+                    Ok(())
+                } else {
+                    Err("len".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        forall(10, 0, |r| r.int_range(0, 100), |&v| {
+            if v < 1000 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

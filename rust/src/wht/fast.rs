@@ -1,0 +1,168 @@
+//! Fast Walsh–Hadamard transform: O(n log n) in-place butterfly plus the
+//! sequency (Walsh-order) permutation.
+//!
+//! The crossbar computes the transform as a dense analog matvec; this fast
+//! digital path is the *baseline* the paper compares against and the
+//! reference the simulator is validated on.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::{Mutex, OnceLock};
+
+use super::matrix::{hadamard, sign_changes};
+
+/// In-place fast WHT butterfly in *natural (Hadamard)* order.
+/// `x.len()` must be a power of two.  After the call, `x = H_k x`.
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// Integer variant (exact for quantized operands).
+pub fn fwht_inplace_i64(x: &mut [i64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// Permutation mapping sequency row `i` to natural (Hadamard) row index.
+/// `perm[i] = h` such that Walsh row `i` equals Hadamard row `h`.
+pub fn sequency_perm(k: usize) -> Arc<Vec<usize>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Vec<usize>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("sequency cache poisoned");
+    guard
+        .entry(k)
+        .or_insert_with(|| {
+            let h = hadamard(k);
+            let n = h.size();
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by_key(|&i| sign_changes(h.row(i)));
+            Arc::new(order)
+        })
+        .clone()
+}
+
+/// Full sequency-ordered WHT: butterfly + permutation.  `x = W_k x`.
+pub fn wht_sequency(x: &mut [f32]) {
+    let n = x.len();
+    if n == 1 {
+        return;
+    }
+    let k = n.trailing_zeros() as usize;
+    fwht_inplace(x);
+    let perm = sequency_perm(k);
+    let tmp = x.to_vec();
+    for (i, &h) in perm.iter().enumerate() {
+        x[i] = tmp[h];
+    }
+}
+
+/// Integer sequency-ordered WHT.
+pub fn wht_sequency_i64(x: &mut [i64]) {
+    let n = x.len();
+    if n == 1 {
+        return;
+    }
+    let k = n.trailing_zeros() as usize;
+    fwht_inplace_i64(x);
+    let perm = sequency_perm(k);
+    let tmp = x.to_vec();
+    for (i, &h) in perm.iter().enumerate() {
+        x[i] = tmp[h];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wht::matrix::walsh;
+
+    #[test]
+    fn fwht_matches_hadamard_matvec() {
+        for k in 0..8usize {
+            let n = 1 << k;
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+            let mut fast = x.clone();
+            fwht_inplace(&mut fast);
+            let h = hadamard(k);
+            for i in 0..n {
+                let want: f32 = (0..n).map(|j| h.get(i, j) as f32 * x[j]).sum();
+                assert!((fast[i] - want).abs() < 1e-3, "k={k} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn wht_sequency_matches_walsh_matvec() {
+        for k in 1..8usize {
+            let n = 1 << k;
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 * 1.3).cos()).collect();
+            let mut fast = x.clone();
+            wht_sequency(&mut fast);
+            let w = walsh(k);
+            let want = w.matvec(&x);
+            for i in 0..n {
+                assert!((fast[i] - want[i]).abs() < 1e-3, "k={k} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn involution_up_to_n() {
+        let n = 32;
+        let x: Vec<f32> = (0..n).map(|i| i as f32 - 16.0).collect();
+        let mut y = x.clone();
+        wht_sequency(&mut y);
+        wht_sequency(&mut y);
+        for i in 0..n {
+            assert!((y[i] - n as f32 * x[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn integer_exactness() {
+        let x: Vec<i64> = (0..64).map(|i| (i * 37 % 23) - 11).collect();
+        let mut fast = x.clone();
+        wht_sequency_i64(&mut fast);
+        let w = walsh(6);
+        for i in 0..64 {
+            let want: i64 = (0..64).map(|j| w.get(i, j) as i64 * x[j]).sum();
+            assert_eq!(fast[i], want);
+        }
+    }
+
+    #[test]
+    fn length_one_noop() {
+        let mut x = [5.0f32];
+        wht_sequency(&mut x);
+        assert_eq!(x[0], 5.0);
+    }
+}

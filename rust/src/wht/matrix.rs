@@ -1,0 +1,158 @@
+//! Dense Hadamard/Walsh matrices with ±1 entries (Eq. 2 + sequency order).
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::sync::Arc;
+
+/// A dense ±1 matrix stored as `i8`, row-major.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalshMatrix {
+    n: usize,
+    data: Vec<i8>,
+}
+
+impl WalshMatrix {
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> i8 {
+        self.data[row * self.n + col]
+    }
+
+    pub fn row(&self, row: usize) -> &[i8] {
+        &self.data[row * self.n..(row + 1) * self.n]
+    }
+
+    /// Matrix–vector product `W x` in f64 (for small exact checks).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        (0..self.n)
+            .map(|i| {
+                let r = self.row(i);
+                r.iter().zip(x).map(|(&w, &v)| w as f32 * v).sum()
+            })
+            .collect()
+    }
+}
+
+/// Sylvester Hadamard matrix `H_k` of size `2^k x 2^k` (Eq. 2).
+pub fn hadamard(k: usize) -> WalshMatrix {
+    let n = 1usize << k;
+    let mut data = vec![1i8; n * n];
+    // H_{m} blocks built iteratively: entry (i,j) = (-1)^{popcount(i & j)}.
+    // (Equivalent to the recursive construction and much cheaper.)
+    for i in 0..n {
+        for j in 0..n {
+            if (i & j).count_ones() % 2 == 1 {
+                data[i * n + j] = -1;
+            }
+        }
+    }
+    WalshMatrix { n, data }
+}
+
+/// Number of sign changes along a ±1 row (the row's sequency).
+pub fn sign_changes(row: &[i8]) -> usize {
+    row.windows(2).filter(|w| w[0] != w[1]).count()
+}
+
+fn walsh_uncached(k: usize) -> WalshMatrix {
+    let h = hadamard(k);
+    let n = h.size();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| sign_changes(h.row(i)));
+    let mut data = Vec::with_capacity(n * n);
+    for &i in &order {
+        data.extend_from_slice(h.row(i));
+    }
+    WalshMatrix { n, data }
+}
+
+/// Walsh (sequency-ordered) matrix `W_k`: rows of `H_k` sorted by sign
+/// changes; row `i` has exactly `i` sign changes.  Cached per `k` (the
+/// matrices are parameter-free and shared by every crossbar tile).
+pub fn walsh(k: usize) -> Arc<WalshMatrix> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<WalshMatrix>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("walsh cache poisoned");
+    guard
+        .entry(k)
+        .or_insert_with(|| Arc::new(walsh_uncached(k)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadamard_base_and_recursion() {
+        let h0 = hadamard(0);
+        assert_eq!(h0.get(0, 0), 1);
+        let h1 = hadamard(1);
+        assert_eq!(
+            (0..2).flat_map(|i| (0..2).map(move |j| (i, j))).map(|(i, j)| h1.get(i, j)).collect::<Vec<_>>(),
+            vec![1, 1, 1, -1]
+        );
+        // recursive structure: lower-right quadrant of H2 = -H1
+        let h2 = hadamard(2);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(h2.get(i + 2, j + 2), -h1.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn orthogonality() {
+        for k in 0..8 {
+            let h = hadamard(k);
+            let n = h.size();
+            for i in 0..n.min(8) {
+                for j in 0..n.min(8) {
+                    let dot: i64 = (0..n)
+                        .map(|c| h.get(i, c) as i64 * h.get(j, c) as i64)
+                        .sum();
+                    assert_eq!(dot, if i == j { n as i64 } else { 0 });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn walsh_sequency_order() {
+        for k in 1..8 {
+            let w = walsh(k);
+            for i in 0..w.size() {
+                assert_eq!(sign_changes(w.row(i)), i, "k={k} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn walsh_is_row_permutation_of_hadamard() {
+        let k = 5;
+        let h = hadamard(k);
+        let w = walsh(k);
+        let hset: std::collections::HashSet<Vec<i8>> =
+            (0..h.size()).map(|i| h.row(i).to_vec()).collect();
+        for i in 0..w.size() {
+            assert!(hset.contains(w.row(i)));
+        }
+    }
+
+    #[test]
+    fn walsh_cache_returns_same_instance() {
+        let a = walsh(6);
+        let b = walsh(6);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn matvec_small() {
+        let w = walsh(1); // [[1,1],[1,-1]]
+        assert_eq!(w.matvec(&[3.0, 2.0]), vec![5.0, 1.0]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Walsh–Hadamard transform substrate (paper Sec. II-A).
+//!
+//! Provides Sylvester Hadamard matrices (Eq. 2), sequency-ordered Walsh
+//! matrices, the in-place fast WHT butterfly with sequency reordering, and
+//! the blockwise (BWHT) partitioning of Pan et al. [26] used to map
+//! arbitrary channel widths onto power-of-two crossbar tiles.
+//!
+//! Must stay bit-identical to `python/compile/walsh.py` — the python tests
+//! pin the same partition/order conventions and the AOT artifacts bake the
+//! same matrices.
+
+pub mod fast;
+pub mod matrix;
+
+pub use fast::{fwht_inplace, wht_sequency};
+pub use matrix::{hadamard, sign_changes, walsh, WalshMatrix};
+
+/// Smallest useful transform block: a 1- or 2-point WHT carries no
+/// frequency content worth thresholding (mirrors `walsh.MIN_BLOCK`).
+pub const MIN_BLOCK: usize = 4;
+
+/// Smallest power of two `>= n` (n must be positive).
+pub fn next_pow2(n: usize) -> usize {
+    assert!(n > 0, "next_pow2 requires n > 0");
+    n.next_power_of_two()
+}
+
+/// BWHT block sizes covering `dim` channels (greedy largest-fits-first,
+/// capped at `max_block`, floored at [`MIN_BLOCK`]).  Identical to
+/// `python/compile/walsh.bwht_blocks`.
+pub fn bwht_blocks(dim: usize, max_block: usize) -> Vec<usize> {
+    assert!(dim > 0, "dim must be positive");
+    assert!(
+        max_block.is_power_of_two() && max_block >= MIN_BLOCK,
+        "max_block must be a power of two >= {MIN_BLOCK}, got {max_block}"
+    );
+    let mut blocks = Vec::new();
+    let mut rem = dim;
+    while rem >= MIN_BLOCK {
+        let b = (1usize << (usize::BITS - 1 - rem.leading_zeros())).min(max_block);
+        blocks.push(b);
+        rem -= b;
+    }
+    if rem > 0 {
+        // Final sub-MIN_BLOCK remainder: one zero-padded MIN_BLOCK block.
+        blocks.push(MIN_BLOCK);
+    }
+    blocks
+}
+
+/// Total (possibly padded) width of the BWHT covering `dim` channels.
+pub fn bwht_padded_dim(dim: usize, max_block: usize) -> usize {
+    bwht_blocks(dim, max_block).iter().sum()
+}
+
+/// Blockwise WHT of `x` (length = padded dim), using the fast butterfly
+/// per block.  Equivalent to multiplying by the block-diagonal BWHT matrix.
+pub fn bwht_apply(x: &[f32], dim: usize, max_block: usize) -> Vec<f32> {
+    let blocks = bwht_blocks(dim, max_block);
+    let padded: usize = blocks.iter().sum();
+    assert_eq!(
+        x.len(),
+        padded,
+        "input must be padded to {padded}, got {}",
+        x.len()
+    );
+    let mut out = x.to_vec();
+    let mut off = 0;
+    for &b in &blocks {
+        wht_sequency(&mut out[off..off + b]);
+        off += b;
+    }
+    out
+}
+
+/// Exact integer blockwise WHT for integer (quantized) inputs.
+pub fn bwht_apply_i64(x: &[i64], dim: usize, max_block: usize) -> Vec<i64> {
+    let blocks = bwht_blocks(dim, max_block);
+    let padded: usize = blocks.iter().sum();
+    assert_eq!(x.len(), padded);
+    let mut out = x.to_vec();
+    let mut off = 0;
+    for &b in &blocks {
+        fast::wht_sequency_i64(&mut out[off..off + b]);
+        off += b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_match_python_convention() {
+        assert_eq!(bwht_blocks(64, 128), vec![64]);
+        assert_eq!(bwht_blocks(256, 128), vec![128, 128]);
+        assert_eq!(bwht_blocks(20, 128), vec![16, 4]);
+        assert_eq!(bwht_blocks(300, 128), vec![128, 128, 32, 8, 4]);
+        assert_eq!(bwht_blocks(5, 128), vec![4, 4]);
+    }
+
+    #[test]
+    fn padded_dim_sums_blocks() {
+        for dim in [1, 3, 5, 20, 64, 129, 300] {
+            assert_eq!(
+                bwht_padded_dim(dim, 128),
+                bwht_blocks(dim, 128).iter().sum::<usize>()
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "max_block")]
+    fn invalid_max_block_panics() {
+        bwht_blocks(10, 24);
+    }
+
+    #[test]
+    fn bwht_apply_matches_matrix_multiply() {
+        let dim = 20;
+        let padded = bwht_padded_dim(dim, 128);
+        let x: Vec<f32> = (0..padded).map(|i| (i as f32) * 0.3 - 2.0).collect();
+        let fast = bwht_apply(&x, dim, 128);
+        // dense block-diagonal multiply
+        let blocks = bwht_blocks(dim, 128);
+        let mut want = vec![0f32; padded];
+        let mut off = 0;
+        for &b in &blocks {
+            let k = b.trailing_zeros() as usize;
+            let w = walsh(k);
+            for i in 0..b {
+                let mut acc = 0f32;
+                for j in 0..b {
+                    acc += w.get(i, j) as f32 * x[off + j];
+                }
+                want[off + i] = acc;
+            }
+            off += b;
+        }
+        for (a, b) in fast.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bwht_apply_i64_exact() {
+        let x: Vec<i64> = (0..16).map(|i| i - 8).collect();
+        let y = bwht_apply_i64(&x, 16, 128);
+        let w = walsh(4);
+        for i in 0..16 {
+            let want: i64 = (0..16).map(|j| w.get(i, j) as i64 * x[j]).sum();
+            assert_eq!(y[i], want);
+        }
+    }
+}

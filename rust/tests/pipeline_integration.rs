@@ -1,0 +1,266 @@
+//! Cross-module integration: nn engine ↔ coordinator ↔ analog simulator.
+
+use repro::analog::crossbar::CrossbarConfig;
+use repro::coordinator::{Coordinator, CoordinatorConfig, TileKind, TransformRequest};
+use repro::energy::EnergyModel;
+use repro::nn::{Backend, BwhtLayer};
+use repro::util::prop;
+use repro::util::rng::Rng;
+use repro::wht;
+
+#[test]
+fn coordinator_digital_equals_nn_quantized_backend_per_tile() {
+    // A width-16 layer forward via (a) the nn quantized backend and
+    // (b) the coordinator tile pool must produce the same frequency-domain
+    // transform (single transform pass, T=0).
+    let mut rng = Rng::seed_from_u64(1);
+    let x: Vec<f32> = (0..16).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let eng = repro::bitplane::QuantBwht::new(16, 16, 8);
+    let direct = eng.transform(&x);
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: 16,
+        ..Default::default()
+    });
+    let pooled = coord
+        .transform(&TransformRequest {
+            x: x.clone(),
+            thresholds_units: vec![0.0; 16],
+        })
+        .unwrap();
+    assert_eq!(direct, pooled);
+    coord.shutdown();
+}
+
+#[test]
+fn analog_tiles_track_digital_at_nominal_vdd() {
+    let x_width = 32;
+    let mut rng = Rng::seed_from_u64(2);
+    let x: Vec<f32> = (0..x_width)
+        .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+        .collect();
+    let run = |kind: TileKind| {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            tile_n: 16,
+            kind,
+            workers: 2,
+            ..Default::default()
+        });
+        let out = c
+            .transform(&TransformRequest {
+                x: x.clone(),
+                thresholds_units: vec![0.0; x_width],
+            })
+            .unwrap();
+        c.shutdown();
+        out
+    };
+    let digital = run(TileKind::Digital);
+    let analog = run(TileKind::Analog {
+        config: CrossbarConfig::new(16, 0.9),
+    });
+    // Exact value equality across all 8 recombined planes is not expected
+    // (near-zero PSUMs flip under comparator noise — that is the ANT
+    // regime of Fig. 11a); what must hold at 0.9 V is that the outputs
+    // track closely in aggregate (Fig. 11b: >95% bit accuracy outside the
+    // safety margin ⇒ high vector correlation).
+    let dot: f64 = digital
+        .iter()
+        .zip(&analog)
+        .map(|(a, b)| *a as f64 * *b as f64)
+        .sum();
+    let na: f64 = digital.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = analog.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    let cos = dot / (na * nb).max(1e-12);
+    // The residual gap is dominated by exactly-balanced PSUMs (digital
+    // convention sign(0)=0; a real comparator resolves them ±1 at random),
+    // not by process variability.
+    assert!(
+        cos > 0.85,
+        "analog/digital correlation too low at 0.9 V: {cos:.3}"
+    );
+}
+
+#[test]
+fn layer_roundtrip_through_coordinator_tiles() {
+    // Full BWHT layer (fwd transform -> S_T -> inverse) where both
+    // transforms run on coordinator tiles; compare against the nn
+    // Quantized backend which uses the same golden arithmetic.
+    let width = 16usize;
+    let mut rng = Rng::seed_from_u64(3);
+    let x: Vec<f32> = (0..width)
+        .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+        .collect();
+    let t = vec![0.1f32; width];
+    let layer = BwhtLayer::new(width, width, t.clone(), width);
+    let want = layer.forward(
+        &x,
+        1,
+        width,
+        width,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+
+    // Manual two-pass through the coordinator.
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: width,
+        ..Default::default()
+    });
+    let norm = 1.0f32 / (width as f32).sqrt();
+    let f1 = coord
+        .transform(&TransformRequest {
+            x: x.clone(),
+            thresholds_units: vec![0.0; width],
+        })
+        .unwrap();
+    let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
+    // soft threshold
+    for (v, th) in freq.iter_mut().zip(&t) {
+        let a = v.abs() - th.abs();
+        *v = if a > 0.0 { v.signum() * a } else { 0.0 };
+    }
+    let f2 = coord
+        .transform(&TransformRequest {
+            x: freq,
+            thresholds_units: vec![0.0; width],
+        })
+        .unwrap();
+    let got: Vec<f32> = f2.iter().map(|v| v * norm).collect();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-5, "elem {i}: {a} vs {b}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn property_early_termination_never_changes_results() {
+    // For ANY input and ANY threshold, ET output == full-run output
+    // passed through the |y| <= T zeroing (soundness at system level).
+    prop::forall(
+        60,
+        7,
+        |r| {
+            let x = prop::vec_f32(r, 16, 2.0);
+            let t = r.uniform_range(0.0, 300.0);
+            (x, t)
+        },
+        |(x, t)| {
+            let mut c_et = Coordinator::new(CoordinatorConfig {
+                tile_n: 16,
+                ..Default::default()
+            });
+            let et = c_et
+                .transform(&TransformRequest {
+                    x: x.clone(),
+                    thresholds_units: vec![*t; 16],
+                })
+                .unwrap();
+            c_et.shutdown();
+            let mut c_full = Coordinator::new(CoordinatorConfig {
+                tile_n: 16,
+                ..Default::default()
+            });
+            let full = c_full
+                .transform(&TransformRequest {
+                    x: x.clone(),
+                    thresholds_units: vec![0.0; 16],
+                })
+                .unwrap();
+            c_full.shutdown();
+            let q = repro::quant::Quantizer::new(8).quantize(x);
+            for i in 0..16 {
+                let units = (full[i] / q.scale).round() as i64;
+                let want = if (units.unsigned_abs() as f64) <= *t {
+                    0.0
+                } else {
+                    full[i]
+                };
+                if et[i] != want {
+                    return Err(format!("elem {i}: et {} vs want {want}", et[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_transform_linearity_of_exact_path() {
+    // The exact (float) blockwise WHT is linear; the quantized path is
+    // not, but must stay within the quantization error envelope.
+    prop::forall(
+        40,
+        11,
+        |r| prop::vec_f32(r, 32, 1.0),
+        |x| {
+            let exact = wht::bwht_apply(x, 32, 16);
+            let eng = repro::bitplane::QuantBwht::new(32, 16, 8);
+            let approx = eng.transform(x);
+            // Envelope: every quantized output is bounded by the max
+            // possible recombined magnitude.
+            let q = eng.quantizer.quantize(x);
+            let bound = q.scale * 255.0 + 1e-4;
+            for (i, a) in approx.iter().enumerate() {
+                if a.abs() > bound {
+                    return Err(format!("elem {i} out of envelope: {a} > {bound}"));
+                }
+            }
+            // And the exact path satisfies Parseval-style energy scaling.
+            let ex: f32 = x.iter().map(|v| v * v).sum();
+            let ef: f32 = exact.iter().map(|v| v * v).sum::<f32>() / 16.0;
+            if (ex - ef).abs() > 0.01 * ex.max(1e-3) {
+                return Err(format!("Parseval violated: {ex} vs {ef}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn serve_et_improves_tops_per_watt() {
+    // System-level Table I story: ET-enabled serving beats no-ET on the
+    // energy model, because Wald-trained thresholds cut executed cycles.
+    let model = EnergyModel::new(16, 0.8);
+    let mut rng = Rng::seed_from_u64(5);
+    let mk_reqs = |rng: &mut Rng, wald: bool| -> Vec<TransformRequest> {
+        (0..64)
+            .map(|_| {
+                let x: Vec<f32> = (0..16).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+                let th = if wald {
+                    (0..16)
+                        .map(|_| {
+                            repro::bitplane::early_term::sample_threshold(
+                                rng,
+                                repro::bitplane::early_term::ThresholdDist::Wald,
+                                1.0,
+                            )
+                            .abs()
+                                * 255.0
+                        })
+                        .collect()
+                } else {
+                    vec![0.0; 16]
+                };
+                TransformRequest {
+                    x,
+                    thresholds_units: th,
+                }
+            })
+            .collect()
+    };
+    let mut c1 = Coordinator::new(CoordinatorConfig::default());
+    c1.transform_batch(&mk_reqs(&mut rng, true)).unwrap();
+    let et = c1.metrics();
+    c1.shutdown();
+    let mut c2 = Coordinator::new(CoordinatorConfig::default());
+    c2.transform_batch(&mk_reqs(&mut rng, false)).unwrap();
+    let no_et = c2.metrics();
+    c2.shutdown();
+    assert!(et.average_cycles() < 2.0, "{}", et.average_cycles());
+    assert!(
+        et.tops_per_watt(&model) > 2.0 * no_et.tops_per_watt(&model),
+        "ET {} vs no-ET {}",
+        et.tops_per_watt(&model),
+        no_et.tops_per_watt(&model)
+    );
+}

@@ -1,0 +1,153 @@
+//! Property-based tests over the substrate invariants (util::prop loops —
+//! proptest is unavailable offline; failures report a reproducing seed).
+
+use repro::quant::Quantizer;
+use repro::util::prop::{self, forall};
+use repro::wht;
+
+#[test]
+fn prop_quantizer_roundtrip_error_bounded() {
+    forall(
+        120,
+        1,
+        |r| {
+            let bits = r.int_range(1, 10) as u32;
+            let len = r.int_range(1, 100) as usize;
+            let x = prop::vec_f32(r, len, 5.0);
+            (bits, x)
+        },
+        |(bits, x)| {
+            let q = Quantizer::new(*bits).quantize(x);
+            for (orig, deq) in x.iter().zip(q.dequantize()) {
+                if (orig - deq).abs() > q.scale / 2.0 + 1e-5 {
+                    return Err(format!("roundtrip error: {orig} vs {deq}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bitplanes_reconstruct_exactly() {
+    forall(
+        120,
+        2,
+        |r| {
+            let bits = r.int_range(1, 12) as u32;
+            let x = prop::vec_f32(r, 32, 3.0);
+            (bits, x)
+        },
+        |(bits, x)| {
+            let q = Quantizer::new(*bits).quantize(x);
+            if q.reconstruct_from_planes() != q.q {
+                return Err("bitplane reconstruction mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wht_involution_and_parseval() {
+    forall(
+        80,
+        3,
+        |r| {
+            let k = r.int_range(1, 8) as usize;
+            prop::vec_f32(r, 1 << k, 2.0)
+        },
+        |x| {
+            let n = x.len() as f32;
+            let mut y = x.clone();
+            wht::wht_sequency(&mut y);
+            // Parseval: ||Wx||^2 = n * ||x||^2
+            let ex: f32 = x.iter().map(|v| v * v).sum();
+            let ey: f32 = y.iter().map(|v| v * v).sum();
+            if (ey - n * ex).abs() > 1e-2 * (n * ex).max(1.0) {
+                return Err(format!("Parseval violated: {ey} vs {}", n * ex));
+            }
+            // Involution: W(Wx) = n x
+            wht::wht_sequency(&mut y);
+            for (a, b) in y.iter().zip(x) {
+                if (a - n * b).abs() > 1e-2 * n.max(1.0) {
+                    return Err(format!("involution violated: {a} vs {}", n * b));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bwht_blocks_always_cover() {
+    forall(
+        200,
+        4,
+        |r| {
+            let dim = r.int_range(1, 5000) as usize;
+            let cap = 1usize << r.int_range(2, 10);
+            (dim, cap)
+        },
+        |(dim, cap)| {
+            let blocks = wht::bwht_blocks(*dim, *cap);
+            let total: usize = blocks.iter().sum();
+            if total < *dim || total >= dim + wht::MIN_BLOCK {
+                return Err(format!("bad cover: dim {dim} -> {total}"));
+            }
+            for &b in &blocks {
+                if !b.is_power_of_two() || b > *cap || b < wht::MIN_BLOCK {
+                    return Err(format!("bad block {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_transform_is_odd_function() {
+    // Eq. 4 is odd: F0(-x) = -F0(x) (sign-magnitude symmetry end to end).
+    forall(
+        60,
+        5,
+        |r| {
+            let bits = r.int_range(1, 8) as u32;
+            (bits, prop::vec_f32(r, 32, 2.0))
+        },
+        |(bits, x)| {
+            let eng = repro::bitplane::QuantBwht::new(32, 16, *bits);
+            let pos = eng.transform(x);
+            let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+            let neg_out = eng.transform(&neg);
+            for (a, b) in pos.iter().zip(&neg_out) {
+                if (a + b).abs() > 1e-5 {
+                    return Err(format!("odd symmetry violated: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_model_monotone_in_vdd_and_positive() {
+    forall(
+        60,
+        6,
+        |r| {
+            let n = 1usize << r.int_range(3, 6);
+            let v1 = r.uniform_range(0.5, 0.9);
+            let v2 = v1 + r.uniform_range(0.01, 0.2);
+            (n, v1, v2)
+        },
+        |(n, v1, v2)| {
+            let e1 = repro::energy::EnergyModel::new(*n, *v1).bitplane_energy_fj();
+            let e2 = repro::energy::EnergyModel::new(*n, *v2).bitplane_energy_fj();
+            if e1 <= 0.0 || e2 <= e1 {
+                return Err(format!("energy not monotone: {e1} vs {e2}"));
+            }
+            Ok(())
+        },
+    );
+}
