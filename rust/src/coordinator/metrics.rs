@@ -5,6 +5,118 @@ use std::time::Duration;
 use crate::bitplane::early_term::CycleStats;
 use crate::energy::EnergyModel;
 
+/// Finite bucket count: upper bounds `1 µs · 2^i` for `i in 0..27`
+/// (covering 1 µs .. ~67 s), plus one +Inf overflow bucket.
+const NUM_FINITE_BUCKETS: usize = 27;
+
+/// Log₂-bucketed latency histogram with quantile estimation.
+///
+/// Fixed-size and allocation-free on the record path, mergeable across
+/// workers — the p50/p95/p99 source for the serving `/metrics` endpoint.
+/// Quantiles are reported as the upper bound of the covering bucket, so
+/// they over-estimate by at most 2×.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; NUM_FINITE_BUCKETS + 1],
+    count: u64,
+    sum_us: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: [0; NUM_FINITE_BUCKETS + 1],
+            count: 0,
+            sum_us: 0,
+        }
+    }
+
+    /// Index of the smallest bucket whose upper bound covers `us`.
+    fn bucket_index(us: u64) -> usize {
+        if us <= 1 {
+            0
+        } else {
+            // ceil(log2(us))
+            ((u64::BITS - (us - 1).leading_zeros()) as usize).min(NUM_FINITE_BUCKETS)
+        }
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.counts[Self::bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound (µs) of bucket `i`, or `None` for the +Inf bucket.
+    pub fn bucket_upper_us(i: usize) -> Option<u64> {
+        (i < NUM_FINITE_BUCKETS).then_some(1u64 << i)
+    }
+
+    /// `(upper_bound_us, cumulative_count)` pairs, Prometheus-style.
+    pub fn cumulative_buckets(&self) -> Vec<(Option<u64>, u64)> {
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                acc += c;
+                (Self::bucket_upper_us(i), acc)
+            })
+            .collect()
+    }
+
+    /// Quantile estimate in µs (upper bound of the covering bucket);
+    /// `f64::INFINITY` when the rank lands in the overflow bucket.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return match Self::bucket_upper_us(i) {
+                    Some(us) => us as f64,
+                    None => f64::INFINITY,
+                };
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Aggregated service metrics.
 #[derive(Debug, Clone)]
 pub struct Metrics {
@@ -18,6 +130,8 @@ pub struct Metrics {
     pub requests: u64,
     /// Total wall-clock busy time across workers.
     pub busy: Duration,
+    /// Per-request worker busy-time distribution.
+    pub latency: LatencyHistogram,
     bits: u32,
 }
 
@@ -29,6 +143,7 @@ impl Metrics {
             row_cycles: 0,
             requests: 0,
             busy: Duration::ZERO,
+            latency: LatencyHistogram::new(),
             bits,
         }
     }
@@ -47,6 +162,7 @@ impl Metrics {
         self.row_cycles += outcome.row_cycles;
         self.requests += 1;
         self.busy += elapsed;
+        self.latency.record(elapsed);
     }
 
     pub fn merge(&mut self, other: &Metrics) {
@@ -55,6 +171,13 @@ impl Metrics {
         self.row_cycles += other.row_cycles;
         self.requests += other.requests;
         self.busy += other.busy;
+        self.latency.merge(&other.latency);
+    }
+
+    /// Row-cycles *not* executed thanks to early termination, relative to
+    /// the no-ET baseline of `bits` cycles per output element.
+    pub fn row_cycles_saved(&self) -> u64 {
+        (self.bits as u64 * self.cycles.total_elements).saturating_sub(self.row_cycles)
     }
 
     /// Modelled energy for the work done (fJ), with the ET digital
@@ -101,6 +224,7 @@ mod tests {
         assert_eq!(m.requests, 1);
         assert_eq!(m.cycles.total_elements, 16);
         assert!(m.row_cycles > 0);
+        assert_eq!(m.latency.count(), 1);
     }
 
     #[test]
@@ -126,5 +250,47 @@ mod tests {
         let t = m.tops_per_watt(&model);
         let want = model.tops_per_watt(8) / (1.0 + crate::energy::ET_OVERHEAD);
         assert!((t - want).abs() / want < 1e-9, "{t} vs {want}");
+    }
+
+    #[test]
+    fn row_cycles_saved_vs_baseline() {
+        let mut m = Metrics::new(8);
+        m.cycles.total_elements = 10;
+        m.row_cycles = 30;
+        assert_eq!(m.row_cycles_saved(), 80 - 30);
+        m.row_cycles = 100; // more than baseline never underflows
+        assert_eq!(m.row_cycles_saved(), 0);
+    }
+
+    #[test]
+    fn latency_histogram_buckets_and_quantiles() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0.0, "empty histogram");
+        for us in [1u64, 1, 1, 1, 100, 100, 100, 5000, 5000, 60_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum_us(), 4 + 300 + 10_000 + 60_000);
+        // p50 covers the 5th sample (100 µs -> bucket bound 128 µs).
+        assert_eq!(h.quantile_us(0.5), 128.0);
+        // p99 covers the last sample (60 ms -> bucket bound 65536 µs).
+        assert_eq!(h.quantile_us(0.99), 65536.0);
+        // cumulative buckets end at the total count with a +Inf bound.
+        let buckets = h.cumulative_buckets();
+        let (last_bound, last_cum) = buckets[buckets.len() - 1];
+        assert_eq!(last_bound, None);
+        assert_eq!(last_cum, 10);
+    }
+
+    #[test]
+    fn latency_histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.sum_us(), 1010);
+        assert!((a.mean_us() - 505.0).abs() < 1e-9);
     }
 }

@@ -18,6 +18,7 @@ pub mod pool;
 pub mod scheduler;
 pub mod tile;
 
-pub use pool::{Coordinator, CoordinatorConfig, TransformRequest};
+pub use metrics::{LatencyHistogram, Metrics};
+pub use pool::{CompletedTransform, Coordinator, CoordinatorConfig, TransformRequest};
 pub use scheduler::{schedule_transform, TransformOutcome};
 pub use tile::{Tile, TileKind};

@@ -16,12 +16,12 @@
 //! deterministic for a fixed (seed, worker count) and workers never
 //! contend on shared state — the hot loop is allocation-light.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
 use super::scheduler::schedule_transform;
@@ -88,6 +88,16 @@ struct TileResult {
     elapsed: std::time::Duration,
 }
 
+/// One completed request from [`Coordinator::drain_one`].
+#[derive(Debug, Clone)]
+pub struct CompletedTransform {
+    pub request_id: u64,
+    /// Outputs at padded width.
+    pub values: Vec<f32>,
+    /// Worker busy time spent on this request.
+    pub busy: std::time::Duration,
+}
+
 /// The leader + worker pool.
 pub struct Coordinator {
     config: CoordinatorConfig,
@@ -95,6 +105,11 @@ pub struct Coordinator {
     result_rx: Receiver<TileResult>,
     workers: Vec<JoinHandle<Metrics>>,
     next_request: u64,
+    /// Requests submitted via [`Coordinator::submit`]/`try_submit` whose
+    /// results have not been drained yet.  The synchronous APIs refuse
+    /// to run while any are outstanding (they would steal each other's
+    /// results off the shared channel).
+    pending_async: usize,
     metrics: Arc<Mutex<Metrics>>,
 }
 
@@ -147,6 +162,7 @@ impl Coordinator {
                     local.row_cycles += row_cycles;
                     local.requests += 1;
                     local.busy += elapsed;
+                    local.latency.record(elapsed);
                     let _ = result_tx.send(TileResult {
                         request_id: job.request_id,
                         values,
@@ -165,6 +181,7 @@ impl Coordinator {
             result_rx,
             workers,
             next_request: 0,
+            pending_async: 0,
             metrics,
         }
     }
@@ -182,18 +199,36 @@ impl Coordinator {
         out
     }
 
-    /// Build the job for one request (padded to the tile width).
-    fn make_job(&mut self, req: &TransformRequest) -> TileJob {
+    /// Validate a request up front, so malformed input is a clean error
+    /// at the submission boundary instead of a worker-side panic.
+    fn validate(req: &TransformRequest) -> Result<()> {
+        if req.x.is_empty() {
+            bail!("transform request has an empty input vector");
+        }
+        if req.thresholds_units.len() != req.x.len() {
+            bail!(
+                "thresholds_units length {} does not match input length {}",
+                req.thresholds_units.len(),
+                req.x.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Build the job for one request (padded to the tile width; padding
+    /// elements carry a zero threshold).
+    fn make_job(&mut self, req: &TransformRequest) -> Result<TileJob> {
+        Self::validate(req)?;
         let x = self.pad(&req.x);
         let mut th = req.thresholds_units.clone();
         th.resize(x.len(), 0.0);
         let id = self.next_request;
         self.next_request += 1;
-        TileJob {
+        Ok(TileJob {
             request_id: id,
             x,
             thresholds: th,
-        }
+        })
     }
 
     /// Record one tile result into the shared metrics.
@@ -204,6 +239,7 @@ impl Coordinator {
         m.row_cycles += r.row_cycles;
         m.requests += 1;
         m.busy += r.elapsed;
+        m.latency.record(r.elapsed);
     }
 
     /// Dispatch jobs and collect exactly `total` results.
@@ -237,10 +273,24 @@ impl Coordinator {
         Ok(results)
     }
 
+    /// Clean error if async submissions are outstanding — the sync APIs
+    /// would otherwise pop the wrong results off the shared channel.
+    fn ensure_no_pending_async(&self) -> Result<()> {
+        if self.pending_async > 0 {
+            bail!(
+                "{} submitted request(s) not yet drained; call drain_one() before \
+                 transform()/transform_batch()",
+                self.pending_async
+            );
+        }
+        Ok(())
+    }
+
     /// Execute one transform request synchronously.  Returns outputs at
     /// padded width.
     pub fn transform(&mut self, req: &TransformRequest) -> Result<Vec<f32>> {
-        let job = self.make_job(req);
+        self.ensure_no_pending_async()?;
+        let job = self.make_job(req)?;
         let id = job.request_id;
         let mut results = self.dispatch_collect(vec![job])?;
         let r = results.pop().expect("one job, one result");
@@ -251,8 +301,12 @@ impl Coordinator {
     /// Execute a batch of requests, pipelining all jobs across the pool
     /// before collecting (the batcher path).
     pub fn transform_batch(&mut self, reqs: &[TransformRequest]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_no_pending_async()?;
         let base = self.next_request;
-        let jobs: Vec<TileJob> = reqs.iter().map(|r| self.make_job(r)).collect();
+        let jobs: Vec<TileJob> = reqs
+            .iter()
+            .map(|r| self.make_job(r))
+            .collect::<Result<_>>()?;
         let results = self.dispatch_collect(jobs)?;
         let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
         for r in results {
@@ -262,9 +316,62 @@ impl Coordinator {
         Ok(outs)
     }
 
+    /// Submit one request without waiting for its result (blocks only
+    /// while the bounded job queue is full).  Pair with
+    /// [`Coordinator::drain_one`].
+    pub fn submit(&mut self, req: &TransformRequest) -> Result<u64> {
+        let job = self.make_job(req)?;
+        let id = job.request_id;
+        self.job_tx
+            .send(job)
+            .map_err(|_| anyhow!("worker pool shut down"))?;
+        self.pending_async += 1;
+        Ok(id)
+    }
+
+    /// Non-blocking submit: returns `Ok(None)` when the bounded queue is
+    /// full, so admission layers can shed load instead of deadlocking
+    /// behind the backpressure limit.
+    pub fn try_submit(&mut self, req: &TransformRequest) -> Result<Option<u64>> {
+        let job = self.make_job(req)?;
+        let id = job.request_id;
+        match self.job_tx.try_send(job) {
+            Ok(()) => {
+                self.pending_async += 1;
+                Ok(Some(id))
+            }
+            Err(TrySendError::Full(_)) => Ok(None),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("worker pool shut down")),
+        }
+    }
+
+    /// Block for the next completed request, folding its stats into the
+    /// shared metrics.  Results arrive in completion order, not submit
+    /// order — correlate via the returned request id.
+    pub fn drain_one(&mut self) -> Result<CompletedTransform> {
+        let r = self
+            .result_rx
+            .recv()
+            .map_err(|_| anyhow!("workers disconnected"))?;
+        self.record(&r);
+        self.pending_async = self.pending_async.saturating_sub(1);
+        Ok(CompletedTransform {
+            request_id: r.request_id,
+            values: r.values,
+            busy: r.elapsed,
+        })
+    }
+
     /// Snapshot of aggregated metrics.
     pub fn metrics(&self) -> Metrics {
         self.metrics.lock().expect("metrics poisoned").clone()
+    }
+
+    /// Shared handle to the live aggregated metrics — lets a serving
+    /// front-end snapshot metrics while another thread owns the
+    /// coordinator itself.
+    pub fn metrics_handle(&self) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.metrics)
     }
 
     /// Shut the pool down and collect per-worker metrics.

@@ -7,7 +7,7 @@
 //! keeps issuing planes while any row is live — mirroring the per-element
 //! cycle accounting of Fig. 9(c).
 
-use crate::bitplane::early_term::{CycleStats, Decision, EarlyTerminator};
+use crate::bitplane::early_term::{CycleStats, Decision, EarlyTerminator, ElementOutcome};
 use crate::quant::Quantizer;
 
 use super::tile::Tile;
@@ -42,6 +42,33 @@ pub fn schedule_transform(
     assert_eq!(x.len(), n);
     assert_eq!(thresholds_units.len(), n);
     let q = Quantizer::new(bits).quantize(x);
+
+    // DAC-free input gating: a block that quantizes to all zeros has an
+    // all-zero plane stream, so on the digital golden model every
+    // comparator reads 0 forever and the output is exactly zero whatever
+    // the thresholds.  The input encoder sees the full bit pattern up
+    // front, so the block retires after a single plane instead of
+    // streaming `bits` silent cycles — the zero-vector serving fast
+    // path.  Digital tiles only: noisy/analog backends flip comparators
+    // on zero PSUMs and must keep consuming their RNG stream.
+    if tile.is_digital() && q.q.iter().all(|&v| v == 0) {
+        let mut stats = CycleStats::new(bits);
+        let outcome = ElementOutcome {
+            cycles: 1,
+            terminated: true,
+            value_units: 0,
+        };
+        for _ in 0..n {
+            stats.record(&outcome);
+        }
+        return TransformOutcome {
+            values: vec![0.0; n],
+            stats,
+            planes_issued: 1,
+            row_cycles: n as u64,
+        };
+    }
+
     let planes = q.bitplanes_msb_first();
 
     let mut terminators: Vec<EarlyTerminator> = thresholds_units
@@ -168,6 +195,17 @@ mod tests {
         assert!(out.row_cycles <= 8 * 16);
         assert!(out.row_cycles >= 16, "every row runs at least one cycle");
         assert_eq!(out.stats.total_elements, 16);
+    }
+
+    #[test]
+    fn zero_block_retires_after_one_plane() {
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let out = schedule_transform(&mut tile, &[0.0; 16], 8, &[0.0; 16]);
+        assert!(out.values.iter().all(|&v| v == 0.0));
+        assert_eq!(out.planes_issued, 1);
+        assert_eq!(out.row_cycles, 16);
+        assert_eq!(out.stats.terminated_early, 16);
+        assert!((out.stats.average_cycles() - 1.0).abs() < 1e-12);
     }
 
     #[test]

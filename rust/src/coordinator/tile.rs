@@ -70,6 +70,12 @@ impl Tile {
         self.n
     }
 
+    /// Whether this tile runs the exact digital golden model (no noise
+    /// sources, no per-plane RNG consumption).
+    pub fn is_digital(&self) -> bool {
+        matches!(self.kind, TileKindInstance::Digital)
+    }
+
     /// Exact integer PSUMs of this tile's Walsh block into the scratch
     /// buffer (shared helper).
     fn psums_into_scratch(&mut self, input: &[i8]) {

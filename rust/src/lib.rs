@@ -6,6 +6,11 @@
 //! every paper table/figure to a module and bench target.
 //!
 //! Layer map:
+//! * **L4 ([`server`])** — the network serving subsystem: a std-only
+//!   HTTP/1.1 front-end with dynamic micro-batching, admission control
+//!   (bounded in-flight + per-client token buckets) and a Prometheus
+//!   `/metrics` endpoint, turning the coordinator into a long-running
+//!   inference service (`repro serve --listen ADDR`).
 //! * **L3 (this crate)** — the coordinator: crossbar tile pool, bitplane
 //!   scheduling with predictive early termination, request batching, plus
 //!   every substrate the paper depends on (Walsh transforms, sign-magnitude
@@ -14,7 +19,9 @@
 //! * **L2/L1 (python/, build-time only)** — the JAX model and Pallas
 //!   kernels, AOT-lowered to `artifacts/*.hlo.txt` and loaded at runtime by
 //!   [`runtime`] through the PJRT C API.  Python never runs on the request
-//!   path.
+//!   path.  The PJRT loader needs the XLA toolchain, so it is gated behind
+//!   the non-default `pjrt` cargo feature; the default build is fully
+//!   offline.
 
 pub mod analog;
 pub mod bitplane;
@@ -23,6 +30,8 @@ pub mod energy;
 pub mod nn;
 pub mod npy;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod util;
 pub mod wht;

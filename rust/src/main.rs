@@ -8,8 +8,14 @@
 //! repro infer     [--weights PATH] [--artifacts DIR] [--backend ...]
 //! repro train     [--artifacts DIR] [--steps N] [--log-every K]
 //! repro serve     [--requests N] [--workers W] [--tile N] [--bits B]
+//!                 [--listen ADDR] [--max-batch N] [--max-wait-us U]
+//!                 [--max-inflight N] [--rate R] [--burst B] [--duration-s S]
 //! repro report    [--vdd V] [--avg-cycles C]
 //! ```
+//!
+//! `serve --listen ADDR` starts the HTTP serving subsystem (dynamic
+//! micro-batching + admission control + /metrics); without `--listen` it
+//! runs the original offline batch benchmark.
 //!
 //! `train` is the end-to-end driver: it loads the AOT `train_step`
 //! artifact via PJRT and trains the BWHT classifier from rust — python
@@ -18,7 +24,9 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{bail, Result};
 
 use repro::analog::crossbar::CrossbarConfig;
 use repro::bitplane::QuantBwht;
@@ -26,7 +34,9 @@ use repro::coordinator::{Coordinator, CoordinatorConfig, TileKind, TransformRequ
 use repro::energy::{table1, EnergyModel};
 use repro::nn::{loader::Weights, Backend, Mlp};
 use repro::npy;
+#[cfg(feature = "pjrt")]
 use repro::runtime::{HostTensor, Runtime};
+use repro::server::{AdmissionConfig, Server, ServerConfig};
 use repro::util::rng::Rng;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -150,7 +160,17 @@ fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Stub when built without the XLA/PJRT toolchain.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_flags: &HashMap<String, String>) -> Result<()> {
+    bail!(
+        "`repro train` needs the PJRT runtime; rebuild with `--features pjrt` \
+         (requires the XLA toolchain)"
+    )
+}
+
 /// The E2E driver: PJRT-load train_step, train from rust, report.
+#[cfg(feature = "pjrt")]
 fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     let dir = flags
         .get("artifacts")
@@ -236,7 +256,55 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Network mode: a long-running HTTP service over the coordinator.
+fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let config = ServerConfig {
+        listen: listen.to_string(),
+        coordinator: CoordinatorConfig {
+            tile_n: flag(flags, "tile", 16),
+            bits: flag(flags, "bits", 8),
+            workers: flag(flags, "workers", 4),
+            seed: flag(flags, "seed", 0),
+            kind: TileKind::Digital,
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            max_inflight: flag(flags, "max-inflight", 256),
+            rate_per_sec: flag(flags, "rate", 0.0),
+            burst: flag(flags, "burst", 32.0),
+        },
+        max_batch: flag(flags, "max-batch", 32),
+        max_wait_us: flag(flags, "max-wait-us", 200),
+        max_connections: flag(flags, "max-connections", 512),
+        vdd: flag(flags, "vdd", 0.8),
+        ..Default::default()
+    };
+    let duration_s: u64 = flag(flags, "duration-s", 0);
+    let server = Server::start(config)?;
+    println!("repro serve listening on http://{}", server.addr);
+    println!("  POST /v1/transform  {{\"x\": [...], \"thresholds\": [...]}}");
+    println!("  GET  /metrics       Prometheus text format");
+    println!("  GET  /healthz       liveness probe");
+    if duration_s == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration_s));
+    let m = server.shutdown();
+    println!(
+        "served {} requests | avg bitplane cycles {:.2} | worker p50 {:.0} us",
+        m.requests,
+        m.average_cycles(),
+        m.latency.quantile_us(0.5)
+    );
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    if let Some(listen) = flags.get("listen") {
+        return cmd_serve_network(listen, flags);
+    }
     let requests: usize = flag(flags, "requests", 1000);
     let workers: usize = flag(flags, "workers", 4);
     let tile: usize = flag(flags, "tile", 16);
@@ -353,8 +421,11 @@ USAGE: repro <SUBCOMMAND> [flags]
 SUBCOMMANDS:
   transform   run one BWHT transform through the coordinator
   infer       evaluate exported MLP weights on the test set
-  train       E2E: train via the PJRT train_step artifact (no python)
-  serve       batch-serve transform requests; report throughput + TOPS/W
+  train       E2E: train via the PJRT train_step artifact (no python;
+              needs a build with --features pjrt)
+  serve       --listen ADDR: HTTP service with dynamic batching,
+              admission control and a Prometheus /metrics endpoint;
+              without --listen: offline batch throughput benchmark
   report      energy model: Table I, Fig. 12 power breakdown
   help        this text
 ";

@@ -1,0 +1,277 @@
+//! Admission control: bounded in-flight limit + per-client token buckets.
+//!
+//! Sits in front of the batcher so overload is shed in microseconds with
+//! a 429 instead of queueing without bound behind the coordinator's
+//! backpressure.  Two independent gates:
+//!
+//! * a server-wide **in-flight cap** (requests between admission and
+//!   reply), the fast-shed layer on top of the pool's bounded queues;
+//! * a **per-client token bucket** (keyed by peer IP) for steady-state
+//!   rate limiting with a configurable burst allowance.
+
+use std::collections::HashMap;
+use std::net::IpAddr;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Admission policy knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Maximum requests between admission and reply; 0 disables the cap.
+    pub max_inflight: usize,
+    /// Per-client steady-state requests/sec; 0.0 disables rate limiting.
+    pub rate_per_sec: f64,
+    /// Per-client burst allowance (token bucket capacity).
+    pub burst: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_inflight: 256,
+            rate_per_sec: 0.0,
+            burst: 32.0,
+        }
+    }
+}
+
+/// Cap on tracked client buckets; hitting it sweeps out every bucket
+/// that has fully refilled (it carries no rate-limiting state worth
+/// keeping), so memory is bounded by *actively limited* clients.
+const MAX_TRACKED_CLIENTS: usize = 4096;
+
+/// Why a request was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// The server-wide in-flight cap is reached.
+    Overloaded,
+    /// This client exhausted its token bucket.
+    RateLimited,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn take(&mut self, now: Instant, rate: f64, burst: f64) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * rate).min(burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Shared admission state (one per server).
+#[derive(Debug)]
+pub struct Admission {
+    config: AdmissionConfig,
+    inflight: AtomicUsize,
+    buckets: Mutex<HashMap<IpAddr, TokenBucket>>,
+    admitted: AtomicU64,
+    shed_overload: AtomicU64,
+    shed_rate: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(config: AdmissionConfig) -> Admission {
+        Admission {
+            config,
+            inflight: AtomicUsize::new(0),
+            buckets: Mutex::new(HashMap::new()),
+            admitted: AtomicU64::new(0),
+            shed_overload: AtomicU64::new(0),
+            shed_rate: AtomicU64::new(0),
+        }
+    }
+
+    /// Try to admit a request from `client`.  On success the returned
+    /// permit holds an in-flight slot until dropped.  A rate-limit
+    /// rejection after the token was the last gate does not refund — the
+    /// bucket models work the client asked the server to consider.
+    pub fn try_acquire(
+        &self,
+        client: IpAddr,
+        now: Instant,
+    ) -> Result<InflightPermit<'_>, Rejection> {
+        if self.config.rate_per_sec > 0.0 {
+            let mut buckets = self.buckets.lock().expect("bucket map poisoned");
+            if buckets.len() >= MAX_TRACKED_CLIENTS && !buckets.contains_key(&client) {
+                let rate = self.config.rate_per_sec;
+                let burst = self.config.burst;
+                buckets.retain(|_, b| {
+                    let dt = now.saturating_duration_since(b.last).as_secs_f64();
+                    b.tokens + dt * rate < burst
+                });
+            }
+            let bucket = buckets.entry(client).or_insert_with(|| TokenBucket {
+                tokens: self.config.burst,
+                last: now,
+            });
+            if !bucket.take(now, self.config.rate_per_sec, self.config.burst) {
+                self.shed_rate.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejection::RateLimited);
+            }
+        }
+        let counted = self.config.max_inflight > 0;
+        if counted {
+            let acquired = self
+                .inflight
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                    (v < self.config.max_inflight).then_some(v + 1)
+                })
+                .is_ok();
+            if !acquired {
+                self.shed_overload.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejection::Overloaded);
+            }
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(InflightPermit {
+            admission: self,
+            counted,
+        })
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_overload_total(&self) -> u64 {
+        self.shed_overload.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_ratelimited_total(&self) -> u64 {
+        self.shed_rate.load(Ordering::Relaxed)
+    }
+
+    /// Client buckets currently tracked by the rate limiter.
+    pub fn tracked_clients(&self) -> usize {
+        self.buckets.lock().expect("bucket map poisoned").len()
+    }
+}
+
+/// RAII in-flight slot; dropping it releases the slot.
+#[derive(Debug)]
+pub struct InflightPermit<'a> {
+    admission: &'a Admission,
+    counted: bool,
+}
+
+impl Drop for InflightPermit<'_> {
+    fn drop(&mut self) {
+        if self.counted {
+            self.admission.inflight.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::Ipv4Addr;
+    use std::time::Duration;
+
+    fn ip(last: u8) -> IpAddr {
+        IpAddr::V4(Ipv4Addr::new(127, 0, 0, last))
+    }
+
+    #[test]
+    fn inflight_cap_sheds_and_releases() {
+        let adm = Admission::new(AdmissionConfig {
+            max_inflight: 2,
+            rate_per_sec: 0.0,
+            burst: 1.0,
+        });
+        let now = Instant::now();
+        let p1 = adm.try_acquire(ip(1), now).unwrap();
+        let _p2 = adm.try_acquire(ip(1), now).unwrap();
+        assert_eq!(adm.inflight(), 2);
+        assert_eq!(adm.try_acquire(ip(1), now).unwrap_err(), Rejection::Overloaded);
+        assert_eq!(adm.shed_overload_total(), 1);
+        drop(p1);
+        assert_eq!(adm.inflight(), 1);
+        let _p3 = adm.try_acquire(ip(1), now).unwrap();
+        assert_eq!(adm.admitted_total(), 3);
+    }
+
+    #[test]
+    fn token_bucket_limits_burst_then_refills() {
+        let adm = Admission::new(AdmissionConfig {
+            max_inflight: 0,
+            rate_per_sec: 10.0,
+            burst: 2.0,
+        });
+        let t0 = Instant::now();
+        assert!(adm.try_acquire(ip(1), t0).is_ok());
+        assert!(adm.try_acquire(ip(1), t0).is_ok());
+        assert_eq!(adm.try_acquire(ip(1), t0).unwrap_err(), Rejection::RateLimited);
+        assert_eq!(adm.shed_ratelimited_total(), 1);
+        // 10 req/s -> one token back after 100 ms.
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(adm.try_acquire(ip(1), t1).is_ok());
+        assert_eq!(adm.try_acquire(ip(1), t1).unwrap_err(), Rejection::RateLimited);
+    }
+
+    #[test]
+    fn buckets_are_per_client() {
+        let adm = Admission::new(AdmissionConfig {
+            max_inflight: 0,
+            rate_per_sec: 1.0,
+            burst: 1.0,
+        });
+        let now = Instant::now();
+        assert!(adm.try_acquire(ip(1), now).is_ok());
+        assert_eq!(adm.try_acquire(ip(1), now).unwrap_err(), Rejection::RateLimited);
+        assert!(adm.try_acquire(ip(2), now).is_ok(), "other clients unaffected");
+    }
+
+    #[test]
+    fn bucket_map_is_swept_at_the_client_cap() {
+        let adm = Admission::new(AdmissionConfig {
+            max_inflight: 0,
+            rate_per_sec: 1.0,
+            burst: 1.0,
+        });
+        let t0 = Instant::now();
+        for i in 0..MAX_TRACKED_CLIENTS as u32 {
+            let client = IpAddr::V4(Ipv4Addr::from(0x0a00_0000u32 + i));
+            let _ = adm.try_acquire(client, t0);
+        }
+        assert_eq!(adm.tracked_clients(), MAX_TRACKED_CLIENTS);
+        // Two seconds later every bucket has refilled to burst, so a new
+        // client triggers a sweep instead of unbounded growth.
+        let t1 = t0 + Duration::from_secs(2);
+        let fresh = IpAddr::V4(Ipv4Addr::new(192, 168, 0, 1));
+        assert!(adm.try_acquire(fresh, t1).is_ok());
+        assert_eq!(adm.tracked_clients(), 1, "refilled buckets evicted");
+    }
+
+    #[test]
+    fn disabled_gates_admit_everything() {
+        let adm = Admission::new(AdmissionConfig {
+            max_inflight: 0,
+            rate_per_sec: 0.0,
+            burst: 0.0,
+        });
+        let now = Instant::now();
+        let permits: Vec<_> = (0..64)
+            .map(|_| adm.try_acquire(ip(1), now).unwrap())
+            .collect();
+        assert_eq!(adm.inflight(), 0, "uncounted when the cap is disabled");
+        drop(permits);
+        assert_eq!(adm.admitted_total(), 64);
+    }
+}

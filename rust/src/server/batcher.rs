@@ -1,0 +1,249 @@
+//! Dynamic micro-batching over the coordinator.
+//!
+//! One batcher thread owns the [`Coordinator`].  It blocks for the first
+//! pending request, keeps collecting until `max_batch` requests are in
+//! hand or `max_wait` has elapsed, dispatches the whole batch across the
+//! worker pool in one [`Coordinator::transform_batch`] call (so tile
+//! utilization stays high under bursty concurrent load), then fans the
+//! replies back out over per-request channels.
+//!
+//! Under a backlog the `recv_timeout` calls return instantly, so deep
+//! batches form with no added latency; on an idle server a lone request
+//! pays at most `max_wait` of coalescing delay.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, Metrics, TransformRequest};
+
+use super::ServerState;
+
+/// One queued request: payload plus its reply channel.
+pub struct BatchItem {
+    pub req: TransformRequest,
+    pub reply: Sender<Result<BatchReply, String>>,
+    pub enqueued: Instant,
+}
+
+/// Successful per-request outcome.
+#[derive(Debug, Clone)]
+pub struct BatchReply {
+    /// Transform outputs at padded width.
+    pub values: Vec<f32>,
+    /// Queue + execution latency as observed by the batcher.
+    pub latency: Duration,
+}
+
+/// Run the batching loop until every [`BatchItem`] sender is dropped,
+/// then shut the pool down and return the merged worker metrics.
+///
+/// Items older than `stale_after` (the HTTP handler's reply timeout)
+/// are dropped instead of executed: their client already gave up, and
+/// skipping them lets an overload backlog drain at channel speed
+/// instead of pool-execution speed — no congestion collapse.
+pub(crate) fn run_batcher(
+    rx: Receiver<BatchItem>,
+    mut coord: Coordinator,
+    max_batch: usize,
+    max_wait: Duration,
+    stale_after: Duration,
+    state: Arc<ServerState>,
+) -> Metrics {
+    while let Ok(first) = rx.recv() {
+        let mut batch = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < max_batch {
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                break;
+            };
+            match rx.recv_timeout(remaining) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let now = Instant::now();
+        let before = batch.len();
+        batch.retain(|item| now.saturating_duration_since(item.enqueued) < stale_after);
+        let dropped = (before - batch.len()) as u64;
+        if dropped > 0 {
+            // Dropping the reply sender wakes any still-blocked handler
+            // with a disconnect, which it reports as a 504.
+            state.stale_dropped_total.fetch_add(dropped, Ordering::Relaxed);
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        state.batches_total.fetch_add(1, Ordering::Relaxed);
+        // Move the payloads out instead of cloning them — the only copy
+        // left on the dispatch path is the coordinator's own padding.
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut waiters = Vec::with_capacity(batch.len());
+        for item in batch {
+            reqs.push(item.req);
+            waiters.push((item.reply, item.enqueued));
+        }
+        match coord.transform_batch(&reqs) {
+            Ok(outputs) => {
+                for ((reply, enqueued), values) in waiters.into_iter().zip(outputs) {
+                    let latency = enqueued.elapsed();
+                    state.record_latency(latency);
+                    let _ = reply.send(Ok(BatchReply { values, latency }));
+                }
+            }
+            Err(e) => {
+                // Requests are validated before enqueueing, so this is a
+                // pool-level failure: report it to every waiter.
+                let msg = format!("batch execution failed: {e}");
+                for (reply, _) in waiters {
+                    let _ = reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    coord.shutdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::QuantBwht;
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
+    use crate::energy::EnergyModel;
+    use crate::server::admission::AdmissionConfig;
+    use std::sync::mpsc;
+
+    #[test]
+    fn coalesces_a_queued_burst_into_one_batch_and_fans_out() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            coord.metrics_handle(),
+            EnergyModel::new(16, 0.8),
+        ));
+        let (tx, rx) = mpsc::channel();
+        // Enqueue the whole burst before the batcher runs, so coalescing
+        // is deterministic: one batch of six.
+        let mut waiters = Vec::new();
+        for i in 0..6u64 {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let x: Vec<f32> = (0..16).map(|j| ((i * 16 + j) as f32 * 0.1).sin()).collect();
+            tx.send(BatchItem {
+                req: TransformRequest {
+                    x: x.clone(),
+                    thresholds_units: vec![0.0; 16],
+                },
+                reply: reply_tx,
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+            waiters.push((x, reply_rx));
+        }
+        drop(tx);
+        let metrics = run_batcher(
+            rx,
+            coord,
+            8,
+            Duration::from_millis(5),
+            Duration::from_secs(5),
+            Arc::clone(&state),
+        );
+        for (x, reply_rx) in waiters {
+            let reply = reply_rx.recv().unwrap().unwrap();
+            let golden = QuantBwht::new(16, 16, 8).transform(&x);
+            assert_eq!(reply.values, golden);
+        }
+        assert_eq!(metrics.requests, 6);
+        assert_eq!(
+            state.batches_total.load(Ordering::Relaxed),
+            1,
+            "a queued burst must coalesce into a single batch"
+        );
+        assert_eq!(state.e2e_latency.lock().unwrap().count(), 6);
+    }
+
+    #[test]
+    fn max_batch_splits_oversized_bursts() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            coord.metrics_handle(),
+            EnergyModel::new(16, 0.8),
+        ));
+        let (tx, rx) = mpsc::channel();
+        let mut waiters = Vec::new();
+        for _ in 0..5 {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(BatchItem {
+                req: TransformRequest {
+                    x: vec![0.5; 16],
+                    thresholds_units: vec![0.0; 16],
+                },
+                reply: reply_tx,
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+            waiters.push(reply_rx);
+        }
+        drop(tx);
+        let metrics = run_batcher(
+            rx,
+            coord,
+            2,
+            Duration::from_millis(5),
+            Duration::from_secs(5),
+            Arc::clone(&state),
+        );
+        for reply_rx in waiters {
+            assert!(reply_rx.recv().unwrap().is_ok());
+        }
+        assert_eq!(metrics.requests, 5);
+        assert_eq!(
+            state.batches_total.load(Ordering::Relaxed),
+            3,
+            "5 queued requests at max_batch=2 -> 2+2+1"
+        );
+    }
+
+    #[test]
+    fn stale_items_are_dropped_not_executed() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            coord.metrics_handle(),
+            EnergyModel::new(16, 0.8),
+        ));
+        let (tx, rx) = mpsc::channel();
+        let mut waiters = Vec::new();
+        for _ in 0..3 {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(BatchItem {
+                req: TransformRequest {
+                    x: vec![0.5; 16],
+                    thresholds_units: vec![0.0; 16],
+                },
+                reply: reply_tx,
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+            waiters.push(reply_rx);
+        }
+        drop(tx);
+        // stale_after = 0: everything is already expired at dispatch.
+        let metrics = run_batcher(
+            rx,
+            coord,
+            8,
+            Duration::from_millis(5),
+            Duration::ZERO,
+            Arc::clone(&state),
+        );
+        assert_eq!(metrics.requests, 0, "stale work must not reach the pool");
+        assert_eq!(state.stale_dropped_total.load(Ordering::Relaxed), 3);
+        assert_eq!(state.batches_total.load(Ordering::Relaxed), 0);
+        for reply_rx in waiters {
+            assert!(reply_rx.recv().is_err(), "reply sender must be dropped");
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Minimal hand-rolled HTTP/1.1 parsing and response writing.
+//!
+//! The build box is offline, so no hyper/axum: this implements exactly
+//! the subset the serving subsystem needs — one request per connection
+//! (`Connection: close`), `Content-Length`-framed bodies, header lookup,
+//! and deterministic wire formatting.  Keep-alive connection pooling is
+//! a ROADMAP open item.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Hard cap on accepted bodies (JSON transform requests are small).
+pub const MAX_BODY_BYTES: usize = 4 << 20;
+/// Hard cap on the total header block.
+const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Header names are lower-cased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        Ok(std::str::from_utf8(&self.body)?)
+    }
+}
+
+/// Read one `\n`-terminated line, erroring (instead of buffering without
+/// bound) once it exceeds `limit` bytes.  `Ok(None)` on immediate EOF.
+fn read_bounded_line<R: BufRead>(reader: &mut R, limit: usize) -> Result<Option<String>> {
+    let mut line = String::new();
+    let n = reader.by_ref().take(limit as u64 + 1).read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > limit {
+        bail!("line longer than {limit} bytes");
+    }
+    Ok(Some(line))
+}
+
+/// Read one request from the stream.  Returns `Ok(None)` on a clean EOF
+/// before any bytes (the peer closed an idle connection).
+pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
+    let Some(line) = read_bounded_line(reader, MAX_HEADER_BYTES)? else {
+        return Ok(None);
+    };
+    let request_line = line.trim_end();
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        bail!("malformed request line {request_line:?}");
+    };
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol {version}");
+    }
+
+    let mut headers = Vec::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let Some(h) = read_bounded_line(reader, MAX_HEADER_BYTES)? else {
+            bail!("connection closed inside the header block");
+        };
+        header_bytes += h.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            bail!("header block larger than {MAX_HEADER_BYTES} bytes");
+        }
+        let trimmed = h.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        let Some((name, value)) = trimmed.split_once(':') else {
+            bail!("malformed header line {trimmed:?}");
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse())
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY_BYTES {
+        bail!("body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte limit");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+
+    Ok(Some(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
+}
+
+/// One response, serialized by [`Response::write_to`].
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    pub extra_headers: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.as_bytes().to_vec(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.extra_headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn write_to<W: Write>(&self, writer: &mut W) -> std::io::Result<()> {
+        write!(
+            writer,
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            reason(self.status)
+        )?;
+        write!(writer, "Content-Type: {}\r\n", self.content_type)?;
+        write!(writer, "Content-Length: {}\r\n", self.body.len())?;
+        write!(writer, "Connection: close\r\n")?;
+        for (name, value) in &self.extra_headers {
+            write!(writer, "{name}: {value}\r\n")?;
+        }
+        writer.write_all(b"\r\n")?;
+        writer.write_all(&self.body)?;
+        writer.flush()
+    }
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            "POST /v1/transform HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/transform");
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"abcd".to_vec());
+        assert_eq!(req.body_str().unwrap(), "abcd");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_request_line() {
+        assert!(parse("GETS-NO-PATH\r\n\r\n").is_err());
+        assert!(parse("GET / SMTP/1.0\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body_and_oversized_length() {
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 1 << 30);
+        assert!(parse(&huge).is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_oversized_lines() {
+        // A newline-free flood must error at the cap, not buffer forever.
+        let flood = "A".repeat(64 << 10);
+        assert!(parse(&flood).is_err());
+        let header_flood = format!("GET / HTTP/1.1\r\nX-Junk: {flood}\r\n\r\n");
+        assert!(parse(&header_flood).is_err());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        Response::text(200, "ok\n")
+            .with_header("Retry-After", "1")
+            .write_to(&mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 3\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.ends_with("\r\n\r\nok\n"));
+    }
+
+    #[test]
+    fn json_response_round_trips() {
+        let body = crate::util::json::parse(r#"{"y":[1,2]}"#).unwrap();
+        let resp = Response::json(200, &body);
+        assert_eq!(resp.content_type, "application/json");
+        let parsed = crate::util::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(parsed, body);
+    }
+}

@@ -1,0 +1,266 @@
+//! Prometheus-text-format rendering of the serving metrics.
+//!
+//! Exposes the coordinator's cycle/energy accounting (row-cycles, planes
+//! issued, early-termination savings, modelled TOPS/W from the
+//! [`crate::energy::EnergyModel`]) alongside the HTTP layer's admission
+//! counters and latency histograms with p50/p95/p99 gauges.
+
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::LatencyHistogram;
+
+use super::ServerState;
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn counter_u64(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+fn counter_f64(out: &mut String, name: &str, help: &str, value: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {}", fmt_f64(value));
+}
+
+fn gauge_f64(out: &mut String, name: &str, help: &str, value: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {}", fmt_f64(value));
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, hist: &LatencyHistogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (bound, cumulative) in hist.cumulative_buckets() {
+        let le = match bound {
+            Some(us) => fmt_f64(us as f64 * 1e-6),
+            None => "+Inf".to_string(),
+        };
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cumulative}");
+    }
+    let _ = writeln!(out, "{name}_sum {}", fmt_f64(hist.sum_us() as f64 * 1e-6));
+    let _ = writeln!(out, "{name}_count {}", hist.count());
+    for (suffix, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+        gauge_f64(
+            out,
+            &format!("{name}_{suffix}"),
+            &format!("Estimated {suffix} of {name} (upper bucket bound)."),
+            hist.quantile_us(q) * 1e-6,
+        );
+    }
+}
+
+/// Render the full exposition document.
+pub(crate) fn render(state: &ServerState) -> String {
+    let coord = state.coord_metrics.lock().expect("metrics poisoned").clone();
+    let e2e = state.e2e_latency.lock().expect("latency poisoned").clone();
+    let mut out = String::new();
+
+    // Coordinator / accelerator accounting.
+    counter_u64(
+        &mut out,
+        "repro_requests_total",
+        "Transform requests completed by the coordinator.",
+        coord.requests,
+    );
+    counter_u64(
+        &mut out,
+        "repro_planes_issued_total",
+        "Tile-level bitplane operations issued.",
+        coord.planes_issued,
+    );
+    counter_u64(
+        &mut out,
+        "repro_row_cycles_total",
+        "Row-cycles executed (energy-relevant granularity).",
+        coord.row_cycles,
+    );
+    counter_u64(
+        &mut out,
+        "repro_row_cycles_saved_total",
+        "Row-cycles skipped by predictive early termination vs the no-ET baseline.",
+        coord.row_cycles_saved(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_elements_total",
+        "Output elements produced.",
+        coord.cycles.total_elements,
+    );
+    counter_u64(
+        &mut out,
+        "repro_elements_terminated_early_total",
+        "Output elements that terminated before their last bitplane.",
+        coord.cycles.terminated_early,
+    );
+    gauge_f64(
+        &mut out,
+        "repro_avg_bitplane_cycles",
+        "Average executed bitplane cycles per output element (paper Fig. 9c).",
+        coord.average_cycles(),
+    );
+    counter_f64(
+        &mut out,
+        "repro_energy_femtojoules_total",
+        "Modelled crossbar energy for the work served (fJ).",
+        coord.energy_fj(&state.energy),
+    );
+    gauge_f64(
+        &mut out,
+        "repro_tops_per_watt",
+        "Effective TOPS/W of the work served (paper Table I headline).",
+        coord.tops_per_watt(&state.energy),
+    );
+    counter_f64(
+        &mut out,
+        "repro_worker_busy_seconds_total",
+        "Cumulative worker busy time across the tile pool.",
+        coord.busy.as_secs_f64(),
+    );
+
+    // HTTP front-end counters.
+    counter_u64(
+        &mut out,
+        "repro_http_requests_ok_total",
+        "Transform requests answered with 200.",
+        state.requests_ok.load(Ordering::Relaxed),
+    );
+    counter_u64(
+        &mut out,
+        "repro_http_bad_requests_total",
+        "Requests rejected with 400 (malformed payloads).",
+        state.bad_requests.load(Ordering::Relaxed),
+    );
+    counter_u64(
+        &mut out,
+        "repro_http_admitted_total",
+        "Requests admitted past admission control.",
+        state.admission.admitted_total(),
+    );
+    let _ = writeln!(
+        out,
+        "# HELP repro_http_shed_total Requests shed with 429 by admission control."
+    );
+    let _ = writeln!(out, "# TYPE repro_http_shed_total counter");
+    let _ = writeln!(
+        out,
+        "repro_http_shed_total{{reason=\"overload\"}} {}",
+        state.admission.shed_overload_total()
+    );
+    let _ = writeln!(
+        out,
+        "repro_http_shed_total{{reason=\"rate_limited\"}} {}",
+        state.admission.shed_ratelimited_total()
+    );
+    gauge_f64(
+        &mut out,
+        "repro_inflight_requests",
+        "Requests currently between admission and reply.",
+        state.admission.inflight() as f64,
+    );
+    counter_u64(
+        &mut out,
+        "repro_batches_total",
+        "Micro-batches dispatched into the coordinator.",
+        state.batches_total.load(Ordering::Relaxed),
+    );
+    counter_u64(
+        &mut out,
+        "repro_stale_dropped_total",
+        "Queued requests dropped because their client timed out first.",
+        state.stale_dropped_total.load(Ordering::Relaxed),
+    );
+    gauge_f64(
+        &mut out,
+        "repro_open_connections",
+        "Currently open HTTP connections.",
+        state.connections.load(Ordering::Relaxed) as f64,
+    );
+    gauge_f64(
+        &mut out,
+        "repro_ratelimit_tracked_clients",
+        "Client token buckets currently tracked by the rate limiter.",
+        state.admission.tracked_clients() as f64,
+    );
+
+    // Latency distributions.
+    histogram(
+        &mut out,
+        "repro_request_latency_seconds",
+        "End-to-end request latency (enqueue to reply fan-out).",
+        &e2e,
+    );
+    histogram(
+        &mut out,
+        "repro_worker_latency_seconds",
+        "Per-request worker busy time inside the tile pool.",
+        &coord.latency,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+    use crate::energy::EnergyModel;
+    use crate::server::admission::AdmissionConfig;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn metric_value(text: &str, name: &str) -> f64 {
+        text.lines()
+            .find_map(|line| {
+                let rest = line.strip_prefix(name)?;
+                let rest = rest.strip_prefix(' ')?;
+                rest.trim().parse::<f64>().ok()
+            })
+            .unwrap_or(f64::NAN)
+    }
+
+    #[test]
+    fn renders_live_coordinator_state() {
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            coord.metrics_handle(),
+            EnergyModel::new(16, 0.8),
+        ));
+        // One full-precision request and one that early-terminates.
+        let x: Vec<f32> = (0..16).map(|i| ((i + 1) as f32 * 0.21).sin()).collect();
+        coord
+            .transform(&TransformRequest {
+                x: x.clone(),
+                thresholds_units: vec![0.0; 16],
+            })
+            .unwrap();
+        coord
+            .transform(&TransformRequest {
+                x,
+                thresholds_units: vec![1e9; 16],
+            })
+            .unwrap();
+        state.record_latency(Duration::from_micros(300));
+        coord.shutdown();
+
+        let text = render(&state);
+        assert_eq!(metric_value(&text, "repro_requests_total"), 2.0, "{text}");
+        assert!(metric_value(&text, "repro_row_cycles_saved_total") > 0.0);
+        assert!(metric_value(&text, "repro_tops_per_watt") > 0.0);
+        assert!(metric_value(&text, "repro_request_latency_seconds_p50") > 0.0);
+        assert!(metric_value(&text, "repro_request_latency_seconds_p99") > 0.0);
+        assert!(text.contains("# TYPE repro_request_latency_seconds histogram"));
+        assert!(text.contains("repro_request_latency_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("repro_http_shed_total{reason=\"overload\"} 0"));
+    }
+}

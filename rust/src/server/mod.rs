@@ -1,0 +1,419 @@
+//! L4 network serving subsystem: an std-only HTTP/1.1 front-end that
+//! turns the leader-worker [`Coordinator`] into a long-running inference
+//! service (`repro serve --listen ADDR`).
+//!
+//! ```text
+//!   clients ──▶ accept loop (thread per connection)
+//!                  │  admission control: in-flight cap + token buckets
+//!                  ▼
+//!              dynamic micro-batcher (max_batch / max_wait coalescing)
+//!                  │  one transform_batch() per coalesced batch
+//!                  ▼
+//!              Coordinator worker pool ──▶ per-request reply channels
+//! ```
+//!
+//! Endpoints:
+//! * `POST /v1/transform` — `{"x": [...], "thresholds": [...]}` →
+//!   `{"y": [...], "padded_dim": N, "latency_us": L}`;
+//! * `GET /metrics` — Prometheus text format (cycle/energy accounting,
+//!   admission counters, p50/p95/p99 latency);
+//! * `GET /healthz` — liveness probe.
+//!
+//! Everything is `std`-only (the build box is offline): hand-rolled HTTP
+//! in [`http`], batching in [`batcher`], shedding in [`admission`] and
+//! the exposition format in [`metrics_export`].
+
+pub mod admission;
+pub mod batcher;
+pub mod http;
+pub mod metrics_export;
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, LatencyHistogram, Metrics, TransformRequest,
+};
+use crate::energy::EnergyModel;
+use crate::util::json::{self, Json};
+
+use admission::Admission;
+pub use admission::{AdmissionConfig, Rejection};
+use batcher::BatchItem;
+pub use batcher::BatchReply;
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` for an ephemeral port).
+    pub listen: String,
+    /// Tile pool configuration.
+    pub coordinator: CoordinatorConfig,
+    /// Admission-control policy.
+    pub admission: AdmissionConfig,
+    /// Micro-batching: dispatch when this many requests are pending...
+    pub max_batch: usize,
+    /// ...or when the oldest has waited this long (µs).
+    pub max_wait_us: u64,
+    /// Largest accepted input width.
+    pub max_dim: usize,
+    /// Concurrent-connection cap (slowloris guard; excess gets 503).
+    pub max_connections: usize,
+    /// Supply voltage for the `/metrics` energy model.
+    pub vdd: f64,
+    /// How long a connection waits for its batch reply; older work is
+    /// dropped by the batcher instead of executed.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:8080".to_string(),
+            coordinator: CoordinatorConfig::default(),
+            admission: AdmissionConfig::default(),
+            max_batch: 32,
+            max_wait_us: 200,
+            max_dim: 1 << 16,
+            max_connections: 512,
+            vdd: 0.8,
+            request_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// State shared between the accept loop, connection handlers, the
+/// batcher and the metrics exporter.
+pub(crate) struct ServerState {
+    pub admission: Admission,
+    pub e2e_latency: Mutex<LatencyHistogram>,
+    pub coord_metrics: Arc<Mutex<Metrics>>,
+    pub energy: EnergyModel,
+    pub batches_total: AtomicU64,
+    pub requests_ok: AtomicU64,
+    pub bad_requests: AtomicU64,
+    /// Items the batcher discarded because their client timed out.
+    pub stale_dropped_total: AtomicU64,
+    /// Currently open connections (slowloris guard).
+    pub connections: AtomicUsize,
+}
+
+impl ServerState {
+    pub(crate) fn new(
+        admission: AdmissionConfig,
+        coord_metrics: Arc<Mutex<Metrics>>,
+        energy: EnergyModel,
+    ) -> ServerState {
+        ServerState {
+            admission: Admission::new(admission),
+            e2e_latency: Mutex::new(LatencyHistogram::new()),
+            coord_metrics,
+            energy,
+            batches_total: AtomicU64::new(0),
+            requests_ok: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            stale_dropped_total: AtomicU64::new(0),
+            connections: AtomicUsize::new(0),
+        }
+    }
+
+    pub(crate) fn record_latency(&self, latency: Duration) {
+        self.e2e_latency
+            .lock()
+            .expect("latency poisoned")
+            .record(latency);
+    }
+}
+
+/// A running server; drop-in lifecycle handle.
+pub struct Server {
+    /// Actual bound address (useful with an ephemeral `:0` bind).
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: JoinHandle<()>,
+    batcher_thread: JoinHandle<Metrics>,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind, spawn the batcher and the accept loop, and return.
+    pub fn start(config: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&config.listen)
+            .with_context(|| format!("binding {}", config.listen))?;
+        let addr = listener.local_addr()?;
+
+        let coord = Coordinator::new(config.coordinator.clone());
+        let state = Arc::new(ServerState::new(
+            config.admission.clone(),
+            coord.metrics_handle(),
+            EnergyModel::new(config.coordinator.tile_n, config.vdd),
+        ));
+
+        let (batch_tx, batch_rx) = mpsc::channel::<BatchItem>();
+        let max_batch = config.max_batch.max(1);
+        let max_wait = Duration::from_micros(config.max_wait_us);
+        let stale_after = config.request_timeout;
+        let batcher_state = Arc::clone(&state);
+        let batcher_thread = std::thread::spawn(move || {
+            batcher::run_batcher(
+                batch_rx,
+                coord,
+                max_batch,
+                max_wait,
+                stale_after,
+                batcher_state,
+            )
+        });
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let shutdown = Arc::clone(&shutdown);
+            let state = Arc::clone(&state);
+            let config = Arc::new(config);
+            std::thread::spawn(move || accept_loop(listener, batch_tx, state, config, shutdown))
+        };
+
+        Ok(Server {
+            addr,
+            shutdown,
+            accept_thread,
+            batcher_thread,
+            state,
+        })
+    }
+
+    /// Snapshot of the live coordinator metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.state
+            .coord_metrics
+            .lock()
+            .expect("metrics poisoned")
+            .clone()
+    }
+
+    /// Graceful shutdown: stop accepting, join in-flight connections,
+    /// drain the batcher, shut the pool down, and return the merged
+    /// worker metrics.
+    pub fn shutdown(self) -> Metrics {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept() call.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept_thread.join();
+        self.batcher_thread
+            .join()
+            .expect("batcher thread panicked")
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    batch_tx: Sender<BatchItem>,
+    state: Arc<ServerState>,
+    config: Arc<ServerConfig>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut connections: Vec<JoinHandle<()>> = Vec::new();
+    for incoming in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = incoming else { continue };
+        // Slowloris guard: admission control only runs once a request
+        // is parsed, so cap raw connections (each costs an OS thread)
+        // before spawning anything.
+        if state.connections.load(Ordering::Acquire) >= config.max_connections.max(1) {
+            let mut stream = stream;
+            let _ = http::Response::json(503, &error_json("too many connections"))
+                .with_header("Retry-After", "1")
+                .write_to(&mut stream);
+            continue;
+        }
+        state.connections.fetch_add(1, Ordering::AcqRel);
+        let tx = batch_tx.clone();
+        let state = Arc::clone(&state);
+        let config = Arc::clone(&config);
+        connections.push(std::thread::spawn(move || {
+            handle_connection(stream, tx, Arc::clone(&state), config);
+            state.connections.fetch_sub(1, Ordering::AcqRel);
+        }));
+        connections.retain(|handle| !handle.is_finished());
+    }
+    for handle in connections {
+        let _ = handle.join();
+    }
+    // `batch_tx` (and every handler clone) is dropped here, which lets
+    // the batcher drain its queue and exit.
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    tx: Sender<BatchItem>,
+    state: Arc<ServerState>,
+    config: Arc<ServerConfig>,
+) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.ip())
+        .unwrap_or(IpAddr::V4(Ipv4Addr::LOCALHOST));
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let response = match http::read_request(&mut reader) {
+        Ok(None) => return,
+        Ok(Some(request)) => route(&request, peer, &tx, &state, &config),
+        Err(e) => {
+            state.bad_requests.fetch_add(1, Ordering::Relaxed);
+            http::Response::json(400, &error_json(&format!("bad request: {e}")))
+        }
+    };
+    let _ = response.write_to(&mut writer);
+}
+
+fn route(
+    request: &http::Request,
+    peer: IpAddr,
+    tx: &Sender<BatchItem>,
+    state: &ServerState,
+    config: &ServerConfig,
+) -> http::Response {
+    match (request.method.as_str(), request.path.as_str()) {
+        ("GET", "/healthz") => http::Response::text(200, "ok\n"),
+        ("GET", "/metrics") => http::Response::text(200, &metrics_export::render(state)),
+        ("POST", "/v1/transform") => handle_transform(request, peer, tx, state, config),
+        (_, "/v1/transform") | (_, "/metrics") | (_, "/healthz") => {
+            http::Response::json(405, &error_json("method not allowed"))
+        }
+        _ => http::Response::json(404, &error_json("not found")),
+    }
+}
+
+fn error_json(message: &str) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("error".to_string(), Json::Str(message.to_string()));
+    Json::Obj(obj)
+}
+
+fn bad_request(state: &ServerState, message: &str) -> http::Response {
+    state.bad_requests.fetch_add(1, Ordering::Relaxed);
+    http::Response::json(400, &error_json(message))
+}
+
+/// Parse, admit, enqueue into the batcher, and wait for the reply.
+fn handle_transform(
+    request: &http::Request,
+    peer: IpAddr,
+    tx: &Sender<BatchItem>,
+    state: &ServerState,
+    config: &ServerConfig,
+) -> http::Response {
+    let body = match request.body_str() {
+        Ok(s) => s,
+        Err(_) => return bad_request(state, "body must be UTF-8 JSON"),
+    };
+    let parsed = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return bad_request(state, &format!("invalid JSON: {e}")),
+    };
+    let Some(xs) = parsed.get("x").and_then(Json::as_arr) else {
+        return bad_request(state, "missing \"x\" array");
+    };
+    if xs.is_empty() {
+        return bad_request(state, "\"x\" must be non-empty");
+    }
+    if xs.len() > config.max_dim {
+        return bad_request(
+            state,
+            &format!(
+                "\"x\" has {} elements; the limit is {}",
+                xs.len(),
+                config.max_dim
+            ),
+        );
+    }
+    let mut x = Vec::with_capacity(xs.len());
+    for v in xs {
+        match v.as_f64() {
+            Some(f) if f.is_finite() => x.push(f as f32),
+            _ => return bad_request(state, "\"x\" must contain finite numbers"),
+        }
+    }
+    let thresholds_units = match parsed.get("thresholds") {
+        None => vec![0.0; x.len()],
+        Some(t) => {
+            let Some(arr) = t.as_arr() else {
+                return bad_request(state, "\"thresholds\" must be an array");
+            };
+            if arr.len() != x.len() {
+                return bad_request(state, "\"thresholds\" length must match \"x\"");
+            }
+            let mut th = Vec::with_capacity(arr.len());
+            for v in arr {
+                match v.as_f64() {
+                    Some(f) if f.is_finite() => th.push(f.abs()),
+                    _ => return bad_request(state, "\"thresholds\" must contain finite numbers"),
+                }
+            }
+            th
+        }
+    };
+
+    let permit = match state.admission.try_acquire(peer, Instant::now()) {
+        Ok(p) => p,
+        Err(Rejection::Overloaded) => {
+            return http::Response::json(429, &error_json("overloaded: in-flight limit reached"))
+                .with_header("Retry-After", "1");
+        }
+        Err(Rejection::RateLimited) => {
+            return http::Response::json(429, &error_json("rate limited"))
+                .with_header("Retry-After", "1");
+        }
+    };
+
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let item = BatchItem {
+        req: TransformRequest {
+            x,
+            thresholds_units,
+        },
+        reply: reply_tx,
+        enqueued: Instant::now(),
+    };
+    if tx.send(item).is_err() {
+        return http::Response::json(503, &error_json("server shutting down"));
+    }
+    let response = match reply_rx.recv_timeout(config.request_timeout) {
+        Ok(Ok(reply)) => {
+            state.requests_ok.fetch_add(1, Ordering::Relaxed);
+            let mut obj = BTreeMap::new();
+            obj.insert(
+                "y".to_string(),
+                Json::Arr(reply.values.iter().map(|&v| Json::Num(v as f64)).collect()),
+            );
+            obj.insert(
+                "padded_dim".to_string(),
+                Json::Num(reply.values.len() as f64),
+            );
+            obj.insert(
+                "latency_us".to_string(),
+                Json::Num(reply.latency.as_micros() as f64),
+            );
+            http::Response::json(200, &Json::Obj(obj))
+        }
+        Ok(Err(message)) => http::Response::json(500, &error_json(&message)),
+        Err(_) => http::Response::json(504, &error_json("timed out waiting for the tile pool")),
+    };
+    drop(permit);
+    response
+}

@@ -1,0 +1,169 @@
+//! Coordinator backpressure and scheduler edge cases: the failure modes
+//! a serving front-end leans on (clean rejection instead of deadlock or
+//! panic) plus the zero-vector fast path.
+
+use std::collections::HashSet;
+
+use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+
+#[test]
+fn full_queue_rejects_instead_of_deadlocking() {
+    let mut c = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 2,
+        ..Default::default()
+    });
+    // One large request keeps the single worker busy for milliseconds
+    // while nanosecond-scale try_submits fill the depth-2 queue.
+    let big_dim = 16 * 8192;
+    let big = TransformRequest {
+        x: vec![0.25; big_dim],
+        thresholds_units: vec![0.0; big_dim],
+    };
+    let small = TransformRequest {
+        x: vec![0.5; 16],
+        thresholds_units: vec![0.0; 16],
+    };
+    let mut submitted = vec![c.submit(&big).unwrap()];
+    let mut rejected = false;
+    for _ in 0..100_000 {
+        match c.try_submit(&small).unwrap() {
+            Some(id) => submitted.push(id),
+            None => {
+                rejected = true;
+                break;
+            }
+        }
+    }
+    assert!(rejected, "bounded queue must reject when full");
+    // Everything accepted still completes — no deadlock, no loss.
+    let mut seen = HashSet::new();
+    for _ in 0..submitted.len() {
+        seen.insert(c.drain_one().unwrap().request_id);
+    }
+    assert_eq!(seen.len(), submitted.len());
+    for id in &submitted {
+        assert!(seen.contains(id), "request {id} lost");
+    }
+    let m = c.metrics();
+    assert_eq!(m.requests as usize, submitted.len());
+    c.shutdown();
+}
+
+#[test]
+fn zero_vector_terminates_on_the_first_plane() {
+    let mut c = Coordinator::new(CoordinatorConfig::default());
+    let out = c
+        .transform(&TransformRequest {
+            x: vec![0.0; 16],
+            thresholds_units: vec![0.0; 16],
+        })
+        .unwrap();
+    assert!(out.iter().all(|&v| v == 0.0));
+    let m = c.metrics();
+    assert_eq!(m.planes_issued, 1, "zero input must retire after one plane");
+    assert_eq!(m.row_cycles, 16);
+    assert_eq!(m.cycles.terminated_early, 16);
+    assert!((m.average_cycles() - 1.0).abs() < 1e-12);
+    assert!(m.row_cycles_saved() > 0);
+    c.shutdown();
+}
+
+#[test]
+fn threshold_length_mismatch_is_a_clean_error() {
+    let mut c = Coordinator::new(CoordinatorConfig::default());
+    let err = c
+        .transform(&TransformRequest {
+            x: vec![0.1; 16],
+            thresholds_units: vec![0.0; 8],
+        })
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("thresholds_units length"),
+        "unexpected error: {err}"
+    );
+    // The pool survives the rejection and keeps serving.
+    let ok = c
+        .transform(&TransformRequest {
+            x: vec![0.1; 16],
+            thresholds_units: vec![0.0; 16],
+        })
+        .unwrap();
+    assert_eq!(ok.len(), 16);
+    c.shutdown();
+}
+
+#[test]
+fn empty_input_is_a_clean_error() {
+    let mut c = Coordinator::new(CoordinatorConfig::default());
+    assert!(c
+        .transform(&TransformRequest {
+            x: Vec::new(),
+            thresholds_units: Vec::new(),
+        })
+        .is_err());
+    assert!(c.submit(&TransformRequest {
+        x: Vec::new(),
+        thresholds_units: Vec::new(),
+    })
+    .is_err());
+    c.shutdown();
+}
+
+#[test]
+fn batch_with_one_bad_request_fails_before_dispatch() {
+    let mut c = Coordinator::new(CoordinatorConfig::default());
+    let good = TransformRequest {
+        x: vec![0.3; 16],
+        thresholds_units: vec![0.0; 16],
+    };
+    let bad = TransformRequest {
+        x: vec![0.3; 16],
+        thresholds_units: vec![0.0; 4],
+    };
+    assert!(c.transform_batch(&[good.clone(), bad]).is_err());
+    // A clean batch afterwards still works.
+    let outs = c.transform_batch(&[good.clone(), good]).unwrap();
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0], outs[1]);
+    c.shutdown();
+}
+
+#[test]
+fn sync_apis_refuse_to_run_with_undrained_submissions() {
+    let mut c = Coordinator::new(CoordinatorConfig::default());
+    let req = TransformRequest {
+        x: vec![0.5; 16],
+        thresholds_units: vec![0.0; 16],
+    };
+    let id = c.submit(&req).unwrap();
+    // transform() would steal the submitted result off the shared
+    // channel; it must refuse cleanly instead.
+    let err = c.transform(&req).unwrap_err();
+    assert!(err.to_string().contains("drain_one"), "{err}");
+    assert!(c.transform_batch(&[req.clone()]).is_err());
+    let done = c.drain_one().unwrap();
+    assert_eq!(done.request_id, id);
+    // Drained: the synchronous path works again.
+    assert_eq!(c.transform(&req).unwrap().len(), 16);
+    c.shutdown();
+}
+
+#[test]
+fn submit_drain_matches_synchronous_transform() {
+    let x: Vec<f32> = (0..32).map(|i| ((i as f32) * 0.17).sin()).collect();
+    let req = TransformRequest {
+        x,
+        thresholds_units: vec![0.0; 32],
+    };
+    let mut sync = Coordinator::new(CoordinatorConfig::default());
+    let want = sync.transform(&req).unwrap();
+    sync.shutdown();
+
+    let mut c = Coordinator::new(CoordinatorConfig::default());
+    let id = c.submit(&req).unwrap();
+    let done = c.drain_one().unwrap();
+    assert_eq!(done.request_id, id);
+    assert_eq!(done.values, want);
+    c.shutdown();
+}

@@ -4,6 +4,11 @@
 //! python once, build-time only).  Every test cross-checks the HLO
 //! round-trip against the pure-rust golden models — the strongest signal
 //! that L1 (pallas), L2 (jax) and L3 (rust) agree numerically.
+//!
+//! The PJRT runtime needs the XLA toolchain, so this whole test crate is
+//! gated behind the non-default `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use repro::bitplane::QuantBwht;
 use repro::nn::{Backend, Mlp};

@@ -1,0 +1,223 @@
+//! End-to-end serving integration: the HTTP subsystem on an ephemeral
+//! port, driven by concurrent std-thread clients speaking hand-rolled
+//! HTTP/1.1 over `TcpStream`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use repro::bitplane::QuantBwht;
+use repro::server::{AdmissionConfig, Server, ServerConfig};
+use repro::util::json::{self, Json};
+use repro::util::rng::Rng;
+
+fn send_request(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read response");
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+fn post_json(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    send_request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    send_request(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn transform_body(x: &[f32], threshold: Option<f64>) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    match threshold {
+        None => format!("{{\"x\":[{}]}}", xs.join(",")),
+        Some(t) => {
+            let th: Vec<String> = x.iter().map(|_| format!("{t}")).collect();
+            format!(
+                "{{\"x\":[{}],\"thresholds\":[{}]}}",
+                xs.join(","),
+                th.join(",")
+            )
+        }
+    }
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|line| {
+            let rest = line.strip_prefix(name)?;
+            let rest = rest.strip_prefix(' ')?;
+            rest.trim().parse::<f64>().ok()
+        })
+        .unwrap_or(f64::NAN)
+}
+
+#[test]
+fn serves_concurrent_clients_with_correct_outputs_and_metrics() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .expect("server start");
+    let addr = server.addr;
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+
+    // 8 parallel clients x 5 requests each, exact WHT correctness (T=0).
+    let mut clients = Vec::new();
+    for client in 0..8u64 {
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(100 + client);
+            for _ in 0..5 {
+                let x: Vec<f32> = (0..16)
+                    .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+                    .collect();
+                let (status, body) =
+                    post_json(addr, "/v1/transform", &transform_body(&x, None));
+                assert_eq!(status, 200, "body: {body}");
+                let parsed = json::parse(&body).expect("response json");
+                let y: Vec<f32> = parsed
+                    .get("y")
+                    .and_then(Json::as_arr)
+                    .expect("y array")
+                    .iter()
+                    .map(|v| v.as_f64().expect("numeric y") as f32)
+                    .collect();
+                let golden = QuantBwht::new(16, 16, 8).transform(&x);
+                assert_eq!(y.len(), golden.len());
+                for (i, (a, b)) in y.iter().zip(&golden).enumerate() {
+                    assert!((a - b).abs() < 1e-4, "elem {i}: {a} vs {b}");
+                }
+                assert!(parsed.get("latency_us").and_then(Json::as_f64).is_some());
+            }
+        }));
+    }
+    for handle in clients {
+        handle.join().expect("client thread");
+    }
+
+    // A saturating-threshold request: provably-zero outputs that
+    // terminate after one bitplane, so /metrics shows row-cycle savings.
+    let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+    let (status, body) = post_json(addr, "/v1/transform", &transform_body(&x, Some(1e9)));
+    assert_eq!(status, 200, "body: {body}");
+    let parsed = json::parse(&body).unwrap();
+    assert!(parsed
+        .get("y")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .all(|v| v.as_f64() == Some(0.0)));
+
+    let (status, metrics) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(
+        metric_value(&metrics, "repro_requests_total") >= 41.0,
+        "{metrics}"
+    );
+    assert!(
+        metric_value(&metrics, "repro_row_cycles_saved_total") > 0.0,
+        "{metrics}"
+    );
+    assert!(metric_value(&metrics, "repro_request_latency_seconds_p50") > 0.0);
+    assert!(metric_value(&metrics, "repro_request_latency_seconds_p99") > 0.0);
+    assert!(metric_value(&metrics, "repro_batches_total") >= 1.0);
+    assert!(metric_value(&metrics, "repro_http_requests_ok_total") >= 41.0);
+    assert!(metric_value(&metrics, "repro_tops_per_watt") > 0.0);
+    assert!(metrics.contains("# TYPE repro_request_latency_seconds histogram"));
+
+    let m = server.shutdown();
+    assert_eq!(m.requests, 41);
+}
+
+#[test]
+fn rate_limiting_sheds_with_429() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        admission: AdmissionConfig {
+            max_inflight: 16,
+            // Effectively no refill within the test's lifetime.
+            rate_per_sec: 1e-6,
+            burst: 2.0,
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+    let body = transform_body(&[0.5; 16], None);
+    let (s1, _) = post_json(addr, "/v1/transform", &body);
+    let (s2, _) = post_json(addr, "/v1/transform", &body);
+    let (s3, b3) = post_json(addr, "/v1/transform", &body);
+    assert_eq!((s1, s2), (200, 200));
+    assert_eq!(s3, 429, "{b3}");
+    assert!(b3.contains("rate"), "{b3}");
+    let (_, metrics) = get(addr, "/metrics");
+    assert_eq!(
+        metric_value(&metrics, "repro_http_shed_total{reason=\"rate_limited\"}"),
+        1.0,
+        "{metrics}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn rejects_malformed_requests_cleanly_and_stays_up() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    let (status, body) = post_json(addr, "/v1/transform", "{\"x\": []}");
+    assert_eq!(status, 400, "{body}");
+    let (status, _) = post_json(addr, "/v1/transform", "this is not json");
+    assert_eq!(status, 400);
+    let (status, body) = post_json(addr, "/v1/transform", "{\"x\":[1,2],\"thresholds\":[0]}");
+    assert_eq!(status, 400, "{body}");
+    let (status, _) = post_json(addr, "/v1/transform", "{\"y\":[1,2]}");
+    assert_eq!(status, 400);
+    let (status, _) = get(addr, "/no-such-endpoint");
+    assert_eq!(status, 404);
+    let (status, _) = get(addr, "/v1/transform");
+    assert_eq!(status, 405);
+
+    // Still healthy afterwards; short inputs are padded to the tile.
+    let (status, body) = post_json(
+        addr,
+        "/v1/transform",
+        &transform_body(&[1.0, -1.0, 0.5, 0.25], None),
+    );
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    assert_eq!(
+        parsed.get("padded_dim").and_then(Json::as_f64),
+        Some(16.0),
+        "dim-4 input pads to one 16-wide tile"
+    );
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(metric_value(&metrics, "repro_http_bad_requests_total") >= 4.0);
+    server.shutdown();
+}
