@@ -1,12 +1,23 @@
-//! Coordinator/router bench: request throughput across the worker pool —
-//! the L3 serving claim (EXPERIMENTS.md §Perf).
+//! Coordinator/router bench: request throughput across the worker pool
+//! and the sharded-vs-single scatter–gather comparison — the L3 serving
+//! claim (EXPERIMENTS.md §Perf).
+//!
+//! A single pool executes one request on one worker (blocks walked
+//! serially on that worker's tile); a shard set splits the same blocks
+//! across every pool, so one wide request parallelizes.  Both sides get
+//! the same total worker count for a fair comparison.
+//!
+//! Emits `BENCH_coordinator.json` (results + the wide-request speedup)
+//! as a machine-readable baseline.
 
 use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
-use repro::util::bench::{bench, header};
+use repro::shard::{router, ShardSet, ShardSetConfig};
+use repro::util::bench::{bench, header, write_json, BenchResult};
 use repro::util::rng::Rng;
 
 fn main() {
     header("coordinator");
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut rng = Rng::seed_from_u64(4);
     for workers in [1usize, 4] {
         for dim in [16usize, 64, 256] {
@@ -27,7 +38,62 @@ fn main() {
                 },
             );
             r.report_throughput(32.0, "req");
+            results.push(r);
             coord.shutdown();
         }
+    }
+
+    // Sharded vs single: one 1024-wide request on 16x16 tiles.  Single
+    // pool: 4 workers, but a lone request runs on one of them.  Shard
+    // set: 4 pools x 1 worker — same hardware, the request fans out.
+    let dim = 1024usize;
+    let shards = 4usize;
+    let req = TransformRequest {
+        x: (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect(),
+        thresholds_units: vec![0.0; dim],
+    };
+
+    let mut single = Coordinator::new(CoordinatorConfig {
+        workers: shards,
+        ..Default::default()
+    });
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards,
+        coordinator: CoordinatorConfig {
+            workers: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Correctness gate before timing: the scatter–gather must be
+    // bit-identical to the single pool.
+    let golden = single.transform(&req).unwrap();
+    let sharded_out = router::transform(&mut set, &req).unwrap();
+    assert_eq!(sharded_out, golden, "sharded output must be bit-identical");
+
+    let r_single = bench(&format!("wide dim={dim} single-pool"), || {
+        single.transform(&req).unwrap();
+    });
+    r_single.report_throughput(1.0, "req");
+    let r_sharded = bench(&format!("wide dim={dim} shards={shards}"), || {
+        router::transform(&mut set, &req).unwrap();
+    });
+    r_sharded.report_throughput(1.0, "req");
+
+    let speedup = r_single.mean.as_secs_f64() / r_sharded.mean.as_secs_f64();
+    println!(
+        "wide dim={dim}: {shards}-shard scatter-gather speedup over single pool: {speedup:.2}x"
+    );
+    results.push(r_single);
+    results.push(r_sharded);
+    single.shutdown();
+    set.shutdown();
+
+    let path = "BENCH_coordinator.json";
+    match write_json(path, "coordinator", &results, &[("wide1024_shard_speedup", speedup)]) {
+        Ok(()) => println!("baseline written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

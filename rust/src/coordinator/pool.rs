@@ -374,6 +374,16 @@ impl Coordinator {
         Arc::clone(&self.metrics)
     }
 
+    /// Chaos/test hook: sever the job channel so the workers finish what
+    /// is already queued and exit.  Subsequent `submit`/`try_submit`
+    /// calls fail with "worker pool shut down", and `drain_one` fails
+    /// once buffered results are consumed — the failure signal
+    /// [`crate::shard`]'s router turns into poisoned-shard load shedding.
+    pub fn abort(&mut self) {
+        let (dead_tx, _) = sync_channel::<TileJob>(1);
+        self.job_tx = dead_tx;
+    }
+
     /// Shut the pool down and collect per-worker metrics.
     pub fn shutdown(self) -> Metrics {
         drop(self.job_tx);
@@ -495,6 +505,20 @@ mod tests {
         let m = c.metrics();
         assert!(m.row_cycles < 16 * 8);
         assert!(m.average_cycles() < 2.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn abort_fails_submissions_cleanly() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        c.abort();
+        assert!(c
+            .submit(&TransformRequest {
+                x: sample(16, 50),
+                thresholds_units: vec![0.0; 16],
+            })
+            .is_err());
+        assert!(c.drain_one().is_err(), "no buffered results after abort");
         c.shutdown();
     }
 

@@ -11,6 +11,11 @@
 //!   (bounded in-flight + per-client token buckets) and a Prometheus
 //!   `/metrics` endpoint, turning the coordinator into a long-running
 //!   inference service (`repro serve --listen ADDR`).
+//! * **L3.5 ([`shard`])** — scatter–gather sharding: a placement planner
+//!   and router that partition one wide transform across N independent
+//!   coordinator pools (balanced by estimated row-cycles, with poisoned
+//!   shards shedding load to siblings) and merge their metrics into one
+//!   logical-accelerator snapshot.
 //! * **L3 (this crate)** — the coordinator: crossbar tile pool, bitplane
 //!   scheduling with predictive early termination, request batching, plus
 //!   every substrate the paper depends on (Walsh transforms, sign-magnitude
@@ -33,5 +38,6 @@ pub mod quant;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod util;
 pub mod wht;

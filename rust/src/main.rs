@@ -8,7 +8,8 @@
 //! repro infer     [--weights PATH] [--artifacts DIR] [--backend ...]
 //! repro train     [--artifacts DIR] [--steps N] [--log-every K]
 //! repro serve     [--requests N] [--workers W] [--tile N] [--bits B]
-//!                 [--listen ADDR] [--max-batch N] [--max-wait-us U]
+//!                 [--listen ADDR] [--shards N] [--backend digital|noisy|analog]
+//!                 [--max-batch N] [--max-wait-us U] [--keepalive-requests N]
 //!                 [--max-inflight N] [--rate R] [--burst B] [--duration-s S]
 //! repro report    [--vdd V] [--avg-cycles C]
 //! ```
@@ -77,13 +78,11 @@ fn backend_from_flags(flags: &HashMap<String, String>) -> Backend {
     }
 }
 
-fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
-    let dim: usize = flag(flags, "dim", 64);
-    let bits: u32 = flag(flags, "bits", 8);
-    let tile: usize = flag(flags, "tile", 16);
-    let seed: u64 = flag(flags, "seed", 0);
-    let vdd: f64 = flag(flags, "vdd", 0.8);
-    let kind = match flags.get("backend").map(|s| s.as_str()).unwrap_or("digital") {
+/// `--backend digital|noisy|analog` → the tile execution backend
+/// (shared by `transform` and `serve`; per-shard/per-worker variability
+/// seeds are derived downstream from `--seed`).
+fn tile_kind_from_flags(flags: &HashMap<String, String>, tile: usize, vdd: f64) -> TileKind {
+    match flags.get("backend").map(|s| s.as_str()).unwrap_or("digital") {
         "noisy" => TileKind::Noisy {
             sigma_ant: flag(flags, "sigma-ant", 2e-3f64),
         },
@@ -91,7 +90,16 @@ fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
             config: CrossbarConfig::new(tile, vdd),
         },
         _ => TileKind::Digital,
-    };
+    }
+}
+
+fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
+    let dim: usize = flag(flags, "dim", 64);
+    let bits: u32 = flag(flags, "bits", 8);
+    let tile: usize = flag(flags, "tile", 16);
+    let seed: u64 = flag(flags, "seed", 0);
+    let vdd: f64 = flag(flags, "vdd", 0.8);
+    let kind = tile_kind_from_flags(flags, tile, vdd);
     let mut rng = Rng::seed_from_u64(seed);
     let x: Vec<f32> = (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
     let mut coord = Coordinator::new(CoordinatorConfig {
@@ -256,18 +264,27 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// Network mode: a long-running HTTP service over the coordinator.
+/// Network mode: a long-running HTTP service over the sharded
+/// coordinator pools.
 fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let tile: usize = flag(flags, "tile", 16);
+    let vdd: f64 = flag(flags, "vdd", 0.8);
+    let shards: usize = flag(flags, "shards", 1);
+    let backend = flags
+        .get("backend")
+        .cloned()
+        .unwrap_or_else(|| "digital".to_string());
     let config = ServerConfig {
         listen: listen.to_string(),
         coordinator: CoordinatorConfig {
-            tile_n: flag(flags, "tile", 16),
+            tile_n: tile,
             bits: flag(flags, "bits", 8),
             workers: flag(flags, "workers", 4),
             seed: flag(flags, "seed", 0),
-            kind: TileKind::Digital,
+            kind: tile_kind_from_flags(flags, tile, vdd),
             ..Default::default()
         },
+        shards: shards.max(1),
         admission: AdmissionConfig {
             max_inflight: flag(flags, "max-inflight", 256),
             rate_per_sec: flag(flags, "rate", 0.0),
@@ -276,14 +293,23 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         max_batch: flag(flags, "max-batch", 32),
         max_wait_us: flag(flags, "max-wait-us", 200),
         max_connections: flag(flags, "max-connections", 512),
-        vdd: flag(flags, "vdd", 0.8),
+        vdd,
+        keepalive_max_requests: flag(flags, "keepalive-requests", 64),
         ..Default::default()
     };
     let duration_s: u64 = flag(flags, "duration-s", 0);
     let server = Server::start(config)?;
     println!("repro serve listening on http://{}", server.addr);
+    println!(
+        "  {} shard(s) x {} worker(s), {} backend, tile {}x{}",
+        shards.max(1),
+        flag::<usize>(flags, "workers", 4),
+        backend,
+        tile,
+        tile
+    );
     println!("  POST /v1/transform  {{\"x\": [...], \"thresholds\": [...]}}");
-    println!("  GET  /metrics       Prometheus text format");
+    println!("  GET  /metrics       Prometheus text format (merged + per-shard)");
     println!("  GET  /healthz       liveness probe");
     if duration_s == 0 {
         loop {
@@ -293,7 +319,7 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
     std::thread::sleep(std::time::Duration::from_secs(duration_s));
     let m = server.shutdown();
     println!(
-        "served {} requests | avg bitplane cycles {:.2} | worker p50 {:.0} us",
+        "served {} transform slices | avg bitplane cycles {:.2} | worker p50 {:.0} us",
         m.requests,
         m.average_cycles(),
         m.latency.quantile_us(0.5)
@@ -315,7 +341,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         tile_n: tile,
         bits,
         workers,
-        kind: TileKind::Digital,
+        kind: tile_kind_from_flags(flags, tile, vdd),
+        seed: flag(flags, "seed", 0),
         ..Default::default()
     });
     let mut rng = Rng::seed_from_u64(7);
@@ -424,8 +451,12 @@ SUBCOMMANDS:
   train       E2E: train via the PJRT train_step artifact (no python;
               needs a build with --features pjrt)
   serve       --listen ADDR: HTTP service with dynamic batching,
-              admission control and a Prometheus /metrics endpoint;
-              without --listen: offline batch throughput benchmark
+              admission control, keep-alive connections and a Prometheus
+              /metrics endpoint; --shards N scatter-gathers wide requests
+              across N coordinator pools; --backend digital|noisy|analog
+              picks the per-shard tile backend (per-worker variability
+              seeds derive from --seed); without --listen: offline batch
+              throughput benchmark
   report      energy model: Table I, Fig. 12 power breakdown
   help        this text
 ";

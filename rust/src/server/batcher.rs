@@ -1,11 +1,13 @@
-//! Dynamic micro-batching over the coordinator.
+//! Dynamic micro-batching over the shard set.
 //!
-//! One batcher thread owns the [`Coordinator`].  It blocks for the first
+//! One batcher thread owns the [`ShardSet`].  It blocks for the first
 //! pending request, keeps collecting until `max_batch` requests are in
 //! hand or `max_wait` has elapsed, dispatches the whole batch across the
-//! worker pool in one [`Coordinator::transform_batch`] call (so tile
-//! utilization stays high under bursty concurrent load), then fans the
-//! replies back out over per-request channels.
+//! shard pools in one scatter–gather
+//! [`crate::shard::router::transform_batch`] call (so tile utilization
+//! stays high under bursty concurrent load — wide requests additionally
+//! parallelize *within* themselves across shards), then fans the replies
+//! back out over per-request channels.
 //!
 //! Under a backlog the `recv_timeout` calls return instantly, so deep
 //! batches form with no added latency; on an idle server a lone request
@@ -16,7 +18,8 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Coordinator, Metrics, TransformRequest};
+use crate::coordinator::{Metrics, TransformRequest};
+use crate::shard::{router, ShardSet};
 
 use super::ServerState;
 
@@ -45,7 +48,7 @@ pub struct BatchReply {
 /// instead of pool-execution speed — no congestion collapse.
 pub(crate) fn run_batcher(
     rx: Receiver<BatchItem>,
-    mut coord: Coordinator,
+    mut shards: ShardSet,
     max_batch: usize,
     max_wait: Duration,
     stale_after: Duration,
@@ -84,7 +87,7 @@ pub(crate) fn run_batcher(
             reqs.push(item.req);
             waiters.push((item.reply, item.enqueued));
         }
-        match coord.transform_batch(&reqs) {
+        match router::transform_batch(&mut shards, &reqs) {
             Ok(outputs) => {
                 for ((reply, enqueued), values) in waiters.into_iter().zip(outputs) {
                     let latency = enqueued.elapsed();
@@ -94,7 +97,8 @@ pub(crate) fn run_batcher(
             }
             Err(e) => {
                 // Requests are validated before enqueueing, so this is a
-                // pool-level failure: report it to every waiter.
+                // set-level failure (every shard poisoned): report it to
+                // every waiter.
                 let msg = format!("batch execution failed: {e}");
                 for (reply, _) in waiters {
                     let _ = reply.send(Err(msg.clone()));
@@ -102,26 +106,39 @@ pub(crate) fn run_batcher(
             }
         }
     }
-    coord.shutdown()
+    shards.shutdown()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bitplane::QuantBwht;
-    use crate::coordinator::{Coordinator, CoordinatorConfig};
     use crate::energy::EnergyModel;
     use crate::server::admission::AdmissionConfig;
+    use crate::shard::ShardSetConfig;
     use std::sync::mpsc;
+
+    fn test_set(shards: usize) -> ShardSet {
+        ShardSet::new(ShardSetConfig {
+            shards,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn test_state(set: &ShardSet) -> Arc<ServerState> {
+        Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            set.aggregator(),
+            set.health_handle(),
+            EnergyModel::new(16, 0.8),
+        ))
+    }
 
     #[test]
     fn coalesces_a_queued_burst_into_one_batch_and_fans_out() {
-        let coord = Coordinator::new(CoordinatorConfig::default());
-        let state = Arc::new(ServerState::new(
-            AdmissionConfig::default(),
-            coord.metrics_handle(),
-            EnergyModel::new(16, 0.8),
-        ));
+        let set = test_set(1);
+        let state = test_state(&set);
         let (tx, rx) = mpsc::channel();
         // Enqueue the whole burst before the batcher runs, so coalescing
         // is deterministic: one batch of six.
@@ -143,7 +160,7 @@ mod tests {
         drop(tx);
         let metrics = run_batcher(
             rx,
-            coord,
+            set,
             8,
             Duration::from_millis(5),
             Duration::from_secs(5),
@@ -165,12 +182,8 @@ mod tests {
 
     #[test]
     fn max_batch_splits_oversized_bursts() {
-        let coord = Coordinator::new(CoordinatorConfig::default());
-        let state = Arc::new(ServerState::new(
-            AdmissionConfig::default(),
-            coord.metrics_handle(),
-            EnergyModel::new(16, 0.8),
-        ));
+        let set = test_set(2);
+        let state = test_state(&set);
         let (tx, rx) = mpsc::channel();
         let mut waiters = Vec::new();
         for _ in 0..5 {
@@ -189,7 +202,7 @@ mod tests {
         drop(tx);
         let metrics = run_batcher(
             rx,
-            coord,
+            set,
             2,
             Duration::from_millis(5),
             Duration::from_secs(5),
@@ -208,12 +221,8 @@ mod tests {
 
     #[test]
     fn stale_items_are_dropped_not_executed() {
-        let coord = Coordinator::new(CoordinatorConfig::default());
-        let state = Arc::new(ServerState::new(
-            AdmissionConfig::default(),
-            coord.metrics_handle(),
-            EnergyModel::new(16, 0.8),
-        ));
+        let set = test_set(1);
+        let state = test_state(&set);
         let (tx, rx) = mpsc::channel();
         let mut waiters = Vec::new();
         for _ in 0..3 {
@@ -233,7 +242,7 @@ mod tests {
         // stale_after = 0: everything is already expired at dispatch.
         let metrics = run_batcher(
             rx,
-            coord,
+            set,
             8,
             Duration::from_millis(5),
             Duration::ZERO,

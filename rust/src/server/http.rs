@@ -1,10 +1,12 @@
 //! Minimal hand-rolled HTTP/1.1 parsing and response writing.
 //!
 //! The build box is offline, so no hyper/axum: this implements exactly
-//! the subset the serving subsystem needs — one request per connection
-//! (`Connection: close`), `Content-Length`-framed bodies, header lookup,
-//! and deterministic wire formatting.  Keep-alive connection pooling is
-//! a ROADMAP open item.
+//! the subset the serving subsystem needs — persistent connections
+//! (HTTP/1.1 keep-alive semantics, honoring `Connection: close` /
+//! `keep-alive`), `Content-Length`-framed bodies, header lookup, and
+//! deterministic wire formatting.  The per-connection request cap and
+//! idle timeout live in the connection handler
+//! ([`crate::server`]), which owns the socket.
 
 use std::io::{BufRead, Read, Write};
 
@@ -22,6 +24,8 @@ const MAX_HEADER_BYTES: usize = 16 << 10;
 pub struct Request {
     pub method: String,
     pub path: String,
+    /// `true` for HTTP/1.1 (keep-alive by default), `false` for 1.0.
+    pub http11: bool,
     /// Header names are lower-cased at parse time.
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
@@ -38,6 +42,17 @@ impl Request {
 
     pub fn body_str(&self) -> Result<&str> {
         Ok(std::str::from_utf8(&self.body)?)
+    }
+
+    /// Persistent-connection semantics: HTTP/1.1 keeps the connection
+    /// open unless the client says `Connection: close`; HTTP/1.0 closes
+    /// unless the client says `Connection: keep-alive`.
+    pub fn wants_keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
     }
 }
 
@@ -106,6 +121,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
     Ok(Some(Request {
         method: method.to_string(),
         path: path.to_string(),
+        http11: version == "HTTP/1.1",
         headers,
         body,
     }))
@@ -144,7 +160,15 @@ impl Response {
         self
     }
 
+    /// Serialize with `Connection: close` (one-shot responses: tests,
+    /// the pre-handler 503 path).
     pub fn write_to<W: Write>(&self, writer: &mut W) -> std::io::Result<()> {
+        self.write_to_with(writer, false)
+    }
+
+    /// Serialize, advertising whether the server will keep the
+    /// connection open for another request.
+    pub fn write_to_with<W: Write>(&self, writer: &mut W, keep_alive: bool) -> std::io::Result<()> {
         write!(
             writer,
             "HTTP/1.1 {} {}\r\n",
@@ -153,7 +177,11 @@ impl Response {
         )?;
         write!(writer, "Content-Type: {}\r\n", self.content_type)?;
         write!(writer, "Content-Length: {}\r\n", self.body.len())?;
-        write!(writer, "Connection: close\r\n")?;
+        write!(
+            writer,
+            "Connection: {}\r\n",
+            if keep_alive { "keep-alive" } else { "close" }
+        )?;
         for (name, value) in &self.extra_headers {
             write!(writer, "{name}: {value}\r\n")?;
         }
@@ -247,6 +275,33 @@ mod tests {
         assert!(text.contains("Content-Length: 3\r\n"));
         assert!(text.contains("Retry-After: 1\r\n"));
         assert!(text.ends_with("\r\n\r\nok\n"));
+    }
+
+    #[test]
+    fn keep_alive_semantics_follow_http_version_and_connection_header() {
+        let req = |raw: &str| parse(raw).unwrap().unwrap();
+        // HTTP/1.1 defaults to keep-alive.
+        assert!(req("GET / HTTP/1.1\r\nHost: x\r\n\r\n").wants_keep_alive());
+        assert!(!req("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").wants_keep_alive());
+        // HTTP/1.0 defaults to close.
+        assert!(!req("GET / HTTP/1.0\r\nHost: x\r\n\r\n").wants_keep_alive());
+        assert!(req("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").wants_keep_alive());
+        // Case-insensitive header values.
+        assert!(!req("GET / HTTP/1.1\r\nConnection: Close\r\n\r\n").wants_keep_alive());
+    }
+
+    #[test]
+    fn response_advertises_keep_alive_when_asked() {
+        let mut out = Vec::new();
+        Response::text(200, "ok\n")
+            .write_to_with(&mut out, true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        let mut out = Vec::new();
+        Response::text(200, "ok\n").write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: close\r\n"), "{text}");
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Prometheus-text-format rendering of the serving metrics.
 //!
-//! Exposes the coordinator's cycle/energy accounting (row-cycles, planes
-//! issued, early-termination savings, modelled TOPS/W from the
-//! [`crate::energy::EnergyModel`]) alongside the HTTP layer's admission
-//! counters and latency histograms with p50/p95/p99 gauges.
+//! Exposes the shard set's merged cycle/energy accounting (row-cycles,
+//! planes issued, early-termination savings, modelled TOPS/W from the
+//! [`crate::energy::EnergyModel`]) plus per-shard labeled series and the
+//! healthy-shard gauge, alongside the HTTP layer's admission counters
+//! and latency histograms with p50/p95/p99 gauges.  Unlabeled
+//! `repro_*` accelerator series are the sum over all shards.
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
@@ -62,15 +64,16 @@ fn histogram(out: &mut String, name: &str, help: &str, hist: &LatencyHistogram) 
 
 /// Render the full exposition document.
 pub(crate) fn render(state: &ServerState) -> String {
-    let coord = state.coord_metrics.lock().expect("metrics poisoned").clone();
+    let coord = state.shard_metrics.merged();
+    let per_shard = state.shard_metrics.per_shard();
     let e2e = state.e2e_latency.lock().expect("latency poisoned").clone();
     let mut out = String::new();
 
-    // Coordinator / accelerator accounting.
+    // Accelerator accounting, merged across the shard set.
     counter_u64(
         &mut out,
         "repro_requests_total",
-        "Transform requests completed by the coordinator.",
+        "Transform slices completed across the shard set (one per request per shard lane touched).",
         coord.requests,
     );
     counter_u64(
@@ -124,9 +127,56 @@ pub(crate) fn render(state: &ServerState) -> String {
     counter_f64(
         &mut out,
         "repro_worker_busy_seconds_total",
-        "Cumulative worker busy time across the tile pool.",
+        "Cumulative worker busy time across every shard's tile pool.",
         coord.busy.as_secs_f64(),
     );
+
+    // Per-shard breakdown (slot-indexed; poisoned shards keep reporting
+    // what they served before dying).
+    gauge_f64(
+        &mut out,
+        "repro_shards_healthy",
+        "Shards currently accepting work.",
+        state.shards_healthy.load(Ordering::Acquire) as f64,
+    );
+    gauge_f64(
+        &mut out,
+        "repro_shards_total",
+        "Shards the set was started with.",
+        state.shard_metrics.shards() as f64,
+    );
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_requests_total Transform slices completed, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_requests_total counter");
+    for (s, m) in per_shard.iter().enumerate() {
+        let _ = writeln!(out, "repro_shard_requests_total{{shard=\"{s}\"}} {}", m.requests);
+    }
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_row_cycles_total Row-cycles executed, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_row_cycles_total counter");
+    for (s, m) in per_shard.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_row_cycles_total{{shard=\"{s}\"}} {}",
+            m.row_cycles
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_busy_seconds_total Worker busy time, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_busy_seconds_total counter");
+    for (s, m) in per_shard.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_busy_seconds_total{{shard=\"{s}\"}} {}",
+            fmt_f64(m.busy.as_secs_f64())
+        );
+    }
 
     // HTTP front-end counters.
     counter_u64(
@@ -215,6 +265,8 @@ mod tests {
     use crate::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
     use crate::energy::EnergyModel;
     use crate::server::admission::AdmissionConfig;
+    use crate::shard::MetricsAggregator;
+    use std::sync::atomic::AtomicUsize;
     use std::sync::Arc;
     use std::time::Duration;
 
@@ -233,7 +285,8 @@ mod tests {
         let mut coord = Coordinator::new(CoordinatorConfig::default());
         let state = Arc::new(ServerState::new(
             AdmissionConfig::default(),
-            coord.metrics_handle(),
+            MetricsAggregator::new(vec![coord.metrics_handle()], 8),
+            Arc::new(AtomicUsize::new(1)),
             EnergyModel::new(16, 0.8),
         ));
         // One full-precision request and one that early-terminates.
@@ -262,5 +315,42 @@ mod tests {
         assert!(text.contains("# TYPE repro_request_latency_seconds histogram"));
         assert!(text.contains("repro_request_latency_seconds_bucket{le=\"+Inf\"} 1"));
         assert!(text.contains("repro_http_shed_total{reason=\"overload\"} 0"));
+        assert_eq!(metric_value(&text, "repro_shards_healthy"), 1.0, "{text}");
+        assert!(text.contains("repro_shard_requests_total{shard=\"0\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn renders_per_shard_series_for_a_multi_shard_set() {
+        use crate::shard::{router, ShardSet, ShardSetConfig};
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let x: Vec<f32> = (0..64).map(|i| ((i + 1) as f32 * 0.13).sin()).collect();
+        router::transform(
+            &mut set,
+            &TransformRequest {
+                x,
+                thresholds_units: vec![0.0; 64],
+            },
+        )
+        .unwrap();
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            set.aggregator(),
+            set.health_handle(),
+            EnergyModel::new(16, 0.8),
+        ));
+        set.shutdown();
+        let text = render(&state);
+        assert_eq!(metric_value(&text, "repro_shards_total"), 2.0, "{text}");
+        // Both shards served slices of the 4-block request.
+        assert!(text.contains("repro_shard_requests_total{shard=\"0\"}"), "{text}");
+        assert!(text.contains("repro_shard_requests_total{shard=\"1\"}"), "{text}");
+        assert!(
+            metric_value(&text, "repro_elements_total") >= 64.0,
+            "{text}"
+        );
     }
 }

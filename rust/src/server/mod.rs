@@ -1,15 +1,15 @@
 //! L4 network serving subsystem: an std-only HTTP/1.1 front-end that
-//! turns the leader-worker [`Coordinator`] into a long-running inference
-//! service (`repro serve --listen ADDR`).
+//! turns a [`crate::shard::ShardSet`] of coordinator pools into a
+//! long-running inference service (`repro serve --listen ADDR`).
 //!
 //! ```text
-//!   clients ──▶ accept loop (thread per connection)
+//!   clients ──▶ accept loop (thread per keep-alive connection)
 //!                  │  admission control: in-flight cap + token buckets
 //!                  ▼
 //!              dynamic micro-batcher (max_batch / max_wait coalescing)
-//!                  │  one transform_batch() per coalesced batch
+//!                  │  one scatter–gather dispatch per coalesced batch
 //!                  ▼
-//!              Coordinator worker pool ──▶ per-request reply channels
+//!              ShardSet (N coordinator pools) ──▶ per-request replies
 //! ```
 //!
 //! Endpoints:
@@ -39,10 +39,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{
-    Coordinator, CoordinatorConfig, LatencyHistogram, Metrics, TransformRequest,
-};
+use crate::coordinator::{CoordinatorConfig, LatencyHistogram, Metrics, TransformRequest};
 use crate::energy::EnergyModel;
+use crate::shard::{MetricsAggregator, ShardSet, ShardSetConfig};
 use crate::util::json::{self, Json};
 
 use admission::Admission;
@@ -55,8 +54,12 @@ pub use batcher::BatchReply;
 pub struct ServerConfig {
     /// Bind address, e.g. `127.0.0.1:8080` (`:0` for an ephemeral port).
     pub listen: String,
-    /// Tile pool configuration.
+    /// Per-shard tile pool configuration (`kind` selects the
+    /// digital/noisy/analog backend; per-shard and per-worker
+    /// variability seeds are derived from `seed`).
     pub coordinator: CoordinatorConfig,
+    /// Independent coordinator pools to scatter–gather across.
+    pub shards: usize,
     /// Admission-control policy.
     pub admission: AdmissionConfig,
     /// Micro-batching: dispatch when this many requests are pending...
@@ -72,6 +75,12 @@ pub struct ServerConfig {
     /// How long a connection waits for its batch reply; older work is
     /// dropped by the batcher instead of executed.
     pub request_timeout: Duration,
+    /// Requests served per keep-alive connection before the server
+    /// closes it (bounds per-connection thread residency).
+    pub keepalive_max_requests: usize,
+    /// How long an idle keep-alive connection is held open waiting for
+    /// its next request.
+    pub keepalive_idle: Duration,
 }
 
 impl Default for ServerConfig {
@@ -79,6 +88,7 @@ impl Default for ServerConfig {
         ServerConfig {
             listen: "127.0.0.1:8080".to_string(),
             coordinator: CoordinatorConfig::default(),
+            shards: 1,
             admission: AdmissionConfig::default(),
             max_batch: 32,
             max_wait_us: 200,
@@ -86,6 +96,8 @@ impl Default for ServerConfig {
             max_connections: 512,
             vdd: 0.8,
             request_timeout: Duration::from_secs(5),
+            keepalive_max_requests: 64,
+            keepalive_idle: Duration::from_secs(5),
         }
     }
 }
@@ -95,7 +107,10 @@ impl Default for ServerConfig {
 pub(crate) struct ServerState {
     pub admission: Admission,
     pub e2e_latency: Mutex<LatencyHistogram>,
-    pub coord_metrics: Arc<Mutex<Metrics>>,
+    /// Merged + per-shard accelerator metrics across the shard set.
+    pub shard_metrics: MetricsAggregator,
+    /// Healthy-shard count maintained by the [`ShardSet`].
+    pub shards_healthy: Arc<AtomicUsize>,
     pub energy: EnergyModel,
     pub batches_total: AtomicU64,
     pub requests_ok: AtomicU64,
@@ -109,13 +124,15 @@ pub(crate) struct ServerState {
 impl ServerState {
     pub(crate) fn new(
         admission: AdmissionConfig,
-        coord_metrics: Arc<Mutex<Metrics>>,
+        shard_metrics: MetricsAggregator,
+        shards_healthy: Arc<AtomicUsize>,
         energy: EnergyModel,
     ) -> ServerState {
         ServerState {
             admission: Admission::new(admission),
             e2e_latency: Mutex::new(LatencyHistogram::new()),
-            coord_metrics,
+            shard_metrics,
+            shards_healthy,
             energy,
             batches_total: AtomicU64::new(0),
             requests_ok: AtomicU64::new(0),
@@ -150,10 +167,15 @@ impl Server {
             .with_context(|| format!("binding {}", config.listen))?;
         let addr = listener.local_addr()?;
 
-        let coord = Coordinator::new(config.coordinator.clone());
+        let shards = ShardSet::new(ShardSetConfig {
+            shards: config.shards.max(1),
+            coordinator: config.coordinator.clone(),
+            ..Default::default()
+        })?;
         let state = Arc::new(ServerState::new(
             config.admission.clone(),
-            coord.metrics_handle(),
+            shards.aggregator(),
+            shards.health_handle(),
             EnergyModel::new(config.coordinator.tile_n, config.vdd),
         ));
 
@@ -165,7 +187,7 @@ impl Server {
         let batcher_thread = std::thread::spawn(move || {
             batcher::run_batcher(
                 batch_rx,
-                coord,
+                shards,
                 max_batch,
                 max_wait,
                 stale_after,
@@ -190,13 +212,9 @@ impl Server {
         })
     }
 
-    /// Snapshot of the live coordinator metrics.
+    /// Merged snapshot of the live accelerator metrics across shards.
     pub fn metrics(&self) -> Metrics {
-        self.state
-            .coord_metrics
-            .lock()
-            .expect("metrics poisoned")
-            .clone()
+        self.state.shard_metrics.merged()
     }
 
     /// Graceful shutdown: stop accepting, join in-flight connections,
@@ -220,7 +238,9 @@ fn accept_loop(
     config: Arc<ServerConfig>,
     shutdown: Arc<AtomicBool>,
 ) {
-    let mut connections: Vec<JoinHandle<()>> = Vec::new();
+    // Handler threads plus a read-half clone of each socket, so shutdown
+    // can wake keep-alive connections parked in a blocking read.
+    let mut connections: Vec<(JoinHandle<()>, TcpStream)> = Vec::new();
     for incoming in listener.incoming() {
         if shutdown.load(Ordering::SeqCst) {
             break;
@@ -236,21 +256,40 @@ fn accept_loop(
                 .write_to(&mut stream);
             continue;
         }
+        let Ok(wake_handle) = stream.try_clone() else {
+            continue;
+        };
         state.connections.fetch_add(1, Ordering::AcqRel);
         let tx = batch_tx.clone();
         let state = Arc::clone(&state);
         let config = Arc::clone(&config);
-        connections.push(std::thread::spawn(move || {
+        let handle = std::thread::spawn(move || {
             handle_connection(stream, tx, Arc::clone(&state), config);
             state.connections.fetch_sub(1, Ordering::AcqRel);
-        }));
-        connections.retain(|handle| !handle.is_finished());
+        });
+        connections.push((handle, wake_handle));
+        connections.retain(|(handle, _)| !handle.is_finished());
     }
-    for handle in connections {
+    for (handle, wake) in connections {
+        // A persistent connection may be idling in read_request for up
+        // to keepalive_idle; closing the read half makes that read
+        // return EOF now while letting an in-flight response finish.
+        let _ = wake.shutdown(std::net::Shutdown::Read);
         let _ = handle.join();
     }
     // `batch_tx` (and every handler clone) is dropped here, which lets
     // the batcher drain its queue and exit.
+}
+
+/// Whether a request-read error is an idle-connection timeout (the
+/// socket's read deadline fired) rather than a malformed request.
+fn is_read_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    })
 }
 
 fn handle_connection(
@@ -263,22 +302,49 @@ fn handle_connection(
         .peer_addr()
         .map(|a| a.ip())
         .unwrap_or(IpAddr::V4(Ipv4Addr::LOCALHOST));
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
-    let response = match http::read_request(&mut reader) {
-        Ok(None) => return,
-        Ok(Some(request)) => route(&request, peer, &tx, &state, &config),
-        Err(e) => {
-            state.bad_requests.fetch_add(1, Ordering::Relaxed);
-            http::Response::json(400, &error_json(&format!("bad request: {e}")))
+    // Persistent-connection loop: serve up to `keepalive_max_requests`
+    // requests per connection, closing after `keepalive_idle` without a
+    // new request.  The read timeout applies to the shared socket, so it
+    // also bounds how long a half-sent request can stall the thread.
+    let max_requests = config.keepalive_max_requests.max(1);
+    let mut served = 0usize;
+    while served < max_requests {
+        let idle = if served == 0 {
+            // First request: the client connected to talk; allow the
+            // original (longer) request deadline.
+            Duration::from_secs(10)
+        } else {
+            config.keepalive_idle
+        };
+        let _ = writer.set_read_timeout(Some(idle));
+        let request = match http::read_request(&mut reader) {
+            Ok(None) => return,
+            Ok(Some(request)) => request,
+            Err(e) => {
+                // An idle keep-alive connection timing out is a normal
+                // close, not a protocol error.
+                if !is_read_timeout(&e) {
+                    state.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    let response =
+                        http::Response::json(400, &error_json(&format!("bad request: {e}")));
+                    let _ = response.write_to_with(&mut writer, false);
+                }
+                return;
+            }
+        };
+        served += 1;
+        let keep_alive = request.wants_keep_alive() && served < max_requests;
+        let response = route(&request, peer, &tx, &state, &config);
+        if response.write_to_with(&mut writer, keep_alive).is_err() || !keep_alive {
+            return;
         }
-    };
-    let _ = response.write_to(&mut writer);
+    }
 }
 
 fn route(

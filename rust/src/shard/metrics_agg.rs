@@ -1,0 +1,91 @@
+//! Merging per-shard [`Metrics`] into one logical-accelerator snapshot.
+//!
+//! Every shard's coordinator already aggregates its own workers into a
+//! shared `Arc<Mutex<Metrics>>`; this module folds those N handles into
+//! a single [`Metrics`] (row-cycles, planes, ET savings and latency
+//! histograms all merge additively) for the Prometheus exporter, while
+//! keeping the per-shard views available for labeled series.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::Metrics;
+
+/// Cheap cloneable view over the shard set's metrics handles.
+///
+/// Handles outlive their coordinators, so snapshots keep working after
+/// shards are poisoned or the set is shut down — the serving front-end
+/// can hold an aggregator while the batcher thread owns the set itself.
+#[derive(Clone)]
+pub struct MetricsAggregator {
+    handles: Vec<Arc<Mutex<Metrics>>>,
+    bits: u32,
+}
+
+impl MetricsAggregator {
+    pub fn new(handles: Vec<Arc<Mutex<Metrics>>>, bits: u32) -> MetricsAggregator {
+        MetricsAggregator { handles, bits }
+    }
+
+    /// Number of shards aggregated (poisoned slots included).
+    pub fn shards(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Snapshot of each shard's metrics, by slot index.
+    pub fn per_shard(&self) -> Vec<Metrics> {
+        self.handles
+            .iter()
+            .map(|h| h.lock().expect("shard metrics poisoned").clone())
+            .collect()
+    }
+
+    /// One merged snapshot across every shard.
+    pub fn merged(&self) -> Metrics {
+        let mut total = Metrics::new(self.bits);
+        for h in &self.handles {
+            total.merge(&h.lock().expect("shard metrics poisoned"));
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn with_requests(bits: u32, requests: u64, row_cycles: u64) -> Arc<Mutex<Metrics>> {
+        let mut m = Metrics::new(bits);
+        m.requests = requests;
+        m.row_cycles = row_cycles;
+        m.busy = Duration::from_micros(10 * requests);
+        m.latency.record(Duration::from_micros(50));
+        Arc::new(Mutex::new(m))
+    }
+
+    #[test]
+    fn merged_is_the_sum_of_shards() {
+        let agg = MetricsAggregator::new(
+            vec![with_requests(8, 3, 100), with_requests(8, 5, 200)],
+            8,
+        );
+        assert_eq!(agg.shards(), 2);
+        let merged = agg.merged();
+        assert_eq!(merged.requests, 8);
+        assert_eq!(merged.row_cycles, 300);
+        assert_eq!(merged.latency.count(), 2);
+        assert_eq!(merged.busy, Duration::from_micros(80));
+        let per = agg.per_shard();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].requests, 3);
+        assert_eq!(per[1].requests, 5);
+    }
+
+    #[test]
+    fn empty_aggregator_merges_to_zero() {
+        let agg = MetricsAggregator::new(Vec::new(), 8);
+        let merged = agg.merged();
+        assert_eq!(merged.requests, 0);
+        assert_eq!(merged.bits(), 8);
+    }
+}

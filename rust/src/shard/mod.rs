@@ -1,0 +1,38 @@
+//! L3.5 sharding subsystem: scatter–gather execution of wide transforms
+//! across multiple crossbar coordinator pools.
+//!
+//! The paper stitches 16×16 crossbar cells column- and row-wise for
+//! "perfect parallelism" (§IV); a single [`crate::coordinator::Coordinator`]
+//! reproduces one such tile chain, but walks every block of a wide
+//! request on one worker.  This module turns N independent pools into
+//! one logical accelerator:
+//!
+//! ```text
+//!   request (width W)
+//!        │ planner: split padded block list, balance estimated
+//!        ▼          row-cycles (LPT over healthy shards)
+//!   ┌─────────┬─────────┬─────────┐
+//!   │ shard 0 │ shard 1 │ shard 2 │   each its own Coordinator pool
+//!   │ submit  │ submit  │ submit  │   (tiles, workers, RNG stream)
+//!   └────┬────┴────┬────┴────┬────┘
+//!        ▼ router: drain_one per shard, scatter outputs back
+//!   reassembled output (bit-identical to a single pool, digital)
+//! ```
+//!
+//! * [`planner`] — per-block row-cycle estimation + deterministic LPT
+//!   placement balancing load across healthy shards;
+//! * [`router`] — the scatter–gather executor over the coordinator's
+//!   `submit`/`drain_one` API, with poisoned-shard load shedding;
+//! * [`set`] — shard lifecycle: per-shard seed/backend config, health
+//!   tracking, retirement of dead pools;
+//! * [`metrics_agg`] — merged + per-shard [`crate::coordinator::Metrics`]
+//!   snapshots for the serving `/metrics` exporter.
+
+pub mod metrics_agg;
+pub mod planner;
+pub mod router;
+pub mod set;
+
+pub use metrics_agg::MetricsAggregator;
+pub use planner::{estimate_block_cost, plan_blocks, BlockPlan, ShardAssignment};
+pub use set::{ShardSet, ShardSetConfig, SHARD_SEED_STRIDE};

@@ -1,0 +1,193 @@
+//! Placement planning: partition a request's tile-block list across
+//! shards so each shard carries a similar estimated row-cycle load.
+//!
+//! The coordinator walks a padded request as uniform `tile_n`-wide
+//! blocks, each quantized and scheduled independently (so any partition
+//! of whole blocks reproduces the single-pool output bit-for-bit on the
+//! digital backend).  The planner's job is purely load balance: estimate
+//! the row-cycles each block will execute — early termination makes
+//! blocks heterogeneous — and spread them with a deterministic
+//! longest-processing-time greedy.
+
+/// Blocks placed on one shard (slot index into the
+/// [`crate::shard::ShardSet`]).  `blocks` holds ascending block indices
+/// of the padded request; the router concatenates them in this order and
+/// scatters the shard's output back by the same indices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardAssignment {
+    pub shard: usize,
+    pub blocks: Vec<usize>,
+}
+
+/// One request's placement across the healthy shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockPlan {
+    /// Only shards that received at least one block appear.
+    pub assignments: Vec<ShardAssignment>,
+}
+
+impl BlockPlan {
+    /// Total blocks placed (equals the planned request's block count).
+    pub fn total_blocks(&self) -> usize {
+        self.assignments.iter().map(|a| a.blocks.len()).sum()
+    }
+}
+
+/// Estimated row-cycles one `tile_n`-wide block will execute.
+///
+/// Mirrors the scheduler's cost structure without running it:
+///
+/// * an exactly-zero block retires after a single plane (the digital
+///   zero-input fast path) — one row-cycle per row;
+/// * a row with early-termination threshold `T` skips roughly the
+///   trailing planes whose remaining contribution fits under `T`
+///   (`~log2(1 + T)` of them), floored at one executed plane.
+///
+/// This is a heuristic for balance, not an exact count: over- or
+/// under-estimation only skews placement, never correctness.
+pub fn estimate_block_cost(x: &[f32], thresholds_units: &[f64], bits: u32) -> u64 {
+    debug_assert_eq!(x.len(), thresholds_units.len());
+    if x.iter().all(|&v| v == 0.0) {
+        return x.len() as u64;
+    }
+    let bits = u64::from(bits.max(1));
+    let mut cost = 0u64;
+    for &t in thresholds_units {
+        let skip = if t <= 0.0 {
+            0
+        } else {
+            ((t + 1.0).log2().floor() as u64).min(bits - 1)
+        };
+        cost += bits - skip;
+    }
+    cost
+}
+
+/// Partition blocks `0..costs.len()` across `shard_ids`, balancing
+/// cumulative cost.
+///
+/// `loads` carries the running per-shard load (aligned with
+/// `shard_ids`); it is updated in place so a batch of requests planned
+/// one after another balances globally, not just per request.
+///
+/// Deterministic: blocks are placed heaviest-first onto the least-loaded
+/// shard, ties broken by lowest block index / lowest shard position.
+///
+/// # Panics
+/// If `shard_ids` is empty or `loads.len() != shard_ids.len()`.
+pub fn plan_blocks(costs: &[u64], shard_ids: &[usize], loads: &mut [u64]) -> BlockPlan {
+    assert!(!shard_ids.is_empty(), "cannot plan onto zero shards");
+    assert_eq!(shard_ids.len(), loads.len(), "loads must align with shard_ids");
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by_key(|&b| (std::cmp::Reverse(costs[b]), b));
+    let mut placed: Vec<Vec<usize>> = vec![Vec::new(); shard_ids.len()];
+    for &b in &order {
+        let k = (0..loads.len())
+            .min_by_key(|&k| (loads[k], k))
+            .expect("at least one shard");
+        loads[k] += costs[b];
+        placed[k].push(b);
+    }
+    let assignments = placed
+        .into_iter()
+        .enumerate()
+        .filter(|(_, blocks)| !blocks.is_empty())
+        .map(|(k, mut blocks)| {
+            blocks.sort_unstable();
+            ShardAssignment {
+                shard: shard_ids[k],
+                blocks,
+            }
+        })
+        .collect();
+    BlockPlan { assignments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_block_exactly_once() {
+        let costs = vec![8, 1, 5, 5, 3, 7, 2, 4];
+        let mut loads = vec![0u64; 3];
+        let plan = plan_blocks(&costs, &[0, 1, 2], &mut loads);
+        let mut seen: Vec<usize> = plan
+            .assignments
+            .iter()
+            .flat_map(|a| a.blocks.iter().copied())
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        assert_eq!(plan.total_blocks(), 8);
+        assert_eq!(loads.iter().sum::<u64>(), 35);
+    }
+
+    #[test]
+    fn balances_uniform_costs_evenly() {
+        let costs = vec![10u64; 8];
+        let mut loads = vec![0u64; 4];
+        plan_blocks(&costs, &[0, 1, 2, 3], &mut loads);
+        assert_eq!(loads, vec![20, 20, 20, 20]);
+    }
+
+    #[test]
+    fn heaviest_block_lands_alone_when_it_dominates() {
+        // One block as heavy as all others combined: LPT gives it its own
+        // shard and spreads the rest over the other.
+        let costs = vec![12, 3, 3, 3, 3];
+        let mut loads = vec![0u64; 2];
+        let plan = plan_blocks(&costs, &[5, 9], &mut loads);
+        let heavy = plan
+            .assignments
+            .iter()
+            .find(|a| a.blocks.contains(&0))
+            .unwrap();
+        assert_eq!(heavy.blocks, vec![0]);
+        assert_eq!(loads, vec![12, 12]);
+    }
+
+    #[test]
+    fn deterministic_and_blocks_ascending() {
+        let costs = vec![4, 4, 4, 4, 4, 4, 4];
+        let mut l1 = vec![0u64; 3];
+        let mut l2 = vec![0u64; 3];
+        let p1 = plan_blocks(&costs, &[0, 1, 2], &mut l1);
+        let p2 = plan_blocks(&costs, &[0, 1, 2], &mut l2);
+        assert_eq!(p1, p2);
+        for a in &p1.assignments {
+            assert!(a.blocks.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn respects_carried_over_loads() {
+        // Shard 0 starts heavily loaded, so a one-block plan avoids it.
+        let mut loads = vec![100u64, 0];
+        let plan = plan_blocks(&[5], &[0, 1], &mut loads);
+        assert_eq!(plan.assignments, vec![ShardAssignment { shard: 1, blocks: vec![0] }]);
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        let mut loads = vec![0u64];
+        let plan = plan_blocks(&[1, 2, 3], &[7], &mut loads);
+        assert_eq!(plan.assignments.len(), 1);
+        assert_eq!(plan.assignments[0].shard, 7);
+        assert_eq!(plan.assignments[0].blocks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cost_estimates_track_the_scheduler_shape() {
+        let zeros = vec![0.0f32; 16];
+        let live: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+        let t0 = vec![0.0f64; 16];
+        let t_huge = vec![1e9f64; 16];
+        // Zero block: one row-cycle per row.
+        assert_eq!(estimate_block_cost(&zeros, &t0, 8), 16);
+        // Full-precision block: bits cycles per row.
+        assert_eq!(estimate_block_cost(&live, &t0, 8), 16 * 8);
+        // Saturating thresholds: floored at one cycle per row.
+        assert_eq!(estimate_block_cost(&live, &t_huge, 8), 16);
+    }
+}

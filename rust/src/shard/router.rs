@@ -1,0 +1,386 @@
+//! Scatter–gather execution of wide transforms across the shard set.
+//!
+//! A width-W request is padded to whole `tile_n` blocks, the block list
+//! is partitioned by the [`super::planner`] across the healthy shards
+//! (balancing estimated row-cycles), each shard's portion is further
+//! split into per-worker lanes and fanned out through the coordinator's
+//! `submit`/`drain_one` async API, and the per-slice outputs are
+//! scattered back into the request's output vector by block index.
+//!
+//! Because every block is quantized and scheduled independently, any
+//! placement reproduces the single-coordinator output bit-for-bit on the
+//! digital backend — placement is a pure throughput decision.
+//!
+//! Failure isolation: a shard whose pool errors on submit or drain is
+//! poisoned and its slices (outstanding ones included) are re-routed to
+//! the surviving shards.  A request only fails once *every* shard is
+//! gone.  Re-executed slices are harmless: a poisoned shard is never
+//! drained again, so a duplicate result can never be observed.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::TransformRequest;
+
+use super::planner::{estimate_block_cost, plan_blocks};
+use super::set::ShardSet;
+
+/// One unit of scatter work: a subset of one request's blocks bound for
+/// one shard.
+#[derive(Debug, Clone)]
+struct Slice {
+    /// Index into the batch.
+    req: usize,
+    /// Target shard slot (revised when the target is poisoned).
+    shard: usize,
+    /// Ascending block indices of the padded request.
+    blocks: Vec<usize>,
+}
+
+/// Concatenate `blocks` of the padded request into one sub-request.
+fn sub_request(x: &[f32], th: &[f64], blocks: &[usize], tile_n: usize) -> TransformRequest {
+    let mut sx = Vec::with_capacity(blocks.len() * tile_n);
+    let mut sth = Vec::with_capacity(blocks.len() * tile_n);
+    for &b in blocks {
+        sx.extend_from_slice(&x[b * tile_n..(b + 1) * tile_n]);
+        sth.extend_from_slice(&th[b * tile_n..(b + 1) * tile_n]);
+    }
+    TransformRequest {
+        x: sx,
+        thresholds_units: sth,
+    }
+}
+
+/// Scatter a slice's concatenated outputs back by block index.
+fn gather(out: &mut [f32], values: &[f32], blocks: &[usize], tile_n: usize) {
+    debug_assert_eq!(values.len(), blocks.len() * tile_n);
+    for (j, &b) in blocks.iter().enumerate() {
+        out[b * tile_n..(b + 1) * tile_n].copy_from_slice(&values[j * tile_n..(j + 1) * tile_n]);
+    }
+}
+
+/// Split `blocks` into at most `lanes` contiguous chunks of near-equal
+/// length (at least one block each).
+fn split_lanes(blocks: &[usize], lanes: usize) -> Vec<Vec<usize>> {
+    let lanes = lanes.clamp(1, blocks.len().max(1));
+    let base = blocks.len() / lanes;
+    let extra = blocks.len() % lanes;
+    let mut chunks = Vec::with_capacity(lanes);
+    let mut off = 0;
+    for lane in 0..lanes {
+        let take = base + usize::from(lane < extra);
+        if take == 0 {
+            break;
+        }
+        chunks.push(blocks[off..off + take].to_vec());
+        off += take;
+    }
+    chunks
+}
+
+/// Healthy shard with the fewest outstanding slices (re-route target).
+fn reroute_target(set: &ShardSet, outstanding: &[HashMap<u64, Slice>]) -> Result<usize> {
+    set.healthy()
+        .into_iter()
+        .min_by_key(|&s| outstanding[s].len())
+        .ok_or_else(|| anyhow!("every shard is poisoned; request cannot be served"))
+}
+
+/// Retire a dead shard and push everything in flight on it back onto the
+/// work queue (the re-queued slices keep their stale shard id; the
+/// scatter loop re-routes them to a healthy target).
+fn poison_and_requeue(
+    set: &mut ShardSet,
+    shard: usize,
+    outstanding: &mut [HashMap<u64, Slice>],
+    queue: &mut VecDeque<Slice>,
+) {
+    set.poison(shard);
+    for (_, orphan) in outstanding[shard].drain() {
+        queue.push_back(orphan);
+    }
+}
+
+/// Execute one transform request across the shard set.  Returns outputs
+/// at padded width, bit-identical (digital backend) to a single
+/// [`crate::coordinator::Coordinator`] serving the same request.
+pub fn transform(set: &mut ShardSet, req: &TransformRequest) -> Result<Vec<f32>> {
+    let mut outs = transform_batch(set, std::slice::from_ref(req))?;
+    Ok(outs.pop().expect("one request, one output"))
+}
+
+/// Execute a batch of requests, scatter–gathering every request's blocks
+/// across the healthy shards.  Outputs are returned in request order at
+/// padded width.
+///
+/// The router assumes exclusive use of the set's async API: every slice
+/// it submits is drained before returning, and no caller-submitted
+/// requests may be outstanding on any shard when it is invoked.
+pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<Vec<Vec<f32>>> {
+    let tile_n = set.tile_n();
+    let bits = set.bits();
+
+    // Validate + pad up front so malformed input is a clean error at the
+    // routing boundary (mirrors `Coordinator::validate`).
+    let mut padded: Vec<(Vec<f32>, Vec<f64>)> = Vec::with_capacity(reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
+        if req.x.is_empty() {
+            bail!("request {i} has an empty input vector");
+        }
+        if req.thresholds_units.len() != req.x.len() {
+            bail!(
+                "request {i}: thresholds_units length {} does not match input length {}",
+                req.thresholds_units.len(),
+                req.x.len()
+            );
+        }
+        let w = req.x.len().div_ceil(tile_n) * tile_n;
+        let mut x = req.x.clone();
+        x.resize(w, 0.0);
+        let mut th = req.thresholds_units.clone();
+        th.resize(w, 0.0);
+        padded.push((x, th));
+    }
+
+    // Plan the whole batch over the healthy shards, carrying the load
+    // vector across requests so the batch balances globally.
+    let healthy = set.healthy();
+    if healthy.is_empty() {
+        bail!("every shard is poisoned; request cannot be served");
+    }
+    // Intra-shard lane splitting trades dispatch overhead (one channel
+    // send + allocation per slice — the cost pool.rs's one-job-per-
+    // request design amortizes) for intra-request parallelism.  A batch
+    // with at least `workers` requests already saturates each shard's
+    // pool at request granularity, so only split when the batch is too
+    // small to do that: 1 request on 4-worker shards → 4 lanes, 2 → 2,
+    // ≥ workers → 1 (the PR-1 dispatch behavior).
+    let lanes_per_shard = set
+        .workers_per_shard()
+        .max(1)
+        .div_ceil(reqs.len().max(1));
+    let mut loads = vec![0u64; healthy.len()];
+    let mut queue: VecDeque<Slice> = VecDeque::new();
+    for (ri, (x, th)) in padded.iter().enumerate() {
+        let nblocks = x.len() / tile_n;
+        let costs: Vec<u64> = (0..nblocks)
+            .map(|b| {
+                estimate_block_cost(
+                    &x[b * tile_n..(b + 1) * tile_n],
+                    &th[b * tile_n..(b + 1) * tile_n],
+                    bits,
+                )
+            })
+            .collect();
+        let plan = plan_blocks(&costs, &healthy, &mut loads);
+        for a in plan.assignments {
+            // Split each shard's share into per-worker lanes so the
+            // shard's whole pool works on the request, not one thread.
+            for blocks in split_lanes(&a.blocks, lanes_per_shard) {
+                queue.push_back(Slice {
+                    req: ri,
+                    shard: a.shard,
+                    blocks,
+                });
+            }
+        }
+    }
+
+    let mut outs: Vec<Vec<f32>> = padded.iter().map(|(x, _)| vec![0.0f32; x.len()]).collect();
+    let mut outstanding: Vec<HashMap<u64, Slice>> =
+        (0..set.len()).map(|_| HashMap::new()).collect();
+
+    loop {
+        // Scatter phase: submit everything queued, shedding poisoned
+        // shards' slices to the survivors.  `try_submit` (never the
+        // blocking `submit`) keeps a full bounded job queue from
+        // deadlocking the scatter against the undrained result queue:
+        // on backpressure we drain one finished result first.
+        while let Some(mut slice) = queue.pop_front() {
+            if !set.is_healthy(slice.shard) {
+                slice.shard = reroute_target(set, &outstanding)?;
+            }
+            let shard = slice.shard;
+            let (x, th) = &padded[slice.req];
+            let sub = sub_request(x, th, &slice.blocks, tile_n);
+            let coord = set.coordinator_mut(shard).expect("healthy shard has a pool");
+            match coord.try_submit(&sub) {
+                Ok(Some(id)) => {
+                    outstanding[shard].insert(id, slice);
+                }
+                Ok(None) => {
+                    // Bounded queue full: free a slot by collecting one
+                    // finished result from this shard, then retry.
+                    match set.coordinator_mut(shard).expect("healthy shard has a pool").drain_one()
+                    {
+                        Ok(done) => {
+                            let finished = outstanding[shard]
+                                .remove(&done.request_id)
+                                .expect("drained id was submitted by this router");
+                            gather(&mut outs[finished.req], &done.values, &finished.blocks, tile_n);
+                        }
+                        Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
+                    }
+                    queue.push_front(slice);
+                }
+                Err(_) => {
+                    // Pool is gone: poison the shard and re-route both
+                    // this slice and anything already in flight on it.
+                    poison_and_requeue(set, shard, &mut outstanding, &mut queue);
+                    queue.push_back(slice);
+                }
+            }
+        }
+
+        // Gather phase: drain one result from any shard with work in
+        // flight; a drain failure re-queues that shard's slices.
+        let Some(shard) = (0..set.len()).find(|&s| !outstanding[s].is_empty()) else {
+            break;
+        };
+        match set.coordinator_mut(shard).expect("outstanding implies healthy").drain_one() {
+            Ok(done) => {
+                let slice = outstanding[shard]
+                    .remove(&done.request_id)
+                    .expect("drained id was submitted by this router");
+                gather(&mut outs[slice.req], &done.values, &slice.blocks, tile_n);
+            }
+            Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
+        }
+    }
+
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
+    use crate::shard::set::ShardSetConfig;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from_u64(seed);
+        (0..n).map(|_| r.uniform_range(-1.0, 1.0) as f32).collect()
+    }
+
+    fn golden(req: &TransformRequest) -> Vec<f32> {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let out = c.transform(req).unwrap();
+        c.shutdown();
+        out
+    }
+
+    #[test]
+    fn split_lanes_covers_blocks_contiguously() {
+        let blocks: Vec<usize> = (0..7).collect();
+        let chunks = split_lanes(&blocks, 3);
+        assert_eq!(chunks, vec![vec![0, 1, 2], vec![3, 4], vec![5, 6]]);
+        assert_eq!(split_lanes(&blocks, 100).len(), 7);
+        assert_eq!(split_lanes(&[5], 4), vec![vec![5]]);
+    }
+
+    #[test]
+    fn gather_scatters_by_block_index() {
+        let mut out = vec![0.0f32; 12];
+        let values = vec![1.0, 1.0, 1.0, 1.0, 3.0, 3.0, 3.0, 3.0];
+        gather(&mut out, &values, &[0, 2], 4);
+        assert_eq!(out, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn sharded_output_matches_single_coordinator() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let req = TransformRequest {
+            x: sample(96, 11),
+            thresholds_units: vec![0.0; 96],
+        };
+        let out = transform(&mut set, &req).unwrap();
+        assert_eq!(out, golden(&req));
+        set.shutdown();
+    }
+
+    #[test]
+    fn batch_outputs_come_back_in_request_order() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let reqs: Vec<TransformRequest> = (0..5)
+            .map(|i| TransformRequest {
+                x: sample(48, 20 + i),
+                thresholds_units: vec![0.0; 48],
+            })
+            .collect();
+        let outs = transform_batch(&mut set, &reqs).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(outs[i], golden(req), "request {i}");
+        }
+        set.shutdown();
+    }
+
+    #[test]
+    fn rejects_malformed_requests_at_the_boundary() {
+        let mut set = ShardSet::new(ShardSetConfig::default()).unwrap();
+        assert!(transform(
+            &mut set,
+            &TransformRequest {
+                x: vec![],
+                thresholds_units: vec![],
+            }
+        )
+        .is_err());
+        assert!(transform(
+            &mut set,
+            &TransformRequest {
+                x: vec![1.0; 8],
+                thresholds_units: vec![0.0; 4],
+            }
+        )
+        .is_err());
+        set.shutdown();
+    }
+
+    #[test]
+    fn poisoned_shard_sheds_load_to_siblings() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let req = TransformRequest {
+            x: sample(128, 31),
+            thresholds_units: vec![0.0; 128],
+        };
+        // Kill shard 1's pool before routing: its submits fail, the
+        // router poisons it and the survivors absorb the blocks.
+        set.coordinator_mut(1).unwrap().abort();
+        let out = transform(&mut set, &req).unwrap();
+        assert_eq!(out, golden(&req));
+        assert_eq!(set.healthy(), vec![0, 2]);
+        set.shutdown();
+    }
+
+    #[test]
+    fn all_shards_poisoned_is_a_clean_error() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        set.coordinator_mut(0).unwrap().abort();
+        set.coordinator_mut(1).unwrap().abort();
+        let req = TransformRequest {
+            x: sample(32, 40),
+            thresholds_units: vec![0.0; 32],
+        };
+        let err = transform(&mut set, &req).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        set.shutdown();
+    }
+}

@@ -1,0 +1,273 @@
+//! Shard-set lifecycle: N independent [`Coordinator`] pools presented as
+//! one logical accelerator.
+//!
+//! Each shard owns its own worker threads, tiles and RNG stream — shards
+//! never share mutable state, so they scale like the paper's stitched
+//! crossbar arrays (PAPER.md §IV).  Per-shard seeds are derived from the
+//! base seed with a large odd stride, and each shard's coordinator then
+//! derives per-*worker* variability seeds from its shard seed, so every
+//! simulated macro in the whole set samples independent process
+//! variability.
+//!
+//! Failure isolation: a shard whose pool dies is *poisoned* — taken out
+//! of the healthy set and retired — rather than failing requests.  The
+//! [`crate::shard::router`] re-routes a poisoned shard's slices to the
+//! surviving shards.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, Metrics, TileKind};
+
+use super::metrics_agg::MetricsAggregator;
+
+/// Per-shard seed stride (large odd constant, well clear of the
+/// coordinator's per-worker stride of `0x9E37`).
+pub const SHARD_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Shard-set configuration.
+#[derive(Debug, Clone)]
+pub struct ShardSetConfig {
+    /// Number of independent coordinator pools.
+    pub shards: usize,
+    /// Base pool configuration; shard `s` runs it with
+    /// `seed + s * seed_stride` (and `kinds[s]` when given).
+    pub coordinator: CoordinatorConfig,
+    /// Per-shard seed stride.
+    pub seed_stride: u64,
+    /// Optional per-shard backend override (length must equal `shards`);
+    /// `None` runs every shard on `coordinator.kind`.
+    pub kinds: Option<Vec<TileKind>>,
+}
+
+impl Default for ShardSetConfig {
+    fn default() -> Self {
+        ShardSetConfig {
+            shards: 1,
+            coordinator: CoordinatorConfig::default(),
+            seed_stride: SHARD_SEED_STRIDE,
+            kinds: None,
+        }
+    }
+}
+
+/// N coordinator pools plus health tracking and retired-shard metrics.
+pub struct ShardSet {
+    /// `None` marks a poisoned slot.  Indices are stable for the set's
+    /// lifetime so metrics labels and plans stay meaningful.
+    slots: Vec<Option<Coordinator>>,
+    /// Live metrics handles, one per slot — kept even after poisoning so
+    /// the aggregator can still report what a dead shard served.
+    handles: Vec<Arc<Mutex<Metrics>>>,
+    /// Worker-side metrics folded out of poisoned shards at poison time.
+    retired: Metrics,
+    /// Healthy-shard count, shared with the serving front-end's
+    /// `/metrics` exporter.
+    healthy_gauge: Arc<AtomicUsize>,
+    config: ShardSetConfig,
+}
+
+impl ShardSet {
+    pub fn new(config: ShardSetConfig) -> Result<ShardSet> {
+        if config.shards == 0 {
+            bail!("shard set needs at least one shard");
+        }
+        if let Some(kinds) = &config.kinds {
+            if kinds.len() != config.shards {
+                bail!(
+                    "per-shard kinds length {} does not match shards {}",
+                    kinds.len(),
+                    config.shards
+                );
+            }
+        }
+        let mut slots = Vec::with_capacity(config.shards);
+        let mut handles = Vec::with_capacity(config.shards);
+        for s in 0..config.shards {
+            let mut cc = config.coordinator.clone();
+            cc.seed = cc.seed.wrapping_add((s as u64).wrapping_mul(config.seed_stride));
+            if let Some(kinds) = &config.kinds {
+                cc.kind = kinds[s].clone();
+            }
+            let coord = Coordinator::new(cc);
+            handles.push(coord.metrics_handle());
+            slots.push(Some(coord));
+        }
+        let retired = Metrics::new(config.coordinator.bits);
+        let healthy_gauge = Arc::new(AtomicUsize::new(config.shards));
+        Ok(ShardSet {
+            slots,
+            handles,
+            retired,
+            healthy_gauge,
+            config,
+        })
+    }
+
+    pub fn config(&self) -> &ShardSetConfig {
+        &self.config
+    }
+
+    /// Total slots, poisoned included.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Tile width every shard runs (shards share the base geometry).
+    pub fn tile_n(&self) -> usize {
+        self.config.coordinator.tile_n
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.config.coordinator.bits
+    }
+
+    /// Worker threads per shard (the router splits a shard's blocks this
+    /// many ways for intra-shard parallelism).
+    pub fn workers_per_shard(&self) -> usize {
+        self.config.coordinator.workers
+    }
+
+    pub fn is_healthy(&self, shard: usize) -> bool {
+        self.slots.get(shard).is_some_and(Option::is_some)
+    }
+
+    /// Slot indices of the currently healthy shards, ascending.
+    pub fn healthy(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&s| self.is_healthy(s)).collect()
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Shared healthy-count gauge for metrics exporters.
+    pub fn health_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.healthy_gauge)
+    }
+
+    /// Mutable access to one shard's coordinator (`None` if poisoned or
+    /// out of range).
+    pub fn coordinator_mut(&mut self, shard: usize) -> Option<&mut Coordinator> {
+        self.slots.get_mut(shard).and_then(Option::as_mut)
+    }
+
+    /// Retire a shard: take it out of the healthy set, shut its pool
+    /// down (joining whatever workers are still alive) and fold its
+    /// worker metrics into the retired accumulator.  Idempotent.
+    pub fn poison(&mut self, shard: usize) {
+        if let Some(coord) = self.slots.get_mut(shard).and_then(Option::take) {
+            self.retired.merge(&coord.shutdown());
+            self.healthy_gauge.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Aggregator over every shard's live metrics handle (poisoned
+    /// shards keep reporting what they served before dying).
+    pub fn aggregator(&self) -> MetricsAggregator {
+        MetricsAggregator::new(self.handles.clone(), self.config.coordinator.bits)
+    }
+
+    /// Merged snapshot of drained work across all shards.
+    pub fn metrics(&self) -> Metrics {
+        self.aggregator().merged()
+    }
+
+    /// Shut every surviving pool down and return the merged per-worker
+    /// metrics, poisoned shards included.
+    pub fn shutdown(self) -> Metrics {
+        let mut total = self.retired;
+        for slot in self.slots.into_iter().flatten() {
+            total.merge(&slot.shutdown());
+        }
+        self.healthy_gauge.store(0, Ordering::Release);
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TransformRequest;
+
+    #[test]
+    fn spins_up_and_shuts_down_n_shards() {
+        let set = ShardSet::new(ShardSetConfig {
+            shards: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.healthy(), vec![0, 1, 2]);
+        assert_eq!(set.healthy_count(), 3);
+        let m = set.shutdown();
+        assert_eq!(m.requests, 0);
+    }
+
+    #[test]
+    fn rejects_zero_shards_and_mismatched_kinds() {
+        assert!(ShardSet::new(ShardSetConfig {
+            shards: 0,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(ShardSet::new(ShardSetConfig {
+            shards: 2,
+            kinds: Some(vec![TileKind::Digital]),
+            ..Default::default()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn poison_removes_a_shard_and_keeps_its_metrics() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.17).cos()).collect();
+        let req = TransformRequest {
+            x,
+            thresholds_units: vec![0.0; 16],
+        };
+        let id = set.coordinator_mut(0).unwrap().submit(&req).unwrap();
+        let done = set.coordinator_mut(0).unwrap().drain_one().unwrap();
+        assert_eq!(done.request_id, id);
+
+        let gauge = set.health_handle();
+        set.poison(0);
+        set.poison(0); // idempotent
+        assert_eq!(set.healthy(), vec![1]);
+        assert_eq!(gauge.load(Ordering::Acquire), 1);
+        assert!(set.coordinator_mut(0).is_none());
+        // The poisoned shard's served work survives in both views.
+        assert_eq!(set.metrics().requests, 1);
+        let m = set.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(gauge.load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn per_shard_seeds_differ() {
+        let set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        // Derivation happens in new(); spot-check the stride arithmetic.
+        let base = set.config().coordinator.seed;
+        assert_ne!(
+            base.wrapping_add(SHARD_SEED_STRIDE),
+            base,
+            "stride must move the seed"
+        );
+        set.shutdown();
+    }
+}

@@ -16,6 +16,22 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// JSON form for machine-readable baselines
+    /// (`BENCH_<group>.json` emitted by bench binaries).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(self.name.clone()));
+        obj.insert("iters".to_string(), Json::Num(self.iters as f64));
+        obj.insert("mean_ns".to_string(), Json::Num(self.mean.as_nanos() as f64));
+        obj.insert(
+            "median_ns".to_string(),
+            Json::Num(self.median.as_nanos() as f64),
+        );
+        obj.insert("min_ns".to_string(), Json::Num(self.min.as_nanos() as f64));
+        Json::Obj(obj)
+    }
+
     pub fn report(&self) {
         println!(
             "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
@@ -91,6 +107,27 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     }
 }
 
+/// Write a machine-readable baseline for a bench group: the results
+/// plus any derived scalar figures (speedups, throughput ratios).
+pub fn write_json(
+    path: &str,
+    group: &str,
+    results: &[BenchResult],
+    derived: &[(&str, f64)],
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("group".to_string(), Json::Str(group.to_string()));
+    obj.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+    );
+    for (name, value) in derived {
+        obj.insert((*name).to_string(), Json::Num(*value));
+    }
+    std::fs::write(path, format!("{}\n", Json::Obj(obj)))
+}
+
 /// Print the standard header for a bench binary.
 pub fn header(group: &str) {
     println!("\n=== bench group: {group} ===");
@@ -111,6 +148,26 @@ mod tests {
         });
         assert!(r.iters > 0);
         assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn bench_result_json_baseline_round_trips() {
+        let r = BenchResult {
+            name: "x".to_string(),
+            iters: 10,
+            mean: Duration::from_nanos(1500),
+            median: Duration::from_nanos(1400),
+            min: Duration::from_nanos(1000),
+        };
+        let dir = crate::util::tempdir::TempDir::new("bench-json").unwrap();
+        let path = dir.path().join("BENCH_test.json");
+        write_json(path.to_str().unwrap(), "test", &[r], &[("speedup", 2.5)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("group").and_then(|v| v.as_str()), Some("test"));
+        assert_eq!(parsed.get("speedup").and_then(|v| v.as_f64()), Some(2.5));
+        let results = parsed.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(results[0].get("mean_ns").and_then(|v| v.as_f64()), Some(1500.0));
     }
 
     #[test]

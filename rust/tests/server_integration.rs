@@ -1,12 +1,14 @@
 //! End-to-end serving integration: the HTTP subsystem on an ephemeral
 //! port, driven by concurrent std-thread clients speaking hand-rolled
-//! HTTP/1.1 over `TcpStream`.
+//! HTTP/1.1 over `TcpStream` — including persistent (keep-alive)
+//! connections and multi-shard scatter–gather serving.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 use repro::bitplane::QuantBwht;
+use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
 use repro::server::{AdmissionConfig, Server, ServerConfig};
 use repro::util::json::{self, Json};
 use repro::util::rng::Rng;
@@ -60,6 +62,48 @@ fn transform_body(x: &[f32], threshold: Option<f64>) -> String {
             )
         }
     }
+}
+
+/// Read one framed HTTP response off a persistent connection.
+/// Returns `(status, headers, body)`; headers are lower-cased names.
+fn read_response(
+    reader: &mut BufReader<TcpStream>,
+) -> (u16, Vec<(String, String)>, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("header line");
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        let (name, value) = trimmed.split_once(':').expect("header colon");
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim().to_string();
+        if name == "content-length" {
+            content_length = value.parse().expect("content length");
+        }
+        headers.push((name, value));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    (status, headers, String::from_utf8(body).expect("utf-8 body"))
+}
+
+fn header_value<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
 }
 
 fn metric_value(text: &str, name: &str) -> f64 {
@@ -150,6 +194,199 @@ fn serves_concurrent_clients_with_correct_outputs_and_metrics() {
 
     let m = server.shutdown();
     assert_eq!(m.requests, 41);
+}
+
+#[test]
+fn keep_alive_serves_multiple_requests_on_one_connection() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Three sequential requests on the same connection (HTTP/1.1
+    // defaults to keep-alive; no Connection header sent).
+    let mut rng = Rng::seed_from_u64(700);
+    for i in 0..3 {
+        let x: Vec<f32> = (0..16)
+            .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+            .collect();
+        let body = transform_body(&x, None);
+        write!(
+            writer,
+            "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        writer.flush().unwrap();
+        let (status, headers, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert_eq!(
+            header_value(&headers, "connection"),
+            Some("keep-alive"),
+            "request {i} must keep the connection open"
+        );
+        let parsed = json::parse(&body).unwrap();
+        let y: Vec<f32> = parsed
+            .get("y")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(y, QuantBwht::new(16, 16, 8).transform(&x), "request {i}");
+    }
+
+    // An explicit Connection: close is honored and the socket drains.
+    let body = transform_body(&[0.5; 16], None);
+    write!(
+        writer,
+        "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let (status, headers, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(header_value(&headers, "connection"), Some("close"));
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after Connection: close");
+
+    let m = server.shutdown();
+    assert_eq!(m.requests, 4);
+}
+
+#[test]
+fn keep_alive_request_cap_closes_the_connection() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        keepalive_max_requests: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let body = transform_body(&[0.25; 16], None);
+    let raw = format!(
+        "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+
+    write!(writer, "{raw}").unwrap();
+    writer.flush().unwrap();
+    let (status, headers, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(header_value(&headers, "connection"), Some("keep-alive"));
+
+    write!(writer, "{raw}").unwrap();
+    writer.flush().unwrap();
+    let (status, headers, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(
+        header_value(&headers, "connection"),
+        Some("close"),
+        "the per-connection cap must close the second response"
+    );
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no more requests after the cap");
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_idle_timeout_closes_quiet_connections() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        keepalive_idle: Duration::from_millis(100),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let body = transform_body(&[0.75; 16], None);
+    write!(
+        writer,
+        "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let (status, _, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+
+    // Go quiet past the idle deadline: the server hangs up (EOF), and
+    // does so silently (no 400 for the non-request).
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "idle timeout must close without a response");
+    server.shutdown();
+}
+
+#[test]
+fn sharded_server_is_bit_identical_to_a_single_pool() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    // A wide request that spans many tile blocks across the 3 shards.
+    let mut rng = Rng::seed_from_u64(900);
+    let x: Vec<f32> = (0..200)
+        .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+        .collect();
+    let (status, body) = post_json(addr, "/v1/transform", &transform_body(&x, None));
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    assert_eq!(parsed.get("padded_dim").and_then(Json::as_f64), Some(208.0));
+    let y: Vec<f32> = parsed
+        .get("y")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let mut single = Coordinator::new(CoordinatorConfig::default());
+    let golden = single
+        .transform(&TransformRequest {
+            x,
+            thresholds_units: vec![0.0; 200],
+        })
+        .unwrap();
+    single.shutdown();
+    assert_eq!(y, golden, "sharded serving must match a single pool");
+
+    let (status, metrics) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(metric_value(&metrics, "repro_shards_healthy"), 3.0, "{metrics}");
+    assert_eq!(metric_value(&metrics, "repro_shards_total"), 3.0);
+    assert!(metrics.contains("repro_shard_requests_total{shard=\"2\"}"));
+    assert!(metric_value(&metrics, "repro_elements_total") >= 208.0);
+    server.shutdown();
 }
 
 #[test]

@@ -1,0 +1,159 @@
+//! Sharding correctness: scatter–gather across N coordinator pools must
+//! be bit-identical to a single coordinator on the digital backend —
+//! across random widths (including ones that don't divide evenly into
+//! tiles or shards), shard counts, and early-termination thresholds —
+//! and must survive shard poisoning by shedding load to siblings.
+
+use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use repro::shard::{router, ShardSet, ShardSetConfig};
+use repro::util::rng::Rng;
+
+fn sample_request(width: usize, rng: &mut Rng, threshold_mode: usize) -> TransformRequest {
+    let x: Vec<f32> = (0..width)
+        .map(|_| rng.uniform_range(-1.5, 1.5) as f32)
+        .collect();
+    let thresholds_units: Vec<f64> = (0..width)
+        .map(|_| match threshold_mode {
+            0 => 0.0,                                // lossless, full precision
+            1 => rng.uniform_range(0.0, 60.0),       // mixed early termination
+            _ => 1e9,                                // saturating: everything zeroes
+        })
+        .collect();
+    TransformRequest {
+        x,
+        thresholds_units,
+    }
+}
+
+fn single_pool(req: &TransformRequest) -> Vec<f32> {
+    let mut c = Coordinator::new(CoordinatorConfig::default());
+    let out = c.transform(req).unwrap();
+    c.shutdown();
+    out
+}
+
+/// Property-style sweep: sharded output is bit-identical to the single
+/// coordinator across widths x shard counts x threshold regimes.
+#[test]
+fn sharded_is_bit_identical_to_single_pool_across_the_grid() {
+    let mut rng = Rng::seed_from_u64(2024);
+    // Widths exercise: sub-tile, exact tiles, non-multiples, prime-ish,
+    // and wider-than-shard-count-times-tile.
+    let widths = [4usize, 16, 20, 48, 100, 256, 333, 512];
+    for (wi, &width) in widths.iter().enumerate() {
+        for shards in [1usize, 2, 3, 4, 5] {
+            let threshold_mode = (wi + shards) % 3;
+            let req = sample_request(width, &mut rng, threshold_mode);
+            let golden = single_pool(&req);
+            let mut set = ShardSet::new(ShardSetConfig {
+                shards,
+                ..Default::default()
+            })
+            .unwrap();
+            let out = router::transform(&mut set, &req).unwrap();
+            assert_eq!(
+                out, golden,
+                "width={width} shards={shards} mode={threshold_mode}"
+            );
+            set.shutdown();
+        }
+    }
+}
+
+/// The acceptance-criteria configuration: a 1024-wide request on 16x16
+/// tiles, 4 shards, bit-identical to one coordinator.
+#[test]
+fn wide_1024_request_on_4_shards_matches_single_coordinator() {
+    let mut rng = Rng::seed_from_u64(7);
+    let req = sample_request(1024, &mut rng, 0);
+    let golden = single_pool(&req);
+    assert_eq!(golden.len(), 1024);
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 4,
+        coordinator: CoordinatorConfig {
+            tile_n: 16,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let out = router::transform(&mut set, &req).unwrap();
+    assert_eq!(out, golden);
+    // All four shards took part.
+    let per_shard = set.aggregator().per_shard();
+    assert!(
+        per_shard.iter().all(|m| m.requests > 0),
+        "every shard should serve a slice of a 64-block request: {:?}",
+        per_shard.iter().map(|m| m.requests).collect::<Vec<_>>()
+    );
+    let merged = set.metrics();
+    assert_eq!(merged.cycles.total_elements, 1024);
+    set.shutdown();
+}
+
+/// Batches keep request order and correctness under sharding.
+#[test]
+fn sharded_batches_match_singles_with_mixed_widths() {
+    let mut rng = Rng::seed_from_u64(99);
+    let reqs: Vec<TransformRequest> = [33usize, 64, 128, 17, 256]
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| sample_request(w, &mut rng, i % 3))
+        .collect();
+    let goldens: Vec<Vec<f32>> = reqs.iter().map(single_pool).collect();
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    let outs = router::transform_batch(&mut set, &reqs).unwrap();
+    assert_eq!(outs, goldens);
+    set.shutdown();
+}
+
+/// Early termination accounting survives the scatter: merged row-cycles
+/// show savings when thresholds saturate.
+#[test]
+fn merged_metrics_report_early_termination_savings() {
+    let mut rng = Rng::seed_from_u64(5);
+    let req = sample_request(256, &mut rng, 2); // saturating thresholds
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let out = router::transform(&mut set, &req).unwrap();
+    assert!(out.iter().all(|&v| v == 0.0), "saturating T zeroes everything");
+    let m = set.metrics();
+    assert_eq!(m.cycles.total_elements, 256);
+    assert!(m.row_cycles < 256 * 8, "ET must cut row-cycles");
+    assert!(m.row_cycles_saved() > 0);
+    set.shutdown();
+}
+
+/// Failure isolation: poisoning shards mid-stream sheds their load to
+/// siblings; the request still completes bit-identically.
+#[test]
+fn poisoned_shards_shed_load_without_failing_requests() {
+    let mut rng = Rng::seed_from_u64(41);
+    let req = sample_request(320, &mut rng, 0);
+    let golden = single_pool(&req);
+
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    // First request with all shards alive.
+    assert_eq!(router::transform(&mut set, &req).unwrap(), golden);
+    // Kill two pools; the next request must still come back identical.
+    set.coordinator_mut(0).unwrap().abort();
+    set.coordinator_mut(2).unwrap().abort();
+    assert_eq!(router::transform(&mut set, &req).unwrap(), golden);
+    assert_eq!(set.healthy(), vec![1, 3]);
+    assert_eq!(set.health_handle().load(std::sync::atomic::Ordering::Acquire), 2);
+    // And again, steady-state on the survivors.
+    assert_eq!(router::transform(&mut set, &req).unwrap(), golden);
+    let m = set.shutdown();
+    assert!(m.requests > 0);
+}
