@@ -29,6 +29,7 @@ fn main() {
                 .map(|_| TransformRequest {
                     x: (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect(),
                     thresholds_units: vec![0.0; dim],
+                    scale: None,
                 })
                 .collect();
             let r = bench(
@@ -51,6 +52,7 @@ fn main() {
     let req = TransformRequest {
         x: (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect(),
         thresholds_units: vec![0.0; dim],
+        scale: None,
     };
 
     let mut single = Coordinator::new(CoordinatorConfig {

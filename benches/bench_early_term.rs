@@ -23,14 +23,14 @@ fn main() {
     let mut tile = Tile::new(16, &TileKind::Digital, 0);
     let zero = vec![0.0f64; 16];
     bench("schedule_transform 16x16 no-ET", || {
-        black_box(schedule_transform(&mut tile, black_box(&x), 8, &zero));
+        black_box(schedule_transform(&mut tile, black_box(&x), 8, &zero, None));
     })
     .report();
     let wald: Vec<f64> = (0..16)
         .map(|_| sample_threshold(&mut rng, ThresholdDist::Wald, 1.0).abs() * 255.0)
         .collect();
     bench("schedule_transform 16x16 wald-ET", || {
-        black_box(schedule_transform(&mut tile, black_box(&x), 8, &wald));
+        black_box(schedule_transform(&mut tile, black_box(&x), 8, &wald, None));
     })
     .report();
 }

@@ -1,0 +1,144 @@
+//! End-to-end NN inference bench: the per-sample in-process quantized
+//! loop vs batched execution on crossbar pools through the
+//! [`repro::exec::TransformExecutor`] seam (the ISSUE-3 acceptance
+//! comparison, on a 256-wide hidden layer).
+//!
+//! The in-process loop walks one sample at a time on one thread; the
+//! pooled executor turns the whole activation into a batch of
+//! `TransformRequest`s fanned out across the pool's workers, and the
+//! sharded executor additionally scatter–gathers each sample's blocks
+//! across pools.  A bit-identity gate runs before any timing: on the
+//! digital backend all three paths must agree exactly.
+//!
+//! Emits `BENCH_infer.json` (results + speedups) as a machine-readable
+//! baseline.
+
+use repro::coordinator::{Coordinator, CoordinatorConfig};
+use repro::exec::{self, Pooled, Sharded};
+use repro::nn::{Backend, Mlp};
+use repro::shard::{ShardSet, ShardSetConfig};
+use repro::util::bench::{bench, black_box, header, write_json, BenchResult};
+use repro::util::rng::Rng;
+
+fn main() {
+    header("infer");
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // A 64 -> 256 -> 10 MLP: the 256-wide BWHT layer partitions into two
+    // 128-wide blocks, so the pools run 128x128 tiles.
+    let din = 64usize;
+    let hidden = 256usize;
+    let classes = 10usize;
+    let batch = 64usize;
+    let bits = 8u32;
+    let mut r = Rng::seed_from_u64(7);
+    let mlp = Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.3),
+        vec![0.0; hidden],
+        vec![0.05; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.3),
+        vec![0.0; classes],
+    );
+    let tile = exec::uniform_tile(mlp.bwht.transform_blocks()).expect("uniform blocks");
+    assert_eq!(tile, 128, "256-wide hidden layer -> two 128-wide blocks");
+    let xs: Vec<f32> = (0..batch * din)
+        .map(|_| r.uniform_range(-1.0, 1.0) as f32)
+        .collect();
+    let backend = Backend::Quantized { bits };
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: tile,
+        bits,
+        workers: 4,
+        ..Default::default()
+    });
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 2,
+        coordinator: CoordinatorConfig {
+            tile_n: tile,
+            bits,
+            workers: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .expect("shard set");
+
+    // Correctness gate before timing: digital pooled/sharded inference
+    // must be bit-identical to the in-process quantized backend.
+    let golden = mlp.forward(&xs, batch, backend, &mut Rng::seed_from_u64(0));
+    {
+        let mut executor = Pooled::new(&mut coord);
+        let pooled = mlp
+            .forward_with(&mut executor, &xs, batch, 0)
+            .expect("pooled forward");
+        assert_eq!(pooled, golden, "pooled logits must be bit-identical");
+    }
+    {
+        let mut executor = Sharded::new(&mut set);
+        let sharded = mlp
+            .forward_with(&mut executor, &xs, batch, 0)
+            .expect("sharded forward");
+        assert_eq!(sharded, golden, "sharded logits must be bit-identical");
+    }
+
+    // 1. The pre-executor baseline: one sample at a time, one thread.
+    let mut rng = Rng::seed_from_u64(1);
+    let r_inproc = bench(&format!("in-process per-sample batch{batch}"), || {
+        for i in 0..batch {
+            let y = mlp.forward(&xs[i * din..(i + 1) * din], 1, backend, &mut rng);
+            black_box(y);
+        }
+    });
+    r_inproc.report_throughput(batch as f64, "sample");
+    results.push(r_inproc.clone());
+
+    // 2. Batched through one 4-worker pool.
+    let r_pooled = bench(&format!("pooled batch{batch} tile{tile} workers4"), || {
+        let mut executor = Pooled::new(&mut coord);
+        let y = mlp
+            .forward_with(&mut executor, &xs, batch, 0)
+            .expect("pooled forward");
+        black_box(y);
+    });
+    r_pooled.report_throughput(batch as f64, "sample");
+    results.push(r_pooled.clone());
+
+    // 3. Batched across 2 shards x 2 workers (same hardware budget).
+    let r_sharded = bench(&format!("sharded batch{batch} tile{tile} 2x2"), || {
+        let mut executor = Sharded::new(&mut set);
+        let y = mlp
+            .forward_with(&mut executor, &xs, batch, 0)
+            .expect("sharded forward");
+        black_box(y);
+    });
+    r_sharded.report_throughput(batch as f64, "sample");
+    results.push(r_sharded.clone());
+
+    let pooled_speedup = r_inproc.mean.as_secs_f64() / r_pooled.mean.as_secs_f64();
+    let sharded_speedup = r_inproc.mean.as_secs_f64() / r_sharded.mean.as_secs_f64();
+    println!(
+        "batch{batch} hidden{hidden}: pooled speedup {pooled_speedup:.2}x, \
+         sharded speedup {sharded_speedup:.2}x over the per-sample loop"
+    );
+
+    coord.shutdown();
+    set.shutdown();
+
+    let path = "BENCH_infer.json";
+    match write_json(
+        path,
+        "infer",
+        &results,
+        &[
+            ("pooled_batch_speedup", pooled_speedup),
+            ("sharded_batch_speedup", sharded_speedup),
+        ],
+    ) {
+        Ok(()) => println!("baseline written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

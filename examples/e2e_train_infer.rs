@@ -124,12 +124,14 @@ fn main() -> Result<()> {
         let f1 = coord.transform(&TransformRequest {
             x: h.clone(),
             thresholds_units: th_units,
+            scale: None,
         })?;
         let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
         soft_threshold(&mut freq, tvec);
         let f2 = coord.transform(&TransformRequest {
             x: freq,
             thresholds_units: vec![0.0; hidden],
+            scale: None,
         })?;
         let spatial: Vec<f32> = f2.iter().map(|v| v * norm).collect();
         logits_all.extend(fc2.forward(&spatial[..hidden], 1));
@@ -180,12 +182,14 @@ fn main() -> Result<()> {
             let f1 = coord.transform(&TransformRequest {
                 x: h.clone(),
                 thresholds_units: th_units,
+                scale: None,
             })?;
             let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
             soft_threshold(&mut freq, tvec_et);
             let f2 = coord.transform(&TransformRequest {
                 x: freq,
                 thresholds_units: vec![0.0; hidden],
+                scale: None,
             })?;
             let spatial: Vec<f32> = f2.iter().map(|v| v * norm).collect();
             logits.extend(mlp_et.fc2.forward(&spatial[..hidden], 1));

@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
     let y_analog = analog.transform(&TransformRequest {
         x: x.clone(),
         thresholds_units: vec![0.0; dim],
+        scale: None,
     })?;
     println!(
         "analog tiles @0.9V:            cosine vs golden = {:.3}",
@@ -74,6 +75,7 @@ fn main() -> anyhow::Result<()> {
     coord.transform(&TransformRequest {
         x: x.clone(),
         thresholds_units: th,
+        scale: None,
     })?;
     let m = coord.metrics();
     let model = EnergyModel::new(16, 0.8);

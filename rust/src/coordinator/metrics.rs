@@ -219,7 +219,7 @@ mod tests {
         let mut m = Metrics::new(8);
         let mut tile = Tile::new(16, &TileKind::Digital, 0);
         let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
-        let out = schedule_transform(&mut tile, &x, 8, &vec![0.0; 16]);
+        let out = schedule_transform(&mut tile, &x, 8, &vec![0.0; 16], None);
         m.merge_outcome(&out, Duration::from_micros(5));
         assert_eq!(m.requests, 1);
         assert_eq!(m.cycles.total_elements, 16);

@@ -65,6 +65,24 @@ impl Default for CoordinatorConfig {
 pub struct TransformRequest {
     pub x: Vec<f32>,
     pub thresholds_units: Vec<f64>,
+    /// Pinned quantization scale for every tile block of this request;
+    /// `None` quantizes each block against its own amax (the raw
+    /// `/v1/transform` default).  The NN executors pin the activation's
+    /// global scale here so the tiled transform is bit-identical to the
+    /// whole-width golden model (see [`crate::exec`]).
+    pub scale: Option<f32>,
+}
+
+impl TransformRequest {
+    /// A request with per-block quantization and no early termination.
+    pub fn plain(x: Vec<f32>) -> TransformRequest {
+        let thresholds_units = vec![0.0; x.len()];
+        TransformRequest {
+            x,
+            thresholds_units,
+            scale: None,
+        }
+    }
 }
 
 /// Internal job: one whole (padded) request.
@@ -77,6 +95,7 @@ struct TileJob {
     request_id: u64,
     x: Vec<f32>,
     thresholds: Vec<f64>,
+    scale: Option<f32>,
 }
 
 struct TileResult {
@@ -150,6 +169,7 @@ impl Coordinator {
                             &job.x[b * tile_n..(b + 1) * tile_n],
                             bits,
                             &job.thresholds[b * tile_n..(b + 1) * tile_n],
+                            job.scale,
                         );
                         values.extend_from_slice(&outcome.values);
                         stats.merge(&outcome.stats);
@@ -190,6 +210,15 @@ impl Coordinator {
         &self.config
     }
 
+    /// Requests submitted via [`Coordinator::submit`]/`try_submit` whose
+    /// results have not been drained yet.  Callers multiplexing the
+    /// async API (the [`crate::exec::Pooled`] executor) check this is
+    /// zero before starting, so they never steal a foreign result off
+    /// the shared channel.
+    pub fn pending_async(&self) -> usize {
+        self.pending_async
+    }
+
     /// Pad `x` to a multiple of the tile width.
     fn pad(&self, x: &[f32]) -> Vec<f32> {
         let n = self.config.tile_n;
@@ -212,6 +241,11 @@ impl Coordinator {
                 req.x.len()
             );
         }
+        if let Some(s) = req.scale {
+            if !(s.is_finite() && s > 0.0) {
+                bail!("pinned quantization scale must be positive and finite, got {s}");
+            }
+        }
         Ok(())
     }
 
@@ -228,6 +262,7 @@ impl Coordinator {
             request_id: id,
             x,
             thresholds: th,
+            scale: req.scale,
         })
     }
 
@@ -420,6 +455,7 @@ mod tests {
             .transform(&TransformRequest {
                 x: x.clone(),
                 thresholds_units: vec![0.0; 16],
+                scale: None,
             })
             .unwrap();
         let golden = QuantBwht::new(16, 128, 8).transform(&x);
@@ -435,6 +471,7 @@ mod tests {
             .transform(&TransformRequest {
                 x: x.clone(),
                 thresholds_units: vec![0.0; 64],
+                scale: None,
             })
             .unwrap();
         // blockwise golden: each 16-slice transformed independently
@@ -451,6 +488,7 @@ mod tests {
             .map(|i| TransformRequest {
                 x: sample(32, 10 + i),
                 thresholds_units: vec![0.0; 32],
+                scale: None,
             })
             .collect();
         let mut c1 = Coordinator::new(CoordinatorConfig::default());
@@ -471,6 +509,7 @@ mod tests {
             .transform(&TransformRequest {
                 x: sample(20, 3),
                 thresholds_units: vec![0.0; 20],
+                scale: None,
             })
             .unwrap();
         assert_eq!(out.len(), 32);
@@ -484,6 +523,7 @@ mod tests {
             c.transform(&TransformRequest {
                 x: sample(16, 20 + i),
                 thresholds_units: vec![0.0; 16],
+                scale: None,
             })
             .unwrap();
         }
@@ -500,6 +540,7 @@ mod tests {
         c.transform(&TransformRequest {
             x: sample(16, 30),
             thresholds_units: vec![1e9; 16],
+            scale: None,
         })
         .unwrap();
         let m = c.metrics();
@@ -516,6 +557,7 @@ mod tests {
             .submit(&TransformRequest {
                 x: sample(16, 50),
                 thresholds_units: vec![0.0; 16],
+                scale: None,
             })
             .is_err());
         assert!(c.drain_one().is_err(), "no buffered results after abort");
@@ -534,6 +576,7 @@ mod tests {
                 .transform(&TransformRequest {
                     x: x.clone(),
                     thresholds_units: vec![0.0; 48],
+                    scale: None,
                 })
                 .unwrap();
             c.shutdown();

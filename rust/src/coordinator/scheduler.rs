@@ -32,16 +32,28 @@ pub struct TransformOutcome {
 /// `thresholds_units[i]` is the |T| of output element `i` divided by the
 /// input quantization scale and basis norm (see
 /// [`crate::nn::BwhtLayer::thresholds_units`]).
+///
+/// `scale` pins the quantization scale; `None` quantizes against this
+/// tile slice's own amax (the raw-transform serving default).  A caller
+/// splitting one logical tensor across tiles passes the tensor's global
+/// scale so every slice reproduces the whole-tensor quantization — the
+/// seam that makes the pooled executors bit-identical to
+/// [`crate::nn::Backend::Quantized`].
 pub fn schedule_transform(
     tile: &mut Tile,
     x: &[f32],
     bits: u32,
     thresholds_units: &[f64],
+    scale: Option<f32>,
 ) -> TransformOutcome {
     let n = tile.n();
     assert_eq!(x.len(), n);
     assert_eq!(thresholds_units.len(), n);
-    let q = Quantizer::new(bits).quantize(x);
+    let quantizer = Quantizer::new(bits);
+    let q = match scale {
+        Some(s) => quantizer.quantize_with_scale(x, s),
+        None => quantizer.quantize(x),
+    };
 
     // DAC-free input gating: a block that quantizes to all zeros has an
     // all-zero plane stream, so on the digital golden model every
@@ -149,7 +161,7 @@ mod tests {
     fn zero_thresholds_match_digital_golden_model() {
         let mut tile = Tile::new(16, &TileKind::Digital, 0);
         let x = sample(16, 1);
-        let out = schedule_transform(&mut tile, &x, 8, &vec![0.0; 16]);
+        let out = schedule_transform(&mut tile, &x, 8, &vec![0.0; 16], None);
         let golden = QuantBwht::new(16, 128, 8).transform(&x);
         assert_eq!(out.values, golden, "ET with T=0 must be lossless");
         assert_eq!(out.planes_issued, 8);
@@ -159,7 +171,7 @@ mod tests {
     fn high_thresholds_save_cycles_and_zero_outputs() {
         let mut tile = Tile::new(16, &TileKind::Digital, 0);
         let x = sample(16, 2);
-        let out = schedule_transform(&mut tile, &x, 8, &vec![1e9; 16]);
+        let out = schedule_transform(&mut tile, &x, 8, &vec![1e9; 16], None);
         assert!(out.values.iter().all(|&v| v == 0.0));
         assert_eq!(out.planes_issued, 1, "everything terminates after MSB");
         assert!(out.stats.average_cycles() < 1.5);
@@ -172,9 +184,9 @@ mod tests {
         let x = sample(16, 3);
         let t_units = 40.0;
         let mut tile = Tile::new(16, &TileKind::Digital, 0);
-        let et = schedule_transform(&mut tile, &x, 8, &vec![t_units; 16]);
+        let et = schedule_transform(&mut tile, &x, 8, &vec![t_units; 16], None);
         let mut tile2 = Tile::new(16, &TileKind::Digital, 0);
-        let full = schedule_transform(&mut tile2, &x, 8, &vec![0.0; 16]);
+        let full = schedule_transform(&mut tile2, &x, 8, &vec![0.0; 16], None);
         let q = Quantizer::new(8).quantize(&x);
         for i in 0..16 {
             let full_units = (full.values[i] / q.scale).round() as i64;
@@ -191,7 +203,7 @@ mod tests {
     fn row_cycles_bounded_by_planes_times_rows() {
         let mut tile = Tile::new(16, &TileKind::Digital, 0);
         let x = sample(16, 4);
-        let out = schedule_transform(&mut tile, &x, 8, &vec![100.0; 16]);
+        let out = schedule_transform(&mut tile, &x, 8, &vec![100.0; 16], None);
         assert!(out.row_cycles <= 8 * 16);
         assert!(out.row_cycles >= 16, "every row runs at least one cycle");
         assert_eq!(out.stats.total_elements, 16);
@@ -200,7 +212,7 @@ mod tests {
     #[test]
     fn zero_block_retires_after_one_plane() {
         let mut tile = Tile::new(16, &TileKind::Digital, 0);
-        let out = schedule_transform(&mut tile, &[0.0; 16], 8, &[0.0; 16]);
+        let out = schedule_transform(&mut tile, &[0.0; 16], 8, &[0.0; 16], None);
         assert!(out.values.iter().all(|&v| v == 0.0));
         assert_eq!(out.planes_issued, 1);
         assert_eq!(out.row_cycles, 16);
@@ -212,7 +224,7 @@ mod tests {
     fn one_bit_input_single_plane() {
         let mut tile = Tile::new(16, &TileKind::Digital, 0);
         let x = sample(16, 5);
-        let out = schedule_transform(&mut tile, &x, 1, &vec![0.0; 16]);
+        let out = schedule_transform(&mut tile, &x, 1, &vec![0.0; 16], None);
         assert_eq!(out.planes_issued, 1);
     }
 }

@@ -1,0 +1,211 @@
+//! The in-process executor: the original software transform loops of
+//! [`crate::nn::BwhtLayer`], restated against the [`TransformExecutor`]
+//! seam.
+//!
+//! * `Backend::Float` — exact blockwise Walsh transform ("with ADC"
+//!   algorithmic baseline);
+//! * `Backend::Quantized` — the digital golden model of the ADC-free
+//!   crossbar arithmetic (Eq. 4), honoring pinned quantization scales so
+//!   it stays bit-identical to [`crate::bitplane::QuantBwht`];
+//! * `Backend::Noisy` — Eq. 4 with ANT noise on every PSUM.  Noise is
+//!   drawn from a *per-sample* RNG stream derived from the executor's
+//!   base seed and the caller's stream id, so a dataset evaluated in
+//!   batches of 1 or 1000 sees exactly the same noise per sample.
+
+use anyhow::Result;
+
+use crate::analog::noise::NoiseModel;
+use crate::bitplane::comparator;
+use crate::coordinator::TransformRequest;
+use crate::nn::Backend;
+use crate::quant::Quantizer;
+use crate::util::rng::Rng;
+use crate::wht;
+
+use super::{validate_batch, TransformExecutor};
+
+/// In-process software execution of the three [`Backend`]s.
+#[derive(Debug, Clone)]
+pub struct InProcess {
+    backend: Backend,
+    /// Base seed for per-sample noise streams (noisy backend only).
+    noise_seed: u64,
+}
+
+impl InProcess {
+    pub fn new(backend: Backend, noise_seed: u64) -> InProcess {
+        InProcess {
+            backend,
+            noise_seed,
+        }
+    }
+
+    /// Per-sample RNG: one independent stream per (base seed, stream id).
+    fn stream_rng(&self, stream: u64) -> Rng {
+        Rng::seed_from_u64(
+            self.noise_seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0x2545_F491_4F6C_DD1D),
+        )
+    }
+
+    /// Quantize honoring a pinned scale when the request carries one.
+    fn quantize(bits: u32, req: &TransformRequest) -> crate::quant::Quantized {
+        let quantizer = Quantizer::new(bits);
+        match req.scale {
+            Some(s) => quantizer.quantize_with_scale(&req.x, s),
+            None => quantizer.quantize(&req.x),
+        }
+    }
+
+    /// Digital golden model: bitplanes MSB-first → blockwise integer
+    /// Walsh PSUMs → comparator → binary recombination.  Matches
+    /// [`crate::bitplane::QuantBwht::transform`] bit-for-bit.
+    fn transform_quantized(blocks: &[usize], bits: u32, req: &TransformRequest) -> Vec<f32> {
+        let q = Self::quantize(bits, req);
+        let mut acc = vec![0f32; req.x.len()];
+        for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
+            let xi: Vec<i64> = plane.iter().map(|&v| v as i64).collect();
+            let psums = wht::bwht_apply_i64_blocks(&xi, blocks);
+            let w = (1i64 << (bits as usize - 1 - p)) as f32;
+            for (a, &psum) in acc.iter_mut().zip(&psums) {
+                *a += comparator(psum) as f32 * w;
+            }
+        }
+        acc.iter().map(|v| v * q.scale).collect()
+    }
+
+    /// Eq. 4 with ANT noise perturbing every PSUM before the comparator.
+    fn transform_noisy(
+        blocks: &[usize],
+        bits: u32,
+        sigma_ant: f64,
+        req: &TransformRequest,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        let q = Self::quantize(bits, req);
+        let nm = NoiseModel::new(sigma_ant, req.x.len());
+        let mut acc = vec![0f32; req.x.len()];
+        for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
+            let xi: Vec<i64> = plane.iter().map(|&v| v as i64).collect();
+            let psums = wht::bwht_apply_i64_blocks(&xi, blocks);
+            let obits = nm.perturb_and_compare(&psums, rng);
+            let w = (1i64 << (bits as usize - 1 - p)) as f32;
+            for (a, &o) in acc.iter_mut().zip(&obits) {
+                *a += o as f32 * w;
+            }
+        }
+        acc.iter().map(|v| v * q.scale).collect()
+    }
+}
+
+impl TransformExecutor for InProcess {
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn quant_bits(&self) -> Option<u32> {
+        match self.backend {
+            Backend::Float => None,
+            Backend::Quantized { bits } => Some(bits),
+            Backend::Noisy { bits, .. } => Some(bits),
+        }
+    }
+
+    fn transform_batch(
+        &mut self,
+        blocks: &[usize],
+        reqs: &[TransformRequest],
+        streams: &[u64],
+    ) -> Result<Vec<Vec<f32>>> {
+        validate_batch(blocks, reqs, streams)?;
+        let mut outs = Vec::with_capacity(reqs.len());
+        for (req, &stream) in reqs.iter().zip(streams) {
+            let y = match self.backend {
+                Backend::Float => wht::bwht_apply_blocks(&req.x, blocks),
+                Backend::Quantized { bits } => Self::transform_quantized(blocks, bits, req),
+                Backend::Noisy { bits, sigma_ant } => {
+                    let mut rng = self.stream_rng(stream);
+                    Self::transform_noisy(blocks, bits, sigma_ant, req, &mut rng)
+                }
+            };
+            outs.push(y);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::QuantBwht;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from_u64(seed);
+        (0..n).map(|_| r.uniform_range(-1.5, 1.5) as f32).collect()
+    }
+
+    #[test]
+    fn quantized_matches_golden_model_with_and_without_pinned_scale() {
+        let x = sample(64, 3);
+        let golden = QuantBwht::new(64, 128, 8).transform(&x);
+        let mut ex = InProcess::new(Backend::Quantized { bits: 8 }, 0);
+        let free = ex
+            .transform_batch(&[64], &[TransformRequest::plain(x.clone())], &[0])
+            .unwrap();
+        assert_eq!(free[0], golden);
+        let pinned = ex
+            .transform_batch(
+                &[64],
+                &[TransformRequest {
+                    thresholds_units: vec![0.0; 64],
+                    scale: Some(Quantizer::new(8).scale_for(&x)),
+                    x,
+                }],
+                &[7],
+            )
+            .unwrap();
+        assert_eq!(pinned[0], golden);
+    }
+
+    #[test]
+    fn float_matches_blockwise_walsh() {
+        let x = sample(32, 4);
+        let mut ex = InProcess::new(Backend::Float, 0);
+        let out = ex
+            .transform_batch(&[16, 16], &[TransformRequest::plain(x.clone())], &[0])
+            .unwrap();
+        assert_eq!(out[0], wht::bwht_apply_blocks(&x, &[16, 16]));
+        assert_eq!(ex.quant_bits(), None);
+    }
+
+    #[test]
+    fn noisy_streams_are_per_sample_deterministic() {
+        let x = sample(16, 5);
+        let req = TransformRequest::plain(x);
+        let backend = Backend::Noisy {
+            bits: 8,
+            sigma_ant: 0.5,
+        };
+        let mut ex = InProcess::new(backend, 42);
+        // The same stream id reproduces; different ids differ.
+        let a = ex
+            .transform_batch(&[16], std::slice::from_ref(&req), &[3])
+            .unwrap();
+        let b = ex
+            .transform_batch(&[16], std::slice::from_ref(&req), &[3])
+            .unwrap();
+        let c = ex
+            .transform_batch(&[16], std::slice::from_ref(&req), &[4])
+            .unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // Batch position does not matter, only the stream id.
+        let batch = ex
+            .transform_batch(
+                &[16],
+                &[req.clone(), req.clone()],
+                &[99, 3],
+            )
+            .unwrap();
+        assert_eq!(batch[1], a[0]);
+    }
+}

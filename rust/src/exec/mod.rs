@@ -1,0 +1,147 @@
+//! Unified transform execution: one seam between the NN layers and every
+//! substrate that can run a BWHT transform.
+//!
+//! Before this module, [`crate::nn::BwhtLayer`] computed its transforms
+//! with private software loops (`Backend::{Float,Quantized,Noisy}`) that
+//! never touched the tile scheduler, early termination, variability or
+//! metrics machinery in [`crate::coordinator`] and [`crate::shard`].
+//! The [`TransformExecutor`] trait closes that gap: the layer hands a
+//! *batch* of [`TransformRequest`]s (one per sample, with per-channel
+//! early-termination thresholds and the activation's pinned quantization
+//! scale) to an executor and gets the frequency/spatial vectors back —
+//! wherever they were computed:
+//!
+//! * [`InProcess`] — the original software loops (exact float, digital
+//!   golden model, ANT-noisy), now with one RNG stream per sample index
+//!   so noisy results are batch-size invariant;
+//! * [`Pooled`] — a [`crate::coordinator::Coordinator`] tile pool; the
+//!   batch is fanned out over the workers via `try_submit`/`drain_one`;
+//! * [`Sharded`] — a [`crate::shard::ShardSet`], scatter–gathering each
+//!   sample's blocks across every healthy pool.
+//!
+//! Bit-identity contract: on digital tiles, `Pooled` and `Sharded` are
+//! **bit-identical** to [`Backend::Quantized`](crate::nn::Backend) for
+//! any layer whose transform block partition is uniform and equal to the
+//! pool's `tile_n` (pinned scales reproduce the whole-width quantization
+//! on every tile; `tests/exec_equivalence.rs` pins this across widths ×
+//! bits × shard counts).  The soft-threshold dead zone is fused into the
+//! crossbar comparator path as early-termination thresholds, so pooled
+//! execution also inherits the paper's cycle/energy savings.
+
+pub mod in_process;
+pub mod pooled;
+pub mod sharded;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::TransformRequest;
+
+pub use in_process::InProcess;
+pub use pooled::Pooled;
+pub use sharded::Sharded;
+
+/// An engine that can execute batches of BWHT transforms.
+///
+/// `blocks` is the layer's transform block partition (every request in
+/// the batch has width `blocks.iter().sum()`); `streams[i]` is a caller-
+/// chosen RNG stream id for request `i` (derived from the global sample
+/// index, so stochastic backends are deterministic per sample regardless
+/// of how a dataset is batched) — deterministic backends ignore it.
+/// Outputs come back in request order at the same width.
+pub trait TransformExecutor {
+    /// Short label for errors and logs.
+    fn name(&self) -> &'static str;
+
+    /// Magnitude bitplanes of the quantized substrate, or `None` for the
+    /// exact float path.  The layer uses this to decide whether to pin
+    /// per-sample quantization scales and map thresholds into comparator
+    /// units.
+    fn quant_bits(&self) -> Option<u32>;
+
+    /// Execute one batch of independent transforms.
+    fn transform_batch(
+        &mut self,
+        blocks: &[usize],
+        reqs: &[TransformRequest],
+        streams: &[u64],
+    ) -> Result<Vec<Vec<f32>>>;
+}
+
+/// The uniform tile width of a block partition, or an error when the
+/// partition cannot be mapped 1:1 onto fixed-size crossbar tiles.
+///
+/// The pooled executors require this: a `tile_n`-wide tile computes a
+/// `tile_n`-point Walsh transform per slice, so bit-identity with the
+/// whole-width golden model needs every block to be exactly one tile.
+pub fn uniform_tile(blocks: &[usize]) -> Result<usize> {
+    let Some(&first) = blocks.first() else {
+        bail!("empty block partition");
+    };
+    if blocks.iter().any(|&b| b != first) {
+        bail!(
+            "block partition {blocks:?} is not uniform; pooled executors need every \
+             block equal to the tile width (pick a layer width that partitions evenly)"
+        );
+    }
+    Ok(first)
+}
+
+/// Validate that every request in a batch matches the partition width
+/// and that `streams` lines up (shared by the executor impls).
+pub(crate) fn validate_batch(
+    blocks: &[usize],
+    reqs: &[TransformRequest],
+    streams: &[u64],
+) -> Result<usize> {
+    let width: usize = blocks.iter().sum();
+    if width == 0 {
+        bail!("empty block partition");
+    }
+    if streams.len() != reqs.len() {
+        bail!(
+            "streams length {} does not match batch size {}",
+            streams.len(),
+            reqs.len()
+        );
+    }
+    for (i, req) in reqs.iter().enumerate() {
+        if req.x.len() != width {
+            bail!(
+                "request {i} has width {}, but the block partition covers {width}",
+                req.x.len()
+            );
+        }
+        if req.thresholds_units.len() != width {
+            bail!(
+                "request {i} has {} thresholds for width {width}",
+                req.thresholds_units.len()
+            );
+        }
+    }
+    Ok(width)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_tile_accepts_uniform_partitions() {
+        assert_eq!(uniform_tile(&[16, 16, 16]).unwrap(), 16);
+        assert_eq!(uniform_tile(&[128]).unwrap(), 128);
+        assert!(uniform_tile(&[16, 4]).is_err());
+        assert!(uniform_tile(&[]).is_err());
+    }
+
+    #[test]
+    fn validate_batch_checks_widths_and_streams() {
+        let req = TransformRequest::plain(vec![0.0; 32]);
+        assert_eq!(
+            validate_batch(&[16, 16], std::slice::from_ref(&req), &[0]).unwrap(),
+            32
+        );
+        assert!(validate_batch(&[16], std::slice::from_ref(&req), &[0]).is_err());
+        assert!(validate_batch(&[16, 16], std::slice::from_ref(&req), &[]).is_err());
+        assert!(validate_batch(&[], &[], &[]).is_err());
+    }
+}

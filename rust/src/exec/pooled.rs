@@ -1,0 +1,162 @@
+//! The pooled executor: NN transforms on a [`Coordinator`] crossbar tile
+//! pool.
+//!
+//! Each sample becomes one [`TransformRequest`] fanned out over the
+//! pool's workers through the async `try_submit`/`drain_one` API — the
+//! whole activation executes in parallel instead of a per-sample loop.
+//! With digital tiles and pinned quantization scales this is
+//! bit-identical to [`crate::nn::Backend::Quantized`]; noisy/analog
+//! tiles run the same schedule with their physical models.  The layer's
+//! soft-threshold dead zone arrives as early-termination thresholds, so
+//! the pool's cycle/energy metrics reflect the fused comparator path.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, TransformRequest};
+
+use super::{uniform_tile, validate_batch, TransformExecutor};
+
+/// Executor borrowing a coordinator pool.
+pub struct Pooled<'a> {
+    coord: &'a mut Coordinator,
+}
+
+impl<'a> Pooled<'a> {
+    /// Wrap a pool.  The pool's `tile_n` must equal the layer's uniform
+    /// transform block size (checked per batch).
+    pub fn new(coord: &'a mut Coordinator) -> Pooled<'a> {
+        Pooled { coord }
+    }
+}
+
+impl TransformExecutor for Pooled<'_> {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn quant_bits(&self) -> Option<u32> {
+        Some(self.coord.config().bits)
+    }
+
+    fn transform_batch(
+        &mut self,
+        blocks: &[usize],
+        reqs: &[TransformRequest],
+        _streams: &[u64],
+    ) -> Result<Vec<Vec<f32>>> {
+        validate_batch(blocks, reqs, _streams)?;
+        let tile = uniform_tile(blocks)?;
+        if tile != self.coord.config().tile_n {
+            anyhow::bail!(
+                "layer blocks are {tile}-wide but the pool runs {}x{} tiles; \
+                 configure the coordinator with tile_n = {tile}",
+                self.coord.config().tile_n,
+                self.coord.config().tile_n
+            );
+        }
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.coord.pending_async() > 0 {
+            anyhow::bail!(
+                "{} submitted request(s) not yet drained; drain them before running \
+                 the pooled executor (it would steal their results)",
+                self.coord.pending_async()
+            );
+        }
+
+        // Pipeline the whole batch through the pool: submit without
+        // blocking, and when the bounded job queue pushes back, free a
+        // slot by draining one finished sample first.
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
+        let mut pending: HashMap<u64, usize> = HashMap::new();
+        let mut next = 0usize;
+        let mut done = 0usize;
+        while done < reqs.len() {
+            while next < reqs.len() {
+                match self.coord.try_submit(&reqs[next])? {
+                    Some(id) => {
+                        pending.insert(id, next);
+                        next += 1;
+                    }
+                    None => break, // queue full: drain before submitting more
+                }
+            }
+            let completed = self.coord.drain_one()?;
+            let idx = pending
+                .remove(&completed.request_id)
+                .expect("drained id was submitted by this executor");
+            outs[idx] = completed.values;
+            done += 1;
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::QuantBwht;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::quant::Quantizer;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from_u64(seed);
+        (0..n).map(|_| r.uniform_range(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn pinned_scale_batch_matches_whole_width_golden_model() {
+        // Width 64 split over 16-wide tiles: without a pinned scale each
+        // tile quantizes locally and diverges from the whole-width golden
+        // model; with the global scale pinned it matches bit-for-bit.
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut ex = Pooled::new(&mut coord);
+        let blocks = [16usize, 16, 16, 16];
+        let reqs: Vec<TransformRequest> = (0..5)
+            .map(|i| {
+                let x = sample(64, 40 + i);
+                TransformRequest {
+                    thresholds_units: vec![0.0; 64],
+                    scale: Some(Quantizer::new(8).scale_for(&x)),
+                    x,
+                }
+            })
+            .collect();
+        let outs = ex.transform_batch(&blocks, &reqs, &[0, 1, 2, 3, 4]).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            // Golden: one global quantization, 16-wide Walsh blocks.
+            let golden = QuantBwht::new(64, 16, 8).transform(&req.x);
+            assert_eq!(outs[i], golden, "request {i}");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn rejects_mismatched_tile_geometry() {
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut ex = Pooled::new(&mut coord);
+        let req = TransformRequest::plain(vec![0.5; 64]);
+        assert!(ex.transform_batch(&[64], &[req], &[0]).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn refuses_to_run_with_undrained_submissions() {
+        // A foreign undrained submit would have its result stolen off
+        // the shared channel; the executor must refuse cleanly instead.
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        coord
+            .submit(&TransformRequest::plain(vec![0.5; 16]))
+            .unwrap();
+        let mut ex = Pooled::new(&mut coord);
+        let req = TransformRequest::plain(vec![0.25; 16]);
+        let err = ex.transform_batch(&[16], &[req], &[0]).unwrap_err();
+        assert!(err.to_string().contains("not yet drained"), "{err}");
+        coord.drain_one().unwrap();
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,104 @@
+//! The sharded executor: NN transforms scatter–gathered across a
+//! [`ShardSet`] of coordinator pools.
+//!
+//! Each sample's blocks are placed over the healthy shards by the
+//! planner (row-cycle-balanced), executed in parallel and reassembled —
+//! so one wide activation saturates every pool, and a poisoned shard
+//! sheds its slices to the survivors mid-batch.  Pinned quantization
+//! scales ride along with every slice, which keeps the digital path
+//! bit-identical to [`crate::nn::Backend::Quantized`] (any placement,
+//! any shard count).
+
+use anyhow::Result;
+
+use crate::coordinator::TransformRequest;
+use crate::shard::{router, ShardSet};
+
+use super::{uniform_tile, validate_batch, TransformExecutor};
+
+/// Executor borrowing a shard set.
+pub struct Sharded<'a> {
+    set: &'a mut ShardSet,
+}
+
+impl<'a> Sharded<'a> {
+    /// Wrap a shard set.  The set's `tile_n` must equal the layer's
+    /// uniform transform block size (checked per batch).
+    pub fn new(set: &'a mut ShardSet) -> Sharded<'a> {
+        Sharded { set }
+    }
+}
+
+impl TransformExecutor for Sharded<'_> {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn quant_bits(&self) -> Option<u32> {
+        Some(self.set.bits())
+    }
+
+    fn transform_batch(
+        &mut self,
+        blocks: &[usize],
+        reqs: &[TransformRequest],
+        streams: &[u64],
+    ) -> Result<Vec<Vec<f32>>> {
+        validate_batch(blocks, reqs, streams)?;
+        let tile = uniform_tile(blocks)?;
+        if tile != self.set.tile_n() {
+            anyhow::bail!(
+                "layer blocks are {tile}-wide but the shard set runs {}x{} tiles; \
+                 configure the shards with tile_n = {tile}",
+                self.set.tile_n(),
+                self.set.tile_n()
+            );
+        }
+        router::transform_batch(self.set, reqs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitplane::QuantBwht;
+    use crate::quant::Quantizer;
+    use crate::shard::ShardSetConfig;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from_u64(seed);
+        (0..n).map(|_| r.uniform_range(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn sharded_pinned_scale_matches_whole_width_golden_model() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut ex = Sharded::new(&mut set);
+        let x = sample(96, 9);
+        let req = TransformRequest {
+            thresholds_units: vec![0.0; 96],
+            scale: Some(Quantizer::new(8).scale_for(&x)),
+            x,
+        };
+        let out = ex
+            .transform_batch(&[16; 6], std::slice::from_ref(&req), &[0])
+            .unwrap();
+        let golden = QuantBwht::new(96, 16, 8).transform(&req.x);
+        assert_eq!(out[0], golden);
+        set.shutdown();
+    }
+
+    #[test]
+    fn rejects_mismatched_tile_geometry() {
+        let mut set = ShardSet::new(ShardSetConfig::default()).unwrap();
+        let mut ex = Sharded::new(&mut set);
+        let req = TransformRequest::plain(vec![0.5; 64]);
+        assert!(ex.transform_batch(&[32, 32], &[req], &[0]).is_err());
+        set.shutdown();
+    }
+}

@@ -11,6 +11,12 @@
 //!   (bounded in-flight + per-client token buckets) and a Prometheus
 //!   `/metrics` endpoint, turning the coordinator into a long-running
 //!   inference service (`repro serve --listen ADDR`).
+//! * **Execution seam ([`exec`])** — the [`exec::TransformExecutor`]
+//!   trait unifying every way a BWHT transform can run (in-process
+//!   float/quantized/noisy loops, one coordinator pool, a shard set);
+//!   [`nn`] layers delegate all transforms through it, so the same model
+//!   runs on software loops or the full tile-scheduling machinery —
+//!   bit-identically on the digital path.
 //! * **L3.5 ([`shard`])** — scatter–gather sharding: a placement planner
 //!   and router that partition one wide transform across N independent
 //!   coordinator pools (balanced by estimated row-cycles, with poisoned
@@ -32,6 +38,7 @@ pub mod analog;
 pub mod bitplane;
 pub mod coordinator;
 pub mod energy;
+pub mod exec;
 pub mod nn;
 pub mod npy;
 pub mod quant;

@@ -6,9 +6,11 @@
 //! repro transform [--dim D] [--bits B] [--backend digital|noisy|analog]
 //!                 [--tile N] [--vdd V] [--sigma-ant S] [--seed K]
 //! repro infer     [--weights PATH] [--artifacts DIR] [--backend ...]
+//!                 [--shards N] [--workers W] [--batch B]
 //! repro train     [--artifacts DIR] [--steps N] [--log-every K]
 //! repro serve     [--requests N] [--workers W] [--tile N] [--bits B]
 //!                 [--listen ADDR] [--shards N] [--backend digital|noisy|analog]
+//!                 [--weights PATH] [--max-infer-batch N] [--no-respawn]
 //!                 [--max-batch N] [--max-wait-us U] [--keepalive-requests N]
 //!                 [--max-inflight N] [--rate R] [--burst B] [--duration-s S]
 //! repro report    [--vdd V] [--avg-cycles C]
@@ -33,11 +35,13 @@ use repro::analog::crossbar::CrossbarConfig;
 use repro::bitplane::QuantBwht;
 use repro::coordinator::{Coordinator, CoordinatorConfig, TileKind, TransformRequest};
 use repro::energy::{table1, EnergyModel};
+use repro::exec::{self, Sharded};
 use repro::nn::{loader::Weights, Backend, Mlp};
 use repro::npy;
 #[cfg(feature = "pjrt")]
 use repro::runtime::{HostTensor, Runtime};
 use repro::server::{AdmissionConfig, Server, ServerConfig};
+use repro::shard::{ShardSet, ShardSetConfig};
 use repro::util::rng::Rng;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -113,6 +117,7 @@ fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
     let out = coord.transform(&TransformRequest {
         x: x.clone(),
         thresholds_units: vec![0.0; dim],
+        scale: None,
     })?;
     let dt = t0.elapsed();
     let exact = {
@@ -149,22 +154,68 @@ fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
         .get("artifacts")
         .cloned()
         .unwrap_or_else(|| "artifacts".into());
-    let backend = backend_from_flags(flags);
     let w = Weights::load(&weights_path)?;
     let mlp = Mlp::from_weights(&w)?;
     let x = npy::load_f32(format!("{dir}/test_x.npy"))?;
     let y = npy::load_i32(format!("{dir}/test_y.npy"))?;
-    let mut rng = Rng::seed_from_u64(flag(flags, "seed", 0u64));
+    let batch: usize = flag(flags, "batch", 256);
+    let shards: usize = flag(flags, "shards", 0);
     let t0 = Instant::now();
-    let acc = mlp.evaluate(&x.data, &y.data, backend, &mut rng, 256);
-    println!(
-        "infer {} on {} samples [{:?}]: accuracy {:.2}% ({:?})",
-        weights_path,
-        y.len(),
-        backend,
-        acc * 100.0,
-        t0.elapsed()
-    );
+    if shards > 0 {
+        // Crossbar-pool path: the model's BWHT transforms scatter–gather
+        // across N coordinator pools through the same executor seam the
+        // server uses.  `--backend digital|noisy|analog` picks the tile
+        // model; digital is bit-identical to the quantized software path.
+        let tile = exec::uniform_tile(mlp.bwht.transform_blocks())?;
+        let vdd: f64 = flag(flags, "vdd", 0.8);
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards,
+            coordinator: CoordinatorConfig {
+                tile_n: tile,
+                bits: flag(flags, "bits", 8),
+                workers: flag(flags, "workers", 4),
+                seed: flag(flags, "seed", 0),
+                kind: tile_kind_from_flags(flags, tile, vdd),
+                ..Default::default()
+            },
+            ..Default::default()
+        })?;
+        let acc = {
+            let mut executor = Sharded::new(&mut set);
+            mlp.evaluate_with(&mut executor, &x.data, &y.data, batch)?
+        };
+        let m = set.metrics();
+        println!(
+            "infer {} on {} samples [{} shard(s), {}x{} tiles, {} backend]: accuracy {:.2}% ({:?})",
+            weights_path,
+            y.len(),
+            shards,
+            tile,
+            tile,
+            flags.get("backend").map(|s| s.as_str()).unwrap_or("digital"),
+            acc * 100.0,
+            t0.elapsed()
+        );
+        println!(
+            "  crossbar slices {} | avg bitplane cycles/elem {:.2} | row-cycles {}",
+            m.requests,
+            m.average_cycles(),
+            m.row_cycles
+        );
+        set.shutdown();
+    } else {
+        let backend = backend_from_flags(flags);
+        let mut rng = Rng::seed_from_u64(flag(flags, "seed", 0u64));
+        let acc = mlp.evaluate(&x.data, &y.data, backend, &mut rng, batch);
+        println!(
+            "infer {} on {} samples [{:?}]: accuracy {:.2}% ({:?})",
+            weights_path,
+            y.len(),
+            backend,
+            acc * 100.0,
+            t0.elapsed()
+        );
+    }
     Ok(())
 }
 
@@ -274,14 +325,28 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         .get("backend")
         .cloned()
         .unwrap_or_else(|| "digital".to_string());
+    let model = match flags.get("weights") {
+        Some(path) => {
+            let w = Weights::load(path)?;
+            Some(Mlp::from_weights(&w)?)
+        }
+        None => None,
+    };
+    // A hosted model pins the tile width to its BWHT block size; the
+    // tile backend (analog crossbar geometry in particular) must be
+    // built for that width, not the raw --tile flag.
+    let effective_tile = match &model {
+        Some(m) => exec::uniform_tile(m.bwht.transform_blocks())?,
+        None => tile,
+    };
     let config = ServerConfig {
         listen: listen.to_string(),
         coordinator: CoordinatorConfig {
-            tile_n: tile,
+            tile_n: effective_tile,
             bits: flag(flags, "bits", 8),
             workers: flag(flags, "workers", 4),
             seed: flag(flags, "seed", 0),
-            kind: tile_kind_from_flags(flags, tile, vdd),
+            kind: tile_kind_from_flags(flags, effective_tile, vdd),
             ..Default::default()
         },
         shards: shards.max(1),
@@ -295,8 +360,12 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         max_connections: flag(flags, "max-connections", 512),
         vdd,
         keepalive_max_requests: flag(flags, "keepalive-requests", 64),
+        model,
+        max_infer_batch: flag(flags, "max-infer-batch", 64),
+        auto_respawn: !flags.contains_key("no-respawn"),
         ..Default::default()
     };
+    let has_model = config.model.is_some();
     let duration_s: u64 = flag(flags, "duration-s", 0);
     let server = Server::start(config)?;
     println!("repro serve listening on http://{}", server.addr);
@@ -305,10 +374,13 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         shards.max(1),
         flag::<usize>(flags, "workers", 4),
         backend,
-        tile,
-        tile
+        effective_tile,
+        effective_tile
     );
     println!("  POST /v1/transform  {{\"x\": [...], \"thresholds\": [...]}}");
+    if has_model {
+        println!("  POST /v1/infer      {{\"x\": [...]}} or {{\"x\": [[...], ...]}} -> logits");
+    }
     println!("  GET  /metrics       Prometheus text format (merged + per-shard)");
     println!("  GET  /healthz       liveness probe");
     if duration_s == 0 {
@@ -365,6 +437,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             TransformRequest {
                 x,
                 thresholds_units: th,
+                scale: None,
             }
         })
         .collect();
@@ -447,7 +520,10 @@ USAGE: repro <SUBCOMMAND> [flags]
 
 SUBCOMMANDS:
   transform   run one BWHT transform through the coordinator
-  infer       evaluate exported MLP weights on the test set
+  infer       evaluate exported MLP weights on the test set; --shards N
+              runs the model's BWHT transforms on N crossbar pools via
+              the sharded executor (--backend digital|noisy|analog;
+              digital is bit-identical to the quantized software path)
   train       E2E: train via the PJRT train_step artifact (no python;
               needs a build with --features pjrt)
   serve       --listen ADDR: HTTP service with dynamic batching,
@@ -455,8 +531,10 @@ SUBCOMMANDS:
               /metrics endpoint; --shards N scatter-gathers wide requests
               across N coordinator pools; --backend digital|noisy|analog
               picks the per-shard tile backend (per-worker variability
-              seeds derive from --seed); without --listen: offline batch
-              throughput benchmark
+              seeds derive from --seed); --weights PATH hosts the MLP on
+              POST /v1/infer (transforms run through the shard set;
+              poisoned shards respawn on a health tick unless
+              --no-respawn); without --listen: offline batch benchmark
   report      energy model: Table I, Fig. 12 power breakdown
   help        this text
 ";

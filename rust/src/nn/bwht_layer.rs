@@ -1,11 +1,18 @@
 //! The BWHT layer (Fig. 2): transform → soft-threshold → inverse, with
-//! channel expansion/projection, executable on multiple backends.
+//! channel expansion/projection, executable on any
+//! [`crate::exec::TransformExecutor`].
 //!
 //! Matches `python/compile/model.py::bwht_layer` numerically in Float mode
-//! and `ref.quant_bwht_ref` bit-for-bit in Quantized mode.
+//! and `ref.quant_bwht_ref` bit-for-bit in Quantized mode.  The legacy
+//! per-sample [`BwhtLayer::forward`] signature survives as a thin wrapper
+//! that builds an [`crate::exec::InProcess`] executor, so both transforms
+//! of every sample — wherever they execute — flow through one seam.
 
-use crate::analog::noise::NoiseModel;
-use crate::bitplane::QuantBwht;
+use anyhow::Result;
+
+use crate::coordinator::TransformRequest;
+use crate::exec::{InProcess, TransformExecutor};
+use crate::quant::Quantizer;
 use crate::util::rng::Rng;
 use crate::wht;
 
@@ -33,6 +40,9 @@ pub struct BwhtLayer {
     pub t: Vec<f32>,
     /// Orthonormal scaling 1/sqrt(block) per channel.
     norm: Vec<f32>,
+    /// Block partition both transforms run on (`bwht_blocks(width,
+    /// max_block)` — the structure the legacy backends always used).
+    tblocks: Vec<usize>,
 }
 
 impl BwhtLayer {
@@ -46,44 +56,113 @@ impl BwhtLayer {
         for &b in &blocks {
             norm.extend(std::iter::repeat(1.0 / (b as f32).sqrt()).take(b));
         }
+        let tblocks = wht::bwht_blocks(width, max_block);
         BwhtLayer {
             width,
             max_block,
             t,
             norm,
+            tblocks,
         }
     }
 
-    fn transform(&self, x: &[f32], backend: Backend, rng: &mut Rng) -> Vec<f32> {
-        match backend {
-            Backend::Float => wht::bwht_apply(x, self.width, self.max_block),
-            Backend::Quantized { bits } => {
-                QuantBwht::new(self.width, self.max_block, bits).transform(x)
-            }
-            Backend::Noisy { bits, sigma_ant } => {
-                let eng = QuantBwht::new(self.width, self.max_block, bits);
-                let q = eng.quantizer.quantize(x);
-                let nm = NoiseModel::new(sigma_ant, self.width);
-                let mut acc = vec![0f32; self.width];
-                for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
-                    let psums = eng.plane_psums(plane);
-                    let obits = nm.perturb_and_compare(&psums, rng);
-                    let w = (1i64 << (bits as usize - 1 - p)) as f32;
-                    for (a, &o) in acc.iter_mut().zip(&obits) {
-                        *a += o as f32 * w;
-                    }
-                }
-                acc.iter().map(|v| v * q.scale).collect()
-            }
-        }
+    /// Block partition of this layer's transforms (what an executor must
+    /// be able to map onto tiles).
+    pub fn transform_blocks(&self) -> &[usize] {
+        &self.tblocks
     }
 
-    /// Forward one `(batch, cin)` activation to `(batch, cout)`.
+    /// Forward one `(batch, cin)` activation to `(batch, cout)` through
+    /// an executor: one batched transform call per pass instead of a
+    /// per-sample loop.
     ///
     /// Expansion (`cout > cin`) zero-pads channels before the transform;
     /// projection truncates after the inverse (low-sequency channels carry
     /// the energy).  Thresholding happens in the frequency domain between
-    /// the two transforms, exactly the Fig. 2 flow.
+    /// the two transforms, exactly the Fig. 2 flow.  On quantized
+    /// executors the per-sample global quantization scale is pinned on
+    /// every request (so tiled execution matches the whole-width golden
+    /// model bit-for-bit) and the soft-threshold dead zone is mapped into
+    /// comparator units so it fuses into the crossbar early-termination
+    /// path — crossbar backends skip the cycles, and the survivors are
+    /// shrunk in the frequency domain exactly as in software.
+    ///
+    /// `sample_offset` is the global index of the first sample; noisy
+    /// backends derive one RNG stream per (sample index, pass), making
+    /// results invariant to how a dataset is chunked into batches.
+    pub fn forward_with(
+        &self,
+        exec: &mut dyn TransformExecutor,
+        x: &[f32],
+        batch: usize,
+        cin: usize,
+        cout: usize,
+        sample_offset: u64,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), batch * cin);
+        assert!(cin <= self.width && cout <= self.width);
+        let qbits = exec.quant_bits();
+
+        // Forward transform: pad each sample, pin its quantization scale
+        // and fuse the soft-threshold dead zone into ET thresholds.
+        let mut reqs = Vec::with_capacity(batch);
+        let mut streams = Vec::with_capacity(batch);
+        for bi in 0..batch {
+            let mut padded = vec![0f32; self.width];
+            padded[..cin].copy_from_slice(&x[bi * cin..(bi + 1) * cin]);
+            let (scale, thresholds_units) = match qbits {
+                Some(bits) => {
+                    let quantizer = Quantizer::new(bits);
+                    let s = quantizer.scale_for(&padded);
+                    let th = self.fused_thresholds_units(s, quantizer.qmax() as i64);
+                    (Some(s), th)
+                }
+                None => (None, vec![0.0; self.width]),
+            };
+            reqs.push(TransformRequest {
+                x: padded,
+                thresholds_units,
+                scale,
+            });
+            streams.push((sample_offset + bi as u64) * 2);
+        }
+        let freqs = exec.transform_batch(&self.tblocks, &reqs, &streams)?;
+
+        // Frequency domain: orthonormal scale + soft threshold, then the
+        // inverse transform (W/sqrt(n) is its own inverse).  ET-zeroed
+        // elements arrive as 0 and stay 0; survivors carry their full
+        // value and are shrunk here, bit-identically to the software path.
+        let mut reqs2 = Vec::with_capacity(batch);
+        let mut streams2 = Vec::with_capacity(batch);
+        for (bi, mut freq) in freqs.into_iter().enumerate() {
+            debug_assert_eq!(freq.len(), self.width);
+            for (f, &n) in freq.iter_mut().zip(&self.norm) {
+                *f *= n;
+            }
+            soft_threshold(&mut freq, &self.t);
+            let scale = qbits.map(|bits| Quantizer::new(bits).scale_for(&freq));
+            reqs2.push(TransformRequest {
+                x: freq,
+                thresholds_units: vec![0.0; self.width],
+                scale,
+            });
+            streams2.push((sample_offset + bi as u64) * 2 + 1);
+        }
+        let spatials = exec.transform_batch(&self.tblocks, &reqs2, &streams2)?;
+
+        let mut out = vec![0f32; batch * cout];
+        for (bi, mut spatial) in spatials.into_iter().enumerate() {
+            for (s, &n) in spatial.iter_mut().zip(&self.norm) {
+                *s *= n;
+            }
+            out[bi * cout..(bi + 1) * cout].copy_from_slice(&spatial[..cout]);
+        }
+        Ok(out)
+    }
+
+    /// Forward one `(batch, cin)` activation to `(batch, cout)` on an
+    /// in-process software backend (legacy signature; delegates to
+    /// [`BwhtLayer::forward_with`] over an [`InProcess`] executor).
     pub fn forward(
         &self,
         x: &[f32],
@@ -93,27 +172,9 @@ impl BwhtLayer {
         backend: Backend,
         rng: &mut Rng,
     ) -> Vec<f32> {
-        assert_eq!(x.len(), batch * cin);
-        assert!(cin <= self.width && cout <= self.width);
-        let mut out = vec![0f32; batch * cout];
-        let mut padded = vec![0f32; self.width];
-        for bi in 0..batch {
-            padded.fill(0.0);
-            padded[..cin].copy_from_slice(&x[bi * cin..(bi + 1) * cin]);
-            // forward transform + orthonormal scale
-            let mut freq = self.transform(&padded, backend, rng);
-            for (f, &n) in freq.iter_mut().zip(&self.norm) {
-                *f *= n;
-            }
-            soft_threshold(&mut freq, &self.t);
-            // inverse transform (+ scale): W/sqrt(n) is its own inverse
-            let mut spatial = self.transform(&freq, backend, rng);
-            for (s, &n) in spatial.iter_mut().zip(&self.norm) {
-                *s *= n;
-            }
-            out[bi * cout..(bi + 1) * cout].copy_from_slice(&spatial[..cout]);
-        }
-        out
+        let mut exec = InProcess::new(backend, rng.next_u64());
+        self.forward_with(&mut exec, x, batch, cin, cout, 0)
+            .expect("in-process execution cannot fail")
     }
 
     /// Thresholds in comparator units for the early-termination scheduler:
@@ -123,6 +184,42 @@ impl BwhtLayer {
             .iter()
             .zip(&self.norm)
             .map(|(&t, &n)| (t.abs() / (n * scale).max(1e-12)) as f64)
+            .collect()
+    }
+
+    /// Early-termination thresholds that fuse the soft-threshold dead
+    /// zone *exactly* into the comparator path.
+    ///
+    /// `T_units[i]` is the largest integer `u` in `[0, qmax]` whose
+    /// dequantized frequency value lands inside the dead zone under f32
+    /// arithmetic — i.e. `(u as f32 * scale) * norm_i <= |t_i|`, the very
+    /// comparison [`soft_threshold`] makes.  The naive ratio
+    /// `|t| / (norm * scale)` can straddle an integer boundary after f32
+    /// rounding, silently zeroing an element software would have kept (or
+    /// vice versa); searching the integer lattice with the f32 predicate
+    /// makes the ET zero-set identical to the software dead zone, which
+    /// is what keeps pooled execution bit-identical to
+    /// [`Backend::Quantized`].  The predicate is monotone in `u` (product
+    /// of non-negative f32 factors), so a binary search suffices.
+    pub fn fused_thresholds_units(&self, scale: f32, qmax: i64) -> Vec<f64> {
+        self.t
+            .iter()
+            .zip(&self.norm)
+            .map(|(&t, &n)| {
+                let t_abs = t.abs();
+                let inside = |u: i64| (u as f32 * scale) * n <= t_abs;
+                let mut lo = 0i64; // inside(0) always holds: 0 <= |t|
+                let mut hi = qmax;
+                while lo < hi {
+                    let mid = (lo + hi + 1) / 2;
+                    if inside(mid) {
+                        lo = mid;
+                    } else {
+                        hi = mid - 1;
+                    }
+                }
+                lo as f64
+            })
             .collect()
     }
 }
@@ -234,5 +331,37 @@ mod tests {
         let units = l.thresholds_units(0.25);
         // norm = 1/4 for a 16-block; units = 0.5 / (0.25 * 0.25) = 8
         assert!((units[0] - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fused_thresholds_match_the_f32_dead_zone_exactly() {
+        let l = layer(16, 0.37);
+        let scale = 0.013f32;
+        let units = l.fused_thresholds_units(scale, 255);
+        let norm = 0.25f32; // 1/sqrt(16)
+        for (i, &u) in units.iter().enumerate() {
+            let u = u as i64;
+            // u is inside the dead zone; u+1 (if representable) is not.
+            assert!((u as f32 * scale) * norm <= 0.37, "channel {i}: u inside");
+            if u < 255 {
+                assert!(
+                    ((u + 1) as f32 * scale) * norm > 0.37,
+                    "channel {i}: u+1 outside"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_thresholds_zero_t_terminates_nothing() {
+        let l = layer(16, 0.0);
+        let units = l.fused_thresholds_units(0.01, 255);
+        assert!(units.iter().all(|&u| u == 0.0), "{units:?}");
+    }
+
+    #[test]
+    fn transform_blocks_partition_covers_width() {
+        let l = layer(20, 0.1);
+        assert_eq!(l.transform_blocks().iter().sum::<usize>(), l.width);
     }
 }

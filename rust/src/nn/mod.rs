@@ -9,8 +9,12 @@
 //!   crossbar arithmetic (Eq. 4),
 //! * [`Backend::Noisy`] — Eq. 4 with ANT noise injection (Fig. 11(a)),
 //!
-//! plus the full analog path when driven through
-//! [`crate::coordinator`]'s tile pool.
+//! plus the full tile-pool paths when driven through a
+//! [`crate::exec::TransformExecutor`]: `BwhtLayer::forward_with` /
+//! `Mlp::forward_with` batch every transform through one executor seam,
+//! so the same model runs on the in-process loops, one
+//! [`crate::coordinator::Coordinator`] pool, or a sharded
+//! [`crate::shard::ShardSet`] — bit-identically on the digital path.
 //!
 //! [`counter`] reproduces the Fig. 1(b)/(c) parameter and MAC accounting
 //! for the *real* ResNet20 / MobileNetV2 architectures.

@@ -1,10 +1,13 @@
 //! The MLP classifier matching `python/compile/model.py::init_mlp`:
 //! dense → ReLU → BWHT layer → dense.  This is the model the AOT
 //! artifacts embed and the E2E driver trains; the rust engine runs the
-//! same weights for inference on any [`Backend`].
+//! same weights for inference on any [`Backend`] — or, through
+//! [`Mlp::forward_with`], on any [`TransformExecutor`] (coordinator
+//! pool, shard set), with the BWHT transforms batched across the tiles.
 
 use anyhow::Result;
 
+use crate::exec::{InProcess, TransformExecutor};
 use crate::util::rng::Rng;
 
 use super::bwht_layer::{Backend, BwhtLayer};
@@ -61,17 +64,66 @@ impl Mlp {
         }
     }
 
-    /// Logits for a `(batch, din)` input.
-    pub fn forward(&self, x: &[f32], batch: usize, backend: Backend, rng: &mut Rng) -> Vec<f32> {
+    /// Input feature count.
+    pub fn din(&self) -> usize {
+        self.fc1.din
+    }
+
+    /// Logits for a `(batch, din)` input, with the BWHT transforms
+    /// delegated to `exec` as one batched call per pass.  `sample_offset`
+    /// is the global index of the first sample (per-sample noise
+    /// streams; irrelevant on deterministic executors).
+    pub fn forward_with(
+        &self,
+        exec: &mut dyn TransformExecutor,
+        x: &[f32],
+        batch: usize,
+        sample_offset: u64,
+    ) -> Result<Vec<f32>> {
         let mut h = self.fc1.forward(x, batch);
         relu(&mut h);
         let h = self
             .bwht
-            .forward(&h, batch, self.hidden, self.hidden, backend, rng);
-        self.fc2.forward(&h, batch)
+            .forward_with(exec, &h, batch, self.hidden, self.hidden, sample_offset)?;
+        Ok(self.fc2.forward(&h, batch))
     }
 
-    /// Batched accuracy evaluation.
+    /// Logits for a `(batch, din)` input on an in-process software
+    /// backend (legacy signature; delegates through the executor seam).
+    pub fn forward(&self, x: &[f32], batch: usize, backend: Backend, rng: &mut Rng) -> Vec<f32> {
+        let mut exec = InProcess::new(backend, rng.next_u64());
+        self.forward_with(&mut exec, x, batch, 0)
+            .expect("in-process execution cannot fail")
+    }
+
+    /// Batched accuracy evaluation through an executor.  Chunks carry a
+    /// running sample offset, so stochastic backends assign noise by
+    /// *sample index* and the result is invariant to `batch`.
+    pub fn evaluate_with(
+        &self,
+        exec: &mut dyn TransformExecutor,
+        x: &[f32],
+        labels: &[i32],
+        batch: usize,
+    ) -> Result<f64> {
+        let din = self.fc1.din;
+        let n = labels.len();
+        assert_eq!(x.len(), n * din);
+        let mut correct_weighted = 0.0;
+        let mut i = 0;
+        while i < n {
+            let b = batch.min(n - i);
+            let logits = self.forward_with(exec, &x[i * din..(i + b) * din], b, i as u64)?;
+            correct_weighted += accuracy(&logits, &labels[i..i + b], self.classes) * b as f64;
+            i += b;
+        }
+        Ok(correct_weighted / n as f64)
+    }
+
+    /// Batched accuracy evaluation on an in-process backend (legacy
+    /// signature).  One RNG draw seeds the whole run, and noise streams
+    /// are derived per sample index — so for a fixed starting `rng` the
+    /// accuracy is deterministic regardless of `batch`.
     pub fn evaluate(
         &self,
         x: &[f32],
@@ -80,18 +132,9 @@ impl Mlp {
         rng: &mut Rng,
         batch: usize,
     ) -> f64 {
-        let din = self.fc1.din;
-        let n = labels.len();
-        assert_eq!(x.len(), n * din);
-        let mut correct_weighted = 0.0;
-        let mut i = 0;
-        while i < n {
-            let b = batch.min(n - i);
-            let logits = self.forward(&x[i * din..(i + b) * din], b, backend, rng);
-            correct_weighted += accuracy(&logits, &labels[i..i + b], self.classes) * b as f64;
-            i += b;
-        }
-        correct_weighted / n as f64
+        let mut exec = InProcess::new(backend, rng.next_u64());
+        self.evaluate_with(&mut exec, x, labels, batch)
+            .expect("in-process execution cannot fail")
     }
 }
 
@@ -134,6 +177,26 @@ mod tests {
         let labels = vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0];
         let acc = m.evaluate(&x, &labels, Backend::Float, &mut r, 4);
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn noisy_accuracy_is_batch_size_invariant() {
+        // Satellite of the executor refactor: evaluation noise is keyed
+        // by sample index, so chunking must not change the result.
+        let m = tiny_mlp();
+        let x: Vec<f32> = (0..24 * 8).map(|i| (i as f32 * 0.37).sin()).collect();
+        let labels: Vec<i32> = (0..24).map(|i| (i % 3) as i32).collect();
+        let backend = Backend::Noisy {
+            bits: 4,
+            sigma_ant: 0.8,
+        };
+        let acc_for = |batch: usize| {
+            let mut r = Rng::seed_from_u64(11);
+            m.evaluate(&x, &labels, backend, &mut r, batch)
+        };
+        let a1 = acc_for(1);
+        assert_eq!(a1, acc_for(5));
+        assert_eq!(a1, acc_for(24));
     }
 
     #[test]

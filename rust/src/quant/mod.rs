@@ -33,11 +33,29 @@ impl Quantizer {
         (1i32 << self.bits) - 1
     }
 
+    /// The scale per-tensor symmetric quantization of `x` would use
+    /// (`amax / qmax`, with the same `1e-8` floor as [`Self::quantize`]).
+    ///
+    /// Exposed so a caller splitting one logical tensor across tiles can
+    /// compute the global scale once and pin it on every slice via
+    /// [`Self::quantize_with_scale`] — the slices then reproduce the
+    /// whole-tensor quantization bit-for-bit.
+    pub fn scale_for(&self, x: &[f32]) -> f32 {
+        let amax = x.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-8);
+        amax / self.qmax() as f32
+    }
+
     /// Per-tensor symmetric quantization (matches `quantize_ref`).
     pub fn quantize(&self, x: &[f32]) -> Quantized {
-        let amax = x.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-8);
+        self.quantize_with_scale(x, self.scale_for(x))
+    }
+
+    /// Quantize with an externally pinned (positive) scale.  Identical
+    /// arithmetic to [`Self::quantize`] given the same scale, so slices
+    /// of a tensor quantized under its global scale match the
+    /// whole-tensor quantization elementwise.
+    pub fn quantize_with_scale(&self, x: &[f32], scale: f32) -> Quantized {
         let qmax = self.qmax() as f32;
-        let scale = amax / qmax;
         let q = x
             .iter()
             .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32)
@@ -178,6 +196,21 @@ mod tests {
     #[should_panic(expected = "bits")]
     fn zero_bits_panics() {
         Quantizer::new(0);
+    }
+
+    #[test]
+    fn pinned_scale_slices_match_global_quantization() {
+        let x = sample(64, 21);
+        let q = Quantizer::new(8);
+        let global = q.quantize(&x);
+        let scale = q.scale_for(&x);
+        assert_eq!(scale, global.scale);
+        for chunk in 0..4 {
+            let slice = &x[chunk * 16..(chunk + 1) * 16];
+            let local = q.quantize_with_scale(slice, scale);
+            assert_eq!(local.q, global.q[chunk * 16..(chunk + 1) * 16].to_vec());
+            assert_eq!(local.scale, scale);
+        }
     }
 
     #[test]

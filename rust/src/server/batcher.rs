@@ -1,17 +1,27 @@
 //! Dynamic micro-batching over the shard set.
 //!
-//! One batcher thread owns the [`ShardSet`].  It blocks for the first
-//! pending request, keeps collecting until `max_batch` requests are in
-//! hand or `max_wait` has elapsed, dispatches the whole batch across the
-//! shard pools in one scatter–gather
-//! [`crate::shard::router::transform_batch`] call (so tile utilization
-//! stays high under bursty concurrent load — wide requests additionally
-//! parallelize *within* themselves across shards), then fans the replies
-//! back out over per-request channels.
+//! One batcher thread owns the [`ShardSet`] (and the served [`Mlp`], if
+//! any).  It blocks for the first pending request, keeps collecting
+//! until `max_batch` requests are in hand or `max_wait` has elapsed,
+//! then dispatches the whole batch:
 //!
-//! Under a backlog the `recv_timeout` calls return instantly, so deep
-//! batches form with no added latency; on an idle server a lone request
-//! pays at most `max_wait` of coalescing delay.
+//! * raw transform items go through one scatter–gather
+//!   [`crate::shard::router::transform_batch`] call;
+//! * infer items are concatenated into one `(samples, din)` activation
+//!   and pushed through `Mlp::forward_with` over a
+//!   [`crate::exec::Sharded`] executor — every sample's BWHT blocks fan
+//!   out across the healthy pools, bit-identically (digital backend) to
+//!   `Backend::Quantized`.
+//!
+//! Replies fan back out over per-request channels.  Under a backlog the
+//! `recv_timeout` calls return instantly, so deep batches form with no
+//! added latency; on an idle server a lone request pays at most
+//! `max_wait` of coalescing delay.
+//!
+//! The batcher doubles as the shard-health loop: before each batch and
+//! on an idle `health_tick` it respawns poisoned shards
+//! ([`ShardSet::respawn_poisoned`]), so a dead pool heals instead of
+//! permanently shrinking capacity.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -19,13 +29,24 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Metrics, TransformRequest};
+use crate::exec::Sharded;
+use crate::nn::Mlp;
 use crate::shard::{router, ShardSet};
 
 use super::ServerState;
 
+/// What one queued request wants executed.
+pub enum BatchPayload {
+    /// A raw BWHT transform (`POST /v1/transform`).
+    Transform(TransformRequest),
+    /// `samples` rows of a `(samples, din)` activation for the hosted
+    /// model (`POST /v1/infer`).
+    Infer { x: Vec<f32>, samples: usize },
+}
+
 /// One queued request: payload plus its reply channel.
 pub struct BatchItem {
-    pub req: TransformRequest,
+    pub payload: BatchPayload,
     pub reply: Sender<Result<BatchReply, String>>,
     pub enqueued: Instant,
 }
@@ -33,10 +54,17 @@ pub struct BatchItem {
 /// Successful per-request outcome.
 #[derive(Debug, Clone)]
 pub struct BatchReply {
-    /// Transform outputs at padded width.
+    /// Transform outputs at padded width, or `(samples, classes)` logits.
     pub values: Vec<f32>,
     /// Queue + execution latency as observed by the batcher.
     pub latency: Duration,
+}
+
+/// Respawn any poisoned shards (no-op when disabled or all healthy).
+fn heal_shards(shards: &mut ShardSet, auto_respawn: bool) {
+    if auto_respawn && shards.healthy_count() < shards.len() {
+        shards.respawn_poisoned();
+    }
 }
 
 /// Run the batching loop until every [`BatchItem`] sender is dropped,
@@ -46,15 +74,36 @@ pub struct BatchReply {
 /// are dropped instead of executed: their client already gave up, and
 /// skipping them lets an overload backlog drain at channel speed
 /// instead of pool-execution speed — no congestion collapse.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_batcher(
     rx: Receiver<BatchItem>,
     mut shards: ShardSet,
+    model: Option<Mlp>,
     max_batch: usize,
     max_wait: Duration,
     stale_after: Duration,
+    health_tick: Duration,
+    auto_respawn: bool,
     state: Arc<ServerState>,
 ) -> Metrics {
-    while let Ok(first) = rx.recv() {
+    // Monotonic sample offset feeding per-sample noise streams.  Only
+    // in-process executors consume stream ids (pool backends draw noise
+    // from per-worker RNG state), but keeping the offset monotonic per
+    // attempt costs nothing and keeps the seam uniform.  Deliberately
+    // not the `infer_samples_total` metric: failed forwards advance the
+    // offset but must not count as served samples.
+    let mut stream_offset: u64 = 0;
+    loop {
+        let first = match rx.recv_timeout(health_tick) {
+            Ok(item) => item,
+            Err(RecvTimeoutError::Timeout) => {
+                // Idle tick: heal dead shards while nothing is queued.
+                heal_shards(&mut shards, auto_respawn);
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        heal_shards(&mut shards, auto_respawn);
         let mut batch = vec![first];
         let deadline = Instant::now() + max_wait;
         while batch.len() < max_batch {
@@ -79,29 +128,91 @@ pub(crate) fn run_batcher(
             continue;
         }
         state.batches_total.fetch_add(1, Ordering::Relaxed);
-        // Move the payloads out instead of cloning them — the only copy
-        // left on the dispatch path is the coordinator's own padding.
-        let mut reqs = Vec::with_capacity(batch.len());
-        let mut waiters = Vec::with_capacity(batch.len());
+
+        // Split the coalesced batch by payload kind, moving payloads out
+        // instead of cloning them.
+        let mut transform_reqs = Vec::new();
+        let mut transform_waiters = Vec::new();
+        let mut infer_x: Vec<f32> = Vec::new();
+        let mut infer_waiters = Vec::new();
+        let mut infer_samples = 0usize;
         for item in batch {
-            reqs.push(item.req);
-            waiters.push((item.reply, item.enqueued));
-        }
-        match router::transform_batch(&mut shards, &reqs) {
-            Ok(outputs) => {
-                for ((reply, enqueued), values) in waiters.into_iter().zip(outputs) {
-                    let latency = enqueued.elapsed();
-                    state.record_latency(latency);
-                    let _ = reply.send(Ok(BatchReply { values, latency }));
+            let BatchItem {
+                payload,
+                reply,
+                enqueued,
+            } = item;
+            match payload {
+                BatchPayload::Transform(req) => {
+                    transform_reqs.push(req);
+                    transform_waiters.push((reply, enqueued));
+                }
+                BatchPayload::Infer { x, samples } => {
+                    infer_x.extend_from_slice(&x);
+                    infer_samples += samples;
+                    infer_waiters.push((reply, enqueued, samples));
                 }
             }
-            Err(e) => {
-                // Requests are validated before enqueueing, so this is a
-                // set-level failure (every shard poisoned): report it to
-                // every waiter.
-                let msg = format!("batch execution failed: {e}");
-                for (reply, _) in waiters {
-                    let _ = reply.send(Err(msg.clone()));
+        }
+
+        if !transform_reqs.is_empty() {
+            match router::transform_batch(&mut shards, &transform_reqs) {
+                Ok(outputs) => {
+                    for ((reply, enqueued), values) in
+                        transform_waiters.into_iter().zip(outputs)
+                    {
+                        let latency = enqueued.elapsed();
+                        state.record_latency(latency);
+                        let _ = reply.send(Ok(BatchReply { values, latency }));
+                    }
+                }
+                Err(e) => {
+                    // Requests are validated before enqueueing, so this
+                    // is a set-level failure (every shard poisoned):
+                    // report it to every waiter.
+                    let msg = format!("batch execution failed: {e}");
+                    for (reply, _) in transform_waiters {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+
+        if infer_samples > 0 {
+            match &model {
+                None => {
+                    for (reply, _, _) in infer_waiters {
+                        let _ = reply.send(Err("no model loaded".to_string()));
+                    }
+                }
+                Some(mlp) => {
+                    let offset = stream_offset;
+                    stream_offset += infer_samples as u64;
+                    let classes = mlp.classes;
+                    let mut exec = Sharded::new(&mut shards);
+                    match mlp.forward_with(&mut exec, &infer_x, infer_samples, offset) {
+                        Ok(logits) => {
+                            state.infer_batches_total.fetch_add(1, Ordering::Relaxed);
+                            state
+                                .infer_samples_total
+                                .fetch_add(infer_samples as u64, Ordering::Relaxed);
+                            let mut row = 0usize;
+                            for (reply, enqueued, samples) in infer_waiters {
+                                let values =
+                                    logits[row * classes..(row + samples) * classes].to_vec();
+                                row += samples;
+                                let latency = enqueued.elapsed();
+                                state.record_infer_latency(latency);
+                                let _ = reply.send(Ok(BatchReply { values, latency }));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("inference failed: {e}");
+                            for (reply, _, _) in infer_waiters {
+                                let _ = reply.send(Err(msg.clone()));
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -114,8 +225,10 @@ mod tests {
     use super::*;
     use crate::bitplane::QuantBwht;
     use crate::energy::EnergyModel;
+    use crate::nn::Backend;
     use crate::server::admission::AdmissionConfig;
     use crate::shard::ShardSetConfig;
+    use crate::util::rng::Rng;
     use std::sync::mpsc;
 
     fn test_set(shards: usize) -> ShardSet {
@@ -131,8 +244,43 @@ mod tests {
             AdmissionConfig::default(),
             set.aggregator(),
             set.health_handle(),
+            set.respawns_handle(),
             EnergyModel::new(16, 0.8),
         ))
+    }
+
+    fn run(
+        rx: Receiver<BatchItem>,
+        set: ShardSet,
+        model: Option<Mlp>,
+        max_batch: usize,
+        stale_after: Duration,
+        state: Arc<ServerState>,
+    ) -> Metrics {
+        run_batcher(
+            rx,
+            set,
+            model,
+            max_batch,
+            Duration::from_millis(5),
+            stale_after,
+            Duration::from_millis(50),
+            true,
+            state,
+        )
+    }
+
+    fn transform_item(x: Vec<f32>, reply: Sender<Result<BatchReply, String>>) -> BatchItem {
+        let thresholds_units = vec![0.0; x.len()];
+        BatchItem {
+            payload: BatchPayload::Transform(TransformRequest {
+                x,
+                thresholds_units,
+                scale: None,
+            }),
+            reply,
+            enqueued: Instant::now(),
+        }
     }
 
     #[test]
@@ -146,26 +294,11 @@ mod tests {
         for i in 0..6u64 {
             let (reply_tx, reply_rx) = mpsc::channel();
             let x: Vec<f32> = (0..16).map(|j| ((i * 16 + j) as f32 * 0.1).sin()).collect();
-            tx.send(BatchItem {
-                req: TransformRequest {
-                    x: x.clone(),
-                    thresholds_units: vec![0.0; 16],
-                },
-                reply: reply_tx,
-                enqueued: Instant::now(),
-            })
-            .unwrap();
+            tx.send(transform_item(x.clone(), reply_tx)).unwrap();
             waiters.push((x, reply_rx));
         }
         drop(tx);
-        let metrics = run_batcher(
-            rx,
-            set,
-            8,
-            Duration::from_millis(5),
-            Duration::from_secs(5),
-            Arc::clone(&state),
-        );
+        let metrics = run(rx, set, None, 8, Duration::from_secs(5), Arc::clone(&state));
         for (x, reply_rx) in waiters {
             let reply = reply_rx.recv().unwrap().unwrap();
             let golden = QuantBwht::new(16, 16, 8).transform(&x);
@@ -188,26 +321,11 @@ mod tests {
         let mut waiters = Vec::new();
         for _ in 0..5 {
             let (reply_tx, reply_rx) = mpsc::channel();
-            tx.send(BatchItem {
-                req: TransformRequest {
-                    x: vec![0.5; 16],
-                    thresholds_units: vec![0.0; 16],
-                },
-                reply: reply_tx,
-                enqueued: Instant::now(),
-            })
-            .unwrap();
+            tx.send(transform_item(vec![0.5; 16], reply_tx)).unwrap();
             waiters.push(reply_rx);
         }
         drop(tx);
-        let metrics = run_batcher(
-            rx,
-            set,
-            2,
-            Duration::from_millis(5),
-            Duration::from_secs(5),
-            Arc::clone(&state),
-        );
+        let metrics = run(rx, set, None, 2, Duration::from_secs(5), Arc::clone(&state));
         for reply_rx in waiters {
             assert!(reply_rx.recv().unwrap().is_ok());
         }
@@ -227,11 +345,52 @@ mod tests {
         let mut waiters = Vec::new();
         for _ in 0..3 {
             let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(transform_item(vec![0.5; 16], reply_tx)).unwrap();
+            waiters.push(reply_rx);
+        }
+        drop(tx);
+        // stale_after = 0: everything is already expired at dispatch.
+        let metrics = run(rx, set, None, 8, Duration::ZERO, Arc::clone(&state));
+        assert_eq!(metrics.requests, 0, "stale work must not reach the pool");
+        assert_eq!(state.stale_dropped_total.load(Ordering::Relaxed), 3);
+        assert_eq!(state.batches_total.load(Ordering::Relaxed), 0);
+        for reply_rx in waiters {
+            assert!(reply_rx.recv().is_err(), "reply sender must be dropped");
+        }
+    }
+
+    fn tiny_mlp(hidden: usize) -> Mlp {
+        let mut r = Rng::seed_from_u64(5);
+        let din = 8;
+        let classes = 3;
+        Mlp::from_flat(
+            din,
+            hidden,
+            classes,
+            r.normal_vec_f32(din * hidden, 0.0, 0.5),
+            vec![0.0; hidden],
+            vec![0.05; hidden],
+            r.normal_vec_f32(hidden * classes, 0.0, 0.5),
+            vec![0.0; classes],
+        )
+    }
+
+    #[test]
+    fn infer_items_coalesce_into_one_model_forward_bit_identical_to_quantized() {
+        // hidden = 16 -> one 16-wide BWHT block per sample, matching the
+        // default tile_n = 16 of the test set.
+        let mlp = tiny_mlp(16);
+        let set = test_set(2);
+        let state = test_state(&set);
+        let (tx, rx) = mpsc::channel();
+        let mut waiters = Vec::new();
+        let mut all_x = Vec::new();
+        for i in 0..4u64 {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let x: Vec<f32> = (0..8).map(|j| ((i * 8 + j) as f32 * 0.21).cos()).collect();
+            all_x.extend_from_slice(&x);
             tx.send(BatchItem {
-                req: TransformRequest {
-                    x: vec![0.5; 16],
-                    thresholds_units: vec![0.0; 16],
-                },
+                payload: BatchPayload::Infer { x, samples: 1 },
                 reply: reply_tx,
                 enqueued: Instant::now(),
             })
@@ -239,20 +398,88 @@ mod tests {
             waiters.push(reply_rx);
         }
         drop(tx);
-        // stale_after = 0: everything is already expired at dispatch.
-        let metrics = run_batcher(
+        let metrics = run(
             rx,
             set,
+            Some(mlp.clone()),
             8,
-            Duration::from_millis(5),
-            Duration::ZERO,
+            Duration::from_secs(5),
             Arc::clone(&state),
         );
-        assert_eq!(metrics.requests, 0, "stale work must not reach the pool");
-        assert_eq!(state.stale_dropped_total.load(Ordering::Relaxed), 3);
-        assert_eq!(state.batches_total.load(Ordering::Relaxed), 0);
-        for reply_rx in waiters {
-            assert!(reply_rx.recv().is_err(), "reply sender must be dropped");
+        // Golden: the legacy in-process quantized backend over the same
+        // batch (the digital path never consumes the rng).
+        let golden = mlp.forward(
+            &all_x,
+            4,
+            Backend::Quantized { bits: 8 },
+            &mut Rng::seed_from_u64(0),
+        );
+        for (i, reply_rx) in waiters.into_iter().enumerate() {
+            let reply = reply_rx.recv().unwrap().unwrap();
+            assert_eq!(
+                reply.values,
+                golden[i * 3..(i + 1) * 3].to_vec(),
+                "sample {i}"
+            );
         }
+        assert_eq!(state.infer_batches_total.load(Ordering::Relaxed), 1);
+        assert_eq!(state.infer_samples_total.load(Ordering::Relaxed), 4);
+        assert_eq!(state.infer_latency.lock().unwrap().count(), 4);
+        assert!(metrics.requests > 0, "transforms must hit the tile pools");
+    }
+
+    #[test]
+    fn infer_without_a_model_reports_a_clean_error() {
+        let set = test_set(1);
+        let state = test_state(&set);
+        let (tx, rx) = mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(BatchItem {
+            payload: BatchPayload::Infer {
+                x: vec![0.0; 8],
+                samples: 1,
+            },
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        run(rx, set, None, 8, Duration::from_secs(5), state);
+        let err = reply_rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("no model"), "{err}");
+    }
+
+    #[test]
+    fn health_tick_respawns_poisoned_shards_before_dispatch() {
+        let mut set = test_set(2);
+        let state = test_state(&set);
+        // Kill shard 0 up front: the first dispatch re-routes its slices
+        // (poisoning it), and a later heal pass respawns it.
+        set.coordinator_mut(0).unwrap().abort();
+        let (tx, rx) = mpsc::channel();
+        let batcher_state = Arc::clone(&state);
+        let handle =
+            std::thread::spawn(move || run(rx, set, None, 1, Duration::from_secs(5), batcher_state));
+        for _ in 0..3 {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(transform_item(vec![0.5; 64], reply_tx)).unwrap();
+            assert!(reply_rx.recv().unwrap().is_ok(), "requests keep serving");
+            // Give the batcher a beat between batches so poisoning and
+            // healing happen across iterations.
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // While the batcher still owns the set: the kill must have been
+        // healed (the shutdown below zeroes the gauge by design).
+        assert!(
+            state.shard_respawns.load(Ordering::Acquire) >= 1,
+            "the dead shard must be respawned by the health loop"
+        );
+        assert_eq!(
+            state.shards_healthy.load(Ordering::Acquire),
+            2,
+            "the set must be fully healthy again"
+        );
+        drop(tx);
+        handle.join().unwrap();
     }
 }

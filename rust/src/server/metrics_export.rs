@@ -145,6 +145,12 @@ pub(crate) fn render(state: &ServerState) -> String {
         "Shards the set was started with.",
         state.shard_metrics.shards() as f64,
     );
+    counter_u64(
+        &mut out,
+        "repro_shard_respawns_total",
+        "Poisoned shards respawned by the serve loop's health tick.",
+        state.shard_respawns.load(Ordering::Acquire),
+    );
     let _ = writeln!(
         out,
         "# HELP repro_shard_requests_total Transform slices completed, by shard."
@@ -243,12 +249,42 @@ pub(crate) fn render(state: &ServerState) -> String {
         state.admission.tracked_clients() as f64,
     );
 
+    // NN inference over the hosted model (/v1/infer).
+    counter_u64(
+        &mut out,
+        "repro_infer_requests_total",
+        "Inference requests answered with 200.",
+        state.infer_requests_ok.load(Ordering::Relaxed),
+    );
+    counter_u64(
+        &mut out,
+        "repro_infer_samples_total",
+        "Samples pushed through the hosted model.",
+        state.infer_samples_total.load(Ordering::Relaxed),
+    );
+    counter_u64(
+        &mut out,
+        "repro_infer_batches_total",
+        "Coalesced model forward passes dispatched by the batcher.",
+        state.infer_batches_total.load(Ordering::Relaxed),
+    );
+
     // Latency distributions.
     histogram(
         &mut out,
         "repro_request_latency_seconds",
         "End-to-end request latency (enqueue to reply fan-out).",
         &e2e,
+    );
+    histogram(
+        &mut out,
+        "repro_infer_latency_seconds",
+        "End-to-end inference latency (enqueue to logits fan-out).",
+        &state
+            .infer_latency
+            .lock()
+            .expect("latency poisoned")
+            .clone(),
     );
     histogram(
         &mut out,
@@ -266,7 +302,7 @@ mod tests {
     use crate::energy::EnergyModel;
     use crate::server::admission::AdmissionConfig;
     use crate::shard::MetricsAggregator;
-    use std::sync::atomic::AtomicUsize;
+    use std::sync::atomic::{AtomicU64, AtomicUsize};
     use std::sync::Arc;
     use std::time::Duration;
 
@@ -287,6 +323,7 @@ mod tests {
             AdmissionConfig::default(),
             MetricsAggregator::new(vec![coord.metrics_handle()], 8),
             Arc::new(AtomicUsize::new(1)),
+            Arc::new(AtomicU64::new(0)),
             EnergyModel::new(16, 0.8),
         ));
         // One full-precision request and one that early-terminates.
@@ -295,12 +332,14 @@ mod tests {
             .transform(&TransformRequest {
                 x: x.clone(),
                 thresholds_units: vec![0.0; 16],
+                scale: None,
             })
             .unwrap();
         coord
             .transform(&TransformRequest {
                 x,
                 thresholds_units: vec![1e9; 16],
+                scale: None,
             })
             .unwrap();
         state.record_latency(Duration::from_micros(300));
@@ -333,6 +372,7 @@ mod tests {
             &TransformRequest {
                 x,
                 thresholds_units: vec![0.0; 64],
+                scale: None,
             },
         )
         .unwrap();
@@ -340,6 +380,7 @@ mod tests {
             AdmissionConfig::default(),
             set.aggregator(),
             set.health_handle(),
+            set.respawns_handle(),
             EnergyModel::new(16, 0.8),
         ));
         set.shutdown();

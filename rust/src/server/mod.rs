@@ -15,9 +15,20 @@
 //! Endpoints:
 //! * `POST /v1/transform` — `{"x": [...], "thresholds": [...]}` →
 //!   `{"y": [...], "padded_dim": N, "latency_us": L}`;
+//! * `POST /v1/infer` — `{"x": [...]}` (one sample) or
+//!   `{"x": [[...], ...]}` (a batch) → logits from the model loaded at
+//!   startup (`repro serve --weights mlp.json`), with the BWHT layer's
+//!   transforms executed on the shard set through the
+//!   [`crate::exec::Sharded`] executor — digital-backend logits are
+//!   bit-identical to `Mlp::forward` with `Backend::Quantized`;
 //! * `GET /metrics` — Prometheus text format (cycle/energy accounting,
-//!   admission counters, p50/p95/p99 latency);
+//!   admission counters, `repro_infer_*` series, p50/p95/p99 latency);
 //! * `GET /healthz` — liveness probe.
+//!
+//! The batcher thread doubles as the shard-health loop: on a periodic
+//! tick (and before each batch) it respawns poisoned shards
+//! ([`crate::shard::ShardSet::respawn`]) so a dead pool heals instead of
+//! permanently shrinking capacity.
 //!
 //! Everything is `std`-only (the build box is offline): hand-rolled HTTP
 //! in [`http`], batching in [`batcher`], shedding in [`admission`] and
@@ -39,14 +50,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{CoordinatorConfig, LatencyHistogram, Metrics, TransformRequest};
+use crate::analog::crossbar::CrossbarConfig;
+use crate::coordinator::{CoordinatorConfig, LatencyHistogram, Metrics, TileKind, TransformRequest};
 use crate::energy::EnergyModel;
+use crate::exec;
+use crate::nn::Mlp;
 use crate::shard::{MetricsAggregator, ShardSet, ShardSetConfig};
 use crate::util::json::{self, Json};
 
 use admission::Admission;
 pub use admission::{AdmissionConfig, Rejection};
-use batcher::BatchItem;
+use batcher::{BatchItem, BatchPayload};
 pub use batcher::BatchReply;
 
 /// Serving configuration.
@@ -81,6 +95,18 @@ pub struct ServerConfig {
     /// How long an idle keep-alive connection is held open waiting for
     /// its next request.
     pub keepalive_idle: Duration,
+    /// Model served by `POST /v1/infer` (loaded from `--weights` by the
+    /// CLI).  When set, the shard set's tile width is aligned to the
+    /// model's BWHT block size so digital inference is bit-identical to
+    /// `Backend::Quantized`.  `None` disables the endpoint.
+    pub model: Option<Mlp>,
+    /// Largest sample count accepted in one `/v1/infer` request.
+    pub max_infer_batch: usize,
+    /// Respawn poisoned shards from the batcher's health tick.
+    pub auto_respawn: bool,
+    /// Health-tick period: how often an idle batcher checks for (and
+    /// heals) poisoned shards.
+    pub health_tick: Duration,
 }
 
 impl Default for ServerConfig {
@@ -98,6 +124,10 @@ impl Default for ServerConfig {
             request_timeout: Duration::from_secs(5),
             keepalive_max_requests: 64,
             keepalive_idle: Duration::from_secs(5),
+            model: None,
+            max_infer_batch: 64,
+            auto_respawn: true,
+            health_tick: Duration::from_millis(250),
         }
     }
 }
@@ -107,14 +137,24 @@ impl Default for ServerConfig {
 pub(crate) struct ServerState {
     pub admission: Admission,
     pub e2e_latency: Mutex<LatencyHistogram>,
+    /// End-to-end `/v1/infer` latency (enqueue to logits fan-out).
+    pub infer_latency: Mutex<LatencyHistogram>,
     /// Merged + per-shard accelerator metrics across the shard set.
     pub shard_metrics: MetricsAggregator,
     /// Healthy-shard count maintained by the [`ShardSet`].
     pub shards_healthy: Arc<AtomicUsize>,
+    /// Lifetime shard respawns performed by the health tick.
+    pub shard_respawns: Arc<AtomicU64>,
     pub energy: EnergyModel,
     pub batches_total: AtomicU64,
     pub requests_ok: AtomicU64,
     pub bad_requests: AtomicU64,
+    /// `/v1/infer` requests answered with 200.
+    pub infer_requests_ok: AtomicU64,
+    /// Samples successfully pushed through the model.
+    pub infer_samples_total: AtomicU64,
+    /// Model forward passes dispatched by the batcher.
+    pub infer_batches_total: AtomicU64,
     /// Items the batcher discarded because their client timed out.
     pub stale_dropped_total: AtomicU64,
     /// Currently open connections (slowloris guard).
@@ -126,17 +166,23 @@ impl ServerState {
         admission: AdmissionConfig,
         shard_metrics: MetricsAggregator,
         shards_healthy: Arc<AtomicUsize>,
+        shard_respawns: Arc<AtomicU64>,
         energy: EnergyModel,
     ) -> ServerState {
         ServerState {
             admission: Admission::new(admission),
             e2e_latency: Mutex::new(LatencyHistogram::new()),
+            infer_latency: Mutex::new(LatencyHistogram::new()),
             shard_metrics,
             shards_healthy,
+            shard_respawns,
             energy,
             batches_total: AtomicU64::new(0),
             requests_ok: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
+            infer_requests_ok: AtomicU64::new(0),
+            infer_samples_total: AtomicU64::new(0),
+            infer_batches_total: AtomicU64::new(0),
             stale_dropped_total: AtomicU64::new(0),
             connections: AtomicUsize::new(0),
         }
@@ -144,6 +190,13 @@ impl ServerState {
 
     pub(crate) fn record_latency(&self, latency: Duration) {
         self.e2e_latency
+            .lock()
+            .expect("latency poisoned")
+            .record(latency);
+    }
+
+    pub(crate) fn record_infer_latency(&self, latency: Duration) {
+        self.infer_latency
             .lock()
             .expect("latency poisoned")
             .record(latency);
@@ -167,30 +220,55 @@ impl Server {
             .with_context(|| format!("binding {}", config.listen))?;
         let addr = listener.local_addr()?;
 
+        // A hosted model pins the tile geometry: every transform block of
+        // its BWHT layer must be exactly one tile, which is what makes
+        // digital /v1/infer bit-identical to `Backend::Quantized`.  An
+        // analog backend's crossbar geometry must follow the override —
+        // Tile::new asserts config.n == tile_n in every worker thread.
+        let mut coordinator = config.coordinator.clone();
+        if let Some(model) = &config.model {
+            let tile = exec::uniform_tile(model.bwht.transform_blocks()).context(
+                "the model's BWHT width does not map onto uniform crossbar tiles",
+            )?;
+            if coordinator.tile_n != tile {
+                coordinator.tile_n = tile;
+                if let TileKind::Analog { config: xbar } = &mut coordinator.kind {
+                    *xbar = CrossbarConfig::new(tile, config.vdd);
+                }
+            }
+        }
+
         let shards = ShardSet::new(ShardSetConfig {
             shards: config.shards.max(1),
-            coordinator: config.coordinator.clone(),
+            coordinator: coordinator.clone(),
             ..Default::default()
         })?;
         let state = Arc::new(ServerState::new(
             config.admission.clone(),
             shards.aggregator(),
             shards.health_handle(),
-            EnergyModel::new(config.coordinator.tile_n, config.vdd),
+            shards.respawns_handle(),
+            EnergyModel::new(coordinator.tile_n, config.vdd),
         ));
 
         let (batch_tx, batch_rx) = mpsc::channel::<BatchItem>();
         let max_batch = config.max_batch.max(1);
         let max_wait = Duration::from_micros(config.max_wait_us);
         let stale_after = config.request_timeout;
+        let model = config.model.clone();
+        let auto_respawn = config.auto_respawn;
+        let health_tick = config.health_tick.max(Duration::from_millis(10));
         let batcher_state = Arc::clone(&state);
         let batcher_thread = std::thread::spawn(move || {
             batcher::run_batcher(
                 batch_rx,
                 shards,
+                model,
                 max_batch,
                 max_wait,
                 stale_after,
+                health_tick,
+                auto_respawn,
                 batcher_state,
             )
         });
@@ -358,7 +436,8 @@ fn route(
         ("GET", "/healthz") => http::Response::text(200, "ok\n"),
         ("GET", "/metrics") => http::Response::text(200, &metrics_export::render(state)),
         ("POST", "/v1/transform") => handle_transform(request, peer, tx, state, config),
-        (_, "/v1/transform") | (_, "/metrics") | (_, "/healthz") => {
+        ("POST", "/v1/infer") => handle_infer(request, peer, tx, state, config),
+        (_, "/v1/transform") | (_, "/v1/infer") | (_, "/metrics") | (_, "/healthz") => {
             http::Response::json(405, &error_json("method not allowed"))
         }
         _ => http::Response::json(404, &error_json("not found")),
@@ -449,10 +528,11 @@ fn handle_transform(
 
     let (reply_tx, reply_rx) = mpsc::channel();
     let item = BatchItem {
-        req: TransformRequest {
+        payload: BatchPayload::Transform(TransformRequest {
             x,
             thresholds_units,
-        },
+            scale: None,
+        }),
         reply: reply_tx,
         enqueued: Instant::now(),
     };
@@ -479,6 +559,146 @@ fn handle_transform(
         }
         Ok(Err(message)) => http::Response::json(500, &error_json(&message)),
         Err(_) => http::Response::json(504, &error_json("timed out waiting for the tile pool")),
+    };
+    drop(permit);
+    response
+}
+
+/// Parse one finite-f32 row out of a JSON array.
+fn parse_row(values: &[Json], din: usize) -> Result<Vec<f32>, String> {
+    if values.len() != din {
+        return Err(format!(
+            "each sample needs {din} features, got {}",
+            values.len()
+        ));
+    }
+    let mut row = Vec::with_capacity(values.len());
+    for v in values {
+        match v.as_f64() {
+            Some(f) if f.is_finite() => row.push(f as f32),
+            _ => return Err("\"x\" must contain finite numbers".to_string()),
+        }
+    }
+    Ok(row)
+}
+
+/// Parse, admit, enqueue into the batcher, and reply with model logits.
+///
+/// Accepts `{"x": [f, ...]}` (one sample, flat logits back) or
+/// `{"x": [[f, ...], ...]}` (a batch, nested logits back).  The batcher
+/// coalesces concurrent infer requests into one model forward whose BWHT
+/// transforms scatter–gather across the shard set.
+fn handle_infer(
+    request: &http::Request,
+    peer: IpAddr,
+    tx: &Sender<BatchItem>,
+    state: &ServerState,
+    config: &ServerConfig,
+) -> http::Response {
+    let Some(model) = &config.model else {
+        return http::Response::json(
+            503,
+            &error_json("no model loaded; start the server with --weights PATH"),
+        );
+    };
+    let din = model.din();
+    let classes = model.classes;
+
+    let body = match request.body_str() {
+        Ok(s) => s,
+        Err(_) => return bad_request(state, "body must be UTF-8 JSON"),
+    };
+    let parsed = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return bad_request(state, &format!("invalid JSON: {e}")),
+    };
+    let Some(xs) = parsed.get("x").and_then(Json::as_arr) else {
+        return bad_request(state, "missing \"x\" array");
+    };
+    if xs.is_empty() {
+        return bad_request(state, "\"x\" must be non-empty");
+    }
+
+    // Shape sniff: an array of arrays is a batch; an array of numbers is
+    // one sample.
+    let nested = xs[0].as_arr().is_some();
+    let mut x = Vec::new();
+    let samples = if nested {
+        if xs.len() > config.max_infer_batch.max(1) {
+            return bad_request(
+                state,
+                &format!(
+                    "batch of {} samples exceeds the limit of {}",
+                    xs.len(),
+                    config.max_infer_batch.max(1)
+                ),
+            );
+        }
+        for row in xs {
+            let Some(row) = row.as_arr() else {
+                return bad_request(state, "\"x\" rows must all be arrays");
+            };
+            match parse_row(row, din) {
+                Ok(mut r) => x.append(&mut r),
+                Err(e) => return bad_request(state, &e),
+            }
+        }
+        xs.len()
+    } else {
+        match parse_row(xs, din) {
+            Ok(r) => x = r,
+            Err(e) => return bad_request(state, &e),
+        }
+        1
+    };
+
+    let permit = match state.admission.try_acquire(peer, Instant::now()) {
+        Ok(p) => p,
+        Err(Rejection::Overloaded) => {
+            return http::Response::json(429, &error_json("overloaded: in-flight limit reached"))
+                .with_header("Retry-After", "1");
+        }
+        Err(Rejection::RateLimited) => {
+            return http::Response::json(429, &error_json("rate limited"))
+                .with_header("Retry-After", "1");
+        }
+    };
+
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let item = BatchItem {
+        payload: BatchPayload::Infer { x, samples },
+        reply: reply_tx,
+        enqueued: Instant::now(),
+    };
+    if tx.send(item).is_err() {
+        return http::Response::json(503, &error_json("server shutting down"));
+    }
+    let response = match reply_rx.recv_timeout(config.request_timeout) {
+        Ok(Ok(reply)) => {
+            state.infer_requests_ok.fetch_add(1, Ordering::Relaxed);
+            let logits_json = if nested {
+                Json::Arr(
+                    reply
+                        .values
+                        .chunks_exact(classes)
+                        .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect()))
+                        .collect(),
+                )
+            } else {
+                Json::Arr(reply.values.iter().map(|&v| Json::Num(v as f64)).collect())
+            };
+            let mut obj = BTreeMap::new();
+            obj.insert("logits".to_string(), logits_json);
+            obj.insert("classes".to_string(), Json::Num(classes as f64));
+            obj.insert("samples".to_string(), Json::Num(samples as f64));
+            obj.insert(
+                "latency_us".to_string(),
+                Json::Num(reply.latency.as_micros() as f64),
+            );
+            http::Response::json(200, &Json::Obj(obj))
+        }
+        Ok(Err(message)) => http::Response::json(500, &error_json(&message)),
+        Err(_) => http::Response::json(504, &error_json("timed out waiting for the model")),
     };
     drop(permit);
     response

@@ -1,14 +1,28 @@
 //! Merging per-shard [`Metrics`] into one logical-accelerator snapshot.
 //!
 //! Every shard's coordinator already aggregates its own workers into a
-//! shared `Arc<Mutex<Metrics>>`; this module folds those N handles into
-//! a single [`Metrics`] (row-cycles, planes, ET savings and latency
+//! shared `Arc<Mutex<Metrics>>`; this module folds those handles into a
+//! single [`Metrics`] (row-cycles, planes, ET savings and latency
 //! histograms all merge additively) for the Prometheus exporter, while
 //! keeping the per-shard views available for labeled series.
+//!
+//! A slot may accumulate *several* handles over its lifetime: when a
+//! poisoned shard is respawned ([`crate::shard::ShardSet::respawn`]) the
+//! fresh pool's handle is appended to the slot, so the labeled series
+//! keep counting what the dead generation served.  The slot list itself
+//! is shared (`Arc`) with the owning shard set, so aggregators handed to
+//! a serving front-end observe respawns that happen after they were
+//! created.
 
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::Metrics;
+
+/// One coordinator pool's live metrics handle.
+pub(crate) type Handle = Arc<Mutex<Metrics>>;
+/// Shared per-slot handle lists (one inner `Vec` per shard slot; one
+/// entry per pool generation of that slot).
+pub(crate) type HandleSlots = Arc<Mutex<Vec<Vec<Handle>>>>;
 
 /// Cheap cloneable view over the shard set's metrics handles.
 ///
@@ -17,33 +31,53 @@ use crate::coordinator::Metrics;
 /// can hold an aggregator while the batcher thread owns the set itself.
 #[derive(Clone)]
 pub struct MetricsAggregator {
-    handles: Vec<Arc<Mutex<Metrics>>>,
+    slots: HandleSlots,
     bits: u32,
 }
 
 impl MetricsAggregator {
-    pub fn new(handles: Vec<Arc<Mutex<Metrics>>>, bits: u32) -> MetricsAggregator {
-        MetricsAggregator { handles, bits }
+    /// Aggregator over a flat list of handles, one slot each (the
+    /// single-generation case; tests and ad-hoc callers).
+    pub fn new(handles: Vec<Handle>, bits: u32) -> MetricsAggregator {
+        let slots: Vec<Vec<Handle>> = handles.into_iter().map(|h| vec![h]).collect();
+        MetricsAggregator {
+            slots: Arc::new(Mutex::new(slots)),
+            bits,
+        }
     }
 
-    /// Number of shards aggregated (poisoned slots included).
+    /// Aggregator sharing a shard set's live slot list (respawns append
+    /// new generations that this aggregator then reports).
+    pub(crate) fn shared(slots: HandleSlots, bits: u32) -> MetricsAggregator {
+        MetricsAggregator { slots, bits }
+    }
+
+    /// Number of shard slots aggregated (poisoned slots included).
     pub fn shards(&self) -> usize {
-        self.handles.len()
+        self.slots.lock().expect("shard metrics poisoned").len()
     }
 
-    /// Snapshot of each shard's metrics, by slot index.
+    /// Snapshot of each slot's metrics (all generations merged), by slot
+    /// index.
     pub fn per_shard(&self) -> Vec<Metrics> {
-        self.handles
+        let slots = self.slots.lock().expect("shard metrics poisoned");
+        slots
             .iter()
-            .map(|h| h.lock().expect("shard metrics poisoned").clone())
+            .map(|gens| {
+                let mut m = Metrics::new(self.bits);
+                for h in gens {
+                    m.merge(&h.lock().expect("shard metrics poisoned"));
+                }
+                m
+            })
             .collect()
     }
 
-    /// One merged snapshot across every shard.
+    /// One merged snapshot across every slot and generation.
     pub fn merged(&self) -> Metrics {
         let mut total = Metrics::new(self.bits);
-        for h in &self.handles {
-            total.merge(&h.lock().expect("shard metrics poisoned"));
+        for m in self.per_shard() {
+            total.merge(&m);
         }
         total
     }
@@ -87,5 +121,22 @@ mod tests {
         let merged = agg.merged();
         assert_eq!(merged.requests, 0);
         assert_eq!(merged.bits(), 8);
+    }
+
+    #[test]
+    fn respawned_generation_adds_to_its_slot() {
+        let slots: HandleSlots = Arc::new(Mutex::new(vec![
+            vec![with_requests(8, 2, 10)],
+            vec![with_requests(8, 1, 5)],
+        ]));
+        let agg = MetricsAggregator::shared(Arc::clone(&slots), 8);
+        assert_eq!(agg.per_shard()[0].requests, 2);
+        // A respawn appends a fresh handle to slot 0; existing
+        // aggregators see it immediately.
+        slots.lock().unwrap()[0].push(with_requests(8, 7, 70));
+        assert_eq!(agg.shards(), 2);
+        assert_eq!(agg.per_shard()[0].requests, 9);
+        assert_eq!(agg.merged().requests, 10);
+        assert_eq!(agg.merged().row_cycles, 85);
     }
 }

@@ -35,4 +35,4 @@ pub mod set;
 
 pub use metrics_agg::MetricsAggregator;
 pub use planner::{estimate_block_cost, plan_blocks, BlockPlan, ShardAssignment};
-pub use set::{ShardSet, ShardSetConfig, SHARD_SEED_STRIDE};
+pub use set::{ShardSet, ShardSetConfig, RESPAWN_SEED_STRIDE, SHARD_SEED_STRIDE};

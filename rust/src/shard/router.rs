@@ -39,7 +39,15 @@ struct Slice {
 }
 
 /// Concatenate `blocks` of the padded request into one sub-request.
-fn sub_request(x: &[f32], th: &[f64], blocks: &[usize], tile_n: usize) -> TransformRequest {
+/// The parent's pinned quantization scale (if any) is inherited by every
+/// slice, so a sliced request quantizes exactly like the whole one.
+fn sub_request(
+    x: &[f32],
+    th: &[f64],
+    scale: Option<f32>,
+    blocks: &[usize],
+    tile_n: usize,
+) -> TransformRequest {
     let mut sx = Vec::with_capacity(blocks.len() * tile_n);
     let mut sth = Vec::with_capacity(blocks.len() * tile_n);
     for &b in blocks {
@@ -49,6 +57,7 @@ fn sub_request(x: &[f32], th: &[f64], blocks: &[usize], tile_n: usize) -> Transf
     TransformRequest {
         x: sx,
         thresholds_units: sth,
+        scale,
     }
 }
 
@@ -123,7 +132,7 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
 
     // Validate + pad up front so malformed input is a clean error at the
     // routing boundary (mirrors `Coordinator::validate`).
-    let mut padded: Vec<(Vec<f32>, Vec<f64>)> = Vec::with_capacity(reqs.len());
+    let mut padded: Vec<(Vec<f32>, Vec<f64>, Option<f32>)> = Vec::with_capacity(reqs.len());
     for (i, req) in reqs.iter().enumerate() {
         if req.x.is_empty() {
             bail!("request {i} has an empty input vector");
@@ -135,12 +144,17 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
                 req.x.len()
             );
         }
+        if let Some(s) = req.scale {
+            if !(s.is_finite() && s > 0.0) {
+                bail!("request {i}: pinned quantization scale must be positive and finite");
+            }
+        }
         let w = req.x.len().div_ceil(tile_n) * tile_n;
         let mut x = req.x.clone();
         x.resize(w, 0.0);
         let mut th = req.thresholds_units.clone();
         th.resize(w, 0.0);
-        padded.push((x, th));
+        padded.push((x, th, req.scale));
     }
 
     // Plan the whole batch over the healthy shards, carrying the load
@@ -162,7 +176,7 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
         .div_ceil(reqs.len().max(1));
     let mut loads = vec![0u64; healthy.len()];
     let mut queue: VecDeque<Slice> = VecDeque::new();
-    for (ri, (x, th)) in padded.iter().enumerate() {
+    for (ri, (x, th, _)) in padded.iter().enumerate() {
         let nblocks = x.len() / tile_n;
         let costs: Vec<u64> = (0..nblocks)
             .map(|b| {
@@ -187,7 +201,7 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
         }
     }
 
-    let mut outs: Vec<Vec<f32>> = padded.iter().map(|(x, _)| vec![0.0f32; x.len()]).collect();
+    let mut outs: Vec<Vec<f32>> = padded.iter().map(|(x, ..)| vec![0.0f32; x.len()]).collect();
     let mut outstanding: Vec<HashMap<u64, Slice>> =
         (0..set.len()).map(|_| HashMap::new()).collect();
 
@@ -202,8 +216,8 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
                 slice.shard = reroute_target(set, &outstanding)?;
             }
             let shard = slice.shard;
-            let (x, th) = &padded[slice.req];
-            let sub = sub_request(x, th, &slice.blocks, tile_n);
+            let (x, th, scale) = &padded[slice.req];
+            let sub = sub_request(x, th, *scale, &slice.blocks, tile_n);
             let coord = set.coordinator_mut(shard).expect("healthy shard has a pool");
             match coord.try_submit(&sub) {
                 Ok(Some(id)) => {
@@ -298,6 +312,7 @@ mod tests {
         let req = TransformRequest {
             x: sample(96, 11),
             thresholds_units: vec![0.0; 96],
+            scale: None,
         };
         let out = transform(&mut set, &req).unwrap();
         assert_eq!(out, golden(&req));
@@ -315,6 +330,7 @@ mod tests {
             .map(|i| TransformRequest {
                 x: sample(48, 20 + i),
                 thresholds_units: vec![0.0; 48],
+                scale: None,
             })
             .collect();
         let outs = transform_batch(&mut set, &reqs).unwrap();
@@ -332,6 +348,7 @@ mod tests {
             &TransformRequest {
                 x: vec![],
                 thresholds_units: vec![],
+                scale: None,
             }
         )
         .is_err());
@@ -340,6 +357,7 @@ mod tests {
             &TransformRequest {
                 x: vec![1.0; 8],
                 thresholds_units: vec![0.0; 4],
+                scale: None,
             }
         )
         .is_err());
@@ -356,6 +374,7 @@ mod tests {
         let req = TransformRequest {
             x: sample(128, 31),
             thresholds_units: vec![0.0; 128],
+            scale: None,
         };
         // Kill shard 1's pool before routing: its submits fail, the
         // router poisons it and the survivors absorb the blocks.
@@ -378,6 +397,7 @@ mod tests {
         let req = TransformRequest {
             x: sample(32, 40),
             thresholds_units: vec![0.0; 32],
+            scale: None,
         };
         let err = transform(&mut set, &req).unwrap_err();
         assert!(err.to_string().contains("poisoned"), "{err}");

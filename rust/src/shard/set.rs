@@ -12,20 +12,29 @@
 //! Failure isolation: a shard whose pool dies is *poisoned* — taken out
 //! of the healthy set and retired — rather than failing requests.  The
 //! [`crate::shard::router`] re-routes a poisoned shard's slices to the
-//! surviving shards.
+//! surviving shards.  A poisoned slot can later be healed in place with
+//! [`ShardSet::respawn`]: a fresh pool (new seed, so fresh process
+//! variability) is spun up and folded back into the healthy set — the
+//! serving loop calls this on a health tick so a transient pool death
+//! does not permanently shrink capacity.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, CoordinatorConfig, Metrics, TileKind};
 
-use super::metrics_agg::MetricsAggregator;
+use super::metrics_agg::{HandleSlots, MetricsAggregator};
 
 /// Per-shard seed stride (large odd constant, well clear of the
 /// coordinator's per-worker stride of `0x9E37`).
 pub const SHARD_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Per-generation seed stride applied on [`ShardSet::respawn`], so a
+/// respawned pool samples fresh process variability instead of
+/// resurrecting the dead pool's exact tiles.
+pub const RESPAWN_SEED_STRIDE: u64 = 0x517C_C1B7_2722_0A95;
 
 /// Shard-set configuration.
 #[derive(Debug, Clone)]
@@ -58,18 +67,44 @@ pub struct ShardSet {
     /// `None` marks a poisoned slot.  Indices are stable for the set's
     /// lifetime so metrics labels and plans stay meaningful.
     slots: Vec<Option<Coordinator>>,
-    /// Live metrics handles, one per slot — kept even after poisoning so
-    /// the aggregator can still report what a dead shard served.
-    handles: Vec<Arc<Mutex<Metrics>>>,
+    /// Live metrics handles, one list per slot (one entry per pool
+    /// generation) — kept even after poisoning so the aggregator can
+    /// still report what a dead shard served.  Shared with every
+    /// [`MetricsAggregator`] handed out, so respawns are visible to
+    /// aggregators created earlier.
+    handles: HandleSlots,
+    /// Pool generation per slot (0 = the original pool).
+    generations: Vec<u64>,
     /// Worker-side metrics folded out of poisoned shards at poison time.
     retired: Metrics,
     /// Healthy-shard count, shared with the serving front-end's
     /// `/metrics` exporter.
     healthy_gauge: Arc<AtomicUsize>,
+    /// Respawns performed over the set's lifetime (shared counter for
+    /// the `/metrics` exporter).
+    respawns: Arc<AtomicU64>,
     config: ShardSetConfig,
 }
 
 impl ShardSet {
+    /// Seed for slot `shard` at pool generation `generation`.
+    fn slot_seed(config: &ShardSetConfig, shard: usize, generation: u64) -> u64 {
+        config
+            .coordinator
+            .seed
+            .wrapping_add((shard as u64).wrapping_mul(config.seed_stride))
+            .wrapping_add(generation.wrapping_mul(RESPAWN_SEED_STRIDE))
+    }
+
+    fn spawn_coordinator(config: &ShardSetConfig, shard: usize, generation: u64) -> Coordinator {
+        let mut cc = config.coordinator.clone();
+        cc.seed = Self::slot_seed(config, shard, generation);
+        if let Some(kinds) = &config.kinds {
+            cc.kind = kinds[shard].clone();
+        }
+        Coordinator::new(cc)
+    }
+
     pub fn new(config: ShardSetConfig) -> Result<ShardSet> {
         if config.shards == 0 {
             bail!("shard set needs at least one shard");
@@ -84,24 +119,21 @@ impl ShardSet {
             }
         }
         let mut slots = Vec::with_capacity(config.shards);
-        let mut handles = Vec::with_capacity(config.shards);
+        let mut handle_slots = Vec::with_capacity(config.shards);
         for s in 0..config.shards {
-            let mut cc = config.coordinator.clone();
-            cc.seed = cc.seed.wrapping_add((s as u64).wrapping_mul(config.seed_stride));
-            if let Some(kinds) = &config.kinds {
-                cc.kind = kinds[s].clone();
-            }
-            let coord = Coordinator::new(cc);
-            handles.push(coord.metrics_handle());
+            let coord = Self::spawn_coordinator(&config, s, 0);
+            handle_slots.push(vec![coord.metrics_handle()]);
             slots.push(Some(coord));
         }
         let retired = Metrics::new(config.coordinator.bits);
         let healthy_gauge = Arc::new(AtomicUsize::new(config.shards));
         Ok(ShardSet {
             slots,
-            handles,
+            handles: Arc::new(Mutex::new(handle_slots)),
+            generations: vec![0; config.shards],
             retired,
             healthy_gauge,
+            respawns: Arc::new(AtomicU64::new(0)),
             config,
         })
     }
@@ -143,6 +175,12 @@ impl ShardSet {
         (0..self.slots.len()).filter(|&s| self.is_healthy(s)).collect()
     }
 
+    /// Slot indices of the currently poisoned shards, ascending
+    /// (respawn candidates).
+    pub fn poisoned(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&s| !self.is_healthy(s)).collect()
+    }
+
     pub fn healthy_count(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
@@ -150,6 +188,11 @@ impl ShardSet {
     /// Shared healthy-count gauge for metrics exporters.
     pub fn health_handle(&self) -> Arc<AtomicUsize> {
         Arc::clone(&self.healthy_gauge)
+    }
+
+    /// Shared lifetime-respawns counter for metrics exporters.
+    pub fn respawns_handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.respawns)
     }
 
     /// Mutable access to one shard's coordinator (`None` if poisoned or
@@ -168,10 +211,53 @@ impl ShardSet {
         }
     }
 
-    /// Aggregator over every shard's live metrics handle (poisoned
-    /// shards keep reporting what they served before dying).
+    /// Heal a poisoned slot in place: spin up a fresh pool under a new
+    /// seed (next generation of this slot) and fold it back into the
+    /// healthy set.  The dead generation's metrics keep being reported;
+    /// the fresh pool's handle is appended to the slot so labeled series
+    /// carry across the replacement.
+    ///
+    /// Errors if the slot is out of range or still healthy — respawning
+    /// a live pool would silently drop its in-flight work.
+    pub fn respawn(&mut self, shard: usize) -> Result<()> {
+        if shard >= self.slots.len() {
+            bail!("shard {shard} out of range (set has {})", self.slots.len());
+        }
+        if self.slots[shard].is_some() {
+            bail!("shard {shard} is still healthy; poison it before respawning");
+        }
+        self.generations[shard] += 1;
+        let coord = Self::spawn_coordinator(&self.config, shard, self.generations[shard]);
+        self.handles
+            .lock()
+            .expect("shard metrics poisoned")
+            .get_mut(shard)
+            .expect("slot index checked above")
+            .push(coord.metrics_handle());
+        self.slots[shard] = Some(coord);
+        self.healthy_gauge.fetch_add(1, Ordering::AcqRel);
+        self.respawns.fetch_add(1, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// Respawn every poisoned slot (serve-loop health tick).  Returns
+    /// how many shards were brought back.
+    pub fn respawn_poisoned(&mut self) -> usize {
+        let dead = self.poisoned();
+        let mut brought_back = 0;
+        for s in dead {
+            if self.respawn(s).is_ok() {
+                brought_back += 1;
+            }
+        }
+        brought_back
+    }
+
+    /// Aggregator over every slot's live metrics handles (poisoned
+    /// shards keep reporting what they served before dying; respawned
+    /// generations accumulate onto their slot).
     pub fn aggregator(&self) -> MetricsAggregator {
-        MetricsAggregator::new(self.handles.clone(), self.config.coordinator.bits)
+        MetricsAggregator::shared(Arc::clone(&self.handles), self.config.coordinator.bits)
     }
 
     /// Merged snapshot of drained work across all shards.
@@ -206,6 +292,7 @@ mod tests {
         assert_eq!(set.len(), 3);
         assert_eq!(set.healthy(), vec![0, 1, 2]);
         assert_eq!(set.healthy_count(), 3);
+        assert!(set.poisoned().is_empty());
         let m = set.shutdown();
         assert_eq!(m.requests, 0);
     }
@@ -236,6 +323,7 @@ mod tests {
         let req = TransformRequest {
             x,
             thresholds_units: vec![0.0; 16],
+            scale: None,
         };
         let id = set.coordinator_mut(0).unwrap().submit(&req).unwrap();
         let done = set.coordinator_mut(0).unwrap().drain_one().unwrap();
@@ -245,6 +333,7 @@ mod tests {
         set.poison(0);
         set.poison(0); // idempotent
         assert_eq!(set.healthy(), vec![1]);
+        assert_eq!(set.poisoned(), vec![0]);
         assert_eq!(gauge.load(Ordering::Acquire), 1);
         assert!(set.coordinator_mut(0).is_none());
         // The poisoned shard's served work survives in both views.
@@ -255,19 +344,69 @@ mod tests {
     }
 
     #[test]
-    fn per_shard_seeds_differ() {
-        let set = ShardSet::new(ShardSetConfig {
+    fn respawn_heals_a_poisoned_slot_and_keeps_old_metrics() {
+        let mut set = ShardSet::new(ShardSetConfig {
             shards: 2,
             ..Default::default()
         })
         .unwrap();
-        // Derivation happens in new(); spot-check the stride arithmetic.
-        let base = set.config().coordinator.seed;
-        assert_ne!(
-            base.wrapping_add(SHARD_SEED_STRIDE),
-            base,
-            "stride must move the seed"
-        );
+        let agg = set.aggregator();
+        let mk_req = || TransformRequest {
+            x: (0..16).map(|i| (i as f32 * 0.23).sin()).collect(),
+            thresholds_units: vec![0.0; 16],
+            scale: None,
+        };
+        // Serve one request on shard 0, then kill and respawn it.
+        set.coordinator_mut(0).unwrap().submit(&mk_req()).unwrap();
+        set.coordinator_mut(0).unwrap().drain_one().unwrap();
+        set.coordinator_mut(0).unwrap().abort();
+        set.poison(0);
+        assert_eq!(set.healthy(), vec![1]);
+
+        assert!(set.respawn(5).is_err(), "out of range");
+        assert!(set.respawn(1).is_err(), "still healthy");
+        set.respawn(0).unwrap();
+        assert_eq!(set.healthy(), vec![0, 1]);
+        assert_eq!(set.health_handle().load(Ordering::Acquire), 2);
+        assert_eq!(set.respawns_handle().load(Ordering::Acquire), 1);
+
+        // The fresh pool serves; the dead generation's request is still
+        // reported through aggregators created before the respawn.
+        set.coordinator_mut(0).unwrap().submit(&mk_req()).unwrap();
+        set.coordinator_mut(0).unwrap().drain_one().unwrap();
+        assert_eq!(agg.per_shard()[0].requests, 2);
+        assert_eq!(set.metrics().requests, 2);
         set.shutdown();
+    }
+
+    #[test]
+    fn respawn_poisoned_sweeps_every_dead_slot() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        set.coordinator_mut(0).unwrap().abort();
+        set.coordinator_mut(2).unwrap().abort();
+        set.poison(0);
+        set.poison(2);
+        assert_eq!(set.healthy(), vec![1]);
+        assert_eq!(set.respawn_poisoned(), 2);
+        assert_eq!(set.healthy(), vec![0, 1, 2]);
+        assert_eq!(set.respawn_poisoned(), 0, "nothing left to heal");
+        set.shutdown();
+    }
+
+    #[test]
+    fn respawned_generation_gets_a_fresh_seed() {
+        let config = ShardSetConfig::default();
+        let g0 = ShardSet::slot_seed(&config, 0, 0);
+        let g1 = ShardSet::slot_seed(&config, 0, 1);
+        let other_shard = ShardSet::slot_seed(&config, 1, 0);
+        assert_ne!(g0, g1, "generation must move the seed");
+        assert_ne!(
+            g1, other_shard,
+            "generation stride must not collide with shard stride"
+        );
     }
 }

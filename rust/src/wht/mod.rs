@@ -56,7 +56,16 @@ pub fn bwht_padded_dim(dim: usize, max_block: usize) -> usize {
 /// Blockwise WHT of `x` (length = padded dim), using the fast butterfly
 /// per block.  Equivalent to multiplying by the block-diagonal BWHT matrix.
 pub fn bwht_apply(x: &[f32], dim: usize, max_block: usize) -> Vec<f32> {
-    let blocks = bwht_blocks(dim, max_block);
+    bwht_apply_blocks(x, &bwht_blocks(dim, max_block))
+}
+
+/// Blockwise WHT over an explicit block partition.
+///
+/// [`bwht_apply`] recomputes the partition from the *padded* width, which
+/// is lossy for widths whose partition is not a fixed point of the greedy
+/// decomposition (e.g. `[4, 4]` re-decomposes as `[8]`); callers that
+/// carry the true partition — the [`crate::exec`] executors — use this.
+pub fn bwht_apply_blocks(x: &[f32], blocks: &[usize]) -> Vec<f32> {
     let padded: usize = blocks.iter().sum();
     assert_eq!(
         x.len(),
@@ -66,7 +75,7 @@ pub fn bwht_apply(x: &[f32], dim: usize, max_block: usize) -> Vec<f32> {
     );
     let mut out = x.to_vec();
     let mut off = 0;
-    for &b in &blocks {
+    for &b in blocks {
         wht_sequency(&mut out[off..off + b]);
         off += b;
     }
@@ -75,12 +84,17 @@ pub fn bwht_apply(x: &[f32], dim: usize, max_block: usize) -> Vec<f32> {
 
 /// Exact integer blockwise WHT for integer (quantized) inputs.
 pub fn bwht_apply_i64(x: &[i64], dim: usize, max_block: usize) -> Vec<i64> {
-    let blocks = bwht_blocks(dim, max_block);
+    bwht_apply_i64_blocks(x, &bwht_blocks(dim, max_block))
+}
+
+/// Integer blockwise WHT over an explicit block partition
+/// (see [`bwht_apply_blocks`]).
+pub fn bwht_apply_i64_blocks(x: &[i64], blocks: &[usize]) -> Vec<i64> {
     let padded: usize = blocks.iter().sum();
     assert_eq!(x.len(), padded);
     let mut out = x.to_vec();
     let mut off = 0;
-    for &b in &blocks {
+    for &b in blocks {
         fast::wht_sequency_i64(&mut out[off..off + b]);
         off += b;
     }

@@ -19,10 +19,12 @@ fn full_queue_rejects_instead_of_deadlocking() {
     let big = TransformRequest {
         x: vec![0.25; big_dim],
         thresholds_units: vec![0.0; big_dim],
+        scale: None,
     };
     let small = TransformRequest {
         x: vec![0.5; 16],
         thresholds_units: vec![0.0; 16],
+        scale: None,
     };
     let mut submitted = vec![c.submit(&big).unwrap()];
     let mut rejected = false;
@@ -57,6 +59,7 @@ fn zero_vector_terminates_on_the_first_plane() {
         .transform(&TransformRequest {
             x: vec![0.0; 16],
             thresholds_units: vec![0.0; 16],
+            scale: None,
         })
         .unwrap();
     assert!(out.iter().all(|&v| v == 0.0));
@@ -76,6 +79,7 @@ fn threshold_length_mismatch_is_a_clean_error() {
         .transform(&TransformRequest {
             x: vec![0.1; 16],
             thresholds_units: vec![0.0; 8],
+            scale: None,
         })
         .unwrap_err();
     assert!(
@@ -87,6 +91,7 @@ fn threshold_length_mismatch_is_a_clean_error() {
         .transform(&TransformRequest {
             x: vec![0.1; 16],
             thresholds_units: vec![0.0; 16],
+            scale: None,
         })
         .unwrap();
     assert_eq!(ok.len(), 16);
@@ -100,11 +105,13 @@ fn empty_input_is_a_clean_error() {
         .transform(&TransformRequest {
             x: Vec::new(),
             thresholds_units: Vec::new(),
+            scale: None,
         })
         .is_err());
     assert!(c.submit(&TransformRequest {
         x: Vec::new(),
         thresholds_units: Vec::new(),
+        scale: None,
     })
     .is_err());
     c.shutdown();
@@ -116,10 +123,12 @@ fn batch_with_one_bad_request_fails_before_dispatch() {
     let good = TransformRequest {
         x: vec![0.3; 16],
         thresholds_units: vec![0.0; 16],
+        scale: None,
     };
     let bad = TransformRequest {
         x: vec![0.3; 16],
         thresholds_units: vec![0.0; 4],
+        scale: None,
     };
     assert!(c.transform_batch(&[good.clone(), bad]).is_err());
     // A clean batch afterwards still works.
@@ -135,6 +144,7 @@ fn sync_apis_refuse_to_run_with_undrained_submissions() {
     let req = TransformRequest {
         x: vec![0.5; 16],
         thresholds_units: vec![0.0; 16],
+        scale: None,
     };
     let id = c.submit(&req).unwrap();
     // transform() would steal the submitted result off the shared
@@ -155,6 +165,7 @@ fn submit_drain_matches_synchronous_transform() {
     let req = TransformRequest {
         x,
         thresholds_units: vec![0.0; 32],
+        scale: None,
     };
     let mut sync = Coordinator::new(CoordinatorConfig::default());
     let want = sync.transform(&req).unwrap();

@@ -1,0 +1,294 @@
+//! Executor equivalence (ISSUE 3 satellite): the pooled/sharded digital
+//! executors must be bit-identical to the legacy in-process
+//! `Backend::Quantized` path across widths × bits × shard counts, and
+//! the refactored in-process executors must reproduce the pre-refactor
+//! algorithms exactly.
+
+use repro::bitplane::QuantBwht;
+use repro::coordinator::{Coordinator, CoordinatorConfig};
+use repro::exec::{self, InProcess, Pooled, Sharded, TransformExecutor};
+use repro::nn::{Backend, BwhtLayer, Mlp};
+use repro::shard::{ShardSet, ShardSetConfig};
+use repro::util::prop;
+use repro::util::rng::Rng;
+use repro::wht;
+
+fn sample(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from_u64(seed);
+    (0..n).map(|_| r.uniform_range(-1.5, 1.5) as f32).collect()
+}
+
+/// A layer whose per-channel thresholds are random (nonzero), so the
+/// soft-threshold → early-termination fusion is actually exercised.
+fn layer(width: usize, tseed: u64) -> BwhtLayer {
+    let mut r = Rng::seed_from_u64(tseed);
+    let t: Vec<f32> = (0..width)
+        .map(|_| r.uniform_range(0.0, 0.15) as f32)
+        .collect();
+    BwhtLayer::new(width, width, t, 128)
+}
+
+#[test]
+fn pooled_digital_is_bit_identical_across_widths_and_bits() {
+    for &width in &[64usize, 128, 256] {
+        for &bits in &[2u32, 4, 8] {
+            let l = layer(width, 100 + width as u64);
+            let tile = exec::uniform_tile(l.transform_blocks()).unwrap();
+            let mut coord = Coordinator::new(CoordinatorConfig {
+                tile_n: tile,
+                bits,
+                ..Default::default()
+            });
+            let batch = 3usize;
+            let x = sample(batch * width, 200 + width as u64 + bits as u64);
+            let want = l.forward(
+                &x,
+                batch,
+                width,
+                width,
+                Backend::Quantized { bits },
+                &mut Rng::seed_from_u64(0),
+            );
+            let got = {
+                let mut executor = Pooled::new(&mut coord);
+                l.forward_with(&mut executor, &x, batch, width, width, 0)
+                    .unwrap()
+            };
+            assert_eq!(got, want, "width {width} bits {bits}");
+            coord.shutdown();
+        }
+    }
+}
+
+#[test]
+fn sharded_digital_is_bit_identical_across_shard_counts() {
+    let width = 256usize;
+    let l = layer(width, 11);
+    let tile = exec::uniform_tile(l.transform_blocks()).unwrap();
+    let batch = 4usize;
+    let x = sample(batch * width, 12);
+    let want = l.forward(
+        &x,
+        batch,
+        width,
+        width,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+    for shards in 1..=3usize {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards,
+            coordinator: CoordinatorConfig {
+                tile_n: tile,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let got = {
+            let mut executor = Sharded::new(&mut set);
+            l.forward_with(&mut executor, &x, batch, width, width, 0)
+                .unwrap()
+        };
+        assert_eq!(got, want, "shards {shards}");
+        set.shutdown();
+    }
+}
+
+#[test]
+fn mlp_logits_match_quantized_backend_on_pooled_and_sharded_executors() {
+    let mut r = Rng::seed_from_u64(21);
+    let (din, hidden, classes, batch) = (16usize, 64usize, 4usize, 5usize);
+    let mlp = Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.4),
+        vec![0.0; hidden],
+        vec![0.08; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.4),
+        vec![0.0; classes],
+    );
+    let tile = exec::uniform_tile(mlp.bwht.transform_blocks()).unwrap();
+    assert_eq!(tile, 64);
+    let x = sample(batch * din, 22);
+    let want = mlp.forward(
+        &x,
+        batch,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: tile,
+        ..Default::default()
+    });
+    let pooled = {
+        let mut executor = Pooled::new(&mut coord);
+        mlp.forward_with(&mut executor, &x, batch, 0).unwrap()
+    };
+    assert_eq!(pooled, want, "pooled logits");
+    coord.shutdown();
+
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 2,
+        coordinator: CoordinatorConfig {
+            tile_n: tile,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let sharded = {
+        let mut executor = Sharded::new(&mut set);
+        mlp.forward_with(&mut executor, &x, batch, 0).unwrap()
+    };
+    assert_eq!(sharded, want, "sharded logits");
+    set.shutdown();
+}
+
+/// The pre-refactor float algorithm, restated inline: per sample,
+/// transform → norm → soft-threshold → transform → norm.
+fn legacy_float_forward(l: &BwhtLayer, x: &[f32], batch: usize, width: usize) -> Vec<f32> {
+    let norm = 1.0f32 / (width.min(128) as f32).sqrt();
+    let mut out = vec![0f32; batch * width];
+    for bi in 0..batch {
+        let xi = &x[bi * width..(bi + 1) * width];
+        let mut freq = wht::bwht_apply(xi, width, 128);
+        for f in freq.iter_mut() {
+            *f *= norm;
+        }
+        for (f, t) in freq.iter_mut().zip(&l.t) {
+            let a = f.abs() - t.abs();
+            *f = if a > 0.0 { f.signum() * a } else { 0.0 };
+        }
+        let mut spatial = wht::bwht_apply(&freq, width, 128);
+        for s in spatial.iter_mut() {
+            *s *= norm;
+        }
+        out[bi * width..(bi + 1) * width].copy_from_slice(&spatial);
+    }
+    out
+}
+
+#[test]
+fn in_process_float_matches_the_legacy_algorithm() {
+    for &width in &[64usize, 128] {
+        let l = layer(width, 31);
+        let batch = 2usize;
+        let x = sample(batch * width, 32);
+        let want = legacy_float_forward(&l, &x, batch, width);
+        let got = l.forward(&x, batch, width, width, Backend::Float, &mut Rng::seed_from_u64(0));
+        assert_eq!(got, want, "width {width}");
+    }
+}
+
+/// The pre-refactor quantized algorithm, restated inline against
+/// `QuantBwht` (the digital golden model).
+fn legacy_quantized_forward(l: &BwhtLayer, x: &[f32], batch: usize, width: usize, bits: u32) -> Vec<f32> {
+    let eng = QuantBwht::new(width, 128, bits);
+    let norm = 1.0f32 / (width.min(128) as f32).sqrt();
+    let mut out = vec![0f32; batch * width];
+    for bi in 0..batch {
+        let xi = &x[bi * width..(bi + 1) * width];
+        let mut freq = eng.transform(xi);
+        for f in freq.iter_mut() {
+            *f *= norm;
+        }
+        for (f, t) in freq.iter_mut().zip(&l.t) {
+            let a = f.abs() - t.abs();
+            *f = if a > 0.0 { f.signum() * a } else { 0.0 };
+        }
+        let mut spatial = eng.transform(&freq);
+        for s in spatial.iter_mut() {
+            *s *= norm;
+        }
+        out[bi * width..(bi + 1) * width].copy_from_slice(&spatial);
+    }
+    out
+}
+
+#[test]
+fn in_process_quantized_matches_the_legacy_algorithm() {
+    for &width in &[64usize, 128] {
+        for &bits in &[4u32, 8] {
+            let l = layer(width, 41);
+            let batch = 2usize;
+            let x = sample(batch * width, 42 + bits as u64);
+            let want = legacy_quantized_forward(&l, &x, batch, width, bits);
+            let got = l.forward(
+                &x,
+                batch,
+                width,
+                width,
+                Backend::Quantized { bits },
+                &mut Rng::seed_from_u64(0),
+            );
+            assert_eq!(got, want, "width {width} bits {bits}");
+        }
+    }
+}
+
+#[test]
+fn property_pooled_matches_quantized_for_random_inputs_and_thresholds() {
+    // One long-lived pool; every case must agree bit-for-bit with the
+    // in-process quantized layer, whatever the input and thresholds —
+    // including thresholds near the dead-zone boundary.
+    let width = 64usize;
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: 64,
+        ..Default::default()
+    });
+    prop::forall(
+        40,
+        55,
+        |r| {
+            let x = prop::vec_f32(r, width, 2.0);
+            let t: Vec<f32> = (0..width)
+                .map(|_| r.uniform_range(0.0, 0.4) as f32)
+                .collect();
+            (x, t)
+        },
+        |(x, t)| {
+            let l = BwhtLayer::new(width, width, t.clone(), 128);
+            let want = l.forward(
+                x,
+                1,
+                width,
+                width,
+                Backend::Quantized { bits: 8 },
+                &mut Rng::seed_from_u64(0),
+            );
+            let got = {
+                let mut executor = Pooled::new(&mut coord);
+                l.forward_with(&mut executor, x, 1, width, width, 0)
+                    .map_err(|e| e.to_string())?
+            };
+            if got != want {
+                return Err(format!("pooled {got:?} != quantized {want:?}"));
+            }
+            Ok(())
+        },
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn in_process_executor_exposes_backend_bits() {
+    assert_eq!(InProcess::new(Backend::Float, 0).quant_bits(), None);
+    assert_eq!(
+        InProcess::new(Backend::Quantized { bits: 6 }, 0).quant_bits(),
+        Some(6)
+    );
+    assert_eq!(
+        InProcess::new(
+            Backend::Noisy {
+                bits: 3,
+                sigma_ant: 0.1
+            },
+            0
+        )
+        .quant_bits(),
+        Some(3)
+    );
+}

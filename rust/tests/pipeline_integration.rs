@@ -25,6 +25,7 @@ fn coordinator_digital_equals_nn_quantized_backend_per_tile() {
         .transform(&TransformRequest {
             x: x.clone(),
             thresholds_units: vec![0.0; 16],
+            scale: None,
         })
         .unwrap();
     assert_eq!(direct, pooled);
@@ -49,6 +50,7 @@ fn analog_tiles_track_digital_at_nominal_vdd() {
             .transform(&TransformRequest {
                 x: x.clone(),
                 thresholds_units: vec![0.0; x_width],
+                scale: None,
             })
             .unwrap();
         c.shutdown();
@@ -111,6 +113,7 @@ fn layer_roundtrip_through_coordinator_tiles() {
         .transform(&TransformRequest {
             x: x.clone(),
             thresholds_units: vec![0.0; width],
+            scale: None,
         })
         .unwrap();
     let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
@@ -123,6 +126,7 @@ fn layer_roundtrip_through_coordinator_tiles() {
         .transform(&TransformRequest {
             x: freq,
             thresholds_units: vec![0.0; width],
+            scale: None,
         })
         .unwrap();
     let got: Vec<f32> = f2.iter().map(|v| v * norm).collect();
@@ -153,6 +157,7 @@ fn property_early_termination_never_changes_results() {
                 .transform(&TransformRequest {
                     x: x.clone(),
                     thresholds_units: vec![*t; 16],
+                    scale: None,
                 })
                 .unwrap();
             c_et.shutdown();
@@ -164,6 +169,7 @@ fn property_early_termination_never_changes_results() {
                 .transform(&TransformRequest {
                     x: x.clone(),
                     thresholds_units: vec![0.0; 16],
+                    scale: None,
                 })
                 .unwrap();
             c_full.shutdown();
@@ -244,6 +250,7 @@ fn serve_et_improves_tops_per_watt() {
                 TransformRequest {
                     x,
                     thresholds_units: th,
+                    scale: None,
                 }
             })
             .collect()

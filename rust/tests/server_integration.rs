@@ -9,6 +9,7 @@ use std::time::Duration;
 
 use repro::bitplane::QuantBwht;
 use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use repro::nn::{Backend, Mlp};
 use repro::server::{AdmissionConfig, Server, ServerConfig};
 use repro::util::json::{self, Json};
 use repro::util::rng::Rng;
@@ -375,6 +376,7 @@ fn sharded_server_is_bit_identical_to_a_single_pool() {
         .transform(&TransformRequest {
             x,
             thresholds_units: vec![0.0; 200],
+            scale: None,
         })
         .unwrap();
     single.shutdown();
@@ -386,6 +388,127 @@ fn sharded_server_is_bit_identical_to_a_single_pool() {
     assert_eq!(metric_value(&metrics, "repro_shards_total"), 3.0);
     assert!(metrics.contains("repro_shard_requests_total{shard=\"2\"}"));
     assert!(metric_value(&metrics, "repro_elements_total") >= 208.0);
+    server.shutdown();
+}
+
+fn test_mlp() -> Mlp {
+    let mut r = Rng::seed_from_u64(77);
+    let (din, hidden, classes) = (8usize, 16usize, 3usize);
+    Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.5),
+        vec![0.0; hidden],
+        vec![0.06; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.5),
+        vec![0.0; classes],
+    )
+}
+
+fn json_row(x: &[f32]) -> String {
+    let vals: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", vals.join(","))
+}
+
+fn parse_f32s(v: &Json) -> Vec<f32> {
+    v.as_arr()
+        .expect("array")
+        .iter()
+        .map(|v| v.as_f64().expect("number") as f32)
+        .collect()
+}
+
+#[test]
+fn infer_endpoint_serves_logits_bit_identical_to_quantized_backend() {
+    // The ISSUE-3 acceptance path: POST /v1/infer against a 2-shard
+    // server hosting the model must return logits bit-identical to
+    // Mlp::forward with Backend::Quantized.
+    let mlp = test_mlp();
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: 2,
+        model: Some(mlp.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    // Single sample: flat x in, flat logits out.
+    let mut rng = Rng::seed_from_u64(1000);
+    let x: Vec<f32> = (0..8).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let (status, body) = post_json(addr, "/v1/infer", &format!("{{\"x\":{}}}", json_row(&x)));
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    let logits = parse_f32s(parsed.get("logits").expect("logits"));
+    let want = mlp.forward(
+        &x,
+        1,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+    assert_eq!(logits, want, "single-sample logits must be bit-identical");
+    assert_eq!(parsed.get("classes").and_then(Json::as_f64), Some(3.0));
+    assert_eq!(parsed.get("samples").and_then(Json::as_f64), Some(1.0));
+
+    // Batch: nested rows in, nested logits out, same bit-identity.
+    let xs: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..8).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+        .collect();
+    let rows: Vec<String> = xs.iter().map(|r| json_row(r)).collect();
+    let (status, body) = post_json(
+        addr,
+        "/v1/infer",
+        &format!("{{\"x\":[{}]}}", rows.join(",")),
+    );
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    let rows_out = parsed.get("logits").and_then(Json::as_arr).expect("rows");
+    assert_eq!(rows_out.len(), 3);
+    let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+    let want = mlp.forward(
+        &flat,
+        3,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+    for (i, row) in rows_out.iter().enumerate() {
+        assert_eq!(
+            parse_f32s(row),
+            want[i * 3..(i + 1) * 3].to_vec(),
+            "batch row {i}"
+        );
+    }
+
+    // Malformed inputs are clean 400s.
+    let (status, _) = post_json(addr, "/v1/infer", "{\"x\":[1,2]}");
+    assert_eq!(status, 400, "wrong feature count");
+    let (status, _) = post_json(addr, "/v1/infer", "{\"y\":[1]}");
+    assert_eq!(status, 400, "missing x");
+    let (status, _) = get(addr, "/v1/infer");
+    assert_eq!(status, 405);
+
+    // The infer series show up on /metrics.
+    let (status, metrics) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(metric_value(&metrics, "repro_infer_requests_total"), 2.0, "{metrics}");
+    assert_eq!(metric_value(&metrics, "repro_infer_samples_total"), 4.0);
+    assert!(metric_value(&metrics, "repro_infer_batches_total") >= 2.0);
+    assert!(metrics.contains("# TYPE repro_infer_latency_seconds histogram"));
+    assert_eq!(metric_value(&metrics, "repro_shard_respawns_total"), 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn infer_without_a_model_is_503() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .unwrap();
+    let (status, body) = post_json(server.addr, "/v1/infer", "{\"x\":[1,2,3]}");
+    assert_eq!(status, 503, "{body}");
+    assert!(body.contains("--weights"), "{body}");
     server.shutdown();
 }
 

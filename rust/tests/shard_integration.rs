@@ -22,6 +22,7 @@ fn sample_request(width: usize, rng: &mut Rng, threshold_mode: usize) -> Transfo
     TransformRequest {
         x,
         thresholds_units,
+        scale: None,
     }
 }
 
