@@ -1,24 +1,39 @@
 //! End-to-end NN inference bench: the per-sample in-process quantized
 //! loop vs batched execution on crossbar pools through the
 //! [`repro::exec::TransformExecutor`] seam (the ISSUE-3 acceptance
-//! comparison, on a 256-wide hidden layer).
+//! comparison on a 256-wide hidden layer, plus the ISSUE-4
+//! mixed-partition case: hidden = 300 → blocks `[128, 128, 32, 8, 4]`
+//! served via sub-tile masking).
 //!
 //! The in-process loop walks one sample at a time on one thread; the
 //! pooled executor turns the whole activation into a batch of
 //! `TransformRequest`s fanned out across the pool's workers, and the
 //! sharded executor additionally scatter–gathers each sample's blocks
 //! across pools.  A bit-identity gate runs before any timing: on the
-//! digital backend all three paths must agree exactly.
+//! digital backend all paths must agree exactly.
 //!
 //! Emits `BENCH_infer.json` (results + speedups) as a machine-readable
 //! baseline.
 
-use repro::coordinator::{Coordinator, CoordinatorConfig};
-use repro::exec::{self, Pooled, Sharded};
+use repro::coordinator::{required_tile, Coordinator, CoordinatorConfig};
+use repro::exec::{Pooled, Sharded};
 use repro::nn::{Backend, Mlp};
 use repro::shard::{ShardSet, ShardSetConfig};
 use repro::util::bench::{bench, black_box, header, write_json, BenchResult};
 use repro::util::rng::Rng;
+
+fn random_mlp(r: &mut Rng, din: usize, hidden: usize, classes: usize) -> Mlp {
+    Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.3),
+        vec![0.0; hidden],
+        vec![0.05; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.3),
+        vec![0.0; classes],
+    )
+}
 
 fn main() {
     header("infer");
@@ -32,17 +47,8 @@ fn main() {
     let batch = 64usize;
     let bits = 8u32;
     let mut r = Rng::seed_from_u64(7);
-    let mlp = Mlp::from_flat(
-        din,
-        hidden,
-        classes,
-        r.normal_vec_f32(din * hidden, 0.0, 0.3),
-        vec![0.0; hidden],
-        vec![0.05; hidden],
-        r.normal_vec_f32(hidden * classes, 0.0, 0.3),
-        vec![0.0; classes],
-    );
-    let tile = exec::uniform_tile(mlp.bwht.transform_blocks()).expect("uniform blocks");
+    let mlp = random_mlp(&mut r, din, hidden, classes);
+    let tile = required_tile(mlp.bwht.transform_blocks()).expect("power-of-two blocks");
     assert_eq!(tile, 128, "256-wide hidden layer -> two 128-wide blocks");
     let xs: Vec<f32> = (0..batch * din)
         .map(|_| r.uniform_range(-1.0, 1.0) as f32)
@@ -125,6 +131,68 @@ fn main() {
          sharded speedup {sharded_speedup:.2}x over the per-sample loop"
     );
 
+    // 4. The ISSUE-4 mixed-partition case: hidden = 300 partitions as
+    // [128, 128, 32, 8, 4], so the 300-wide activation mixes full tiles
+    // with sub-tile-masked blocks on the same 128-wide pools.
+    let hidden300 = 300usize;
+    let mlp300 = random_mlp(&mut r, din, hidden300, classes);
+    assert_eq!(
+        required_tile(mlp300.bwht.transform_blocks()).expect("power-of-two blocks"),
+        tile,
+        "300-wide hidden layer reuses the 128-wide pools"
+    );
+    let xs300: Vec<f32> = (0..batch * din)
+        .map(|_| r.uniform_range(-1.0, 1.0) as f32)
+        .collect();
+    let golden300 = mlp300.forward(&xs300, batch, backend, &mut Rng::seed_from_u64(0));
+    {
+        let mut executor = Pooled::new(&mut coord);
+        let pooled = mlp300
+            .forward_with(&mut executor, &xs300, batch, 0)
+            .expect("pooled forward (mixed partition)");
+        assert_eq!(pooled, golden300, "mixed-partition pooled logits");
+    }
+    {
+        let mut executor = Sharded::new(&mut set);
+        let sharded = mlp300
+            .forward_with(&mut executor, &xs300, batch, 0)
+            .expect("sharded forward (mixed partition)");
+        assert_eq!(sharded, golden300, "mixed-partition sharded logits");
+    }
+    let mut rng300 = Rng::seed_from_u64(2);
+    let r_inproc300 = bench(&format!("in-process per-sample batch{batch} hidden300"), || {
+        for i in 0..batch {
+            let y = mlp300.forward(&xs300[i * din..(i + 1) * din], 1, backend, &mut rng300);
+            black_box(y);
+        }
+    });
+    r_inproc300.report_throughput(batch as f64, "sample");
+    results.push(r_inproc300.clone());
+    let r_pooled300 = bench(&format!("pooled batch{batch} hidden300 mixed-blocks"), || {
+        let mut executor = Pooled::new(&mut coord);
+        let y = mlp300
+            .forward_with(&mut executor, &xs300, batch, 0)
+            .expect("pooled forward (mixed partition)");
+        black_box(y);
+    });
+    r_pooled300.report_throughput(batch as f64, "sample");
+    results.push(r_pooled300.clone());
+    let r_sharded300 = bench(&format!("sharded batch{batch} hidden300 2x2"), || {
+        let mut executor = Sharded::new(&mut set);
+        let y = mlp300
+            .forward_with(&mut executor, &xs300, batch, 0)
+            .expect("sharded forward (mixed partition)");
+        black_box(y);
+    });
+    r_sharded300.report_throughput(batch as f64, "sample");
+    results.push(r_sharded300.clone());
+    let pooled300_speedup = r_inproc300.mean.as_secs_f64() / r_pooled300.mean.as_secs_f64();
+    let sharded300_speedup = r_inproc300.mean.as_secs_f64() / r_sharded300.mean.as_secs_f64();
+    println!(
+        "batch{batch} hidden{hidden300} (mixed partition): pooled speedup \
+         {pooled300_speedup:.2}x, sharded speedup {sharded300_speedup:.2}x"
+    );
+
     coord.shutdown();
     set.shutdown();
 
@@ -136,6 +204,8 @@ fn main() {
         &[
             ("pooled_batch_speedup", pooled_speedup),
             ("sharded_batch_speedup", sharded_speedup),
+            ("pooled_mixed300_speedup", pooled300_speedup),
+            ("sharded_mixed300_speedup", sharded300_speedup),
         ],
     ) {
         Ok(()) => println!("baseline written to {path}"),

@@ -5,16 +5,63 @@ use std::time::Duration;
 use crate::bitplane::early_term::CycleStats;
 use crate::energy::EnergyModel;
 
-/// Finite bucket count: upper bounds `1 µs · 2^i` for `i in 0..27`
-/// (covering 1 µs .. ~67 s), plus one +Inf overflow bucket.
-const NUM_FINITE_BUCKETS: usize = 27;
+/// Power-of-two octaves covered by the finite buckets: the last finite
+/// upper bound is `2^(NUM_OCTAVES - 1)` µs ≈ 67 s.
+const NUM_OCTAVES: usize = 27;
 
-/// Log₂-bucketed latency histogram with quantile estimation.
+/// Linear sub-buckets per octave.  A value just past a sub-bucket's
+/// lower edge is reported at the sub-bucket's upper bound, so quantiles
+/// over-estimate by at most `1 + 1/SUBS_PER_OCTAVE` = 25% (the first
+/// two octaves are exact: their bounds are consecutive integers).
+const SUBS_PER_OCTAVE: u64 = 4;
+
+/// Finite bucket count: octaves 0..=2 contribute one bound per integer
+/// µs (1, 2, 3, 4); each wider octave contributes `SUBS_PER_OCTAVE`
+/// linearly spaced bounds.
+const NUM_FINITE_BUCKETS: usize = 4 + (NUM_OCTAVES - 3) * SUBS_PER_OCTAVE as usize;
+
+/// Upper bounds (µs) of the finite buckets, ascending: within the
+/// octave `(2^(i-1), 2^i]` the bounds are `2^(i-1) · (1 + k/4)` for
+/// `k = 1..=4` — HDR-style log-linear bucketing.
+const fn build_bounds() -> [u64; NUM_FINITE_BUCKETS] {
+    let mut bounds = [0u64; NUM_FINITE_BUCKETS];
+    let mut idx = 0;
+    let mut octave = 0;
+    while octave < NUM_OCTAVES {
+        let hi = 1u64 << octave;
+        let lo = hi / 2;
+        let width = hi - lo;
+        if width <= SUBS_PER_OCTAVE {
+            let mut b = lo + 1;
+            while b <= hi {
+                bounds[idx] = b;
+                idx += 1;
+                b += 1;
+            }
+        } else {
+            let step = width / SUBS_PER_OCTAVE;
+            let mut k = 1;
+            while k <= SUBS_PER_OCTAVE {
+                bounds[idx] = lo + k * step;
+                idx += 1;
+                k += 1;
+            }
+        }
+        octave += 1;
+    }
+    bounds
+}
+
+const BUCKET_BOUNDS_US: [u64; NUM_FINITE_BUCKETS] = build_bounds();
+
+/// Log-linear-bucketed latency histogram with quantile estimation.
 ///
 /// Fixed-size and allocation-free on the record path, mergeable across
 /// workers — the p50/p95/p99 source for the serving `/metrics` endpoint.
-/// Quantiles are reported as the upper bound of the covering bucket, so
-/// they over-estimate by at most 2×.
+/// Quantiles are reported as the upper bound of the covering bucket;
+/// with `SUBS_PER_OCTAVE` linear sub-buckets per power-of-two octave
+/// they over-estimate by at most 25% (was ≤2× when the buckets were
+/// whole octaves).
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
     counts: [u64; NUM_FINITE_BUCKETS + 1],
@@ -31,14 +78,10 @@ impl LatencyHistogram {
         }
     }
 
-    /// Index of the smallest bucket whose upper bound covers `us`.
+    /// Index of the smallest bucket whose upper bound covers `us`
+    /// (`NUM_FINITE_BUCKETS` = the +Inf overflow bucket).
     fn bucket_index(us: u64) -> usize {
-        if us <= 1 {
-            0
-        } else {
-            // ceil(log2(us))
-            ((u64::BITS - (us - 1).leading_zeros()) as usize).min(NUM_FINITE_BUCKETS)
-        }
+        BUCKET_BOUNDS_US.partition_point(|&b| b < us)
     }
 
     pub fn record(&mut self, latency: Duration) {
@@ -66,7 +109,7 @@ impl LatencyHistogram {
 
     /// Upper bound (µs) of bucket `i`, or `None` for the +Inf bucket.
     pub fn bucket_upper_us(i: usize) -> Option<u64> {
-        (i < NUM_FINITE_BUCKETS).then_some(1u64 << i)
+        BUCKET_BOUNDS_US.get(i).copied()
     }
 
     /// `(upper_bound_us, cumulative_count)` pairs, Prometheus-style.
@@ -271,15 +314,44 @@ mod tests {
         }
         assert_eq!(h.count(), 10);
         assert_eq!(h.sum_us(), 4 + 300 + 10_000 + 60_000);
-        // p50 covers the 5th sample (100 µs -> bucket bound 128 µs).
-        assert_eq!(h.quantile_us(0.5), 128.0);
-        // p99 covers the last sample (60 ms -> bucket bound 65536 µs).
+        // p50 covers the 5th sample (100 µs -> sub-bucket bound 112 µs,
+        // a 12% over-estimate; the old whole-octave bound was 128 µs).
+        assert_eq!(h.quantile_us(0.5), 112.0);
+        // p99 covers the last sample (60 ms: octave (32768, 65536] has
+        // sub-bounds 40960/49152/57344/65536, so 60000 -> 65536).
         assert_eq!(h.quantile_us(0.99), 65536.0);
         // cumulative buckets end at the total count with a +Inf bound.
         let buckets = h.cumulative_buckets();
         let (last_bound, last_cum) = buckets[buckets.len() - 1];
         assert_eq!(last_bound, None);
         assert_eq!(last_cum, 10);
+    }
+
+    #[test]
+    fn latency_bucket_bounds_are_strictly_increasing() {
+        for w in BUCKET_BOUNDS_US.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+        assert_eq!(BUCKET_BOUNDS_US[0], 1);
+        assert_eq!(
+            BUCKET_BOUNDS_US[NUM_FINITE_BUCKETS - 1],
+            1u64 << (NUM_OCTAVES - 1),
+            "coverage unchanged: last finite bound is still ~67 s"
+        );
+    }
+
+    #[test]
+    fn quantiles_over_estimate_by_at_most_25_percent() {
+        // The ROADMAP SLO-precision item: for any single recorded value
+        // the reported quantile (covering bucket's upper bound) is within
+        // +25% of the true value.
+        for us in [1u64, 3, 5, 9, 17, 100, 999, 4097, 65_000, 1_000_000, 33_333_333] {
+            let mut h = LatencyHistogram::new();
+            h.record(Duration::from_micros(us));
+            let q = h.quantile_us(0.99);
+            assert!(q >= us as f64, "{q} < {us}");
+            assert!(q <= us as f64 * 1.25, "{q} > 1.25 * {us}");
+        }
     }
 
     #[test]

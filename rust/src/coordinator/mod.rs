@@ -9,16 +9,20 @@
 //!
 //! * [`tile`] — the execution backends a tile can run on (digital golden
 //!   model, ANT-noisy, full analog Monte-Carlo);
+//! * [`plan`] — mapping logical block partitions onto tiles (sub-tile
+//!   blocks run zero-padded with masked output rows);
 //! * [`scheduler`] — per-tile bitplane scheduling + early termination;
 //! * [`pool`] — the request router/batcher and worker threads;
 //! * [`metrics`] — cycle/energy/latency accounting.
 
 pub mod metrics;
+pub mod plan;
 pub mod pool;
 pub mod scheduler;
 pub mod tile;
 
 pub use metrics::{LatencyHistogram, Metrics};
+pub use plan::{required_tile, subtile_rows, BlockSlot, TilePlan};
 pub use pool::{CompletedTransform, Coordinator, CoordinatorConfig, TransformRequest};
-pub use scheduler::{schedule_transform, TransformOutcome};
+pub use scheduler::{schedule_block, schedule_transform, TransformOutcome};
 pub use tile::{Tile, TileKind};

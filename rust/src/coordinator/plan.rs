@@ -1,0 +1,255 @@
+//! Tile planning: mapping a logical BWHT block partition onto fixed-size
+//! crossbar tiles — sub-tile blocks included.
+//!
+//! The paper's array micro-architecture stitches 16×16 cells to cover
+//! arbitrary transform shapes; our simulated pools run one fixed tile
+//! geometry per deployment, so a layer whose partition mixes block sizes
+//! (`wht::bwht_blocks(300, 128)` = `[128, 128, 32, 8, 4]`) needs every
+//! block mapped onto the *same* `tile_n`-wide tile.  A [`TilePlan`] does
+//! that with zero-padding and an output row mask:
+//!
+//! * **input**: a `b`-point block (`b <= tile_n`) occupies the first `b`
+//!   tile columns; the remaining columns stream zero bits, contributing
+//!   nothing to any PSUM;
+//! * **output**: only the `b` rows listed in [`BlockSlot::rows`] carry the
+//!   block's outputs — the other rows are masked off, skipped by the
+//!   bit-plane early-termination counters so cycle/energy accounting
+//!   bills exactly `b` logical rows.
+//!
+//! Why this is *bit-identical* to the `b`-point golden model: the
+//! Sylvester Hadamard matrix has `H_N[i][j] = (-1)^popcount(i & j)`, so
+//! for `i, j < b` the top-left `b×b` of `H_N` **is** `H_b`.  With the
+//! input zero-padded to `N`, natural-order tile row `r < b` therefore
+//! computes natural-order row `r` of the `b`-point transform — the same
+//! integer PSUM, hence the same comparator bit on every plane.  Both the
+//! tile and the golden model emit *sequency* order, so logical sequency
+//! output `i` (natural row `perm_b[i]`) lives at tile sequency row
+//! `inv_perm_N(perm_b[i])` — the mapping [`subtile_rows`] caches.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::wht::fast::sequency_perm;
+
+/// Physical output rows (of a `tile_n`-wide sequency-ordered tile) that
+/// carry the outputs of a `block`-point sequency transform computed on
+/// zero-padded input, in logical output order.  Identity when
+/// `block == tile_n`.  Cached per `(tile_n, block)` — the maps are
+/// parameter-free and shared by every worker thread.
+///
+/// # Panics
+/// If either argument is not a power of two, or `block > tile_n`.
+pub fn subtile_rows(tile_n: usize, block: usize) -> Arc<Vec<usize>> {
+    assert!(
+        tile_n.is_power_of_two() && block.is_power_of_two() && block <= tile_n,
+        "subtile_rows needs power-of-two block {block} <= tile {tile_n}"
+    );
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<Vec<usize>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("subtile row cache poisoned");
+    guard
+        .entry((tile_n, block))
+        .or_insert_with(|| {
+            let perm_n = sequency_perm(tile_n.trailing_zeros() as usize);
+            let mut inv = vec![0usize; tile_n];
+            for (r, &h) in perm_n.iter().enumerate() {
+                inv[h] = r;
+            }
+            let perm_b = sequency_perm(block.trailing_zeros() as usize);
+            Arc::new(perm_b.iter().map(|&h| inv[h]).collect())
+        })
+        .clone()
+}
+
+/// One logical block of a request mapped onto a tile slice.
+#[derive(Debug, Clone)]
+pub struct BlockSlot {
+    /// Start of the block within the request's logical vector.
+    pub offset: usize,
+    /// Logical width (`<= tile_n`; the tile's remaining rows are masked).
+    pub width: usize,
+    /// Tile output rows carrying this block's outputs, logical order.
+    pub rows: Arc<Vec<usize>>,
+}
+
+/// A request's block partition resolved against a pool's tile geometry:
+/// the contract between the submission APIs
+/// ([`crate::coordinator::Coordinator::try_submit_planned`]) and the
+/// worker's per-block scheduler
+/// ([`crate::coordinator::scheduler::schedule_block`]).
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    tile_n: usize,
+    width: usize,
+    slots: Vec<BlockSlot>,
+}
+
+impl TilePlan {
+    /// Resolve an explicit block partition onto `tile_n`-wide tiles.
+    /// Every block must be a power of two no wider than the tile.
+    pub fn new(tile_n: usize, blocks: &[usize]) -> Result<TilePlan> {
+        if !tile_n.is_power_of_two() {
+            bail!("tile width must be a power of two, got {tile_n}");
+        }
+        if blocks.is_empty() {
+            bail!("empty block partition");
+        }
+        let mut slots = Vec::with_capacity(blocks.len());
+        let mut offset = 0usize;
+        for &b in blocks {
+            if b == 0 || !b.is_power_of_two() {
+                bail!("block widths must be powers of two, got {b} in {blocks:?}");
+            }
+            if b > tile_n {
+                bail!(
+                    "block width {b} exceeds the {tile_n}x{tile_n} tile; configure the \
+                     pool with tile_n >= {b} (partition {blocks:?})"
+                );
+            }
+            slots.push(BlockSlot {
+                offset,
+                width: b,
+                rows: subtile_rows(tile_n, b),
+            });
+            offset += b;
+        }
+        Ok(TilePlan {
+            tile_n,
+            width: offset,
+            slots,
+        })
+    }
+
+    /// The legacy uniform mapping: `width` padded up to whole `tile_n`
+    /// blocks, each one full tile (the raw `/v1/transform` semantics,
+    /// where the padded dimension is part of the response contract).
+    pub fn uniform(tile_n: usize, width: usize) -> TilePlan {
+        assert!(tile_n.is_power_of_two(), "tile width must be a power of two");
+        assert!(width > 0, "cannot plan a zero-width request");
+        let nblocks = width.div_ceil(tile_n);
+        let rows = subtile_rows(tile_n, tile_n);
+        let slots = (0..nblocks)
+            .map(|i| BlockSlot {
+                offset: i * tile_n,
+                width: tile_n,
+                rows: Arc::clone(&rows),
+            })
+            .collect();
+        TilePlan {
+            tile_n,
+            width: nblocks * tile_n,
+            slots,
+        }
+    }
+
+    /// Tile geometry the plan was resolved against.
+    pub fn tile_n(&self) -> usize {
+        self.tile_n
+    }
+
+    /// Total logical width the plan covers (the job's vector length;
+    /// for [`TilePlan::uniform`] this is the padded width).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Per-block slots, in request order.
+    pub fn slots(&self) -> &[BlockSlot] {
+        &self.slots
+    }
+
+    /// The block widths, in order.
+    pub fn block_widths(&self) -> Vec<usize> {
+        self.slots.iter().map(|s| s.width).collect()
+    }
+}
+
+/// Smallest tile geometry able to run every block of a partition: its
+/// widest block.  Errors on empty or non-power-of-two partitions — the
+/// check a serving front-end runs before sizing a pool for a model.
+pub fn required_tile(blocks: &[usize]) -> Result<usize> {
+    let Some(&max) = blocks.iter().max() else {
+        bail!("empty block partition");
+    };
+    for &b in blocks {
+        if b == 0 || !b.is_power_of_two() {
+            bail!("block widths must be powers of two, got {b} in {blocks:?}");
+        }
+    }
+    Ok(max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wht;
+
+    #[test]
+    fn identity_rows_for_full_width_blocks() {
+        for &n in &[4usize, 16, 64, 128] {
+            let rows = subtile_rows(n, n);
+            assert_eq!(*rows, (0..n).collect::<Vec<_>>(), "tile {n}");
+        }
+    }
+
+    #[test]
+    fn subtile_rows_select_the_matching_walsh_rows() {
+        // Row map correctness straight from the matrices: tile row
+        // rows[i], restricted to the first b columns, must equal row i of
+        // the b-point Walsh matrix.
+        for &(n, b) in &[(16usize, 4usize), (16, 8), (32, 4), (128, 8), (64, 16)] {
+            let rows = subtile_rows(n, b);
+            assert_eq!(rows.len(), b);
+            let wn = wht::walsh(n.trailing_zeros() as usize);
+            let wb = wht::walsh(b.trailing_zeros() as usize);
+            for i in 0..b {
+                for j in 0..b {
+                    assert_eq!(
+                        wn.get(rows[i], j),
+                        wb.get(i, j),
+                        "tile {n} block {b} logical row {i} col {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_resolves_mixed_partitions() {
+        let plan = TilePlan::new(16, &[16, 4]).unwrap();
+        assert_eq!(plan.width(), 20);
+        assert_eq!(plan.tile_n(), 16);
+        assert_eq!(plan.block_widths(), vec![16, 4]);
+        assert_eq!(plan.slots()[0].offset, 0);
+        assert_eq!(plan.slots()[1].offset, 16);
+        assert_eq!(plan.slots()[1].rows.len(), 4);
+    }
+
+    #[test]
+    fn plan_rejects_bad_partitions() {
+        assert!(TilePlan::new(16, &[]).is_err(), "empty");
+        assert!(TilePlan::new(16, &[12]).is_err(), "non power of two");
+        assert!(TilePlan::new(16, &[32]).is_err(), "wider than the tile");
+        assert!(TilePlan::new(12, &[4]).is_err(), "non power-of-two tile");
+    }
+
+    #[test]
+    fn uniform_plan_pads_to_whole_tiles() {
+        let plan = TilePlan::uniform(16, 20);
+        assert_eq!(plan.width(), 32);
+        assert_eq!(plan.block_widths(), vec![16, 16]);
+        let exact = TilePlan::uniform(16, 48);
+        assert_eq!(exact.width(), 48);
+        assert_eq!(exact.slots().len(), 3);
+    }
+
+    #[test]
+    fn required_tile_is_the_widest_block() {
+        assert_eq!(required_tile(&[128, 128, 32, 8, 4]).unwrap(), 128);
+        assert_eq!(required_tile(&[16]).unwrap(), 16);
+        assert!(required_tile(&[]).is_err());
+        assert!(required_tile(&[16, 5]).is_err());
+    }
+}

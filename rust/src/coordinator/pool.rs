@@ -24,7 +24,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
-use super::scheduler::schedule_transform;
+use super::plan::TilePlan;
+use super::scheduler::schedule_block;
 use super::tile::{Tile, TileKind};
 use crate::wht;
 
@@ -85,17 +86,19 @@ impl TransformRequest {
     }
 }
 
-/// Internal job: one whole (padded) request.
+/// Internal job: one whole request plus its resolved [`TilePlan`].
 ///
 /// PERF: jobs were originally one per tile-sized block; the per-job
 /// channel + allocation overhead dominated at small tiles (≈14 µs per
 /// dim-64 request vs ≈11 µs of useful tile work).  One job per request
-/// amortizes the dispatch; the worker walks the blocks on its own tile.
+/// amortizes the dispatch; the worker walks the plan's blocks on its own
+/// tile (sub-tile blocks run zero-padded with masked output rows).
 struct TileJob {
     request_id: u64,
     x: Vec<f32>,
     thresholds: Vec<f64>,
     scale: Option<f32>,
+    plan: TilePlan,
 }
 
 struct TileResult {
@@ -111,7 +114,8 @@ struct TileResult {
 #[derive(Debug, Clone)]
 pub struct CompletedTransform {
     pub request_id: u64,
-    /// Outputs at padded width.
+    /// Outputs at padded width (raw submissions) or at the block
+    /// partition's exact width (planned submissions).
     pub values: Vec<f32>,
     /// Worker busy time spent on this request.
     pub busy: std::time::Duration,
@@ -157,19 +161,21 @@ impl Coordinator {
                     };
                     let Ok(job) = job else { break };
                     let t0 = Instant::now();
-                    let blocks = job.x.len() / tile_n;
                     let mut values = Vec::with_capacity(job.x.len());
                     let mut stats =
                         crate::bitplane::early_term::CycleStats::new(bits);
                     let mut planes_issued = 0u32;
                     let mut row_cycles = 0u64;
-                    for b in 0..blocks {
-                        let outcome = schedule_transform(
+                    for slot in job.plan.slots() {
+                        let lo = slot.offset;
+                        let hi = lo + slot.width;
+                        let outcome = schedule_block(
                             &mut tile,
-                            &job.x[b * tile_n..(b + 1) * tile_n],
+                            &job.x[lo..hi],
                             bits,
-                            &job.thresholds[b * tile_n..(b + 1) * tile_n],
+                            &job.thresholds[lo..hi],
                             job.scale,
+                            &slot.rows,
                         );
                         values.extend_from_slice(&outcome.values);
                         stats.merge(&outcome.stats);
@@ -219,15 +225,6 @@ impl Coordinator {
         self.pending_async
     }
 
-    /// Pad `x` to a multiple of the tile width.
-    fn pad(&self, x: &[f32]) -> Vec<f32> {
-        let n = self.config.tile_n;
-        let padded = x.len().div_ceil(n) * n;
-        let mut out = x.to_vec();
-        out.resize(padded, 0.0);
-        out
-    }
-
     /// Validate a request up front, so malformed input is a clean error
     /// at the submission boundary instead of a worker-side panic.
     fn validate(req: &TransformRequest) -> Result<()> {
@@ -249,20 +246,44 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Build the job for one request (padded to the tile width; padding
-    /// elements carry a zero threshold).
-    fn make_job(&mut self, req: &TransformRequest) -> Result<TileJob> {
+    /// Build the job for one request.  `blocks = None` is the raw-serving
+    /// default: pad to whole `tile_n` blocks (padding elements carry a
+    /// zero threshold).  `blocks = Some(partition)` carries an explicit
+    /// block partition — the NN executors' path — which must cover the
+    /// request exactly; blocks narrower than the tile run under sub-tile
+    /// masking.
+    fn make_job(&mut self, req: &TransformRequest, blocks: Option<&[usize]>) -> Result<TileJob> {
         Self::validate(req)?;
-        let x = self.pad(&req.x);
-        let mut th = req.thresholds_units.clone();
-        th.resize(x.len(), 0.0);
+        let (x, thresholds, plan) = match blocks {
+            None => {
+                let plan = TilePlan::uniform(self.config.tile_n, req.x.len());
+                let mut x = req.x.clone();
+                x.resize(plan.width(), 0.0);
+                let mut th = req.thresholds_units.clone();
+                th.resize(plan.width(), 0.0);
+                (x, th, plan)
+            }
+            Some(blocks) => {
+                let plan = TilePlan::new(self.config.tile_n, blocks)?;
+                if plan.width() != req.x.len() {
+                    bail!(
+                        "block partition {blocks:?} covers {} elements, but the request \
+                         is {} wide",
+                        plan.width(),
+                        req.x.len()
+                    );
+                }
+                (req.x.clone(), req.thresholds_units.clone(), plan)
+            }
+        };
         let id = self.next_request;
         self.next_request += 1;
         Ok(TileJob {
             request_id: id,
             x,
-            thresholds: th,
+            thresholds,
             scale: req.scale,
+            plan,
         })
     }
 
@@ -322,10 +343,29 @@ impl Coordinator {
     }
 
     /// Execute one transform request synchronously.  Returns outputs at
-    /// padded width.
+    /// padded width (whole `tile_n` blocks).
     pub fn transform(&mut self, req: &TransformRequest) -> Result<Vec<f32>> {
+        self.transform_inner(req, None)
+    }
+
+    /// Execute one request over an explicit block partition (sub-tile
+    /// blocks run under masking).  Returns outputs at the partition's
+    /// exact width — no padding.
+    pub fn transform_planned(
+        &mut self,
+        req: &TransformRequest,
+        blocks: &[usize],
+    ) -> Result<Vec<f32>> {
+        self.transform_inner(req, Some(blocks))
+    }
+
+    fn transform_inner(
+        &mut self,
+        req: &TransformRequest,
+        blocks: Option<&[usize]>,
+    ) -> Result<Vec<f32>> {
         self.ensure_no_pending_async()?;
-        let job = self.make_job(req)?;
+        let job = self.make_job(req, blocks)?;
         let id = job.request_id;
         let mut results = self.dispatch_collect(vec![job])?;
         let r = results.pop().expect("one job, one result");
@@ -340,7 +380,7 @@ impl Coordinator {
         let base = self.next_request;
         let jobs: Vec<TileJob> = reqs
             .iter()
-            .map(|r| self.make_job(r))
+            .map(|r| self.make_job(r, None))
             .collect::<Result<_>>()?;
         let results = self.dispatch_collect(jobs)?;
         let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
@@ -355,7 +395,16 @@ impl Coordinator {
     /// while the bounded job queue is full).  Pair with
     /// [`Coordinator::drain_one`].
     pub fn submit(&mut self, req: &TransformRequest) -> Result<u64> {
-        let job = self.make_job(req)?;
+        self.submit_inner(req, None)
+    }
+
+    /// [`Coordinator::submit`] over an explicit block partition.
+    pub fn submit_planned(&mut self, req: &TransformRequest, blocks: &[usize]) -> Result<u64> {
+        self.submit_inner(req, Some(blocks))
+    }
+
+    fn submit_inner(&mut self, req: &TransformRequest, blocks: Option<&[usize]>) -> Result<u64> {
+        let job = self.make_job(req, blocks)?;
         let id = job.request_id;
         self.job_tx
             .send(job)
@@ -368,7 +417,25 @@ impl Coordinator {
     /// full, so admission layers can shed load instead of deadlocking
     /// behind the backpressure limit.
     pub fn try_submit(&mut self, req: &TransformRequest) -> Result<Option<u64>> {
-        let job = self.make_job(req)?;
+        self.try_submit_inner(req, None)
+    }
+
+    /// [`Coordinator::try_submit`] over an explicit block partition
+    /// (the executor/router path; sub-tile blocks run under masking).
+    pub fn try_submit_planned(
+        &mut self,
+        req: &TransformRequest,
+        blocks: &[usize],
+    ) -> Result<Option<u64>> {
+        self.try_submit_inner(req, Some(blocks))
+    }
+
+    fn try_submit_inner(
+        &mut self,
+        req: &TransformRequest,
+        blocks: Option<&[usize]>,
+    ) -> Result<Option<u64>> {
+        let job = self.make_job(req, blocks)?;
         let id = job.request_id;
         match self.job_tx.try_send(job) {
             Ok(()) => {
@@ -513,6 +580,51 @@ mod tests {
             })
             .unwrap();
         assert_eq!(out.len(), 32);
+        c.shutdown();
+    }
+
+    #[test]
+    fn planned_mixed_partition_matches_whole_width_golden_model() {
+        // Width 20 as [16, 4]: the 4-block runs under sub-tile masking
+        // on a 16-wide tile.  With the global quantization scale pinned,
+        // the output is bit-identical to the 20-wide golden model.
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let x = sample(20, 60);
+        let scale = crate::quant::Quantizer::new(8).scale_for(&x);
+        let out = c
+            .transform_planned(
+                &TransformRequest {
+                    x: x.clone(),
+                    thresholds_units: vec![0.0; 20],
+                    scale: Some(scale),
+                },
+                &[16, 4],
+            )
+            .unwrap();
+        let golden = QuantBwht::new(20, 128, 8).transform(&x);
+        assert_eq!(out, golden);
+        assert_eq!(out.len(), 20, "planned requests are not padded");
+        let m = c.metrics();
+        assert_eq!(m.cycles.total_elements, 20, "masked rows are not billed");
+        c.shutdown();
+    }
+
+    #[test]
+    fn planned_partition_is_validated_at_the_boundary() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let req = TransformRequest::plain(sample(20, 61));
+        // Partition does not cover the request.
+        assert!(c.transform_planned(&req, &[16]).is_err());
+        // Block wider than the tile.
+        assert!(c.transform_planned(&req, &[32]).is_err());
+        // Non-power-of-two block.
+        let req12 = TransformRequest::plain(sample(12, 62));
+        assert!(c.transform_planned(&req12, &[12]).is_err());
+        // The pool still serves afterwards.
+        assert_eq!(
+            c.transform_planned(&req, &[16, 4]).unwrap().len(),
+            20
+        );
         c.shutdown();
     }
 

@@ -27,7 +27,9 @@ pub struct TransformOutcome {
 
 /// Quantize `x`, stream its bitplanes MSB-first through `tile`, apply
 /// per-row early termination against `thresholds_units` (comparator
-/// units), and recombine.
+/// units), and recombine — for a *full-width* block (`x.len() ==
+/// tile.n()`).  Thin wrapper over [`schedule_block`] with the identity
+/// row map.
 ///
 /// `thresholds_units[i]` is the |T| of output element `i` divided by the
 /// input quantization scale and basis norm (see
@@ -48,7 +50,35 @@ pub fn schedule_transform(
 ) -> TransformOutcome {
     let n = tile.n();
     assert_eq!(x.len(), n);
-    assert_eq!(thresholds_units.len(), n);
+    let rows = crate::coordinator::plan::subtile_rows(n, n);
+    schedule_block(tile, x, bits, thresholds_units, scale, &rows)
+}
+
+/// Schedule one logical block of width `b = x.len() <= tile.n()` on the
+/// tile, reading the `b` outputs off the physical rows listed in `rows`
+/// (see [`crate::coordinator::plan::subtile_rows`]; identity when the
+/// block fills the tile).
+///
+/// Sub-tile blocks stream zero-padded bitplanes — the tile's unused
+/// columns carry 0 and contribute nothing to any PSUM, so by the
+/// Sylvester structure the selected rows compute the exact `b`-point
+/// sequency transform.  Masked rows have no early-termination counters:
+/// `row_cycles`, per-element stats and the termination bookkeeping all
+/// run over the `b` logical rows only, keeping cycle/energy accounting
+/// honest about the work a stitched sub-array would actually do.
+pub fn schedule_block(
+    tile: &mut Tile,
+    x: &[f32],
+    bits: u32,
+    thresholds_units: &[f64],
+    scale: Option<f32>,
+    rows: &[usize],
+) -> TransformOutcome {
+    let n = tile.n();
+    let b = x.len();
+    assert!(b <= n, "block of width {b} exceeds the {n}-wide tile");
+    assert_eq!(thresholds_units.len(), b);
+    assert_eq!(rows.len(), b, "one output row per logical element");
     let quantizer = Quantizer::new(bits);
     let q = match scale {
         Some(s) => quantizer.quantize_with_scale(x, s),
@@ -70,14 +100,14 @@ pub fn schedule_transform(
             terminated: true,
             value_units: 0,
         };
-        for _ in 0..n {
+        for _ in 0..b {
             stats.record(&outcome);
         }
         return TransformOutcome {
-            values: vec![0.0; n],
+            values: vec![0.0; b],
             stats,
             planes_issued: 1,
-            row_cycles: n as u64,
+            row_cycles: b as u64,
         };
     }
 
@@ -87,20 +117,33 @@ pub fn schedule_transform(
         .iter()
         .map(|&t| EarlyTerminator::new(bits, t))
         .collect();
-    let mut live: Vec<bool> = vec![true; n];
-    let mut done_value: Vec<i64> = vec![0; n];
-    let mut cycles: Vec<u32> = vec![0; n];
-    let mut terminated: Vec<bool> = vec![false; n];
+    let mut live: Vec<bool> = vec![true; b];
+    let mut done_value: Vec<i64> = vec![0; b];
+    let mut cycles: Vec<u32> = vec![0; b];
+    let mut terminated: Vec<bool> = vec![false; b];
     let mut planes_issued = 0u32;
     let mut row_cycles = 0u64;
+    // Zero-padded plane scratch for sub-tile blocks.
+    let mut padded = vec![0i8; if b < n { n } else { 0 }];
+    // Full-width blocks with the identity row map take the direct
+    // readout (checked once, not per plane): the pre-plan hot path, with
+    // no per-plane gather through the row indirection.
+    let identity = b == n && rows.iter().enumerate().all(|(i, &r)| i == r);
 
     for plane in &planes {
         if !live.iter().any(|&l| l) {
             break;
         }
         planes_issued += 1;
-        let obits = tile.execute_bitplane(plane);
-        for i in 0..n {
+        let obits = if identity {
+            tile.execute_bitplane(plane)
+        } else if b == n {
+            tile.execute_bitplane_rows(plane, rows)
+        } else {
+            padded[..b].copy_from_slice(plane);
+            tile.execute_bitplane_rows(&padded, rows)
+        };
+        for i in 0..b {
             if !live[i] {
                 continue;
             }
@@ -127,7 +170,7 @@ pub fn schedule_transform(
     }
 
     let mut stats = CycleStats::new(bits);
-    for i in 0..n {
+    for i in 0..b {
         stats.record(&crate::bitplane::early_term::ElementOutcome {
             cycles: cycles[i],
             terminated: terminated[i],
@@ -226,5 +269,43 @@ mod tests {
         let x = sample(16, 5);
         let out = schedule_transform(&mut tile, &x, 1, &vec![0.0; 16], None);
         assert_eq!(out.planes_issued, 1);
+    }
+
+    #[test]
+    fn sub_tile_block_matches_small_golden_model() {
+        // A 4-point block on a 16-wide tile: bit-identical to the
+        // 4-point golden model, accounted over 4 logical rows only.
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let x = sample(4, 8);
+        let rows = crate::coordinator::plan::subtile_rows(16, 4);
+        let out = schedule_block(&mut tile, &x, 8, &vec![0.0; 4], None, &rows);
+        let golden = QuantBwht::new(4, 4, 8).transform(&x);
+        assert_eq!(out.values, golden);
+        assert_eq!(out.stats.total_elements, 4);
+        assert_eq!(out.row_cycles, 4 * 8, "T=0: all planes on 4 rows");
+        assert_eq!(out.planes_issued, 8);
+    }
+
+    #[test]
+    fn sub_tile_early_termination_bills_logical_rows_only() {
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let x = sample(8, 9);
+        let rows = crate::coordinator::plan::subtile_rows(16, 8);
+        let out = schedule_block(&mut tile, &x, 8, &vec![1e9; 8], None, &rows);
+        assert!(out.values.iter().all(|&v| v == 0.0));
+        assert_eq!(out.planes_issued, 1, "everything terminates after MSB");
+        assert_eq!(out.row_cycles, 8, "masked rows must not be billed");
+        assert_eq!(out.stats.total_elements, 8);
+        assert_eq!(out.stats.terminated_early, 8);
+    }
+
+    #[test]
+    fn sub_tile_zero_block_fast_path() {
+        let mut tile = Tile::new(32, &TileKind::Digital, 0);
+        let rows = crate::coordinator::plan::subtile_rows(32, 4);
+        let out = schedule_block(&mut tile, &[0.0; 4], 8, &[0.0; 4], None, &rows);
+        assert_eq!(out.values, vec![0.0; 4]);
+        assert_eq!(out.planes_issued, 1);
+        assert_eq!(out.row_cycles, 4);
     }
 }

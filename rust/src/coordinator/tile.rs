@@ -101,6 +101,27 @@ impl Tile {
             TileKindInstance::Analog(xb) => xb.execute_bitplane(input, &mut self.rng),
         }
     }
+
+    /// Execute one bitplane with an output row mask: only the listed
+    /// `rows` are read out, in the given order — the sub-tile path of
+    /// [`crate::coordinator::plan::TilePlan`], where a block narrower
+    /// than the tile occupies a subset of the rows and the rest are
+    /// gated off.
+    ///
+    /// On the digital golden model the masked rows' comparators are
+    /// never evaluated.  Noisy/analog tiles still execute the full
+    /// physical array (every row's PSUM exists electrically) and consume
+    /// their RNG stream at full width — only the readout is masked — so
+    /// a tile's noise stream does not depend on which plan runs on it.
+    pub fn execute_bitplane_rows(&mut self, input: &[i8], rows: &[usize]) -> Vec<i8> {
+        assert_eq!(input.len(), self.n, "input width must match tile");
+        if self.is_digital() {
+            self.psums_into_scratch(input);
+            return rows.iter().map(|&r| comparator(self.scratch[r])).collect();
+        }
+        let all = self.execute_bitplane(input);
+        rows.iter().map(|&r| all[r]).collect()
+    }
 }
 
 #[cfg(test)]
@@ -162,5 +183,30 @@ mod tests {
     #[should_panic(expected = "width")]
     fn wrong_width_panics() {
         Tile::new(16, &TileKind::Digital, 0).execute_bitplane(&[0i8; 8]);
+    }
+
+    #[test]
+    fn masked_readout_matches_full_readout_on_digital() {
+        let mut full = Tile::new(16, &TileKind::Digital, 0);
+        let mut masked = Tile::new(16, &TileKind::Digital, 0);
+        let input: Vec<i8> = (0..16).map(|i| ((i % 3) as i8) - 1).collect();
+        let all = full.execute_bitplane(&input);
+        let rows = [0usize, 7, 8, 15];
+        let got = masked.execute_bitplane_rows(&input, &rows);
+        assert_eq!(got, rows.iter().map(|&r| all[r]).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn masked_readout_keeps_noisy_rng_stream_alignment() {
+        // Two noisy tiles with the same seed must stay in lockstep even
+        // when one serves masked sub-tile planes between full planes.
+        let kind = TileKind::Noisy { sigma_ant: 0.5 };
+        let mut a = Tile::new(16, &kind, 9);
+        let mut b = Tile::new(16, &kind, 9);
+        let input = vec![1i8; 16];
+        let rows: Vec<usize> = (0..4).collect();
+        a.execute_bitplane(&input);
+        b.execute_bitplane_rows(&input, &rows);
+        assert_eq!(a.execute_bitplane(&input), b.execute_bitplane(&input));
     }
 }

@@ -21,12 +21,18 @@
 //!
 //! Bit-identity contract: on digital tiles, `Pooled` and `Sharded` are
 //! **bit-identical** to [`Backend::Quantized`](crate::nn::Backend) for
-//! any layer whose transform block partition is uniform and equal to the
-//! pool's `tile_n` (pinned scales reproduce the whole-width quantization
-//! on every tile; `tests/exec_equivalence.rs` pins this across widths ×
-//! bits × shard counts).  The soft-threshold dead zone is fused into the
-//! crossbar comparator path as early-termination thresholds, so pooled
-//! execution also inherits the paper's cycle/energy savings.
+//! *any* block partition whose widest block fits the pool's tile —
+//! mixed partitions like `[128, 64, 16, 4]` included.  Blocks narrower
+//! than the tile run under sub-tile masking
+//! ([`crate::coordinator::plan::TilePlan`]): zero-padded input columns
+//! plus a masked output row set computes the small transform
+//! bit-exactly on the big tile, and pinned scales reproduce the
+//! whole-width quantization on every block
+//! (`tests/exec_equivalence.rs` pins this across widths — power-of-two
+//! and not — × bits × shard counts).  The soft-threshold dead zone is
+//! fused into the crossbar comparator path as early-termination
+//! thresholds, so pooled execution also inherits the paper's
+//! cycle/energy savings.
 
 pub mod in_process;
 pub mod pooled;
@@ -67,25 +73,6 @@ pub trait TransformExecutor {
     ) -> Result<Vec<Vec<f32>>>;
 }
 
-/// The uniform tile width of a block partition, or an error when the
-/// partition cannot be mapped 1:1 onto fixed-size crossbar tiles.
-///
-/// The pooled executors require this: a `tile_n`-wide tile computes a
-/// `tile_n`-point Walsh transform per slice, so bit-identity with the
-/// whole-width golden model needs every block to be exactly one tile.
-pub fn uniform_tile(blocks: &[usize]) -> Result<usize> {
-    let Some(&first) = blocks.first() else {
-        bail!("empty block partition");
-    };
-    if blocks.iter().any(|&b| b != first) {
-        bail!(
-            "block partition {blocks:?} is not uniform; pooled executors need every \
-             block equal to the tile width (pick a layer width that partitions evenly)"
-        );
-    }
-    Ok(first)
-}
-
 /// Validate that every request in a batch matches the partition width
 /// and that `streams` lines up (shared by the executor impls).
 pub(crate) fn validate_batch(
@@ -124,14 +111,6 @@ pub(crate) fn validate_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn uniform_tile_accepts_uniform_partitions() {
-        assert_eq!(uniform_tile(&[16, 16, 16]).unwrap(), 16);
-        assert_eq!(uniform_tile(&[128]).unwrap(), 128);
-        assert!(uniform_tile(&[16, 4]).is_err());
-        assert!(uniform_tile(&[]).is_err());
-    }
 
     #[test]
     fn validate_batch_checks_widths_and_streams() {

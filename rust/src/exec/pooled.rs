@@ -2,21 +2,24 @@
 //! pool.
 //!
 //! Each sample becomes one [`TransformRequest`] fanned out over the
-//! pool's workers through the async `try_submit`/`drain_one` API — the
-//! whole activation executes in parallel instead of a per-sample loop.
-//! With digital tiles and pinned quantization scales this is
-//! bit-identical to [`crate::nn::Backend::Quantized`]; noisy/analog
-//! tiles run the same schedule with their physical models.  The layer's
-//! soft-threshold dead zone arrives as early-termination thresholds, so
-//! the pool's cycle/energy metrics reflect the fused comparator path.
+//! pool's workers through the async `try_submit_planned`/`drain_one`
+//! API — the whole activation executes in parallel instead of a
+//! per-sample loop, and the layer's block partition rides along with
+//! every request, so mixed partitions (`[128, 64, 16, 4]`) run with
+//! blocks narrower than the tile under sub-tile masking.  With digital
+//! tiles and pinned quantization scales this is bit-identical to
+//! [`crate::nn::Backend::Quantized`]; noisy/analog tiles run the same
+//! schedule with their physical models.  The layer's soft-threshold
+//! dead zone arrives as early-termination thresholds, so the pool's
+//! cycle/energy metrics reflect the fused comparator path.
 
 use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, TransformRequest};
+use crate::coordinator::{Coordinator, TilePlan, TransformRequest};
 
-use super::{uniform_tile, validate_batch, TransformExecutor};
+use super::{validate_batch, TransformExecutor};
 
 /// Executor borrowing a coordinator pool.
 pub struct Pooled<'a> {
@@ -24,8 +27,9 @@ pub struct Pooled<'a> {
 }
 
 impl<'a> Pooled<'a> {
-    /// Wrap a pool.  The pool's `tile_n` must equal the layer's uniform
-    /// transform block size (checked per batch).
+    /// Wrap a pool.  The pool's `tile_n` must be at least the layer's
+    /// widest transform block (checked per batch); narrower blocks run
+    /// under sub-tile masking.
     pub fn new(coord: &'a mut Coordinator) -> Pooled<'a> {
         Pooled { coord }
     }
@@ -47,15 +51,10 @@ impl TransformExecutor for Pooled<'_> {
         _streams: &[u64],
     ) -> Result<Vec<Vec<f32>>> {
         validate_batch(blocks, reqs, _streams)?;
-        let tile = uniform_tile(blocks)?;
-        if tile != self.coord.config().tile_n {
-            anyhow::bail!(
-                "layer blocks are {tile}-wide but the pool runs {}x{} tiles; \
-                 configure the coordinator with tile_n = {tile}",
-                self.coord.config().tile_n,
-                self.coord.config().tile_n
-            );
-        }
+        // Resolve the partition against the pool geometry up front, so a
+        // bad partition is one clean error instead of a mid-batch
+        // failure with work already in flight.
+        TilePlan::new(self.coord.config().tile_n, blocks)?;
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
@@ -76,7 +75,7 @@ impl TransformExecutor for Pooled<'_> {
         let mut done = 0usize;
         while done < reqs.len() {
             while next < reqs.len() {
-                match self.coord.try_submit(&reqs[next])? {
+                match self.coord.try_submit_planned(&reqs[next], blocks)? {
                     Some(id) => {
                         pending.insert(id, next);
                         next += 1;
@@ -136,11 +135,37 @@ mod tests {
     }
 
     #[test]
-    fn rejects_mismatched_tile_geometry() {
+    fn mixed_partition_batch_matches_whole_width_golden_model() {
+        // Width 20 as [16, 4] on 16-wide tiles: the 4-block runs under
+        // sub-tile masking, bit-identical to the golden model.
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut ex = Pooled::new(&mut coord);
+        let blocks = [16usize, 4];
+        let reqs: Vec<TransformRequest> = (0..3)
+            .map(|i| {
+                let x = sample(20, 70 + i);
+                TransformRequest {
+                    thresholds_units: vec![0.0; 20],
+                    scale: Some(Quantizer::new(8).scale_for(&x)),
+                    x,
+                }
+            })
+            .collect();
+        let outs = ex.transform_batch(&blocks, &reqs, &[0, 1, 2]).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            let golden = QuantBwht::new(20, 128, 8).transform(&req.x);
+            assert_eq!(outs[i], golden, "request {i}");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn rejects_blocks_wider_than_the_tile() {
         let mut coord = Coordinator::new(CoordinatorConfig::default());
         let mut ex = Pooled::new(&mut coord);
         let req = TransformRequest::plain(vec![0.5; 64]);
-        assert!(ex.transform_batch(&[64], &[req], &[0]).is_err());
+        let err = ex.transform_batch(&[64], &[req], &[0]).unwrap_err();
+        assert!(err.to_string().contains("tile_n"), "{err}");
         coord.shutdown();
     }
 

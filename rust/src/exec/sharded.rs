@@ -1,20 +1,23 @@
 //! The sharded executor: NN transforms scatter–gathered across a
 //! [`ShardSet`] of coordinator pools.
 //!
-//! Each sample's blocks are placed over the healthy shards by the
-//! planner (row-cycle-balanced), executed in parallel and reassembled —
-//! so one wide activation saturates every pool, and a poisoned shard
-//! sheds its slices to the survivors mid-batch.  Pinned quantization
-//! scales ride along with every slice, which keeps the digital path
-//! bit-identical to [`crate::nn::Backend::Quantized`] (any placement,
-//! any shard count).
+//! Each sample's blocks — mixed widths included — are placed over the
+//! healthy shards by the planner (row-cycle-balanced over the
+//! heterogeneous block costs), executed in parallel and reassembled, so
+//! one wide activation saturates every pool and a poisoned shard sheds
+//! its slices to the survivors mid-batch.  Blocks narrower than the
+//! shard tile run under sub-tile masking
+//! ([`crate::coordinator::plan::TilePlan`]); pinned quantization scales
+//! ride along with every slice, which keeps the digital path
+//! bit-identical to [`crate::nn::Backend::Quantized`] (any partition,
+//! any placement, any shard count).
 
 use anyhow::Result;
 
 use crate::coordinator::TransformRequest;
 use crate::shard::{router, ShardSet};
 
-use super::{uniform_tile, validate_batch, TransformExecutor};
+use super::{validate_batch, TransformExecutor};
 
 /// Executor borrowing a shard set.
 pub struct Sharded<'a> {
@@ -22,8 +25,9 @@ pub struct Sharded<'a> {
 }
 
 impl<'a> Sharded<'a> {
-    /// Wrap a shard set.  The set's `tile_n` must equal the layer's
-    /// uniform transform block size (checked per batch).
+    /// Wrap a shard set.  The set's `tile_n` must be at least the
+    /// layer's widest transform block (checked per batch); narrower
+    /// blocks run under sub-tile masking.
     pub fn new(set: &'a mut ShardSet) -> Sharded<'a> {
         Sharded { set }
     }
@@ -45,16 +49,7 @@ impl TransformExecutor for Sharded<'_> {
         streams: &[u64],
     ) -> Result<Vec<Vec<f32>>> {
         validate_batch(blocks, reqs, streams)?;
-        let tile = uniform_tile(blocks)?;
-        if tile != self.set.tile_n() {
-            anyhow::bail!(
-                "layer blocks are {tile}-wide but the shard set runs {}x{} tiles; \
-                 configure the shards with tile_n = {tile}",
-                self.set.tile_n(),
-                self.set.tile_n()
-            );
-        }
-        router::transform_batch(self.set, reqs)
+        router::transform_batch_planned(self.set, blocks, reqs)
     }
 }
 
@@ -94,7 +89,35 @@ mod tests {
     }
 
     #[test]
-    fn rejects_mismatched_tile_geometry() {
+    fn sharded_mixed_partition_matches_whole_width_golden_model() {
+        // 68 = [64, 4] on 64-wide tiles: the trailing 4-block runs under
+        // sub-tile masking wherever the planner places it.
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            coordinator: crate::coordinator::CoordinatorConfig {
+                tile_n: 64,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut ex = Sharded::new(&mut set);
+        let x = sample(68, 19);
+        let req = TransformRequest {
+            thresholds_units: vec![0.0; 68],
+            scale: Some(Quantizer::new(8).scale_for(&x)),
+            x,
+        };
+        let out = ex
+            .transform_batch(&[64, 4], std::slice::from_ref(&req), &[0])
+            .unwrap();
+        let golden = QuantBwht::new(68, 64, 8).transform(&req.x);
+        assert_eq!(out[0], golden);
+        set.shutdown();
+    }
+
+    #[test]
+    fn rejects_blocks_wider_than_the_tile() {
         let mut set = ShardSet::new(ShardSetConfig::default()).unwrap();
         let mut ex = Sharded::new(&mut set);
         let req = TransformRequest::plain(vec![0.5; 64]);

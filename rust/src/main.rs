@@ -33,9 +33,9 @@ use anyhow::{bail, Result};
 
 use repro::analog::crossbar::CrossbarConfig;
 use repro::bitplane::QuantBwht;
-use repro::coordinator::{Coordinator, CoordinatorConfig, TileKind, TransformRequest};
+use repro::coordinator::{required_tile, Coordinator, CoordinatorConfig, TileKind, TransformRequest};
 use repro::energy::{table1, EnergyModel};
-use repro::exec::{self, Sharded};
+use repro::exec::Sharded;
 use repro::nn::{loader::Weights, Backend, Mlp};
 use repro::npy;
 #[cfg(feature = "pjrt")]
@@ -69,6 +69,27 @@ fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, defaul
         .unwrap_or(default)
 }
 
+/// Parse and validate `--tile N` (the crossbar macro geometry).  The
+/// library asserts deep inside `wht::bwht_blocks` and worker threads
+/// (`Tile::new`) that the tile is a power of two `>= MIN_BLOCK`; validate
+/// up front so a bad flag is a clean CLI error, not a thread panic.
+fn tile_flag(flags: &HashMap<String, String>) -> Result<usize> {
+    let raw = flags.get("tile").map(String::as_str);
+    let tile: usize = match raw {
+        None => 16,
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--tile must be an integer, got {s:?}"))?,
+    };
+    if !tile.is_power_of_two() || tile < repro::wht::MIN_BLOCK {
+        bail!(
+            "--tile must be a power of two >= {} (16 or 32 in the paper), got {tile}",
+            repro::wht::MIN_BLOCK
+        );
+    }
+    Ok(tile)
+}
+
 fn backend_from_flags(flags: &HashMap<String, String>) -> Backend {
     match flags.get("backend").map(|s| s.as_str()).unwrap_or("quantized") {
         "float" => Backend::Float,
@@ -100,7 +121,7 @@ fn tile_kind_from_flags(flags: &HashMap<String, String>, tile: usize, vdd: f64) 
 fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
     let dim: usize = flag(flags, "dim", 64);
     let bits: u32 = flag(flags, "bits", 8);
-    let tile: usize = flag(flags, "tile", 16);
+    let tile = tile_flag(flags)?;
     let seed: u64 = flag(flags, "seed", 0);
     let vdd: f64 = flag(flags, "vdd", 0.8);
     let kind = tile_kind_from_flags(flags, tile, vdd);
@@ -165,8 +186,11 @@ fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
         // Crossbar-pool path: the model's BWHT transforms scatter–gather
         // across N coordinator pools through the same executor seam the
         // server uses.  `--backend digital|noisy|analog` picks the tile
-        // model; digital is bit-identical to the quantized software path.
-        let tile = exec::uniform_tile(mlp.bwht.transform_blocks())?;
+        // model; digital is bit-identical to the quantized software
+        // path.  Tiles are sized to the widest block of the model's
+        // partition; narrower blocks run under sub-tile masking, so any
+        // hidden width works.
+        let tile = required_tile(mlp.bwht.transform_blocks())?;
         let vdd: f64 = flag(flags, "vdd", 0.8);
         let mut set = ShardSet::new(ShardSetConfig {
             shards,
@@ -318,7 +342,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
 /// Network mode: a long-running HTTP service over the sharded
 /// coordinator pools.
 fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()> {
-    let tile: usize = flag(flags, "tile", 16);
+    let tile = tile_flag(flags)?;
     let vdd: f64 = flag(flags, "vdd", 0.8);
     let shards: usize = flag(flags, "shards", 1);
     let backend = flags
@@ -332,11 +356,13 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         }
         None => None,
     };
-    // A hosted model pins the tile width to its BWHT block size; the
-    // tile backend (analog crossbar geometry in particular) must be
-    // built for that width, not the raw --tile flag.
+    // A hosted model bounds the tile width from below: the tile must fit
+    // the model's widest BWHT block (narrower blocks of a mixed
+    // partition run under sub-tile masking, so any hidden width serves).
+    // The tile backend (analog crossbar geometry in particular) must be
+    // built for the effective width, not the raw --tile flag.
     let effective_tile = match &model {
-        Some(m) => exec::uniform_tile(m.bwht.transform_blocks())?,
+        Some(m) => required_tile(m.bwht.transform_blocks())?.max(tile),
         None => tile,
     };
     let config = ServerConfig {
@@ -405,7 +431,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     let requests: usize = flag(flags, "requests", 1000);
     let workers: usize = flag(flags, "workers", 4);
-    let tile: usize = flag(flags, "tile", 16);
+    let tile = tile_flag(flags)?;
     let bits: u32 = flag(flags, "bits", 8);
     let dim: usize = flag(flags, "dim", 64);
     let vdd: f64 = flag(flags, "vdd", 0.8);
@@ -532,7 +558,9 @@ SUBCOMMANDS:
               across N coordinator pools; --backend digital|noisy|analog
               picks the per-shard tile backend (per-worker variability
               seeds derive from --seed); --weights PATH hosts the MLP on
-              POST /v1/infer (transforms run through the shard set;
+              POST /v1/infer (any hidden width: tiles are sized to the
+              model's widest BWHT block and narrower blocks run under
+              sub-tile masking; transforms run through the shard set;
               poisoned shards respawn on a health tick unless
               --no-respawn); without --listen: offline batch benchmark
   report      energy model: Table I, Fig. 12 power breakdown

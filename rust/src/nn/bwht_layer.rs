@@ -42,6 +42,10 @@ pub struct BwhtLayer {
     norm: Vec<f32>,
     /// Block partition both transforms run on (`bwht_blocks(width,
     /// max_block)` — the structure the legacy backends always used).
+    /// Mixed partitions like `[128, 64, 16, 4]` are emitted as-is: every
+    /// executor maps sub-tile blocks onto the crossbar via
+    /// [`crate::coordinator::plan::TilePlan`] masking, so any width is
+    /// servable.
     tblocks: Vec<usize>,
 }
 

@@ -51,9 +51,10 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::analog::crossbar::CrossbarConfig;
-use crate::coordinator::{CoordinatorConfig, LatencyHistogram, Metrics, TileKind, TransformRequest};
+use crate::coordinator::{
+    required_tile, CoordinatorConfig, LatencyHistogram, Metrics, TileKind, TransformRequest,
+};
 use crate::energy::EnergyModel;
-use crate::exec;
 use crate::nn::Mlp;
 use crate::shard::{MetricsAggregator, ShardSet, ShardSetConfig};
 use crate::util::json::{self, Json};
@@ -96,8 +97,10 @@ pub struct ServerConfig {
     /// its next request.
     pub keepalive_idle: Duration,
     /// Model served by `POST /v1/infer` (loaded from `--weights` by the
-    /// CLI).  When set, the shard set's tile width is aligned to the
-    /// model's BWHT block size so digital inference is bit-identical to
+    /// CLI).  When set, the shard set's tile width is raised (if needed)
+    /// to the model's widest BWHT block; narrower blocks of a mixed
+    /// partition run under sub-tile masking, so *any* hidden width
+    /// serves with digital inference bit-identical to
     /// `Backend::Quantized`.  `None` disables the endpoint.
     pub model: Option<Mlp>,
     /// Largest sample count accepted in one `/v1/infer` request.
@@ -220,17 +223,19 @@ impl Server {
             .with_context(|| format!("binding {}", config.listen))?;
         let addr = listener.local_addr()?;
 
-        // A hosted model pins the tile geometry: every transform block of
-        // its BWHT layer must be exactly one tile, which is what makes
-        // digital /v1/infer bit-identical to `Backend::Quantized`.  An
-        // analog backend's crossbar geometry must follow the override —
-        // Tile::new asserts config.n == tile_n in every worker thread.
+        // A hosted model only constrains the tile geometry from below:
+        // the tile must be at least as wide as the model's widest BWHT
+        // block (narrower blocks run under sub-tile masking, which keeps
+        // digital /v1/infer bit-identical to `Backend::Quantized` for
+        // *any* hidden width).  An analog backend's crossbar geometry
+        // must follow the override — Tile::new asserts config.n ==
+        // tile_n in every worker thread.
         let mut coordinator = config.coordinator.clone();
         if let Some(model) = &config.model {
-            let tile = exec::uniform_tile(model.bwht.transform_blocks()).context(
-                "the model's BWHT width does not map onto uniform crossbar tiles",
+            let tile = required_tile(model.bwht.transform_blocks()).context(
+                "the model's BWHT partition does not map onto power-of-two crossbar tiles",
             )?;
-            if coordinator.tile_n != tile {
+            if coordinator.tile_n < tile {
                 coordinator.tile_n = tile;
                 if let TileKind::Analog { config: xbar } = &mut coordinator.kind {
                     *xbar = CrossbarConfig::new(tile, config.vdd);

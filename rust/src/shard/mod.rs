@@ -20,9 +20,12 @@
 //! ```
 //!
 //! * [`planner`] — per-block row-cycle estimation + deterministic LPT
-//!   placement balancing load across healthy shards;
+//!   placement balancing load across healthy shards (block widths may be
+//!   heterogeneous: planned requests carry mixed BWHT partitions);
 //! * [`router`] — the scatter–gather executor over the coordinator's
-//!   `submit`/`drain_one` API, with poisoned-shard load shedding;
+//!   `try_submit_planned`/`drain_one` API, with poisoned-shard load
+//!   shedding; sub-tile blocks execute under
+//!   [`crate::coordinator::plan::TilePlan`] masking;
 //! * [`set`] — shard lifecycle: per-shard seed/backend config, health
 //!   tracking, retirement of dead pools;
 //! * [`metrics_agg`] — merged + per-shard [`crate::coordinator::Metrics`]

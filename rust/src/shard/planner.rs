@@ -1,13 +1,15 @@
-//! Placement planning: partition a request's tile-block list across
-//! shards so each shard carries a similar estimated row-cycle load.
+//! Placement planning: partition a request's block list across shards so
+//! each shard carries a similar estimated row-cycle load.
 //!
-//! The coordinator walks a padded request as uniform `tile_n`-wide
-//! blocks, each quantized and scheduled independently (so any partition
-//! of whole blocks reproduces the single-pool output bit-for-bit on the
-//! digital backend).  The planner's job is purely load balance: estimate
-//! the row-cycles each block will execute — early termination makes
-//! blocks heterogeneous — and spread them with a deterministic
-//! longest-processing-time greedy.
+//! The coordinator walks a request as the blocks of its partition —
+//! uniform `tile_n`-wide slices for raw requests, or a mixed partition
+//! such as `[128, 64, 16, 4]` for planned NN transforms — each block
+//! quantized and scheduled independently (so any placement of whole
+//! blocks reproduces the single-pool output bit-for-bit on the digital
+//! backend).  The planner's job is purely load balance: estimate the
+//! row-cycles each block will execute — both block width and early
+//! termination make blocks heterogeneous — and spread them with a
+//! deterministic longest-processing-time greedy.
 
 /// Blocks placed on one shard (slot index into the
 /// [`crate::shard::ShardSet`]).  `blocks` holds ascending block indices
@@ -33,7 +35,9 @@ impl BlockPlan {
     }
 }
 
-/// Estimated row-cycles one `tile_n`-wide block will execute.
+/// Estimated row-cycles one block will execute (any block width: a
+/// sub-tile block bills only its logical rows, which is exactly
+/// `x.len()` here).
 ///
 /// Mirrors the scheduler's cost structure without running it:
 ///
@@ -189,5 +193,18 @@ mod tests {
         assert_eq!(estimate_block_cost(&live, &t0, 8), 16 * 8);
         // Saturating thresholds: floored at one cycle per row.
         assert_eq!(estimate_block_cost(&live, &t_huge, 8), 16);
+    }
+
+    #[test]
+    fn cost_estimates_scale_with_block_width() {
+        // Mixed partitions: a 4-wide block costs a quarter of a 16-wide
+        // one under the same regime, so LPT balances row-cycles, not
+        // block counts.
+        let wide: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin() + 0.1).collect();
+        let narrow = &wide[..4];
+        let t0_wide = vec![0.0f64; 16];
+        let t0_narrow = vec![0.0f64; 4];
+        assert_eq!(estimate_block_cost(&wide, &t0_wide, 8), 16 * 8);
+        assert_eq!(estimate_block_cost(narrow, &t0_narrow, 8), 4 * 8);
     }
 }

@@ -1,11 +1,16 @@
 //! Scatter–gather execution of wide transforms across the shard set.
 //!
-//! A width-W request is padded to whole `tile_n` blocks, the block list
-//! is partitioned by the [`super::planner`] across the healthy shards
-//! (balancing estimated row-cycles), each shard's portion is further
-//! split into per-worker lanes and fanned out through the coordinator's
-//! `submit`/`drain_one` async API, and the per-slice outputs are
-//! scattered back into the request's output vector by block index.
+//! A request carries a *block partition*: either the legacy uniform one
+//! (padded to whole `tile_n` blocks — the raw `/v1/transform`
+//! semantics) or an explicit, possibly mixed, partition such as
+//! `[128, 64, 16, 4]` ([`transform_batch_planned`], the NN executor
+//! path, where blocks narrower than the tile run under sub-tile
+//! masking).  The block list is partitioned by the [`super::planner`]
+//! across the healthy shards (balancing estimated row-cycles over the
+//! heterogeneous block costs), each shard's portion is further split
+//! into per-worker lanes and fanned out through the coordinator's
+//! `try_submit_planned`/`drain_one` async API, and the per-slice outputs
+//! are scattered back into the request's output vector by block offset.
 //!
 //! Because every block is quantized and scheduled independently, any
 //! placement reproduces the single-coordinator output bit-for-bit on the
@@ -21,10 +26,41 @@ use std::collections::{HashMap, VecDeque};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::TransformRequest;
+use crate::coordinator::{TilePlan, TransformRequest};
 
 use super::planner::{estimate_block_cost, plan_blocks};
 use super::set::ShardSet;
+
+/// One request resolved onto its block partition: the routing unit of
+/// work is a *block*, identified by its index into `widths`/`offsets`.
+struct PlannedReq {
+    x: Vec<f32>,
+    th: Vec<f64>,
+    scale: Option<f32>,
+    /// Block widths of the partition (sum = `x.len()`).
+    widths: Vec<usize>,
+    /// Start offset of each block within `x`.
+    offsets: Vec<usize>,
+}
+
+impl PlannedReq {
+    fn new(x: Vec<f32>, th: Vec<f64>, scale: Option<f32>, widths: Vec<usize>) -> PlannedReq {
+        let mut offsets = Vec::with_capacity(widths.len());
+        let mut off = 0usize;
+        for &w in &widths {
+            offsets.push(off);
+            off += w;
+        }
+        debug_assert_eq!(off, x.len());
+        PlannedReq {
+            x,
+            th,
+            scale,
+            widths,
+            offsets,
+        }
+    }
+}
 
 /// One unit of scatter work: a subset of one request's blocks bound for
 /// one shard.
@@ -34,39 +70,46 @@ struct Slice {
     req: usize,
     /// Target shard slot (revised when the target is poisoned).
     shard: usize,
-    /// Ascending block indices of the padded request.
+    /// Ascending block indices of the request's partition.
     blocks: Vec<usize>,
 }
 
-/// Concatenate `blocks` of the padded request into one sub-request.
-/// The parent's pinned quantization scale (if any) is inherited by every
-/// slice, so a sliced request quantizes exactly like the whole one.
-fn sub_request(
-    x: &[f32],
-    th: &[f64],
-    scale: Option<f32>,
-    blocks: &[usize],
-    tile_n: usize,
-) -> TransformRequest {
-    let mut sx = Vec::with_capacity(blocks.len() * tile_n);
-    let mut sth = Vec::with_capacity(blocks.len() * tile_n);
+/// Concatenate `blocks` of the request into one sub-request plus the
+/// matching sub-partition.  The parent's pinned quantization scale (if
+/// any) is inherited by every slice, so a sliced request quantizes
+/// exactly like the whole one.
+fn sub_request(preq: &PlannedReq, blocks: &[usize]) -> (TransformRequest, Vec<usize>) {
+    let total: usize = blocks.iter().map(|&b| preq.widths[b]).sum();
+    let mut sx = Vec::with_capacity(total);
+    let mut sth = Vec::with_capacity(total);
+    let mut widths = Vec::with_capacity(blocks.len());
     for &b in blocks {
-        sx.extend_from_slice(&x[b * tile_n..(b + 1) * tile_n]);
-        sth.extend_from_slice(&th[b * tile_n..(b + 1) * tile_n]);
+        let lo = preq.offsets[b];
+        let hi = lo + preq.widths[b];
+        sx.extend_from_slice(&preq.x[lo..hi]);
+        sth.extend_from_slice(&preq.th[lo..hi]);
+        widths.push(preq.widths[b]);
     }
-    TransformRequest {
-        x: sx,
-        thresholds_units: sth,
-        scale,
-    }
+    (
+        TransformRequest {
+            x: sx,
+            thresholds_units: sth,
+            scale: preq.scale,
+        },
+        widths,
+    )
 }
 
-/// Scatter a slice's concatenated outputs back by block index.
-fn gather(out: &mut [f32], values: &[f32], blocks: &[usize], tile_n: usize) {
-    debug_assert_eq!(values.len(), blocks.len() * tile_n);
-    for (j, &b) in blocks.iter().enumerate() {
-        out[b * tile_n..(b + 1) * tile_n].copy_from_slice(&values[j * tile_n..(j + 1) * tile_n]);
+/// Scatter a slice's concatenated outputs back by block offset.
+fn gather(out: &mut [f32], values: &[f32], preq: &PlannedReq, blocks: &[usize]) {
+    let mut pos = 0usize;
+    for &b in blocks {
+        let lo = preq.offsets[b];
+        let w = preq.widths[b];
+        out[lo..lo + w].copy_from_slice(&values[pos..pos + w]);
+        pos += w;
     }
+    debug_assert_eq!(pos, values.len());
 }
 
 /// Split `blocks` into at most `lanes` contiguous chunks of near-equal
@@ -111,6 +154,27 @@ fn poison_and_requeue(
     }
 }
 
+/// Validate one request at the routing boundary (mirrors
+/// `Coordinator::validate`).
+fn validate_request(i: usize, req: &TransformRequest) -> Result<()> {
+    if req.x.is_empty() {
+        bail!("request {i} has an empty input vector");
+    }
+    if req.thresholds_units.len() != req.x.len() {
+        bail!(
+            "request {i}: thresholds_units length {} does not match input length {}",
+            req.thresholds_units.len(),
+            req.x.len()
+        );
+    }
+    if let Some(s) = req.scale {
+        if !(s.is_finite() && s > 0.0) {
+            bail!("request {i}: pinned quantization scale must be positive and finite");
+        }
+    }
+    Ok(())
+}
+
 /// Execute one transform request across the shard set.  Returns outputs
 /// at padded width, bit-identical (digital backend) to a single
 /// [`crate::coordinator::Coordinator`] serving the same request.
@@ -119,43 +183,63 @@ pub fn transform(set: &mut ShardSet, req: &TransformRequest) -> Result<Vec<f32>>
     Ok(outs.pop().expect("one request, one output"))
 }
 
-/// Execute a batch of requests, scatter–gathering every request's blocks
-/// across the healthy shards.  Outputs are returned in request order at
-/// padded width.
+/// Execute a batch of requests with the legacy uniform partition: each
+/// request is padded to whole `tile_n` blocks and outputs come back at
+/// padded width, in request order.
 ///
 /// The router assumes exclusive use of the set's async API: every slice
 /// it submits is drained before returning, and no caller-submitted
 /// requests may be outstanding on any shard when it is invoked.
 pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<Vec<Vec<f32>>> {
     let tile_n = set.tile_n();
-    let bits = set.bits();
-
-    // Validate + pad up front so malformed input is a clean error at the
-    // routing boundary (mirrors `Coordinator::validate`).
-    let mut padded: Vec<(Vec<f32>, Vec<f64>, Option<f32>)> = Vec::with_capacity(reqs.len());
+    let mut planned = Vec::with_capacity(reqs.len());
     for (i, req) in reqs.iter().enumerate() {
-        if req.x.is_empty() {
-            bail!("request {i} has an empty input vector");
-        }
-        if req.thresholds_units.len() != req.x.len() {
-            bail!(
-                "request {i}: thresholds_units length {} does not match input length {}",
-                req.thresholds_units.len(),
-                req.x.len()
-            );
-        }
-        if let Some(s) = req.scale {
-            if !(s.is_finite() && s > 0.0) {
-                bail!("request {i}: pinned quantization scale must be positive and finite");
-            }
-        }
+        validate_request(i, req)?;
         let w = req.x.len().div_ceil(tile_n) * tile_n;
         let mut x = req.x.clone();
         x.resize(w, 0.0);
         let mut th = req.thresholds_units.clone();
         th.resize(w, 0.0);
-        padded.push((x, th, req.scale));
+        planned.push(PlannedReq::new(x, th, req.scale, vec![tile_n; w / tile_n]));
     }
+    run(set, planned)
+}
+
+/// Execute a batch of requests over an explicit block partition (shared
+/// by the whole batch — the executor seam's contract).  Requests must be
+/// exactly `blocks.iter().sum()` wide; outputs come back at that width,
+/// unpadded.  Blocks narrower than the shard tile run under sub-tile
+/// masking; blocks wider than the tile are a clean error.
+pub fn transform_batch_planned(
+    set: &mut ShardSet,
+    blocks: &[usize],
+    reqs: &[TransformRequest],
+) -> Result<Vec<Vec<f32>>> {
+    // Resolve the partition against the shard geometry once, up front.
+    let plan = TilePlan::new(set.tile_n(), blocks)?;
+    let width = plan.width();
+    let mut planned = Vec::with_capacity(reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
+        validate_request(i, req)?;
+        if req.x.len() != width {
+            bail!(
+                "request {i} is {} wide, but the block partition {blocks:?} covers {width}",
+                req.x.len()
+            );
+        }
+        planned.push(PlannedReq::new(
+            req.x.clone(),
+            req.thresholds_units.clone(),
+            req.scale,
+            blocks.to_vec(),
+        ));
+    }
+    run(set, planned)
+}
+
+/// The shared scatter–gather loop over pre-validated planned requests.
+fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
+    let bits = set.bits();
 
     // Plan the whole batch over the healthy shards, carrying the load
     // vector across requests so the batch balances globally.
@@ -173,19 +257,15 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
     let lanes_per_shard = set
         .workers_per_shard()
         .max(1)
-        .div_ceil(reqs.len().max(1));
+        .div_ceil(planned.len().max(1));
     let mut loads = vec![0u64; healthy.len()];
     let mut queue: VecDeque<Slice> = VecDeque::new();
-    for (ri, (x, th, _)) in padded.iter().enumerate() {
-        let nblocks = x.len() / tile_n;
-        let costs: Vec<u64> = (0..nblocks)
-            .map(|b| {
-                estimate_block_cost(
-                    &x[b * tile_n..(b + 1) * tile_n],
-                    &th[b * tile_n..(b + 1) * tile_n],
-                    bits,
-                )
-            })
+    for (ri, preq) in planned.iter().enumerate() {
+        let costs: Vec<u64> = preq
+            .widths
+            .iter()
+            .zip(&preq.offsets)
+            .map(|(&w, &lo)| estimate_block_cost(&preq.x[lo..lo + w], &preq.th[lo..lo + w], bits))
             .collect();
         let plan = plan_blocks(&costs, &healthy, &mut loads);
         for a in plan.assignments {
@@ -201,14 +281,14 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
         }
     }
 
-    let mut outs: Vec<Vec<f32>> = padded.iter().map(|(x, ..)| vec![0.0f32; x.len()]).collect();
+    let mut outs: Vec<Vec<f32>> = planned.iter().map(|p| vec![0.0f32; p.x.len()]).collect();
     let mut outstanding: Vec<HashMap<u64, Slice>> =
         (0..set.len()).map(|_| HashMap::new()).collect();
 
     loop {
         // Scatter phase: submit everything queued, shedding poisoned
-        // shards' slices to the survivors.  `try_submit` (never the
-        // blocking `submit`) keeps a full bounded job queue from
+        // shards' slices to the survivors.  `try_submit_planned` (never
+        // the blocking `submit`) keeps a full bounded job queue from
         // deadlocking the scatter against the undrained result queue:
         // on backpressure we drain one finished result first.
         while let Some(mut slice) = queue.pop_front() {
@@ -216,10 +296,9 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
                 slice.shard = reroute_target(set, &outstanding)?;
             }
             let shard = slice.shard;
-            let (x, th, scale) = &padded[slice.req];
-            let sub = sub_request(x, th, *scale, &slice.blocks, tile_n);
+            let (sub, sub_blocks) = sub_request(&planned[slice.req], &slice.blocks);
             let coord = set.coordinator_mut(shard).expect("healthy shard has a pool");
-            match coord.try_submit(&sub) {
+            match coord.try_submit_planned(&sub, &sub_blocks) {
                 Ok(Some(id)) => {
                     outstanding[shard].insert(id, slice);
                 }
@@ -232,7 +311,12 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
                             let finished = outstanding[shard]
                                 .remove(&done.request_id)
                                 .expect("drained id was submitted by this router");
-                            gather(&mut outs[finished.req], &done.values, &finished.blocks, tile_n);
+                            gather(
+                                &mut outs[finished.req],
+                                &done.values,
+                                &planned[finished.req],
+                                &finished.blocks,
+                            );
                         }
                         Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
                     }
@@ -257,7 +341,7 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
                 let slice = outstanding[shard]
                     .remove(&done.request_id)
                     .expect("drained id was submitted by this router");
-                gather(&mut outs[slice.req], &done.values, &slice.blocks, tile_n);
+                gather(&mut outs[slice.req], &done.values, &planned[slice.req], &slice.blocks);
             }
             Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
         }
@@ -269,7 +353,9 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bitplane::QuantBwht;
     use crate::coordinator::{Coordinator, CoordinatorConfig};
+    use crate::quant::Quantizer;
     use crate::shard::set::ShardSetConfig;
     use crate::util::rng::Rng;
 
@@ -295,11 +381,27 @@ mod tests {
     }
 
     #[test]
-    fn gather_scatters_by_block_index() {
+    fn gather_scatters_by_block_offset() {
+        let preq = PlannedReq::new(
+            vec![0.0; 12],
+            vec![0.0; 12],
+            None,
+            vec![4, 4, 4],
+        );
         let mut out = vec![0.0f32; 12];
         let values = vec![1.0, 1.0, 1.0, 1.0, 3.0, 3.0, 3.0, 3.0];
-        gather(&mut out, &values, &[0, 2], 4);
+        gather(&mut out, &values, &preq, &[0, 2]);
         assert_eq!(out, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 3.0, 3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn gather_handles_mixed_widths() {
+        let preq = PlannedReq::new(vec![0.0; 20], vec![0.0; 20], None, vec![16, 4]);
+        let mut out = vec![0.0f32; 20];
+        let values = vec![7.0; 4];
+        gather(&mut out, &values, &preq, &[1]);
+        assert_eq!(&out[16..], &[7.0; 4]);
+        assert!(out[..16].iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -316,6 +418,44 @@ mod tests {
         };
         let out = transform(&mut set, &req).unwrap();
         assert_eq!(out, golden(&req));
+        set.shutdown();
+    }
+
+    #[test]
+    fn planned_mixed_partition_matches_whole_width_golden_model() {
+        // Width 20 as [16, 4] over 2 shards of 16-wide tiles: the
+        // 4-block runs under sub-tile masking on whichever shard the
+        // planner picks, and the pinned scale keeps the result
+        // bit-identical to the 20-wide golden model.
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let x = sample(20, 77);
+        let req = TransformRequest {
+            thresholds_units: vec![0.0; 20],
+            scale: Some(Quantizer::new(8).scale_for(&x)),
+            x,
+        };
+        let outs = transform_batch_planned(&mut set, &[16, 4], std::slice::from_ref(&req)).unwrap();
+        let want = QuantBwht::new(20, 128, 8).transform(&req.x);
+        assert_eq!(outs[0], want);
+        assert_eq!(outs[0].len(), 20, "planned outputs are unpadded");
+        set.shutdown();
+    }
+
+    #[test]
+    fn planned_partition_is_validated_at_the_boundary() {
+        let mut set = ShardSet::new(ShardSetConfig::default()).unwrap();
+        let req = TransformRequest::plain(vec![0.5; 20]);
+        // Width mismatch.
+        assert!(transform_batch_planned(&mut set, &[16], std::slice::from_ref(&req)).is_err());
+        // Block wider than the tile.
+        assert!(
+            transform_batch_planned(&mut set, &[32], &[TransformRequest::plain(vec![0.5; 32])])
+                .is_err()
+        );
         set.shutdown();
     }
 

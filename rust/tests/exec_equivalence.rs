@@ -1,12 +1,14 @@
-//! Executor equivalence (ISSUE 3 satellite): the pooled/sharded digital
-//! executors must be bit-identical to the legacy in-process
-//! `Backend::Quantized` path across widths × bits × shard counts, and
-//! the refactored in-process executors must reproduce the pre-refactor
-//! algorithms exactly.
+//! Executor equivalence (ISSUE 3 satellite, extended by ISSUE 4): the
+//! pooled/sharded digital executors must be bit-identical to the legacy
+//! in-process `Backend::Quantized` path across widths × bits × shard
+//! counts — including non-power-of-two widths whose BWHT partitions mix
+//! block sizes (20 → `[16, 4]`, 300 → `[128, 128, 32, 8, 4]`), served
+//! via sub-tile masking — and the refactored in-process executors must
+//! reproduce the pre-refactor algorithms exactly.
 
 use repro::bitplane::QuantBwht;
-use repro::coordinator::{Coordinator, CoordinatorConfig};
-use repro::exec::{self, InProcess, Pooled, Sharded, TransformExecutor};
+use repro::coordinator::{required_tile, Coordinator, CoordinatorConfig};
+use repro::exec::{InProcess, Pooled, Sharded, TransformExecutor};
 use repro::nn::{Backend, BwhtLayer, Mlp};
 use repro::shard::{ShardSet, ShardSetConfig};
 use repro::util::prop;
@@ -30,10 +32,14 @@ fn layer(width: usize, tseed: u64) -> BwhtLayer {
 
 #[test]
 fn pooled_digital_is_bit_identical_across_widths_and_bits() {
-    for &width in &[64usize, 128, 256] {
+    // Power-of-two widths partition into uniform tiles; 20, 68, 300 and
+    // 1040 produce mixed partitions ([16, 4], [64, 4],
+    // [128, 128, 32, 8, 4], [128×8, 16]) whose narrow blocks run under
+    // sub-tile masking.
+    for &width in &[64usize, 128, 256, 20, 68, 300, 1040] {
         for &bits in &[2u32, 4, 8] {
             let l = layer(width, 100 + width as u64);
-            let tile = exec::uniform_tile(l.transform_blocks()).unwrap();
+            let tile = required_tile(l.transform_blocks()).unwrap();
             let mut coord = Coordinator::new(CoordinatorConfig {
                 tile_n: tile,
                 bits,
@@ -62,36 +68,40 @@ fn pooled_digital_is_bit_identical_across_widths_and_bits() {
 
 #[test]
 fn sharded_digital_is_bit_identical_across_shard_counts() {
-    let width = 256usize;
-    let l = layer(width, 11);
-    let tile = exec::uniform_tile(l.transform_blocks()).unwrap();
-    let batch = 4usize;
-    let x = sample(batch * width, 12);
-    let want = l.forward(
-        &x,
-        batch,
-        width,
-        width,
-        Backend::Quantized { bits: 8 },
-        &mut Rng::seed_from_u64(0),
-    );
-    for shards in 1..=3usize {
-        let mut set = ShardSet::new(ShardSetConfig {
-            shards,
-            coordinator: CoordinatorConfig {
-                tile_n: tile,
+    // 300 partitions as [128, 128, 32, 8, 4]: every shard count must
+    // reproduce the in-process quantized layer exactly, wherever the
+    // planner places the sub-tile blocks.
+    for &width in &[256usize, 300] {
+        let l = layer(width, 11 + width as u64);
+        let tile = required_tile(l.transform_blocks()).unwrap();
+        let batch = 4usize;
+        let x = sample(batch * width, 12 + width as u64);
+        let want = l.forward(
+            &x,
+            batch,
+            width,
+            width,
+            Backend::Quantized { bits: 8 },
+            &mut Rng::seed_from_u64(0),
+        );
+        for shards in 1..=3usize {
+            let mut set = ShardSet::new(ShardSetConfig {
+                shards,
+                coordinator: CoordinatorConfig {
+                    tile_n: tile,
+                    ..Default::default()
+                },
                 ..Default::default()
-            },
-            ..Default::default()
-        })
-        .unwrap();
-        let got = {
-            let mut executor = Sharded::new(&mut set);
-            l.forward_with(&mut executor, &x, batch, width, width, 0)
-                .unwrap()
-        };
-        assert_eq!(got, want, "shards {shards}");
-        set.shutdown();
+            })
+            .unwrap();
+            let got = {
+                let mut executor = Sharded::new(&mut set);
+                l.forward_with(&mut executor, &x, batch, width, width, 0)
+                    .unwrap()
+            };
+            assert_eq!(got, want, "width {width} shards {shards}");
+            set.shutdown();
+        }
     }
 }
 
@@ -109,7 +119,7 @@ fn mlp_logits_match_quantized_backend_on_pooled_and_sharded_executors() {
         r.normal_vec_f32(hidden * classes, 0.0, 0.4),
         vec![0.0; classes],
     );
-    let tile = exec::uniform_tile(mlp.bwht.transform_blocks()).unwrap();
+    let tile = required_tile(mlp.bwht.transform_blocks()).unwrap();
     assert_eq!(tile, 64);
     let x = sample(batch * din, 22);
     let want = mlp.forward(
@@ -271,6 +281,124 @@ fn property_pooled_matches_quantized_for_random_inputs_and_thresholds() {
         },
     );
     coord.shutdown();
+}
+
+#[test]
+fn property_plan_layer_random_widths_pooled_and_sharded_match_quantized() {
+    // ISSUE-4 satellite: draw random widths in [MIN_BLOCK, 2048], build
+    // the natural `bwht_blocks` partition (mixed block sizes for most
+    // draws), and assert pooled and sharded digital execution is
+    // bit-identical to the in-process quantized backend — including the
+    // fused early-termination thresholds and pinned per-sample scales
+    // that `BwhtLayer::forward_with` plumbs through the seam.
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 2,
+        coordinator: CoordinatorConfig {
+            tile_n: 128,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        tile_n: 128,
+        ..Default::default()
+    });
+    prop::forall(
+        12,
+        2024,
+        |r| {
+            let width = r.int_range(wht::MIN_BLOCK as i64, 2048) as usize;
+            let padded = wht::bwht_padded_dim(width, 128);
+            let t: Vec<f32> = (0..padded)
+                .map(|_| r.uniform_range(0.0, 0.2) as f32)
+                .collect();
+            let x = prop::vec_f32(r, padded, 1.5);
+            (padded, t, x)
+        },
+        |(padded, t, x)| {
+            let l = BwhtLayer::new(*padded, *padded, t.clone(), 128);
+            assert_eq!(
+                l.transform_blocks().to_vec(),
+                wht::bwht_blocks(*padded, 128),
+                "layer must emit its natural partition"
+            );
+            let want = l.forward(
+                x,
+                1,
+                *padded,
+                *padded,
+                Backend::Quantized { bits: 8 },
+                &mut Rng::seed_from_u64(0),
+            );
+            let pooled = {
+                let mut executor = Pooled::new(&mut coord);
+                l.forward_with(&mut executor, x, 1, *padded, *padded, 0)
+                    .map_err(|e| e.to_string())?
+            };
+            if pooled != want {
+                return Err(format!("pooled diverged at width {padded}"));
+            }
+            let sharded = {
+                let mut executor = Sharded::new(&mut set);
+                l.forward_with(&mut executor, x, 1, *padded, *padded, 0)
+                    .map_err(|e| e.to_string())?
+            };
+            if sharded != want {
+                return Err(format!("sharded diverged at width {padded}"));
+            }
+            Ok(())
+        },
+    );
+    coord.shutdown();
+    set.shutdown();
+}
+
+#[test]
+fn mlp_hidden_300_logits_match_quantized_backend_when_sharded() {
+    // The acceptance-criteria model shape: hidden = 300 partitions as
+    // [128, 128, 32, 8, 4] — nothing about it is uniform, and it must
+    // still serve bit-identically through the shard set.
+    let mut r = Rng::seed_from_u64(51);
+    let (din, hidden, classes, batch) = (12usize, 300usize, 4usize, 3usize);
+    let mlp = Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.3),
+        vec![0.0; hidden],
+        vec![0.06; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.3),
+        vec![0.0; classes],
+    );
+    assert_eq!(
+        mlp.bwht.transform_blocks().to_vec(),
+        vec![128usize, 128, 32, 8, 4]
+    );
+    let tile = required_tile(mlp.bwht.transform_blocks()).unwrap();
+    assert_eq!(tile, 128);
+    let x = sample(batch * din, 52);
+    let want = mlp.forward(
+        &x,
+        batch,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 2,
+        coordinator: CoordinatorConfig {
+            tile_n: tile,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let got = {
+        let mut executor = Sharded::new(&mut set);
+        mlp.forward_with(&mut executor, &x, batch, 0).unwrap()
+    };
+    assert_eq!(got, want, "hidden-300 sharded logits");
+    set.shutdown();
 }
 
 #[test]

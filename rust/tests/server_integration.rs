@@ -500,6 +500,83 @@ fn infer_endpoint_serves_logits_bit_identical_to_quantized_backend() {
 }
 
 #[test]
+fn infer_serves_non_power_of_two_hidden_width_through_shards() {
+    // ISSUE-4 acceptance: an MLP with hidden = 300 (BWHT partition
+    // [128, 128, 32, 8, 4] — nothing uniform about it) must serve on a
+    // 2-shard server with no tile/width alignment rejection, and the
+    // logits must be bit-identical to Backend::Quantized.
+    let mut r = Rng::seed_from_u64(4242);
+    let (din, hidden, classes) = (8usize, 300usize, 3usize);
+    let mlp = Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.4),
+        vec![0.0; hidden],
+        vec![0.05; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.4),
+        vec![0.0; classes],
+    );
+    assert_eq!(
+        mlp.bwht.transform_blocks().to_vec(),
+        vec![128usize, 128, 32, 8, 4]
+    );
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: 2,
+        model: Some(mlp.clone()),
+        ..Default::default()
+    })
+    .expect("a mixed-partition model must start cleanly");
+    let addr = server.addr;
+
+    // Single sample.
+    let mut rng = Rng::seed_from_u64(4300);
+    let x: Vec<f32> = (0..din).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let (status, body) = post_json(addr, "/v1/infer", &format!("{{\"x\":{}}}", json_row(&x)));
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    let logits = parse_f32s(parsed.get("logits").expect("logits"));
+    let want = mlp.forward(
+        &x,
+        1,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+    assert_eq!(logits, want, "hidden-300 logits must be bit-identical");
+
+    // A batch of three rows.
+    let xs: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..din).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+        .collect();
+    let rows: Vec<String> = xs.iter().map(|r| json_row(r)).collect();
+    let (status, body) = post_json(addr, "/v1/infer", &format!("{{\"x\":[{}]}}", rows.join(",")));
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    let rows_out = parsed.get("logits").and_then(Json::as_arr).expect("rows");
+    let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+    let want = mlp.forward(
+        &flat,
+        3,
+        Backend::Quantized { bits: 8 },
+        &mut Rng::seed_from_u64(0),
+    );
+    for (i, row) in rows_out.iter().enumerate() {
+        assert_eq!(
+            parse_f32s(row),
+            want[i * classes..(i + 1) * classes].to_vec(),
+            "batch row {i}"
+        );
+    }
+
+    let (status, metrics) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_eq!(metric_value(&metrics, "repro_shards_healthy"), 2.0, "{metrics}");
+    assert!(metric_value(&metrics, "repro_infer_samples_total") >= 4.0);
+    server.shutdown();
+}
+
+#[test]
 fn infer_without_a_model_is_503() {
     let server = Server::start(ServerConfig {
         listen: "127.0.0.1:0".to_string(),

@@ -3,10 +3,15 @@
 //! across random widths (including ones that don't divide evenly into
 //! tiles or shards), shard counts, and early-termination thresholds —
 //! and must survive shard poisoning by shedding load to siblings.
+//! Planned (mixed-partition) routing must additionally match the
+//! whole-width golden model bit-for-bit when scales are pinned.
 
+use repro::bitplane::QuantBwht;
 use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use repro::quant::Quantizer;
 use repro::shard::{router, ShardSet, ShardSetConfig};
 use repro::util::rng::Rng;
+use repro::wht;
 
 fn sample_request(width: usize, rng: &mut Rng, threshold_mode: usize) -> TransformRequest {
     let x: Vec<f32> = (0..width)
@@ -110,6 +115,55 @@ fn sharded_batches_match_singles_with_mixed_widths() {
     let outs = router::transform_batch(&mut set, &reqs).unwrap();
     assert_eq!(outs, goldens);
     set.shutdown();
+}
+
+/// Planned routing over mixed BWHT partitions (ISSUE-4 acceptance):
+/// non-power-of-two widths scatter their heterogeneous blocks across
+/// shards, the narrow blocks run under sub-tile masking, and the result
+/// is bit-identical to the whole-width golden model when the global
+/// quantization scale is pinned.
+#[test]
+fn planned_mixed_partitions_are_bit_identical_across_shard_counts() {
+    let mut rng = Rng::seed_from_u64(600);
+    for &width in &[20usize, 68, 300, 1040] {
+        let blocks = wht::bwht_blocks(width, 128);
+        assert!(
+            blocks.windows(2).any(|w| w[0] != w[1]) || blocks.len() == 1,
+            "width {width} should exercise a mixed partition: {blocks:?}"
+        );
+        let tile = *blocks.iter().max().unwrap();
+        let x: Vec<f32> = (0..width)
+            .map(|_| rng.uniform_range(-1.5, 1.5) as f32)
+            .collect();
+        let req = TransformRequest {
+            thresholds_units: vec![0.0; width],
+            scale: Some(Quantizer::new(8).scale_for(&x)),
+            x,
+        };
+        let golden = QuantBwht::new(width, 128, 8).transform(&req.x);
+        for shards in [1usize, 2, 4] {
+            let mut set = ShardSet::new(ShardSetConfig {
+                shards,
+                coordinator: CoordinatorConfig {
+                    tile_n: tile,
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap();
+            let outs =
+                router::transform_batch_planned(&mut set, &blocks, std::slice::from_ref(&req))
+                    .unwrap();
+            assert_eq!(outs[0], golden, "width={width} shards={shards}");
+            assert_eq!(outs[0].len(), width, "planned outputs are unpadded");
+            let m = set.metrics();
+            assert_eq!(
+                m.cycles.total_elements, width as u64,
+                "masked rows must not be billed (width {width})"
+            );
+            set.shutdown();
+        }
+    }
 }
 
 /// Early termination accounting survives the scatter: merged row-cycles
