@@ -1,0 +1,201 @@
+//! Bitplane-engine microbenchmark (ISSUE 5): the pre-PR allocation-bound
+//! per-sample scheduling loop vs the zero-allocation batch-fused engine
+//! ([`repro::coordinator::schedule_batch`]).
+//!
+//! The baseline is the old `schedule_block` inner loop reproduced
+//! verbatim: it materializes the full `Vec<Vec<i8>>` plane stack per
+//! request, `collect()`s a fresh readout vector per plane, and burns a
+//! branch on terminated rows every plane.  The batched path streams
+//! planes through a per-worker [`ScratchArena`] with live-row compaction
+//! and hoists quantizer/row-map setup out of the per-sample loop.
+//!
+//! Grid: widths 16/64/256 × bits 4/8 × early termination off/on, one
+//! digital tile, batch of 32 samples.  A bit-identity gate runs before
+//! any timing.  Emits `BENCH_scheduler.json` (results + per-config
+//! speedups) and **exits non-zero if the headline batched case
+//! (256-wide, 8-bit, ET off) is slower than the per-sample baseline** —
+//! the CI sanity gate.
+
+use repro::bitplane::early_term::{Decision, EarlyTerminator};
+use repro::coordinator::{schedule_batch, ScratchArena, Tile, TileKind, TilePlan, TransformRequest};
+use repro::quant::Quantizer;
+use repro::util::bench::{bench, black_box, header, write_json, BenchResult};
+use repro::util::rng::Rng;
+
+/// The pre-PR `schedule_block` hot loop, kept verbatim as the baseline
+/// (per-request plane-stack materialization, per-plane readout
+/// collection, per-plane branch on dead rows).
+fn legacy_schedule_block(
+    tile: &mut Tile,
+    x: &[f32],
+    bits: u32,
+    thresholds_units: &[f64],
+    scale: Option<f32>,
+    rows: &[usize],
+) -> Vec<f32> {
+    let n = tile.n();
+    let b = x.len();
+    let quantizer = Quantizer::new(bits);
+    let q = match scale {
+        Some(s) => quantizer.quantize_with_scale(x, s),
+        None => quantizer.quantize(x),
+    };
+    if tile.is_digital() && q.q.iter().all(|&v| v == 0) {
+        return vec![0.0; b];
+    }
+    let planes: Vec<Vec<i8>> = (0..bits).rev().map(|p| q.bitplane(p)).collect();
+    let mut terminators: Vec<EarlyTerminator> = thresholds_units
+        .iter()
+        .map(|&t| EarlyTerminator::new(bits, t))
+        .collect();
+    let mut live: Vec<bool> = vec![true; b];
+    let mut done_value: Vec<i64> = vec![0; b];
+    let mut padded = vec![0i8; if b < n { n } else { 0 }];
+    let identity = b == n && rows.iter().enumerate().all(|(i, &r)| i == r);
+    for plane in &planes {
+        if !live.iter().any(|&l| l) {
+            break;
+        }
+        let obits = if identity {
+            tile.execute_bitplane(plane)
+        } else if b == n {
+            tile.execute_bitplane_rows(plane, rows)
+        } else {
+            padded[..b].copy_from_slice(plane);
+            tile.execute_bitplane_rows(&padded, rows)
+        };
+        for i in 0..b {
+            if !live[i] {
+                continue;
+            }
+            match terminators[i].step(obits[i]) {
+                Decision::Continue => {}
+                Decision::TerminateZero => {
+                    live[i] = false;
+                    done_value[i] = 0;
+                }
+                Decision::Complete => {
+                    live[i] = false;
+                    let v = terminators[i].running();
+                    done_value[i] = if (v.unsigned_abs() as f64) <= thresholds_units[i] {
+                        0
+                    } else {
+                        v
+                    };
+                }
+            }
+        }
+    }
+    done_value.iter().map(|&v| v as f32 * q.scale).collect()
+}
+
+fn main() {
+    header("scheduler");
+    let batch = 32usize;
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    for &width in &[16usize, 64, 256] {
+        for &bits in &[4u32, 8] {
+            for &(et_name, frac) in &[("off", 0.0f64), ("on", 0.5)] {
+                let t_units = frac * (((1u32 << bits) - 1) as f64);
+                let plan = TilePlan::new(width, &[width]).expect("full-tile plan");
+                let rows: Vec<usize> = (0..width).collect();
+                let mut r = Rng::seed_from_u64(width as u64 * 31 + bits as u64);
+                let reqs: Vec<TransformRequest> = (0..batch)
+                    .map(|_| {
+                        let x: Vec<f32> = (0..width)
+                            .map(|_| r.uniform_range(-1.0, 1.0) as f32)
+                            .collect();
+                        TransformRequest {
+                            thresholds_units: vec![t_units; width],
+                            scale: None,
+                            x,
+                        }
+                    })
+                    .collect();
+
+                // Bit-identity gate before any timing.
+                let mut t_legacy = Tile::new(width, &TileKind::Digital, 0);
+                let legacy_out: Vec<Vec<f32>> = reqs
+                    .iter()
+                    .map(|q| {
+                        legacy_schedule_block(
+                            &mut t_legacy,
+                            &q.x,
+                            bits,
+                            &q.thresholds_units,
+                            q.scale,
+                            &rows,
+                        )
+                    })
+                    .collect();
+                let mut t_batch = Tile::new(width, &TileKind::Digital, 0);
+                let mut arena = ScratchArena::new();
+                let gate = schedule_batch(&mut t_batch, &plan, &reqs, bits, &mut arena);
+                assert_eq!(
+                    gate.values,
+                    legacy_out,
+                    "bit-identity gate failed: w{width} b{bits} et_{et_name}"
+                );
+                // Planes actually issued per batch (== legacy's count; the
+                // throughput denominator with ET on).
+                let planes = gate.planes_issued as f64;
+
+                let r_legacy = bench(&format!("per-sample w{width} b{bits} et_{et_name}"), || {
+                    for q in &reqs {
+                        let y = legacy_schedule_block(
+                            &mut t_legacy,
+                            &q.x,
+                            bits,
+                            &q.thresholds_units,
+                            q.scale,
+                            &rows,
+                        );
+                        black_box(y);
+                    }
+                });
+                r_legacy.report_throughput(planes, "plane");
+                let r_batch = bench(&format!("batch-fused w{width} b{bits} et_{et_name}"), || {
+                    let y = schedule_batch(&mut t_batch, &plan, &reqs, bits, &mut arena);
+                    black_box(y);
+                });
+                r_batch.report_throughput(planes, "plane");
+
+                let speedup = r_legacy.mean.as_secs_f64() / r_batch.mean.as_secs_f64();
+                println!("  -> w{width} b{bits} et_{et_name}: batch-fused {speedup:.2}x");
+                derived.push((format!("speedup_w{width}_b{bits}_et_{et_name}"), speedup));
+                results.push(r_legacy);
+                results.push(r_batch);
+            }
+        }
+    }
+
+    let headline = derived
+        .iter()
+        .find(|(n, _)| n == "speedup_w256_b8_et_off")
+        .map(|(_, v)| *v)
+        .expect("headline config ran");
+    derived.push(("batched_headline_speedup".to_string(), headline));
+
+    let mut derived_refs: Vec<(&str, f64)> = Vec::with_capacity(derived.len());
+    for (name, value) in &derived {
+        derived_refs.push((name.as_str(), *value));
+    }
+    let path = "BENCH_scheduler.json";
+    match write_json(path, "scheduler", &results, &derived_refs) {
+        Ok(()) => println!("baseline written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // CI sanity gate: the batched engine must never be slower than the
+    // per-sample baseline on the headline case.
+    if headline < 1.0 {
+        eprintln!(
+            "FAIL: batch-fused engine is slower than the per-sample baseline \
+             (headline speedup {headline:.2}x < 1.0x)"
+        );
+        std::process::exit(1);
+    }
+    println!("headline (w256 b8 et_off): {headline:.2}x — gate >= 1.0x passed");
+}

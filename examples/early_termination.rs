@@ -25,8 +25,11 @@ fn main() {
     let t_units = 120.0;
     println!("tracing output element 5 with |T| = {t_units} comparator units:");
     let mut et = EarlyTerminator::new(8, t_units);
-    for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
-        let obit = comparator(eng.plane_psums(plane)[5]);
+    let mut plane = vec![0i8; 16];
+    let mut planes = q.planes_msb_first();
+    let mut p = 0usize;
+    while planes.next_into(&mut plane).is_some() {
+        let obit = comparator(eng.plane_psums(&plane)[5]);
         let d = et.step(obit);
         let (lb, ub) = et.bounds();
         println!(
@@ -36,6 +39,7 @@ fn main() {
         if d != repro::bitplane::early_term::Decision::Continue {
             break;
         }
+        p += 1;
     }
 
     // ---- Fig. 9(c): 10,000 random cases ----
@@ -47,19 +51,17 @@ fn main() {
             let x: Vec<f32> = (0..16).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
             let row: Vec<i8> = (0..16).map(|_| if rng.coin() { 1 } else { -1 }).collect();
             let q = Quantizer::new(8).quantize(&x);
-            let obits: Vec<i8> = q
-                .bitplanes_msb_first()
-                .iter()
-                .map(|plane| {
-                    comparator(
-                        plane
-                            .iter()
-                            .zip(&row)
-                            .map(|(&p, &w)| p as i64 * w as i64)
-                            .sum(),
-                    )
-                })
-                .collect();
+            let mut plane = vec![0i8; 16];
+            let mut planes = q.planes_msb_first();
+            let mut obits: Vec<i8> = Vec::with_capacity(8);
+            while planes.next_into(&mut plane).is_some() {
+                let psum: i64 = plane
+                    .iter()
+                    .zip(&row)
+                    .map(|(&p, &w)| p as i64 * w as i64)
+                    .sum();
+                obits.push(comparator(psum));
+            }
             let t = sample_threshold(&mut rng, dist, 1.0).abs() * 255.0;
             stats.record(&run_element(&obits, 8, t));
         }

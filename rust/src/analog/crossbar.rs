@@ -166,31 +166,46 @@ impl Crossbar {
     /// Returns one comparator bit per row.  `rng` supplies the thermal
     /// noise of step 4 (offset and Vth mismatch are instance-fixed).
     pub fn execute_bitplane(&self, input: &[i8], rng: &mut Rng) -> Vec<i8> {
-        let diffs = self.differential(input);
+        let mut diffs = Vec::with_capacity(self.config.n);
+        let mut out = vec![0i8; self.config.n];
+        self.execute_bitplane_into(input, rng, &mut diffs, &mut out);
+        out
+    }
+
+    /// [`Self::execute_bitplane`] through caller scratch: `diffs` holds
+    /// the per-row differentials (capacity retained across planes), `out`
+    /// receives one comparator bit per row.  Thermal-noise draws happen
+    /// in the same row order under the same ±6σ skip rule, so the RNG
+    /// stream is byte-identical to the allocating variant.
+    pub fn execute_bitplane_into(
+        &self,
+        input: &[i8],
+        rng: &mut Rng,
+        diffs: &mut Vec<f64>,
+        out: &mut [i8],
+    ) {
+        self.differential_into(input, diffs);
+        assert_eq!(out.len(), self.config.n, "readout must cover every row");
         let sigma = self.config.sigma_thermal;
         // PERF: thermal noise can only flip a decision within ~6σ of the
         // trip point; beyond that the comparator outcome is deterministic
         // (flip probability < 1e-9), so skip the Box–Muller draw.
         let det_margin = 6.0 * sigma;
-        diffs
-            .iter()
-            .enumerate()
-            .map(|(i, &d)| {
-                let v0 = d + self.comparator_offset[i];
-                let v = if v0.abs() > det_margin {
-                    v0
-                } else {
-                    v0 + rng.normal(0.0, sigma)
-                };
-                if v > 0.0 {
-                    1
-                } else if v < 0.0 {
-                    -1
-                } else {
-                    0
-                }
-            })
-            .collect()
+        for (i, (o, &d)) in out.iter_mut().zip(diffs.iter()).enumerate() {
+            let v0 = d + self.comparator_offset[i];
+            let v = if v0.abs() > det_margin {
+                v0
+            } else {
+                v0 + rng.normal(0.0, sigma)
+            };
+            *o = if v > 0.0 {
+                1
+            } else if v < 0.0 {
+                -1
+            } else {
+                0
+            };
+        }
     }
 
     /// Steps 1-3: per-row differential voltage SL − SLB before comparison.
@@ -202,20 +217,27 @@ impl Crossbar {
     /// folded into `signed_drop` the row sum is a 3-way-select accumulate
     /// over precomputed constants — no exp() in the hot loop.
     pub fn differential(&self, input: &[i8]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.config.n);
+        self.differential_into(input, &mut out);
+        out
+    }
+
+    /// [`Self::differential`] into a caller buffer (cleared, then filled).
+    pub fn differential_into(&self, input: &[i8], out: &mut Vec<f64>) {
         let n = self.config.n;
         assert_eq!(input.len(), n, "input length must equal array dim");
         let scale = self.merge_scale;
-        (0..n)
-            .map(|i| {
-                let row = &self.signed_drop[i * n..(i + 1) * n];
-                let mut diff = 0.0f64;
-                for (&drop, &x) in row.iter().zip(input) {
-                    // x ∈ {-1, 0, +1}
-                    diff += x as f64 * drop;
-                }
-                diff * scale
-            })
-            .collect()
+        out.clear();
+        out.reserve(n);
+        for i in 0..n {
+            let row = &self.signed_drop[i * n..(i + 1) * n];
+            let mut diff = 0.0f64;
+            for (&drop, &x) in row.iter().zip(input) {
+                // x ∈ {-1, 0, +1}
+                diff += x as f64 * drop;
+            }
+            out.push(diff * scale);
+        }
     }
 
     /// Ideal (mismatch-free, noise-free) integer PSUM for reference.

@@ -42,19 +42,26 @@ impl NoiseModel {
     /// Inject into a whole PSUM vector, then re-quantize with the
     /// comparator (`sign`), exactly as the hardware digitizes (Fig. 6).
     pub fn perturb_and_compare(&self, psums: &[i64], rng: &mut Rng) -> Vec<i8> {
-        psums
-            .iter()
-            .map(|&p| {
-                let v = self.perturb(p as f64, rng);
-                if v > 0.0 {
-                    1
-                } else if v < 0.0 {
-                    -1
-                } else {
-                    0
-                }
-            })
-            .collect()
+        let mut out = vec![0i8; psums.len()];
+        self.perturb_and_compare_into(psums, rng, &mut out);
+        out
+    }
+
+    /// [`Self::perturb_and_compare`] into a caller scratch slice.  Draws
+    /// one noise sample per PSUM in input order, so the RNG stream is
+    /// byte-identical to the allocating variant.
+    pub fn perturb_and_compare_into(&self, psums: &[i64], rng: &mut Rng, out: &mut [i8]) {
+        assert_eq!(psums.len(), out.len(), "readout buffer must match PSUMs");
+        for (o, &p) in out.iter_mut().zip(psums) {
+            let v = self.perturb(p as f64, rng);
+            *o = if v > 0.0 {
+                1
+            } else if v < 0.0 {
+                -1
+            } else {
+                0
+            };
+        }
     }
 
     /// Probability that a PSUM of magnitude `m` flips sign under this

@@ -315,18 +315,17 @@ mod tests {
                     .collect();
                 let row: Vec<i8> = (0..n).map(|_| if rng.coin() { 1 } else { -1 }).collect();
                 let q = crate::quant::Quantizer::new(bits).quantize(&x);
-                let obits: Vec<i8> = q
-                    .bitplanes_msb_first()
-                    .iter()
-                    .map(|plane| {
-                        let psum: i64 = plane
-                            .iter()
-                            .zip(&row)
-                            .map(|(&p, &w)| p as i64 * w as i64)
-                            .sum();
-                        crate::bitplane::comparator(psum)
-                    })
-                    .collect();
+                let mut plane = vec![0i8; n];
+                let mut planes = q.planes_msb_first();
+                let mut obits: Vec<i8> = Vec::with_capacity(bits as usize);
+                while planes.next_into(&mut plane).is_some() {
+                    let psum: i64 = plane
+                        .iter()
+                        .zip(&row)
+                        .map(|(&p, &w)| p as i64 * w as i64)
+                        .sum();
+                    obits.push(crate::bitplane::comparator(psum));
+                }
                 // PSUM units: T scaled to the recombination range (max 255).
                 let t = sample_threshold(rng, dist, 1.0) * 255.0;
                 stats.record(&run_element(&obits, bits, t.abs()));

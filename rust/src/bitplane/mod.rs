@@ -84,16 +84,17 @@ impl QuantBwht {
     pub fn trace(&self, x: &[f32]) -> PlaneTrace {
         assert_eq!(x.len(), self.padded_dim(), "input must be padded");
         let q: Quantized = self.quantizer.quantize(x);
-        let obits = q
-            .bitplanes_msb_first()
-            .iter()
-            .map(|plane| {
-                self.plane_psums(plane)
+        let mut plane = vec![0i8; x.len()];
+        let mut planes = q.planes_msb_first();
+        let mut obits = Vec::with_capacity(self.quantizer.bits as usize);
+        while planes.next_into(&mut plane).is_some() {
+            obits.push(
+                self.plane_psums(&plane)
                     .into_iter()
                     .map(comparator)
-                    .collect()
-            })
-            .collect();
+                    .collect(),
+            );
+        }
         PlaneTrace {
             obits,
             scale: q.scale,

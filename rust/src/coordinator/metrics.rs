@@ -208,6 +208,34 @@ impl Metrics {
         self.latency.record(elapsed);
     }
 
+    /// Fold one executed job (a batch of `requests` same-partition
+    /// samples that took `elapsed` of worker busy time) into the
+    /// counters.  The latency histogram gets one sample per request, at
+    /// the job's full busy time — every request in a chunk completes
+    /// when the chunk does, so that IS the service latency each one
+    /// observed — keeping histogram counts aligned with the request
+    /// counter and quantiles request-meaningful.  `busy` accumulates
+    /// the elapsed time once (worker utilization, not per-request
+    /// waiting).  Shared by the worker-local and pool-shared accounting
+    /// so the two cannot drift.
+    pub fn record_job(
+        &mut self,
+        stats: &CycleStats,
+        planes_issued: u32,
+        row_cycles: u64,
+        requests: usize,
+        elapsed: Duration,
+    ) {
+        self.cycles.merge(stats);
+        self.planes_issued += planes_issued as u64;
+        self.row_cycles += row_cycles;
+        self.requests += requests as u64;
+        self.busy += elapsed;
+        for _ in 0..requests {
+            self.latency.record(elapsed);
+        }
+    }
+
     pub fn merge(&mut self, other: &Metrics) {
         self.cycles.merge(&other.cycles);
         self.planes_issued += other.planes_issued;

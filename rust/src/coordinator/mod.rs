@@ -24,5 +24,8 @@ pub mod tile;
 pub use metrics::{LatencyHistogram, Metrics};
 pub use plan::{required_tile, subtile_rows, BlockSlot, TilePlan};
 pub use pool::{CompletedTransform, Coordinator, CoordinatorConfig, TransformRequest};
-pub use scheduler::{schedule_block, schedule_transform, TransformOutcome};
+pub use scheduler::{
+    schedule_batch, schedule_block, schedule_transform, BatchOutcome, ScratchArena,
+    TransformOutcome,
+};
 pub use tile::{Tile, TileKind};

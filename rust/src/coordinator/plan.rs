@@ -72,6 +72,17 @@ pub struct BlockSlot {
     pub width: usize,
     /// Tile output rows carrying this block's outputs, logical order.
     pub rows: Arc<Vec<usize>>,
+    /// Whether this block fills the tile with the identity row map —
+    /// cached at plan construction so the scheduler's per-block hot path
+    /// takes the direct full-width readout without re-scanning `rows`
+    /// on every call (PERF: the `enumerate().all()` re-derivation used
+    /// to run inside every `schedule_block`).
+    pub identity: bool,
+}
+
+/// Whether `rows` maps a full-width block onto the tile unchanged.
+fn is_identity(tile_n: usize, width: usize, rows: &[usize]) -> bool {
+    width == tile_n && rows.iter().enumerate().all(|(i, &r)| i == r)
 }
 
 /// A request's block partition resolved against a pool's tile geometry:
@@ -108,10 +119,13 @@ impl TilePlan {
                      pool with tile_n >= {b} (partition {blocks:?})"
                 );
             }
+            let rows = subtile_rows(tile_n, b);
+            let identity = is_identity(tile_n, b, &rows);
             slots.push(BlockSlot {
                 offset,
                 width: b,
-                rows: subtile_rows(tile_n, b),
+                rows,
+                identity,
             });
             offset += b;
         }
@@ -130,11 +144,13 @@ impl TilePlan {
         assert!(width > 0, "cannot plan a zero-width request");
         let nblocks = width.div_ceil(tile_n);
         let rows = subtile_rows(tile_n, tile_n);
+        let identity = is_identity(tile_n, tile_n, &rows);
         let slots = (0..nblocks)
             .map(|i| BlockSlot {
                 offset: i * tile_n,
                 width: tile_n,
                 rows: Arc::clone(&rows),
+                identity,
             })
             .collect();
         TilePlan {
@@ -225,6 +241,16 @@ mod tests {
         assert_eq!(plan.slots()[0].offset, 0);
         assert_eq!(plan.slots()[1].offset, 16);
         assert_eq!(plan.slots()[1].rows.len(), 4);
+    }
+
+    #[test]
+    fn identity_flag_is_cached_per_slot() {
+        let plan = TilePlan::new(16, &[16, 4, 16]).unwrap();
+        assert!(plan.slots()[0].identity, "full-width block is identity");
+        assert!(!plan.slots()[1].identity, "sub-tile block is masked");
+        assert!(plan.slots()[2].identity);
+        let uniform = TilePlan::uniform(32, 64);
+        assert!(uniform.slots().iter().all(|s| s.identity));
     }
 
     #[test]

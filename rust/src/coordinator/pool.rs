@@ -25,7 +25,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
 use super::plan::TilePlan;
-use super::scheduler::schedule_block;
+use super::scheduler::{schedule_batch, ScratchArena};
 use super::tile::{Tile, TileKind};
 use crate::wht;
 
@@ -86,24 +86,27 @@ impl TransformRequest {
     }
 }
 
-/// Internal job: one whole request plus its resolved [`TilePlan`].
+/// Internal job: one or more same-partition requests plus their resolved
+/// [`TilePlan`].
 ///
 /// PERF: jobs were originally one per tile-sized block; the per-job
 /// channel + allocation overhead dominated at small tiles (≈14 µs per
 /// dim-64 request vs ≈11 µs of useful tile work).  One job per request
-/// amortizes the dispatch; the worker walks the plan's blocks on its own
-/// tile (sub-tile blocks run zero-padded with masked output rows).
+/// amortizes the dispatch, and [`Coordinator::transform_batch_planned`]
+/// goes further: one job per *worker chunk* of a whole batch, streamed
+/// through the worker's tile by the batch-fused engine
+/// ([`schedule_batch`]) with quantizer/row-map setup hoisted out of the
+/// per-sample loop.
 struct TileJob {
     request_id: u64,
-    x: Vec<f32>,
-    thresholds: Vec<f64>,
-    scale: Option<f32>,
+    reqs: Vec<TransformRequest>,
     plan: TilePlan,
 }
 
 struct TileResult {
     request_id: u64,
-    values: Vec<f32>,
+    /// One output vector per request in the job, in request order.
+    values: Vec<Vec<f32>>,
     outcome_stats: crate::bitplane::early_term::CycleStats,
     planes_issued: u32,
     row_cycles: u64,
@@ -153,6 +156,9 @@ impl Coordinator {
             let seed = config.seed.wrapping_add(w as u64 * 0x9E37);
             workers.push(std::thread::spawn(move || {
                 let mut tile = Tile::new(tile_n, &kind, seed);
+                // The worker's long-lived scratch: the engine's plane
+                // loop performs no heap allocation in steady state.
+                let mut arena = ScratchArena::new();
                 let mut local = Metrics::new(bits);
                 loop {
                     let job = {
@@ -161,40 +167,21 @@ impl Coordinator {
                     };
                     let Ok(job) = job else { break };
                     let t0 = Instant::now();
-                    let mut values = Vec::with_capacity(job.x.len());
-                    let mut stats =
-                        crate::bitplane::early_term::CycleStats::new(bits);
-                    let mut planes_issued = 0u32;
-                    let mut row_cycles = 0u64;
-                    for slot in job.plan.slots() {
-                        let lo = slot.offset;
-                        let hi = lo + slot.width;
-                        let outcome = schedule_block(
-                            &mut tile,
-                            &job.x[lo..hi],
-                            bits,
-                            &job.thresholds[lo..hi],
-                            job.scale,
-                            &slot.rows,
-                        );
-                        values.extend_from_slice(&outcome.values);
-                        stats.merge(&outcome.stats);
-                        planes_issued += outcome.planes_issued;
-                        row_cycles += outcome.row_cycles;
-                    }
+                    let out = schedule_batch(&mut tile, &job.plan, &job.reqs, bits, &mut arena);
                     let elapsed = t0.elapsed();
-                    local.cycles.merge(&stats);
-                    local.planes_issued += planes_issued as u64;
-                    local.row_cycles += row_cycles;
-                    local.requests += 1;
-                    local.busy += elapsed;
-                    local.latency.record(elapsed);
+                    local.record_job(
+                        &out.stats,
+                        out.planes_issued,
+                        out.row_cycles,
+                        job.reqs.len(),
+                        elapsed,
+                    );
                     let _ = result_tx.send(TileResult {
                         request_id: job.request_id,
-                        values,
-                        outcome_stats: stats,
-                        planes_issued,
-                        row_cycles,
+                        values: out.values,
+                        outcome_stats: out.stats,
+                        planes_issued: out.planes_issued,
+                        row_cycles: out.row_cycles,
                         elapsed,
                     });
                 }
@@ -225,6 +212,23 @@ impl Coordinator {
         self.pending_async
     }
 
+    /// Validate the pool configuration at the submission boundary: a
+    /// misconfigured `bits` (0, or past the quantizer's 16-bitplane
+    /// ceiling) used to surface as a `Quantizer::new` panic deep inside a
+    /// worker thread; now every submission API reports it as a clean
+    /// error instead (mirroring the CLI's up-front `--tile`/`--bits`
+    /// validation).
+    fn validate_config(&self) -> Result<()> {
+        let bits = self.config.bits;
+        if !(1..=16).contains(&bits) {
+            bail!(
+                "pool is configured with bits = {bits}; the sign-magnitude quantizer \
+                 supports 1..=16 magnitude bitplanes"
+            );
+        }
+        Ok(())
+    }
+
     /// Validate a request up front, so malformed input is a clean error
     /// at the submission boundary instead of a worker-side panic.
     fn validate(req: &TransformRequest) -> Result<()> {
@@ -253,6 +257,7 @@ impl Coordinator {
     /// request exactly; blocks narrower than the tile run under sub-tile
     /// masking.
     fn make_job(&mut self, req: &TransformRequest, blocks: Option<&[usize]>) -> Result<TileJob> {
+        self.validate_config()?;
         Self::validate(req)?;
         let (x, thresholds, plan) = match blocks {
             None => {
@@ -280,22 +285,26 @@ impl Coordinator {
         self.next_request += 1;
         Ok(TileJob {
             request_id: id,
-            x,
-            thresholds,
-            scale: req.scale,
+            reqs: vec![TransformRequest {
+                x,
+                thresholds_units: thresholds,
+                scale: req.scale,
+            }],
             plan,
         })
     }
 
-    /// Record one tile result into the shared metrics.
+    /// Record one tile result into the shared metrics (see
+    /// [`Metrics::record_job`] for the batch-job latency semantics).
     fn record(&self, r: &TileResult) {
         let mut m = self.metrics.lock().expect("metrics poisoned");
-        m.cycles.merge(&r.outcome_stats);
-        m.planes_issued += r.planes_issued as u64;
-        m.row_cycles += r.row_cycles;
-        m.requests += 1;
-        m.busy += r.elapsed;
-        m.latency.record(r.elapsed);
+        m.record_job(
+            &r.outcome_stats,
+            r.planes_issued,
+            r.row_cycles,
+            r.values.len(),
+            r.elapsed,
+        );
     }
 
     /// Dispatch jobs and collect exactly `total` results.
@@ -370,11 +379,13 @@ impl Coordinator {
         let mut results = self.dispatch_collect(vec![job])?;
         let r = results.pop().expect("one job, one result");
         assert_eq!(r.request_id, id, "single-flight transform");
-        Ok(r.values)
+        Ok(r.values.into_iter().next().expect("one request per job"))
     }
 
     /// Execute a batch of requests, pipelining all jobs across the pool
-    /// before collecting (the batcher path).
+    /// before collecting (the batcher path).  Requests may have
+    /// different widths; each is padded to whole `tile_n` blocks
+    /// independently.
     pub fn transform_batch(&mut self, reqs: &[TransformRequest]) -> Result<Vec<Vec<f32>>> {
         self.ensure_no_pending_async()?;
         let base = self.next_request;
@@ -386,7 +397,81 @@ impl Coordinator {
         let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
         for r in results {
             let req_idx = (r.request_id - base) as usize;
-            outs[req_idx] = r.values;
+            outs[req_idx] = r.values.into_iter().next().expect("one request per job");
+        }
+        Ok(outs)
+    }
+
+    /// Execute a whole batch of same-partition requests through the
+    /// batch-fused engine: the batch is split into contiguous
+    /// multi-sample chunks (up to 4x the worker count, so skewed batches
+    /// load-balance across the pool), each chunk streams through one
+    /// tile as a single job ([`schedule_batch`] — quantizer
+    /// construction, row-map lookups and the identity-row decision
+    /// hoisted out of the per-sample loop, no per-plane allocation), and
+    /// outputs come back in request order at the partition's exact
+    /// width.
+    ///
+    /// This is the [`crate::exec::Pooled`] executor's path.  On digital
+    /// tiles it is bit-identical to submitting every request on its own
+    /// (and to [`crate::nn::Backend::Quantized`] with pinned scales).
+    pub fn transform_batch_planned(
+        &mut self,
+        reqs: &[TransformRequest],
+        blocks: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.ensure_no_pending_async()?;
+        self.validate_config()?;
+        let plan = TilePlan::new(self.config.tile_n, blocks)?;
+        for req in reqs {
+            Self::validate(req)?;
+            if req.x.len() != plan.width() {
+                bail!(
+                    "request is {} wide, but the block partition {blocks:?} covers {}",
+                    req.x.len(),
+                    plan.width()
+                );
+            }
+        }
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // More chunks than workers (4x) so a skewed batch load-balances:
+        // early-terminating chunks finish fast and their workers pull
+        // the next queued chunk instead of idling behind one expensive
+        // contiguous run; each chunk still amortizes per-plan setup over
+        // several samples.
+        let chunks = (self.config.workers * 4).min(reqs.len());
+        let chunk_base = reqs.len() / chunks;
+        let extra = reqs.len() % chunks;
+        let base_id = self.next_request;
+        let mut jobs = Vec::with_capacity(chunks);
+        let mut chunk_starts = Vec::with_capacity(chunks);
+        let mut off = 0usize;
+        for c in 0..chunks {
+            let take = chunk_base + usize::from(c < extra);
+            let id = self.next_request;
+            self.next_request += 1;
+            // One clone per request, total: the data has to cross the
+            // worker thread boundary owned, and the executor trait hands
+            // us a borrow — an Arc<[_]> handoff would copy the same
+            // bytes once to build the Arc.
+            jobs.push(TileJob {
+                request_id: id,
+                reqs: reqs[off..off + take].to_vec(),
+                plan: plan.clone(),
+            });
+            chunk_starts.push(off);
+            off += take;
+        }
+        let results = self.dispatch_collect(jobs)?;
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
+        for r in results {
+            let chunk = (r.request_id - base_id) as usize;
+            let start = chunk_starts[chunk];
+            for (k, v) in r.values.into_iter().enumerate() {
+                outs[start + k] = v;
+            }
         }
         Ok(outs)
     }
@@ -459,7 +544,11 @@ impl Coordinator {
         self.pending_async = self.pending_async.saturating_sub(1);
         Ok(CompletedTransform {
             request_id: r.request_id,
-            values: r.values,
+            values: r
+                .values
+                .into_iter()
+                .next()
+                .expect("async submissions carry one request per job"),
             busy: r.elapsed,
         })
     }
@@ -659,6 +748,88 @@ mod tests {
         assert!(m.row_cycles < 16 * 8);
         assert!(m.average_cycles() < 2.0);
         c.shutdown();
+    }
+
+    #[test]
+    fn batch_planned_matches_per_request_planned() {
+        // The chunked batch-fused path must be bit-identical to planned
+        // per-request submission, mixed partition + pinned scale included
+        // (20 requests on a 4-worker pool -> 16 chunks, some multi-sample).
+        let blocks = [16usize, 4];
+        let reqs: Vec<TransformRequest> = (0..20)
+            .map(|i| {
+                let x = sample(20, 300 + i);
+                TransformRequest {
+                    thresholds_units: vec![2.0; 20],
+                    scale: Some(crate::quant::Quantizer::new(8).scale_for(&x)),
+                    x,
+                }
+            })
+            .collect();
+        let mut c1 = Coordinator::new(CoordinatorConfig::default());
+        let batched = c1.transform_batch_planned(&reqs, &blocks).unwrap();
+        let mut c2 = Coordinator::new(CoordinatorConfig::default());
+        for (i, req) in reqs.iter().enumerate() {
+            let single = c2.transform_planned(req, &blocks).unwrap();
+            assert_eq!(batched[i], single, "request {i}");
+        }
+        assert_eq!(
+            c1.metrics().cycles.total_elements,
+            c2.metrics().cycles.total_elements,
+            "batched accounting must bill the same logical rows"
+        );
+        c1.shutdown();
+        c2.shutdown();
+    }
+
+    #[test]
+    fn batch_planned_handles_more_requests_than_workers_and_empty_batches() {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        assert!(c.transform_batch_planned(&[], &[16]).unwrap().is_empty());
+        let reqs: Vec<TransformRequest> = (0..5)
+            .map(|i| TransformRequest::plain(sample(16, 400 + i)))
+            .collect();
+        let outs = c.transform_batch_planned(&reqs, &[16]).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            let golden = QuantBwht::new(16, 128, 8).transform(&req.x);
+            assert_eq!(outs[i], golden, "request {i}");
+        }
+        assert_eq!(c.metrics().requests, 5);
+        c.shutdown();
+    }
+
+    #[test]
+    fn invalid_bits_is_a_clean_submission_error_at_both_bounds() {
+        // bits = 0 and an absurd bits = 64 used to panic inside a worker
+        // thread (`Quantizer::new`); both must now fail at submission
+        // with a clean error on every API, and the pool must stay alive.
+        for bits in [0u32, 64] {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                bits,
+                ..Default::default()
+            });
+            let req = TransformRequest::plain(sample(16, 500 + bits as u64));
+            let err = c.transform(&req).unwrap_err();
+            assert!(err.to_string().contains("1..=16"), "bits={bits}: {err}");
+            assert!(c.submit(&req).is_err(), "bits={bits}: submit");
+            assert!(c.try_submit(&req).is_err(), "bits={bits}: try_submit");
+            let batch = c.transform_batch_planned(std::slice::from_ref(&req), &[16]);
+            assert!(batch.is_err(), "bits={bits}: batch planned");
+            c.shutdown();
+        }
+        // The bounds themselves are valid.
+        for bits in [1u32, 16] {
+            let mut c = Coordinator::new(CoordinatorConfig {
+                bits,
+                ..Default::default()
+            });
+            let req = TransformRequest::plain(sample(16, 600 + bits as u64));
+            assert_eq!(c.transform(&req).unwrap().len(), 16, "bits={bits}");
+            c.shutdown();
+        }
     }
 
     #[test]

@@ -6,10 +6,37 @@
 //! (its comparator and recombination logic are gated off).  The *tile*
 //! keeps issuing planes while any row is live — mirroring the per-element
 //! cycle accounting of Fig. 9(c).
+//!
+//! # The zero-allocation batch-fused engine
+//!
+//! The original inner loop was allocation-bound: every request
+//! materialized its full `Vec<Vec<i8>>` plane stack, every plane
+//! `collect()`ed a fresh readout vector, and terminated rows still burned
+//! a branch per plane.  The engine now runs out of a per-worker
+//! [`ScratchArena`]: planes are streamed straight from the quantized
+//! integers into a reusable scratch slice ([`crate::quant::plane_into`]),
+//! readouts land in reusable buffers
+//! ([`crate::coordinator::tile::Tile::execute_bitplane_rows_into`]), and
+//! **live-row compaction** keeps a dense list of still-live logical rows
+//! — on the digital model only those rows' comparators are evaluated, so
+//! a terminated row costs zero work per plane instead of a branch.
+//! Noisy/analog tiles keep full-width execution per plane (every
+//! physical row exists electrically), so their RNG streams stay
+//! plan- and termination-independent.
+//!
+//! [`schedule_batch`] additionally fuses a whole batch of same-partition
+//! samples on one tile: quantizer construction, `subtile_rows` lookups
+//! and the identity-row decision are hoisted out of the per-sample loop,
+//! and on the digital path the batch runs *plane-major* (every sample's
+//! plane `b` executes before any sample's plane `b-1`).  Noisy/analog
+//! batches run sample-major so the tile's RNG stream is byte-identical
+//! to submitting the same samples as individual jobs.
 
 use crate::bitplane::early_term::{CycleStats, Decision, EarlyTerminator, ElementOutcome};
-use crate::quant::Quantizer;
+use crate::quant::{plane_into, Quantizer};
 
+use super::plan::TilePlan;
+use super::pool::TransformRequest;
 use super::tile::Tile;
 
 /// Result of one full vector transform on a tile.
@@ -23,6 +50,111 @@ pub struct TransformOutcome {
     pub planes_issued: u32,
     /// Sum over rows of executed row-cycles (the energy-relevant count).
     pub row_cycles: u64,
+}
+
+/// Result of one batched job: a whole batch of same-partition samples
+/// executed on one tile via [`schedule_batch`].
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// Per-sample outputs at the plan's width, in request order.
+    pub values: Vec<Vec<f32>>,
+    /// Cycle statistics merged over every (sample, block) element.
+    pub stats: CycleStats,
+    /// Bitplane operations issued across the whole batch.
+    pub planes_issued: u32,
+    /// Row-cycles executed across the whole batch.
+    pub row_cycles: u64,
+}
+
+/// Reusable per-worker scratch for the bitplane engine: every buffer the
+/// plane loop touches, allocated once and recycled across jobs, so the
+/// steady-state scheduling loop performs **no heap allocation** — `clear`
+/// + `push`/`extend` retain capacity, and nothing inside the plane loop
+/// constructs a `Vec`.
+///
+/// Per-element buffers are laid out flat with a stride of the block
+/// width, so one arena serves a whole batch of samples at once (the
+/// plane-major digital path of [`schedule_batch`]).
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Quantized integers, one block-width segment per sample.
+    q: Vec<i32>,
+    /// Quantization scale actually used, per sample.
+    scales: Vec<f32>,
+    /// Zero-padded plane streamed into the tile (tile width).
+    plane: Vec<i8>,
+    /// Readout bits of one plane's live rows.
+    obits: Vec<i8>,
+    /// Early-termination state per logical element.
+    terminators: Vec<EarlyTerminator>,
+    /// Dense live lists (physical tile row + logical element index),
+    /// segmented per sample; compacted in place as rows terminate.
+    live_rows: Vec<usize>,
+    live_idx: Vec<usize>,
+    /// Live-segment length per sample.
+    live_len: Vec<usize>,
+    /// Recombined value in comparator units, per element.
+    done_value: Vec<i64>,
+    /// Cycles consumed / terminated-early flag, per element.
+    cycles: Vec<u32>,
+    terminated: Vec<bool>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Reset every per-element buffer, retaining capacity.
+    fn reset(&mut self, tile_n: usize) {
+        self.q.clear();
+        self.scales.clear();
+        self.terminators.clear();
+        self.live_rows.clear();
+        self.live_idx.clear();
+        self.live_len.clear();
+        self.done_value.clear();
+        self.cycles.clear();
+        self.terminated.clear();
+        self.plane.clear();
+        self.plane.resize(tile_n, 0);
+        self.obits.clear();
+        self.obits.resize(tile_n, 0);
+    }
+
+    /// Append one sample's per-element state for a `b`-wide block whose
+    /// outputs live on `rows`.  Returns the element base index of the
+    /// segment.  `fast_zero` marks the digital all-zero fast path: the
+    /// segment starts with no live rows and its stats pre-recorded as
+    /// one-cycle terminations.
+    fn push_segment(
+        &mut self,
+        bits: u32,
+        thresholds: &[f64],
+        rows: &[usize],
+        fast_zero: bool,
+    ) -> usize {
+        let b = rows.len();
+        let base = self.done_value.len();
+        for (i, &r) in rows.iter().enumerate() {
+            self.live_rows.push(r);
+            self.live_idx.push(i);
+            self.done_value.push(0);
+            if fast_zero {
+                // Terminator state is never consulted for a retired
+                // segment; push a placeholder to keep the flat stride.
+                self.terminators.push(EarlyTerminator::new(bits, 0.0));
+                self.cycles.push(1);
+                self.terminated.push(true);
+            } else {
+                self.terminators.push(EarlyTerminator::new(bits, thresholds[i]));
+                self.cycles.push(0);
+                self.terminated.push(false);
+            }
+        }
+        self.live_len.push(if fast_zero { 0 } else { b });
+        base
+    }
 }
 
 /// Quantize `x`, stream its bitplanes MSB-first through `tile`, apply
@@ -66,6 +198,10 @@ pub fn schedule_transform(
 /// `row_cycles`, per-element stats and the termination bookkeeping all
 /// run over the `b` logical rows only, keeping cycle/energy accounting
 /// honest about the work a stitched sub-array would actually do.
+///
+/// This is the compatibility entry (it builds a fresh [`ScratchArena`]
+/// per call); the pool workers run [`schedule_batch`] with a long-lived
+/// arena instead.
 pub fn schedule_block(
     tile: &mut Tile,
     x: &[f32],
@@ -74,16 +210,136 @@ pub fn schedule_block(
     scale: Option<f32>,
     rows: &[usize],
 ) -> TransformOutcome {
+    let identity = x.len() == tile.n() && rows.iter().enumerate().all(|(i, &r)| i == r);
+    let mut arena = ScratchArena::new();
+    let mut values = vec![0.0f32; x.len()];
+    let mut stats = CycleStats::new(bits);
+    let (planes_issued, row_cycles) = run_block(
+        tile,
+        x,
+        bits,
+        thresholds_units,
+        scale,
+        rows,
+        identity,
+        &mut arena,
+        &mut values,
+        &mut stats,
+    );
+    TransformOutcome {
+        values,
+        stats,
+        planes_issued,
+        row_cycles,
+    }
+}
+
+/// Execute a whole batch of same-partition samples on one tile, reusing
+/// `arena` across samples and hoisting quantizer construction, row-map
+/// lookups and the identity-row decision out of the per-sample loop.
+///
+/// * **Digital** tiles run each block *plane-major* across the batch
+///   with live-row compaction — bit-identical to scheduling every sample
+///   as its own job (each (sample, plane) execution is independent on
+///   the golden model).
+/// * **Noisy/analog** tiles run sample-major, block order within each
+///   sample, exactly the order a sequence of per-sample jobs would
+///   execute — so the tile's RNG stream is byte-identical to the
+///   unbatched path (pinned by `tests/exec_equivalence.rs`).
+///
+/// Every request must be `plan.width()` wide with matching thresholds;
+/// the pool validates at the submission boundary.
+pub fn schedule_batch(
+    tile: &mut Tile,
+    plan: &TilePlan,
+    reqs: &[TransformRequest],
+    bits: u32,
+    arena: &mut ScratchArena,
+) -> BatchOutcome {
+    let width = plan.width();
+    assert_eq!(plan.tile_n(), tile.n(), "plan resolved for another tile");
+    for req in reqs {
+        assert_eq!(req.x.len(), width, "request width must match the plan");
+        assert_eq!(req.thresholds_units.len(), width);
+    }
+    let mut values: Vec<Vec<f32>> = reqs.iter().map(|_| vec![0.0f32; width]).collect();
+    let mut stats = CycleStats::new(bits);
+    let mut planes_issued = 0u32;
+    let mut row_cycles = 0u64;
+
+    if tile.is_digital() {
+        for slot in plan.slots() {
+            run_slot_plane_major(
+                tile,
+                slot,
+                reqs,
+                bits,
+                arena,
+                &mut values,
+                &mut stats,
+                &mut planes_issued,
+                &mut row_cycles,
+            );
+        }
+    } else {
+        // Sample-major: the exact execution order of per-sample jobs,
+        // so noise streams are independent of batching.
+        for (s, req) in reqs.iter().enumerate() {
+            for slot in plan.slots() {
+                let lo = slot.offset;
+                let hi = lo + slot.width;
+                let (p, rc) = run_block(
+                    tile,
+                    &req.x[lo..hi],
+                    bits,
+                    &req.thresholds_units[lo..hi],
+                    req.scale,
+                    &slot.rows,
+                    slot.identity,
+                    arena,
+                    &mut values[s][lo..hi],
+                    &mut stats,
+                );
+                planes_issued += p;
+                row_cycles += rc;
+            }
+        }
+    }
+
+    BatchOutcome {
+        values,
+        stats,
+        planes_issued,
+        row_cycles,
+    }
+}
+
+/// One block of one sample through the zero-allocation engine.  Writes
+/// the `b` outputs into `out`, records per-element stats, and returns
+/// `(planes_issued, row_cycles)`.
+#[allow(clippy::too_many_arguments)]
+fn run_block(
+    tile: &mut Tile,
+    x: &[f32],
+    bits: u32,
+    thresholds_units: &[f64],
+    scale: Option<f32>,
+    rows: &[usize],
+    identity: bool,
+    arena: &mut ScratchArena,
+    out: &mut [f32],
+    stats: &mut CycleStats,
+) -> (u32, u64) {
     let n = tile.n();
     let b = x.len();
     assert!(b <= n, "block of width {b} exceeds the {n}-wide tile");
     assert_eq!(thresholds_units.len(), b);
     assert_eq!(rows.len(), b, "one output row per logical element");
+    assert_eq!(out.len(), b);
     let quantizer = Quantizer::new(bits);
-    let q = match scale {
-        Some(s) => quantizer.quantize_with_scale(x, s),
-        None => quantizer.quantize(x),
-    };
+    let scale = scale.unwrap_or_else(|| quantizer.scale_for(x));
+    arena.reset(n);
+    quantizer.quantize_with_scale_into(x, scale, &mut arena.q);
 
     // DAC-free input gating: a block that quantizes to all zeros has an
     // all-zero plane stream, so on the digital golden model every
@@ -93,8 +349,7 @@ pub fn schedule_block(
     // streaming `bits` silent cycles — the zero-vector serving fast
     // path.  Digital tiles only: noisy/analog backends flip comparators
     // on zero PSUMs and must keep consuming their RNG stream.
-    if tile.is_digital() && q.q.iter().all(|&v| v == 0) {
-        let mut stats = CycleStats::new(bits);
+    if tile.is_digital() && arena.q.iter().all(|&v| v == 0) {
         let outcome = ElementOutcome {
             cycles: 1,
             terminated: true,
@@ -103,89 +358,164 @@ pub fn schedule_block(
         for _ in 0..b {
             stats.record(&outcome);
         }
-        return TransformOutcome {
-            values: vec![0.0; b],
-            stats,
-            planes_issued: 1,
-            row_cycles: b as u64,
-        };
+        out.fill(0.0);
+        return (1, b as u64);
     }
 
-    let planes = q.bitplanes_msb_first();
-
-    let mut terminators: Vec<EarlyTerminator> = thresholds_units
-        .iter()
-        .map(|&t| EarlyTerminator::new(bits, t))
-        .collect();
-    let mut live: Vec<bool> = vec![true; b];
-    let mut done_value: Vec<i64> = vec![0; b];
-    let mut cycles: Vec<u32> = vec![0; b];
-    let mut terminated: Vec<bool> = vec![false; b];
+    arena.push_segment(bits, thresholds_units, rows, false);
     let mut planes_issued = 0u32;
     let mut row_cycles = 0u64;
-    // Zero-padded plane scratch for sub-tile blocks.
-    let mut padded = vec![0i8; if b < n { n } else { 0 }];
-    // Full-width blocks with the identity row map take the direct
-    // readout (checked once, not per plane): the pre-plan hot path, with
-    // no per-plane gather through the row indirection.
-    let identity = b == n && rows.iter().enumerate().all(|(i, &r)| i == r);
-
-    for plane in &planes {
-        if !live.iter().any(|&l| l) {
+    for bit in (0..bits).rev() {
+        if arena.live_len[0] == 0 {
             break;
         }
         planes_issued += 1;
-        let obits = if identity {
-            tile.execute_bitplane(plane)
-        } else if b == n {
-            tile.execute_bitplane_rows(plane, rows)
-        } else {
-            padded[..b].copy_from_slice(plane);
-            tile.execute_bitplane_rows(&padded, rows)
-        };
-        for i in 0..b {
-            if !live[i] {
-                continue;
+        row_cycles += step_plane(tile, 0, b, bit, thresholds_units, 0, identity, arena);
+    }
+    for i in 0..b {
+        out[i] = arena.done_value[i] as f32 * scale;
+        stats.record(&ElementOutcome {
+            cycles: arena.cycles[i],
+            terminated: arena.terminated[i],
+            value_units: arena.done_value[i],
+        });
+    }
+    (planes_issued, row_cycles)
+}
+
+/// Execute one plane for one sample's block segment (`seg = sample * b`)
+/// and advance its terminators, compacting the live list in place.
+/// Returns the row-cycles consumed (= live rows entering the plane).
+#[allow(clippy::too_many_arguments)]
+fn step_plane(
+    tile: &mut Tile,
+    sample: usize,
+    b: usize,
+    bit: u32,
+    thresholds_units: &[f64],
+    lo: usize,
+    identity: bool,
+    arena: &mut ScratchArena,
+) -> u64 {
+    let seg = sample * b;
+    let live = arena.live_len[sample];
+    debug_assert!(live > 0);
+    plane_into(&arena.q[seg..seg + b], bit, &mut arena.plane[..b]);
+    if identity && live == b {
+        // Full-width block with the identity row map and nothing
+        // terminated yet: direct readout, no row indirection.  The live
+        // list is still in identity order, so obits[k] is live slot k.
+        tile.execute_bitplane_into(&arena.plane, &mut arena.obits);
+    } else {
+        let rows_slice = &arena.live_rows[seg..seg + live];
+        let obits_slice = &mut arena.obits[..live];
+        tile.execute_bitplane_rows_into(&arena.plane, rows_slice, obits_slice);
+    }
+    let mut write = 0usize;
+    for k in 0..live {
+        let i = arena.live_idx[seg + k];
+        let e = seg + i;
+        arena.cycles[e] += 1;
+        match arena.terminators[e].step(arena.obits[k]) {
+            Decision::Continue => {
+                arena.live_rows[seg + write] = arena.live_rows[seg + k];
+                arena.live_idx[seg + write] = i;
+                write += 1;
             }
-            row_cycles += 1;
-            cycles[i] += 1;
-            match terminators[i].step(obits[i]) {
-                Decision::Continue => {}
-                Decision::TerminateZero => {
-                    live[i] = false;
-                    terminated[i] = true;
-                    done_value[i] = 0;
-                }
-                Decision::Complete => {
-                    live[i] = false;
-                    let v = terminators[i].running();
-                    done_value[i] = if (v.unsigned_abs() as f64) <= thresholds_units[i] {
-                        0
-                    } else {
-                        v
-                    };
-                }
+            Decision::TerminateZero => {
+                arena.terminated[e] = true;
+            }
+            Decision::Complete => {
+                let v = arena.terminators[e].running();
+                arena.done_value[e] = if (v.unsigned_abs() as f64) <= thresholds_units[lo + i] {
+                    0
+                } else {
+                    v
+                };
             }
         }
     }
+    arena.live_len[sample] = write;
+    live as u64
+}
 
-    let mut stats = CycleStats::new(bits);
-    for i in 0..b {
-        stats.record(&crate::bitplane::early_term::ElementOutcome {
-            cycles: cycles[i],
-            terminated: terminated[i],
-            value_units: done_value[i],
-        });
+/// The digital plane-major engine for one block slot across the whole
+/// batch: every sample's plane `bit` executes before any sample's next
+/// plane.  Per-sample live lists are flat segments of the arena with a
+/// stride of the block width, compacted in place as rows terminate.
+#[allow(clippy::too_many_arguments)]
+fn run_slot_plane_major(
+    tile: &mut Tile,
+    slot: &crate::coordinator::plan::BlockSlot,
+    reqs: &[TransformRequest],
+    bits: u32,
+    arena: &mut ScratchArena,
+    values: &mut [Vec<f32>],
+    stats: &mut CycleStats,
+    planes_issued: &mut u32,
+    row_cycles: &mut u64,
+) {
+    let n = tile.n();
+    let b = slot.width;
+    let lo = slot.offset;
+    let quantizer = Quantizer::new(bits);
+    arena.reset(n);
+
+    // Per-sample setup, hoisted quantizer + row map.
+    for req in reqs {
+        let x = &req.x[lo..lo + b];
+        let scale = req.scale.unwrap_or_else(|| quantizer.scale_for(x));
+        arena.scales.push(scale);
+        let qstart = arena.q.len();
+        quantizer.quantize_with_scale_into(x, scale, &mut arena.q);
+        let fast_zero = arena.q[qstart..].iter().all(|&v| v == 0);
+        let thresholds = &req.thresholds_units[lo..lo + b];
+        arena.push_segment(bits, thresholds, &slot.rows, fast_zero);
+        if fast_zero {
+            *planes_issued += 1;
+            *row_cycles += b as u64;
+        }
     }
-    let values = done_value
-        .iter()
-        .map(|&v| v as f32 * q.scale)
-        .collect();
-    TransformOutcome {
-        values,
-        stats,
-        planes_issued,
-        row_cycles,
+
+    // Plane-major across the batch.
+    for bit in (0..bits).rev() {
+        let mut any_live = false;
+        for (s, req) in reqs.iter().enumerate() {
+            if arena.live_len[s] == 0 {
+                continue;
+            }
+            any_live = true;
+            *planes_issued += 1;
+            *row_cycles += step_plane(
+                tile,
+                s,
+                b,
+                bit,
+                &req.thresholds_units,
+                lo,
+                slot.identity,
+                arena,
+            );
+        }
+        if !any_live {
+            break;
+        }
+    }
+
+    // Recombine + record.
+    for (s, sample_values) in values.iter_mut().enumerate() {
+        let seg = s * b;
+        let scale = arena.scales[s];
+        let out = &mut sample_values[lo..lo + b];
+        for i in 0..b {
+            let e = seg + i;
+            out[i] = arena.done_value[e] as f32 * scale;
+            stats.record(&ElementOutcome {
+                cycles: arena.cycles[e],
+                terminated: arena.terminated[e],
+                value_units: arena.done_value[e],
+            });
+        }
     }
 }
 
@@ -307,5 +637,135 @@ mod tests {
         assert_eq!(out.values, vec![0.0; 4]);
         assert_eq!(out.planes_issued, 1);
         assert_eq!(out.row_cycles, 4);
+    }
+
+    /// The per-sample reference for `schedule_batch`: every (sample,
+    /// block) scheduled as its own `schedule_block` call.
+    fn per_sample_reference(
+        tile: &mut Tile,
+        plan: &TilePlan,
+        reqs: &[TransformRequest],
+        bits: u32,
+    ) -> BatchOutcome {
+        let mut values = Vec::with_capacity(reqs.len());
+        let mut stats = CycleStats::new(bits);
+        let mut planes_issued = 0u32;
+        let mut row_cycles = 0u64;
+        for req in reqs {
+            let mut v = vec![0.0f32; plan.width()];
+            for slot in plan.slots() {
+                let lo = slot.offset;
+                let hi = lo + slot.width;
+                let out = schedule_block(
+                    tile,
+                    &req.x[lo..hi],
+                    bits,
+                    &req.thresholds_units[lo..hi],
+                    req.scale,
+                    &slot.rows,
+                );
+                v[lo..hi].copy_from_slice(&out.values);
+                stats.merge(&out.stats);
+                planes_issued += out.planes_issued;
+                row_cycles += out.row_cycles;
+            }
+            values.push(v);
+        }
+        BatchOutcome {
+            values,
+            stats,
+            planes_issued,
+            row_cycles,
+        }
+    }
+
+    fn batch_reqs(width: usize, samples: usize, seed: u64, thresh: f64) -> Vec<TransformRequest> {
+        (0..samples)
+            .map(|s| {
+                let x = if s == 1 {
+                    vec![0.0; width] // exercise the zero fast path mid-batch
+                } else {
+                    sample(width, seed + s as u64)
+                };
+                TransformRequest {
+                    thresholds_units: vec![thresh; width],
+                    scale: None,
+                    x,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_per_sample_loop_on_digital() {
+        for &(tile_n, blocks, bits, thresh) in &[
+            (16usize, &[16usize][..], 8u32, 0.0f64),
+            (16, &[16, 4][..], 8, 0.0),
+            (32, &[32, 8, 4][..], 4, 20.0),
+            (16, &[16][..], 1, 0.0),
+        ] {
+            let plan = TilePlan::new(tile_n, blocks).unwrap();
+            let reqs = batch_reqs(plan.width(), 4, 77 + tile_n as u64, thresh);
+            let mut t1 = Tile::new(tile_n, &TileKind::Digital, 0);
+            let want = per_sample_reference(&mut t1, &plan, &reqs, bits);
+            let mut t2 = Tile::new(tile_n, &TileKind::Digital, 0);
+            let mut arena = ScratchArena::new();
+            let got = schedule_batch(&mut t2, &plan, &reqs, bits, &mut arena);
+            assert_eq!(got.values, want.values, "tile {tile_n} blocks {blocks:?}");
+            assert_eq!(got.planes_issued, want.planes_issued);
+            assert_eq!(got.row_cycles, want.row_cycles);
+            assert_eq!(got.stats.total_elements, want.stats.total_elements);
+            assert_eq!(got.stats.terminated_early, want.stats.terminated_early);
+            assert_eq!(got.stats.histogram, want.stats.histogram);
+        }
+    }
+
+    #[test]
+    fn batch_arena_is_reusable_across_jobs() {
+        let plan = TilePlan::new(16, &[16, 4]).unwrap();
+        let mut arena = ScratchArena::new();
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        for round in 0..3u64 {
+            let reqs = batch_reqs(plan.width(), 3, 500 + round, 10.0);
+            let mut fresh = Tile::new(16, &TileKind::Digital, 0);
+            let want = per_sample_reference(&mut fresh, &plan, &reqs, 8);
+            let got = schedule_batch(&mut tile, &plan, &reqs, 8, &mut arena);
+            assert_eq!(got.values, want.values, "round {round}");
+        }
+    }
+
+    #[test]
+    fn noisy_batch_keeps_rng_stream_alignment() {
+        // A noisy tile that served a batched job must have consumed its
+        // RNG stream byte-identically to one that served the same
+        // samples as individual per-sample jobs: outputs agree AND the
+        // tiles stay in lockstep afterwards.
+        let kind = TileKind::Noisy { sigma_ant: 0.4 };
+        let plan = TilePlan::new(16, &[16, 4]).unwrap();
+        let reqs = batch_reqs(plan.width(), 3, 900, 5.0);
+        let mut a = Tile::new(16, &kind, 9);
+        let mut b = Tile::new(16, &kind, 9);
+        let mut arena = ScratchArena::new();
+        let batched = schedule_batch(&mut a, &plan, &reqs, 8, &mut arena);
+        let unbatched = per_sample_reference(&mut b, &plan, &reqs, 8);
+        assert_eq!(batched.values, unbatched.values, "noisy outputs");
+        assert_eq!(batched.planes_issued, unbatched.planes_issued);
+        let probe = vec![1i8; 16];
+        assert_eq!(
+            a.execute_bitplane(&probe),
+            b.execute_bitplane(&probe),
+            "RNG streams diverged"
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let plan = TilePlan::new(16, &[16]).unwrap();
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let mut arena = ScratchArena::new();
+        let out = schedule_batch(&mut tile, &plan, &[], 8, &mut arena);
+        assert!(out.values.is_empty());
+        assert_eq!(out.planes_issued, 0);
+        assert_eq!(out.stats.total_elements, 0);
     }
 }

@@ -31,6 +31,12 @@ pub struct Tile {
     /// PERF: reusable PSUM scratch for the digital/noisy paths (the
     /// per-plane Vec<i64> allocation showed up in the scheduler profile).
     scratch: Vec<i64>,
+    /// Full-width readout scratch for the noisy/analog masked paths
+    /// (those backends execute every physical row per plane; only the
+    /// gather is masked).
+    scratch_obits: Vec<i8>,
+    /// Per-row differential scratch for the analog backend.
+    scratch_diffs: Vec<f64>,
 }
 
 #[derive(Debug)]
@@ -63,6 +69,8 @@ impl Tile {
             kind,
             rng,
             scratch: vec![0; n],
+            scratch_obits: vec![0; n],
+            scratch_diffs: Vec::with_capacity(n),
         }
     }
 
@@ -87,18 +95,34 @@ impl Tile {
 
     /// Execute one bitplane: 2 clock cycles of the Fig. 5 schedule.
     pub fn execute_bitplane(&mut self, input: &[i8]) -> Vec<i8> {
+        let mut out = vec![0i8; self.n];
+        self.execute_bitplane_into(input, &mut out);
+        out
+    }
+
+    /// [`Self::execute_bitplane`] writing into a caller buffer of width
+    /// `n` — the zero-allocation hot path on every backend (PSUM,
+    /// readout and differential scratch all live on the tile and are
+    /// reused across planes).  RNG consumption is byte-identical to the
+    /// allocating variant.
+    pub fn execute_bitplane_into(&mut self, input: &[i8], out: &mut [i8]) {
         assert_eq!(input.len(), self.n, "input width must match tile");
+        assert_eq!(out.len(), self.n, "readout must cover every row");
         match &self.kind {
             TileKindInstance::Digital => {
                 self.psums_into_scratch(input);
-                self.scratch.iter().map(|&p| comparator(p)).collect()
+                for (o, &p) in out.iter_mut().zip(&self.scratch) {
+                    *o = comparator(p);
+                }
             }
             TileKindInstance::Noisy(nm) => {
                 let nm = *nm;
                 self.psums_into_scratch(input);
-                nm.perturb_and_compare(&self.scratch, &mut self.rng)
+                nm.perturb_and_compare_into(&self.scratch, &mut self.rng, out);
             }
-            TileKindInstance::Analog(xb) => xb.execute_bitplane(input, &mut self.rng),
+            TileKindInstance::Analog(xb) => {
+                xb.execute_bitplane_into(input, &mut self.rng, &mut self.scratch_diffs, out);
+            }
         }
     }
 
@@ -114,13 +138,47 @@ impl Tile {
     /// their RNG stream at full width — only the readout is masked — so
     /// a tile's noise stream does not depend on which plan runs on it.
     pub fn execute_bitplane_rows(&mut self, input: &[i8], rows: &[usize]) -> Vec<i8> {
+        let mut out = vec![0i8; rows.len()];
+        self.execute_bitplane_rows_into(input, rows, &mut out);
+        out
+    }
+
+    /// [`Self::execute_bitplane_rows`] writing into a caller buffer of
+    /// length `rows.len()` — the zero-allocation masked readout the
+    /// scheduler's live-row compaction drives (the row list shrinks as
+    /// elements terminate; on the digital model only the listed rows'
+    /// comparators are ever evaluated, while noisy/analog execute full
+    /// width so their RNG stream stays plan-independent).
+    pub fn execute_bitplane_rows_into(&mut self, input: &[i8], rows: &[usize], out: &mut [i8]) {
         assert_eq!(input.len(), self.n, "input width must match tile");
-        if self.is_digital() {
-            self.psums_into_scratch(input);
-            return rows.iter().map(|&r| comparator(self.scratch[r])).collect();
+        assert_eq!(rows.len(), out.len(), "one readout bit per listed row");
+        match &self.kind {
+            TileKindInstance::Digital => {
+                self.psums_into_scratch(input);
+                for (o, &r) in out.iter_mut().zip(rows) {
+                    *o = comparator(self.scratch[r]);
+                }
+            }
+            TileKindInstance::Noisy(nm) => {
+                let nm = *nm;
+                self.psums_into_scratch(input);
+                nm.perturb_and_compare_into(&self.scratch, &mut self.rng, &mut self.scratch_obits);
+                for (o, &r) in out.iter_mut().zip(rows) {
+                    *o = self.scratch_obits[r];
+                }
+            }
+            TileKindInstance::Analog(xb) => {
+                xb.execute_bitplane_into(
+                    input,
+                    &mut self.rng,
+                    &mut self.scratch_diffs,
+                    &mut self.scratch_obits,
+                );
+                for (o, &r) in out.iter_mut().zip(rows) {
+                    *o = self.scratch_obits[r];
+                }
+            }
         }
-        let all = self.execute_bitplane(input);
-        rows.iter().map(|&r| all[r]).collect()
     }
 }
 

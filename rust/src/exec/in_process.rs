@@ -58,14 +58,21 @@ impl InProcess {
 
     /// Digital golden model: bitplanes MSB-first → blockwise integer
     /// Walsh PSUMs → comparator → binary recombination.  Matches
-    /// [`crate::bitplane::QuantBwht::transform`] bit-for-bit.
+    /// [`crate::bitplane::QuantBwht::transform`] bit-for-bit.  Planes
+    /// are streamed through one scratch slice (no per-plane `Vec<i8>`).
     fn transform_quantized(blocks: &[usize], bits: u32, req: &TransformRequest) -> Vec<f32> {
         let q = Self::quantize(bits, req);
-        let mut acc = vec![0f32; req.x.len()];
-        for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
-            let xi: Vec<i64> = plane.iter().map(|&v| v as i64).collect();
+        let n = req.x.len();
+        let mut acc = vec![0f32; n];
+        let mut plane = vec![0i8; n];
+        let mut xi = vec![0i64; n];
+        let mut planes = q.planes_msb_first();
+        while let Some(b) = planes.next_into(&mut plane) {
+            for (d, &v) in xi.iter_mut().zip(&plane) {
+                *d = v as i64;
+            }
             let psums = wht::bwht_apply_i64_blocks(&xi, blocks);
-            let w = (1i64 << (bits as usize - 1 - p)) as f32;
+            let w = (1i64 << b) as f32;
             for (a, &psum) in acc.iter_mut().zip(&psums) {
                 *a += comparator(psum) as f32 * w;
             }
@@ -83,12 +90,19 @@ impl InProcess {
     ) -> Vec<f32> {
         let q = Self::quantize(bits, req);
         let nm = NoiseModel::new(sigma_ant, req.x.len());
-        let mut acc = vec![0f32; req.x.len()];
-        for (p, plane) in q.bitplanes_msb_first().iter().enumerate() {
-            let xi: Vec<i64> = plane.iter().map(|&v| v as i64).collect();
+        let n = req.x.len();
+        let mut acc = vec![0f32; n];
+        let mut plane = vec![0i8; n];
+        let mut xi = vec![0i64; n];
+        let mut obits = vec![0i8; n];
+        let mut planes = q.planes_msb_first();
+        while let Some(b) = planes.next_into(&mut plane) {
+            for (d, &v) in xi.iter_mut().zip(&plane) {
+                *d = v as i64;
+            }
             let psums = wht::bwht_apply_i64_blocks(&xi, blocks);
-            let obits = nm.perturb_and_compare(&psums, rng);
-            let w = (1i64 << (bits as usize - 1 - p)) as f32;
+            nm.perturb_and_compare_into(&psums, rng, &mut obits);
+            let w = (1i64 << b) as f32;
             for (a, &o) in acc.iter_mut().zip(&obits) {
                 *a += o as f32 * w;
             }

@@ -15,7 +15,9 @@
 //!   golden model, ANT-noisy), now with one RNG stream per sample index
 //!   so noisy results are batch-size invariant;
 //! * [`Pooled`] — a [`crate::coordinator::Coordinator`] tile pool; the
-//!   batch is fanned out over the workers via `try_submit`/`drain_one`;
+//!   batch is chunked across the workers via `transform_batch_planned`,
+//!   each chunk streaming through one tile on the zero-allocation
+//!   batch-fused engine ([`crate::coordinator::schedule_batch`]);
 //! * [`Sharded`] — a [`crate::shard::ShardSet`], scatter–gathering each
 //!   sample's blocks across every healthy pool.
 //!

@@ -1,23 +1,25 @@
 //! The pooled executor: NN transforms on a [`Coordinator`] crossbar tile
 //! pool.
 //!
-//! Each sample becomes one [`TransformRequest`] fanned out over the
-//! pool's workers through the async `try_submit_planned`/`drain_one`
-//! API — the whole activation executes in parallel instead of a
-//! per-sample loop, and the layer's block partition rides along with
-//! every request, so mixed partitions (`[128, 64, 16, 4]`) run with
-//! blocks narrower than the tile under sub-tile masking.  With digital
-//! tiles and pinned quantization scales this is bit-identical to
+//! The whole batch goes through
+//! [`Coordinator::transform_batch_planned`]: contiguous multi-sample
+//! chunks (oversubscribed over the workers so skewed batches
+//! load-balance), each chunk streamed through one tile by the
+//! batch-fused zero-allocation engine
+//! ([`crate::coordinator::schedule_batch`] — quantizer construction,
+//! row-map lookups and the identity-row decision hoisted out of the
+//! per-sample loop).  The layer's block partition rides along with the
+//! batch, so mixed partitions (`[128, 64, 16, 4]`) run with blocks
+//! narrower than the tile under sub-tile masking.  With digital tiles
+//! and pinned quantization scales this is bit-identical to
 //! [`crate::nn::Backend::Quantized`]; noisy/analog tiles run the same
 //! schedule with their physical models.  The layer's soft-threshold
 //! dead zone arrives as early-termination thresholds, so the pool's
 //! cycle/energy metrics reflect the fused comparator path.
 
-use std::collections::HashMap;
-
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, TilePlan, TransformRequest};
+use crate::coordinator::{Coordinator, TransformRequest};
 
 use super::{validate_batch, TransformExecutor};
 
@@ -51,46 +53,11 @@ impl TransformExecutor for Pooled<'_> {
         _streams: &[u64],
     ) -> Result<Vec<Vec<f32>>> {
         validate_batch(blocks, reqs, _streams)?;
-        // Resolve the partition against the pool geometry up front, so a
-        // bad partition is one clean error instead of a mid-batch
-        // failure with work already in flight.
-        TilePlan::new(self.coord.config().tile_n, blocks)?;
-        if reqs.is_empty() {
-            return Ok(Vec::new());
-        }
-        if self.coord.pending_async() > 0 {
-            anyhow::bail!(
-                "{} submitted request(s) not yet drained; drain them before running \
-                 the pooled executor (it would steal their results)",
-                self.coord.pending_async()
-            );
-        }
-
-        // Pipeline the whole batch through the pool: submit without
-        // blocking, and when the bounded job queue pushes back, free a
-        // slot by draining one finished sample first.
-        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
-        let mut pending: HashMap<u64, usize> = HashMap::new();
-        let mut next = 0usize;
-        let mut done = 0usize;
-        while done < reqs.len() {
-            while next < reqs.len() {
-                match self.coord.try_submit_planned(&reqs[next], blocks)? {
-                    Some(id) => {
-                        pending.insert(id, next);
-                        next += 1;
-                    }
-                    None => break, // queue full: drain before submitting more
-                }
-            }
-            let completed = self.coord.drain_one()?;
-            let idx = pending
-                .remove(&completed.request_id)
-                .expect("drained id was submitted by this executor");
-            outs[idx] = completed.values;
-            done += 1;
-        }
-        Ok(outs)
+        // One batch-fused call: the pool validates the partition and the
+        // undrained-submission hazard at its boundary, chunks the batch
+        // across the workers, and every chunk runs zero-allocation on
+        // one tile.
+        self.coord.transform_batch_planned(reqs, blocks)
     }
 }
 

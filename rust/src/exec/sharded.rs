@@ -5,7 +5,10 @@
 //! healthy shards by the planner (row-cycle-balanced over the
 //! heterogeneous block costs), executed in parallel and reassembled, so
 //! one wide activation saturates every pool and a poisoned shard sheds
-//! its slices to the survivors mid-batch.  Blocks narrower than the
+//! its slices to the survivors mid-batch.  Every slice executes on the
+//! pool workers' zero-allocation batch engine
+//! ([`crate::coordinator::schedule_batch`]); slices stay single-sample
+//! so the router's per-slice failover granularity is preserved.  Blocks narrower than the
 //! shard tile run under sub-tile masking
 //! ([`crate::coordinator::plan::TilePlan`]); pinned quantization scales
 //! ride along with every slice, which keeps the digital path

@@ -90,6 +90,24 @@ fn tile_flag(flags: &HashMap<String, String>) -> Result<usize> {
     Ok(tile)
 }
 
+/// Parse and validate `--bits B` (input magnitude bitplanes).  The
+/// sign-magnitude quantizer supports 1..=16 planes; validate up front so
+/// `--bits 0` (or an absurd 64) is a clean CLI error, mirroring the
+/// `--tile` validation, instead of a submission-time failure.
+fn bits_flag(flags: &HashMap<String, String>) -> Result<u32> {
+    let raw = flags.get("bits").map(String::as_str);
+    let bits: u32 = match raw {
+        None => 8,
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--bits must be an integer, got {s:?}"))?,
+    };
+    if !(1..=16).contains(&bits) {
+        bail!("--bits must be in 1..=16 magnitude bitplanes (8 in the paper), got {bits}");
+    }
+    Ok(bits)
+}
+
 fn backend_from_flags(flags: &HashMap<String, String>) -> Backend {
     match flags.get("backend").map(|s| s.as_str()).unwrap_or("quantized") {
         "float" => Backend::Float,
@@ -120,7 +138,7 @@ fn tile_kind_from_flags(flags: &HashMap<String, String>, tile: usize, vdd: f64) 
 
 fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
     let dim: usize = flag(flags, "dim", 64);
-    let bits: u32 = flag(flags, "bits", 8);
+    let bits = bits_flag(flags)?;
     let tile = tile_flag(flags)?;
     let seed: u64 = flag(flags, "seed", 0);
     let vdd: f64 = flag(flags, "vdd", 0.8);
@@ -196,7 +214,7 @@ fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
             shards,
             coordinator: CoordinatorConfig {
                 tile_n: tile,
-                bits: flag(flags, "bits", 8),
+                bits: bits_flag(flags)?,
                 workers: flag(flags, "workers", 4),
                 seed: flag(flags, "seed", 0),
                 kind: tile_kind_from_flags(flags, tile, vdd),
@@ -369,7 +387,7 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         listen: listen.to_string(),
         coordinator: CoordinatorConfig {
             tile_n: effective_tile,
-            bits: flag(flags, "bits", 8),
+            bits: bits_flag(flags)?,
             workers: flag(flags, "workers", 4),
             seed: flag(flags, "seed", 0),
             kind: tile_kind_from_flags(flags, effective_tile, vdd),
@@ -432,7 +450,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let requests: usize = flag(flags, "requests", 1000);
     let workers: usize = flag(flags, "workers", 4);
     let tile = tile_flag(flags)?;
-    let bits: u32 = flag(flags, "bits", 8);
+    let bits = bits_flag(flags)?;
     let dim: usize = flag(flags, "dim", 64);
     let vdd: f64 = flag(flags, "vdd", 0.8);
     let mut coord = Coordinator::new(CoordinatorConfig {

@@ -55,16 +55,68 @@ impl Quantizer {
     /// of a tensor quantized under its global scale match the
     /// whole-tensor quantization elementwise.
     pub fn quantize_with_scale(&self, x: &[f32], scale: f32) -> Quantized {
-        let qmax = self.qmax() as f32;
-        let q = x
-            .iter()
-            .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32)
-            .collect();
+        let mut q = Vec::with_capacity(x.len());
+        self.quantize_with_scale_into(x, scale, &mut q);
         Quantized {
             q,
             scale,
             bits: self.bits,
         }
+    }
+
+    /// [`Self::quantize_with_scale`] appending into a caller buffer — the
+    /// allocation-free seam the scheduler's [`ScratchArena`] quantizes
+    /// through (the buffer's capacity is retained across jobs).
+    ///
+    /// [`ScratchArena`]: crate::coordinator::scheduler::ScratchArena
+    pub fn quantize_with_scale_into(&self, x: &[f32], scale: f32, out: &mut Vec<i32>) {
+        let qmax = self.qmax() as f32;
+        out.reserve(x.len());
+        for &v in x {
+            out.push((v / scale).round().clamp(-qmax, qmax) as i32);
+        }
+    }
+}
+
+/// Write sign-magnitude plane `b` of the quantized integers `q` into
+/// `out` — the zero-allocation core shared by [`Quantized::bitplane`]
+/// and [`PlaneIter`].  `out[j] = sign(q_j) * bit_b(|q_j|)`.
+pub fn plane_into(q: &[i32], b: u32, out: &mut [i8]) {
+    assert_eq!(q.len(), out.len(), "plane buffer must match the block");
+    for (o, &v) in out.iter_mut().zip(q) {
+        let bit = ((v.unsigned_abs() >> b) & 1) as i8;
+        *o = if v < 0 { -bit } else { bit };
+    }
+}
+
+/// Streaming MSB-first bitplane extractor: each plane is written into a
+/// caller-owned scratch slice instead of materializing the whole
+/// `Vec<Vec<i8>>` plane stack up front — the hot-path encoding of the
+/// DAC-free input stream (one 2-clock crossbar op per extracted plane).
+#[derive(Debug)]
+pub struct PlaneIter<'a> {
+    q: &'a [i32],
+    bits: u32,
+    done: u32,
+}
+
+impl PlaneIter<'_> {
+    /// Extract the next plane (MSB first) into `out` and return its bit
+    /// position `b` (recombination weight `2^b`), or `None` once all
+    /// `bits` planes have been streamed.
+    pub fn next_into(&mut self, out: &mut [i8]) -> Option<u32> {
+        if self.done == self.bits {
+            return None;
+        }
+        let b = self.bits - 1 - self.done;
+        self.done += 1;
+        plane_into(self.q, b, out);
+        Some(b)
+    }
+
+    /// Planes not yet streamed.
+    pub fn remaining(&self) -> u32 {
+        self.bits - self.done
     }
 }
 
@@ -79,23 +131,25 @@ impl Quantized {
     /// `plane_b[j] = sign(q_j) * bit_b(|q_j|)` — exactly the CL/CLB drive
     /// pattern for one 2-clock crossbar operation.
     pub fn bitplane(&self, b: u32) -> Vec<i8> {
-        assert!(b < self.bits);
-        self.q
-            .iter()
-            .map(|&q| {
-                let bit = ((q.unsigned_abs() >> b) & 1) as i8;
-                if q < 0 {
-                    -bit
-                } else {
-                    bit
-                }
-            })
-            .collect()
+        let mut out = vec![0i8; self.q.len()];
+        self.bitplane_into(b, &mut out);
+        out
     }
 
-    /// All bitplanes, MSB first (the early-termination processing order).
-    pub fn bitplanes_msb_first(&self) -> Vec<Vec<i8>> {
-        (0..self.bits).rev().map(|b| self.bitplane(b)).collect()
+    /// [`Self::bitplane`] into a caller scratch slice (no allocation).
+    pub fn bitplane_into(&self, b: u32, out: &mut [i8]) {
+        assert!(b < self.bits);
+        plane_into(&self.q, b, out);
+    }
+
+    /// Stream all bitplanes MSB first (the early-termination processing
+    /// order) through a caller scratch slice — see [`PlaneIter`].
+    pub fn planes_msb_first(&self) -> PlaneIter<'_> {
+        PlaneIter {
+            q: &self.q,
+            bits: self.bits,
+            done: 0,
+        }
     }
 
     /// Reconstruct the integers from the bitplanes (sanity identity).
@@ -188,8 +242,48 @@ mod tests {
             scale: 1.0,
             bits: 3,
         };
-        let planes = q.bitplanes_msb_first();
-        assert_eq!(planes, vec![vec![1], vec![0], vec![0]]);
+        let mut scratch = [0i8; 1];
+        let mut planes = q.planes_msb_first();
+        assert_eq!(planes.remaining(), 3);
+        assert_eq!(planes.next_into(&mut scratch), Some(2));
+        assert_eq!(scratch, [1]);
+        assert_eq!(planes.next_into(&mut scratch), Some(1));
+        assert_eq!(scratch, [0]);
+        assert_eq!(planes.next_into(&mut scratch), Some(0));
+        assert_eq!(scratch, [0]);
+        assert_eq!(planes.next_into(&mut scratch), None);
+        assert_eq!(planes.remaining(), 0);
+    }
+
+    #[test]
+    fn plane_iter_matches_materialized_planes() {
+        let x = sample(64, 17);
+        for bits in [1u32, 4, 8] {
+            let q = Quantizer::new(bits).quantize(&x);
+            let mut scratch = vec![0i8; 64];
+            let mut planes = q.planes_msb_first();
+            let mut seen = 0u32;
+            while let Some(b) = planes.next_into(&mut scratch) {
+                assert_eq!(b, bits - 1 - seen, "MSB-first bit order");
+                assert_eq!(scratch, q.bitplane(b), "bits={bits} plane {b}");
+                seen += 1;
+            }
+            assert_eq!(seen, bits);
+        }
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize() {
+        let x = sample(48, 23);
+        let qz = Quantizer::new(8);
+        let scale = qz.scale_for(&x);
+        let mut buf = Vec::new();
+        qz.quantize_with_scale_into(&x, scale, &mut buf);
+        assert_eq!(buf, qz.quantize_with_scale(&x, scale).q);
+        // appending semantics: a second block lands after the first
+        qz.quantize_with_scale_into(&x[..8], scale, &mut buf);
+        assert_eq!(buf.len(), 56);
+        assert_eq!(&buf[48..], &qz.quantize_with_scale(&x[..8], scale).q[..]);
     }
 
     #[test]

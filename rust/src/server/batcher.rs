@@ -13,6 +13,13 @@
 //!   out across the healthy pools, bit-identically (digital backend) to
 //!   `Backend::Quantized`.
 //!
+//! Both paths land on the pool workers' zero-allocation bitplane engine
+//! ([`crate::coordinator::schedule_batch`]), as the router's
+//! single-sample slice jobs — cross-sample fusion of same-partition
+//! slices inside the router is the follow-on tracked in ROADMAP.md
+//! (`Coordinator::transform_batch_planned` currently serves the
+//! [`crate::exec::Pooled`] executor, which the server does not use).
+//!
 //! Replies fan back out over per-request channels.  Under a backlog the
 //! `recv_timeout` calls return instantly, so deep batches form with no
 //! added latency; on an idle server a lone request pays at most

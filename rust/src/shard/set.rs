@@ -109,6 +109,16 @@ impl ShardSet {
         if config.shards == 0 {
             bail!("shard set needs at least one shard");
         }
+        let bits = config.coordinator.bits;
+        if !(1..=16).contains(&bits) {
+            // Mirror the pool's submission-boundary check: without it a
+            // bad `bits` only dies when the router's first submit fails,
+            // which reads as "every shard is poisoned".
+            bail!(
+                "shard set is configured with bits = {bits}; the sign-magnitude \
+                 quantizer supports 1..=16 magnitude bitplanes"
+            );
+        }
         if let Some(kinds) = &config.kinds {
             if kinds.len() != config.shards {
                 bail!(
@@ -281,6 +291,21 @@ impl ShardSet {
 mod tests {
     use super::*;
     use crate::coordinator::TransformRequest;
+
+    #[test]
+    fn rejects_out_of_range_bits_up_front() {
+        for bits in [0u32, 64] {
+            let err = ShardSet::new(ShardSetConfig {
+                coordinator: crate::coordinator::CoordinatorConfig {
+                    bits,
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap_err();
+            assert!(err.to_string().contains("1..=16"), "bits={bits}: {err}");
+        }
+    }
 
     #[test]
     fn spins_up_and_shuts_down_n_shards() {

@@ -7,7 +7,10 @@
 //! reproduce the pre-refactor algorithms exactly.
 
 use repro::bitplane::QuantBwht;
-use repro::coordinator::{required_tile, Coordinator, CoordinatorConfig};
+use repro::coordinator::{
+    required_tile, schedule_batch, schedule_block, Coordinator, CoordinatorConfig, ScratchArena,
+    Tile, TileKind, TilePlan, TransformRequest,
+};
 use repro::exec::{InProcess, Pooled, Sharded, TransformExecutor};
 use repro::nn::{Backend, BwhtLayer, Mlp};
 use repro::shard::{ShardSet, ShardSetConfig};
@@ -399,6 +402,161 @@ fn mlp_hidden_300_logits_match_quantized_backend_when_sharded() {
     };
     assert_eq!(got, want, "hidden-300 sharded logits");
     set.shutdown();
+}
+
+/// The per-sample reference for `schedule_batch`: every (sample, block)
+/// scheduled as its own `schedule_block` call on the same tile, in
+/// sample-major order — the exact execution a stream of individual jobs
+/// would produce.
+fn per_sample_reference(
+    tile: &mut Tile,
+    plan: &TilePlan,
+    reqs: &[TransformRequest],
+) -> Vec<Vec<f32>> {
+    let mut outs = Vec::with_capacity(reqs.len());
+    for req in reqs {
+        let mut v = vec![0.0f32; plan.width()];
+        for slot in plan.slots() {
+            let lo = slot.offset;
+            let hi = lo + slot.width;
+            let out = schedule_block(
+                tile,
+                &req.x[lo..hi],
+                8,
+                &req.thresholds_units[lo..hi],
+                req.scale,
+                &slot.rows,
+            );
+            v[lo..hi].copy_from_slice(&out.values);
+        }
+        outs.push(v);
+    }
+    outs
+}
+
+/// Draw a random batch: a random power-of-two partition on a random
+/// tile, random inputs (zero vectors included), random thresholds and an
+/// optionally pinned scale.
+fn random_batch(r: &mut Rng) -> (usize, Vec<usize>, Vec<TransformRequest>) {
+    let tile_n = [16usize, 32][r.int_range(0, 1) as usize];
+    let nblocks = r.int_range(1, 3) as usize;
+    let mut blocks = Vec::with_capacity(nblocks);
+    for _ in 0..nblocks {
+        loop {
+            let b = [4usize, 8, 16, 32][r.int_range(0, 3) as usize];
+            if b <= tile_n {
+                blocks.push(b);
+                break;
+            }
+        }
+    }
+    let width: usize = blocks.iter().sum();
+    let samples = r.int_range(1, 4) as usize;
+    let mut reqs = Vec::with_capacity(samples);
+    for s in 0..samples {
+        let x = if s == 1 && samples > 1 {
+            vec![0.0; width] // exercise the zero fast path mid-batch
+        } else {
+            prop::vec_f32(r, width, 1.5)
+        };
+        let mut thresholds_units = Vec::with_capacity(width);
+        for _ in 0..width {
+            thresholds_units.push(r.uniform_range(0.0, 200.0));
+        }
+        let scale = if r.coin() {
+            Some(repro::quant::Quantizer::new(8).scale_for(&x))
+        } else {
+            None
+        };
+        reqs.push(TransformRequest {
+            x,
+            thresholds_units,
+            scale,
+        });
+    }
+    (tile_n, blocks, reqs)
+}
+
+#[test]
+fn property_schedule_batch_is_bit_identical_to_per_sample_on_digital() {
+    // ISSUE-5 satellite: random batches (width, bits via thresholds
+    // range, partition) — the batch-fused plane-major engine must be
+    // bit-identical to the per-sample scheduling loop on the digital
+    // golden model, arena reuse across cases included.
+    let mut arena = ScratchArena::new();
+    prop::forall(30, 5150, random_batch, |(tile_n, blocks, reqs)| {
+        let plan = TilePlan::new(*tile_n, blocks).map_err(|e| e.to_string())?;
+        let mut t1 = Tile::new(*tile_n, &TileKind::Digital, 0);
+        let want = per_sample_reference(&mut t1, &plan, reqs);
+        let mut t2 = Tile::new(*tile_n, &TileKind::Digital, 0);
+        let got = schedule_batch(&mut t2, &plan, reqs, 8, &mut arena);
+        if got.values != want {
+            return Err(format!("batch diverged on tile {tile_n} blocks {blocks:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_noisy_tile_rng_stream_is_batching_invariant() {
+    // ISSUE-5 satellite: a noisy tile's RNG stream after a batched job
+    // must equal the stream after the equivalent per-sample jobs —
+    // outputs agree and the tiles stay in lockstep afterwards.
+    let mut arena = ScratchArena::new();
+    prop::forall(15, 6270, random_batch, |(tile_n, blocks, reqs)| {
+        let kind = TileKind::Noisy { sigma_ant: 0.4 };
+        let plan = TilePlan::new(*tile_n, blocks).map_err(|e| e.to_string())?;
+        let mut batched_tile = Tile::new(*tile_n, &kind, 13);
+        let mut per_sample_tile = Tile::new(*tile_n, &kind, 13);
+        let got = schedule_batch(&mut batched_tile, &plan, reqs, 8, &mut arena);
+        let want = per_sample_reference(&mut per_sample_tile, &plan, reqs);
+        if got.values != want {
+            return Err("noisy batched outputs diverged".to_string());
+        }
+        let probe = vec![1i8; *tile_n];
+        if batched_tile.execute_bitplane(&probe) != per_sample_tile.execute_bitplane(&probe) {
+            return Err("RNG streams diverged after the batch".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn analog_tile_rng_stream_is_batching_invariant() {
+    // Same contract as the noisy sweep, on the full analog behavioral
+    // model: batched execution must consume the tile's thermal-noise
+    // stream byte-identically to per-sample jobs (the analog backend
+    // executes every physical row per plane; only the gather is masked).
+    let kind = TileKind::Analog {
+        config: repro::analog::crossbar::CrossbarConfig::new(16, 0.9),
+    };
+    let plan = TilePlan::new(16, &[16, 4]).unwrap();
+    let mut r = Rng::seed_from_u64(808);
+    let mut reqs = Vec::new();
+    for _ in 0..3 {
+        let x = prop::vec_f32(&mut r, 20, 1.5);
+        let mut thresholds_units = Vec::with_capacity(20);
+        for _ in 0..20 {
+            thresholds_units.push(r.uniform_range(0.0, 100.0));
+        }
+        reqs.push(TransformRequest {
+            x,
+            thresholds_units,
+            scale: None,
+        });
+    }
+    let mut batched_tile = Tile::new(16, &kind, 31);
+    let mut per_sample_tile = Tile::new(16, &kind, 31);
+    let mut arena = ScratchArena::new();
+    let got = schedule_batch(&mut batched_tile, &plan, &reqs, 8, &mut arena);
+    let want = per_sample_reference(&mut per_sample_tile, &plan, &reqs);
+    assert_eq!(got.values, want, "analog batched outputs");
+    let probe = vec![1i8; 16];
+    assert_eq!(
+        batched_tile.execute_bitplane(&probe),
+        per_sample_tile.execute_bitplane(&probe),
+        "analog RNG streams diverged after the batch"
+    );
 }
 
 #[test]

@@ -101,9 +101,11 @@ fn quant_bwht_artifact_matches_rust_golden_model() {
         };
         let eng = QuantBwht::new(64, 128, 8);
         let mut acc = vec![0f32; 64];
-        for (p, plane) in quantized.bitplanes_msb_first().iter().enumerate() {
-            let psums = eng.plane_psums(plane);
-            let w = (1i64 << (7 - p)) as f32;
+        let mut plane = vec![0i8; 64];
+        let mut planes = quantized.planes_msb_first();
+        while let Some(b) = planes.next_into(&mut plane) {
+            let psums = eng.plane_psums(&plane);
+            let w = (1i64 << b) as f32;
             for (a, &ps) in acc.iter_mut().zip(&psums) {
                 *a += repro::bitplane::comparator(ps) as f32 * w;
             }
