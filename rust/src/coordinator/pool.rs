@@ -122,6 +122,14 @@ pub struct CompletedTransform {
     pub values: Vec<f32>,
     /// Worker busy time spent on this request.
     pub busy: std::time::Duration,
+    /// Bitplanes the engine actually issued for this request.
+    pub planes_issued: u32,
+    /// Row activation cycles executed (the energy proxy).
+    pub row_cycles: u64,
+    /// Output elements produced.
+    pub elements: u64,
+    /// Elements that resolved before their final bitplane (ET depth).
+    pub terminated_early: u64,
 }
 
 /// The leader + worker pool.
@@ -550,6 +558,10 @@ impl Coordinator {
                 .next()
                 .expect("async submissions carry one request per job"),
             busy: r.elapsed,
+            planes_issued: r.planes_issued,
+            row_cycles: r.row_cycles,
+            elements: r.outcome_stats.total_elements,
+            terminated_early: r.outcome_stats.terminated_early,
         })
     }
 
@@ -830,6 +842,20 @@ mod tests {
             assert_eq!(c.transform(&req).unwrap().len(), 16, "bits={bits}");
             c.shutdown();
         }
+    }
+
+    #[test]
+    fn drain_one_reports_execution_stats() {
+        // The trace layer attributes execute spans from these counters,
+        // so drained results must carry the engine's energy proxies.
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        c.submit(&TransformRequest::plain(sample(16, 70))).unwrap();
+        let done = c.drain_one().unwrap();
+        assert_eq!(done.elements, 16);
+        assert_eq!(done.row_cycles, 16 * 8, "T=0: no early termination");
+        assert_eq!(done.terminated_early, 0);
+        assert!(done.planes_issued > 0);
+        c.shutdown();
     }
 
     #[test]

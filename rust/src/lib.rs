@@ -11,6 +11,12 @@
 //!   (bounded in-flight + per-client token buckets) and a Prometheus
 //!   `/metrics` endpoint, turning the coordinator into a long-running
 //!   inference service (`repro serve --listen ADDR`).
+//! * **Observability seam ([`trace`])** — sampled end-to-end request
+//!   tracing threaded through the serving path (admission → queue →
+//!   plan → scatter → pool queue → execute → drain → respond), feeding
+//!   per-stage latency histograms in `/metrics`, recent traces at
+//!   `GET /debug/traces` (plain JSON or Chrome `trace_event`) and
+//!   slow-request structured logs.
 //! * **Execution seam ([`exec`])** — the [`exec::TransformExecutor`]
 //!   trait unifying every way a BWHT transform can run (in-process
 //!   float/quantized/noisy loops, one coordinator pool, a shard set);
@@ -46,5 +52,6 @@ pub mod quant;
 pub mod runtime;
 pub mod server;
 pub mod shard;
+pub mod trace;
 pub mod util;
 pub mod wht;

@@ -13,6 +13,7 @@
 //!                 [--weights PATH] [--max-infer-batch N] [--no-respawn]
 //!                 [--max-batch N] [--max-wait-us U] [--keepalive-requests N]
 //!                 [--max-inflight N] [--rate R] [--burst B] [--duration-s S]
+//!                 [--trace-sample K] [--slow-ms MS]
 //! repro report    [--vdd V] [--avg-cycles C]
 //! ```
 //!
@@ -407,6 +408,8 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         model,
         max_infer_batch: flag(flags, "max-infer-batch", 64),
         auto_respawn: !flags.contains_key("no-respawn"),
+        trace_sample: flag(flags, "trace-sample", 1u32),
+        slow_ms: flag(flags, "slow-ms", 0u64),
         ..Default::default()
     };
     let has_model = config.model.is_some();
@@ -425,8 +428,10 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
     if has_model {
         println!("  POST /v1/infer      {{\"x\": [...]}} or {{\"x\": [[...], ...]}} -> logits");
     }
-    println!("  GET  /metrics       Prometheus text format (merged + per-shard)");
+    println!("  GET  /metrics       Prometheus text format (merged + per-shard + per-stage)");
     println!("  GET  /healthz       liveness probe");
+    println!("  GET  /readyz        readiness probe (503 + per-shard JSON when degraded)");
+    println!("  GET  /debug/traces  recent request traces (?n=K, ?format=chrome)");
     if duration_s == 0 {
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -580,7 +585,11 @@ SUBCOMMANDS:
               model's widest BWHT block and narrower blocks run under
               sub-tile masking; transforms run through the shard set;
               poisoned shards respawn on a health tick unless
-              --no-respawn); without --listen: offline batch benchmark
+              --no-respawn); request tracing samples 1-in-K requests
+              (--trace-sample K, 0 disables) into /debug/traces and the
+              per-stage /metrics histograms, and --slow-ms MS logs any
+              traced request slower than MS to stderr as structured
+              JSON; without --listen: offline batch benchmark
   report      energy model: Table I, Fig. 12 power breakdown
   help        this text
 ";

@@ -39,6 +39,7 @@ use crate::coordinator::{Metrics, TransformRequest};
 use crate::exec::Sharded;
 use crate::nn::Mlp;
 use crate::shard::{router, ShardSet};
+use crate::trace::{self, Stage, TraceHandle};
 
 use super::ServerState;
 
@@ -56,6 +57,10 @@ pub struct BatchItem {
     pub payload: BatchPayload,
     pub reply: Sender<Result<BatchReply, String>>,
     pub enqueued: Instant,
+    /// Sampled request trace, inactive for unsampled requests.  The
+    /// batcher records the queue span here and threads the handle into
+    /// the shard set's trace scope for the dispatch.
+    pub trace: TraceHandle,
 }
 
 /// Successful per-request outcome.
@@ -140,30 +145,52 @@ pub(crate) fn run_batcher(
         // instead of cloning them.
         let mut transform_reqs = Vec::new();
         let mut transform_waiters = Vec::new();
+        let mut transform_traces: Vec<TraceHandle> = Vec::new();
         let mut infer_x: Vec<f32> = Vec::new();
         let mut infer_waiters = Vec::new();
+        let mut infer_traces: Vec<TraceHandle> = Vec::new();
         let mut infer_samples = 0usize;
         for item in batch {
             let BatchItem {
                 payload,
                 reply,
                 enqueued,
+                trace,
             } = item;
+            if trace.is_active() {
+                // Queue = enqueued at the handler -> pulled into a batch.
+                let start = trace::instant_us(enqueued);
+                trace.record(Stage::Queue, start, trace::now_us().saturating_sub(start));
+            }
             match payload {
                 BatchPayload::Transform(req) => {
                     transform_reqs.push(req);
                     transform_waiters.push((reply, enqueued));
+                    transform_traces.push(trace);
                 }
                 BatchPayload::Infer { x, samples } => {
                     infer_x.extend_from_slice(&x);
                     infer_samples += samples;
+                    // The router sees one request per sample row, so the
+                    // scope needs one handle clone per sample.
+                    for _ in 0..samples {
+                        infer_traces.push(trace.clone());
+                    }
                     infer_waiters.push((reply, enqueued, samples));
                 }
             }
         }
 
         if !transform_reqs.is_empty() {
-            match router::transform_batch(&mut shards, &transform_reqs) {
+            let traced = transform_traces.iter().any(TraceHandle::is_active);
+            if traced {
+                shards.set_trace_scope(std::mem::take(&mut transform_traces));
+            }
+            let result = router::transform_batch(&mut shards, &transform_reqs);
+            if traced {
+                shards.clear_trace_scope();
+            }
+            match result {
                 Ok(outputs) => {
                     for ((reply, enqueued), values) in
                         transform_waiters.into_iter().zip(outputs)
@@ -196,8 +223,18 @@ pub(crate) fn run_batcher(
                     let offset = stream_offset;
                     stream_offset += infer_samples as u64;
                     let classes = mlp.classes;
-                    let mut exec = Sharded::new(&mut shards);
-                    match mlp.forward_with(&mut exec, &infer_x, infer_samples, offset) {
+                    let traced = infer_traces.iter().any(TraceHandle::is_active);
+                    if traced {
+                        shards.set_trace_scope(std::mem::take(&mut infer_traces));
+                    }
+                    let result = {
+                        let mut exec = Sharded::new(&mut shards);
+                        mlp.forward_with(&mut exec, &infer_x, infer_samples, offset)
+                    };
+                    if traced {
+                        shards.clear_trace_scope();
+                    }
+                    match result {
                         Ok(logits) => {
                             state.infer_batches_total.fetch_add(1, Ordering::Relaxed);
                             state
@@ -252,7 +289,9 @@ mod tests {
             set.aggregator(),
             set.health_handle(),
             set.respawns_handle(),
+            set.slot_health_handle(),
             EnergyModel::new(16, 0.8),
+            Arc::new(trace::Tracer::new(trace::TraceConfig::default())),
         ))
     }
 
@@ -287,6 +326,7 @@ mod tests {
             }),
             reply,
             enqueued: Instant::now(),
+            trace: TraceHandle::inactive(),
         }
     }
 
@@ -400,6 +440,7 @@ mod tests {
                 payload: BatchPayload::Infer { x, samples: 1 },
                 reply: reply_tx,
                 enqueued: Instant::now(),
+                trace: TraceHandle::inactive(),
             })
             .unwrap();
             waiters.push(reply_rx);
@@ -448,12 +489,39 @@ mod tests {
             },
             reply: reply_tx,
             enqueued: Instant::now(),
+            trace: TraceHandle::inactive(),
         })
         .unwrap();
         drop(tx);
         run(rx, set, None, 8, Duration::from_secs(5), state);
         let err = reply_rx.recv().unwrap().unwrap_err();
         assert!(err.contains("no model"), "{err}");
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn traced_transform_item_records_queue_and_execution_spans() {
+        use crate::trace::{TraceConfig, Tracer};
+        let set = test_set(1);
+        let state = test_state(&set);
+        let tracer = Tracer::new(TraceConfig::default());
+        let handle = tracer.begin("/v1/transform");
+        assert!(handle.is_active(), "sample_every=1 must trace everything");
+        let (tx, rx) = mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut item = transform_item(vec![0.5; 16], reply_tx);
+        item.trace = handle.clone();
+        tx.send(item).unwrap();
+        drop(tx);
+        run(rx, set, None, 8, Duration::from_secs(5), state);
+        assert!(reply_rx.recv().unwrap().is_ok());
+        tracer.finish(handle);
+        let traces = tracer.recent(1);
+        assert_eq!(traces.len(), 1);
+        let stages: Vec<&str> = traces[0].spans.iter().map(|s| s.stage.as_str()).collect();
+        for want in ["queue", "plan", "scatter", "pool_queue", "execute", "drain"] {
+            assert!(stages.contains(&want), "missing {want} in {stages:?}");
+        }
     }
 
     #[test]

@@ -44,6 +44,15 @@ impl Request {
         Ok(std::str::from_utf8(&self.body)?)
     }
 
+    /// Split the request target into path and query string (query is
+    /// `""` when absent) — `path` is stored verbatim off the wire.
+    pub fn path_and_query(&self) -> (&str, &str) {
+        match self.path.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (self.path.as_str(), ""),
+        }
+    }
+
     /// Persistent-connection semantics: HTTP/1.1 keeps the connection
     /// open unless the client says `Connection: close`; HTTP/1.0 closes
     /// unless the client says `Connection: keep-alive`.
@@ -213,6 +222,16 @@ mod tests {
 
     fn parse(raw: &str) -> Result<Option<Request>> {
         read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn splits_path_and_query() {
+        let req = parse("GET /debug/traces?n=4&format=chrome HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.path_and_query(), ("/debug/traces", "n=4&format=chrome"));
+        let plain = parse("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(plain.path_and_query(), ("/healthz", ""));
     }
 
     #[test]

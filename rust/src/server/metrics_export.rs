@@ -62,12 +62,49 @@ fn histogram(out: &mut String, name: &str, help: &str, hist: &LatencyHistogram) 
     }
 }
 
+/// `backend_features` label value for `repro_build_info`: the compiled
+/// feature set, so a scrape can tell apart otherwise identical builds.
+fn backend_features() -> &'static str {
+    match (cfg!(feature = "pjrt"), cfg!(feature = "trace-off")) {
+        (true, true) => "pjrt,trace-off",
+        (true, false) => "pjrt",
+        (false, true) => "trace-off",
+        (false, false) => "default",
+    }
+}
+
 /// Render the full exposition document.
 pub(crate) fn render(state: &ServerState) -> String {
     let coord = state.shard_metrics.merged();
     let per_shard = state.shard_metrics.per_shard();
     let e2e = state.e2e_latency.lock().expect("latency poisoned").clone();
     let mut out = String::new();
+
+    // Build/process identity.
+    let _ = writeln!(
+        out,
+        "# HELP repro_build_info Build metadata as labels (value is always 1)."
+    );
+    let _ = writeln!(out, "# TYPE repro_build_info gauge");
+    let _ = writeln!(
+        out,
+        "repro_build_info{{version=\"{}\",git_sha=\"{}\",backend_features=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION"),
+        option_env!("REPRO_GIT_SHA").unwrap_or("unknown"),
+        backend_features(),
+    );
+    gauge_f64(
+        &mut out,
+        "repro_process_start_time_seconds",
+        "Unix time the server process started.",
+        state.started_unix_s,
+    );
+    gauge_f64(
+        &mut out,
+        "repro_process_uptime_seconds",
+        "Seconds since the server process started.",
+        state.started.elapsed().as_secs_f64(),
+    );
 
     // Accelerator accounting, merged across the shard set.
     counter_u64(
@@ -292,6 +329,69 @@ pub(crate) fn render(state: &ServerState) -> String {
         "Per-request worker busy time inside the tile pool.",
         &coord.latency,
     );
+
+    // Request tracing: per-stage latency attribution over sampled
+    // requests, plus execution-shape counters folded out of the traces.
+    // One HELP/TYPE pair, then the per-stage labeled series — the label
+    // is part of the same `repro_stage_seconds` metric family.
+    let _ = writeln!(
+        out,
+        "# HELP repro_stage_seconds Per-stage latency of sampled traced requests."
+    );
+    let _ = writeln!(out, "# TYPE repro_stage_seconds histogram");
+    let stage_hists = state.tracer.stage_histograms();
+    for (stage, hist) in &stage_hists {
+        for (bound, cumulative) in hist.cumulative_buckets() {
+            let le = match bound {
+                Some(us) => fmt_f64(us as f64 * 1e-6),
+                None => "+Inf".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "repro_stage_seconds_bucket{{stage=\"{stage}\",le=\"{le}\"}} {cumulative}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "repro_stage_seconds_sum{{stage=\"{stage}\"}} {}",
+            fmt_f64(hist.sum_us() as f64 * 1e-6)
+        );
+        let _ = writeln!(
+            out,
+            "repro_stage_seconds_count{{stage=\"{stage}\"}} {}",
+            hist.count()
+        );
+    }
+    counter_u64(
+        &mut out,
+        "repro_traces_sampled_total",
+        "Requests that drew an active trace at admission.",
+        state.tracer.sampled_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_trace_slow_requests_total",
+        "Traced requests that exceeded the --slow-ms threshold.",
+        state.tracer.slow_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_trace_planes_total",
+        "Bitplane operations observed inside traced execute spans.",
+        state.tracer.planes_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_trace_elements_total",
+        "Output elements observed inside traced execute spans.",
+        state.tracer.elements_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_trace_elements_terminated_total",
+        "Traced output elements that early-terminated before their last bitplane.",
+        state.tracer.terminated_total(),
+    );
     out
 }
 
@@ -302,7 +402,8 @@ mod tests {
     use crate::energy::EnergyModel;
     use crate::server::admission::AdmissionConfig;
     use crate::shard::MetricsAggregator;
-    use std::sync::atomic::{AtomicU64, AtomicUsize};
+    use crate::trace::{TraceConfig, Tracer};
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
     use std::sync::Arc;
     use std::time::Duration;
 
@@ -324,7 +425,9 @@ mod tests {
             MetricsAggregator::new(vec![coord.metrics_handle()], 8),
             Arc::new(AtomicUsize::new(1)),
             Arc::new(AtomicU64::new(0)),
+            Arc::new(vec![AtomicBool::new(true)]),
             EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
         ));
         // One full-precision request and one that early-terminates.
         let x: Vec<f32> = (0..16).map(|i| ((i + 1) as f32 * 0.21).sin()).collect();
@@ -359,6 +462,94 @@ mod tests {
     }
 
     #[test]
+    fn renders_build_info_process_gauges_and_stage_series() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            MetricsAggregator::new(vec![coord.metrics_handle()], 8),
+            Arc::new(AtomicUsize::new(1)),
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(vec![AtomicBool::new(true)]),
+            EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
+        ));
+        coord.shutdown();
+        let text = render(&state);
+        let version = env!("CARGO_PKG_VERSION");
+        assert!(
+            text.contains(&format!("repro_build_info{{version=\"{version}\",git_sha=\"")),
+            "{text}"
+        );
+        assert!(metric_value(&text, "repro_process_start_time_seconds") > 0.0);
+        assert!(metric_value(&text, "repro_process_uptime_seconds") >= 0.0);
+        // The stage family renders every stage (zero-count included), with
+        // exactly one HELP/TYPE pair for the whole labeled family.
+        assert!(text.contains("# TYPE repro_stage_seconds histogram"));
+        for stage in ["admission", "queue", "plan", "scatter", "pool_queue", "execute", "drain", "respond"]
+        {
+            assert!(
+                text.contains(&format!(
+                    "repro_stage_seconds_bucket{{stage=\"{stage}\",le=\"+Inf\"}} 0"
+                )),
+                "missing {stage} series in {text}"
+            );
+        }
+        assert_eq!(
+            text.matches("# TYPE repro_stage_seconds histogram").count(),
+            1
+        );
+        assert_eq!(metric_value(&text, "repro_traces_sampled_total"), 0.0);
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn finished_traces_land_in_stage_histograms_and_counters() {
+        use crate::trace::{ExecStats, Stage};
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let tracer = Arc::new(Tracer::new(TraceConfig::default()));
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            MetricsAggregator::new(vec![coord.metrics_handle()], 8),
+            Arc::new(AtomicUsize::new(1)),
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(vec![AtomicBool::new(true)]),
+            EnergyModel::new(16, 0.8),
+            Arc::clone(&tracer),
+        ));
+        coord.shutdown();
+        let handle = tracer.begin("/v1/transform");
+        handle.record(Stage::Admission, 10, 50);
+        handle.record_exec(
+            100,
+            400,
+            0,
+            ExecStats {
+                planes: 6,
+                row_cycles: 96,
+                elements: 16,
+                terminated_early: 4,
+            },
+        );
+        tracer.finish(handle);
+        let text = render(&state);
+        assert!(
+            text.contains("repro_stage_seconds_count{stage=\"execute\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_stage_seconds_count{stage=\"admission\"} 1"),
+            "{text}"
+        );
+        assert_eq!(metric_value(&text, "repro_traces_sampled_total"), 1.0);
+        assert_eq!(metric_value(&text, "repro_trace_planes_total"), 6.0);
+        assert_eq!(metric_value(&text, "repro_trace_elements_total"), 16.0);
+        assert_eq!(
+            metric_value(&text, "repro_trace_elements_terminated_total"),
+            4.0
+        );
+    }
+
+    #[test]
     fn renders_per_shard_series_for_a_multi_shard_set() {
         use crate::shard::{router, ShardSet, ShardSetConfig};
         let mut set = ShardSet::new(ShardSetConfig {
@@ -381,7 +572,9 @@ mod tests {
             set.aggregator(),
             set.health_handle(),
             set.respawns_handle(),
+            set.slot_health_handle(),
             EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
         ));
         set.shutdown();
         let text = render(&state);

@@ -22,8 +22,15 @@
 //!   [`crate::exec::Sharded`] executor — digital-backend logits are
 //!   bit-identical to `Mlp::forward` with `Backend::Quantized`;
 //! * `GET /metrics` — Prometheus text format (cycle/energy accounting,
-//!   admission counters, `repro_infer_*` series, p50/p95/p99 latency);
-//! * `GET /healthz` — liveness probe.
+//!   admission counters, `repro_infer_*` series, p50/p95/p99 latency,
+//!   per-stage `repro_stage_seconds{stage=...}` attribution and build
+//!   info);
+//! * `GET /healthz` — liveness probe;
+//! * `GET /readyz` — shard-health-aware readiness: 503 with a per-shard
+//!   JSON body while any shard slot is poisoned/respawning;
+//! * `GET /debug/traces?n=K[&format=chrome]` — recent sampled request
+//!   traces as plain JSON or Chrome `trace_event` format (see
+//!   [`crate::trace`]).
 //!
 //! The batcher thread doubles as the shard-health loop: on a periodic
 //! tick (and before each batch) it respawns poisoned shards
@@ -46,7 +53,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
@@ -57,6 +64,7 @@ use crate::coordinator::{
 use crate::energy::EnergyModel;
 use crate::nn::Mlp;
 use crate::shard::{MetricsAggregator, ShardSet, ShardSetConfig};
+use crate::trace::{self, Stage, TraceConfig, TraceHandle, Tracer};
 use crate::util::json::{self, Json};
 
 use admission::Admission;
@@ -110,6 +118,14 @@ pub struct ServerConfig {
     /// Health-tick period: how often an idle batcher checks for (and
     /// heals) poisoned shards.
     pub health_tick: Duration,
+    /// Trace one request in every N (1 = every request, 0 = tracing
+    /// off).  Sampled traces feed `repro_stage_seconds`, the
+    /// `/debug/traces` ring and slow-request logging; sampled-out
+    /// requests pay one branch per stage.
+    pub trace_sample: u32,
+    /// Log a structured JSON line to stderr for any sampled request
+    /// slower than this many milliseconds (0 disables).
+    pub slow_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -131,6 +147,8 @@ impl Default for ServerConfig {
             max_infer_batch: 64,
             auto_respawn: true,
             health_tick: Duration::from_millis(250),
+            trace_sample: 1,
+            slow_ms: 0,
         }
     }
 }
@@ -162,6 +180,17 @@ pub(crate) struct ServerState {
     pub stale_dropped_total: AtomicU64,
     /// Currently open connections (slowloris guard).
     pub connections: AtomicUsize,
+    /// Per-shard-slot health flags for `/readyz` (slot-granular, kept
+    /// current by the [`ShardSet`] through poison/respawn/shutdown).
+    pub slot_health: Arc<Vec<AtomicBool>>,
+    /// Request tracer feeding `repro_stage_seconds`, `/debug/traces`
+    /// and slow-request logging.
+    pub tracer: Arc<Tracer>,
+    /// Process start, for the uptime gauge.
+    pub started: Instant,
+    /// Process start as seconds since the Unix epoch
+    /// (`repro_process_start_time_seconds`).
+    pub started_unix_s: f64,
 }
 
 impl ServerState {
@@ -170,7 +199,9 @@ impl ServerState {
         shard_metrics: MetricsAggregator,
         shards_healthy: Arc<AtomicUsize>,
         shard_respawns: Arc<AtomicU64>,
+        slot_health: Arc<Vec<AtomicBool>>,
         energy: EnergyModel,
+        tracer: Arc<Tracer>,
     ) -> ServerState {
         ServerState {
             admission: Admission::new(admission),
@@ -188,6 +219,13 @@ impl ServerState {
             infer_batches_total: AtomicU64::new(0),
             stale_dropped_total: AtomicU64::new(0),
             connections: AtomicUsize::new(0),
+            slot_health,
+            tracer,
+            started: Instant::now(),
+            started_unix_s: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0),
         }
     }
 
@@ -248,12 +286,19 @@ impl Server {
             coordinator: coordinator.clone(),
             ..Default::default()
         })?;
+        let tracer = Arc::new(Tracer::new(TraceConfig {
+            sample_every: config.trace_sample,
+            slow_us: config.slow_ms.saturating_mul(1000),
+            ..TraceConfig::default()
+        }));
         let state = Arc::new(ServerState::new(
             config.admission.clone(),
             shards.aggregator(),
             shards.health_handle(),
             shards.respawns_handle(),
+            shards.slot_health_handle(),
             EnergyModel::new(coordinator.tile_n, config.vdd),
+            tracer,
         ));
 
         let (batch_tx, batch_rx) = mpsc::channel::<BatchItem>();
@@ -437,16 +482,65 @@ fn route(
     state: &ServerState,
     config: &ServerConfig,
 ) -> http::Response {
-    match (request.method.as_str(), request.path.as_str()) {
+    let (path, query) = request.path_and_query();
+    match (request.method.as_str(), path) {
         ("GET", "/healthz") => http::Response::text(200, "ok\n"),
+        ("GET", "/readyz") => readyz_response(state),
         ("GET", "/metrics") => http::Response::text(200, &metrics_export::render(state)),
+        ("GET", "/debug/traces") => handle_traces(state, query),
         ("POST", "/v1/transform") => handle_transform(request, peer, tx, state, config),
         ("POST", "/v1/infer") => handle_infer(request, peer, tx, state, config),
-        (_, "/v1/transform") | (_, "/v1/infer") | (_, "/metrics") | (_, "/healthz") => {
+        (_, "/v1/transform") | (_, "/v1/infer") | (_, "/metrics") | (_, "/healthz")
+        | (_, "/readyz") | (_, "/debug/traces") => {
             http::Response::json(405, &error_json("method not allowed"))
         }
         _ => http::Response::json(404, &error_json("not found")),
     }
+}
+
+/// Shard-health-aware readiness: 200 when every shard slot is healthy,
+/// 503 (with the same per-shard body) while any slot is poisoned or
+/// mid-respawn — load balancers keep draining the node without killing
+/// it, since `/healthz` stays green.
+fn readyz_response(state: &ServerState) -> http::Response {
+    let mut all_healthy = true;
+    let mut shards = Vec::with_capacity(state.slot_health.len());
+    for (slot, flag) in state.slot_health.iter().enumerate() {
+        let healthy = flag.load(Ordering::Acquire);
+        all_healthy &= healthy;
+        let mut obj = BTreeMap::new();
+        obj.insert("shard".to_string(), Json::Num(slot as f64));
+        obj.insert("healthy".to_string(), Json::Bool(healthy));
+        shards.push(Json::Obj(obj));
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("ready".to_string(), Json::Bool(all_healthy));
+    obj.insert("shards".to_string(), Json::Arr(shards));
+    http::Response::json(if all_healthy { 200 } else { 503 }, &Json::Obj(obj))
+}
+
+/// First value of `key` in a URL query string (no percent-decoding —
+/// the debug API's keys and values are plain identifiers).
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query
+        .split('&')
+        .find_map(|kv| kv.split_once('=').filter(|(k, _)| *k == key).map(|(_, v)| v))
+}
+
+/// `GET /debug/traces?n=K[&format=chrome]`: the most recent `K` sampled
+/// traces (default 32, capped at 256), newest first, as plain JSON or
+/// Chrome `trace_event` format.
+fn handle_traces(state: &ServerState, query: &str) -> http::Response {
+    let n = query_param(query, "n")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(32)
+        .min(256);
+    let traces = state.tracer.recent(n);
+    let body = match query_param(query, "format") {
+        Some("chrome") => trace::traces_chrome(&traces),
+        _ => trace::traces_json(&traces),
+    };
+    http::Response::json(200, &body)
 }
 
 fn error_json(message: &str) -> Json {
@@ -468,6 +562,7 @@ fn handle_transform(
     state: &ServerState,
     config: &ServerConfig,
 ) -> http::Response {
+    let t0 = Instant::now();
     let body = match request.body_str() {
         Ok(s) => s,
         Err(_) => return bad_request(state, "body must be UTF-8 JSON"),
@@ -531,6 +626,7 @@ fn handle_transform(
         }
     };
 
+    let trace = trace_admitted(state, "/v1/transform", t0);
     let (reply_tx, reply_rx) = mpsc::channel();
     let item = BatchItem {
         payload: BatchPayload::Transform(TransformRequest {
@@ -540,11 +636,15 @@ fn handle_transform(
         }),
         reply: reply_tx,
         enqueued: Instant::now(),
+        trace: trace.clone(),
     };
     if tx.send(item).is_err() {
+        state.tracer.finish(trace);
         return http::Response::json(503, &error_json("server shutting down"));
     }
-    let response = match reply_rx.recv_timeout(config.request_timeout) {
+    let result = reply_rx.recv_timeout(config.request_timeout);
+    let respond_start = if trace.is_active() { trace::now_us() } else { 0 };
+    let response = match result {
         Ok(Ok(reply)) => {
             state.requests_ok.fetch_add(1, Ordering::Relaxed);
             let mut obj = BTreeMap::new();
@@ -565,8 +665,33 @@ fn handle_transform(
         Ok(Err(message)) => http::Response::json(500, &error_json(&message)),
         Err(_) => http::Response::json(504, &error_json("timed out waiting for the tile pool")),
     };
+    finish_trace(state, trace, respond_start);
     drop(permit);
     response
+}
+
+/// Mint the request's trace handle right after admission and record the
+/// admission span (handler entry → permit acquired).
+fn trace_admitted(state: &ServerState, endpoint: &'static str, t0: Instant) -> TraceHandle {
+    let trace = state.tracer.begin(endpoint);
+    if trace.is_active() {
+        let start = trace::instant_us(t0);
+        trace.record(Stage::Admission, start, trace::now_us().saturating_sub(start));
+    }
+    trace
+}
+
+/// Record the respond span (reply received → response serialized) and
+/// retire the trace into the recent-trace ring.
+fn finish_trace(state: &ServerState, trace: TraceHandle, respond_start: u64) {
+    if trace.is_active() {
+        trace.record(
+            Stage::Respond,
+            respond_start,
+            trace::now_us().saturating_sub(respond_start),
+        );
+    }
+    state.tracer.finish(trace);
 }
 
 /// Parse one finite-f32 row out of a JSON array.
@@ -600,6 +725,7 @@ fn handle_infer(
     state: &ServerState,
     config: &ServerConfig,
 ) -> http::Response {
+    let t0 = Instant::now();
     let Some(model) = &config.model else {
         return http::Response::json(
             503,
@@ -669,16 +795,21 @@ fn handle_infer(
         }
     };
 
+    let trace = trace_admitted(state, "/v1/infer", t0);
     let (reply_tx, reply_rx) = mpsc::channel();
     let item = BatchItem {
         payload: BatchPayload::Infer { x, samples },
         reply: reply_tx,
         enqueued: Instant::now(),
+        trace: trace.clone(),
     };
     if tx.send(item).is_err() {
+        state.tracer.finish(trace);
         return http::Response::json(503, &error_json("server shutting down"));
     }
-    let response = match reply_rx.recv_timeout(config.request_timeout) {
+    let result = reply_rx.recv_timeout(config.request_timeout);
+    let respond_start = if trace.is_active() { trace::now_us() } else { 0 };
+    let response = match result {
         Ok(Ok(reply)) => {
             state.infer_requests_ok.fetch_add(1, Ordering::Relaxed);
             let logits_json = if nested {
@@ -705,6 +836,78 @@ fn handle_infer(
         Ok(Err(message)) => http::Response::json(500, &error_json(&message)),
         Err(_) => http::Response::json(504, &error_json("timed out waiting for the model")),
     };
+    finish_trace(state, trace, respond_start);
     drop(permit);
     response
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
+
+    fn test_state(slot_health: Vec<bool>) -> ServerState {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let agg = MetricsAggregator::new(vec![coord.metrics_handle()], 8);
+        let healthy = slot_health.iter().filter(|&&h| h).count();
+        ServerState::new(
+            AdmissionConfig::default(),
+            agg,
+            Arc::new(AtomicUsize::new(healthy)),
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(slot_health.into_iter().map(AtomicBool::new).collect::<Vec<_>>()),
+            EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
+        )
+    }
+
+    #[test]
+    fn readyz_is_200_when_every_slot_is_healthy() {
+        let state = test_state(vec![true, true]);
+        let resp = readyz_response(&state);
+        assert_eq!(resp.status, 200);
+        let body = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(matches!(body.get("ready"), Some(Json::Bool(true))));
+        assert_eq!(body.get("shards").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn readyz_is_503_with_per_shard_body_when_a_slot_is_poisoned() {
+        let state = test_state(vec![true, false, true]);
+        let resp = readyz_response(&state);
+        assert_eq!(resp.status, 503);
+        let body = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(matches!(body.get("ready"), Some(Json::Bool(false))));
+        let shards = body.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 3);
+        assert!(matches!(shards[0].get("healthy"), Some(Json::Bool(true))));
+        assert!(matches!(shards[1].get("healthy"), Some(Json::Bool(false))));
+        assert_eq!(shards[1].get("shard").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn query_param_picks_first_match() {
+        assert_eq!(query_param("n=4&format=chrome", "n"), Some("4"));
+        assert_eq!(query_param("n=4&format=chrome", "format"), Some("chrome"));
+        assert_eq!(query_param("n=4", "format"), None);
+        assert_eq!(query_param("", "n"), None);
+        assert_eq!(query_param("n=1&n=2", "n"), Some("1"));
+    }
+
+    #[test]
+    fn debug_traces_endpoint_serves_both_formats() {
+        let state = test_state(vec![true]);
+        let h = state.tracer.begin("/v1/transform");
+        if h.is_active() {
+            h.record(Stage::Admission, trace::now_us(), 3);
+        }
+        state.tracer.finish(h);
+        let plain = handle_traces(&state, "n=8");
+        assert_eq!(plain.status, 200);
+        let parsed = json::parse(std::str::from_utf8(&plain.body).unwrap()).unwrap();
+        assert!(parsed.get("traces").and_then(Json::as_arr).is_some());
+        let chrome = handle_traces(&state, "n=8&format=chrome");
+        let parsed = json::parse(std::str::from_utf8(&chrome.body).unwrap()).unwrap();
+        assert!(parsed.get("traceEvents").and_then(Json::as_arr).is_some());
+    }
 }

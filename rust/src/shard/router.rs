@@ -23,42 +23,35 @@
 //! drained again, so a duplicate result can never be observed.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{TilePlan, TransformRequest};
+use crate::coordinator::{CompletedTransform, TilePlan, TransformRequest};
+use crate::trace::{self, ExecStats, Stage, TraceHandle};
 
 use super::planner::{estimate_block_cost, plan_blocks};
 use super::set::ShardSet;
 
 /// One request resolved onto its block partition: the routing unit of
-/// work is a *block*, identified by its index into `widths`/`offsets`.
+/// work is a *block*, identified by its index into the plan's slots.
+/// The validated [`TilePlan`] already carries every block's offset and
+/// width, so it is shared by reference — one `Arc` per batch, not a
+/// re-derived partition clone per request.
 struct PlannedReq {
     x: Vec<f32>,
     th: Vec<f64>,
     scale: Option<f32>,
-    /// Block widths of the partition (sum = `x.len()`).
-    widths: Vec<usize>,
-    /// Start offset of each block within `x`.
-    offsets: Vec<usize>,
+    plan: Arc<TilePlan>,
 }
 
 impl PlannedReq {
-    fn new(x: Vec<f32>, th: Vec<f64>, scale: Option<f32>, widths: Vec<usize>) -> PlannedReq {
-        let mut offsets = Vec::with_capacity(widths.len());
-        let mut off = 0usize;
-        for &w in &widths {
-            offsets.push(off);
-            off += w;
-        }
-        debug_assert_eq!(off, x.len());
-        PlannedReq {
-            x,
-            th,
-            scale,
-            widths,
-            offsets,
-        }
+    fn block_offset(&self, b: usize) -> usize {
+        self.plan.slots()[b].offset
+    }
+
+    fn block_width(&self, b: usize) -> usize {
+        self.plan.slots()[b].width
     }
 }
 
@@ -79,16 +72,16 @@ struct Slice {
 /// any) is inherited by every slice, so a sliced request quantizes
 /// exactly like the whole one.
 fn sub_request(preq: &PlannedReq, blocks: &[usize]) -> (TransformRequest, Vec<usize>) {
-    let total: usize = blocks.iter().map(|&b| preq.widths[b]).sum();
+    let total: usize = blocks.iter().map(|&b| preq.block_width(b)).sum();
     let mut sx = Vec::with_capacity(total);
     let mut sth = Vec::with_capacity(total);
     let mut widths = Vec::with_capacity(blocks.len());
     for &b in blocks {
-        let lo = preq.offsets[b];
-        let hi = lo + preq.widths[b];
+        let lo = preq.block_offset(b);
+        let hi = lo + preq.block_width(b);
         sx.extend_from_slice(&preq.x[lo..hi]);
         sth.extend_from_slice(&preq.th[lo..hi]);
-        widths.push(preq.widths[b]);
+        widths.push(preq.block_width(b));
     }
     (
         TransformRequest {
@@ -104,8 +97,8 @@ fn sub_request(preq: &PlannedReq, blocks: &[usize]) -> (TransformRequest, Vec<us
 fn gather(out: &mut [f32], values: &[f32], preq: &PlannedReq, blocks: &[usize]) {
     let mut pos = 0usize;
     for &b in blocks {
-        let lo = preq.offsets[b];
-        let w = preq.widths[b];
+        let lo = preq.block_offset(b);
+        let w = preq.block_width(b);
         out[lo..lo + w].copy_from_slice(&values[pos..pos + w]);
         pos += w;
     }
@@ -131,8 +124,13 @@ fn split_lanes(blocks: &[usize], lanes: usize) -> Vec<Vec<usize>> {
     chunks
 }
 
+/// An in-flight slice: what was submitted plus the submit timestamp
+/// (µs on the trace epoch; 0 when the batch is untraced) that anchors
+/// the pool-queue span at drain time.
+type InFlight = (Slice, u64);
+
 /// Healthy shard with the fewest outstanding slices (re-route target).
-fn reroute_target(set: &ShardSet, outstanding: &[HashMap<u64, Slice>]) -> Result<usize> {
+fn reroute_target(set: &ShardSet, outstanding: &[HashMap<u64, InFlight>]) -> Result<usize> {
     set.healthy()
         .into_iter()
         .min_by_key(|&s| outstanding[s].len())
@@ -145,13 +143,63 @@ fn reroute_target(set: &ShardSet, outstanding: &[HashMap<u64, Slice>]) -> Result
 fn poison_and_requeue(
     set: &mut ShardSet,
     shard: usize,
-    outstanding: &mut [HashMap<u64, Slice>],
+    outstanding: &mut [HashMap<u64, InFlight>],
     queue: &mut VecDeque<Slice>,
 ) {
     set.poison(shard);
-    for (_, orphan) in outstanding[shard].drain() {
+    for (_, (orphan, _)) in outstanding[shard].drain() {
         queue.push_back(orphan);
     }
+}
+
+/// Gather a drained slice into its request's output and, when the
+/// request is traced, reconstruct its pool-queue / execute / drain spans
+/// from the completion: the execute span ends at drain time and lasted
+/// the worker's reported busy time, and the gap from submission to
+/// execute start is time spent queued in the shard's pool.  Execute
+/// spans carry the engine's plane-count / row-cycle / ET-depth payload.
+fn finish_slice(
+    scope: &[TraceHandle],
+    outs: &mut [Vec<f32>],
+    planned: &[PlannedReq],
+    shard: usize,
+    done: CompletedTransform,
+    in_flight: InFlight,
+    drain_start_us: u64,
+) {
+    let (slice, submit_us) = in_flight;
+    gather(&mut outs[slice.req], &done.values, &planned[slice.req], &slice.blocks);
+    let Some(handle) = scope.get(slice.req) else { return };
+    if !handle.is_active() {
+        return;
+    }
+    let end_us = trace::now_us();
+    let busy_us = done.busy.as_micros().min(u128::from(u64::MAX)) as u64;
+    // Clamp the reconstructed execute window into [submit, drain-end].
+    let exec_start = end_us.saturating_sub(busy_us).max(submit_us);
+    handle.record_shard(
+        Stage::PoolQueue,
+        submit_us,
+        exec_start.saturating_sub(submit_us),
+        shard,
+    );
+    handle.record_exec(
+        exec_start,
+        end_us.saturating_sub(exec_start),
+        shard,
+        ExecStats {
+            planes: done.planes_issued,
+            row_cycles: done.row_cycles,
+            elements: done.elements,
+            terminated_early: done.terminated_early,
+        },
+    );
+    handle.record_shard(
+        Stage::Drain,
+        drain_start_us,
+        end_us.saturating_sub(drain_start_us),
+        shard,
+    );
 }
 
 /// Validate one request at the routing boundary (mirrors
@@ -192,15 +240,22 @@ pub fn transform(set: &mut ShardSet, req: &TransformRequest) -> Result<Vec<f32>>
 /// requests may be outstanding on any shard when it is invoked.
 pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<Vec<Vec<f32>>> {
     let tile_n = set.tile_n();
+    // One uniform plan per distinct request width, shared across the
+    // batch (serving batches are usually width-homogeneous).
+    let mut plans: HashMap<usize, Arc<TilePlan>> = HashMap::new();
     let mut planned = Vec::with_capacity(reqs.len());
     for (i, req) in reqs.iter().enumerate() {
         validate_request(i, req)?;
-        let w = req.x.len().div_ceil(tile_n) * tile_n;
+        let plan = Arc::clone(
+            plans
+                .entry(req.x.len())
+                .or_insert_with(|| Arc::new(TilePlan::uniform(tile_n, req.x.len()))),
+        );
         let mut x = req.x.clone();
-        x.resize(w, 0.0);
+        x.resize(plan.width(), 0.0);
         let mut th = req.thresholds_units.clone();
-        th.resize(w, 0.0);
-        planned.push(PlannedReq::new(x, th, req.scale, vec![tile_n; w / tile_n]));
+        th.resize(plan.width(), 0.0);
+        planned.push(PlannedReq { x, th, scale: req.scale, plan });
     }
     run(set, planned)
 }
@@ -215,8 +270,9 @@ pub fn transform_batch_planned(
     blocks: &[usize],
     reqs: &[TransformRequest],
 ) -> Result<Vec<Vec<f32>>> {
-    // Resolve the partition against the shard geometry once, up front.
-    let plan = TilePlan::new(set.tile_n(), blocks)?;
+    // Resolve the partition against the shard geometry once, up front;
+    // every request in the batch shares the one validated plan.
+    let plan = Arc::new(TilePlan::new(set.tile_n(), blocks)?);
     let width = plan.width();
     let mut planned = Vec::with_capacity(reqs.len());
     for (i, req) in reqs.iter().enumerate() {
@@ -227,12 +283,12 @@ pub fn transform_batch_planned(
                 req.x.len()
             );
         }
-        planned.push(PlannedReq::new(
-            req.x.clone(),
-            req.thresholds_units.clone(),
-            req.scale,
-            blocks.to_vec(),
-        ));
+        planned.push(PlannedReq {
+            x: req.x.clone(),
+            th: req.thresholds_units.clone(),
+            scale: req.scale,
+            plan: Arc::clone(&plan),
+        });
     }
     run(set, planned)
 }
@@ -240,6 +296,11 @@ pub fn transform_batch_planned(
 /// The shared scatter–gather loop over pre-validated planned requests.
 fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
     let bits = set.bits();
+    // Trace handles for the batch, one per request (set by the batcher;
+    // empty on untraced paths).  `traced` gates every clock read so an
+    // unsampled batch pays a branch per stage and nothing more.
+    let scope: Vec<TraceHandle> = set.trace_scope().to_vec();
+    let traced = scope.iter().any(TraceHandle::is_active);
 
     // Plan the whole batch over the healthy shards, carrying the load
     // vector across requests so the batch balances globally.
@@ -261,13 +322,23 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
     let mut loads = vec![0u64; healthy.len()];
     let mut queue: VecDeque<Slice> = VecDeque::new();
     for (ri, preq) in planned.iter().enumerate() {
+        let active = traced && scope.get(ri).is_some_and(TraceHandle::is_active);
+        let plan_start = if active { trace::now_us() } else { 0 };
         let costs: Vec<u64> = preq
-            .widths
+            .plan
+            .slots()
             .iter()
-            .zip(&preq.offsets)
-            .map(|(&w, &lo)| estimate_block_cost(&preq.x[lo..lo + w], &preq.th[lo..lo + w], bits))
+            .map(|s| {
+                let lo = s.offset;
+                let w = s.width;
+                estimate_block_cost(&preq.x[lo..lo + w], &preq.th[lo..lo + w], bits)
+            })
             .collect();
         let plan = plan_blocks(&costs, &healthy, &mut loads);
+        if active {
+            let now = trace::now_us();
+            scope[ri].record(Stage::Plan, plan_start, now.saturating_sub(plan_start));
+        }
         for a in plan.assignments {
             // Split each shard's share into per-worker lanes so the
             // shard's whole pool works on the request, not one thread.
@@ -282,7 +353,7 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
     }
 
     let mut outs: Vec<Vec<f32>> = planned.iter().map(|p| vec![0.0f32; p.x.len()]).collect();
-    let mut outstanding: Vec<HashMap<u64, Slice>> =
+    let mut outstanding: Vec<HashMap<u64, InFlight>> =
         (0..set.len()).map(|_| HashMap::new()).collect();
 
     loop {
@@ -296,26 +367,41 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
                 slice.shard = reroute_target(set, &outstanding)?;
             }
             let shard = slice.shard;
+            let active = traced && scope.get(slice.req).is_some_and(TraceHandle::is_active);
+            let scatter_start = if active { trace::now_us() } else { 0 };
             let (sub, sub_blocks) = sub_request(&planned[slice.req], &slice.blocks);
             let coord = set.coordinator_mut(shard).expect("healthy shard has a pool");
             match coord.try_submit_planned(&sub, &sub_blocks) {
                 Ok(Some(id)) => {
-                    outstanding[shard].insert(id, slice);
+                    let submit_us = if active { trace::now_us() } else { 0 };
+                    if active {
+                        scope[slice.req].record_shard(
+                            Stage::Scatter,
+                            scatter_start,
+                            submit_us.saturating_sub(scatter_start),
+                            shard,
+                        );
+                    }
+                    outstanding[shard].insert(id, (slice, submit_us));
                 }
                 Ok(None) => {
                     // Bounded queue full: free a slot by collecting one
                     // finished result from this shard, then retry.
+                    let drain_start = if traced { trace::now_us() } else { 0 };
                     match set.coordinator_mut(shard).expect("healthy shard has a pool").drain_one()
                     {
                         Ok(done) => {
                             let finished = outstanding[shard]
                                 .remove(&done.request_id)
                                 .expect("drained id was submitted by this router");
-                            gather(
-                                &mut outs[finished.req],
-                                &done.values,
-                                &planned[finished.req],
-                                &finished.blocks,
+                            finish_slice(
+                                &scope,
+                                &mut outs,
+                                &planned,
+                                shard,
+                                done,
+                                finished,
+                                drain_start,
                             );
                         }
                         Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
@@ -336,12 +422,13 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
         let Some(shard) = (0..set.len()).find(|&s| !outstanding[s].is_empty()) else {
             break;
         };
+        let drain_start = if traced { trace::now_us() } else { 0 };
         match set.coordinator_mut(shard).expect("outstanding implies healthy").drain_one() {
             Ok(done) => {
-                let slice = outstanding[shard]
+                let in_flight = outstanding[shard]
                     .remove(&done.request_id)
                     .expect("drained id was submitted by this router");
-                gather(&mut outs[slice.req], &done.values, &planned[slice.req], &slice.blocks);
+                finish_slice(&scope, &mut outs, &planned, shard, done, in_flight, drain_start);
             }
             Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
         }
@@ -380,14 +467,18 @@ mod tests {
         assert_eq!(split_lanes(&[5], 4), vec![vec![5]]);
     }
 
+    fn planned(width: usize, blocks: &[usize]) -> PlannedReq {
+        PlannedReq {
+            x: vec![0.0; width],
+            th: vec![0.0; width],
+            scale: None,
+            plan: Arc::new(TilePlan::new(16, blocks).unwrap()),
+        }
+    }
+
     #[test]
     fn gather_scatters_by_block_offset() {
-        let preq = PlannedReq::new(
-            vec![0.0; 12],
-            vec![0.0; 12],
-            None,
-            vec![4, 4, 4],
-        );
+        let preq = planned(12, &[4, 4, 4]);
         let mut out = vec![0.0f32; 12];
         let values = vec![1.0, 1.0, 1.0, 1.0, 3.0, 3.0, 3.0, 3.0];
         gather(&mut out, &values, &preq, &[0, 2]);
@@ -396,7 +487,7 @@ mod tests {
 
     #[test]
     fn gather_handles_mixed_widths() {
-        let preq = PlannedReq::new(vec![0.0; 20], vec![0.0; 20], None, vec![16, 4]);
+        let preq = planned(20, &[16, 4]);
         let mut out = vec![0.0f32; 20];
         let values = vec![7.0; 4];
         gather(&mut out, &values, &preq, &[1]);
@@ -522,6 +613,71 @@ mod tests {
         let out = transform(&mut set, &req).unwrap();
         assert_eq!(out, golden(&req));
         assert_eq!(set.healthy(), vec![0, 2]);
+        set.shutdown();
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn traced_scope_attributes_plan_scatter_execute_and_drain_spans() {
+        use crate::trace::{Stage, TraceConfig, Tracer};
+        let tracer = Tracer::new(TraceConfig::default());
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let req = TransformRequest {
+            x: sample(64, 90),
+            thresholds_units: vec![0.0; 64],
+            scale: None,
+        };
+        let handle = tracer.begin("/v1/transform");
+        set.set_trace_scope(vec![handle.clone()]);
+        let out = transform_batch(&mut set, std::slice::from_ref(&req)).unwrap();
+        set.clear_trace_scope();
+        tracer.finish(handle);
+        assert_eq!(out[0], golden(&req));
+
+        let trace = &tracer.recent(1)[0];
+        let stages: Vec<Stage> = trace.spans.iter().map(|s| s.stage).collect();
+        for want in [Stage::Plan, Stage::Scatter, Stage::PoolQueue, Stage::Execute, Stage::Drain] {
+            assert!(stages.contains(&want), "missing {want:?} in {stages:?}");
+        }
+        let exec = trace
+            .spans
+            .iter()
+            .find(|s| s.stage == Stage::Execute)
+            .unwrap();
+        let payload = exec.exec.expect("execute spans carry the engine payload");
+        assert!(payload.planes > 0);
+        assert!(payload.elements > 0);
+        assert!(exec.shard.is_some(), "execute spans name their shard");
+        // Span ordering is consistent on the shared timeline.
+        for s in &trace.spans {
+            assert!(s.start_us + s.dur_us <= trace.end_us);
+            assert!(s.start_us >= trace.begin_us);
+        }
+        set.shutdown();
+    }
+
+    #[test]
+    fn untraced_scope_leaves_results_bit_identical() {
+        // The one-branch fast path: an all-inactive scope must not
+        // perturb routing or outputs.
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let req = TransformRequest {
+            x: sample(64, 91),
+            thresholds_units: vec![0.0; 64],
+            scale: None,
+        };
+        set.set_trace_scope(vec![crate::trace::TraceHandle::inactive()]);
+        let out = transform_batch(&mut set, std::slice::from_ref(&req)).unwrap();
+        set.clear_trace_scope();
+        assert_eq!(out[0], golden(&req));
         set.shutdown();
     }
 

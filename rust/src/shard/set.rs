@@ -18,12 +18,13 @@
 //! serving loop calls this on a health tick so a transient pool death
 //! does not permanently shrink capacity.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, CoordinatorConfig, Metrics, TileKind};
+use crate::trace::TraceHandle;
 
 use super::metrics_agg::{HandleSlots, MetricsAggregator};
 
@@ -83,6 +84,17 @@ pub struct ShardSet {
     /// Respawns performed over the set's lifetime (shared counter for
     /// the `/metrics` exporter).
     respawns: Arc<AtomicU64>,
+    /// Per-slot health flags, shared with the serving front-end's
+    /// `/readyz` probe (slot-granular, unlike the aggregate
+    /// `healthy_gauge`).
+    slot_health: Arc<Vec<AtomicBool>>,
+    /// Trace handles for the requests of the batch currently being
+    /// routed (one per planned request, in request order).  Set by the
+    /// batcher around each dispatch so the router can attribute
+    /// plan/scatter/execute/drain spans without widening the
+    /// [`crate::exec::TransformExecutor`] seam.  Empty (the common
+    /// case) or all-inactive means no tracing work happens.
+    trace_scope: Vec<TraceHandle>,
     config: ShardSetConfig,
 }
 
@@ -137,6 +149,8 @@ impl ShardSet {
         }
         let retired = Metrics::new(config.coordinator.bits);
         let healthy_gauge = Arc::new(AtomicUsize::new(config.shards));
+        let slot_health =
+            Arc::new((0..config.shards).map(|_| AtomicBool::new(true)).collect::<Vec<_>>());
         Ok(ShardSet {
             slots,
             handles: Arc::new(Mutex::new(handle_slots)),
@@ -144,6 +158,8 @@ impl ShardSet {
             retired,
             healthy_gauge,
             respawns: Arc::new(AtomicU64::new(0)),
+            slot_health,
+            trace_scope: Vec::new(),
             config,
         })
     }
@@ -205,6 +221,28 @@ impl ShardSet {
         Arc::clone(&self.respawns)
     }
 
+    /// Shared per-slot health flags for the `/readyz` readiness probe.
+    pub fn slot_health_handle(&self) -> Arc<Vec<AtomicBool>> {
+        Arc::clone(&self.slot_health)
+    }
+
+    /// Attach trace handles for the batch about to be routed (one per
+    /// planned request, in request order).  Pair with
+    /// [`ShardSet::clear_trace_scope`] after the dispatch returns.
+    pub fn set_trace_scope(&mut self, scope: Vec<TraceHandle>) {
+        self.trace_scope = scope;
+    }
+
+    pub fn clear_trace_scope(&mut self) {
+        self.trace_scope.clear();
+    }
+
+    /// The trace handles attached to the in-flight batch (empty when
+    /// untraced).
+    pub fn trace_scope(&self) -> &[TraceHandle] {
+        &self.trace_scope
+    }
+
     /// Mutable access to one shard's coordinator (`None` if poisoned or
     /// out of range).
     pub fn coordinator_mut(&mut self, shard: usize) -> Option<&mut Coordinator> {
@@ -218,6 +256,7 @@ impl ShardSet {
         if let Some(coord) = self.slots.get_mut(shard).and_then(Option::take) {
             self.retired.merge(&coord.shutdown());
             self.healthy_gauge.fetch_sub(1, Ordering::AcqRel);
+            self.slot_health[shard].store(false, Ordering::Release);
         }
     }
 
@@ -247,6 +286,7 @@ impl ShardSet {
         self.slots[shard] = Some(coord);
         self.healthy_gauge.fetch_add(1, Ordering::AcqRel);
         self.respawns.fetch_add(1, Ordering::AcqRel);
+        self.slot_health[shard].store(true, Ordering::Release);
         Ok(())
     }
 
@@ -283,6 +323,9 @@ impl ShardSet {
             total.merge(&slot.shutdown());
         }
         self.healthy_gauge.store(0, Ordering::Release);
+        for flag in self.slot_health.iter() {
+            flag.store(false, Ordering::Release);
+        }
         total
     }
 }
@@ -419,6 +462,40 @@ mod tests {
         assert_eq!(set.respawn_poisoned(), 2);
         assert_eq!(set.healthy(), vec![0, 1, 2]);
         assert_eq!(set.respawn_poisoned(), 0, "nothing left to heal");
+        set.shutdown();
+    }
+
+    #[test]
+    fn slot_health_flags_track_poison_and_respawn() {
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let flags = set.slot_health_handle();
+        assert!(flags.iter().all(|f| f.load(Ordering::Acquire)));
+        set.coordinator_mut(1).unwrap().abort();
+        set.poison(1);
+        assert!(flags[0].load(Ordering::Acquire));
+        assert!(!flags[1].load(Ordering::Acquire), "poisoned slot reads unhealthy");
+        set.respawn(1).unwrap();
+        assert!(flags[1].load(Ordering::Acquire), "respawn heals the flag");
+        set.shutdown();
+        assert!(
+            flags.iter().all(|f| !f.load(Ordering::Acquire)),
+            "shutdown marks every slot unhealthy"
+        );
+    }
+
+    #[test]
+    fn trace_scope_is_settable_and_clearable() {
+        let mut set = ShardSet::new(ShardSetConfig::default()).unwrap();
+        assert!(set.trace_scope().is_empty());
+        set.set_trace_scope(vec![crate::trace::TraceHandle::inactive(); 3]);
+        assert_eq!(set.trace_scope().len(), 3);
+        assert!(!set.trace_scope()[0].is_active());
+        set.clear_trace_scope();
+        assert!(set.trace_scope().is_empty());
         set.shutdown();
     }
 

@@ -1,0 +1,666 @@
+//! End-to-end request tracing and per-stage latency attribution.
+//!
+//! The serving stack measures energy and latency in *per-stage*
+//! phenomena — plane counts, early-termination depth, queue wait — but a
+//! single end-to-end histogram cannot say whether a slow p99 was batch
+//! wait, shard scatter, tile execution, or drain.  This module threads a
+//! lightweight trace through the whole request path:
+//!
+//! ```text
+//! admission → queue → plan → scatter → pool_queue → execute → drain → respond
+//! ```
+//!
+//! Design constraints (std-only, allocation-light):
+//!
+//! - A request is sampled **once**, at admission ([`Tracer::begin`]).
+//!   The resulting [`TraceHandle`] is an `Option<Arc<..>>`; a
+//!   sampled-out (or feature-disabled) request carries `None` and every
+//!   downstream stage pays exactly one branch ([`TraceHandle::is_active`])
+//!   — no clock reads, no locks, no allocation.
+//! - Active handles append [`Span`]s to a small per-request buffer;
+//!   [`Tracer::finish`] folds the spans into per-stage
+//!   [`LatencyHistogram`]s (exported as `repro_stage_seconds{stage=…}`),
+//!   accumulates execute-payload counters (planes, ET depth), emits a
+//!   structured slow-request log line when configured, and pushes the
+//!   trace into a bounded ring of recent traces served by
+//!   `GET /debug/traces` — as plain JSON or Chrome `trace_event` format
+//!   (loadable in `chrome://tracing` / Perfetto).
+//! - Timestamps are microseconds on a process-wide monotonic epoch
+//!   ([`now_us`]), so spans recorded on different threads (handler,
+//!   batcher) line up on one timeline.
+//! - Building with `--features trace-off` compiles sampling away:
+//!   [`Tracer::begin`] unconditionally returns the inactive handle and
+//!   the branch-per-stage fast path is all that remains.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Process-wide monotonic epoch.  Initialised on first use (the server
+/// constructs its [`Tracer`] before accepting connections, so every
+/// request timestamp lands after the epoch).
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch.
+pub fn now_us() -> u64 {
+    instant_us(Instant::now())
+}
+
+/// Convert an [`Instant`] (e.g. a request's enqueue time) to
+/// microseconds on the trace epoch.  Instants predating the epoch clamp
+/// to zero rather than panicking.
+pub fn instant_us(t: Instant) -> u64 {
+    t.checked_duration_since(epoch())
+        .map(|d| d.as_micros().min(u128::from(u64::MAX)) as u64)
+        .unwrap_or(0)
+}
+
+/// The pipeline stages a request passes through.  `as_str` values are
+/// the `stage` label of `repro_stage_seconds` and the span names in the
+/// Chrome export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Handler entry to admission-permit acquired.
+    Admission = 0,
+    /// Waiting in the batcher's coalescing queue.
+    Queue = 1,
+    /// Per-request cost estimation + LPT block planning in the router.
+    Plan = 2,
+    /// Submitting one slice to a shard's job queue.
+    Scatter = 3,
+    /// A slice waiting in a coordinator pool before workers pick it up.
+    PoolQueue = 4,
+    /// `schedule_batch` on the worker (carries plane/ET payloads).
+    Execute = 5,
+    /// Draining a completed slice back to the batcher and gathering.
+    Drain = 6,
+    /// Serialising and writing the HTTP response.
+    Respond = 7,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; 8] = [
+        Stage::Admission,
+        Stage::Queue,
+        Stage::Plan,
+        Stage::Scatter,
+        Stage::PoolQueue,
+        Stage::Execute,
+        Stage::Drain,
+        Stage::Respond,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Plan => "plan",
+            Stage::Scatter => "scatter",
+            Stage::PoolQueue => "pool_queue",
+            Stage::Execute => "execute",
+            Stage::Drain => "drain",
+            Stage::Respond => "respond",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Execution payload attached to [`Stage::Execute`] spans: the analog
+/// engine's energy-proxy counters for one completed slice.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// MSB-first bitplanes actually issued.
+    pub planes: u32,
+    /// Row activation cycles executed (the dominant energy proxy).
+    pub row_cycles: u64,
+    /// Output elements produced.
+    pub elements: u64,
+    /// Elements resolved before their final bitplane (ET depth signal).
+    pub terminated_early: u64,
+}
+
+impl ExecStats {
+    /// Mean bitplane cycles per element — the effective ET depth.
+    pub fn avg_cycles(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            self.row_cycles as f64 / self.elements as f64
+        }
+    }
+
+    /// Elements still live at the final plane.
+    pub fn live_rows(&self) -> u64 {
+        self.elements - self.terminated_early.min(self.elements)
+    }
+}
+
+/// One recorded stage interval on the process timeline.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub stage: Stage,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Shard that executed this span, for scatter/pool/execute/drain.
+    pub shard: Option<usize>,
+    /// Engine counters, present on execute spans.
+    pub exec: Option<ExecStats>,
+}
+
+/// A finished request trace, as stored in the recent-trace ring.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub id: u64,
+    pub endpoint: &'static str,
+    pub begin_us: u64,
+    pub end_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn total_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.begin_us)
+    }
+}
+
+/// Span buffer shared between the handler thread (admission/respond),
+/// the batcher (queue) and the router completion path (plan..drain).
+#[derive(Debug)]
+struct TraceShared {
+    id: u64,
+    endpoint: &'static str,
+    spans: Mutex<Vec<Span>>,
+}
+
+/// Per-request tracing handle.  Cloning is cheap (an `Arc` bump for
+/// sampled requests, a copy of `None` otherwise); a sampled-out request
+/// pays one branch per stage and nothing else.
+#[derive(Debug, Clone, Default)]
+pub struct TraceHandle(Option<Arc<TraceShared>>);
+
+impl TraceHandle {
+    /// The handle carried by sampled-out requests: every recording
+    /// method is a single-branch no-op.
+    pub fn inactive() -> TraceHandle {
+        TraceHandle(None)
+    }
+
+    /// Whether this request is being traced — the one branch a
+    /// sampled-out request pays per stage.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Trace ID, if active.
+    pub fn id(&self) -> Option<u64> {
+        self.0.as_ref().map(|s| s.id)
+    }
+
+    /// Record a plain stage span.
+    pub fn record(&self, stage: Stage, start_us: u64, dur_us: u64) {
+        self.push(Span { stage, start_us, dur_us, shard: None, exec: None });
+    }
+
+    /// Record a stage span attributed to one shard.
+    pub fn record_shard(&self, stage: Stage, start_us: u64, dur_us: u64, shard: usize) {
+        self.push(Span { stage, start_us, dur_us, shard: Some(shard), exec: None });
+    }
+
+    /// Record an execute span with its engine payload.
+    pub fn record_exec(&self, start_us: u64, dur_us: u64, shard: usize, exec: ExecStats) {
+        self.push(Span {
+            stage: Stage::Execute,
+            start_us,
+            dur_us,
+            shard: Some(shard),
+            exec: Some(exec),
+        });
+    }
+
+    fn push(&self, span: Span) {
+        if let Some(shared) = &self.0 {
+            shared
+                .spans
+                .lock()
+                .expect("trace span buffer poisoned")
+                .push(span);
+        }
+    }
+}
+
+/// Tracer configuration, plumbed from `repro serve` flags.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Trace one request in every `sample_every` (1 = all, 0 = none).
+    pub sample_every: u32,
+    /// Emit a structured JSON log line to stderr for sampled requests
+    /// slower than this (0 disables slow-request logging).
+    pub slow_us: u64,
+    /// Recent-trace ring capacity.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig { sample_every: 1, slow_us: 0, capacity: 256 }
+    }
+}
+
+/// Process-wide trace collector: samples requests, stores recent
+/// finished traces in a bounded ring, and aggregates per-stage
+/// histograms plus execute-payload counters for `/metrics`.
+#[derive(Debug)]
+pub struct Tracer {
+    config: TraceConfig,
+    counter: AtomicU64,
+    store: Mutex<VecDeque<Trace>>,
+    stage_hist: Mutex<Vec<LatencyHistogram>>,
+    sampled_total: AtomicU64,
+    slow_total: AtomicU64,
+    planes_total: AtomicU64,
+    elements_total: AtomicU64,
+    terminated_total: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(config: TraceConfig) -> Tracer {
+        // Pin the epoch now so request Instants (taken later) never
+        // predate it.
+        let _ = epoch();
+        Tracer {
+            config,
+            counter: AtomicU64::new(0),
+            store: Mutex::new(VecDeque::new()),
+            stage_hist: Mutex::new((0..Stage::ALL.len()).map(|_| LatencyHistogram::new()).collect()),
+            sampled_total: AtomicU64::new(0),
+            slow_total: AtomicU64::new(0),
+            planes_total: AtomicU64::new(0),
+            elements_total: AtomicU64::new(0),
+            terminated_total: AtomicU64::new(0),
+        }
+    }
+
+    /// A tracer that samples nothing (used by paths that need a tracer
+    /// but want it inert).
+    pub fn disabled() -> Tracer {
+        Tracer::new(TraceConfig { sample_every: 0, ..TraceConfig::default() })
+    }
+
+    /// Sampling period (0 = disabled).
+    pub fn sample_every(&self) -> u32 {
+        self.config.sample_every
+    }
+
+    /// Admit a request into tracing.  Returns the inactive handle for
+    /// sampled-out requests — and for *every* request when compiled
+    /// with `--features trace-off`, which reduces tracing to the
+    /// branch-per-stage fast path.
+    pub fn begin(&self, endpoint: &'static str) -> TraceHandle {
+        if cfg!(feature = "trace-off") || self.config.sample_every == 0 {
+            return TraceHandle::inactive();
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        if n % u64::from(self.config.sample_every) != 0 {
+            return TraceHandle::inactive();
+        }
+        self.sampled_total.fetch_add(1, Ordering::Relaxed);
+        TraceHandle(Some(Arc::new(TraceShared {
+            id: n,
+            endpoint,
+            spans: Mutex::new(Vec::with_capacity(Stage::ALL.len() * 2)),
+        })))
+    }
+
+    /// Finish a trace: fold its spans into the per-stage histograms and
+    /// counters, log it if slow, and retain it in the recent ring.
+    /// No-op for inactive handles.
+    pub fn finish(&self, handle: TraceHandle) {
+        let Some(shared) = handle.0 else { return };
+        let spans = std::mem::take(
+            &mut *shared.spans.lock().expect("trace span buffer poisoned"),
+        );
+        let begin_us = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+        let end_us = spans
+            .iter()
+            .map(|s| s.start_us + s.dur_us)
+            .max()
+            .unwrap_or(begin_us);
+        {
+            let mut hists = self.stage_hist.lock().expect("stage histograms poisoned");
+            for span in &spans {
+                hists[span.stage.index()].record(Duration::from_micros(span.dur_us));
+                if let Some(exec) = &span.exec {
+                    self.planes_total
+                        .fetch_add(u64::from(exec.planes), Ordering::Relaxed);
+                    self.elements_total.fetch_add(exec.elements, Ordering::Relaxed);
+                    self.terminated_total
+                        .fetch_add(exec.terminated_early, Ordering::Relaxed);
+                }
+            }
+        }
+        let trace = Trace { id: shared.id, endpoint: shared.endpoint, begin_us, end_us, spans };
+        if self.config.slow_us > 0 && trace.total_us() >= self.config.slow_us {
+            self.slow_total.fetch_add(1, Ordering::Relaxed);
+            eprintln!("{}", slow_log_line(&trace, self.config.slow_us));
+        }
+        let mut store = self.store.lock().expect("trace store poisoned");
+        if store.len() >= self.config.capacity.max(1) {
+            store.pop_front();
+        }
+        store.push_back(trace);
+    }
+
+    /// Up to `n` most recent finished traces, newest first.
+    pub fn recent(&self, n: usize) -> Vec<Trace> {
+        let store = self.store.lock().expect("trace store poisoned");
+        store.iter().rev().take(n).cloned().collect()
+    }
+
+    /// Per-stage latency histograms, `(stage label, histogram)`.
+    pub fn stage_histograms(&self) -> Vec<(&'static str, LatencyHistogram)> {
+        let hists = self.stage_hist.lock().expect("stage histograms poisoned");
+        Stage::ALL
+            .iter()
+            .map(|s| (s.as_str(), hists[s.index()].clone()))
+            .collect()
+    }
+
+    pub fn sampled_total(&self) -> u64 {
+        self.sampled_total.load(Ordering::Relaxed)
+    }
+
+    pub fn slow_total(&self) -> u64 {
+        self.slow_total.load(Ordering::Relaxed)
+    }
+
+    pub fn planes_total(&self) -> u64 {
+        self.planes_total.load(Ordering::Relaxed)
+    }
+
+    pub fn elements_total(&self) -> u64 {
+        self.elements_total.load(Ordering::Relaxed)
+    }
+
+    pub fn terminated_total(&self) -> u64 {
+        self.terminated_total.load(Ordering::Relaxed)
+    }
+}
+
+fn span_json(span: &Span) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("stage".to_string(), Json::Str(span.stage.as_str().to_string()));
+    obj.insert("start_us".to_string(), Json::Num(span.start_us as f64));
+    obj.insert("dur_us".to_string(), Json::Num(span.dur_us as f64));
+    if let Some(shard) = span.shard {
+        obj.insert("shard".to_string(), Json::Num(shard as f64));
+    }
+    if let Some(exec) = &span.exec {
+        obj.insert("planes".to_string(), Json::Num(f64::from(exec.planes)));
+        obj.insert("row_cycles".to_string(), Json::Num(exec.row_cycles as f64));
+        obj.insert("elements".to_string(), Json::Num(exec.elements as f64));
+        obj.insert(
+            "terminated_early".to_string(),
+            Json::Num(exec.terminated_early as f64),
+        );
+        obj.insert("avg_cycles".to_string(), Json::Num(exec.avg_cycles()));
+        obj.insert("live_rows".to_string(), Json::Num(exec.live_rows() as f64));
+    }
+    Json::Obj(obj)
+}
+
+/// Plain-JSON view of recent traces (`GET /debug/traces`).
+pub fn traces_json(traces: &[Trace]) -> Json {
+    let arr = traces
+        .iter()
+        .map(|t| {
+            let mut obj = BTreeMap::new();
+            obj.insert("id".to_string(), Json::Num(t.id as f64));
+            obj.insert("endpoint".to_string(), Json::Str(t.endpoint.to_string()));
+            obj.insert("begin_us".to_string(), Json::Num(t.begin_us as f64));
+            obj.insert("end_us".to_string(), Json::Num(t.end_us as f64));
+            obj.insert("total_us".to_string(), Json::Num(t.total_us() as f64));
+            obj.insert("spans".to_string(), Json::Arr(t.spans.iter().map(span_json).collect()));
+            Json::Obj(obj)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("traces".to_string(), Json::Arr(arr));
+    Json::Obj(root)
+}
+
+/// Chrome `trace_event` view (`GET /debug/traces?format=chrome`),
+/// loadable in `chrome://tracing` or Perfetto: one complete (`ph:"X"`)
+/// event per span, one track (`tid`) per trace.
+pub fn traces_chrome(traces: &[Trace]) -> Json {
+    let mut events = Vec::new();
+    for t in traces {
+        for span in &t.spans {
+            let mut args = BTreeMap::new();
+            args.insert("trace_id".to_string(), Json::Num(t.id as f64));
+            args.insert("endpoint".to_string(), Json::Str(t.endpoint.to_string()));
+            if let Some(shard) = span.shard {
+                args.insert("shard".to_string(), Json::Num(shard as f64));
+            }
+            if let Some(exec) = &span.exec {
+                args.insert("planes".to_string(), Json::Num(f64::from(exec.planes)));
+                args.insert("row_cycles".to_string(), Json::Num(exec.row_cycles as f64));
+                args.insert("elements".to_string(), Json::Num(exec.elements as f64));
+                args.insert(
+                    "terminated_early".to_string(),
+                    Json::Num(exec.terminated_early as f64),
+                );
+                args.insert("avg_cycles".to_string(), Json::Num(exec.avg_cycles()));
+            }
+            let mut ev = BTreeMap::new();
+            ev.insert("name".to_string(), Json::Str(span.stage.as_str().to_string()));
+            ev.insert("cat".to_string(), Json::Str("repro".to_string()));
+            ev.insert("ph".to_string(), Json::Str("X".to_string()));
+            ev.insert("ts".to_string(), Json::Num(span.start_us as f64));
+            ev.insert("dur".to_string(), Json::Num(span.dur_us as f64));
+            ev.insert("pid".to_string(), Json::Num(1.0));
+            ev.insert("tid".to_string(), Json::Num(t.id as f64));
+            ev.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(ev));
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(events));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(root)
+}
+
+/// Structured slow-request log line: total latency plus a per-stage
+/// duration breakdown (summed across a stage's spans).
+pub fn slow_log_line(trace: &Trace, threshold_us: u64) -> Json {
+    let mut per_stage = [0u64; Stage::ALL.len()];
+    for span in &trace.spans {
+        per_stage[span.stage.index()] += span.dur_us;
+    }
+    let mut stages = BTreeMap::new();
+    for stage in Stage::ALL {
+        let us = per_stage[stage.index()];
+        if us > 0 {
+            stages.insert(stage.as_str().to_string(), Json::Num(us as f64));
+        }
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("event".to_string(), Json::Str("slow_request".to_string()));
+    obj.insert("trace_id".to_string(), Json::Num(trace.id as f64));
+    obj.insert("endpoint".to_string(), Json::Str(trace.endpoint.to_string()));
+    obj.insert("total_us".to_string(), Json::Num(trace.total_us() as f64));
+    obj.insert("threshold_us".to_string(), Json::Num(threshold_us as f64));
+    obj.insert("stages".to_string(), Json::Obj(stages));
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn finished(tracer: &Tracer, endpoint: &'static str) -> bool {
+        let h = tracer.begin(endpoint);
+        let active = h.is_active();
+        if active {
+            let t = now_us();
+            h.record(Stage::Admission, t, 5);
+            h.record(Stage::Queue, t + 5, 10);
+            h.record_exec(
+                t + 15,
+                40,
+                0,
+                ExecStats { planes: 8, row_cycles: 128, elements: 16, terminated_early: 4 },
+            );
+            h.record(Stage::Respond, t + 55, 2);
+        }
+        tracer.finish(h);
+        active
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn sampling_keeps_one_in_every_n() {
+        let tracer = Tracer::new(TraceConfig { sample_every: 3, ..TraceConfig::default() });
+        let sampled = (0..9).filter(|_| finished(&tracer, "/t")).count();
+        assert_eq!(sampled, 3);
+        assert_eq!(tracer.sampled_total(), 3);
+        // sample_every == 0 disables tracing entirely.
+        let off = Tracer::disabled();
+        assert!(!off.begin("/t").is_active());
+    }
+
+    #[cfg(feature = "trace-off")]
+    #[test]
+    fn trace_off_feature_disables_sampling() {
+        let tracer = Tracer::new(TraceConfig::default());
+        assert!(!tracer.begin("/t").is_active());
+        assert_eq!(tracer.sampled_total(), 0);
+    }
+
+    #[test]
+    fn inactive_handle_records_nothing() {
+        let h = TraceHandle::inactive();
+        assert!(!h.is_active());
+        assert_eq!(h.id(), None);
+        h.record(Stage::Plan, 0, 1);
+        h.record_exec(0, 1, 0, ExecStats::default());
+        Tracer::disabled().finish(h); // no-op, no panic
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        let tracer =
+            Tracer::new(TraceConfig { sample_every: 1, slow_us: 0, capacity: 4 });
+        for _ in 0..10 {
+            finished(&tracer, "/t");
+        }
+        let recent = tracer.recent(16);
+        assert_eq!(recent.len(), 4, "ring evicts beyond capacity");
+        for w in recent.windows(2) {
+            assert!(w[0].id > w[1].id, "newest first");
+        }
+        assert_eq!(tracer.recent(2).len(), 2);
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn finish_folds_histograms_and_exec_counters() {
+        let tracer = Tracer::new(TraceConfig::default());
+        finished(&tracer, "/v1/infer");
+        let hists = tracer.stage_histograms();
+        assert_eq!(hists.len(), Stage::ALL.len());
+        let by_name: BTreeMap<&str, u64> =
+            hists.iter().map(|(n, h)| (*n, h.count())).collect();
+        assert_eq!(by_name["admission"], 1);
+        assert_eq!(by_name["queue"], 1);
+        assert_eq!(by_name["execute"], 1);
+        assert_eq!(by_name["plan"], 0, "unrecorded stages stay empty");
+        assert_eq!(tracer.planes_total(), 8);
+        assert_eq!(tracer.elements_total(), 16);
+        assert_eq!(tracer.terminated_total(), 4);
+        let t = &tracer.recent(1)[0];
+        assert_eq!(t.endpoint, "/v1/infer");
+        assert_eq!(t.total_us(), 57, "begin/end derived from span extents");
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let tracer = Tracer::new(TraceConfig::default());
+        finished(&tracer, "/v1/infer");
+        let text = traces_chrome(&tracer.recent(8)).to_string();
+        let parsed = parse(&text).expect("chrome export must be valid JSON");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(events.len(), 4);
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(|v| v.as_str()), Some("X"));
+            assert!(ev.get("ts").and_then(|v| v.as_f64()).is_some());
+            assert!(ev.get("dur").and_then(|v| v.as_f64()).is_some());
+            assert!(ev.get("name").and_then(|v| v.as_str()).is_some());
+        }
+        let exec = events
+            .iter()
+            .find(|e| e.get("name").and_then(|v| v.as_str()) == Some("execute"))
+            .expect("execute event present");
+        assert_eq!(exec.path(&["args", "planes"]).and_then(|v| v.as_f64()), Some(8.0));
+        assert_eq!(
+            exec.path(&["args", "avg_cycles"]).and_then(|v| v.as_f64()),
+            Some(8.0)
+        );
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn slow_log_line_breaks_latency_down_by_stage() {
+        let tracer = Tracer::new(TraceConfig::default());
+        finished(&tracer, "/v1/transform");
+        let t = &tracer.recent(1)[0];
+        let line = slow_log_line(t, 50).to_string();
+        let parsed = parse(&line).unwrap();
+        assert_eq!(parsed.get("event").and_then(|v| v.as_str()), Some("slow_request"));
+        assert_eq!(parsed.get("total_us").and_then(|v| v.as_f64()), Some(57.0));
+        assert_eq!(
+            parsed.path(&["stages", "execute"]).and_then(|v| v.as_f64()),
+            Some(40.0)
+        );
+        assert_eq!(
+            parsed.path(&["stages", "queue"]).and_then(|v| v.as_f64()),
+            Some(10.0)
+        );
+        assert!(parsed.path(&["stages", "plan"]).is_none(), "empty stages omitted");
+    }
+
+    #[test]
+    fn exec_stats_derive_depth_signals() {
+        let s = ExecStats { planes: 8, row_cycles: 96, elements: 16, terminated_early: 10 };
+        assert_eq!(s.avg_cycles(), 6.0);
+        assert_eq!(s.live_rows(), 6);
+        assert_eq!(ExecStats::default().avg_cycles(), 0.0);
+    }
+
+    #[test]
+    fn instants_before_the_epoch_clamp_to_zero() {
+        let t = Instant::now();
+        let _ = epoch();
+        assert!(instant_us(t) == 0 || instant_us(t) < 5);
+        let (a, b) = (now_us(), now_us());
+        assert!(a <= b, "trace clock is monotonic");
+    }
+}

@@ -1,0 +1,377 @@
+//! Observability integration: end-to-end request tracing served over
+//! `GET /debug/traces` (JSON + Chrome `trace_event`), the shard-aware
+//! readiness probe, and the Prometheus text-format invariants of the
+//! extended `/metrics` exposition.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use repro::nn::Mlp;
+use repro::server::{Server, ServerConfig};
+use repro::util::json::{self, Json};
+use repro::util::rng::Rng;
+
+fn send_request(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read response");
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+fn post_json(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    send_request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    send_request(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn test_mlp() -> Mlp {
+    let mut r = Rng::seed_from_u64(77);
+    let (din, hidden, classes) = (8usize, 16usize, 3usize);
+    Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.5),
+        vec![0.0; hidden],
+        vec![0.06; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.5),
+        vec![0.0; classes],
+    )
+}
+
+fn infer_body(x: &[f32]) -> String {
+    let vals: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"x\":[{}]}}", vals.join(","))
+}
+
+/// ISSUE-6 acceptance: a served `/v1/infer` request must appear in
+/// `GET /debug/traces` with at least 6 distinct stage spans, and its
+/// execute spans must carry the plane-count / ET-depth payloads.
+#[cfg(not(feature = "trace-off"))]
+#[test]
+fn served_infer_request_appears_in_debug_traces_with_full_stage_coverage() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: 2,
+        model: Some(test_mlp()),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    let mut rng = Rng::seed_from_u64(6000);
+    let x: Vec<f32> = (0..8).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let (status, body) = post_json(addr, "/v1/infer", &infer_body(&x));
+    assert_eq!(status, 200, "{body}");
+
+    let (status, body) = get(addr, "/debug/traces?n=8");
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).expect("traces json");
+    let traces = parsed.get("traces").and_then(Json::as_arr).expect("traces");
+    let infer = traces
+        .iter()
+        .find(|t| t.get("endpoint").and_then(Json::as_str) == Some("/v1/infer"))
+        .expect("the served infer request must have been traced");
+
+    let spans = infer.get("spans").and_then(Json::as_arr).expect("spans");
+    let stages: HashSet<&str> = spans
+        .iter()
+        .filter_map(|s| s.get("stage").and_then(Json::as_str))
+        .collect();
+    assert!(
+        stages.len() >= 6,
+        "want >= 6 distinct stages, got {stages:?}"
+    );
+    for want in ["admission", "queue", "plan", "scatter", "execute", "respond"] {
+        assert!(stages.contains(want), "missing {want} in {stages:?}");
+    }
+
+    let begin = infer.get("begin_us").and_then(Json::as_f64).unwrap();
+    let end = infer.get("end_us").and_then(Json::as_f64).unwrap();
+    assert!(end >= begin);
+    let mut execute_spans = 0usize;
+    for span in spans {
+        let start = span.get("start_us").and_then(Json::as_f64).unwrap();
+        let dur = span.get("dur_us").and_then(Json::as_f64).unwrap();
+        assert!(start >= begin && start + dur <= end + 1.0, "span in window");
+        if span.get("stage").and_then(Json::as_str) == Some("execute") {
+            execute_spans += 1;
+            assert!(
+                span.get("planes").and_then(Json::as_f64).unwrap() > 0.0,
+                "execute span must carry a plane count"
+            );
+            assert!(span.get("elements").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(span.get("avg_cycles").and_then(Json::as_f64).unwrap() > 0.0);
+            assert!(
+                span.get("shard").and_then(Json::as_f64).is_some(),
+                "execute span must be shard-attributed"
+            );
+        }
+    }
+    assert!(execute_spans >= 1, "at least one execute span");
+    server.shutdown();
+}
+
+/// The Chrome `trace_event` export must parse as valid JSON and frame
+/// every span as a complete ("X") event with the shared timebase.
+#[test]
+fn chrome_trace_export_parses_as_valid_trace_event_json() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+    let (status, body) = post_json(addr, "/v1/transform", "{\"x\":[0.5,-0.25,0.75,1.0]}");
+    assert_eq!(status, 200, "{body}");
+
+    let (status, body) = get(addr, "/debug/traces?n=4&format=chrome");
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).expect("chrome export must be valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents");
+    // With tracing compiled out the export is a valid empty document.
+    if cfg!(feature = "trace-off") {
+        assert!(events.is_empty());
+    } else {
+        assert!(!events.is_empty(), "{body}");
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(ev.get("name").and_then(Json::as_str).is_some());
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+            assert_eq!(ev.get("pid").and_then(Json::as_f64), Some(1.0));
+            assert!(ev.get("tid").and_then(Json::as_f64).is_some());
+            assert!(
+                ev.path(&["args", "trace_id"]).and_then(Json::as_f64).is_some(),
+                "{ev:?}"
+            );
+        }
+    }
+    server.shutdown();
+}
+
+/// `--trace-sample 0` disables tracing entirely: the store stays empty
+/// and the endpoint serves an empty (but well-formed) document.
+#[test]
+fn trace_sampling_zero_disables_the_trace_store() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        trace_sample: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+    let (status, body) = post_json(addr, "/v1/transform", "{\"x\":[1.0,0.5]}");
+    assert_eq!(status, 200, "{body}");
+    let (status, body) = get(addr, "/debug/traces");
+    assert_eq!(status, 200);
+    let parsed = json::parse(&body).unwrap();
+    assert_eq!(
+        parsed.get("traces").and_then(Json::as_arr).map(Vec::len),
+        Some(0),
+        "{body}"
+    );
+    server.shutdown();
+}
+
+/// `/readyz` answers 200 with a per-shard breakdown when the set is
+/// fully healthy (the degraded 503 path is unit-tested in the server
+/// module; a live server heals itself via auto-respawn).
+#[test]
+fn readyz_reports_per_shard_health() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+    let (status, body) = get(addr, "/readyz");
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    assert!(matches!(parsed.get("ready"), Some(Json::Bool(true))), "{body}");
+    let shards = parsed.get("shards").and_then(Json::as_arr).expect("shards");
+    assert_eq!(shards.len(), 3);
+    for (i, shard) in shards.iter().enumerate() {
+        assert_eq!(shard.get("shard").and_then(Json::as_f64), Some(i as f64));
+        assert!(
+            matches!(shard.get("healthy"), Some(Json::Bool(true))),
+            "{body}"
+        );
+    }
+    let (status, _) = post_json(addr, "/readyz", "");
+    assert_eq!(status, 405);
+    server.shutdown();
+}
+
+/// Strip the `le="..."` label from a label block, returning the group
+/// key (remaining labels) and the parsed bound.
+fn split_le(labels: &str) -> Option<(String, f64)> {
+    let start = labels.find("le=\"")?;
+    let rest = &labels[start + 4..];
+    let end = rest.find('"')?;
+    let bound = match &rest[..end] {
+        "+Inf" => f64::INFINITY,
+        v => v.parse().ok()?,
+    };
+    let mut key = String::new();
+    key.push_str(&labels[..start]);
+    key.push_str(&rest[end + 1..]);
+    Some((key.trim_matches(',').to_string(), bound))
+}
+
+/// Prometheus text-format invariants over the whole exposition:
+/// HELP/TYPE precede every series of their family, histogram `le`
+/// bounds are strictly increasing with non-decreasing cumulative
+/// counts, the `+Inf` bucket equals `_count`, and no series repeats.
+#[test]
+fn metrics_exposition_satisfies_prometheus_text_format_invariants() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+    // Serve real traffic first so the histograms hold live counts.
+    for i in 0..4 {
+        let (status, body) = post_json(
+            addr,
+            "/v1/transform",
+            &format!("{{\"x\":[0.5,{}.25,-0.75,1.0]}}", i),
+        );
+        assert_eq!(status, 200, "{body}");
+    }
+    let (status, text) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+
+    let mut helped: HashSet<String> = HashSet::new();
+    let mut typed: HashMap<String, String> = HashMap::new();
+    let mut seen_series: HashSet<String> = HashSet::new();
+    // (family, labels-sans-le) -> (last le, last cumulative, inf count)
+    let mut buckets: HashMap<(String, String), (f64, f64, Option<f64>)> = HashMap::new();
+
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().expect("HELP name");
+            helped.insert(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().expect("TYPE name");
+            let kind = parts.next().expect("TYPE kind");
+            typed.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line}");
+
+        // Series line: `name{labels} value` or `name value`.
+        let name_end = line.find(['{', ' ']).expect("series name terminator");
+        let name = &line[..name_end];
+        let (labels, value_str) = match line[name_end..].strip_prefix('{') {
+            Some(rest) => {
+                let close = rest.find('}').expect("label block close");
+                (&rest[..close], rest[close + 1..].trim())
+            }
+            None => ("", line[name_end..].trim()),
+        };
+        let value: f64 = value_str.parse().unwrap_or_else(|_| {
+            panic!("unparseable sample value in {line:?}")
+        });
+
+        // The family a suffixed histogram series belongs to.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suffix| {
+                let base = name.strip_suffix(suffix)?;
+                (typed.get(base).map(String::as_str) == Some("histogram"))
+                    .then(|| base.to_string())
+            })
+            .unwrap_or_else(|| name.to_string());
+        assert!(
+            typed.contains_key(&family),
+            "series {name} before its # TYPE"
+        );
+        assert!(
+            helped.contains(&family),
+            "series {name} before its # HELP"
+        );
+        assert!(
+            seen_series.insert(format!("{name}{{{labels}}}")),
+            "duplicate series {name}{{{labels}}}"
+        );
+
+        if name.ends_with("_bucket") && typed.get(&family).map(String::as_str) == Some("histogram")
+        {
+            let (group, le) = split_le(labels).expect("bucket without le");
+            let entry = buckets
+                .entry((family.clone(), group))
+                .or_insert((f64::NEG_INFINITY, 0.0, None));
+            assert!(le > entry.0, "le must increase: {line}");
+            assert!(value >= entry.1, "cumulative count must not drop: {line}");
+            entry.0 = le;
+            entry.1 = value;
+            if le.is_infinite() {
+                entry.2 = Some(value);
+            }
+        }
+        if name.ends_with("_count") && typed.get(&family).map(String::as_str) == Some("histogram")
+        {
+            let key = (family.clone(), labels.to_string());
+            let inf = buckets
+                .get(&key)
+                .and_then(|(_, _, inf)| *inf)
+                .unwrap_or_else(|| panic!("_count before +Inf bucket: {line}"));
+            assert_eq!(inf, value, "+Inf bucket must equal _count: {line}");
+        }
+    }
+
+    // Every histogram family ends in +Inf, and the new families exist.
+    for ((family, group), (last_le, _, inf)) in &buckets {
+        assert!(
+            last_le.is_infinite() && inf.is_some(),
+            "{family}{{{group}}} must close with a +Inf bucket"
+        );
+    }
+    assert_eq!(typed.get("repro_stage_seconds").map(String::as_str), Some("histogram"));
+    assert!(seen_series
+        .iter()
+        .any(|s| s.starts_with("repro_stage_seconds_bucket{stage=\"execute\"")));
+    assert!(typed.contains_key("repro_build_info"));
+    assert!(seen_series.iter().any(|s| s.starts_with("repro_build_info{")));
+    assert!(typed.contains_key("repro_process_start_time_seconds"));
+    assert!(typed.contains_key("repro_traces_sampled_total"));
+    server.shutdown();
+}
