@@ -23,9 +23,22 @@
 //! plain** (min-over-min ratio, robust to scheduler noise): the cost of
 //! shipping tracing always-compiled must stay unmeasurable for
 //! unsampled requests.
+//!
+//! A third section (ISSUE 7) prices the fidelity monitor's hot-path
+//! bill the same way — one `wants_sample` per drained slice, plus the
+//! 1-in-16 winners cloned into a live checker's drop-oldest queue — and
+//! emits `BENCH_fidelity.json`.  **Exits non-zero if either the
+//! disabled-handle or the monitor-on path costs more than 2% over
+//! plain**: shadow verification must never back-pressure serving.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 
 use repro::bitplane::early_term::{Decision, EarlyTerminator};
-use repro::coordinator::{schedule_batch, ScratchArena, Tile, TileKind, TilePlan, TransformRequest};
+use repro::coordinator::{
+    schedule_batch, CoordinatorConfig, ScratchArena, Tile, TileKind, TilePlan, TransformRequest,
+};
+use repro::monitor::{Monitor, MonitorConfig, ShadowSample};
 use repro::quant::Quantizer;
 use repro::trace::{self, ExecStats, Stage, TraceConfig, TraceHandle, Tracer};
 use repro::util::bench::{bench, black_box, header, write_json, BenchResult};
@@ -209,6 +222,7 @@ fn main() {
     println!("headline (w256 b8 et_off): {headline:.2}x — gate >= 1.0x passed");
 
     trace_overhead_gate(batch);
+    monitor_overhead_gate(batch);
 }
 
 /// Traced-vs-untraced cost of the headline scheduling case.
@@ -309,5 +323,130 @@ fn trace_overhead_gate(batch: usize) {
     println!(
         "traced-off overhead {:.2}% — gate <= 2% passed",
         off_overhead * 100.0
+    );
+}
+
+/// Fidelity-monitor cost of the headline scheduling case (ISSUE 7).
+///
+/// Per drained slice the router pays exactly one
+/// [`repro::monitor::MonitorHandle::wants_sample`] call; a sampled slice
+/// additionally clones its sub-request and observed values into the
+/// checker's bounded drop-oldest queue.  Model that bill faithfully:
+/// the same `schedule_batch` call plus one `wants_sample` per request —
+/// first against a disabled handle (digital-only serving, the default),
+/// then against a live monitor with its checker thread running and the
+/// 1-in-16 winners enqueued.  Both must stay within 2% of plain
+/// (min-over-min): shadow verification never back-pressures serving.
+fn monitor_overhead_gate(batch: usize) {
+    let width = 256usize;
+    let bits = 8u32;
+    let plan = TilePlan::new(width, &[width]).expect("full-tile plan");
+    let mut r = Rng::seed_from_u64(width as u64 * 31 + bits as u64);
+    let reqs: Vec<TransformRequest> = (0..batch)
+        .map(|_| TransformRequest {
+            x: (0..width)
+                .map(|_| r.uniform_range(-1.0, 1.0) as f32)
+                .collect(),
+            thresholds_units: vec![0.0; width],
+            scale: None,
+        })
+        .collect();
+    let mut tile = Tile::new(width, &TileKind::Digital, 0);
+    let mut arena = ScratchArena::new();
+
+    header("fidelity");
+    let r_plain = bench("plain w256 b8 et_off", || {
+        let y = schedule_batch(&mut tile, &plan, &reqs, bits, &mut arena);
+        black_box(y);
+    });
+    r_plain.report();
+
+    let disabled = Monitor::disabled();
+    let off_handle = disabled.handle();
+    let r_off = bench("monitor-off w256 b8 et_off", || {
+        let y = schedule_batch(&mut tile, &plan, &reqs, bits, &mut arena);
+        for i in 0..batch {
+            black_box(off_handle.wants_sample(i));
+        }
+        black_box(y);
+    });
+    r_off.report();
+
+    // A live monitor: single eligible slot, real checker thread, golden
+    // pool matching the bench geometry.  With the `monitor-off` feature
+    // this degenerates to the disabled handle (reported as such).
+    let monitor = Monitor::start(
+        MonitorConfig {
+            sample_every: 16,
+            ..MonitorConfig::default()
+        },
+        CoordinatorConfig {
+            tile_n: width,
+            bits,
+            ..CoordinatorConfig::default()
+        },
+        vec![true],
+        Arc::new(vec![AtomicBool::new(true)]),
+    );
+    let handle = monitor.handle();
+    let on_label = if monitor.is_enabled() {
+        "monitor-on (1-in-16) w256 b8 et_off"
+    } else {
+        "monitor-on (compiled out) w256 b8 et_off"
+    };
+    let r_on = bench(on_label, || {
+        let y = schedule_batch(&mut tile, &plan, &reqs, bits, &mut arena);
+        for (i, q) in reqs.iter().enumerate() {
+            if handle.wants_sample(0) {
+                handle.enqueue(ShadowSample {
+                    shard: 0,
+                    request: q.clone(),
+                    blocks: vec![width],
+                    observed: y.values[i].clone(),
+                });
+            }
+        }
+        black_box(y);
+    });
+    r_on.report();
+
+    let off_overhead = r_off.min.as_secs_f64() / r_plain.min.as_secs_f64() - 1.0;
+    let on_overhead = r_on.min.as_secs_f64() / r_plain.min.as_secs_f64() - 1.0;
+    println!(
+        "  -> monitor-off overhead {:.2}%, monitor-on {:.2}% (both gated <= 2.00%); \
+         checker saw {} samples ({} dropped)",
+        off_overhead * 100.0,
+        on_overhead * 100.0,
+        monitor.checked_total(),
+        monitor.dropped_total()
+    );
+
+    let path = "BENCH_fidelity.json";
+    match write_json(
+        path,
+        "fidelity",
+        &[r_plain, r_off, r_on],
+        &[
+            ("monitor_off_overhead", off_overhead),
+            ("monitor_on_overhead", on_overhead),
+        ],
+    ) {
+        Ok(()) => println!("fidelity baseline written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    if off_overhead > 0.02 || on_overhead > 0.02 {
+        eprintln!(
+            "FAIL: fidelity monitoring costs {:.2}% (off-handle) / {:.2}% (on) \
+             over plain (gate <= 2%)",
+            off_overhead * 100.0,
+            on_overhead * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "monitor overhead {:.2}% off / {:.2}% on — gate <= 2% passed",
+        off_overhead * 100.0,
+        on_overhead * 100.0
     );
 }

@@ -16,6 +16,7 @@
 //! deterministic for a fixed (seed, worker count) and workers never
 //! contend on shared state — the hot loop is allocation-light.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -100,7 +101,7 @@ impl TransformRequest {
 struct TileJob {
     request_id: u64,
     reqs: Vec<TransformRequest>,
-    plan: TilePlan,
+    plan: Arc<TilePlan>,
 }
 
 struct TileResult {
@@ -145,7 +146,21 @@ pub struct Coordinator {
     /// results off the shared channel).
     pending_async: usize,
     metrics: Arc<Mutex<Metrics>>,
+    /// Per-pool [`TilePlan`] caches keyed by raw request width (uniform
+    /// pad-to-tile plans) and by explicit block partition.  Plan
+    /// resolution walks `plan::subtile_rows`' global mutex once per
+    /// block, so before these caches every submission paid one mutex
+    /// hit per block at the boundary; now a repeated shape is a single
+    /// `HashMap` probe and an `Arc` bump — the submission path is
+    /// lock-free in steady state.
+    uniform_plans: HashMap<usize, Arc<TilePlan>>,
+    partition_plans: HashMap<Vec<usize>, Arc<TilePlan>>,
 }
+
+/// Bound on the per-pool plan caches: serving workloads see a handful
+/// of shapes, but a pathological client cycling widths must not grow
+/// the maps without limit.
+const PLAN_CACHE_CAP: usize = 1024;
 
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Coordinator {
@@ -204,7 +219,38 @@ impl Coordinator {
             next_request: 0,
             pending_async: 0,
             metrics,
+            uniform_plans: HashMap::new(),
+            partition_plans: HashMap::new(),
         }
+    }
+
+    /// Resolve (and cache) the uniform pad-to-tile plan for a raw
+    /// request of `width` elements.
+    fn uniform_plan(&mut self, width: usize) -> Arc<TilePlan> {
+        if let Some(p) = self.uniform_plans.get(&width) {
+            return Arc::clone(p);
+        }
+        if self.uniform_plans.len() >= PLAN_CACHE_CAP {
+            self.uniform_plans.clear();
+        }
+        let p = Arc::new(TilePlan::uniform(self.config.tile_n, width));
+        self.uniform_plans.insert(width, Arc::clone(&p));
+        p
+    }
+
+    /// Resolve (and cache) the plan for an explicit block partition.
+    /// Only valid partitions are cached, so a bad partition keeps
+    /// erroring on every submission.
+    fn partition_plan(&mut self, blocks: &[usize]) -> Result<Arc<TilePlan>> {
+        if let Some(p) = self.partition_plans.get(blocks) {
+            return Ok(Arc::clone(p));
+        }
+        if self.partition_plans.len() >= PLAN_CACHE_CAP {
+            self.partition_plans.clear();
+        }
+        let p = Arc::new(TilePlan::new(self.config.tile_n, blocks)?);
+        self.partition_plans.insert(blocks.to_vec(), Arc::clone(&p));
+        Ok(p)
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -269,7 +315,7 @@ impl Coordinator {
         Self::validate(req)?;
         let (x, thresholds, plan) = match blocks {
             None => {
-                let plan = TilePlan::uniform(self.config.tile_n, req.x.len());
+                let plan = self.uniform_plan(req.x.len());
                 let mut x = req.x.clone();
                 x.resize(plan.width(), 0.0);
                 let mut th = req.thresholds_units.clone();
@@ -277,7 +323,7 @@ impl Coordinator {
                 (x, th, plan)
             }
             Some(blocks) => {
-                let plan = TilePlan::new(self.config.tile_n, blocks)?;
+                let plan = self.partition_plan(blocks)?;
                 if plan.width() != req.x.len() {
                     bail!(
                         "block partition {blocks:?} covers {} elements, but the request \
@@ -430,7 +476,7 @@ impl Coordinator {
     ) -> Result<Vec<Vec<f32>>> {
         self.ensure_no_pending_async()?;
         self.validate_config()?;
-        let plan = TilePlan::new(self.config.tile_n, blocks)?;
+        let plan = self.partition_plan(blocks)?;
         for req in reqs {
             Self::validate(req)?;
             if req.x.len() != plan.width() {
@@ -467,7 +513,7 @@ impl Coordinator {
             jobs.push(TileJob {
                 request_id: id,
                 reqs: reqs[off..off + take].to_vec(),
-                plan: plan.clone(),
+                plan: Arc::clone(&plan),
             });
             chunk_starts.push(off);
             off += take;
@@ -842,6 +888,38 @@ mod tests {
             assert_eq!(c.transform(&req).unwrap().len(), 16, "bits={bits}");
             c.shutdown();
         }
+    }
+
+    #[test]
+    fn plan_cache_reuses_resolved_plans_across_submissions() {
+        // The submission boundary must not re-resolve (and re-walk the
+        // global `subtile_rows` mutex for) a shape it has already seen:
+        // the second submission of each shape reuses the same Arc.
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let raw = TransformRequest::plain(sample(20, 700));
+        c.transform(&raw).unwrap();
+        let cached = Arc::clone(c.uniform_plans.get(&20).expect("uniform plan cached"));
+        c.transform(&raw).unwrap();
+        assert!(
+            Arc::ptr_eq(&cached, c.uniform_plans.get(&20).unwrap()),
+            "repeat submission must reuse the cached uniform plan"
+        );
+        let planned = TransformRequest::plain(sample(20, 701));
+        c.transform_planned(&planned, &[16, 4]).unwrap();
+        let cached = Arc::clone(
+            c.partition_plans
+                .get([16usize, 4].as_slice())
+                .expect("partition plan cached"),
+        );
+        c.transform_planned(&planned, &[16, 4]).unwrap();
+        assert!(
+            Arc::ptr_eq(&cached, c.partition_plans.get([16usize, 4].as_slice()).unwrap()),
+            "repeat submission must reuse the cached partition plan"
+        );
+        // Invalid partitions are never cached and keep failing cleanly.
+        assert!(c.transform_planned(&planned, &[32]).is_err());
+        assert!(c.partition_plans.get([32usize].as_slice()).is_none());
+        c.shutdown();
     }
 
     #[test]

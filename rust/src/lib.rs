@@ -17,6 +17,13 @@
 //!   per-stage latency histograms in `/metrics`, recent traces at
 //!   `GET /debug/traces` (plain JSON or Chrome `trace_event`) and
 //!   slow-request structured logs.
+//! * **Fidelity seam ([`monitor`])** — sampled shadow verification of
+//!   noisy/analog shards: 1-in-K served slices re-execute through a
+//!   private digital golden pool with the same pinned quantization
+//!   scales, divergence is tracked per shard slot as an EWMA in
+//!   quantizer LSBs, and a drifting slot degrades `/readyz` and is
+//!   respawned by the batcher health tick.  Exposed as the
+//!   `repro_fidelity_*` metric family and `GET /debug/fidelity`.
 //! * **Execution seam ([`exec`])** — the [`exec::TransformExecutor`]
 //!   trait unifying every way a BWHT transform can run (in-process
 //!   float/quantized/noisy loops, one coordinator pool, a shard set);
@@ -45,6 +52,7 @@ pub mod bitplane;
 pub mod coordinator;
 pub mod energy;
 pub mod exec;
+pub mod monitor;
 pub mod nn;
 pub mod npy;
 pub mod quant;

@@ -14,6 +14,7 @@
 //!                 [--max-batch N] [--max-wait-us U] [--keepalive-requests N]
 //!                 [--max-inflight N] [--rate R] [--burst B] [--duration-s S]
 //!                 [--trace-sample K] [--slow-ms MS]
+//!                 [--fidelity-sample K] [--drift-threshold X]
 //! repro report    [--vdd V] [--avg-cycles C]
 //! ```
 //!
@@ -107,6 +108,38 @@ fn bits_flag(flags: &HashMap<String, String>) -> Result<u32> {
         bail!("--bits must be in 1..=16 magnitude bitplanes (8 in the paper), got {bits}");
     }
     Ok(bits)
+}
+
+/// Parse and validate `--fidelity-sample K` (shadow-verify 1 slice in
+/// every K served by a noisy/analog shard; 0 disables the monitor).
+/// Mirrors the `--tile`/`--bits` pattern: a malformed flag is a clean
+/// CLI error instead of silently falling back to the default.
+fn fidelity_sample_flag(flags: &HashMap<String, String>) -> Result<u32> {
+    match flags.get("fidelity-sample").map(String::as_str) {
+        None => Ok(16),
+        Some(s) => s.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "--fidelity-sample must be a non-negative integer (0 disables), got {s:?}"
+            )
+        }),
+    }
+}
+
+/// Parse and validate `--drift-threshold X` (quantizer LSBs of mean
+/// divergence a shard slot's EWMA may reach before it is recycled).
+fn drift_threshold_flag(flags: &HashMap<String, String>) -> Result<f64> {
+    let threshold: f64 = match flags.get("drift-threshold").map(String::as_str) {
+        None => 1.0,
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--drift-threshold must be a number, got {s:?}"))?,
+    };
+    if !(threshold.is_finite() && threshold > 0.0) {
+        bail!(
+            "--drift-threshold must be a positive, finite number of quantizer LSBs, got {threshold}"
+        );
+    }
+    Ok(threshold)
 }
 
 fn backend_from_flags(flags: &HashMap<String, String>) -> Backend {
@@ -410,6 +443,8 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         auto_respawn: !flags.contains_key("no-respawn"),
         trace_sample: flag(flags, "trace-sample", 1u32),
         slow_ms: flag(flags, "slow-ms", 0u64),
+        fidelity_sample: fidelity_sample_flag(flags)?,
+        drift_threshold: drift_threshold_flag(flags)?,
         ..Default::default()
     };
     let has_model = config.model.is_some();
@@ -432,6 +467,7 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
     println!("  GET  /healthz       liveness probe");
     println!("  GET  /readyz        readiness probe (503 + per-shard JSON when degraded)");
     println!("  GET  /debug/traces  recent request traces (?n=K, ?format=chrome)");
+    println!("  GET  /debug/fidelity  shadow-verification snapshot (?n=K recent checks)");
     if duration_s == 0 {
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -589,7 +625,12 @@ SUBCOMMANDS:
               (--trace-sample K, 0 disables) into /debug/traces and the
               per-stage /metrics histograms, and --slow-ms MS logs any
               traced request slower than MS to stderr as structured
-              JSON; without --listen: offline batch benchmark
+              JSON; with a noisy/analog backend, --fidelity-sample K
+              shadow-verifies 1-in-K served slices against the digital
+              golden path (0 disables) and --drift-threshold X recycles
+              any shard whose divergence EWMA exceeds X quantizer LSBs
+              (see GET /debug/fidelity and repro_fidelity_* metrics);
+              without --listen: offline batch benchmark
   report      energy model: Table I, Fig. 12 power breakdown
   help        this text
 ";

@@ -1,0 +1,942 @@
+//! Fidelity monitor: sampled shadow verification of noisy/analog shards
+//! against the digital golden path, with closed-loop drift detection.
+//!
+//! The ADC/DAC-free scheme trains against the highly quantized
+//! comparator outputs, so an analog crossbar that drifts (rising
+//! `sigma_ant`, device aging) corrupts inference *silently* — latency,
+//! throughput and readiness all look healthy.  This module watches
+//! numerical health: 1-in-K slices served by a non-digital shard are
+//! also enqueued to a dedicated checker thread that re-executes the
+//! exact same sub-request (same block partition, same pinned
+//! quantization scale, same early-termination thresholds) through a
+//! private digital [`Coordinator`] and measures the divergence in
+//! quantized units.
+//!
+//! ```text
+//!   router drain ──▶ MonitorHandle::wants_sample(shard)?   (hot path:
+//!        │                                                  1–2 branches)
+//!        ▼ sampled
+//!   bounded queue (drop-OLDEST on overflow — the monitor can lag,
+//!        │          but it can never back-pressure serving)
+//!        ▼
+//!   checker thread: digital golden re-execution ─▶ DivergenceRecord
+//!        │                                          (sign flips, |Δq|,
+//!        ▼                                          per-block mismatch)
+//!   per-slot EWMA > --drift-threshold?  ─▶ clear slot_health flag:
+//!                                          /readyz degrades, batcher
+//!                                          health tick respawns the slot
+//! ```
+//!
+//! Everything is observable: `repro_fidelity_*` on `/metrics`,
+//! `GET /debug/fidelity` for a JSON snapshot, and the `monitor-off`
+//! cargo feature compiles the whole subsystem down to dead branches
+//! (mirroring `trace-off`).
+//!
+//! Divergence is measured on the quantization lattice.  Every transform
+//! output is an integer PSUM times the block's quantization scale, so
+//! `Δq = (observed − golden) / scale` is the error in quantizer LSBs —
+//! comparable across requests, bits and input magnitudes.  A digital
+//! shard shadow-checks to *exactly zero* divergence (the golden path is
+//! the same arithmetic), which is this module's like-for-like canary.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, TileKind, TransformRequest};
+use crate::quant::Quantizer;
+use crate::util::json::Json;
+
+/// Fidelity monitor configuration (`--fidelity-sample`,
+/// `--drift-threshold` on the CLI).
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Shadow-verify 1-in-K sampled slices on non-digital shards;
+    /// 0 disables the monitor entirely.
+    pub sample_every: u32,
+    /// A slot whose divergence EWMA (mean |Δq| per element, in
+    /// quantizer LSBs) exceeds this is marked drifting/unhealthy.
+    pub drift_threshold: f64,
+    /// EWMA smoothing factor α (weight of the newest check).
+    pub ewma_alpha: f64,
+    /// Last-N divergence records kept for `/debug/fidelity`.
+    pub recent_capacity: usize,
+    /// Bounded shadow-sample queue depth; on overflow the OLDEST
+    /// sample is dropped so the hot path never blocks.
+    pub queue_depth: usize,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            sample_every: 16,
+            drift_threshold: 1.0,
+            ewma_alpha: 0.2,
+            recent_capacity: 64,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// One sampled slice captured at the router's drain point: the exact
+/// sub-request a shard executed plus what it returned.
+#[derive(Debug, Clone)]
+pub struct ShadowSample {
+    /// Shard slot that served the slice.
+    pub shard: usize,
+    /// The sub-request (pinned scale and thresholds included), exactly
+    /// as submitted to the shard.
+    pub request: TransformRequest,
+    /// Block partition of the sub-request.
+    pub blocks: Vec<usize>,
+    /// The shard's output values.
+    pub observed: Vec<f32>,
+}
+
+/// Divergence of one shadow-checked slice vs the digital golden path.
+#[derive(Debug, Clone)]
+pub struct DivergenceRecord {
+    pub shard: usize,
+    /// Output elements compared.
+    pub elements: usize,
+    /// Elements whose observed and golden outputs have strictly
+    /// opposite (nonzero) signs.
+    pub sign_flips: u64,
+    /// Elements off the golden lattice point by more than half an LSB.
+    pub mismatched: u64,
+    /// Mean |Δq| per element, in quantizer LSBs.
+    pub mean_abs_dq: f64,
+    /// Max |Δq| over the slice, in quantizer LSBs.
+    pub max_abs_dq: f64,
+    /// Per-block mismatched-element fraction, one entry per block.
+    pub block_mismatch: Vec<f64>,
+}
+
+/// Bucket bounds for the mean-|Δq| divergence histogram (LSB units).
+pub const DELTA_BUCKETS: &[f64] = &[0.01, 0.05, 0.25, 1.0, 4.0, 16.0, 64.0, 256.0];
+
+/// Bucket bounds for the per-block mismatch-fraction histogram.
+pub const MISMATCH_BUCKETS: &[f64] = &[0.0, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0];
+
+/// A fixed-bound histogram (the divergence stats are unit-less ratios /
+/// LSB counts, so the latency-tuned `LatencyHistogram` buckets do not
+/// fit).  Rendered cumulatively for Prometheus.
+#[derive(Debug, Clone)]
+pub struct FixedHistogram {
+    bounds: &'static [f64],
+    /// One count per bound, plus a trailing overflow (+Inf) slot.
+    counts: Vec<u64>,
+    sum: f64,
+}
+
+impl FixedHistogram {
+    pub fn new(bounds: &'static [f64]) -> FixedHistogram {
+        FixedHistogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+    }
+
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Cumulative counts, one per bound plus the trailing +Inf slot.
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut total = 0u64;
+        self.counts
+            .iter()
+            .map(|&c| {
+                total += c;
+                total
+            })
+            .collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// Public per-slot view for `/debug/fidelity` and `/metrics`.
+#[derive(Debug, Clone)]
+pub struct SlotSnapshot {
+    pub shard: usize,
+    /// Whether the slot runs a non-digital backend (only those sample).
+    pub eligible: bool,
+    /// Divergence EWMA in quantizer LSBs.
+    pub ewma: f64,
+    /// Shadow checks absorbed for this slot (resets on respawn).
+    pub checks: u64,
+    /// Currently marked drifting (cleared when the slot respawns).
+    pub flagged: bool,
+}
+
+#[derive(Debug, Default)]
+struct SlotState {
+    ewma: f64,
+    checks: u64,
+    flagged: bool,
+}
+
+struct Shared {
+    config: MonitorConfig,
+    eligible: Vec<bool>,
+    /// Hot-path 1-in-K sampling counter (eligible-shard drains only).
+    counter: AtomicU64,
+    checked: AtomicU64,
+    dropped: AtomicU64,
+    flagged_total: AtomicU64,
+    drift_respawns: AtomicU64,
+    check_errors: AtomicU64,
+    queue: Mutex<VecDeque<ShadowSample>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    slots: Vec<Mutex<SlotState>>,
+    recent: Mutex<VecDeque<DivergenceRecord>>,
+    delta_hist: Mutex<FixedHistogram>,
+    mismatch_hist: Mutex<FixedHistogram>,
+    /// The `ShardSet`'s per-slot readiness flags: a drift-flagged slot
+    /// degrades `/readyz` immediately, without waiting for the batcher.
+    slot_health: Arc<Vec<AtomicBool>>,
+}
+
+impl Shared {
+    /// Fold one checked record into the per-slot EWMA, the histograms
+    /// and the recent ring; flag the slot if its EWMA crossed the
+    /// threshold.
+    fn absorb(&self, rec: DivergenceRecord) {
+        self.checked.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut h = self.delta_hist.lock().expect("delta hist poisoned");
+            h.record(rec.mean_abs_dq);
+        }
+        {
+            let mut h = self.mismatch_hist.lock().expect("mismatch hist poisoned");
+            for &f in &rec.block_mismatch {
+                h.record(f);
+            }
+        }
+        if let Some(slot) = self.slots.get(rec.shard) {
+            let mut s = slot.lock().expect("slot state poisoned");
+            s.checks += 1;
+            s.ewma = if s.checks == 1 {
+                rec.mean_abs_dq
+            } else {
+                self.config.ewma_alpha * rec.mean_abs_dq
+                    + (1.0 - self.config.ewma_alpha) * s.ewma
+            };
+            if !s.flagged && s.ewma > self.config.drift_threshold {
+                s.flagged = true;
+                self.flagged_total.fetch_add(1, Ordering::Relaxed);
+                if let Some(flag) = self.slot_health.get(rec.shard) {
+                    flag.store(false, Ordering::Release);
+                }
+            }
+        }
+        let mut r = self.recent.lock().expect("recent ring poisoned");
+        if r.len() >= self.config.recent_capacity.max(1) {
+            r.pop_front();
+        }
+        r.push_back(rec);
+    }
+}
+
+/// The hot-path capture handle threaded into the shard router — the
+/// monitor-side analogue of [`crate::trace::TraceHandle`].  A disabled
+/// monitor (or the `monitor-off` feature) hands out an inactive handle:
+/// every check is one dead branch.
+#[derive(Clone)]
+pub struct MonitorHandle(Option<Arc<Shared>>);
+
+impl MonitorHandle {
+    pub fn inactive() -> MonitorHandle {
+        MonitorHandle(None)
+    }
+
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Should this drained slice be shadow-verified?  Inactive handle
+    /// or digital shard: no (1–2 branches).  Otherwise 1-in-K over the
+    /// eligible-slice counter.
+    pub fn wants_sample(&self, shard: usize) -> bool {
+        let Some(s) = &self.0 else { return false };
+        if !s.eligible.get(shard).copied().unwrap_or(false) {
+            return false;
+        }
+        s.counter.fetch_add(1, Ordering::Relaxed) % u64::from(s.config.sample_every.max(1)) == 0
+    }
+
+    /// Hand a sampled slice to the checker.  Never blocks: when the
+    /// bounded queue is full the OLDEST queued sample is dropped (and
+    /// counted) — monitoring lags under load, serving does not.
+    pub fn enqueue(&self, sample: ShadowSample) {
+        let Some(s) = &self.0 else { return };
+        {
+            let mut q = s.queue.lock().expect("monitor queue poisoned");
+            if q.len() >= s.config.queue_depth.max(1) {
+                q.pop_front();
+                s.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            q.push_back(sample);
+        }
+        s.cv.notify_one();
+    }
+}
+
+/// Re-execute one sampled slice through the digital golden coordinator
+/// and measure its divergence in quantized units.
+///
+/// The golden pool re-runs the *same* `TransformRequest` (pinned scale
+/// and thresholds included) over the *same* block partition, so a
+/// digital source shard produces bit-identical output and exactly zero
+/// divergence; anything nonzero is the analog backend's doing.
+pub fn shadow_check(golden: &mut Coordinator, sample: &ShadowSample) -> Result<DivergenceRecord> {
+    let expect = golden.transform_planned(&sample.request, &sample.blocks)?;
+    if expect.len() != sample.observed.len() {
+        bail!(
+            "shadow output width {} does not match observed width {}",
+            expect.len(),
+            sample.observed.len()
+        );
+    }
+    let quant = Quantizer::new(golden.config().bits);
+    let mut sign_flips = 0u64;
+    let mut mismatched = 0u64;
+    let mut abs_sum = 0f64;
+    let mut abs_max = 0f64;
+    let mut block_mismatch = Vec::with_capacity(sample.blocks.len());
+    let mut off = 0usize;
+    for &w in &sample.blocks {
+        // Per-block scale: pinned when the request pins one (the NN
+        // executor path), otherwise re-derived from the block's own
+        // amax — the same rule the shard applied, so Δ/scale is the
+        // error on the lattice the shard actually quantized to.
+        let scale = f64::from(
+            sample
+                .request
+                .scale
+                .unwrap_or_else(|| quant.scale_for(&sample.request.x[off..off + w])),
+        );
+        let mut block_miss = 0u64;
+        for i in off..off + w {
+            let obs = f64::from(sample.observed[i]);
+            let exp = f64::from(expect[i]);
+            let dq = (obs - exp) / scale;
+            let a = dq.abs();
+            abs_sum += a;
+            if a > abs_max {
+                abs_max = a;
+            }
+            if a > 0.5 {
+                mismatched += 1;
+                block_miss += 1;
+            }
+            if obs * exp < 0.0 {
+                sign_flips += 1;
+            }
+        }
+        block_mismatch.push(block_miss as f64 / w as f64);
+        off += w;
+    }
+    Ok(DivergenceRecord {
+        shard: sample.shard,
+        elements: expect.len(),
+        sign_flips,
+        mismatched,
+        mean_abs_dq: abs_sum / expect.len().max(1) as f64,
+        max_abs_dq: abs_max,
+        block_mismatch,
+    })
+}
+
+fn checker_loop(shared: Arc<Shared>, golden_config: CoordinatorConfig) {
+    let mut golden = Coordinator::new(golden_config);
+    loop {
+        let sample = {
+            let mut q = shared.queue.lock().expect("monitor queue poisoned");
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.cv.wait(q).expect("monitor queue poisoned");
+            }
+        };
+        let Some(sample) = sample else { break };
+        match shadow_check(&mut golden, &sample) {
+            Ok(rec) => shared.absorb(rec),
+            Err(_) => {
+                shared.check_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    golden.shutdown();
+}
+
+/// The fidelity monitor: owns the checker thread and the divergence
+/// state; hands the router a cheap capture handle.
+pub struct Monitor {
+    shared: Option<Arc<Shared>>,
+    checker: Option<JoinHandle<()>>,
+}
+
+impl Monitor {
+    /// Start the monitor.  `golden` is the serving pool's coordinator
+    /// config — the checker derives a single-worker *digital* pool from
+    /// it (same tile/bits), which is what makes the comparison
+    /// like-for-like.  `eligible[s]` marks the slots running
+    /// non-digital backends; with none (or `sample_every == 0`, or the
+    /// `monitor-off` feature) the monitor is disabled and costs one
+    /// dead branch per drain.
+    pub fn start(
+        config: MonitorConfig,
+        golden: CoordinatorConfig,
+        eligible: Vec<bool>,
+        slot_health: Arc<Vec<AtomicBool>>,
+    ) -> Monitor {
+        Monitor::start_inner(config, golden, eligible, slot_health, true)
+    }
+
+    fn start_inner(
+        config: MonitorConfig,
+        golden: CoordinatorConfig,
+        eligible: Vec<bool>,
+        slot_health: Arc<Vec<AtomicBool>>,
+        spawn_checker: bool,
+    ) -> Monitor {
+        let active = !cfg!(feature = "monitor-off")
+            && config.sample_every > 0
+            && eligible.iter().any(|&e| e);
+        if !active {
+            return Monitor::disabled();
+        }
+        let golden_config = CoordinatorConfig {
+            kind: TileKind::Digital,
+            workers: 1,
+            seed: 0,
+            ..golden
+        };
+        let shared = Arc::new(Shared {
+            eligible,
+            counter: AtomicU64::new(0),
+            checked: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            flagged_total: AtomicU64::new(0),
+            drift_respawns: AtomicU64::new(0),
+            check_errors: AtomicU64::new(0),
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            slots: (0..slot_health.len()).map(|_| Mutex::new(SlotState::default())).collect(),
+            recent: Mutex::new(VecDeque::new()),
+            delta_hist: Mutex::new(FixedHistogram::new(DELTA_BUCKETS)),
+            mismatch_hist: Mutex::new(FixedHistogram::new(MISMATCH_BUCKETS)),
+            slot_health,
+            config,
+        });
+        let checker = if spawn_checker {
+            let shared = Arc::clone(&shared);
+            Some(std::thread::spawn(move || checker_loop(shared, golden_config)))
+        } else {
+            None
+        };
+        Monitor {
+            shared: Some(shared),
+            checker,
+        }
+    }
+
+    /// A permanently inactive monitor (digital-only serving, tests).
+    pub fn disabled() -> Monitor {
+        Monitor {
+            shared: None,
+            checker: None,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    pub fn handle(&self) -> MonitorHandle {
+        MonitorHandle(self.shared.clone())
+    }
+
+    pub fn sample_every(&self) -> u32 {
+        self.shared.as_ref().map_or(0, |s| s.config.sample_every)
+    }
+
+    pub fn drift_threshold(&self) -> f64 {
+        self.shared
+            .as_ref()
+            .map_or(0.0, |s| s.config.drift_threshold)
+    }
+
+    pub fn checked_total(&self) -> u64 {
+        self.load(|s| &s.checked)
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        self.load(|s| &s.dropped)
+    }
+
+    pub fn flagged_total(&self) -> u64 {
+        self.load(|s| &s.flagged_total)
+    }
+
+    pub fn drift_respawns_total(&self) -> u64 {
+        self.load(|s| &s.drift_respawns)
+    }
+
+    pub fn check_errors_total(&self) -> u64 {
+        self.load(|s| &s.check_errors)
+    }
+
+    fn load(&self, f: impl Fn(&Shared) -> &AtomicU64) -> u64 {
+        self.shared
+            .as_ref()
+            .map_or(0, |s| f(s).load(Ordering::Relaxed))
+    }
+
+    /// Record that the batcher respawned a slot because of drift.
+    pub fn note_drift_respawn(&self) {
+        if let Some(s) = &self.shared {
+            s.drift_respawns.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Slots currently marked drifting (awaiting a recycle by the
+    /// batcher health tick).
+    pub fn flagged_slots(&self) -> Vec<usize> {
+        let Some(s) = &self.shared else {
+            return Vec::new();
+        };
+        s.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.lock().expect("slot state poisoned").flagged)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Reset a slot's drift state after it respawned as a fresh pool.
+    pub fn reset_slot(&self, shard: usize) {
+        let Some(s) = &self.shared else { return };
+        if let Some(slot) = s.slots.get(shard) {
+            let mut st = slot.lock().expect("slot state poisoned");
+            *st = SlotState::default();
+        }
+    }
+
+    /// Per-slot snapshots (empty when disabled).
+    pub fn slots(&self) -> Vec<SlotSnapshot> {
+        let Some(s) = &self.shared else {
+            return Vec::new();
+        };
+        s.slots
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                let st = slot.lock().expect("slot state poisoned");
+                SlotSnapshot {
+                    shard: i,
+                    eligible: s.eligible.get(i).copied().unwrap_or(false),
+                    ewma: st.ewma,
+                    checks: st.checks,
+                    flagged: st.flagged,
+                }
+            })
+            .collect()
+    }
+
+    /// The newest `n` divergence records, newest first.
+    pub fn recent(&self, n: usize) -> Vec<DivergenceRecord> {
+        let Some(s) = &self.shared else {
+            return Vec::new();
+        };
+        let ring = s.recent.lock().expect("recent ring poisoned");
+        ring.iter().rev().take(n).cloned().collect()
+    }
+
+    /// Snapshots of the (mean-|Δq|, per-block mismatch) histograms.
+    /// A disabled monitor reports empty histograms with the same bucket
+    /// structure, so the `/metrics` exposition shape never changes.
+    pub fn histograms(&self) -> (FixedHistogram, FixedHistogram) {
+        match &self.shared {
+            Some(s) => (
+                s.delta_hist.lock().expect("delta hist poisoned").clone(),
+                s.mismatch_hist
+                    .lock()
+                    .expect("mismatch hist poisoned")
+                    .clone(),
+            ),
+            None => (
+                FixedHistogram::new(DELTA_BUCKETS),
+                FixedHistogram::new(MISMATCH_BUCKETS),
+            ),
+        }
+    }
+
+    #[cfg(test)]
+    #[allow(dead_code)] // only exercised in non-`monitor-off` test builds
+    fn queue_len(&self) -> usize {
+        self.shared.as_ref().map_or(0, |s| {
+            s.queue.lock().expect("monitor queue poisoned").len()
+        })
+    }
+
+    /// The `GET /debug/fidelity` snapshot: config + counters + per-slot
+    /// EWMA state + the newest `n` divergence records.
+    pub fn fidelity_json(&self, n: usize) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("enabled".into(), Json::Bool(self.is_enabled()));
+        obj.insert(
+            "sample_every".into(),
+            Json::Num(f64::from(self.sample_every())),
+        );
+        obj.insert(
+            "drift_threshold".into(),
+            Json::Num(self.drift_threshold()),
+        );
+        obj.insert("checked".into(), Json::Num(self.checked_total() as f64));
+        obj.insert("dropped".into(), Json::Num(self.dropped_total() as f64));
+        obj.insert("flagged".into(), Json::Num(self.flagged_total() as f64));
+        obj.insert(
+            "drift_respawns".into(),
+            Json::Num(self.drift_respawns_total() as f64),
+        );
+        obj.insert(
+            "check_errors".into(),
+            Json::Num(self.check_errors_total() as f64),
+        );
+        let slots = self
+            .slots()
+            .into_iter()
+            .map(|s| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("shard".into(), Json::Num(s.shard as f64));
+                o.insert("eligible".into(), Json::Bool(s.eligible));
+                o.insert("ewma".into(), Json::Num(s.ewma));
+                o.insert("checks".into(), Json::Num(s.checks as f64));
+                o.insert("flagged".into(), Json::Bool(s.flagged));
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("slots".into(), Json::Arr(slots));
+        let recent = self
+            .recent(n)
+            .into_iter()
+            .map(|r| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("shard".into(), Json::Num(r.shard as f64));
+                o.insert("elements".into(), Json::Num(r.elements as f64));
+                o.insert("sign_flips".into(), Json::Num(r.sign_flips as f64));
+                o.insert("mismatched".into(), Json::Num(r.mismatched as f64));
+                o.insert("mean_abs_dq".into(), Json::Num(r.mean_abs_dq));
+                o.insert("max_abs_dq".into(), Json::Num(r.max_abs_dq));
+                o.insert(
+                    "block_mismatch".into(),
+                    Json::Arr(r.block_mismatch.iter().map(|&f| Json::Num(f)).collect()),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("recent".into(), Json::Arr(recent));
+        Json::Obj(obj)
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        if let Some(s) = &self.shared {
+            s.shutdown.store(true, Ordering::Release);
+            s.cv.notify_all();
+        }
+        if let Some(h) = self.checker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn health(n: usize) -> Arc<Vec<AtomicBool>> {
+        Arc::new((0..n).map(|_| AtomicBool::new(true)).collect())
+    }
+
+    fn sample_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    #[cfg(not(feature = "monitor-off"))]
+    fn digital_shadow_check_reports_zero_divergence_across_random_partitions_and_bits() {
+        // The like-for-like canary: a *digital* shard re-checked through
+        // the digital golden path must diverge by exactly zero — same
+        // pinned scales, same thresholds, same partition — across random
+        // partitions, bits, threshold patterns and scale pinning.
+        let mut rng = Rng::seed_from_u64(0xF1DE);
+        for case in 0..40 {
+            let bits = 1 + (rng.int_range(0, 7) as u32);
+            let n_blocks = 1 + rng.int_range(0, 3) as usize;
+            let blocks: Vec<usize> = (0..n_blocks)
+                .map(|_| [4usize, 8, 16][rng.int_range(0, 2) as usize])
+                .collect();
+            let width: usize = blocks.iter().sum();
+            let x = sample_vec(&mut rng, width);
+            let thresholds: Vec<f64> = (0..width)
+                .map(|_| rng.int_range(0, 2) as f64)
+                .collect();
+            let scale = if case % 2 == 0 {
+                Some(Quantizer::new(bits).scale_for(&x))
+            } else {
+                None
+            };
+            let request = TransformRequest {
+                x,
+                thresholds_units: thresholds,
+                scale,
+            };
+            let config = CoordinatorConfig {
+                bits,
+                workers: 1,
+                ..Default::default()
+            };
+            let mut shard = Coordinator::new(config.clone());
+            let observed = shard.transform_planned(&request, &blocks).unwrap();
+            shard.shutdown();
+            let mut golden = Coordinator::new(config);
+            let rec = shadow_check(
+                &mut golden,
+                &ShadowSample {
+                    shard: 0,
+                    request,
+                    blocks: blocks.clone(),
+                    observed,
+                },
+            )
+            .unwrap();
+            golden.shutdown();
+            assert_eq!(rec.sign_flips, 0, "case {case}: {blocks:?} bits {bits}");
+            assert_eq!(rec.mismatched, 0, "case {case}");
+            assert_eq!(rec.mean_abs_dq, 0.0, "case {case}");
+            assert_eq!(rec.max_abs_dq, 0.0, "case {case}");
+            assert!(rec.block_mismatch.iter().all(|&f| f == 0.0), "case {case}");
+            assert_eq!(rec.elements, width, "case {case}");
+        }
+    }
+
+    #[test]
+    #[cfg(not(feature = "monitor-off"))]
+    fn gross_divergence_flags_the_slot_and_degrades_its_health_flag() {
+        let slot_health = health(2);
+        let monitor = Monitor::start(
+            MonitorConfig {
+                sample_every: 1,
+                drift_threshold: 1.0,
+                ..Default::default()
+            },
+            CoordinatorConfig::default(),
+            vec![false, true],
+            Arc::clone(&slot_health),
+        );
+        assert!(monitor.is_enabled());
+        let handle = monitor.handle();
+        let mut rng = Rng::seed_from_u64(9);
+        let x = sample_vec(&mut rng, 16);
+        let request = TransformRequest::plain(x.clone());
+        // "Observed" output grossly off the golden lattice: 10 LSBs of
+        // bias on every element.
+        let mut golden = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let expect = golden.transform_planned(&request, &[16]).unwrap();
+        golden.shutdown();
+        let scale = Quantizer::new(8).scale_for(&x);
+        let observed: Vec<f32> = expect.iter().map(|v| v + 10.0 * scale).collect();
+        for _ in 0..3 {
+            assert!(handle.wants_sample(1), "sample_every=1 samples everything");
+            handle.enqueue(ShadowSample {
+                shard: 1,
+                request: request.clone(),
+                blocks: vec![16],
+                observed: observed.clone(),
+            });
+        }
+        // The checker flags asynchronously; wait for it.
+        let t0 = std::time::Instant::now();
+        while monitor.flagged_slots().is_empty() {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "checker never flagged the drifting slot"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(monitor.flagged_slots(), vec![1]);
+        assert!(
+            !slot_health[1].load(Ordering::Acquire),
+            "flagging must clear the slot's readiness flag"
+        );
+        assert!(slot_health[0].load(Ordering::Acquire));
+        assert_eq!(monitor.flagged_total(), 1);
+        assert!(monitor.checked_total() >= 1);
+        let slots = monitor.slots();
+        assert!(slots[1].ewma > 1.0 && slots[1].flagged && slots[1].checks >= 1);
+        assert!(!slots[0].flagged && slots[0].checks == 0);
+        let recent = monitor.recent(8);
+        assert!(!recent.is_empty());
+        assert!(recent[0].mean_abs_dq > 5.0 && recent[0].mismatched == 16);
+        let (delta, mismatch) = monitor.histograms();
+        assert!(delta.count() >= 1 && mismatch.count() >= 1);
+        // Recycle: the batcher resets the slot after respawning it.
+        monitor.note_drift_respawn();
+        monitor.reset_slot(1);
+        assert_eq!(monitor.drift_respawns_total(), 1);
+        assert!(monitor.flagged_slots().is_empty());
+        assert_eq!(monitor.slots()[1].checks, 0);
+        // The JSON snapshot parses and carries the slot array.
+        let text = monitor.fidelity_json(4).to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("slots").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+
+    #[test]
+    #[cfg(not(feature = "monitor-off"))]
+    fn bounded_queue_drops_oldest_without_blocking() {
+        // No checker thread: the queue fills deterministically.
+        let monitor = Monitor::start_inner(
+            MonitorConfig {
+                sample_every: 1,
+                queue_depth: 2,
+                ..Default::default()
+            },
+            CoordinatorConfig::default(),
+            vec![true],
+            health(1),
+            false,
+        );
+        let handle = monitor.handle();
+        for seed in 0..4u64 {
+            let mut rng = Rng::seed_from_u64(seed);
+            handle.enqueue(ShadowSample {
+                shard: 0,
+                request: TransformRequest::plain(sample_vec(&mut rng, 16)),
+                blocks: vec![16],
+                observed: vec![0.0; 16],
+            });
+        }
+        assert_eq!(monitor.queue_len(), 2, "queue is bounded at depth 2");
+        assert_eq!(
+            monitor.dropped_total(),
+            2,
+            "two oldest samples were dropped, not the newest"
+        );
+    }
+
+    #[test]
+    #[cfg(not(feature = "monitor-off"))]
+    fn sampling_gate_is_one_in_k_and_skips_digital_slots() {
+        let monitor = Monitor::start_inner(
+            MonitorConfig {
+                sample_every: 4,
+                ..Default::default()
+            },
+            CoordinatorConfig::default(),
+            vec![true, false],
+            health(2),
+            false,
+        );
+        let handle = monitor.handle();
+        let pattern: Vec<bool> = (0..8).map(|_| handle.wants_sample(0)).collect();
+        assert_eq!(
+            pattern,
+            vec![true, false, false, false, true, false, false, false]
+        );
+        assert!(
+            (0..8).all(|_| !handle.wants_sample(1)),
+            "digital slots never sample"
+        );
+        assert!(!MonitorHandle::inactive().is_active());
+        assert!(!MonitorHandle::inactive().wants_sample(0));
+    }
+
+    #[test]
+    fn disabled_configurations_cost_one_dead_branch() {
+        // sample_every = 0 and all-digital slot maps both disable the
+        // monitor outright.
+        for (k, eligible) in [(0u32, vec![true]), (16, vec![false, false])] {
+            let m = Monitor::start(
+                MonitorConfig {
+                    sample_every: k,
+                    ..Default::default()
+                },
+                CoordinatorConfig::default(),
+                eligible,
+                health(2),
+            );
+            assert!(!m.is_enabled());
+            assert!(!m.handle().is_active());
+            assert!(m.slots().is_empty());
+            assert_eq!(m.checked_total(), 0);
+            let (d, mm) = m.histograms();
+            assert_eq!(d.count(), 0);
+            assert_eq!(mm.count(), 0);
+        }
+    }
+
+    #[test]
+    #[cfg(feature = "monitor-off")]
+    fn monitor_off_feature_disables_everything() {
+        let m = Monitor::start(
+            MonitorConfig {
+                sample_every: 1,
+                ..Default::default()
+            },
+            CoordinatorConfig::default(),
+            vec![true],
+            health(1),
+        );
+        assert!(!m.is_enabled());
+        assert!(!m.handle().is_active());
+        assert!(!m.handle().wants_sample(0));
+    }
+
+    #[test]
+    fn fixed_histogram_buckets_are_cumulative_with_overflow() {
+        let mut h = FixedHistogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 3.0, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.cumulative(), vec![2, 2, 3, 4]);
+        assert!((h.sum() - 104.5).abs() < 1e-9);
+    }
+}

@@ -28,7 +28,10 @@
 //! The batcher doubles as the shard-health loop: before each batch and
 //! on an idle `health_tick` it respawns poisoned shards
 //! ([`ShardSet::respawn_poisoned`]), so a dead pool heals instead of
-//! permanently shrinking capacity.
+//! permanently shrinking capacity.  The same pass recycles slots the
+//! fidelity monitor flagged as drifting: the pool still answers, but its
+//! numbers are wrong, so it is poisoned and respawned like a dead one
+//! (counted separately as `repro_shard_drift_respawns_total`).
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -37,6 +40,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{Metrics, TransformRequest};
 use crate::exec::Sharded;
+use crate::monitor::Monitor;
 use crate::nn::Mlp;
 use crate::shard::{router, ShardSet};
 use crate::trace::{self, Stage, TraceHandle};
@@ -73,9 +77,29 @@ pub struct BatchReply {
 }
 
 /// Respawn any poisoned shards (no-op when disabled or all healthy).
-fn heal_shards(shards: &mut ShardSet, auto_respawn: bool) {
-    if auto_respawn && shards.healthy_count() < shards.len() {
+///
+/// Drift-flagged slots are a special case: the fidelity monitor already
+/// cleared their readiness flag, but the pool is still *live* — it keeps
+/// answering, just wrongly — so the heal pass poisons it first (retiring
+/// the pool and merging its metrics) and then respawns it alongside any
+/// genuinely dead slots.  The monitor's per-slot drift state resets once
+/// the fresh pool is up, so a recycled slot starts with a clean EWMA.
+fn heal_shards(shards: &mut ShardSet, auto_respawn: bool, monitor: &Monitor) {
+    if !auto_respawn {
+        return;
+    }
+    let drifting = monitor.flagged_slots();
+    for &slot in &drifting {
+        shards.poison(slot);
+    }
+    if shards.healthy_count() < shards.len() {
         shards.respawn_poisoned();
+    }
+    for &slot in &drifting {
+        if shards.is_healthy(slot) {
+            monitor.note_drift_respawn();
+            monitor.reset_slot(slot);
+        }
     }
 }
 
@@ -110,12 +134,12 @@ pub(crate) fn run_batcher(
             Ok(item) => item,
             Err(RecvTimeoutError::Timeout) => {
                 // Idle tick: heal dead shards while nothing is queued.
-                heal_shards(&mut shards, auto_respawn);
+                heal_shards(&mut shards, auto_respawn, &state.monitor);
                 continue;
             }
             Err(RecvTimeoutError::Disconnected) => break,
         };
-        heal_shards(&mut shards, auto_respawn);
+        heal_shards(&mut shards, auto_respawn, &state.monitor);
         let mut batch = vec![first];
         let deadline = Instant::now() + max_wait;
         while batch.len() < max_batch {
@@ -292,6 +316,7 @@ mod tests {
             set.slot_health_handle(),
             EnergyModel::new(16, 0.8),
             Arc::new(trace::Tracer::new(trace::TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
         ))
     }
 
@@ -522,6 +547,95 @@ mod tests {
         for want in ["queue", "plan", "scatter", "pool_queue", "execute", "drain"] {
             assert!(stages.contains(&want), "missing {want} in {stages:?}");
         }
+    }
+
+    #[cfg(not(feature = "monitor-off"))]
+    #[test]
+    fn drift_flagged_slot_is_recycled_by_the_health_tick() {
+        use crate::coordinator::{CoordinatorConfig, TileKind};
+        use crate::monitor::{MonitorConfig, ShadowSample};
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            kinds: Some(vec![
+                TileKind::Digital,
+                TileKind::Noisy { sigma_ant: 2e-3 },
+            ]),
+            ..Default::default()
+        })
+        .unwrap();
+        let monitor = Arc::new(Monitor::start(
+            MonitorConfig {
+                sample_every: 1,
+                drift_threshold: 0.5,
+                ..Default::default()
+            },
+            CoordinatorConfig::default(),
+            set.non_digital_slots(),
+            set.slot_health_handle(),
+        ));
+        assert!(monitor.is_enabled());
+        set.set_monitor(monitor.handle());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            set.aggregator(),
+            set.health_handle(),
+            set.respawns_handle(),
+            set.slot_health_handle(),
+            EnergyModel::new(16, 0.8),
+            Arc::new(trace::Tracer::new(trace::TraceConfig::default())),
+            Arc::clone(&monitor),
+        ));
+        // Deterministic drift: feed the checker one grossly wrong
+        // observation for slot 1 (no traffic required).
+        monitor.handle().enqueue(ShadowSample {
+            shard: 1,
+            request: TransformRequest::plain(vec![0.5; 16]),
+            blocks: vec![16],
+            observed: vec![1e6; 16],
+        });
+        let t0 = Instant::now();
+        while monitor.flagged_slots().is_empty() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "checker never flagged the drifting slot"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!set.is_healthy(1) || !state.slot_health[1].load(Ordering::Acquire));
+
+        // An idle batcher's health tick must poison + respawn the slot.
+        let (tx, rx) = mpsc::channel::<BatchItem>();
+        let batcher_state = Arc::clone(&state);
+        let handle = std::thread::spawn(move || {
+            run_batcher(
+                rx,
+                set,
+                None,
+                8,
+                Duration::from_millis(5),
+                Duration::from_secs(5),
+                Duration::from_millis(20),
+                true,
+                batcher_state,
+            )
+        });
+        let t0 = Instant::now();
+        while monitor.drift_respawns_total() == 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "health tick never recycled the drifting slot"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(state.shard_respawns.load(Ordering::Acquire) >= 1);
+        assert!(monitor.flagged_slots().is_empty(), "drift state resets");
+        assert!(
+            state.slot_health[1].load(Ordering::Acquire),
+            "the recycled slot is ready again"
+        );
+        drop(tx);
+        handle.join().unwrap();
+        assert_eq!(monitor.drift_respawns_total(), 1);
     }
 
     #[test]

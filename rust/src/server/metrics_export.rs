@@ -11,6 +11,7 @@ use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
 
 use crate::coordinator::LatencyHistogram;
+use crate::monitor::FixedHistogram;
 
 use super::ServerState;
 
@@ -62,14 +63,45 @@ fn histogram(out: &mut String, name: &str, help: &str, hist: &LatencyHistogram) 
     }
 }
 
+/// A fixed-bound divergence histogram ([`FixedHistogram`]), rendered
+/// cumulatively like the latency histograms.
+fn fixed_histogram(out: &mut String, name: &str, help: &str, hist: &FixedHistogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let cumulative = hist.cumulative();
+    for (i, &bound) in hist.bounds().iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "{name}_bucket{{le=\"{}\"}} {}",
+            fmt_f64(bound),
+            cumulative[i]
+        );
+    }
+    let _ = writeln!(
+        out,
+        "{name}_bucket{{le=\"+Inf\"}} {}",
+        cumulative[hist.bounds().len()]
+    );
+    let _ = writeln!(out, "{name}_sum {}", fmt_f64(hist.sum()));
+    let _ = writeln!(out, "{name}_count {}", hist.count());
+}
+
 /// `backend_features` label value for `repro_build_info`: the compiled
 /// feature set, so a scrape can tell apart otherwise identical builds.
 fn backend_features() -> &'static str {
-    match (cfg!(feature = "pjrt"), cfg!(feature = "trace-off")) {
-        (true, true) => "pjrt,trace-off",
-        (true, false) => "pjrt",
-        (false, true) => "trace-off",
-        (false, false) => "default",
+    match (
+        cfg!(feature = "pjrt"),
+        cfg!(feature = "trace-off"),
+        cfg!(feature = "monitor-off"),
+    ) {
+        (true, true, true) => "pjrt,trace-off,monitor-off",
+        (true, true, false) => "pjrt,trace-off",
+        (true, false, true) => "pjrt,monitor-off",
+        (true, false, false) => "pjrt",
+        (false, true, true) => "trace-off,monitor-off",
+        (false, true, false) => "trace-off",
+        (false, false, true) => "monitor-off",
+        (false, false, false) => "default",
     }
 }
 
@@ -218,6 +250,46 @@ pub(crate) fn render(state: &ServerState) -> String {
             out,
             "repro_shard_busy_seconds_total{{shard=\"{s}\"}} {}",
             fmt_f64(m.busy.as_secs_f64())
+        );
+    }
+    // Per-shard energy telemetry: the same energy model applied to each
+    // slot's own cycle accounting, so a heterogeneous set (e.g. one
+    // noisy canary among digital shards) shows its per-slot efficiency
+    // live instead of only the merged aggregate.
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_energy_femtojoules_total Modelled crossbar energy for the work served, by shard (fJ)."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_energy_femtojoules_total counter");
+    for (s, m) in per_shard.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_energy_femtojoules_total{{shard=\"{s}\"}} {}",
+            fmt_f64(m.energy_fj(&state.energy))
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_tops_per_watt Effective TOPS/W of the work served, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_tops_per_watt gauge");
+    for (s, m) in per_shard.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_tops_per_watt{{shard=\"{s}\"}} {}",
+            fmt_f64(m.tops_per_watt(&state.energy))
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_avg_bitplane_cycles Average executed bitplane cycles per output element, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_avg_bitplane_cycles gauge");
+    for (s, m) in per_shard.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_avg_bitplane_cycles{{shard=\"{s}\"}} {}",
+            fmt_f64(m.average_cycles())
         );
     }
 
@@ -392,6 +464,100 @@ pub(crate) fn render(state: &ServerState) -> String {
         "Traced output elements that early-terminated before their last bitplane.",
         state.tracer.terminated_total(),
     );
+
+    // Fidelity monitor: shadow-verification volume, per-slot drift EWMAs
+    // and the divergence distributions.  A disabled monitor renders the
+    // same families with zero values (and no per-slot series), so the
+    // exposition shape is stable across configurations.
+    let monitor = &state.monitor;
+    gauge_f64(
+        &mut out,
+        "repro_fidelity_enabled",
+        "Whether the fidelity monitor is active (1) or disabled (0).",
+        f64::from(u8::from(monitor.is_enabled())),
+    );
+    gauge_f64(
+        &mut out,
+        "repro_fidelity_sample_every",
+        "Shadow-verify 1 in this many slices served by non-digital shards (0 = off).",
+        f64::from(monitor.sample_every()),
+    );
+    gauge_f64(
+        &mut out,
+        "repro_fidelity_drift_threshold",
+        "Drift threshold on the per-slot divergence EWMA (quantizer LSBs).",
+        monitor.drift_threshold(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_fidelity_checked_total",
+        "Sampled slices re-executed through the digital golden path.",
+        monitor.checked_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_fidelity_dropped_total",
+        "Sampled slices dropped because the shadow queue was full (oldest first).",
+        monitor.dropped_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_fidelity_flagged_total",
+        "Shard slots flagged as drifting by the EWMA detector.",
+        monitor.flagged_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_fidelity_check_errors_total",
+        "Shadow checks that failed to execute (golden-path errors).",
+        monitor.check_errors_total(),
+    );
+    counter_u64(
+        &mut out,
+        "repro_shard_drift_respawns_total",
+        "Drifting shard slots recycled (poisoned + respawned) by the health tick.",
+        monitor.drift_respawns_total(),
+    );
+    let slots = monitor.slots();
+    let _ = writeln!(
+        out,
+        "# HELP repro_fidelity_drift_ewma Divergence EWMA (mean |dq| per element, quantizer LSBs), by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_fidelity_drift_ewma gauge");
+    for s in &slots {
+        let _ = writeln!(
+            out,
+            "repro_fidelity_drift_ewma{{shard=\"{}\"}} {}",
+            s.shard,
+            fmt_f64(s.ewma)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP repro_fidelity_slot_flagged Whether the slot is currently marked drifting, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_fidelity_slot_flagged gauge");
+    for s in &slots {
+        let _ = writeln!(
+            out,
+            "repro_fidelity_slot_flagged{{shard=\"{}\"}} {}",
+            s.shard,
+            u8::from(s.flagged)
+        );
+    }
+    let (delta_hist, mismatch_hist) = monitor.histograms();
+    fixed_histogram(
+        &mut out,
+        "repro_fidelity_mean_abs_dq",
+        "Mean |dq| per element of shadow-checked slices (quantizer LSBs).",
+        &delta_hist,
+    );
+    fixed_histogram(
+        &mut out,
+        "repro_fidelity_block_mismatch_fraction",
+        "Per-block fraction of elements off the golden lattice by more than half an LSB.",
+        &mismatch_hist,
+    );
     out
 }
 
@@ -400,6 +566,7 @@ mod tests {
     use super::*;
     use crate::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
     use crate::energy::EnergyModel;
+    use crate::monitor::Monitor;
     use crate::server::admission::AdmissionConfig;
     use crate::shard::MetricsAggregator;
     use crate::trace::{TraceConfig, Tracer};
@@ -428,6 +595,7 @@ mod tests {
             Arc::new(vec![AtomicBool::new(true)]),
             EnergyModel::new(16, 0.8),
             Arc::new(Tracer::new(TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
         ));
         // One full-precision request and one that early-terminates.
         let x: Vec<f32> = (0..16).map(|i| ((i + 1) as f32 * 0.21).sin()).collect();
@@ -472,6 +640,7 @@ mod tests {
             Arc::new(vec![AtomicBool::new(true)]),
             EnergyModel::new(16, 0.8),
             Arc::new(Tracer::new(TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
         ));
         coord.shutdown();
         let text = render(&state);
@@ -515,6 +684,7 @@ mod tests {
             Arc::new(vec![AtomicBool::new(true)]),
             EnergyModel::new(16, 0.8),
             Arc::clone(&tracer),
+            Arc::new(Monitor::disabled()),
         ));
         coord.shutdown();
         let handle = tracer.begin("/v1/transform");
@@ -575,6 +745,7 @@ mod tests {
             set.slot_health_handle(),
             EnergyModel::new(16, 0.8),
             Arc::new(Tracer::new(TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
         ));
         set.shutdown();
         let text = render(&state);
@@ -584,6 +755,96 @@ mod tests {
         assert!(text.contains("repro_shard_requests_total{shard=\"1\"}"), "{text}");
         assert!(
             metric_value(&text, "repro_elements_total") >= 64.0,
+            "{text}"
+        );
+        // Per-shard energy telemetry rides the same per_shard snapshots.
+        assert!(
+            text.contains("repro_shard_energy_femtojoules_total{shard=\"1\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_shard_tops_per_watt{shard=\"0\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_shard_avg_bitplane_cycles{shard=\"0\"}"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn disabled_monitor_renders_zeroed_fidelity_families() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            MetricsAggregator::new(vec![coord.metrics_handle()], 8),
+            Arc::new(AtomicUsize::new(1)),
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(vec![AtomicBool::new(true)]),
+            EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
+        ));
+        coord.shutdown();
+        let text = render(&state);
+        assert_eq!(metric_value(&text, "repro_fidelity_enabled"), 0.0, "{text}");
+        assert_eq!(metric_value(&text, "repro_fidelity_checked_total"), 0.0);
+        assert_eq!(metric_value(&text, "repro_shard_drift_respawns_total"), 0.0);
+        // The histogram families keep their full bucket structure.
+        assert!(
+            text.contains("repro_fidelity_mean_abs_dq_bucket{le=\"+Inf\"} 0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_fidelity_block_mismatch_fraction_bucket{le=\"+Inf\"} 0"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE repro_fidelity_drift_ewma gauge"));
+    }
+
+    #[cfg(not(feature = "monitor-off"))]
+    #[test]
+    fn enabled_monitor_renders_per_slot_drift_series() {
+        use crate::monitor::MonitorConfig;
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let slot_health: Arc<Vec<AtomicBool>> =
+            Arc::new(vec![AtomicBool::new(true), AtomicBool::new(true)]);
+        let monitor = Arc::new(Monitor::start(
+            MonitorConfig {
+                sample_every: 4,
+                drift_threshold: 2.5,
+                ..Default::default()
+            },
+            CoordinatorConfig::default(),
+            vec![false, true],
+            Arc::clone(&slot_health),
+        ));
+        assert!(monitor.is_enabled());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            MetricsAggregator::new(vec![coord.metrics_handle()], 8),
+            Arc::new(AtomicUsize::new(1)),
+            Arc::new(AtomicU64::new(0)),
+            slot_health,
+            EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
+            monitor,
+        ));
+        coord.shutdown();
+        let text = render(&state);
+        assert_eq!(metric_value(&text, "repro_fidelity_enabled"), 1.0, "{text}");
+        assert_eq!(metric_value(&text, "repro_fidelity_sample_every"), 4.0);
+        assert_eq!(metric_value(&text, "repro_fidelity_drift_threshold"), 2.5);
+        assert!(
+            text.contains("repro_fidelity_drift_ewma{shard=\"0\"} 0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_fidelity_drift_ewma{shard=\"1\"} 0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_fidelity_slot_flagged{shard=\"1\"} 0"),
             "{text}"
         );
     }

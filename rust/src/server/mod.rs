@@ -30,7 +30,10 @@
 //!   JSON body while any shard slot is poisoned/respawning;
 //! * `GET /debug/traces?n=K[&format=chrome]` — recent sampled request
 //!   traces as plain JSON or Chrome `trace_event` format (see
-//!   [`crate::trace`]).
+//!   [`crate::trace`]);
+//! * `GET /debug/fidelity?n=K` — live fidelity-monitor snapshot:
+//!   per-shard drift EWMAs plus the `K` most recent shadow-check
+//!   divergence records (see [`crate::monitor`]).
 //!
 //! The batcher thread doubles as the shard-health loop: on a periodic
 //! tick (and before each batch) it respawns poisoned shards
@@ -62,6 +65,7 @@ use crate::coordinator::{
     required_tile, CoordinatorConfig, LatencyHistogram, Metrics, TileKind, TransformRequest,
 };
 use crate::energy::EnergyModel;
+use crate::monitor::{Monitor, MonitorConfig};
 use crate::nn::Mlp;
 use crate::shard::{MetricsAggregator, ShardSet, ShardSetConfig};
 use crate::trace::{self, Stage, TraceConfig, TraceHandle, Tracer};
@@ -126,6 +130,19 @@ pub struct ServerConfig {
     /// Log a structured JSON line to stderr for any sampled request
     /// slower than this many milliseconds (0 disables).
     pub slow_ms: u64,
+    /// Shadow-verify one in every N slices served by a noisy/analog
+    /// shard against the digital golden path (0 disables the monitor;
+    /// it is also off when every shard is digital — there is nothing to
+    /// check).
+    pub fidelity_sample: u32,
+    /// Drift threshold in quantizer LSBs: a shard slot whose shadow-check
+    /// EWMA of mean |Δq| exceeds this is marked unhealthy (degrading
+    /// `/readyz`) and respawned by the batcher health tick.
+    pub drift_threshold: f64,
+    /// Optional per-shard tile kinds (heterogeneous sets, e.g. one noisy
+    /// canary slot among digital shards).  `None` gives every shard
+    /// `coordinator.kind`.  Length must equal `shards`.
+    pub shard_kinds: Option<Vec<TileKind>>,
 }
 
 impl Default for ServerConfig {
@@ -149,6 +166,9 @@ impl Default for ServerConfig {
             health_tick: Duration::from_millis(250),
             trace_sample: 1,
             slow_ms: 0,
+            fidelity_sample: 16,
+            drift_threshold: 1.0,
+            shard_kinds: None,
         }
     }
 }
@@ -186,6 +206,9 @@ pub(crate) struct ServerState {
     /// Request tracer feeding `repro_stage_seconds`, `/debug/traces`
     /// and slow-request logging.
     pub tracer: Arc<Tracer>,
+    /// Fidelity monitor feeding `repro_fidelity_*`, `/debug/fidelity`
+    /// and the batcher's drift-respawn pass.
+    pub monitor: Arc<Monitor>,
     /// Process start, for the uptime gauge.
     pub started: Instant,
     /// Process start as seconds since the Unix epoch
@@ -202,6 +225,7 @@ impl ServerState {
         slot_health: Arc<Vec<AtomicBool>>,
         energy: EnergyModel,
         tracer: Arc<Tracer>,
+        monitor: Arc<Monitor>,
     ) -> ServerState {
         ServerState {
             admission: Admission::new(admission),
@@ -221,6 +245,7 @@ impl ServerState {
             connections: AtomicUsize::new(0),
             slot_health,
             tracer,
+            monitor,
             started: Instant::now(),
             started_unix_s: SystemTime::now()
                 .duration_since(UNIX_EPOCH)
@@ -269,6 +294,7 @@ impl Server {
         // must follow the override — Tile::new asserts config.n ==
         // tile_n in every worker thread.
         let mut coordinator = config.coordinator.clone();
+        let mut shard_kinds = config.shard_kinds.clone();
         if let Some(model) = &config.model {
             let tile = required_tile(model.bwht.transform_blocks()).context(
                 "the model's BWHT partition does not map onto power-of-two crossbar tiles",
@@ -278,14 +304,39 @@ impl Server {
                 if let TileKind::Analog { config: xbar } = &mut coordinator.kind {
                     *xbar = CrossbarConfig::new(tile, config.vdd);
                 }
+                // Per-shard analog kinds must track the raised geometry
+                // too — Tile::new asserts config.n == tile_n per worker.
+                if let Some(kinds) = &mut shard_kinds {
+                    for kind in kinds.iter_mut() {
+                        if let TileKind::Analog { config: xbar } = kind {
+                            *xbar = CrossbarConfig::new(tile, config.vdd);
+                        }
+                    }
+                }
             }
         }
 
-        let shards = ShardSet::new(ShardSetConfig {
+        let mut shards = ShardSet::new(ShardSetConfig {
             shards: config.shards.max(1),
             coordinator: coordinator.clone(),
+            kinds: shard_kinds,
             ..Default::default()
         })?;
+        // Shadow verification: re-execute 1-in-K sampled noisy/analog
+        // slices through a private digital golden pool.  The monitor is
+        // inert (one dead branch on the drain path) when sampling is off
+        // or every shard is digital.
+        let monitor = Arc::new(Monitor::start(
+            MonitorConfig {
+                sample_every: config.fidelity_sample,
+                drift_threshold: config.drift_threshold,
+                ..MonitorConfig::default()
+            },
+            coordinator.clone(),
+            shards.non_digital_slots(),
+            shards.slot_health_handle(),
+        ));
+        shards.set_monitor(monitor.handle());
         let tracer = Arc::new(Tracer::new(TraceConfig {
             sample_every: config.trace_sample,
             slow_us: config.slow_ms.saturating_mul(1000),
@@ -299,6 +350,7 @@ impl Server {
             shards.slot_health_handle(),
             EnergyModel::new(coordinator.tile_n, config.vdd),
             tracer,
+            monitor,
         ));
 
         let (batch_tx, batch_rx) = mpsc::channel::<BatchItem>();
@@ -488,10 +540,11 @@ fn route(
         ("GET", "/readyz") => readyz_response(state),
         ("GET", "/metrics") => http::Response::text(200, &metrics_export::render(state)),
         ("GET", "/debug/traces") => handle_traces(state, query),
+        ("GET", "/debug/fidelity") => handle_fidelity(state, query),
         ("POST", "/v1/transform") => handle_transform(request, peer, tx, state, config),
         ("POST", "/v1/infer") => handle_infer(request, peer, tx, state, config),
         (_, "/v1/transform") | (_, "/v1/infer") | (_, "/metrics") | (_, "/healthz")
-        | (_, "/readyz") | (_, "/debug/traces") => {
+        | (_, "/readyz") | (_, "/debug/traces") | (_, "/debug/fidelity") => {
             http::Response::json(405, &error_json("method not allowed"))
         }
         _ => http::Response::json(404, &error_json("not found")),
@@ -541,6 +594,18 @@ fn handle_traces(state: &ServerState, query: &str) -> http::Response {
         _ => trace::traces_json(&traces),
     };
     http::Response::json(200, &body)
+}
+
+/// `GET /debug/fidelity?n=K`: live fidelity-monitor snapshot — the
+/// enabled/sampling state, per-shard drift EWMAs and flags, and the `K`
+/// most recent shadow-check divergence records (default 32, capped at
+/// 256), newest first.
+fn handle_fidelity(state: &ServerState, query: &str) -> http::Response {
+    let n = query_param(query, "n")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(32)
+        .min(256);
+    http::Response::json(200, &state.monitor.fidelity_json(n))
 }
 
 fn error_json(message: &str) -> Json {
@@ -858,6 +923,7 @@ mod tests {
             Arc::new(slot_health.into_iter().map(AtomicBool::new).collect::<Vec<_>>()),
             EnergyModel::new(16, 0.8),
             Arc::new(Tracer::new(TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
         )
     }
 
@@ -883,6 +949,18 @@ mod tests {
         assert!(matches!(shards[0].get("healthy"), Some(Json::Bool(true))));
         assert!(matches!(shards[1].get("healthy"), Some(Json::Bool(false))));
         assert_eq!(shards[1].get("shard").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn debug_fidelity_endpoint_reports_a_disabled_monitor() {
+        let state = test_state(vec![true]);
+        let resp = handle_fidelity(&state, "n=8");
+        assert_eq!(resp.status, 200);
+        let body = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(matches!(body.get("enabled"), Some(Json::Bool(false))));
+        assert_eq!(body.get("checked").and_then(Json::as_f64), Some(0.0));
+        assert!(body.get("slots").and_then(Json::as_arr).is_some());
+        assert!(body.get("recent").and_then(Json::as_arr).is_some());
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{CompletedTransform, TilePlan, TransformRequest};
+use crate::monitor::{MonitorHandle, ShadowSample};
 use crate::trace::{self, ExecStats, Stage, TraceHandle};
 
 use super::planner::{estimate_block_cost, plan_blocks};
@@ -160,6 +161,7 @@ fn poison_and_requeue(
 /// spans carry the engine's plane-count / row-cycle / ET-depth payload.
 fn finish_slice(
     scope: &[TraceHandle],
+    monitor: &MonitorHandle,
     outs: &mut [Vec<f32>],
     planned: &[PlannedReq],
     shard: usize,
@@ -168,6 +170,19 @@ fn finish_slice(
     drain_start_us: u64,
 ) {
     let (slice, submit_us) = in_flight;
+    // Fidelity capture: 1-in-K slices served by a monitored (non-digital)
+    // shard are copied off to the shadow checker before the gather.  An
+    // inactive monitor is one dead branch; digital slots are filtered by
+    // the handle without touching the sample counter.
+    if monitor.wants_sample(shard) {
+        let (sub, widths) = sub_request(&planned[slice.req], &slice.blocks);
+        monitor.enqueue(ShadowSample {
+            shard,
+            request: sub,
+            blocks: widths,
+            observed: done.values.clone(),
+        });
+    }
     gather(&mut outs[slice.req], &done.values, &planned[slice.req], &slice.blocks);
     let Some(handle) = scope.get(slice.req) else { return };
     if !handle.is_active() {
@@ -301,6 +316,8 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
     // unsampled batch pays a branch per stage and nothing more.
     let scope: Vec<TraceHandle> = set.trace_scope().to_vec();
     let traced = scope.iter().any(TraceHandle::is_active);
+    // One clone per batch; the handle is a single `Option<Arc>`.
+    let monitor = set.monitor().clone();
 
     // Plan the whole batch over the healthy shards, carrying the load
     // vector across requests so the batch balances globally.
@@ -396,6 +413,7 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
                                 .expect("drained id was submitted by this router");
                             finish_slice(
                                 &scope,
+                                &monitor,
                                 &mut outs,
                                 &planned,
                                 shard,
@@ -428,7 +446,16 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
                 let in_flight = outstanding[shard]
                     .remove(&done.request_id)
                     .expect("drained id was submitted by this router");
-                finish_slice(&scope, &mut outs, &planned, shard, done, in_flight, drain_start);
+                finish_slice(
+                    &scope,
+                    &monitor,
+                    &mut outs,
+                    &planned,
+                    shard,
+                    done,
+                    in_flight,
+                    drain_start,
+                );
             }
             Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
         }
@@ -678,6 +705,60 @@ mod tests {
         let out = transform_batch(&mut set, std::slice::from_ref(&req)).unwrap();
         set.clear_trace_scope();
         assert_eq!(out[0], golden(&req));
+        set.shutdown();
+    }
+
+    #[cfg(not(feature = "monitor-off"))]
+    #[test]
+    fn active_monitor_captures_slices_from_non_digital_shards_only() {
+        use crate::coordinator::TileKind;
+        use crate::monitor::{Monitor, MonitorConfig};
+
+        let coord = CoordinatorConfig::default();
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            kinds: Some(vec![
+                TileKind::Digital,
+                TileKind::Noisy { sigma_ant: 1e-6 },
+            ]),
+            coordinator: coord.clone(),
+            ..Default::default()
+        })
+        .unwrap();
+        let monitor = Monitor::start(
+            MonitorConfig {
+                sample_every: 1,
+                ..Default::default()
+            },
+            coord,
+            set.non_digital_slots(),
+            set.slot_health_handle(),
+        );
+        assert!(monitor.is_enabled());
+        set.set_monitor(monitor.handle());
+
+        let reqs: Vec<TransformRequest> = (0..4)
+            .map(|i| TransformRequest {
+                x: sample(96, 400 + i),
+                thresholds_units: vec![0.0; 96],
+                scale: None,
+            })
+            .collect();
+        transform_batch(&mut set, &reqs).unwrap();
+
+        // The checker thread runs asynchronously; wait for at least one
+        // shadow check to land (the planner spreads 4×6 blocks over both
+        // shards, so the noisy slot always serves some slices).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while monitor.checked_total() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(monitor.checked_total() > 0, "no shadow check completed");
+        assert_eq!(monitor.check_errors_total(), 0);
+        // Only the noisy slot is eligible: every record names shard 1.
+        for rec in monitor.recent(64) {
+            assert_eq!(rec.shard, 1);
+        }
         set.shutdown();
     }
 

@@ -24,6 +24,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::coordinator::{Coordinator, CoordinatorConfig, Metrics, TileKind};
+use crate::monitor::MonitorHandle;
 use crate::trace::TraceHandle;
 
 use super::metrics_agg::{HandleSlots, MetricsAggregator};
@@ -95,6 +96,11 @@ pub struct ShardSet {
     /// [`crate::exec::TransformExecutor`] seam.  Empty (the common
     /// case) or all-inactive means no tracing work happens.
     trace_scope: Vec<TraceHandle>,
+    /// Fidelity-monitor capture handle.  Inactive (the default) unless
+    /// the serving front-end attached a live monitor; the router checks
+    /// it once per drained slice and enqueues sampled slices for shadow
+    /// verification.
+    monitor: MonitorHandle,
     config: ShardSetConfig,
 }
 
@@ -160,6 +166,7 @@ impl ShardSet {
             respawns: Arc::new(AtomicU64::new(0)),
             slot_health,
             trace_scope: Vec::new(),
+            monitor: MonitorHandle::inactive(),
             config,
         })
     }
@@ -241,6 +248,33 @@ impl ShardSet {
     /// untraced).
     pub fn trace_scope(&self) -> &[TraceHandle] {
         &self.trace_scope
+    }
+
+    /// Attach a fidelity-monitor capture handle (set once by the
+    /// serving front-end; persists for the set's lifetime, unlike the
+    /// per-batch trace scope).
+    pub fn set_monitor(&mut self, monitor: MonitorHandle) {
+        self.monitor = monitor;
+    }
+
+    /// The fidelity-monitor capture handle (inactive by default).
+    pub fn monitor(&self) -> &MonitorHandle {
+        &self.monitor
+    }
+
+    /// Which slots run a non-digital backend — the slots worth shadow
+    /// verifying (a digital slot is bit-identical to the golden path by
+    /// construction).
+    pub fn non_digital_slots(&self) -> Vec<bool> {
+        (0..self.config.shards)
+            .map(|s| {
+                let kind = match &self.config.kinds {
+                    Some(kinds) => &kinds[s],
+                    None => &self.config.coordinator.kind,
+                };
+                !matches!(kind, TileKind::Digital)
+            })
+            .collect()
     }
 
     /// Mutable access to one shard's coordinator (`None` if poisoned or
@@ -497,6 +531,35 @@ mod tests {
         set.clear_trace_scope();
         assert!(set.trace_scope().is_empty());
         set.shutdown();
+    }
+
+    #[test]
+    fn non_digital_slots_follow_per_shard_kinds() {
+        let set = ShardSet::new(ShardSetConfig {
+            shards: 3,
+            kinds: Some(vec![
+                TileKind::Digital,
+                TileKind::Noisy { sigma_ant: 2e-3 },
+                TileKind::Digital,
+            ]),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(set.non_digital_slots(), vec![false, true, false]);
+        assert!(!set.monitor().is_active(), "monitor defaults to inactive");
+        set.shutdown();
+
+        let noisy = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            coordinator: CoordinatorConfig {
+                kind: TileKind::Noisy { sigma_ant: 2e-3 },
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(noisy.non_digital_slots(), vec![true, true]);
+        noisy.shutdown();
     }
 
     #[test]

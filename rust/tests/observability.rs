@@ -1,7 +1,9 @@
 //! Observability integration: end-to-end request tracing served over
 //! `GET /debug/traces` (JSON + Chrome `trace_event`), the shard-aware
-//! readiness probe, and the Prometheus text-format invariants of the
-//! extended `/metrics` exposition.
+//! readiness probe, the fidelity monitor's closed drift loop
+//! (`GET /debug/fidelity` → degraded `/readyz` → drift respawn), and the
+//! Prometheus text-format invariants of the extended `/metrics`
+//! exposition.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
@@ -67,6 +69,17 @@ fn test_mlp() -> Mlp {
 fn infer_body(x: &[f32]) -> String {
     let vals: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
     format!("{{\"x\":[{}]}}", vals.join(","))
+}
+
+/// Value of an unlabeled series in a Prometheus text exposition.
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|line| {
+            let rest = line.strip_prefix(name)?;
+            let rest = rest.strip_prefix(' ')?;
+            rest.trim().parse::<f64>().ok()
+        })
+        .unwrap_or(f64::NAN)
 }
 
 /// ISSUE-6 acceptance: a served `/v1/infer` request must appear in
@@ -373,5 +386,151 @@ fn metrics_exposition_satisfies_prometheus_text_format_invariants() {
     assert!(seen_series.iter().any(|s| s.starts_with("repro_build_info{")));
     assert!(typed.contains_key("repro_process_start_time_seconds"));
     assert!(typed.contains_key("repro_traces_sampled_total"));
+    // PR-7 families: per-shard energy telemetry and the fidelity
+    // monitor render under the same invariants (even with an all-digital
+    // set, where the monitor is a disabled stub).
+    assert!(seen_series
+        .iter()
+        .any(|s| s.starts_with("repro_shard_energy_femtojoules_total{shard=")));
+    assert!(seen_series
+        .iter()
+        .any(|s| s.starts_with("repro_shard_tops_per_watt{shard=")));
+    assert!(typed.contains_key("repro_fidelity_enabled"));
+    assert!(typed.contains_key("repro_fidelity_checked_total"));
+    assert!(typed.contains_key("repro_shard_drift_respawns_total"));
+    assert_eq!(
+        typed.get("repro_fidelity_mean_abs_dq").map(String::as_str),
+        Some("histogram")
+    );
+    assert_eq!(
+        typed
+            .get("repro_fidelity_block_mismatch_fraction")
+            .map(String::as_str),
+        Some("histogram")
+    );
+    server.shutdown();
+}
+
+/// ISSUE-7 acceptance: the closed drift loop end to end. A server with
+/// one digital and one grossly noisy analog-path shard must (1) record
+/// rising divergence for the noisy slot in `GET /debug/fidelity`,
+/// (2) flag the slot so `/readyz` degrades to 503 naming it, and
+/// (3) recycle the slot on the next heal pass, incrementing
+/// `repro_shard_drift_respawns_total` and restoring readiness.
+#[cfg(not(feature = "monitor-off"))]
+#[test]
+fn drifting_shard_degrades_readyz_and_is_recycled_by_the_heal_pass() {
+    use repro::coordinator::TileKind;
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        shards: 2,
+        shard_kinds: Some(vec![
+            TileKind::Digital,
+            TileKind::Noisy { sigma_ant: 0.5 },
+        ]),
+        fidelity_sample: 1,
+        drift_threshold: 0.05,
+        // A long idle tick keeps the batcher from recycling the slot on
+        // its own schedule: the degraded-/readyz window stays observable
+        // until we deliberately trigger the next heal pass with traffic.
+        health_tick: Duration::from_secs(60),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    // A burst of wide transforms spreads blocks over both shards; every
+    // slice served by the noisy shard is shadow-checked (1-in-1).
+    let mut rng = Rng::seed_from_u64(41);
+    for _ in 0..8 {
+        let x: Vec<f32> = (0..64).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let (status, body) = post_json(addr, "/v1/transform", &infer_body(&x));
+        assert_eq!(status, 200, "{body}");
+    }
+
+    // Poll the monitor until the EWMA crosses the threshold and flags
+    // slot 1. No traffic while polling: a POST would run the heal pass
+    // and recycle the slot before we can observe the degraded state.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let snapshot = loop {
+        let (status, body) = get(addr, "/debug/fidelity?n=4");
+        assert_eq!(status, 200, "{body}");
+        let parsed = json::parse(&body).expect("fidelity json");
+        assert!(matches!(parsed.get("enabled"), Some(Json::Bool(true))), "{body}");
+        let slots = parsed.get("slots").and_then(Json::as_arr).expect("slots");
+        if matches!(slots[1].get("flagged"), Some(Json::Bool(true))) {
+            break parsed;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "slot 1 never flagged as drifting: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let slots = snapshot.get("slots").and_then(Json::as_arr).unwrap();
+    assert!(slots[1].get("ewma").and_then(Json::as_f64).unwrap() > 0.05);
+    assert!(matches!(slots[0].get("flagged"), Some(Json::Bool(false))));
+    assert!(snapshot.get("checked").and_then(Json::as_f64).unwrap() >= 1.0);
+    let recent = snapshot.get("recent").and_then(Json::as_arr).expect("recent");
+    assert!(!recent.is_empty());
+    for rec in recent {
+        assert_eq!(rec.get("shard").and_then(Json::as_f64), Some(1.0));
+    }
+
+    // Let the checker drain the rest of the burst's samples (two stable
+    // reads of the checked counter) so no stale sample re-flags the slot
+    // after the heal pass resets it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut last_checked = -1.0f64;
+    loop {
+        let (_, body) = get(addr, "/debug/fidelity?n=0");
+        let parsed = json::parse(&body).unwrap();
+        let checked = parsed.get("checked").and_then(Json::as_f64).unwrap();
+        if checked == last_checked {
+            break;
+        }
+        last_checked = checked;
+        assert!(
+            std::time::Instant::now() < deadline,
+            "shadow queue never drained: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // The flagged slot degrades readiness immediately.
+    let (status, body) = get(addr, "/readyz");
+    assert_eq!(status, 503, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    let shards = parsed.get("shards").and_then(Json::as_arr).expect("shards");
+    assert!(matches!(shards[0].get("healthy"), Some(Json::Bool(true))), "{body}");
+    assert!(matches!(shards[1].get("healthy"), Some(Json::Bool(false))), "{body}");
+
+    // Traffic triggers the heal pass before dispatch: the drifting slot
+    // is poisoned, respawned as a fresh pool, and its state resets.
+    let (status, body) = post_json(addr, "/v1/transform", "{\"x\":[0.5,-0.25,0.75,1.0]}");
+    assert_eq!(status, 200, "{body}");
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let (_, text) = get(addr, "/metrics");
+        if metric_value(&text, "repro_shard_drift_respawns_total") >= 1.0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "drifting slot never recycled: {text}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (status, body) = get(addr, "/readyz");
+    assert_eq!(status, 200, "{body}");
+    let (status, body) = get(addr, "/debug/fidelity");
+    assert_eq!(status, 200, "{body}");
+    let parsed = json::parse(&body).unwrap();
+    assert!(parsed.get("drift_respawns").and_then(Json::as_f64).unwrap() >= 1.0);
+    let slots = parsed.get("slots").and_then(Json::as_arr).unwrap();
+    assert!(
+        matches!(slots[1].get("flagged"), Some(Json::Bool(false))),
+        "slot state must reset after the respawn: {body}"
+    );
     server.shutdown();
 }
