@@ -30,6 +30,14 @@
 //! emits `BENCH_fidelity.json`.  **Exits non-zero if either the
 //! disabled-handle or the monitor-on path costs more than 2% over
 //! plain**: shadow verification must never back-pressure serving.
+//!
+//! A fourth section (PR 8) prices router fusion end to end: a sharded
+//! batch of same-partition requests served through the fused
+//! multi-sample submit/drain path vs the pre-fusion one-request-per-call
+//! dispatch, bit-identity gated before timing, with the pool-job ledger
+//! (fused jobs must undercut per-slice jobs).  Emits
+//! `BENCH_router.json` and **exits non-zero if the fused path is slower
+//! than the per-slice baseline**.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -40,6 +48,7 @@ use repro::coordinator::{
 };
 use repro::monitor::{Monitor, MonitorConfig, ShadowSample};
 use repro::quant::Quantizer;
+use repro::shard::{router, ShardSet, ShardSetConfig};
 use repro::trace::{self, ExecStats, Stage, TraceConfig, TraceHandle, Tracer};
 use repro::util::bench::{bench, black_box, header, write_json, BenchResult};
 use repro::util::rng::Rng;
@@ -223,6 +232,114 @@ fn main() {
 
     trace_overhead_gate(batch);
     monitor_overhead_gate(batch);
+    router_fusion_gate();
+}
+
+/// One request through the router's planned path on its own — the
+/// pre-fusion dispatch shape (a 1-sample group splits into per-worker
+/// block lanes), used as the per-slice baseline.
+fn route_one(set: &mut ShardSet, blocks: &[usize], q: &TransformRequest) -> Vec<f32> {
+    let mut out = router::transform_batch_planned(set, blocks, std::slice::from_ref(q))
+        .expect("per-slice request");
+    out.pop().expect("one request, one output")
+}
+
+/// Router fusion, end to end (PR 8): 32 same-partition requests over a
+/// 2-shard set, served as ONE fused `transform_batch_planned` call
+/// (multi-sample pool jobs) vs one router call per request (single-
+/// sample jobs, the pre-fusion dispatch).  Outputs are bit-identity
+/// gated against each other before timing, and the pool-job ledger must
+/// show fusion spending measurably fewer jobs than sample-slices.  The
+/// headline fused speedup is written to `BENCH_router.json` and gated
+/// at >= 1.0x.
+fn router_fusion_gate() {
+    let blocks = [16usize; 6];
+    let width: usize = blocks.iter().sum();
+    let batch = 32usize;
+    let mut r = Rng::seed_from_u64(4096);
+    let reqs: Vec<TransformRequest> = (0..batch)
+        .map(|_| {
+            let x: Vec<f32> = (0..width)
+                .map(|_| r.uniform_range(-1.0, 1.0) as f32)
+                .collect();
+            TransformRequest {
+                thresholds_units: vec![0.0; width],
+                scale: Some(Quantizer::new(8).scale_for(&x)),
+                x,
+            }
+        })
+        .collect();
+
+    let mut fused_set = ShardSet::new(ShardSetConfig {
+        shards: 2,
+        ..Default::default()
+    })
+    .expect("fused shard set");
+    let mut slice_set = ShardSet::new(ShardSetConfig {
+        shards: 2,
+        ..Default::default()
+    })
+    .expect("per-slice shard set");
+
+    // Bit-identity gate before any timing, plus the job-count ledger.
+    let fused_out = router::transform_batch_planned(&mut fused_set, &blocks, &reqs)
+        .expect("fused batch");
+    let fused_jobs = fused_set.metrics().jobs;
+    let slice_out: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|q| route_one(&mut slice_set, &blocks, q))
+        .collect();
+    let slice_jobs = slice_set.metrics().jobs;
+    assert_eq!(fused_out, slice_out, "fusion bit-identity gate failed");
+    assert!(
+        fused_jobs < slice_jobs,
+        "fusion must cut pool jobs: fused {fused_jobs} vs per-slice {slice_jobs}"
+    );
+
+    header("router");
+    let r_slice = bench("per-slice 2-shard batch-32 w96", || {
+        for q in &reqs {
+            black_box(route_one(&mut slice_set, &blocks, q));
+        }
+    });
+    r_slice.report_throughput(batch as f64, "req");
+    let r_fused = bench("fused 2-shard batch-32 w96", || {
+        let y = router::transform_batch_planned(&mut fused_set, &blocks, &reqs);
+        black_box(y.expect("fused batch"));
+    });
+    r_fused.report_throughput(batch as f64, "req");
+
+    let speedup = r_slice.mean.as_secs_f64() / r_fused.mean.as_secs_f64();
+    println!(
+        "  -> router fusion {speedup:.2}x; {fused_jobs} fused jobs vs {slice_jobs} per-slice"
+    );
+
+    let path = "BENCH_router.json";
+    match write_json(
+        path,
+        "router",
+        &[r_slice, r_fused],
+        &[
+            ("router_fused_speedup", speedup),
+            ("fused_jobs_per_batch", fused_jobs as f64),
+            ("per_slice_jobs_per_batch", slice_jobs as f64),
+        ],
+    ) {
+        Ok(()) => println!("router baseline written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    fused_set.shutdown();
+    slice_set.shutdown();
+
+    if speedup < 1.0 {
+        eprintln!(
+            "FAIL: fused router path is slower than the per-slice dispatch \
+             ({speedup:.2}x < 1.0x)"
+        );
+        std::process::exit(1);
+    }
+    println!("router fusion {speedup:.2}x — gate >= 1.0x passed");
 }
 
 /// Traced-vs-untraced cost of the headline scheduling case.

@@ -171,6 +171,12 @@ pub struct Metrics {
     pub row_cycles: u64,
     /// Requests served.
     pub requests: u64,
+    /// Pool jobs executed.  A fused multi-sample job counts once here
+    /// while counting each of its samples in `requests`, so
+    /// `requests / jobs` is the average fusion factor — the router's
+    /// batch-fusion win is directly observable as `jobs` falling below
+    /// the slice count.
+    pub jobs: u64,
     /// Total wall-clock busy time across workers.
     pub busy: Duration,
     /// Per-request worker busy-time distribution.
@@ -185,6 +191,7 @@ impl Metrics {
             planes_issued: 0,
             row_cycles: 0,
             requests: 0,
+            jobs: 0,
             busy: Duration::ZERO,
             latency: LatencyHistogram::new(),
             bits,
@@ -204,6 +211,7 @@ impl Metrics {
         self.planes_issued += outcome.planes_issued as u64;
         self.row_cycles += outcome.row_cycles;
         self.requests += 1;
+        self.jobs += 1;
         self.busy += elapsed;
         self.latency.record(elapsed);
     }
@@ -230,6 +238,7 @@ impl Metrics {
         self.planes_issued += planes_issued as u64;
         self.row_cycles += row_cycles;
         self.requests += requests as u64;
+        self.jobs += 1;
         self.busy += elapsed;
         for _ in 0..requests {
             self.latency.record(elapsed);
@@ -241,6 +250,7 @@ impl Metrics {
         self.planes_issued += other.planes_issued;
         self.row_cycles += other.row_cycles;
         self.requests += other.requests;
+        self.jobs += other.jobs;
         self.busy += other.busy;
         self.latency.merge(&other.latency);
     }
@@ -293,9 +303,27 @@ mod tests {
         let out = schedule_transform(&mut tile, &x, 8, &vec![0.0; 16], None);
         m.merge_outcome(&out, Duration::from_micros(5));
         assert_eq!(m.requests, 1);
+        assert_eq!(m.jobs, 1);
         assert_eq!(m.cycles.total_elements, 16);
         assert!(m.row_cycles > 0);
         assert_eq!(m.latency.count(), 1);
+    }
+
+    #[test]
+    fn fused_jobs_count_once_while_billing_every_request() {
+        // A fused 4-sample job: one job, four requests, four latency
+        // samples — the requests/jobs ratio is the fusion factor.
+        let mut m = Metrics::new(8);
+        let stats = crate::bitplane::early_term::CycleStats::new(8);
+        m.record_job(&stats, 8, 128, 4, Duration::from_micros(10));
+        assert_eq!(m.jobs, 1);
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.latency.count(), 4);
+        let mut other = Metrics::new(8);
+        other.record_job(&stats, 8, 128, 1, Duration::from_micros(10));
+        m.merge(&other);
+        assert_eq!(m.jobs, 2);
+        assert_eq!(m.requests, 5);
     }
 
     #[test]

@@ -23,9 +23,11 @@ pub mod tile;
 
 pub use metrics::{LatencyHistogram, Metrics};
 pub use plan::{required_tile, subtile_rows, BlockSlot, TilePlan};
-pub use pool::{CompletedTransform, Coordinator, CoordinatorConfig, TransformRequest};
+pub use pool::{
+    CompletedBatch, CompletedTransform, Coordinator, CoordinatorConfig, TransformRequest,
+};
 pub use scheduler::{
-    schedule_batch, schedule_block, schedule_transform, BatchOutcome, ScratchArena,
+    schedule_batch, schedule_block, schedule_transform, BatchOutcome, SampleStats, ScratchArena,
     TransformOutcome,
 };
 pub use tile::{Tile, TileKind};

@@ -26,7 +26,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
 use super::plan::TilePlan;
-use super::scheduler::{schedule_batch, ScratchArena};
+use super::scheduler::{schedule_batch, SampleStats, ScratchArena};
 use super::tile::{Tile, TileKind};
 use crate::wht;
 
@@ -111,17 +111,24 @@ struct TileResult {
     outcome_stats: crate::bitplane::early_term::CycleStats,
     planes_issued: u32,
     row_cycles: u64,
+    /// Engine counters attributed per request of the job, in request
+    /// order (aligned with `values`).
+    per_sample: Vec<SampleStats>,
     elapsed: std::time::Duration,
 }
 
-/// One completed request from [`Coordinator::drain_one`].
+/// One completed request from [`Coordinator::drain_one`] /
+/// [`Coordinator::drain_batch`].
 #[derive(Debug, Clone)]
 pub struct CompletedTransform {
     pub request_id: u64,
     /// Outputs at padded width (raw submissions) or at the block
     /// partition's exact width (planned submissions).
     pub values: Vec<f32>,
-    /// Worker busy time spent on this request.
+    /// Worker busy time spent on this request.  For a fused multi-sample
+    /// job this is the job's busy time apportioned by row-cycle share,
+    /// so the samples of one job sum (up to rounding) to the job's
+    /// elapsed time.
     pub busy: std::time::Duration,
     /// Bitplanes the engine actually issued for this request.
     pub planes_issued: u32,
@@ -131,6 +138,21 @@ pub struct CompletedTransform {
     pub elements: u64,
     /// Elements that resolved before their final bitplane (ET depth).
     pub terminated_early: u64,
+}
+
+/// One completed *job* from [`Coordinator::drain_batch`]: the fused
+/// job's identity and total busy time plus one per-sample
+/// [`CompletedTransform`] payload per submitted request, in submission
+/// order.  Single-sample jobs come back as one-element batches, so a
+/// caller draining a mixed stream of fused and unfused submissions
+/// handles both through this one envelope.
+#[derive(Debug, Clone)]
+pub struct CompletedBatch {
+    pub request_id: u64,
+    /// Worker busy time for the whole fused job.
+    pub busy: std::time::Duration,
+    /// Per-sample payloads, in submission order.
+    pub samples: Vec<CompletedTransform>,
 }
 
 /// The leader + worker pool.
@@ -205,6 +227,7 @@ impl Coordinator {
                         outcome_stats: out.stats,
                         planes_issued: out.planes_issued,
                         row_cycles: out.row_cycles,
+                        per_sample: out.per_sample,
                         elapsed,
                     });
                 }
@@ -586,29 +609,127 @@ impl Coordinator {
         }
     }
 
-    /// Block for the next completed request, folding its stats into the
-    /// shared metrics.  Results arrive in completion order, not submit
-    /// order — correlate via the returned request id.
-    pub fn drain_one(&mut self) -> Result<CompletedTransform> {
+    /// Non-blocking *batched* submit: enqueue `reqs` as one fused job
+    /// that a single worker streams through its tile via the batch-fused
+    /// engine ([`schedule_batch`]) — N same-partition samples, one
+    /// channel send, one dispatch.  Returns `Ok(None)` on backpressure
+    /// (bounded queue full).  Pair with [`Coordinator::drain_batch`],
+    /// which hands back one [`CompletedTransform`] payload per sample.
+    ///
+    /// The caller supplies the resolved [`TilePlan`] directly (the shard
+    /// router caches sub-plans per lane shape), so repeated fused
+    /// submissions of the same shape are an `Arc` bump — no plan
+    /// re-resolution, no cache probe.  The plan must have been resolved
+    /// for this pool's tile width, and every request must span exactly
+    /// `plan.width()` elements.
+    pub fn try_submit_batch_planned(
+        &mut self,
+        reqs: &[TransformRequest],
+        plan: &Arc<TilePlan>,
+    ) -> Result<Option<u64>> {
+        self.validate_config()?;
+        if reqs.is_empty() {
+            bail!("batched submission needs at least one request");
+        }
+        if plan.tile_n() != self.config.tile_n {
+            bail!(
+                "plan was resolved for {}-wide tiles, but this pool runs {}-wide tiles",
+                plan.tile_n(),
+                self.config.tile_n
+            );
+        }
+        for req in reqs {
+            Self::validate(req)?;
+            if req.x.len() != plan.width() {
+                bail!(
+                    "request is {} wide, but the plan covers {}",
+                    req.x.len(),
+                    plan.width()
+                );
+            }
+        }
+        let id = self.next_request;
+        self.next_request += 1;
+        let job = TileJob {
+            request_id: id,
+            reqs: reqs.to_vec(),
+            plan: Arc::clone(plan),
+        };
+        match self.job_tx.try_send(job) {
+            Ok(()) => {
+                self.pending_async += 1;
+                Ok(Some(id))
+            }
+            Err(TrySendError::Full(_)) => Ok(None),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("worker pool shut down")),
+        }
+    }
+
+    /// Block for the next completed *job*, folding its stats into the
+    /// shared metrics and decomposing it into per-sample payloads (in
+    /// submission order).  Jobs arrive in completion order, not submit
+    /// order — correlate via the returned request id.  Each sample's
+    /// `busy` is the job's elapsed time apportioned by row-cycle share
+    /// (equal split when the job executed zero row-cycles), so the trace
+    /// layer can lay per-slice execute spans end to end inside the job's
+    /// real execution window.
+    pub fn drain_batch(&mut self) -> Result<CompletedBatch> {
         let r = self
             .result_rx
             .recv()
             .map_err(|_| anyhow!("workers disconnected"))?;
         self.record(&r);
         self.pending_async = self.pending_async.saturating_sub(1);
-        Ok(CompletedTransform {
-            request_id: r.request_id,
-            values: r
-                .values
-                .into_iter()
-                .next()
-                .expect("async submissions carry one request per job"),
-            busy: r.elapsed,
-            planes_issued: r.planes_issued,
-            row_cycles: r.row_cycles,
-            elements: r.outcome_stats.total_elements,
-            terminated_early: r.outcome_stats.terminated_early,
+        let request_id = r.request_id;
+        let elapsed = r.elapsed;
+        let n = r.values.len();
+        debug_assert_eq!(r.per_sample.len(), n);
+        let total_rc: u64 = r.per_sample.iter().map(|s| s.row_cycles).sum();
+        let samples = r
+            .values
+            .into_iter()
+            .zip(r.per_sample)
+            .map(|(values, s)| {
+                let busy = if total_rc == 0 {
+                    elapsed / (n.max(1) as u32)
+                } else {
+                    elapsed.mul_f64(s.row_cycles as f64 / total_rc as f64)
+                };
+                CompletedTransform {
+                    request_id,
+                    values,
+                    busy,
+                    planes_issued: s.planes_issued,
+                    row_cycles: s.row_cycles,
+                    elements: s.elements,
+                    terminated_early: s.terminated_early,
+                }
+            })
+            .collect();
+        Ok(CompletedBatch {
+            request_id,
+            busy: elapsed,
+            samples,
         })
+    }
+
+    /// Block for the next completed request, folding its stats into the
+    /// shared metrics.  Results arrive in completion order, not submit
+    /// order — correlate via the returned request id.  Only valid for
+    /// single-sample submissions ([`Coordinator::submit`]/`try_submit`
+    /// and their planned variants): draining a fused multi-sample job
+    /// here is a clean error — use [`Coordinator::drain_batch`].
+    pub fn drain_one(&mut self) -> Result<CompletedTransform> {
+        let mut batch = self.drain_batch()?;
+        if batch.samples.len() != 1 {
+            bail!(
+                "drain_one drained fused job {} carrying {} samples; batched submissions \
+                 must be drained with drain_batch",
+                batch.request_id,
+                batch.samples.len()
+            );
+        }
+        Ok(batch.samples.pop().expect("length checked above"))
     }
 
     /// Snapshot of aggregated metrics.
@@ -933,6 +1054,105 @@ mod tests {
         assert_eq!(done.row_cycles, 16 * 8, "T=0: no early termination");
         assert_eq!(done.terminated_early, 0);
         assert!(done.planes_issued > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batch_submit_drain_matches_per_sample_submission() {
+        // One fused 6-sample job must come back bit-identical (and with
+        // identical engine counters) to six single-sample submissions.
+        let blocks = [16usize, 4];
+        let reqs: Vec<TransformRequest> = (0..6)
+            .map(|i| {
+                let x = sample(20, 800 + i);
+                TransformRequest {
+                    thresholds_units: vec![1.5; 20],
+                    scale: Some(crate::quant::Quantizer::new(8).scale_for(&x)),
+                    x,
+                }
+            })
+            .collect();
+        let mut fused = Coordinator::new(CoordinatorConfig::default());
+        let plan = Arc::new(TilePlan::new(16, &blocks).unwrap());
+        let id = fused
+            .try_submit_batch_planned(&reqs, &plan)
+            .unwrap()
+            .expect("queue empty");
+        assert_eq!(fused.pending_async(), 1);
+        let batch = fused.drain_batch().unwrap();
+        assert_eq!(batch.request_id, id);
+        assert_eq!(batch.samples.len(), reqs.len());
+        assert_eq!(fused.pending_async(), 0);
+
+        let mut single = Coordinator::new(CoordinatorConfig::default());
+        let mut busy_sum = std::time::Duration::ZERO;
+        for (i, req) in reqs.iter().enumerate() {
+            single.submit_planned(req, &blocks).unwrap();
+            let want = single.drain_one().unwrap();
+            let got = &batch.samples[i];
+            assert_eq!(got.values, want.values, "sample {i}");
+            assert_eq!(got.planes_issued, want.planes_issued, "sample {i}");
+            assert_eq!(got.row_cycles, want.row_cycles, "sample {i}");
+            assert_eq!(got.elements, want.elements, "sample {i}");
+            assert_eq!(got.terminated_early, want.terminated_early, "sample {i}");
+            busy_sum += got.busy;
+        }
+        // Apportioned busy decomposes the job's busy time (up to
+        // sub-microsecond float rounding).
+        let slack = std::time::Duration::from_micros(1);
+        assert!(
+            busy_sum <= batch.busy + slack && busy_sum + slack >= batch.busy,
+            "per-sample busy {busy_sum:?} must decompose the job busy {:?}",
+            batch.busy
+        );
+        // One fused job, six requests: the fusion factor is observable.
+        let m = fused.metrics();
+        assert_eq!(m.jobs, 1);
+        assert_eq!(m.requests, 6);
+        assert_eq!(single.metrics().jobs, 6);
+        fused.shutdown();
+        single.shutdown();
+    }
+
+    #[test]
+    fn batch_submit_validates_at_the_boundary() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let plan = Arc::new(TilePlan::new(16, &[16, 4]).unwrap());
+        // Empty fused jobs are refused.
+        assert!(c.try_submit_batch_planned(&[], &plan).is_err());
+        // Width mismatch against the supplied plan.
+        let narrow = TransformRequest::plain(sample(16, 810));
+        assert!(c
+            .try_submit_batch_planned(std::slice::from_ref(&narrow), &plan)
+            .is_err());
+        // Plan resolved for another tile geometry.
+        let other = Arc::new(TilePlan::new(32, &[32]).unwrap());
+        let wide = TransformRequest::plain(sample(32, 811));
+        assert!(c
+            .try_submit_batch_planned(std::slice::from_ref(&wide), &other)
+            .is_err());
+        // The pool still serves after the refusals.
+        let ok = TransformRequest::plain(sample(20, 812));
+        let id = c
+            .try_submit_batch_planned(std::slice::from_ref(&ok), &plan)
+            .unwrap();
+        assert!(id.is_some());
+        assert_eq!(c.drain_batch().unwrap().samples.len(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_one_refuses_fused_multi_sample_jobs() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let plan = Arc::new(TilePlan::new(16, &[16]).unwrap());
+        let reqs: Vec<TransformRequest> =
+            (0..3).map(|i| TransformRequest::plain(sample(16, 820 + i))).collect();
+        c.try_submit_batch_planned(&reqs, &plan).unwrap().expect("queue empty");
+        let err = c.drain_one().unwrap_err();
+        assert!(err.to_string().contains("drain_batch"), "{err}");
+        // Single-sample async submissions still drain through drain_one.
+        c.submit(&TransformRequest::plain(sample(16, 830))).unwrap();
+        assert_eq!(c.drain_one().unwrap().values.len(), 16);
         c.shutdown();
     }
 

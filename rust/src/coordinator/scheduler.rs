@@ -64,6 +64,27 @@ pub struct BatchOutcome {
     pub planes_issued: u32,
     /// Row-cycles executed across the whole batch.
     pub row_cycles: u64,
+    /// Per-sample engine counters, in request order.  The plane-major
+    /// digital path interleaves samples, so these are *attributed*, not
+    /// measured sequentially: each plane a sample's live rows execute is
+    /// billed to that sample.  Sums equal the aggregate fields above —
+    /// the invariant the drain path relies on to reconstruct per-slice
+    /// trace spans out of a fused job.
+    pub per_sample: Vec<SampleStats>,
+}
+
+/// Engine counters attributed to one sample of a batched job (the
+/// per-slice execute payload the shard router reports at drain).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SampleStats {
+    /// Bitplane operations issued for this sample's blocks.
+    pub planes_issued: u32,
+    /// Row-cycles this sample's live rows executed.
+    pub row_cycles: u64,
+    /// Output elements this sample produced.
+    pub elements: u64,
+    /// Elements that resolved before their final bitplane.
+    pub terminated_early: u64,
 }
 
 /// Reusable per-worker scratch for the bitplane engine: every buffer the
@@ -264,8 +285,7 @@ pub fn schedule_batch(
     }
     let mut values: Vec<Vec<f32>> = reqs.iter().map(|_| vec![0.0f32; width]).collect();
     let mut stats = CycleStats::new(bits);
-    let mut planes_issued = 0u32;
-    let mut row_cycles = 0u64;
+    let mut per_sample = vec![SampleStats::default(); reqs.len()];
 
     if tile.is_digital() {
         for slot in plan.slots() {
@@ -277,14 +297,14 @@ pub fn schedule_batch(
                 arena,
                 &mut values,
                 &mut stats,
-                &mut planes_issued,
-                &mut row_cycles,
+                &mut per_sample,
             );
         }
     } else {
         // Sample-major: the exact execution order of per-sample jobs,
         // so noise streams are independent of batching.
         for (s, req) in reqs.iter().enumerate() {
+            let (elements0, terminated0) = (stats.total_elements, stats.terminated_early);
             for slot in plan.slots() {
                 let lo = slot.offset;
                 let hi = lo + slot.width;
@@ -300,17 +320,22 @@ pub fn schedule_batch(
                     &mut values[s][lo..hi],
                     &mut stats,
                 );
-                planes_issued += p;
-                row_cycles += rc;
+                per_sample[s].planes_issued += p;
+                per_sample[s].row_cycles += rc;
             }
+            per_sample[s].elements = stats.total_elements - elements0;
+            per_sample[s].terminated_early = stats.terminated_early - terminated0;
         }
     }
 
+    let planes_issued = per_sample.iter().map(|s| s.planes_issued).sum();
+    let row_cycles = per_sample.iter().map(|s| s.row_cycles).sum();
     BatchOutcome {
         values,
         stats,
         planes_issued,
         row_cycles,
+        per_sample,
     }
 }
 
@@ -443,6 +468,9 @@ fn step_plane(
 /// batch: every sample's plane `bit` executes before any sample's next
 /// plane.  Per-sample live lists are flat segments of the arena with a
 /// stride of the block width, compacted in place as rows terminate.
+/// Every plane/row-cycle is billed to the sample whose live rows
+/// executed it (`per_sample`), so a fused job's counters decompose
+/// exactly back into its constituent samples.
 #[allow(clippy::too_many_arguments)]
 fn run_slot_plane_major(
     tile: &mut Tile,
@@ -452,8 +480,7 @@ fn run_slot_plane_major(
     arena: &mut ScratchArena,
     values: &mut [Vec<f32>],
     stats: &mut CycleStats,
-    planes_issued: &mut u32,
-    row_cycles: &mut u64,
+    per_sample: &mut [SampleStats],
 ) {
     let n = tile.n();
     let b = slot.width;
@@ -462,7 +489,7 @@ fn run_slot_plane_major(
     arena.reset(n);
 
     // Per-sample setup, hoisted quantizer + row map.
-    for req in reqs {
+    for (s, req) in reqs.iter().enumerate() {
         let x = &req.x[lo..lo + b];
         let scale = req.scale.unwrap_or_else(|| quantizer.scale_for(x));
         arena.scales.push(scale);
@@ -472,8 +499,8 @@ fn run_slot_plane_major(
         let thresholds = &req.thresholds_units[lo..lo + b];
         arena.push_segment(bits, thresholds, &slot.rows, fast_zero);
         if fast_zero {
-            *planes_issued += 1;
-            *row_cycles += b as u64;
+            per_sample[s].planes_issued += 1;
+            per_sample[s].row_cycles += b as u64;
         }
     }
 
@@ -485,8 +512,8 @@ fn run_slot_plane_major(
                 continue;
             }
             any_live = true;
-            *planes_issued += 1;
-            *row_cycles += step_plane(
+            per_sample[s].planes_issued += 1;
+            per_sample[s].row_cycles += step_plane(
                 tile,
                 s,
                 b,
@@ -515,6 +542,8 @@ fn run_slot_plane_major(
                 terminated: arena.terminated[e],
                 value_units: arena.done_value[e],
             });
+            per_sample[s].elements += 1;
+            per_sample[s].terminated_early += u64::from(arena.terminated[e]);
         }
     }
 }
@@ -651,8 +680,10 @@ mod tests {
         let mut stats = CycleStats::new(bits);
         let mut planes_issued = 0u32;
         let mut row_cycles = 0u64;
+        let mut per_sample = Vec::with_capacity(reqs.len());
         for req in reqs {
             let mut v = vec![0.0f32; plan.width()];
+            let mut sample = SampleStats::default();
             for slot in plan.slots() {
                 let lo = slot.offset;
                 let hi = lo + slot.width;
@@ -668,14 +699,20 @@ mod tests {
                 stats.merge(&out.stats);
                 planes_issued += out.planes_issued;
                 row_cycles += out.row_cycles;
+                sample.planes_issued += out.planes_issued;
+                sample.row_cycles += out.row_cycles;
+                sample.elements += out.stats.total_elements;
+                sample.terminated_early += out.stats.terminated_early;
             }
             values.push(v);
+            per_sample.push(sample);
         }
         BatchOutcome {
             values,
             stats,
             planes_issued,
             row_cycles,
+            per_sample,
         }
     }
 
@@ -717,6 +754,38 @@ mod tests {
             assert_eq!(got.stats.total_elements, want.stats.total_elements);
             assert_eq!(got.stats.terminated_early, want.stats.terminated_early);
             assert_eq!(got.stats.histogram, want.stats.histogram);
+            // Plane-major attribution decomposes exactly into the
+            // counters each sample would report as its own job.
+            assert_eq!(got.per_sample, want.per_sample, "tile {tile_n} {blocks:?}");
+        }
+    }
+
+    #[test]
+    fn per_sample_stats_sum_to_the_aggregates() {
+        let plan = TilePlan::new(16, &[16, 4]).unwrap();
+        let reqs = batch_reqs(plan.width(), 5, 1234, 15.0);
+        let mut tile = Tile::new(16, &TileKind::Digital, 0);
+        let mut arena = ScratchArena::new();
+        let out = schedule_batch(&mut tile, &plan, &reqs, 8, &mut arena);
+        assert_eq!(out.per_sample.len(), reqs.len());
+        assert_eq!(
+            out.per_sample.iter().map(|s| s.planes_issued).sum::<u32>(),
+            out.planes_issued
+        );
+        assert_eq!(
+            out.per_sample.iter().map(|s| s.row_cycles).sum::<u64>(),
+            out.row_cycles
+        );
+        assert_eq!(
+            out.per_sample.iter().map(|s| s.elements).sum::<u64>(),
+            out.stats.total_elements
+        );
+        assert_eq!(
+            out.per_sample.iter().map(|s| s.terminated_early).sum::<u64>(),
+            out.stats.terminated_early
+        );
+        for (s, sample) in out.per_sample.iter().enumerate() {
+            assert_eq!(sample.elements, plan.width() as u64, "sample {s}");
         }
     }
 
@@ -750,6 +819,7 @@ mod tests {
         let unbatched = per_sample_reference(&mut b, &plan, &reqs, 8);
         assert_eq!(batched.values, unbatched.values, "noisy outputs");
         assert_eq!(batched.planes_issued, unbatched.planes_issued);
+        assert_eq!(batched.per_sample, unbatched.per_sample);
         let probe = vec![1i8; 16];
         assert_eq!(
             a.execute_bitplane(&probe),

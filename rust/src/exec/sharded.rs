@@ -5,10 +5,12 @@
 //! healthy shards by the planner (row-cycle-balanced over the
 //! heterogeneous block costs), executed in parallel and reassembled, so
 //! one wide activation saturates every pool and a poisoned shard sheds
-//! its slices to the survivors mid-batch.  Every slice executes on the
-//! pool workers' zero-allocation batch engine
-//! ([`crate::coordinator::schedule_batch`]); slices stay single-sample
-//! so the router's per-slice failover granularity is preserved.  Blocks narrower than the
+//! its slices to the survivors mid-batch.  Same-partition samples in a
+//! batch fuse into multi-sample chunk jobs that run the pool workers'
+//! zero-allocation batch engine
+//! ([`crate::coordinator::schedule_batch`]) across the whole chunk;
+//! failover stays per-slice (a poisoned shard's fused jobs re-queue as
+//! single-request slices).  Blocks narrower than the
 //! shard tile run under sub-tile masking
 //! ([`crate::coordinator::plan::TilePlan`]); pinned quantization scales
 //! ride along with every slice, which keeps the digital path

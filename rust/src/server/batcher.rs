@@ -14,11 +14,12 @@
 //!   `Backend::Quantized`.
 //!
 //! Both paths land on the pool workers' zero-allocation bitplane engine
-//! ([`crate::coordinator::schedule_batch`]), as the router's
-//! single-sample slice jobs — cross-sample fusion of same-partition
-//! slices inside the router is the follow-on tracked in ROADMAP.md
-//! (`Coordinator::transform_batch_planned` currently serves the
-//! [`crate::exec::Pooled`] executor, which the server does not use).
+//! ([`crate::coordinator::schedule_batch`]), as the router's fused
+//! multi-sample chunk jobs: same-partition requests in the batch are
+//! planned as one group and same-shard slices are submitted through
+//! [`crate::coordinator::Coordinator::try_submit_batch_planned`], so a
+//! deep batch costs ~`shards × workers` pool jobs rather than one job
+//! per sample per shard lane.
 //!
 //! Replies fan back out over per-request channels.  Under a backlog the
 //! `recv_timeout` calls return instantly, so deep batches form with no

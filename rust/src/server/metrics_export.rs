@@ -147,6 +147,12 @@ pub(crate) fn render(state: &ServerState) -> String {
     );
     counter_u64(
         &mut out,
+        "repro_pool_jobs_total",
+        "Pool jobs executed across the shard set; requests/jobs is the router's slice-fusion factor.",
+        coord.jobs,
+    );
+    counter_u64(
+        &mut out,
         "repro_planes_issued_total",
         "Tile-level bitplane operations issued.",
         coord.planes_issued,
@@ -618,6 +624,7 @@ mod tests {
 
         let text = render(&state);
         assert_eq!(metric_value(&text, "repro_requests_total"), 2.0, "{text}");
+        assert_eq!(metric_value(&text, "repro_pool_jobs_total"), 2.0, "{text}");
         assert!(metric_value(&text, "repro_row_cycles_saved_total") > 0.0);
         assert!(metric_value(&text, "repro_tops_per_watt") > 0.0);
         assert!(metric_value(&text, "repro_request_latency_seconds_p50") > 0.0);

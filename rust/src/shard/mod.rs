@@ -8,24 +8,26 @@
 //! one logical accelerator:
 //!
 //! ```text
-//!   request (width W)
+//!   batch of requests (width W, same partition)
 //!        │ planner: split padded block list, balance estimated
-//!        ▼          row-cycles (LPT over healthy shards)
+//!        ▼          row-cycles summed over the batch (LPT)
 //!   ┌─────────┬─────────┬─────────┐
 //!   │ shard 0 │ shard 1 │ shard 2 │   each its own Coordinator pool
-//!   │ submit  │ submit  │ submit  │   (tiles, workers, RNG stream)
+//!   │  fused  │  fused  │  fused  │   (tiles, workers, RNG stream);
+//!   │  jobs   │  jobs   │  jobs   │   N samples per submitted job
 //!   └────┬────┴────┬────┴────┬────┘
-//!        ▼ router: drain_one per shard, scatter outputs back
-//!   reassembled output (bit-identical to a single pool, digital)
+//!        ▼ router: drain_batch per shard, scatter samples back
+//!   reassembled outputs (bit-identical to a single pool, digital)
 //! ```
 //!
 //! * [`planner`] — per-block row-cycle estimation + deterministic LPT
 //!   placement balancing load across healthy shards (block widths may be
 //!   heterogeneous: planned requests carry mixed BWHT partitions);
 //! * [`router`] — the scatter–gather executor over the coordinator's
-//!   `try_submit_planned`/`drain_one` API, with poisoned-shard load
-//!   shedding; sub-tile blocks execute under
-//!   [`crate::coordinator::plan::TilePlan`] masking;
+//!   batched `try_submit_batch_planned`/`drain_batch` API: same-partition
+//!   requests fuse into multi-sample jobs per shard lane, failover stays
+//!   per-slice under poisoned-shard load shedding; sub-tile blocks
+//!   execute under [`crate::coordinator::plan::TilePlan`] masking;
 //! * [`set`] — shard lifecycle: per-shard seed/backend config, health
 //!   tracking, retirement of dead pools;
 //! * [`metrics_agg`] — merged + per-shard [`crate::coordinator::Metrics`]

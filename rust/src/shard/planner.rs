@@ -10,6 +10,13 @@
 //! row-cycles each block will execute — both block width and early
 //! termination make blocks heterogeneous — and spread them with a
 //! deterministic longest-processing-time greedy.
+//!
+//! The router plans fusion-aware: a batch's same-partition requests form
+//! one *group* whose per-block costs are summed across members before
+//! the LPT pass (one placement serves every member, so same-shard slices
+//! can fuse into multi-sample jobs), and shard loads carry over between
+//! groups of a mixed batch so later groups balance around earlier
+//! placements.
 
 /// Blocks placed on one shard (slot index into the
 /// [`crate::shard::ShardSet`]).  `blocks` holds ascending block indices

@@ -5,29 +5,41 @@
 //! semantics) or an explicit, possibly mixed, partition such as
 //! `[128, 64, 16, 4]` ([`transform_batch_planned`], the NN executor
 //! path, where blocks narrower than the tile run under sub-tile
-//! masking).  The block list is partitioned by the [`super::planner`]
-//! across the healthy shards (balancing estimated row-cycles over the
-//! heterogeneous block costs), each shard's portion is further split
-//! into per-worker lanes and fanned out through the coordinator's
-//! `try_submit_planned`/`drain_one` async API, and the per-slice outputs
-//! are scattered back into the request's output vector by block offset.
+//! masking).
 //!
-//! Because every block is quantized and scheduled independently, any
-//! placement reproduces the single-coordinator output bit-for-bit on the
-//! digital backend — placement is a pure throughput decision.
+//! Routing is *fusion-aware*: requests that share a partition (the same
+//! plan `Arc` or an equal slot layout) are planned as one group — a
+//! single LPT pass over the group's summed per-block costs puts block
+//! `b` of every member on the same shard — and the group's work is cut
+//! into multi-sample [`Slice`]s: a contiguous run of requests × a
+//! contiguous run of blocks, submitted as ONE fused pool job through
+//! the coordinator's `try_submit_batch_planned`/`drain_batch` API.  The
+//! pool worker then runs its plane-major engine over N router samples
+//! in one pass instead of being dispatched N times, so a batch of M
+//! same-partition requests costs `~shards × workers` jobs instead of
+//! `M × shards × lanes`.  Per-sample outputs are scattered back into
+//! each request's output vector by block offset.
 //!
-//! Failure isolation: a shard whose pool errors on submit or drain is
-//! poisoned and its slices (outstanding ones included) are re-routed to
-//! the surviving shards.  A request only fails once *every* shard is
-//! gone.  Re-executed slices are harmless: a poisoned shard is never
-//! drained again, so a duplicate result can never be observed.
+//! Because every block is quantized and scheduled independently — and
+//! the batch engine is bit-identical to per-sample jobs on the digital
+//! backend, RNG-stream-identical on the noisy one — any placement *and
+//! any fusion* reproduces the single-coordinator output bit-for-bit.
+//! Placement and fusion are pure throughput decisions.
+//!
+//! Failure isolation stays per-slice: a shard whose pool errors on
+//! submit or drain is poisoned and its in-flight fused jobs are
+//! re-queued as their per-request constituent slices, re-routed to the
+//! surviving shards.  A request only fails once *every* shard is gone.
+//! Re-executed slices are harmless: a poisoned shard is never drained
+//! again, so a duplicate result can never be observed.
 
+use std::borrow::Cow;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{CompletedTransform, TilePlan, TransformRequest};
+use crate::coordinator::{CompletedBatch, TilePlan, TransformRequest};
 use crate::monitor::{MonitorHandle, ShadowSample};
 use crate::trace::{self, ExecStats, Stage, TraceHandle};
 
@@ -38,15 +50,19 @@ use super::set::ShardSet;
 /// work is a *block*, identified by its index into the plan's slots.
 /// The validated [`TilePlan`] already carries every block's offset and
 /// width, so it is shared by reference — one `Arc` per batch, not a
-/// re-derived partition clone per request.
-struct PlannedReq {
-    x: Vec<f32>,
-    th: Vec<f64>,
+/// re-derived partition clone per request.  Input and threshold data
+/// are `Cow`s so the planned paths borrow straight from the caller's
+/// requests (the executor seam submits thousands of rows per layer; a
+/// copy per row was pure overhead) while the legacy uniform path can
+/// still own its padded storage.
+struct PlannedReq<'a> {
+    x: Cow<'a, [f32]>,
+    th: Cow<'a, [f64]>,
     scale: Option<f32>,
     plan: Arc<TilePlan>,
 }
 
-impl PlannedReq {
+impl PlannedReq<'_> {
     fn block_offset(&self, b: usize) -> usize {
         self.plan.slots()[b].offset
     }
@@ -56,15 +72,18 @@ impl PlannedReq {
     }
 }
 
-/// One unit of scatter work: a subset of one request's blocks bound for
-/// one shard.
+/// One unit of scatter work: a contiguous run of same-partition batch
+/// requests × a contiguous run of their shared blocks, bound for one
+/// shard and submitted as a single fused multi-sample pool job.  The
+/// failover path re-queues fused slices split back to one request each.
 #[derive(Debug, Clone)]
 struct Slice {
-    /// Index into the batch.
-    req: usize,
+    /// Indices into the batch, ascending; every member shares the
+    /// slice's block layout.
+    reqs: Vec<usize>,
     /// Target shard slot (revised when the target is poisoned).
     shard: usize,
-    /// Ascending block indices of the request's partition.
+    /// Ascending block indices of the requests' shared partition.
     blocks: Vec<usize>,
 }
 
@@ -72,7 +91,7 @@ struct Slice {
 /// matching sub-partition.  The parent's pinned quantization scale (if
 /// any) is inherited by every slice, so a sliced request quantizes
 /// exactly like the whole one.
-fn sub_request(preq: &PlannedReq, blocks: &[usize]) -> (TransformRequest, Vec<usize>) {
+fn sub_request(preq: &PlannedReq<'_>, blocks: &[usize]) -> (TransformRequest, Vec<usize>) {
     let total: usize = blocks.iter().map(|&b| preq.block_width(b)).sum();
     let mut sx = Vec::with_capacity(total);
     let mut sth = Vec::with_capacity(total);
@@ -95,7 +114,7 @@ fn sub_request(preq: &PlannedReq, blocks: &[usize]) -> (TransformRequest, Vec<us
 }
 
 /// Scatter a slice's concatenated outputs back by block offset.
-fn gather(out: &mut [f32], values: &[f32], preq: &PlannedReq, blocks: &[usize]) {
+fn gather(out: &mut [f32], values: &[f32], preq: &PlannedReq<'_>, blocks: &[usize]) {
     let mut pos = 0usize;
     for &b in blocks {
         let lo = preq.block_offset(b);
@@ -106,31 +125,43 @@ fn gather(out: &mut [f32], values: &[f32], preq: &PlannedReq, blocks: &[usize]) 
     debug_assert_eq!(pos, values.len());
 }
 
-/// Split `blocks` into at most `lanes` contiguous chunks of near-equal
-/// length (at least one block each).
-fn split_lanes(blocks: &[usize], lanes: usize) -> Vec<Vec<usize>> {
-    let lanes = lanes.clamp(1, blocks.len().max(1));
-    let base = blocks.len() / lanes;
-    let extra = blocks.len() % lanes;
-    let mut chunks = Vec::with_capacity(lanes);
+/// Split `items` into at most `parts` contiguous chunks of near-equal
+/// length (at least one item each).  Used both for a shard's block list
+/// (per-worker lanes) and for a group's request list (sample chunks).
+fn split_lanes(items: &[usize], parts: usize) -> Vec<Vec<usize>> {
+    let parts = parts.clamp(1, items.len().max(1));
+    let base = items.len() / parts;
+    let extra = items.len() % parts;
+    let mut chunks = Vec::with_capacity(parts);
     let mut off = 0;
-    for lane in 0..lanes {
+    for lane in 0..parts {
         let take = base + usize::from(lane < extra);
         if take == 0 {
             break;
         }
-        chunks.push(blocks[off..off + take].to_vec());
+        chunks.push(items[off..off + take].to_vec());
         off += take;
     }
     chunks
 }
 
-/// An in-flight slice: what was submitted plus the submit timestamp
+/// True when request `ri` of the batch carries an active trace handle.
+fn is_traced(scope: &[TraceHandle], ri: usize) -> bool {
+    scope.get(ri).is_some_and(TraceHandle::is_active)
+}
+
+/// True when any member of a fused slice is traced (one clock read per
+/// slice covers the whole fused job).
+fn any_traced(scope: &[TraceHandle], reqs: &[usize]) -> bool {
+    reqs.iter().any(|&ri| is_traced(scope, ri))
+}
+
+/// An in-flight fused job: what was submitted plus the submit timestamp
 /// (µs on the trace epoch; 0 when the batch is untraced) that anchors
 /// the pool-queue span at drain time.
 type InFlight = (Slice, u64);
 
-/// Healthy shard with the fewest outstanding slices (re-route target).
+/// Healthy shard with the fewest outstanding jobs (re-route target).
 fn reroute_target(set: &ShardSet, outstanding: &[HashMap<u64, InFlight>]) -> Result<usize> {
     set.healthy()
         .into_iter()
@@ -138,8 +169,8 @@ fn reroute_target(set: &ShardSet, outstanding: &[HashMap<u64, InFlight>]) -> Res
         .ok_or_else(|| anyhow!("every shard is poisoned; request cannot be served"))
 }
 
-/// Retire a dead shard and push everything in flight on it back onto the
-/// work queue (the re-queued slices keep their stale shard id; the
+/// Retire a dead shard and push everything in flight on it back onto
+/// the work queue (the re-queued slices keep their stale shard id; the
 /// scatter loop re-routes them to a healthy target).
 fn poison_and_requeue(
     set: &mut ShardSet,
@@ -149,72 +180,109 @@ fn poison_and_requeue(
 ) {
     set.poison(shard);
     for (_, (orphan, _)) in outstanding[shard].drain() {
-        queue.push_back(orphan);
+        requeue_split(orphan, queue);
     }
 }
 
-/// Gather a drained slice into its request's output and, when the
-/// request is traced, reconstruct its pool-queue / execute / drain spans
-/// from the completion: the execute span ends at drain time and lasted
-/// the worker's reported busy time, and the gap from submission to
-/// execute start is time spent queued in the shard's pool.  Execute
-/// spans carry the engine's plane-count / row-cycle / ET-depth payload.
-fn finish_slice(
+/// Failover granularity is the *slice*, not the fused job: work lost to
+/// a poisoned shard is re-queued as per-request slices so the survivors
+/// can re-balance (and re-fail) each sample independently.
+fn requeue_split(slice: Slice, queue: &mut VecDeque<Slice>) {
+    if slice.reqs.len() <= 1 {
+        queue.push_back(slice);
+        return;
+    }
+    for &ri in &slice.reqs {
+        queue.push_back(Slice {
+            reqs: vec![ri],
+            shard: slice.shard,
+            blocks: slice.blocks.clone(),
+        });
+    }
+}
+
+/// Gather a drained fused job into its requests' outputs and, for every
+/// traced member, reconstruct that slice's pool-queue / execute / drain
+/// spans from the per-sample completion payloads: the job's execute
+/// window ends at drain time and lasted the worker's reported busy
+/// time; within it, sample windows are laid end to end, each sized by
+/// its row-cycle share of the busy time (the pool's apportioning), so
+/// per-slice spans tile the fused window without overlap.  Execute
+/// spans carry each sample's own plane-count / row-cycle / ET-depth
+/// payload.  The fidelity monitor keeps sampling individual slices: the
+/// 1-in-K counter advances once per *sample*, not per job.
+#[allow(clippy::too_many_arguments)]
+fn finish_job(
     scope: &[TraceHandle],
     monitor: &MonitorHandle,
     outs: &mut [Vec<f32>],
-    planned: &[PlannedReq],
+    planned: &[PlannedReq<'_>],
     shard: usize,
-    done: CompletedTransform,
+    batch: CompletedBatch,
     in_flight: InFlight,
     drain_start_us: u64,
 ) {
     let (slice, submit_us) = in_flight;
-    // Fidelity capture: 1-in-K slices served by a monitored (non-digital)
-    // shard are copied off to the shadow checker before the gather.  An
-    // inactive monitor is one dead branch; digital slots are filtered by
-    // the handle without touching the sample counter.
-    if monitor.wants_sample(shard) {
-        let (sub, widths) = sub_request(&planned[slice.req], &slice.blocks);
-        monitor.enqueue(ShadowSample {
-            shard,
-            request: sub,
-            blocks: widths,
-            observed: done.values.clone(),
-        });
+    debug_assert_eq!(batch.samples.len(), slice.reqs.len());
+    let job_traced = any_traced(scope, &slice.reqs);
+    let (end_us, exec_start) = if job_traced {
+        let end = trace::now_us();
+        let busy = batch.busy.as_micros().min(u128::from(u64::MAX)) as u64;
+        // Clamp the reconstructed execute window into [submit, drain-end].
+        (end, end.saturating_sub(busy).max(submit_us))
+    } else {
+        (0, 0)
+    };
+    let mut cursor_us = exec_start;
+    for (&ri, done) in slice.reqs.iter().zip(batch.samples) {
+        // Fidelity capture: 1-in-K slices served by a monitored
+        // (non-digital) shard are copied off to the shadow checker
+        // before the gather.  An inactive monitor is one dead branch;
+        // digital slots are filtered by the handle without touching the
+        // sample counter.
+        if monitor.wants_sample(shard) {
+            let (sub, widths) = sub_request(&planned[ri], &slice.blocks);
+            monitor.enqueue(ShadowSample {
+                shard,
+                request: sub,
+                blocks: widths,
+                observed: done.values.clone(),
+            });
+        }
+        gather(&mut outs[ri], &done.values, &planned[ri], &slice.blocks);
+        if !job_traced {
+            continue;
+        }
+        let sample_busy = done.busy.as_micros().min(u128::from(u64::MAX)) as u64;
+        let exec_end = (cursor_us + sample_busy).min(end_us).max(cursor_us);
+        if is_traced(scope, ri) {
+            let handle = &scope[ri];
+            handle.record_shard(
+                Stage::PoolQueue,
+                submit_us,
+                exec_start.saturating_sub(submit_us),
+                shard,
+            );
+            handle.record_exec(
+                cursor_us,
+                exec_end - cursor_us,
+                shard,
+                ExecStats {
+                    planes: done.planes_issued,
+                    row_cycles: done.row_cycles,
+                    elements: done.elements,
+                    terminated_early: done.terminated_early,
+                },
+            );
+            handle.record_shard(
+                Stage::Drain,
+                drain_start_us,
+                end_us.saturating_sub(drain_start_us),
+                shard,
+            );
+        }
+        cursor_us = exec_end;
     }
-    gather(&mut outs[slice.req], &done.values, &planned[slice.req], &slice.blocks);
-    let Some(handle) = scope.get(slice.req) else { return };
-    if !handle.is_active() {
-        return;
-    }
-    let end_us = trace::now_us();
-    let busy_us = done.busy.as_micros().min(u128::from(u64::MAX)) as u64;
-    // Clamp the reconstructed execute window into [submit, drain-end].
-    let exec_start = end_us.saturating_sub(busy_us).max(submit_us);
-    handle.record_shard(
-        Stage::PoolQueue,
-        submit_us,
-        exec_start.saturating_sub(submit_us),
-        shard,
-    );
-    handle.record_exec(
-        exec_start,
-        end_us.saturating_sub(exec_start),
-        shard,
-        ExecStats {
-            planes: done.planes_issued,
-            row_cycles: done.row_cycles,
-            elements: done.elements,
-            terminated_early: done.terminated_early,
-        },
-    );
-    handle.record_shard(
-        Stage::Drain,
-        drain_start_us,
-        end_us.saturating_sub(drain_start_us),
-        shard,
-    );
 }
 
 /// Validate one request at the routing boundary (mirrors
@@ -266,10 +334,17 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
                 .entry(req.x.len())
                 .or_insert_with(|| Arc::new(TilePlan::uniform(tile_n, req.x.len()))),
         );
-        let mut x = req.x.clone();
-        x.resize(plan.width(), 0.0);
-        let mut th = req.thresholds_units.clone();
-        th.resize(plan.width(), 0.0);
+        // Already tile-aligned requests are borrowed as-is; only ragged
+        // widths pay for padded owned storage.
+        let (x, th) = if req.x.len() == plan.width() {
+            (Cow::Borrowed(&req.x[..]), Cow::Borrowed(&req.thresholds_units[..]))
+        } else {
+            let mut x = req.x.clone();
+            x.resize(plan.width(), 0.0);
+            let mut th = req.thresholds_units.clone();
+            th.resize(plan.width(), 0.0);
+            (Cow::Owned(x), Cow::Owned(th))
+        };
         planned.push(PlannedReq { x, th, scale: req.scale, plan });
     }
     run(set, planned)
@@ -286,7 +361,8 @@ pub fn transform_batch_planned(
     reqs: &[TransformRequest],
 ) -> Result<Vec<Vec<f32>>> {
     // Resolve the partition against the shard geometry once, up front;
-    // every request in the batch shares the one validated plan.
+    // every request in the batch shares the one validated plan and its
+    // input/threshold storage is borrowed, not cloned.
     let plan = Arc::new(TilePlan::new(set.tile_n(), blocks)?);
     let width = plan.width();
     let mut planned = Vec::with_capacity(reqs.len());
@@ -299,8 +375,8 @@ pub fn transform_batch_planned(
             );
         }
         planned.push(PlannedReq {
-            x: req.x.clone(),
-            th: req.thresholds_units.clone(),
+            x: Cow::Borrowed(&req.x[..]),
+            th: Cow::Borrowed(&req.thresholds_units[..]),
             scale: req.scale,
             plan: Arc::clone(&plan),
         });
@@ -309,8 +385,9 @@ pub fn transform_batch_planned(
 }
 
 /// The shared scatter–gather loop over pre-validated planned requests.
-fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
+fn run(set: &mut ShardSet, planned: Vec<PlannedReq<'_>>) -> Result<Vec<Vec<f32>>> {
     let bits = set.bits();
+    let tile_n = set.tile_n();
     // Trace handles for the batch, one per request (set by the batcher;
     // empty on untraced paths).  `traced` gates every clock read so an
     // unsampled batch pays a branch per stage and nothing more.
@@ -319,52 +396,71 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
     // One clone per batch; the handle is a single `Option<Arc>`.
     let monitor = set.monitor().clone();
 
-    // Plan the whole batch over the healthy shards, carrying the load
-    // vector across requests so the batch balances globally.
     let healthy = set.healthy();
     if healthy.is_empty() {
         bail!("every shard is poisoned; request cannot be served");
     }
-    // Intra-shard lane splitting trades dispatch overhead (one channel
-    // send + allocation per slice — the cost pool.rs's one-job-per-
-    // request design amortizes) for intra-request parallelism.  A batch
-    // with at least `workers` requests already saturates each shard's
-    // pool at request granularity, so only split when the batch is too
-    // small to do that: 1 request on 4-worker shards → 4 lanes, 2 → 2,
-    // ≥ workers → 1 (the PR-1 dispatch behavior).
-    let lanes_per_shard = set
-        .workers_per_shard()
-        .max(1)
-        .div_ceil(planned.len().max(1));
+
+    // Fusion-aware grouping: requests sharing a block partition (the
+    // same `Arc` or an equal slot layout — the key is the width vector,
+    // which fully determines offsets and sub-tile masks for one
+    // `tile_n`) are planned together.  Groups keep batch order.
+    let mut group_of: HashMap<Vec<usize>, usize> = HashMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (ri, preq) in planned.iter().enumerate() {
+        let key: Vec<usize> = preq.plan.slots().iter().map(|s| s.width).collect();
+        let g = *group_of.entry(key).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(ri);
+    }
+
+    let workers = set.workers_per_shard().max(1);
+    // Plan each group over the healthy shards with ONE LPT pass on the
+    // group's summed per-block costs, carrying the load vector across
+    // groups so the batch balances globally.  Sharing the block→shard
+    // assignment across a group is what makes its slices fusable.
     let mut loads = vec![0u64; healthy.len()];
     let mut queue: VecDeque<Slice> = VecDeque::new();
-    for (ri, preq) in planned.iter().enumerate() {
-        let active = traced && scope.get(ri).is_some_and(TraceHandle::is_active);
-        let plan_start = if active { trace::now_us() } else { 0 };
-        let costs: Vec<u64> = preq
-            .plan
-            .slots()
-            .iter()
-            .map(|s| {
+    for members in &groups {
+        let group_traced = traced && any_traced(&scope, members);
+        let plan_start = if group_traced { trace::now_us() } else { 0 };
+        let slots = planned[members[0]].plan.slots().len();
+        let mut costs = vec![0u64; slots];
+        for &ri in members {
+            let preq = &planned[ri];
+            for (b, s) in preq.plan.slots().iter().enumerate() {
                 let lo = s.offset;
                 let w = s.width;
-                estimate_block_cost(&preq.x[lo..lo + w], &preq.th[lo..lo + w], bits)
-            })
-            .collect();
-        let plan = plan_blocks(&costs, &healthy, &mut loads);
-        if active {
-            let now = trace::now_us();
-            scope[ri].record(Stage::Plan, plan_start, now.saturating_sub(plan_start));
+                costs[b] += estimate_block_cost(&preq.x[lo..lo + w], &preq.th[lo..lo + w], bits);
+            }
         }
+        let plan = plan_blocks(&costs, &healthy, &mut loads);
+        if group_traced {
+            let now = trace::now_us();
+            for &ri in members {
+                if is_traced(&scope, ri) {
+                    scope[ri].record(Stage::Plan, plan_start, now.saturating_sub(plan_start));
+                }
+            }
+        }
+        // Chunking keeps every worker of a shard busy with the fewest
+        // jobs: a group with >= `workers` samples saturates the pool
+        // with whole-block-run sample chunks; a smaller group also
+        // splits its blocks into lanes (a 1-sample group reproduces the
+        // pre-fusion dispatch shape exactly).
+        let sample_chunks = members.len().min(workers);
+        let lanes = workers.div_ceil(sample_chunks);
         for a in plan.assignments {
-            // Split each shard's share into per-worker lanes so the
-            // shard's whole pool works on the request, not one thread.
-            for blocks in split_lanes(&a.blocks, lanes_per_shard) {
-                queue.push_back(Slice {
-                    req: ri,
-                    shard: a.shard,
-                    blocks,
-                });
+            for blocks in split_lanes(&a.blocks, lanes) {
+                for chunk in split_lanes(members, sample_chunks) {
+                    queue.push_back(Slice {
+                        reqs: chunk,
+                        shard: a.shard,
+                        blocks: blocks.clone(),
+                    });
+                }
             }
         }
     }
@@ -372,52 +468,80 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
     let mut outs: Vec<Vec<f32>> = planned.iter().map(|p| vec![0.0f32; p.x.len()]).collect();
     let mut outstanding: Vec<HashMap<u64, InFlight>> =
         (0..set.len()).map(|_| HashMap::new()).collect();
+    // Sub-partition plans are resolved once per distinct lane shape and
+    // shared by `Arc` across every fused job with that shape — an
+    // N-sample job never re-derives its plan.
+    let mut subplans: HashMap<Vec<usize>, Arc<TilePlan>> = HashMap::new();
+    // Rotating gather start: blocking on the lowest-indexed shard with
+    // work would let later shards' bounded result queues sit full (and
+    // their pools idle) while shard 0 finishes; the cursor spreads the
+    // blocking drain across shards round-robin.
+    let mut gather_from = 0usize;
 
     loop {
         // Scatter phase: submit everything queued, shedding poisoned
-        // shards' slices to the survivors.  `try_submit_planned` (never
-        // the blocking `submit`) keeps a full bounded job queue from
-        // deadlocking the scatter against the undrained result queue:
-        // on backpressure we drain one finished result first.
+        // shards' slices to the survivors.  `try_submit_batch_planned`
+        // (never the blocking `submit`) keeps a full bounded job queue
+        // from deadlocking the scatter against the undrained result
+        // queue: on backpressure we drain one finished job first.
         while let Some(mut slice) = queue.pop_front() {
             if !set.is_healthy(slice.shard) {
                 slice.shard = reroute_target(set, &outstanding)?;
             }
             let shard = slice.shard;
-            let active = traced && scope.get(slice.req).is_some_and(TraceHandle::is_active);
+            let active = traced && any_traced(&scope, &slice.reqs);
             let scatter_start = if active { trace::now_us() } else { 0 };
-            let (sub, sub_blocks) = sub_request(&planned[slice.req], &slice.blocks);
+            let subs: Vec<TransformRequest> = slice
+                .reqs
+                .iter()
+                .map(|&ri| sub_request(&planned[ri], &slice.blocks).0)
+                .collect();
+            let widths: Vec<usize> = slice
+                .blocks
+                .iter()
+                .map(|&b| planned[slice.reqs[0]].block_width(b))
+                .collect();
+            let subplan = Arc::clone(subplans.entry(widths).or_insert_with_key(|w| {
+                Arc::new(TilePlan::new(tile_n, w).expect("sub-partition of a validated plan"))
+            }));
             let coord = set.coordinator_mut(shard).expect("healthy shard has a pool");
-            match coord.try_submit_planned(&sub, &sub_blocks) {
+            match coord.try_submit_batch_planned(&subs, &subplan) {
                 Ok(Some(id)) => {
                     let submit_us = if active { trace::now_us() } else { 0 };
                     if active {
-                        scope[slice.req].record_shard(
-                            Stage::Scatter,
-                            scatter_start,
-                            submit_us.saturating_sub(scatter_start),
-                            shard,
-                        );
+                        for &ri in &slice.reqs {
+                            if is_traced(&scope, ri) {
+                                scope[ri].record_shard(
+                                    Stage::Scatter,
+                                    scatter_start,
+                                    submit_us.saturating_sub(scatter_start),
+                                    shard,
+                                );
+                            }
+                        }
                     }
                     outstanding[shard].insert(id, (slice, submit_us));
                 }
                 Ok(None) => {
                     // Bounded queue full: free a slot by collecting one
-                    // finished result from this shard, then retry.
+                    // finished job from this shard, then retry.
                     let drain_start = if traced { trace::now_us() } else { 0 };
-                    match set.coordinator_mut(shard).expect("healthy shard has a pool").drain_one()
+                    match set
+                        .coordinator_mut(shard)
+                        .expect("healthy shard has a pool")
+                        .drain_batch()
                     {
-                        Ok(done) => {
+                        Ok(batch) => {
                             let finished = outstanding[shard]
-                                .remove(&done.request_id)
+                                .remove(&batch.request_id)
                                 .expect("drained id was submitted by this router");
-                            finish_slice(
+                            finish_job(
                                 &scope,
                                 &monitor,
                                 &mut outs,
                                 &planned,
                                 shard,
-                                done,
+                                batch,
                                 finished,
                                 drain_start,
                             );
@@ -428,31 +552,38 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq>) -> Result<Vec<Vec<f32>>> {
                 }
                 Err(_) => {
                     // Pool is gone: poison the shard and re-route both
-                    // this slice and anything already in flight on it.
+                    // this slice (split per request) and anything
+                    // already in flight on it.
                     poison_and_requeue(set, shard, &mut outstanding, &mut queue);
-                    queue.push_back(slice);
+                    requeue_split(slice, &mut queue);
                 }
             }
         }
 
-        // Gather phase: drain one result from any shard with work in
-        // flight; a drain failure re-queues that shard's slices.
-        let Some(shard) = (0..set.len()).find(|&s| !outstanding[s].is_empty()) else {
+        // Gather phase: drain one job from a shard with work in flight,
+        // starting from the rotating cursor; a drain failure re-queues
+        // that shard's slices.
+        let len = set.len();
+        let next = (0..len)
+            .map(|i| (gather_from + i) % len)
+            .find(|&s| !outstanding[s].is_empty());
+        let Some(shard) = next else {
             break;
         };
+        gather_from = (shard + 1) % len;
         let drain_start = if traced { trace::now_us() } else { 0 };
-        match set.coordinator_mut(shard).expect("outstanding implies healthy").drain_one() {
-            Ok(done) => {
+        match set.coordinator_mut(shard).expect("outstanding implies healthy").drain_batch() {
+            Ok(batch) => {
                 let in_flight = outstanding[shard]
-                    .remove(&done.request_id)
+                    .remove(&batch.request_id)
                     .expect("drained id was submitted by this router");
-                finish_slice(
+                finish_job(
                     &scope,
                     &monitor,
                     &mut outs,
                     &planned,
                     shard,
-                    done,
+                    batch,
                     in_flight,
                     drain_start,
                 );
@@ -494,10 +625,10 @@ mod tests {
         assert_eq!(split_lanes(&[5], 4), vec![vec![5]]);
     }
 
-    fn planned(width: usize, blocks: &[usize]) -> PlannedReq {
+    fn planned(width: usize, blocks: &[usize]) -> PlannedReq<'static> {
         PlannedReq {
-            x: vec![0.0; width],
-            th: vec![0.0; width],
+            x: Cow::Owned(vec![0.0; width]),
+            th: Cow::Owned(vec![0.0; width]),
             scale: None,
             plan: Arc::new(TilePlan::new(16, blocks).unwrap()),
         }
@@ -599,6 +730,44 @@ mod tests {
     }
 
     #[test]
+    fn fused_batch_issues_fewer_pool_jobs_than_slices() {
+        // 16 same-width requests over 2 shards × 4 workers: the group
+        // fuses into sample chunks, so the whole batch costs at most
+        // `shards × workers` jobs while still billing every sample —
+        // pre-fusion dispatch paid one job per (request × shard).
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let workers = set.workers_per_shard();
+        let reqs: Vec<TransformRequest> = (0..16)
+            .map(|i| TransformRequest {
+                x: sample(96, 500 + i),
+                thresholds_units: vec![0.0; 96],
+                scale: None,
+            })
+            .collect();
+        let outs = transform_batch(&mut set, &reqs).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(outs[i], golden(req), "request {i}");
+        }
+        let m = set.metrics();
+        assert!(
+            m.jobs < m.requests,
+            "fusion must issue fewer jobs ({}) than sample-slices ({})",
+            m.jobs,
+            m.requests
+        );
+        assert!(
+            m.jobs <= (2 * workers) as u64,
+            "16 fused requests need at most shards*workers jobs, got {}",
+            m.jobs
+        );
+        set.shutdown();
+    }
+
+    #[test]
     fn rejects_malformed_requests_at_the_boundary() {
         let mut set = ShardSet::new(ShardSetConfig::default()).unwrap();
         assert!(transform(
@@ -643,6 +812,32 @@ mod tests {
         set.shutdown();
     }
 
+    #[test]
+    fn poisoned_shard_requeues_fused_jobs_per_slice() {
+        // A fused batch against a pre-killed shard: every sample of
+        // every fused job routed there must come back whole from the
+        // survivor — failover splits fused work per request.
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        set.coordinator_mut(0).unwrap().abort();
+        let reqs: Vec<TransformRequest> = (0..8)
+            .map(|i| TransformRequest {
+                x: sample(64, 700 + i),
+                thresholds_units: vec![0.0; 64],
+                scale: None,
+            })
+            .collect();
+        let outs = transform_batch(&mut set, &reqs).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(outs[i], golden(req), "request {i}");
+        }
+        assert_eq!(set.healthy(), vec![1]);
+        set.shutdown();
+    }
+
     #[cfg(not(feature = "trace-off"))]
     #[test]
     fn traced_scope_attributes_plan_scatter_execute_and_drain_spans() {
@@ -683,6 +878,53 @@ mod tests {
         for s in &trace.spans {
             assert!(s.start_us + s.dur_us <= trace.end_us);
             assert!(s.start_us >= trace.begin_us);
+        }
+        set.shutdown();
+    }
+
+    #[cfg(not(feature = "trace-off"))]
+    #[test]
+    fn fused_jobs_reconstruct_per_slice_execute_spans() {
+        use crate::trace::{Stage, TraceConfig, Tracer};
+        let tracer = Tracer::new(TraceConfig::default());
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let workers = set.workers_per_shard();
+        // More requests than workers on one shard forces multi-sample
+        // fused jobs; every request is traced under one scope.
+        let n = 2 * workers;
+        let reqs: Vec<TransformRequest> = (0..n)
+            .map(|i| TransformRequest {
+                x: sample(32, 800 + i as u64),
+                thresholds_units: vec![0.0; 32],
+                scale: None,
+            })
+            .collect();
+        let handle = tracer.begin("/v1/transform");
+        set.set_trace_scope(vec![handle.clone(); n]);
+        transform_batch(&mut set, &reqs).unwrap();
+        set.clear_trace_scope();
+        tracer.finish(handle);
+
+        let trace = &tracer.recent(1)[0];
+        let execs: Vec<_> = trace
+            .spans
+            .iter()
+            .filter(|s| s.stage == Stage::Execute)
+            .collect();
+        // One execute span per sample-slice, even though the pool ran
+        // fewer fused jobs than samples.
+        assert_eq!(execs.len(), n, "per-slice execute spans from fused jobs");
+        let jobs = set.metrics().jobs;
+        assert!(jobs < n as u64, "{jobs} jobs must undercut {n} spans");
+        for s in &execs {
+            let payload = s.exec.expect("per-sample payload");
+            assert!(payload.planes > 0);
+            assert!(payload.elements > 0);
+            assert!(s.start_us + s.dur_us <= trace.end_us);
         }
         set.shutdown();
     }

@@ -186,6 +186,176 @@ fn merged_metrics_report_early_termination_savings() {
     set.shutdown();
 }
 
+/// Fusion property sweep (PR-8 acceptance): fused multi-sample routing
+/// is bit-identical to per-sample single-slice execution across shard
+/// counts x block partitions x batch sizes, with mixed early-termination
+/// thresholds and pinned scales.  Shard counts that divide the batch
+/// unevenly, a queue_depth-1 config (forcing the backpressure
+/// drain-batch path), and batch sizes straddling the worker count are
+/// all in the grid.
+#[test]
+fn fused_routing_is_bit_identical_across_shards_partitions_and_batch_sizes() {
+    let mut rng = Rng::seed_from_u64(4242);
+    let partitions: [&[usize]; 4] = [&[16, 4], &[16, 16, 8], &[8, 8, 2], &[16, 16, 16, 16, 1]];
+    for (pi, &blocks) in partitions.iter().enumerate() {
+        let width: usize = blocks.iter().sum();
+        for shards in [1usize, 2, 3] {
+            // Deterministic pseudo-random batch sizes in 1..=9, varying
+            // with partition and shard count so chunking hits 1-sample,
+            // sub-worker and above-worker group shapes.
+            let batch = 1 + (pi * 7 + shards * 5) % 9;
+            let reqs: Vec<TransformRequest> = (0..batch)
+                .map(|_| {
+                    let x: Vec<f32> = (0..width)
+                        .map(|_| rng.uniform_range(-1.5, 1.5) as f32)
+                        .collect();
+                    let thresholds_units: Vec<f64> =
+                        (0..width).map(|_| rng.uniform_range(0.0, 40.0)).collect();
+                    TransformRequest {
+                        scale: Some(Quantizer::new(8).scale_for(&x)),
+                        x,
+                        thresholds_units,
+                    }
+                })
+                .collect();
+            // Golden: the same pool geometry serving every request as
+            // its own single-sample planned job.
+            let mut single = Coordinator::new(CoordinatorConfig::default());
+            let goldens: Vec<Vec<f32>> = reqs
+                .iter()
+                .map(|r| single.transform_planned(r, blocks).unwrap())
+                .collect();
+            single.shutdown();
+
+            let mut set = ShardSet::new(ShardSetConfig {
+                shards,
+                coordinator: CoordinatorConfig {
+                    // Exercise the backpressure drain on the widest grid
+                    // point; default depth elsewhere.
+                    queue_depth: if shards == 3 { 1 } else { 256 },
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap();
+            let outs = router::transform_batch_planned(&mut set, blocks, &reqs);
+            assert_eq!(
+                outs.unwrap(),
+                goldens,
+                "fused != per-sample: partition={blocks:?} shards={shards} batch={batch}"
+            );
+            // `requests` bills sample-slices (one per request per shard
+            // touched), so it floors at the batch size; fused jobs can
+            // only ever undercut the slice count.
+            let m = set.metrics();
+            assert!(m.requests >= batch as u64, "every sample billed");
+            assert!(m.jobs <= m.requests, "jobs never exceed slices");
+            set.shutdown();
+        }
+    }
+}
+
+/// Fusion must not perturb the noisy backend's RNG streams: a fused
+/// multi-sample job draws noise in the same per-sample order as N
+/// separate jobs on the same worker.  A 1-shard/1-worker set (shard 0,
+/// generation 0 reuses the coordinator seed verbatim) therefore
+/// reproduces the sequential per-sample coordinator float-for-float —
+/// fusion stays termination- and batching-invariant off the digital
+/// golden path too.
+#[test]
+fn fused_noisy_batches_keep_rng_stream_alignment() {
+    use repro::coordinator::TileKind;
+    let coord = CoordinatorConfig {
+        workers: 1,
+        kind: TileKind::Noisy { sigma_ant: 0.02 },
+        ..Default::default()
+    };
+    let blocks = [16usize, 16, 4];
+    let width: usize = blocks.iter().sum();
+    let mut rng = Rng::seed_from_u64(9001);
+    let reqs: Vec<TransformRequest> = (0..6)
+        .map(|_| {
+            let x: Vec<f32> = (0..width)
+                .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+                .collect();
+            TransformRequest {
+                scale: Some(Quantizer::new(8).scale_for(&x)),
+                x,
+                thresholds_units: vec![0.0; width],
+            }
+        })
+        .collect();
+    let mut single = Coordinator::new(coord.clone());
+    let goldens: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|r| single.transform_planned(r, &blocks).unwrap())
+        .collect();
+    single.shutdown();
+
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 1,
+        coordinator: coord,
+        ..Default::default()
+    })
+    .unwrap();
+    let outs = router::transform_batch_planned(&mut set, &blocks, &reqs);
+    assert_eq!(
+        outs.unwrap(),
+        goldens,
+        "fused noisy jobs must replay the RNG streams"
+    );
+    let m = set.metrics();
+    assert!(m.jobs < m.requests, "batch must fuse: {} jobs", m.jobs);
+    set.shutdown();
+}
+
+/// A shard lost under a fused batch refuses cleanly and re-routes: the
+/// constituent slices come back per-request from the survivors, and a
+/// follow-up fused batch on the reduced set stays bit-identical.
+#[test]
+fn fused_batches_survive_shard_loss_with_per_slice_reroute() {
+    let mut rng = Rng::seed_from_u64(808);
+    let blocks = [16usize, 16, 16, 8];
+    let width: usize = blocks.iter().sum();
+    let reqs: Vec<TransformRequest> = (0..12)
+        .map(|_| {
+            let x: Vec<f32> = (0..width)
+                .map(|_| rng.uniform_range(-1.5, 1.5) as f32)
+                .collect();
+            TransformRequest {
+                scale: Some(Quantizer::new(8).scale_for(&x)),
+                x,
+                thresholds_units: vec![0.0; width],
+            }
+        })
+        .collect();
+    let mut single = Coordinator::new(CoordinatorConfig::default());
+    let goldens: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|r| single.transform_planned(r, &blocks).unwrap())
+        .collect();
+    single.shutdown();
+
+    let mut set = ShardSet::new(ShardSetConfig {
+        shards: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    // Kill a shard before the fused batch: every fused job routed to it
+    // is refused at submit, split per request, and re-planned onto the
+    // survivors.
+    set.coordinator_mut(1).unwrap().abort();
+    let outs = router::transform_batch_planned(&mut set, &blocks, &reqs);
+    assert_eq!(outs.unwrap(), goldens);
+    assert_eq!(set.healthy(), vec![0, 2]);
+    // Steady state on the survivors: still fused, still identical.
+    let outs = router::transform_batch_planned(&mut set, &blocks, &reqs);
+    assert_eq!(outs.unwrap(), goldens);
+    let m = set.metrics();
+    assert!(m.jobs < m.requests, "survivor batches keep fusing");
+    set.shutdown();
+}
+
 /// Failure isolation: poisoning shards mid-stream sheds their load to
 /// siblings; the request still completes bit-identically.
 #[test]
