@@ -1,0 +1,812 @@
+//! Serving front-end load harness (PR 9): drives the epoll event loop
+//! end to end from a second, client-side reactor in the same process.
+//!
+//! Two phases, both over real TCP against a full `Server`:
+//!
+//! * **closed-loop** — N concurrent keep-alive connections, each with
+//!   exactly one outstanding `/v1/transform` request at a time for R
+//!   rounds.  A configurable 1-in-K slice of connections churns: it
+//!   sends `Connection: close` on every request and reconnects, so the
+//!   accept path and connection teardown stay in the measured loop.
+//! * **open-loop** — requests arrive at a fixed rate over a smaller
+//!   keep-alive pool regardless of completions; latency is measured
+//!   from the *scheduled* arrival, so queueing delay under overload is
+//!   visible instead of hidden (closed-loop coordinated omission).
+//!
+//! Every response is checked for HTTP framing and status 200; every
+//! 64th is deep-verified against `QuantBwht::new(16, 16, 8)`.  Emits
+//! `BENCH_serve.json` with p50/p99/p99.9 and **exits non-zero if any
+//! response is dropped or corrupted**, or if the closed-loop p99
+//! regresses more than 10% over the checked-in baseline
+//! (`benches/baselines/BENCH_serve.json`) when run at the baseline's
+//! connection count — the CI lane runs 512 connections.
+//!
+//! Knobs (env): `BENCH_SERVE_CONNS` (default 10000), `BENCH_SERVE_ROUNDS`
+//! (4), `BENCH_SERVE_CHURN` (8, 0 disables), `BENCH_SERVE_OPEN_RATE`
+//! (2000 req/s, 0 skips the phase), `BENCH_SERVE_OPEN_SECS` (2),
+//! `BENCH_SERVE_OPEN_POOL` (256), `BENCH_SERVE_REACTORS` (4).  The fd
+//! soft limit is raised to fit both ends of every socket; if the hard
+//! limit is lower, the connection count clamps to fit.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::os::fd::AsRawFd;
+use std::time::{Duration, Instant};
+
+use repro::bitplane::QuantBwht;
+use repro::server::reactor::{interest, Epoll, Event};
+use repro::server::{AdmissionConfig, Server, ServerConfig};
+use repro::util::bench::{header, write_json, BenchResult};
+use repro::util::json::{self, Json};
+use repro::util::rng::Rng;
+
+// ---------------------------------------------------------------- rlimit
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+const RLIMIT_NOFILE: i32 = 7;
+
+extern "C" {
+    fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+}
+
+/// Raise the fd soft limit toward `want`; returns the resulting cap.
+fn raise_nofile(want: u64) -> u64 {
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 1024;
+    }
+    if lim.cur < want {
+        let raised = Rlimit {
+            cur: want.min(lim.max),
+            max: lim.max,
+        };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &raised) } == 0 {
+            return raised.cur;
+        }
+    }
+    lim.cur
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+// -------------------------------------------------------------- payloads
+
+/// One precanned transform request (dim-16, T=0: exact WHT) in both
+/// keep-alive and `Connection: close` framings, plus its golden output.
+struct Payload {
+    keep: Vec<u8>,
+    close: Vec<u8>,
+    golden: Vec<f32>,
+}
+
+fn make_payloads(n: usize) -> Vec<Payload> {
+    let mut r = Rng::seed_from_u64(0xbe9c);
+    (0..n)
+        .map(|_| {
+            let x: Vec<f32> = (0..16)
+                .map(|_| r.uniform_range(-1.0, 1.0) as f32)
+                .collect();
+            let vals: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+            let body = format!("{{\"x\":[{}]}}", vals.join(","));
+            let keep = format!(
+                "POST /v1/transform HTTP/1.1\r\nHost: bench\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .into_bytes();
+            let close = format!(
+                "POST /v1/transform HTTP/1.1\r\nHost: bench\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            )
+            .into_bytes();
+            let golden = QuantBwht::new(16, 16, 8).transform(&x);
+            Payload { keep, close, golden }
+        })
+        .collect()
+}
+
+fn is_churn(conn_index: usize, churn_every: usize) -> bool {
+    churn_every > 0 && conn_index % churn_every == 0
+}
+
+fn request_bytes(payload: &Payload, churn: bool) -> &[u8] {
+    if churn {
+        &payload.close
+    } else {
+        &payload.keep
+    }
+}
+
+// ------------------------------------------------------- response parse
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn parse_status(head: &[u8]) -> Option<u16> {
+    let line = head.split(|&b| b == b'\r').next()?;
+    let text = std::str::from_utf8(line).ok()?;
+    text.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn parse_content_length(head: &[u8]) -> Option<usize> {
+    let text = std::str::from_utf8(head).ok()?;
+    for line in text.split("\r\n").skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                return value.trim().parse().ok();
+            }
+        }
+    }
+    None
+}
+
+fn verify_body(body: &[u8], golden: &[f32]) -> bool {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return false;
+    };
+    let Ok(parsed) = json::parse(text) else {
+        return false;
+    };
+    let Some(y) = parsed.get("y").and_then(Json::as_arr) else {
+        return false;
+    };
+    y.len() == golden.len()
+        && y.iter()
+            .zip(golden)
+            .all(|(v, g)| v.as_f64().is_some_and(|f| (f as f32 - g).abs() < 1e-4))
+}
+
+// ------------------------------------------------------ client machinery
+
+/// One nonblocking client connection with a single request in flight.
+struct ClientConn {
+    stream: TcpStream,
+    variant: usize,
+    sending: bool,
+    busy: bool,
+    done: bool,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    rbuf: Vec<u8>,
+    sent_at: Instant,
+    served: u64,
+    interest: u32,
+}
+
+fn client_connect(addr: SocketAddr) -> io::Result<TcpStream> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_nonblocking(true)?;
+    Ok(stream)
+}
+
+impl ClientConn {
+    fn open(addr: SocketAddr, variant: usize, epoll: &Epoll, token: u64) -> io::Result<ClientConn> {
+        let stream = client_connect(addr)?;
+        epoll.add(stream.as_raw_fd(), interest::READ, token)?;
+        Ok(ClientConn {
+            stream,
+            variant,
+            sending: false,
+            busy: false,
+            done: false,
+            wbuf: Vec::new(),
+            wpos: 0,
+            rbuf: Vec::new(),
+            sent_at: Instant::now(),
+            served: 0,
+            interest: interest::READ,
+        })
+    }
+
+    fn set_interest(&mut self, epoll: &Epoll, token: u64, want: u32) -> io::Result<()> {
+        if self.interest != want {
+            epoll.modify(self.stream.as_raw_fd(), want, token)?;
+            self.interest = want;
+        }
+        Ok(())
+    }
+
+    /// Begin one request: queue the bytes, stamp the latency clock at
+    /// `at` (the scheduled arrival for open-loop, now for closed-loop),
+    /// and flush as much as the socket accepts inline.
+    fn start_request(
+        &mut self,
+        epoll: &Epoll,
+        token: u64,
+        req: &[u8],
+        at: Instant,
+    ) -> io::Result<()> {
+        self.wbuf.clear();
+        self.wbuf.extend_from_slice(req);
+        self.wpos = 0;
+        self.sending = true;
+        self.busy = true;
+        self.sent_at = at;
+        self.flush(epoll, token)
+    }
+
+    /// Push queued request bytes; on completion flip to read interest.
+    fn flush(&mut self, epoll: &Epoll, token: u64) -> io::Result<()> {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    return self.set_interest(epoll, token, interest::WRITE);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.sending = false;
+        self.set_interest(epoll, token, interest::READ)
+    }
+
+    /// Drain the socket into `rbuf`; `Ok(true)` means EOF.
+    fn drain(&mut self) -> io::Result<bool> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Ok(true),
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// If a complete response is buffered, return `(status, body)` and
+    /// consume it.
+    fn take_response(&mut self) -> Option<(u16, Vec<u8>)> {
+        let head_end = find_subslice(&self.rbuf, b"\r\n\r\n")?;
+        let head = &self.rbuf[..head_end];
+        let status = parse_status(head)?;
+        let clen = parse_content_length(head)?;
+        let total = head_end + 4 + clen;
+        if self.rbuf.len() < total {
+            return None;
+        }
+        let body = self.rbuf[head_end + 4..total].to_vec();
+        self.rbuf.drain(..total);
+        Some((status, body))
+    }
+}
+
+/// Shared per-phase context for the client event loop.
+struct Ctx<'a> {
+    epoll: &'a Epoll,
+    addr: SocketAddr,
+    payloads: &'a [Payload],
+}
+
+/// Replace a connection's socket with a fresh one (churn / recovery).
+fn reopen(ctx: &Ctx, conn: &mut ClientConn, token: u64) -> io::Result<()> {
+    let _ = ctx.epoll.delete(conn.stream.as_raw_fd());
+    let stream = client_connect(ctx.addr)?;
+    ctx.epoll.add(stream.as_raw_fd(), interest::READ, token)?;
+    conn.stream = stream;
+    conn.interest = interest::READ;
+    conn.rbuf.clear();
+    Ok(())
+}
+
+/// Deregister and shut a finished connection down.
+fn retire(epoll: &Epoll, conn: &mut ClientConn) {
+    let _ = epoll.delete(conn.stream.as_raw_fd());
+    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+    conn.done = true;
+    conn.busy = false;
+}
+
+#[derive(Default)]
+struct LoadStats {
+    latencies_us: Vec<u64>,
+    completed: u64,
+    dropped: u64,
+    corrupted: u64,
+    elapsed: Duration,
+}
+
+/// Book a completed response: latency, status check, sampled deep
+/// verification against the payload's golden transform.
+fn record(
+    conn: &mut ClientConn,
+    status: u16,
+    body: &[u8],
+    payloads: &[Payload],
+    verify_every: u64,
+    stats: &mut LoadStats,
+) {
+    conn.served += 1;
+    conn.busy = false;
+    stats.completed += 1;
+    stats
+        .latencies_us
+        .push(conn.sent_at.elapsed().as_micros() as u64);
+    let ok = status == 200
+        && (stats.completed % verify_every != 0
+            || verify_body(body, &payloads[conn.variant].golden));
+    if !ok {
+        stats.corrupted += 1;
+    }
+}
+
+const STALL_LIMIT: Duration = Duration::from_secs(30);
+
+// ------------------------------------------------------------ closed loop
+
+struct ClosedConfig {
+    conns: usize,
+    rounds: u64,
+    churn_every: usize,
+    verify_every: u64,
+}
+
+enum Step {
+    Keep,
+    Finished,
+}
+
+fn fail_request(ctx: &Ctx, conn: &mut ClientConn, stats: &mut LoadStats) -> Step {
+    stats.dropped += 1;
+    retire(ctx.epoll, conn);
+    Step::Finished
+}
+
+fn closed_step(
+    ctx: &Ctx,
+    conn: &mut ClientConn,
+    ev: &Event,
+    cfg: &ClosedConfig,
+    stats: &mut LoadStats,
+) -> Step {
+    let churn = is_churn(ev.token as usize, cfg.churn_every);
+    if ev.error {
+        return fail_request(ctx, conn, stats);
+    }
+    if conn.sending {
+        if ev.writable && conn.flush(ctx.epoll, ev.token).is_err() {
+            return fail_request(ctx, conn, stats);
+        }
+        if conn.sending {
+            return Step::Keep;
+        }
+    }
+    if !(ev.readable || ev.rdhup) {
+        return Step::Keep;
+    }
+    let eof = match conn.drain() {
+        Ok(eof) => eof,
+        Err(_) => return fail_request(ctx, conn, stats),
+    };
+    if let Some((status, body)) = conn.take_response() {
+        record(conn, status, &body, ctx.payloads, cfg.verify_every, stats);
+        if conn.served >= cfg.rounds {
+            retire(ctx.epoll, conn);
+            return Step::Finished;
+        }
+        if churn && reopen(ctx, conn, ev.token).is_err() {
+            return fail_request(ctx, conn, stats);
+        }
+        let req = request_bytes(&ctx.payloads[conn.variant], churn);
+        if conn.start_request(ctx.epoll, ev.token, req, Instant::now()).is_err() {
+            return fail_request(ctx, conn, stats);
+        }
+        return Step::Keep;
+    }
+    if eof {
+        // The server hung up with a request outstanding.
+        return fail_request(ctx, conn, stats);
+    }
+    Step::Keep
+}
+
+fn closed_loop(addr: SocketAddr, payloads: &[Payload], cfg: &ClosedConfig) -> LoadStats {
+    let epoll = Epoll::new().expect("client epoll");
+    let ctx = Ctx {
+        epoll: &epoll,
+        addr,
+        payloads,
+    };
+    let mut stats = LoadStats::default();
+    let start = Instant::now();
+
+    let mut conns: Vec<ClientConn> = Vec::with_capacity(cfg.conns);
+    for i in 0..cfg.conns {
+        // Pace the connect storm so the listener backlog never overflows
+        // into SYN-retransmit stalls.
+        if i % 256 == 255 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let token = i as u64;
+        let mut conn =
+            ClientConn::open(addr, i % payloads.len(), &epoll, token).expect("client connect");
+        let churn = is_churn(i, cfg.churn_every);
+        let req = request_bytes(&payloads[conn.variant], churn);
+        conn.start_request(&epoll, token, req, Instant::now())
+            .expect("first request");
+        conns.push(conn);
+    }
+
+    let mut events = Vec::new();
+    let mut active = cfg.conns;
+    let mut last_completed = 0u64;
+    let mut last_progress = Instant::now();
+    while active > 0 {
+        epoll
+            .wait(&mut events, Some(Duration::from_millis(100)))
+            .expect("epoll wait");
+        for ev in &events {
+            let conn = &mut conns[ev.token as usize];
+            if conn.done {
+                continue;
+            }
+            if matches!(closed_step(&ctx, conn, ev, cfg, &mut stats), Step::Finished) {
+                active -= 1;
+            }
+        }
+        if stats.completed > last_completed {
+            last_completed = stats.completed;
+            last_progress = Instant::now();
+        } else if last_progress.elapsed() > STALL_LIMIT {
+            eprintln!("closed-loop stalled: abandoning {active} connections");
+            stats.dropped += active as u64;
+            break;
+        }
+    }
+    stats.elapsed = start.elapsed();
+    stats
+}
+
+// -------------------------------------------------------------- open loop
+
+struct OpenConfig {
+    pool: usize,
+    rate: f64,
+    secs: f64,
+    verify_every: u64,
+}
+
+fn open_fail(ctx: &Ctx, conn: &mut ClientConn, token: u64, stats: &mut LoadStats) {
+    stats.dropped += 1;
+    conn.busy = false;
+    let _ = reopen(ctx, conn, token);
+}
+
+fn open_loop(addr: SocketAddr, payloads: &[Payload], cfg: &OpenConfig) -> LoadStats {
+    let epoll = Epoll::new().expect("client epoll");
+    let ctx = Ctx {
+        epoll: &epoll,
+        addr,
+        payloads,
+    };
+    let mut stats = LoadStats::default();
+    let mut conns: Vec<ClientConn> = (0..cfg.pool)
+        .map(|i| {
+            ClientConn::open(addr, i % payloads.len(), &epoll, i as u64).expect("client connect")
+        })
+        .collect();
+    let mut idle: Vec<usize> = (0..cfg.pool).collect();
+
+    let total = (cfg.rate * cfg.secs).round().max(1.0) as u64;
+    let period = Duration::from_secs_f64(1.0 / cfg.rate);
+    let start = Instant::now();
+    let mut next_arrival = start;
+    let mut issued = 0u64;
+    let mut finished = 0u64;
+    let mut queue: VecDeque<Instant> = VecDeque::new();
+    let mut events = Vec::new();
+    let mut last_finished = 0u64;
+    let mut last_progress = Instant::now();
+
+    while finished < total {
+        let now = Instant::now();
+        while issued < total && now >= next_arrival {
+            queue.push_back(next_arrival);
+            next_arrival += period;
+            issued += 1;
+        }
+        while !queue.is_empty() {
+            let Some(slot) = idle.pop() else { break };
+            let at = queue.pop_front().expect("nonempty queue");
+            let token = slot as u64;
+            let conn = &mut conns[slot];
+            let req = &payloads[conn.variant].keep;
+            if conn.start_request(&epoll, token, req, at).is_err() {
+                open_fail(&ctx, conn, token, &mut stats);
+                finished += 1;
+                idle.push(slot);
+            }
+        }
+        let timeout = if issued < total {
+            next_arrival
+                .saturating_duration_since(Instant::now())
+                .min(Duration::from_millis(10))
+        } else {
+            Duration::from_millis(100)
+        };
+        epoll.wait(&mut events, Some(timeout)).expect("epoll wait");
+        for ev in &events {
+            let slot = ev.token as usize;
+            let conn = &mut conns[slot];
+            if !conn.busy {
+                // Idle pool member: the server may drop it (idle timer,
+                // restart); replace it silently — no request was lost.
+                if ev.error || ev.rdhup {
+                    let _ = reopen(&ctx, conn, ev.token);
+                }
+                continue;
+            }
+            if ev.error {
+                open_fail(&ctx, conn, ev.token, &mut stats);
+                finished += 1;
+                idle.push(slot);
+                continue;
+            }
+            if conn.sending {
+                if ev.writable && conn.flush(&epoll, ev.token).is_err() {
+                    open_fail(&ctx, conn, ev.token, &mut stats);
+                    finished += 1;
+                    idle.push(slot);
+                    continue;
+                }
+                if conn.sending {
+                    continue;
+                }
+            }
+            if !(ev.readable || ev.rdhup) {
+                continue;
+            }
+            match conn.drain() {
+                Err(_) => {
+                    open_fail(&ctx, conn, ev.token, &mut stats);
+                    finished += 1;
+                    idle.push(slot);
+                }
+                Ok(eof) => {
+                    if let Some((status, body)) = conn.take_response() {
+                        record(conn, status, &body, payloads, cfg.verify_every, &mut stats);
+                        finished += 1;
+                        idle.push(slot);
+                    } else if eof {
+                        open_fail(&ctx, conn, ev.token, &mut stats);
+                        finished += 1;
+                        idle.push(slot);
+                    }
+                }
+            }
+        }
+        if finished > last_finished {
+            last_finished = finished;
+            last_progress = Instant::now();
+        } else if last_progress.elapsed() > STALL_LIMIT {
+            let lost = total - finished;
+            eprintln!("open-loop stalled: abandoning {lost} requests");
+            stats.dropped += lost;
+            break;
+        }
+    }
+    for conn in &mut conns {
+        retire(&epoll, conn);
+    }
+    stats.elapsed = start.elapsed();
+    stats
+}
+
+// -------------------------------------------------------------- reporting
+
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Summarize a load phase as a `BenchResult`: mean/median/min of the
+/// per-request latency distribution, `iters` = completed responses.
+fn phase_result(name: &str, stats: &LoadStats) -> BenchResult {
+    let lat = &stats.latencies_us;
+    let mean_us = if lat.is_empty() {
+        0
+    } else {
+        lat.iter().sum::<u64>() / lat.len() as u64
+    };
+    BenchResult {
+        name: name.to_string(),
+        iters: stats.completed,
+        mean: Duration::from_micros(mean_us),
+        median: Duration::from_micros(pct(lat, 0.5)),
+        min: Duration::from_micros(lat.first().copied().unwrap_or(0)),
+    }
+}
+
+fn main() {
+    header("serve");
+    let mut conns = env_u64("BENCH_SERVE_CONNS", 10_000) as usize;
+    let rounds = env_u64("BENCH_SERVE_ROUNDS", 4).max(1);
+    let churn_every = env_u64("BENCH_SERVE_CHURN", 8) as usize;
+    let open_rate = env_u64("BENCH_SERVE_OPEN_RATE", 2_000) as f64;
+    let open_secs = env_u64("BENCH_SERVE_OPEN_SECS", 2) as f64;
+    let open_pool = env_u64("BENCH_SERVE_OPEN_POOL", 256) as usize;
+    let reactors = env_u64("BENCH_SERVE_REACTORS", 4) as usize;
+    let verify_every = 64u64;
+
+    // Both ends of every socket live in this process.
+    let want_fds = (conns + open_pool) as u64 * 2 + 512;
+    let got_fds = raise_nofile(want_fds);
+    if got_fds < want_fds {
+        let usable = (got_fds.saturating_sub(512) / 2).saturating_sub(open_pool as u64) as usize;
+        let clamped = conns.min(usable.max(64));
+        eprintln!("fd limit {got_fds} < {want_fds}: clamping to {clamped} connections");
+        conns = clamped;
+    }
+
+    let payloads = make_payloads(64);
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_connections: conns + open_pool + 64,
+        reactor_threads: reactors,
+        admission: AdmissionConfig {
+            max_inflight: 0,
+            rate_per_sec: 0.0,
+            burst: 32.0,
+        },
+        keepalive_max_requests: usize::MAX >> 1,
+        keepalive_idle: Duration::from_secs(300),
+        trace_sample: 0,
+        fidelity_sample: 0,
+        ..Default::default()
+    })
+    .expect("server start");
+    let addr = server.addr;
+    println!(
+        "server {addr}: {reactors} reactors; closed-loop {conns} conns x {rounds} rounds \
+         (churn 1-in-{churn_every}), open-loop {open_rate:.0} req/s x {open_secs:.0}s \
+         over {open_pool} conns"
+    );
+
+    let closed_cfg = ClosedConfig {
+        conns,
+        rounds,
+        churn_every,
+        verify_every,
+    };
+    let mut closed = closed_loop(addr, &payloads, &closed_cfg);
+    closed.latencies_us.sort_unstable();
+    let closed_name = format!("closed-loop {conns}conn x{rounds}");
+    let closed_res = phase_result(&closed_name, &closed);
+    closed_res.report();
+    let closed_rps = closed.completed as f64 / closed.elapsed.as_secs_f64().max(1e-9);
+    let closed_p50 = pct(&closed.latencies_us, 0.50) as f64;
+    let closed_p99 = pct(&closed.latencies_us, 0.99) as f64;
+    let closed_p999 = pct(&closed.latencies_us, 0.999) as f64;
+    println!(
+        "  -> closed-loop: {} ok in {:.2?} ({closed_rps:.0} req/s), p50 {:.0} us, \
+         p99 {:.0} us, p99.9 {:.0} us, {} dropped, {} corrupted",
+        closed.completed, closed.elapsed, closed_p50, closed_p99, closed_p999,
+        closed.dropped, closed.corrupted
+    );
+
+    let open = if open_rate > 0.0 && open_secs > 0.0 {
+        let open_cfg = OpenConfig {
+            pool: open_pool,
+            rate: open_rate,
+            secs: open_secs,
+            verify_every,
+        };
+        let mut stats = open_loop(addr, &payloads, &open_cfg);
+        stats.latencies_us.sort_unstable();
+        Some(stats)
+    } else {
+        None
+    };
+    let mut results = vec![closed_res];
+    if let Some(stats) = &open {
+        let name = format!("open-loop {open_rate:.0}rps x{open_secs:.0}s");
+        let res = phase_result(&name, stats);
+        res.report();
+        println!(
+            "  -> open-loop: {} ok, p50 {} us, p99 {} us, p99.9 {} us, \
+             {} dropped, {} corrupted",
+            stats.completed,
+            pct(&stats.latencies_us, 0.50),
+            pct(&stats.latencies_us, 0.99),
+            pct(&stats.latencies_us, 0.999),
+            stats.dropped,
+            stats.corrupted
+        );
+        results.push(res);
+    }
+
+    let served = server.shutdown();
+    println!("server shut down after {} transform slices", served.requests);
+
+    let empty = LoadStats::default();
+    let open_ref = open.as_ref().unwrap_or(&empty);
+    let derived: Vec<(&str, f64)> = vec![
+        ("connections", conns as f64),
+        ("rounds", rounds as f64),
+        ("closed_completed", closed.completed as f64),
+        ("closed_dropped", closed.dropped as f64),
+        ("closed_corrupted", closed.corrupted as f64),
+        ("closed_rps", closed_rps),
+        ("closed_p50_us", closed_p50),
+        ("closed_p99_us", closed_p99),
+        ("closed_p999_us", closed_p999),
+        ("open_rate_rps", open_rate),
+        ("open_completed", open_ref.completed as f64),
+        ("open_dropped", open_ref.dropped as f64),
+        ("open_corrupted", open_ref.corrupted as f64),
+        ("open_p50_us", pct(&open_ref.latencies_us, 0.50) as f64),
+        ("open_p99_us", pct(&open_ref.latencies_us, 0.99) as f64),
+        ("open_p999_us", pct(&open_ref.latencies_us, 0.999) as f64),
+    ];
+    let path = "BENCH_serve.json";
+    match write_json(path, "serve", &results, &derived) {
+        Ok(()) => println!("baseline written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // Gate 1: a serving front end may never lose or corrupt a response.
+    let dropped = closed.dropped + open_ref.dropped;
+    let corrupted = closed.corrupted + open_ref.corrupted;
+    let mut failed = false;
+    if dropped > 0 || corrupted > 0 {
+        eprintln!("FAIL: {dropped} dropped / {corrupted} corrupted responses (gate: zero)");
+        failed = true;
+    } else {
+        println!("zero dropped/corrupted responses — gate passed");
+    }
+
+    // Gate 2: closed-loop p99 vs the checked-in baseline (only when run
+    // at the baseline's connection count — the CI smoke lane's 512).
+    let baseline_path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../benches/baselines/BENCH_serve.json");
+    match std::fs::read_to_string(baseline_path).ok().and_then(|t| json::parse(&t).ok()) {
+        Some(base) => {
+            let base_conns = base.get("connections").and_then(Json::as_f64);
+            let base_p99 = base.get("closed_p99_us").and_then(Json::as_f64);
+            match (base_conns, base_p99) {
+                (Some(bc), Some(bp)) if bc == conns as f64 => {
+                    if closed_p99 > bp * 1.10 {
+                        eprintln!(
+                            "FAIL: closed-loop p99 {closed_p99:.0} us exceeds baseline \
+                             {bp:.0} us by more than 10%"
+                        );
+                        failed = true;
+                    } else {
+                        println!(
+                            "closed-loop p99 {closed_p99:.0} us vs baseline {bp:.0} us \
+                             — gate <= +10% passed"
+                        );
+                    }
+                }
+                (Some(bc), _) => {
+                    println!("baseline is for {bc:.0} connections (run: {conns}); p99 gate skipped");
+                }
+                _ => println!("baseline lacks closed_p99_us; p99 gate skipped"),
+            }
+        }
+        None => println!("no baseline at {baseline_path}; p99 gate skipped"),
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+}

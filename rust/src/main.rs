@@ -15,6 +15,7 @@
 //!                 [--max-inflight N] [--rate R] [--burst B] [--duration-s S]
 //!                 [--trace-sample K] [--slow-ms MS]
 //!                 [--fidelity-sample K] [--drift-threshold X]
+//!                 [--reactor-threads N] [--first-byte-timeout-ms MS]
 //! repro report    [--vdd V] [--avg-cycles C]
 //! ```
 //!
@@ -438,6 +439,12 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         max_connections: flag(flags, "max-connections", 512),
         vdd,
         keepalive_max_requests: flag(flags, "keepalive-requests", 64),
+        reactor_threads: flag(flags, "reactor-threads", 2usize),
+        first_byte_timeout: std::time::Duration::from_millis(flag(
+            flags,
+            "first-byte-timeout-ms",
+            10_000u64,
+        )),
         model,
         max_infer_batch: flag(flags, "max-infer-batch", 64),
         auto_respawn: !flags.contains_key("no-respawn"),
@@ -630,6 +637,9 @@ SUBCOMMANDS:
               golden path (0 disables) and --drift-threshold X recycles
               any shard whose divergence EWMA exceeds X quantizer LSBs
               (see GET /debug/fidelity and repro_fidelity_* metrics);
+              the front end is an epoll event loop (--reactor-threads N
+              parallel reactors; --first-byte-timeout-ms MS bounds how
+              long a fresh connection may sit without a request);
               without --listen: offline batch benchmark
   report      energy model: Table I, Fig. 12 power breakdown
   help        this text

@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 use std::net::IpAddr;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Admission policy knobs.
@@ -97,11 +97,15 @@ impl Admission {
     /// permit holds an in-flight slot until dropped.  A rate-limit
     /// rejection after the token was the last gate does not refund — the
     /// bucket models work the client asked the server to consider.
+    ///
+    /// The permit is **owned** (it keeps the `Arc` alive) so the
+    /// event-driven front end can park it in a connection while the
+    /// batcher completes the request asynchronously.
     pub fn try_acquire(
-        &self,
+        self: &Arc<Self>,
         client: IpAddr,
         now: Instant,
-    ) -> Result<InflightPermit<'_>, Rejection> {
+    ) -> Result<InflightPermit, Rejection> {
         if self.config.rate_per_sec > 0.0 {
             let mut buckets = self.buckets.lock().expect("bucket map poisoned");
             if buckets.len() >= MAX_TRACKED_CLIENTS && !buckets.contains_key(&client) {
@@ -136,7 +140,7 @@ impl Admission {
         }
         self.admitted.fetch_add(1, Ordering::Relaxed);
         Ok(InflightPermit {
-            admission: self,
+            admission: Arc::clone(self),
             counted,
         })
     }
@@ -165,12 +169,12 @@ impl Admission {
 
 /// RAII in-flight slot; dropping it releases the slot.
 #[derive(Debug)]
-pub struct InflightPermit<'a> {
-    admission: &'a Admission,
+pub struct InflightPermit {
+    admission: Arc<Admission>,
     counted: bool,
 }
 
-impl Drop for InflightPermit<'_> {
+impl Drop for InflightPermit {
     fn drop(&mut self) {
         if self.counted {
             self.admission.inflight.fetch_sub(1, Ordering::AcqRel);
@@ -190,11 +194,11 @@ mod tests {
 
     #[test]
     fn inflight_cap_sheds_and_releases() {
-        let adm = Admission::new(AdmissionConfig {
+        let adm = Arc::new(Admission::new(AdmissionConfig {
             max_inflight: 2,
             rate_per_sec: 0.0,
             burst: 1.0,
-        });
+        }));
         let now = Instant::now();
         let p1 = adm.try_acquire(ip(1), now).unwrap();
         let _p2 = adm.try_acquire(ip(1), now).unwrap();
@@ -209,11 +213,11 @@ mod tests {
 
     #[test]
     fn token_bucket_limits_burst_then_refills() {
-        let adm = Admission::new(AdmissionConfig {
+        let adm = Arc::new(Admission::new(AdmissionConfig {
             max_inflight: 0,
             rate_per_sec: 10.0,
             burst: 2.0,
-        });
+        }));
         let t0 = Instant::now();
         assert!(adm.try_acquire(ip(1), t0).is_ok());
         assert!(adm.try_acquire(ip(1), t0).is_ok());
@@ -227,11 +231,11 @@ mod tests {
 
     #[test]
     fn buckets_are_per_client() {
-        let adm = Admission::new(AdmissionConfig {
+        let adm = Arc::new(Admission::new(AdmissionConfig {
             max_inflight: 0,
             rate_per_sec: 1.0,
             burst: 1.0,
-        });
+        }));
         let now = Instant::now();
         assert!(adm.try_acquire(ip(1), now).is_ok());
         assert_eq!(adm.try_acquire(ip(1), now).unwrap_err(), Rejection::RateLimited);
@@ -240,11 +244,11 @@ mod tests {
 
     #[test]
     fn bucket_map_is_swept_at_the_client_cap() {
-        let adm = Admission::new(AdmissionConfig {
+        let adm = Arc::new(Admission::new(AdmissionConfig {
             max_inflight: 0,
             rate_per_sec: 1.0,
             burst: 1.0,
-        });
+        }));
         let t0 = Instant::now();
         for i in 0..MAX_TRACKED_CLIENTS as u32 {
             let client = IpAddr::V4(Ipv4Addr::from(0x0a00_0000u32 + i));
@@ -261,11 +265,11 @@ mod tests {
 
     #[test]
     fn disabled_gates_admit_everything() {
-        let adm = Admission::new(AdmissionConfig {
+        let adm = Arc::new(Admission::new(AdmissionConfig {
             max_inflight: 0,
             rate_per_sec: 0.0,
             burst: 0.0,
-        });
+        }));
         let now = Instant::now();
         let permits: Vec<_> = (0..64)
             .map(|_| adm.try_acquire(ip(1), now).unwrap())

@@ -46,6 +46,7 @@ use crate::nn::Mlp;
 use crate::shard::{router, ShardSet};
 use crate::trace::{self, Stage, TraceHandle};
 
+use super::reactor::{Completion, Completions};
 use super::ServerState;
 
 /// What one queued request wants executed.
@@ -57,10 +58,85 @@ pub enum BatchPayload {
     Infer { x: Vec<f32>, samples: usize },
 }
 
-/// One queued request: payload plus its reply channel.
+/// The per-request outcome the batcher reports back.
+pub type ReplyResult = Result<BatchReply, String>;
+
+/// Where one request's reply goes.
+///
+/// The event-driven front end parks the connection and receives the
+/// reply through a reactor [`Completions`] queue (`Event`); tests and
+/// other synchronous callers block on an mpsc channel (`Channel`).
+/// Dropping an unsent `Event` sink — the batcher's stale-shed path
+/// retains a batch and simply drops expired items — delivers a `None`
+/// completion, which the connection reports as a 504.  That mirrors
+/// the old contract where dropping the channel sender woke the
+/// blocked handler with a disconnect.
+pub enum ReplySink {
+    Channel(Option<Sender<ReplyResult>>),
+    Event {
+        completions: Arc<Completions>,
+        token: u64,
+        sent: bool,
+    },
+}
+
+impl ReplySink {
+    pub fn channel(tx: Sender<ReplyResult>) -> ReplySink {
+        ReplySink::Channel(Some(tx))
+    }
+
+    pub fn event(completions: Arc<Completions>, token: u64) -> ReplySink {
+        ReplySink::Event {
+            completions,
+            token,
+            sent: false,
+        }
+    }
+
+    /// Deliver the reply (consumes the sink; send failures mean the
+    /// receiver is gone and are ignored, matching channel semantics).
+    pub fn send(mut self, result: ReplyResult) {
+        match &mut self {
+            ReplySink::Channel(tx) => {
+                if let Some(tx) = tx.take() {
+                    let _ = tx.send(result);
+                }
+            }
+            ReplySink::Event {
+                completions,
+                token,
+                sent,
+            } => {
+                *sent = true;
+                completions.push(Completion {
+                    token: *token,
+                    result: Some(result),
+                });
+            }
+        }
+    }
+}
+
+impl Drop for ReplySink {
+    fn drop(&mut self) {
+        if let ReplySink::Event {
+            completions,
+            token,
+            sent: false,
+        } = self
+        {
+            completions.push(Completion {
+                token: *token,
+                result: None,
+            });
+        }
+    }
+}
+
+/// One queued request: payload plus its reply sink.
 pub struct BatchItem {
     pub payload: BatchPayload,
-    pub reply: Sender<Result<BatchReply, String>>,
+    pub reply: ReplySink,
     pub enqueued: Instant,
     /// Sampled request trace, inactive for unsampled requests.  The
     /// batcher records the queue span here and threads the handle into
@@ -222,7 +298,7 @@ pub(crate) fn run_batcher(
                     {
                         let latency = enqueued.elapsed();
                         state.record_latency(latency);
-                        let _ = reply.send(Ok(BatchReply { values, latency }));
+                        reply.send(Ok(BatchReply { values, latency }));
                     }
                 }
                 Err(e) => {
@@ -231,7 +307,7 @@ pub(crate) fn run_batcher(
                     // report it to every waiter.
                     let msg = format!("batch execution failed: {e}");
                     for (reply, _) in transform_waiters {
-                        let _ = reply.send(Err(msg.clone()));
+                        reply.send(Err(msg.clone()));
                     }
                 }
             }
@@ -241,7 +317,7 @@ pub(crate) fn run_batcher(
             match &model {
                 None => {
                     for (reply, _, _) in infer_waiters {
-                        let _ = reply.send(Err("no model loaded".to_string()));
+                        reply.send(Err("no model loaded".to_string()));
                     }
                 }
                 Some(mlp) => {
@@ -272,13 +348,13 @@ pub(crate) fn run_batcher(
                                 row += samples;
                                 let latency = enqueued.elapsed();
                                 state.record_infer_latency(latency);
-                                let _ = reply.send(Ok(BatchReply { values, latency }));
+                                reply.send(Ok(BatchReply { values, latency }));
                             }
                         }
                         Err(e) => {
                             let msg = format!("inference failed: {e}");
                             for (reply, _, _) in infer_waiters {
-                                let _ = reply.send(Err(msg.clone()));
+                                reply.send(Err(msg.clone()));
                             }
                         }
                     }
@@ -342,7 +418,7 @@ mod tests {
         )
     }
 
-    fn transform_item(x: Vec<f32>, reply: Sender<Result<BatchReply, String>>) -> BatchItem {
+    fn transform_item(x: Vec<f32>, reply: Sender<ReplyResult>) -> BatchItem {
         let thresholds_units = vec![0.0; x.len()];
         BatchItem {
             payload: BatchPayload::Transform(TransformRequest {
@@ -350,7 +426,7 @@ mod tests {
                 thresholds_units,
                 scale: None,
             }),
-            reply,
+            reply: ReplySink::channel(reply),
             enqueued: Instant::now(),
             trace: TraceHandle::inactive(),
         }
@@ -464,7 +540,7 @@ mod tests {
             all_x.extend_from_slice(&x);
             tx.send(BatchItem {
                 payload: BatchPayload::Infer { x, samples: 1 },
-                reply: reply_tx,
+                reply: ReplySink::channel(reply_tx),
                 enqueued: Instant::now(),
                 trace: TraceHandle::inactive(),
             })
@@ -513,7 +589,7 @@ mod tests {
                 x: vec![0.0; 8],
                 samples: 1,
             },
-            reply: reply_tx,
+            reply: ReplySink::channel(reply_tx),
             enqueued: Instant::now(),
             trace: TraceHandle::inactive(),
         })

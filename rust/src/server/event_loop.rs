@@ -1,0 +1,777 @@
+//! The reactor: an epoll-driven connection state machine.
+//!
+//! Each reactor thread owns one [`Epoll`] instance, a slab of
+//! connections, a [`TimerWheel`] and a [`Completions`] queue, and
+//! multiplexes every connection it accepted over nonblocking sockets:
+//!
+//! ```text
+//!   Accept ──▶ ReadHead ──▶ ReadBody ──▶ route ──┬─▶ Write ──▶ KeepAlive
+//!                  ▲                             │      │          │
+//!                  │        (batcher reply via   └─▶ Await ─▶ Write │
+//!                  │         eventfd completion) ────────┘          │
+//!                  └────────────────────────────────────────────────┘
+//! ```
+//!
+//! * **Zero-copy parsing** — socket bytes land in a per-connection
+//!   reusable read buffer; [`http::Head::parse`] frames requests in
+//!   place and the borrowed [`http::Req`] view feeds the router without
+//!   allocating per-request strings.  Responses serialize into a
+//!   reusable write buffer.
+//! * **Asynchronous dispatch** — admitted POST work is handed to the
+//!   batcher with an event [`ReplySink`]; the connection parks in
+//!   `Await` (no readiness interest, matching the old blocking server
+//!   which never cancelled work on peer close) until the completion
+//!   queue delivers the reply and the reactor resumes it.
+//! * **Deadlines** — one coarse timer wheel enforces the first-request
+//!   (slowloris), keep-alive idle, in-flight (504) and write-stall
+//!   deadlines.  Wheel entries are hints validated against the
+//!   connection's live deadline, so re-arming is free.
+//! * **Identity** — slab slots carry a generation counter; every epoll
+//!   and completion token packs `(slot, gen, seq)` so events for a
+//!   closed (reused) connection or a superseded request are ignored.
+//!
+//! Several reactors share the listener via `EPOLLEXCLUSIVE`, each
+//! accepting (and then exclusively owning) a share of the connections.
+
+use std::io::{self, Read as _, Write as _};
+use std::net::{IpAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchItem, ReplyResult, ReplySink};
+use super::http;
+use super::reactor::{interest, Completion, Completions, Epoll, Event, TimerWheel};
+use super::{
+    error_json, finish_trace, render_reply, route_request, Dispatch, PendingKind, RouteOutcome,
+    ServerConfig, ServerState,
+};
+use crate::server::admission::InflightPermit;
+use crate::trace::{self, TraceHandle};
+
+/// Epoll token of the shared listener.
+const TOKEN_LISTENER: u64 = u64::MAX;
+/// Epoll token of the completion-queue waker.
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+/// Timer wheel tick; deadlines round up to the next tick.
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(10);
+/// Wheel size: ~10s horizon; later deadlines clamp and revalidate.
+const WHEEL_BUCKETS: usize = 1024;
+
+/// Pack a connection identity into an epoll/completion token.
+fn pack(slot: u32, gen: u16, seq: u16) -> u64 {
+    slot as u64 | (gen as u64) << 32 | (seq as u64) << 48
+}
+
+fn unpack(token: u64) -> (u32, u16, u16) {
+    (token as u32, (token >> 32) as u16, (token >> 48) as u16)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ConnState {
+    /// Accumulating bytes until the head's blank line.
+    ReadHead,
+    /// Head framed; accumulating the `Content-Length` body.
+    ReadBody,
+    /// Parked on the batcher; resumed by a completion (or its deadline).
+    Await,
+    /// Draining the serialized response to the socket.
+    Write,
+}
+
+/// What a parked connection needs to finish its in-flight request.
+struct Pending {
+    kind: PendingKind,
+    trace: TraceHandle,
+    permit: InflightPermit,
+}
+
+struct Conn {
+    stream: TcpStream,
+    peer: IpAddr,
+    /// Bumped per dispatched request; completion tokens must match.
+    seq: u16,
+    state: ConnState,
+    /// Reusable read buffer; requests parse zero-copy out of it.
+    rbuf: Vec<u8>,
+    /// Reused parsed-head spans into `rbuf`.
+    head: http::Head,
+    /// Reusable write buffer holding the serialized response.
+    wbuf: Vec<u8>,
+    /// Flush progress into `wbuf`.
+    wpos: usize,
+    /// Persistence decision for the in-flight request.
+    keep_alive: bool,
+    /// Requests served on this connection (keep-alive cap).
+    served: usize,
+    /// Live deadline; wheel hints revalidate against this.
+    deadline: Instant,
+    /// Currently registered epoll interest.
+    interest: u32,
+    /// Peer shut down its write half: serve what is buffered, then close.
+    peer_eof: bool,
+    pending: Option<Pending>,
+}
+
+struct Slot {
+    /// Generation, bumped when the slot's connection closes so stale
+    /// epoll/completion/timer tokens for a reused slot are ignored.
+    gen: u16,
+    conn: Option<Conn>,
+}
+
+enum FlushResult {
+    Done,
+    Blocked,
+    Close,
+}
+
+/// One event-loop thread: epoll, connection slab, timer wheel.
+pub(crate) struct Reactor {
+    epoll: Epoll,
+    listener: TcpListener,
+    completions: Arc<Completions>,
+    state: Arc<ServerState>,
+    config: Arc<ServerConfig>,
+    batch_tx: Sender<BatchItem>,
+    shutdown: Arc<AtomicBool>,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    wheel: TimerWheel,
+    /// Reused `/metrics` render buffer (satellite perf fix: the
+    /// exposition no longer allocates a fresh `String` per scrape).
+    scratch: String,
+}
+
+impl Reactor {
+    pub(crate) fn new(
+        listener: TcpListener,
+        completions: Arc<Completions>,
+        state: Arc<ServerState>,
+        config: Arc<ServerConfig>,
+        batch_tx: Sender<BatchItem>,
+        shutdown: Arc<AtomicBool>,
+    ) -> io::Result<Reactor> {
+        listener.set_nonblocking(true)?;
+        let epoll = Epoll::new()?;
+        epoll.add_exclusive(listener.as_raw_fd(), TOKEN_LISTENER)?;
+        epoll.add(
+            completions.waker().as_raw_fd(),
+            interest::READ,
+            TOKEN_WAKER,
+        )?;
+        Ok(Reactor {
+            epoll,
+            listener,
+            completions,
+            state,
+            config,
+            batch_tx,
+            shutdown,
+            slots: Vec::new(),
+            free: Vec::new(),
+            wheel: TimerWheel::new(WHEEL_GRANULARITY, WHEEL_BUCKETS, Instant::now()),
+            scratch: String::new(),
+        })
+    }
+
+    pub(crate) fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut done: Vec<Completion> = Vec::new();
+        let mut fired: Vec<(u32, u16)> = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) {
+            let timeout = self.wheel.next_timeout(Instant::now());
+            if self.epoll.wait(&mut events, timeout).is_err() {
+                break;
+            }
+            let mut burst = false;
+            for &event in &events {
+                match event.token {
+                    TOKEN_LISTENER => burst = true,
+                    TOKEN_WAKER => self.completions.waker().drain(),
+                    _ => self.socket_event(event),
+                }
+            }
+            if burst {
+                self.accept_burst();
+            }
+            done.clear();
+            self.completions.drain_into(&mut done);
+            for completion in done.drain(..) {
+                self.complete(completion);
+            }
+            fired.clear();
+            self.wheel.advance(Instant::now(), &mut fired);
+            for &(slot, gen) in &fired {
+                self.timer_fired(slot, gen);
+            }
+        }
+        // Dropping the reactor closes every connection (releasing any
+        // held admission permits) and drops this thread's batch sender,
+        // letting the batcher drain and exit once all reactors stop.
+    }
+
+    fn accept_burst(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, addr)) => self.admit_conn(stream, addr.ip()),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn admit_conn(&mut self, stream: TcpStream, peer: IpAddr) {
+        // Connection cap: best-effort 503, exactly like the old
+        // thread-per-connection front end.  The accepted socket is
+        // still blocking here, so this small write is effectively
+        // synchronous.
+        let cap = self.config.max_connections.max(1);
+        if self.state.connections.load(Ordering::Acquire) >= cap {
+            let mut out = Vec::with_capacity(160);
+            http::Response::json(503, &error_json("too many connections"))
+                .with_header("Retry-After", "1")
+                .serialize_into(false, &mut out);
+            let mut stream = stream;
+            let _ = stream.write_all(&out);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let slot = match self.free.pop() {
+            Some(slot) => slot,
+            None => {
+                self.slots.push(Slot { gen: 0, conn: None });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let gen = self.slots[slot as usize].gen;
+        if self
+            .epoll
+            .add(stream.as_raw_fd(), interest::READ, pack(slot, gen, 0))
+            .is_err()
+        {
+            self.free.push(slot);
+            return;
+        }
+        let deadline = Instant::now() + self.config.first_byte_timeout;
+        self.slots[slot as usize].conn = Some(Conn {
+            stream,
+            peer,
+            seq: 0,
+            state: ConnState::ReadHead,
+            rbuf: Vec::new(),
+            head: http::Head::default(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            keep_alive: true,
+            served: 0,
+            deadline,
+            interest: interest::READ,
+            peer_eof: false,
+            pending: None,
+        });
+        self.wheel.insert(deadline, slot, gen);
+        self.state.connections.fetch_add(1, Ordering::AcqRel);
+        self.state
+            .connections_accepted
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn conn_state(&self, slot: u32, gen: u16) -> Option<ConnState> {
+        let entry = self.slots.get(slot as usize)?;
+        let conn = entry.conn.as_ref()?;
+        (entry.gen == gen).then_some(conn.state)
+    }
+
+    fn socket_event(&mut self, event: Event) {
+        let (slot, gen, _) = unpack(event.token);
+        let Some(state) = self.conn_state(slot, gen) else {
+            return;
+        };
+        if event.error {
+            self.close(slot, false);
+            return;
+        }
+        match state {
+            ConnState::Write if event.writable => {
+                self.flush(slot);
+                if self.can_continue(slot) {
+                    self.advance(slot);
+                }
+            }
+            ConnState::ReadHead | ConnState::ReadBody if event.readable || event.rdhup => {
+                self.fill(slot);
+            }
+            _ => {}
+        }
+    }
+
+    /// Read everything the socket has into the connection's buffer,
+    /// then run the parse/dispatch loop.
+    fn fill(&mut self, slot: u32) {
+        let mut failed = false;
+        {
+            let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                return;
+            };
+            let mut buf = [0u8; 16 << 10];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.peer_eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&buf[..n]);
+                        if n < buf.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        failed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if failed {
+            self.close(slot, false);
+            return;
+        }
+        self.advance(slot);
+    }
+
+    /// Parse/dispatch loop: frame as many buffered requests as possible.
+    /// Iterative (not recursive through the write path), so a flood of
+    /// pipelined requests cannot grow the stack.
+    fn advance(&mut self, slot: u32) {
+        enum Step {
+            Dispatch,
+            Protocol(String),
+            CloseSilent,
+            Done,
+        }
+        loop {
+            let step = {
+                let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                    return;
+                };
+                match conn.state {
+                    ConnState::ReadHead => match conn.head.parse(&mut conn.rbuf) {
+                        Ok(http::Parse::Complete) => {
+                            conn.state = ConnState::ReadBody;
+                            continue;
+                        }
+                        Ok(http::Parse::NeedMore) => {
+                            if conn.peer_eof {
+                                Step::CloseSilent
+                            } else {
+                                Step::Done
+                            }
+                        }
+                        Err(e) => Step::Protocol(format!("bad request: {e}")),
+                    },
+                    ConnState::ReadBody => {
+                        if conn.rbuf.len() >= conn.head.total_len() {
+                            Step::Dispatch
+                        } else if conn.peer_eof {
+                            Step::CloseSilent
+                        } else {
+                            Step::Done
+                        }
+                    }
+                    ConnState::Await | ConnState::Write => Step::Done,
+                }
+            };
+            match step {
+                Step::Dispatch => {
+                    if !self.dispatch(slot) {
+                        return;
+                    }
+                }
+                Step::Protocol(message) => {
+                    self.state.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    let response = http::Response::json(400, &error_json(&message));
+                    self.start_write(slot, &response, false);
+                    return;
+                }
+                Step::CloseSilent => {
+                    self.close(slot, false);
+                    return;
+                }
+                Step::Done => return,
+            }
+        }
+    }
+
+    /// Route one fully framed request.  Returns `true` when the
+    /// response was handled inline and the connection is back in
+    /// `ReadHead` (so `advance` may keep parsing pipelined input).
+    fn dispatch(&mut self, slot: u32) -> bool {
+        enum Routed {
+            Inline(http::Response, bool),
+            Metrics(bool),
+            Enqueue(Box<Dispatch>, bool),
+        }
+        let gen = self.slots[slot as usize].gen;
+        let routed = {
+            let state = &self.state;
+            let config = &self.config;
+            let scratch = &mut self.scratch;
+            let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                return false;
+            };
+            let total = conn.head.total_len();
+            conn.served += 1;
+            let req = conn.head.req(&conn.rbuf);
+            let keep_alive =
+                req.wants_keep_alive() && conn.served < config.keepalive_max_requests.max(1);
+            let outcome = route_request(&req, conn.peer, state, config, scratch);
+            // The request is consumed: drop its framed bytes so the
+            // buffer fronts the next pipelined request (if any).
+            conn.rbuf.drain(..total);
+            match outcome {
+                RouteOutcome::Response(response) => Routed::Inline(response, keep_alive),
+                RouteOutcome::Scratch => Routed::Metrics(keep_alive),
+                RouteOutcome::Dispatch(dispatch) => Routed::Enqueue(Box::new(dispatch), keep_alive),
+            }
+        };
+        match routed {
+            Routed::Inline(response, keep_alive) => {
+                self.start_write(slot, &response, keep_alive);
+                self.can_continue(slot)
+            }
+            Routed::Metrics(keep_alive) => {
+                {
+                    let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                        return false;
+                    };
+                    conn.keep_alive = keep_alive;
+                    conn.wbuf.clear();
+                    conn.wpos = 0;
+                    http::serialize_parts_into(
+                        200,
+                        "text/plain; charset=utf-8",
+                        &[],
+                        self.scratch.as_bytes(),
+                        keep_alive,
+                        &mut conn.wbuf,
+                    );
+                    conn.state = ConnState::Write;
+                }
+                self.flush(slot);
+                self.can_continue(slot)
+            }
+            Routed::Enqueue(dispatch, keep_alive) => {
+                self.enqueue(slot, gen, *dispatch, keep_alive);
+                false
+            }
+        }
+    }
+
+    /// Hand admitted work to the batcher and park the connection.
+    fn enqueue(&mut self, slot: u32, gen: u16, dispatch: Dispatch, keep_alive: bool) {
+        let Dispatch {
+            payload,
+            kind,
+            trace,
+            permit,
+        } = dispatch;
+        let seq = {
+            let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                return;
+            };
+            conn.seq = conn.seq.wrapping_add(1);
+            conn.keep_alive = keep_alive;
+            conn.seq
+        };
+        let item = BatchItem {
+            payload,
+            reply: ReplySink::event(Arc::clone(&self.completions), pack(slot, gen, seq)),
+            enqueued: Instant::now(),
+            trace: trace.clone(),
+        };
+        if self.batch_tx.send(item).is_err() {
+            self.state.tracer.finish(trace);
+            drop(permit);
+            let response = http::Response::json(503, &error_json("server shutting down"));
+            self.start_write(slot, &response, false);
+            return;
+        }
+        let deadline = Instant::now() + self.config.request_timeout;
+        if let Some(conn) = self.slots[slot as usize].conn.as_mut() {
+            conn.pending = Some(Pending {
+                kind,
+                trace,
+                permit,
+            });
+            conn.state = ConnState::Await;
+            conn.deadline = deadline;
+        }
+        self.wheel.insert(deadline, slot, gen);
+        // No readiness interest while parked: the old blocking server
+        // never cancelled dispatched work on peer close, and level-
+        // triggered read interest would spin on buffered pipelined
+        // bytes.  Errors/hangups are still delivered.
+        self.set_interest(slot, interest::NONE);
+    }
+
+    /// A batcher completion arrived; validate it against the live
+    /// connection identity and resume the state machine.
+    fn complete(&mut self, completion: Completion) {
+        let (slot, gen, seq) = unpack(completion.token);
+        let pending = {
+            let Some(entry) = self.slots.get_mut(slot as usize) else {
+                return;
+            };
+            if entry.gen != gen {
+                return;
+            }
+            let Some(conn) = entry.conn.as_mut() else {
+                return;
+            };
+            if conn.state != ConnState::Await || conn.seq != seq {
+                return;
+            }
+            match conn.pending.take() {
+                Some(pending) => pending,
+                None => return,
+            }
+        };
+        self.resolve(slot, pending, completion.result);
+    }
+
+    /// Render the reply for a request that left the batcher (result) or
+    /// hit its in-flight deadline (`None` → 504), then write it out.
+    fn resolve(&mut self, slot: u32, pending: Pending, result: Option<ReplyResult>) {
+        let respond_start = if pending.trace.is_active() {
+            trace::now_us()
+        } else {
+            0
+        };
+        let response = render_reply(pending.kind, result, &self.state);
+        finish_trace(&self.state, pending.trace, respond_start);
+        drop(pending.permit);
+        let keep_alive = self.slots[slot as usize]
+            .conn
+            .as_ref()
+            .is_some_and(|c| c.keep_alive);
+        self.start_write(slot, &response, keep_alive);
+        if self.can_continue(slot) {
+            self.advance(slot);
+        }
+    }
+
+    /// Serialize a response into the connection's write buffer and
+    /// start flushing.
+    fn start_write(&mut self, slot: u32, response: &http::Response, keep_alive: bool) {
+        {
+            let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                return;
+            };
+            conn.keep_alive = keep_alive;
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            response.serialize_into(keep_alive, &mut conn.wbuf);
+            conn.state = ConnState::Write;
+        }
+        self.flush(slot);
+    }
+
+    fn flush(&mut self, slot: u32) {
+        let result = {
+            let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                return;
+            };
+            loop {
+                if conn.wpos >= conn.wbuf.len() {
+                    break FlushResult::Done;
+                }
+                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => break FlushResult::Close,
+                    Ok(n) => conn.wpos += n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break FlushResult::Blocked,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break FlushResult::Close,
+                }
+            }
+        };
+        match result {
+            FlushResult::Done => self.write_done(slot),
+            FlushResult::Blocked => {
+                // First block on this response: arm the write-stall
+                // deadline and write interest (later partial flushes
+                // find both already armed).
+                let gen = self.slots[slot as usize].gen;
+                let already = self.slots[slot as usize]
+                    .conn
+                    .as_ref()
+                    .is_some_and(|c| c.interest == interest::WRITE);
+                if !already {
+                    let deadline = Instant::now() + self.config.request_timeout;
+                    if let Some(conn) = self.slots[slot as usize].conn.as_mut() {
+                        conn.deadline = deadline;
+                    }
+                    self.wheel.insert(deadline, slot, gen);
+                    self.set_interest(slot, interest::WRITE);
+                }
+            }
+            FlushResult::Close => self.close(slot, false),
+        }
+    }
+
+    /// The response is fully flushed: close, or re-arm for the next
+    /// keep-alive request.
+    fn write_done(&mut self, slot: u32) {
+        let gen = self.slots[slot as usize].gen;
+        let keep = {
+            let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+                return;
+            };
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            conn.keep_alive && !conn.peer_eof
+        };
+        if !keep {
+            self.close(slot, false);
+            return;
+        }
+        let deadline = Instant::now() + self.config.keepalive_idle;
+        if let Some(conn) = self.slots[slot as usize].conn.as_mut() {
+            conn.state = ConnState::ReadHead;
+            conn.deadline = deadline;
+        }
+        self.wheel.insert(deadline, slot, gen);
+        self.set_interest(slot, interest::READ);
+    }
+
+    /// Whether `advance` may keep parsing (connection back in ReadHead).
+    fn can_continue(&self, slot: u32) -> bool {
+        self.slots
+            .get(slot as usize)
+            .and_then(|entry| entry.conn.as_ref())
+            .is_some_and(|conn| conn.state == ConnState::ReadHead)
+    }
+
+    /// A timer-wheel hint fired: revalidate against the live deadline,
+    /// re-arming if it moved, expiring the connection if it passed.
+    fn timer_fired(&mut self, slot: u32, gen: u16) {
+        enum Action {
+            Rearm(Instant),
+            CloseTimedOut,
+            Expire(Pending),
+        }
+        let now = Instant::now();
+        let action = {
+            let Some(entry) = self.slots.get_mut(slot as usize) else {
+                return;
+            };
+            if entry.gen != gen {
+                return;
+            }
+            let Some(conn) = entry.conn.as_mut() else {
+                return;
+            };
+            if conn.deadline > now {
+                Action::Rearm(conn.deadline)
+            } else {
+                match conn.state {
+                    // Idle/slowloris/write stalls close silently, as the
+                    // blocking server's socket timeouts did.
+                    ConnState::ReadHead | ConnState::ReadBody | ConnState::Write => {
+                        Action::CloseTimedOut
+                    }
+                    ConnState::Await => match conn.pending.take() {
+                        Some(pending) => Action::Expire(pending),
+                        None => return,
+                    },
+                }
+            }
+        };
+        match action {
+            Action::Rearm(deadline) => self.wheel.insert(deadline, slot, gen),
+            Action::CloseTimedOut => self.close(slot, true),
+            Action::Expire(pending) => {
+                // In-flight deadline: a 504, exactly like the old
+                // handler's recv_timeout.  A late batcher reply for
+                // this request is ignored (pending is gone, and any
+                // newer request on the connection has a newer seq).
+                self.resolve(slot, pending, None);
+            }
+        }
+    }
+
+    fn set_interest(&mut self, slot: u32, want: u32) {
+        let gen = self.slots[slot as usize].gen;
+        let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
+            return;
+        };
+        if conn.interest == want {
+            return;
+        }
+        if self
+            .epoll
+            .modify(conn.stream.as_raw_fd(), want, pack(slot, gen, 0))
+            .is_ok()
+        {
+            conn.interest = want;
+        }
+    }
+
+    fn close(&mut self, slot: u32, timed_out: bool) {
+        let entry = &mut self.slots[slot as usize];
+        let Some(conn) = entry.conn.take() else {
+            return;
+        };
+        entry.gen = entry.gen.wrapping_add(1);
+        let _ = self.epoll.delete(conn.stream.as_raw_fd());
+        if let Some(pending) = conn.pending {
+            // The connection died mid-dispatch: release admission now
+            // and retire the trace; the batcher's late completion (if
+            // any) targets a dead generation and is ignored.
+            self.state.tracer.finish(pending.trace);
+            drop(pending.permit);
+        }
+        self.free.push(slot);
+        self.state.connections.fetch_sub(1, Ordering::AcqRel);
+        if timed_out {
+            self.state
+                .connections_timed_out
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_round_trip_identity() {
+        for (slot, gen, seq) in [(0u32, 0u16, 0u16), (7, 1, 2), (u32::MAX - 2, 513, 40000)] {
+            let token = pack(slot, gen, seq);
+            assert_eq!(unpack(token), (slot, gen, seq));
+            assert_ne!(token, TOKEN_LISTENER);
+            assert_ne!(token, TOKEN_WAKER);
+        }
+    }
+
+    #[test]
+    fn listener_and_waker_tokens_do_not_collide_with_connections() {
+        // Slots are bounded far below u32::MAX, so the sentinel tokens
+        // (which decode to slot u32::MAX) can never match a live slot.
+        let (slot, _, _) = unpack(TOKEN_LISTENER);
+        assert_eq!(slot, u32::MAX);
+        let (slot, _, _) = unpack(TOKEN_WAKER);
+        assert_eq!(slot, u32::MAX);
+    }
+}

@@ -3,12 +3,22 @@
 //! The build box is offline, so no hyper/axum: this implements exactly
 //! the subset the serving subsystem needs — persistent connections
 //! (HTTP/1.1 keep-alive semantics, honoring `Connection: close` /
-//! `keep-alive`), `Content-Length`-framed bodies, header lookup, and
-//! deterministic wire formatting.  The per-connection request cap and
-//! idle timeout live in the connection handler
-//! ([`crate::server`]), which owns the socket.
+//! `keep-alive` anywhere in the token list per RFC 9112 §9.3),
+//! `Content-Length`-framed bodies, header lookup, and deterministic
+//! wire formatting.
+//!
+//! Parsing is **incremental and zero-copy**: the event loop
+//! (`server::event_loop`) appends whatever bytes the socket
+//! has into a per-connection reusable buffer and calls
+//! [`Head::parse`] until it reports [`Parse::Complete`].  The parsed
+//! head stores byte spans into that buffer (header names are
+//! lower-cased in place), and [`Head::req`] wraps buffer + head into a
+//! borrowed [`Req`] view — no per-request `String`/`Vec` is ever
+//! allocated for the wire bytes.  Timeouts, the per-connection request
+//! cap and pipelining live in the connection state machine, which owns
+//! the socket and the buffer.
 
-use std::io::{BufRead, Read, Write};
+use std::io::Write;
 
 use anyhow::{bail, Result};
 
@@ -16,127 +26,309 @@ use crate::util::json::Json;
 
 /// Hard cap on accepted bodies (JSON transform requests are small).
 pub const MAX_BODY_BYTES: usize = 4 << 20;
-/// Hard cap on the total header block.
-const MAX_HEADER_BYTES: usize = 16 << 10;
+/// Hard cap on the total header block (request line + headers + blank).
+pub const MAX_HEADER_BYTES: usize = 16 << 10;
 
-/// One parsed HTTP request.
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub method: String,
-    pub path: String,
-    /// `true` for HTTP/1.1 (keep-alive by default), `false` for 1.0.
-    pub http11: bool,
-    /// Header names are lower-cased at parse time.
-    pub headers: Vec<(String, String)>,
-    pub body: Vec<u8>,
+/// Byte span into the connection's read buffer.
+type Span = (usize, usize);
+
+fn span(buf: &[u8], s: Span) -> &[u8] {
+    &buf[s.0..s.1]
 }
 
-impl Request {
-    /// Case-insensitive header lookup.
-    pub fn header(&self, name: &str) -> Option<&str> {
-        self.headers
-            .iter()
-            .find(|(k, _)| k.eq_ignore_ascii_case(name))
-            .map(|(_, v)| v.as_str())
+/// Outcome of one [`Head::parse`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parse {
+    /// The full head is framed; `body_start`/`content_length` are set.
+    Complete,
+    /// No blank line yet — read more bytes and call `parse` again.
+    NeedMore,
+}
+
+/// One parsed request head: byte spans into the connection's read
+/// buffer instead of owned strings.  Reused across requests on the same
+/// connection (the span vector keeps its capacity).
+#[derive(Debug, Default)]
+pub struct Head {
+    method: Span,
+    path: Span,
+    http11: bool,
+    /// `(name, value)` spans; names are lower-cased in place at parse.
+    headers: Vec<(Span, Span)>,
+    /// Offset of the first body byte (one past the blank line).
+    pub body_start: usize,
+    /// Declared `Content-Length` (0 when absent).
+    pub content_length: usize,
+}
+
+impl Head {
+    /// Clear per-request state while keeping allocated capacity.
+    pub fn reset(&mut self) {
+        self.method = (0, 0);
+        self.path = (0, 0);
+        self.http11 = false;
+        self.headers.clear();
+        self.body_start = 0;
+        self.content_length = 0;
     }
 
-    pub fn body_str(&self) -> Result<&str> {
-        Ok(std::str::from_utf8(&self.body)?)
+    /// Total request framing size: head plus declared body.
+    pub fn total_len(&self) -> usize {
+        self.body_start + self.content_length
+    }
+
+    /// Try to parse a request head from the front of `buf`.
+    ///
+    /// Returns [`Parse::NeedMore`] until the blank line has arrived;
+    /// errors are protocol violations (malformed request line, bad
+    /// `Content-Length`, oversized head or body) and must close the
+    /// connection after a 400.  Header names are ASCII-lower-cased in
+    /// place, which is why `buf` is `&mut`.
+    pub fn parse(&mut self, buf: &mut [u8]) -> Result<Parse> {
+        let Some(head_end) = find_head_end(buf)? else {
+            return Ok(Parse::NeedMore);
+        };
+
+        self.reset();
+        self.body_start = head_end;
+
+        let mut lines = lines(&buf[..head_end]);
+        let request_line = lines.next().unwrap_or((0, 0));
+        self.parse_request_line(buf, request_line)?;
+        for line in lines {
+            if line.0 == line.1 {
+                break; // the blank line terminating the head
+            }
+            let header = parse_header_line(buf, line)?;
+            self.headers.push(header);
+        }
+        // Lower-case header names in place so lookups and the
+        // `content-length` scan below are byte comparisons.
+        for &(name, _) in &self.headers {
+            buf[name.0..name.1].make_ascii_lowercase();
+        }
+
+        self.content_length = match self.raw_header(buf, "content-length") {
+            Some(v) => {
+                let text = std::str::from_utf8(v).unwrap_or("");
+                match text.trim().parse::<usize>() {
+                    Ok(n) => n,
+                    Err(_) => bail!("invalid Content-Length {text:?}"),
+                }
+            }
+            None => 0,
+        };
+        if self.content_length > MAX_BODY_BYTES {
+            bail!(
+                "body of {} bytes exceeds the {MAX_BODY_BYTES}-byte limit",
+                self.content_length
+            );
+        }
+        Ok(Parse::Complete)
+    }
+
+    fn parse_request_line(&mut self, buf: &[u8], line: Span) -> Result<()> {
+        let mut pos = line.0;
+        let method = token(buf, &mut pos, line.1);
+        let path = token(buf, &mut pos, line.1);
+        let version = token(buf, &mut pos, line.1);
+        let (Some(method), Some(path), Some(version)) = (method, path, version) else {
+            let text = String::from_utf8_lossy(span(buf, line));
+            bail!("malformed request line {text:?}");
+        };
+        let version_bytes = span(buf, version);
+        if !version_bytes.starts_with(b"HTTP/1.") {
+            bail!(
+                "unsupported protocol {}",
+                String::from_utf8_lossy(version_bytes)
+            );
+        }
+        if std::str::from_utf8(&buf[line.0..line.1]).is_err() {
+            bail!("request line is not valid UTF-8");
+        }
+        self.method = method;
+        self.path = path;
+        self.http11 = version_bytes == b"HTTP/1.1";
+        Ok(())
+    }
+
+    fn raw_header<'b>(&self, buf: &'b [u8], name: &str) -> Option<&'b [u8]> {
+        self.headers
+            .iter()
+            .find(|(n, _)| span(buf, *n).eq_ignore_ascii_case(name.as_bytes()))
+            .map(|(_, v)| span(buf, *v))
+    }
+
+    /// Borrow `buf` through this head as a request view.  `buf` must be
+    /// the same buffer `parse` completed against.
+    pub fn req<'b>(&'b self, buf: &'b [u8]) -> Req<'b> {
+        Req { buf, head: self }
+    }
+}
+
+/// Locate the end of the head (offset one past the blank line),
+/// enforcing [`MAX_HEADER_BYTES`] even while incomplete so a
+/// newline-free flood errors instead of buffering without bound.
+fn find_head_end(buf: &[u8]) -> Result<Option<usize>> {
+    let mut line_start = 0usize;
+    while let Some(nl) = buf[line_start..].iter().position(|&b| b == b'\n') {
+        let line_end = line_start + nl;
+        let content = trim_cr(buf, (line_start, line_end));
+        if content.0 == content.1 && line_start > 0 {
+            return Ok(Some(line_end + 1));
+        }
+        if content.0 == content.1 {
+            bail!("malformed request line \"\"");
+        }
+        line_start = line_end + 1;
+        if line_start > MAX_HEADER_BYTES {
+            bail!("header block larger than {MAX_HEADER_BYTES} bytes");
+        }
+    }
+    if buf.len() > MAX_HEADER_BYTES {
+        bail!("header block larger than {MAX_HEADER_BYTES} bytes");
+    }
+    Ok(None)
+}
+
+/// Iterate `\n`-separated lines of `head` as spans with any trailing
+/// `\r` stripped.
+fn lines(head: &[u8]) -> impl Iterator<Item = Span> + '_ {
+    let mut start = 0usize;
+    std::iter::from_fn(move || {
+        if start >= head.len() {
+            return None;
+        }
+        let nl = head[start..].iter().position(|&b| b == b'\n')?;
+        let line = trim_cr(head, (start, start + nl));
+        start += nl + 1;
+        Some(line)
+    })
+}
+
+fn trim_cr(buf: &[u8], line: Span) -> Span {
+    if line.1 > line.0 && buf[line.1 - 1] == b'\r' {
+        (line.0, line.1 - 1)
+    } else {
+        line
+    }
+}
+
+/// Next whitespace-separated token in `buf[*pos..end]`.
+fn token(buf: &[u8], pos: &mut usize, end: usize) -> Option<Span> {
+    while *pos < end && (buf[*pos] == b' ' || buf[*pos] == b'\t') {
+        *pos += 1;
+    }
+    let start = *pos;
+    while *pos < end && buf[*pos] != b' ' && buf[*pos] != b'\t' {
+        *pos += 1;
+    }
+    (*pos > start).then_some((start, *pos))
+}
+
+fn parse_header_line(buf: &[u8], line: Span) -> Result<(Span, Span)> {
+    let bytes = span(buf, line);
+    let Some(colon) = bytes.iter().position(|&b| b == b':') else {
+        let text = String::from_utf8_lossy(bytes);
+        bail!("malformed header line {text:?}");
+    };
+    let name = trim_span(buf, (line.0, line.0 + colon));
+    let value = trim_span(buf, (line.0 + colon + 1, line.1));
+    Ok((name, value))
+}
+
+fn trim_span(buf: &[u8], mut s: Span) -> Span {
+    while s.0 < s.1 && buf[s.0].is_ascii_whitespace() {
+        s.0 += 1;
+    }
+    while s.1 > s.0 && buf[s.1 - 1].is_ascii_whitespace() {
+        s.1 -= 1;
+    }
+    s
+}
+
+/// Borrowed view of one request: spans resolved against the
+/// connection's read buffer.  All accessors are zero-copy.
+#[derive(Clone, Copy)]
+pub struct Req<'b> {
+    buf: &'b [u8],
+    head: &'b Head,
+}
+
+impl<'b> Req<'b> {
+    pub fn method(&self) -> &'b str {
+        // The whole request line was UTF-8-validated at parse time.
+        std::str::from_utf8(span(self.buf, self.head.method)).unwrap_or("")
+    }
+
+    pub fn path(&self) -> &'b str {
+        std::str::from_utf8(span(self.buf, self.head.path)).unwrap_or("")
+    }
+
+    /// `true` for HTTP/1.1 (keep-alive by default), `false` for 1.0.
+    pub fn http11(&self) -> bool {
+        self.head.http11
+    }
+
+    /// Case-insensitive header lookup.  Non-UTF-8 values read as absent.
+    pub fn header(&self, name: &str) -> Option<&'b str> {
+        let raw = self.head.raw_header(self.buf, name)?;
+        std::str::from_utf8(raw).ok()
+    }
+
+    /// The `Content-Length`-framed body.  The caller (the connection
+    /// state machine) guarantees the buffer holds the full body before
+    /// constructing the view.
+    pub fn body(&self) -> &'b [u8] {
+        let start = self.head.body_start.min(self.buf.len());
+        let end = self.head.total_len().min(self.buf.len());
+        &self.buf[start..end]
+    }
+
+    pub fn body_str(&self) -> Result<&'b str> {
+        Ok(std::str::from_utf8(self.body())?)
     }
 
     /// Split the request target into path and query string (query is
     /// `""` when absent) — `path` is stored verbatim off the wire.
-    pub fn path_and_query(&self) -> (&str, &str) {
-        match self.path.split_once('?') {
+    pub fn path_and_query(&self) -> (&'b str, &'b str) {
+        match self.path().split_once('?') {
             Some((p, q)) => (p, q),
-            None => (self.path.as_str(), ""),
+            None => (self.path(), ""),
         }
     }
 
     /// Persistent-connection semantics: HTTP/1.1 keeps the connection
-    /// open unless the client says `Connection: close`; HTTP/1.0 closes
-    /// unless the client says `Connection: keep-alive`.
+    /// open unless the client says `close`; HTTP/1.0 closes unless the
+    /// client says `keep-alive`.  See [`connection_keep_alive`].
     pub fn wants_keep_alive(&self) -> bool {
-        match self.header("connection") {
-            Some(v) if v.eq_ignore_ascii_case("close") => false,
-            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
-            _ => self.http11,
-        }
+        connection_keep_alive(self.header("connection"), self.http11())
     }
 }
 
-/// Read one `\n`-terminated line, erroring (instead of buffering without
-/// bound) once it exceeds `limit` bytes.  `Ok(None)` on immediate EOF.
-fn read_bounded_line<R: BufRead>(reader: &mut R, limit: usize) -> Result<Option<String>> {
-    let mut line = String::new();
-    let n = reader.by_ref().take(limit as u64 + 1).read_line(&mut line)?;
-    if n == 0 {
-        return Ok(None);
+/// Decide persistence from a `Connection` header value.
+///
+/// RFC 9112 §9.3: the header is a comma-separated **token list**
+/// (`Connection: keep-alive, upgrade`), so membership must be tested
+/// per token, not against the whole string.  `close` anywhere in the
+/// list wins over `keep-alive`; with neither token present the HTTP
+/// version decides (1.1 persists, 1.0 closes).
+pub fn connection_keep_alive(value: Option<&str>, http11: bool) -> bool {
+    let Some(value) = value else { return http11 };
+    let mut keep = None;
+    for tok in value.split(',') {
+        let tok = tok.trim();
+        if tok.eq_ignore_ascii_case("close") {
+            return false;
+        }
+        if tok.eq_ignore_ascii_case("keep-alive") {
+            keep = Some(true);
+        }
     }
-    if n > limit {
-        bail!("line longer than {limit} bytes");
-    }
-    Ok(Some(line))
+    keep.unwrap_or(http11)
 }
 
-/// Read one request from the stream.  Returns `Ok(None)` on a clean EOF
-/// before any bytes (the peer closed an idle connection).
-pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
-    let Some(line) = read_bounded_line(reader, MAX_HEADER_BYTES)? else {
-        return Ok(None);
-    };
-    let request_line = line.trim_end();
-    let mut parts = request_line.split_whitespace();
-    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
-    else {
-        bail!("malformed request line {request_line:?}");
-    };
-    if !version.starts_with("HTTP/1.") {
-        bail!("unsupported protocol {version}");
-    }
-
-    let mut headers = Vec::new();
-    let mut header_bytes = 0usize;
-    loop {
-        let Some(h) = read_bounded_line(reader, MAX_HEADER_BYTES)? else {
-            bail!("connection closed inside the header block");
-        };
-        header_bytes += h.len();
-        if header_bytes > MAX_HEADER_BYTES {
-            bail!("header block larger than {MAX_HEADER_BYTES} bytes");
-        }
-        let trimmed = h.trim_end();
-        if trimmed.is_empty() {
-            break;
-        }
-        let Some((name, value)) = trimmed.split_once(':') else {
-            bail!("malformed header line {trimmed:?}");
-        };
-        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
-    }
-
-    let content_length: usize = headers
-        .iter()
-        .find(|(k, _)| k == "content-length")
-        .map(|(_, v)| v.parse())
-        .transpose()?
-        .unwrap_or(0);
-    if content_length > MAX_BODY_BYTES {
-        bail!("body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte limit");
-    }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-
-    Ok(Some(Request {
-        method: method.to_string(),
-        path: path.to_string(),
-        http11: version == "HTTP/1.1",
-        headers,
-        body,
-    }))
-}
-
-/// One response, serialized by [`Response::write_to`].
+/// One response, serialized by [`Response::serialize_into`].
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
@@ -169,6 +361,18 @@ impl Response {
         self
     }
 
+    /// Serialize into a reusable write buffer (appends; callers clear).
+    pub fn serialize_into(&self, keep_alive: bool, out: &mut Vec<u8>) {
+        serialize_parts_into(
+            self.status,
+            self.content_type,
+            &self.extra_headers,
+            &self.body,
+            keep_alive,
+            out,
+        );
+    }
+
     /// Serialize with `Connection: close` (one-shot responses: tests,
     /// the pre-handler 503 path).
     pub fn write_to<W: Write>(&self, writer: &mut W) -> std::io::Result<()> {
@@ -178,26 +382,39 @@ impl Response {
     /// Serialize, advertising whether the server will keep the
     /// connection open for another request.
     pub fn write_to_with<W: Write>(&self, writer: &mut W, keep_alive: bool) -> std::io::Result<()> {
-        write!(
-            writer,
-            "HTTP/1.1 {} {}\r\n",
-            self.status,
-            reason(self.status)
-        )?;
-        write!(writer, "Content-Type: {}\r\n", self.content_type)?;
-        write!(writer, "Content-Length: {}\r\n", self.body.len())?;
-        write!(
-            writer,
-            "Connection: {}\r\n",
-            if keep_alive { "keep-alive" } else { "close" }
-        )?;
-        for (name, value) in &self.extra_headers {
-            write!(writer, "{name}: {value}\r\n")?;
-        }
-        writer.write_all(b"\r\n")?;
-        writer.write_all(&self.body)?;
+        let mut out = Vec::with_capacity(self.body.len() + 128);
+        self.serialize_into(keep_alive, &mut out);
+        writer.write_all(&out)?;
         writer.flush()
     }
+}
+
+/// Serialize a response from parts, so callers that render a body into
+/// a reused scratch buffer (the `/metrics` fast path) never build a
+/// `Response` with an owned body copy.
+pub fn serialize_parts_into(
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(String, String)],
+    body: &[u8],
+    keep_alive: bool,
+    out: &mut Vec<u8>,
+) {
+    // Writing to a Vec cannot fail; ignore the io::Result plumbing.
+    let _ = write!(
+        out,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (name, value) in extra_headers {
+        let _ = write!(out, "{name}: {value}\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
 }
 
 /// Reason phrase for the status codes this server emits.
@@ -218,57 +435,93 @@ pub fn reason(status: u16) -> &'static str {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Cursor;
 
-    fn parse(raw: &str) -> Result<Option<Request>> {
-        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    /// Parse a complete request held in one buffer, mirroring what the
+    /// event loop does incrementally.
+    fn parse(raw: &str) -> Result<(Head, Vec<u8>)> {
+        let mut buf = raw.as_bytes().to_vec();
+        let mut head = Head::default();
+        match head.parse(&mut buf)? {
+            Parse::Complete if buf.len() >= head.total_len() => Ok((head, buf)),
+            Parse::Complete => bail!("truncated body"),
+            Parse::NeedMore => bail!("incomplete head"),
+        }
     }
 
     #[test]
     fn splits_path_and_query() {
-        let req = parse("GET /debug/traces?n=4&format=chrome HTTP/1.1\r\nHost: x\r\n\r\n")
-            .unwrap()
+        let (head, buf) = parse("GET /debug/traces?n=4&format=chrome HTTP/1.1\r\nHost: x\r\n\r\n")
             .unwrap();
-        assert_eq!(req.path_and_query(), ("/debug/traces", "n=4&format=chrome"));
-        let plain = parse("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
-        assert_eq!(plain.path_and_query(), ("/healthz", ""));
+        assert_eq!(
+            head.req(&buf).path_and_query(),
+            ("/debug/traces", "n=4&format=chrome")
+        );
+        let (head, buf) = parse("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(head.req(&buf).path_and_query(), ("/healthz", ""));
     }
 
     #[test]
     fn parses_post_with_body() {
-        let req = parse(
-            "POST /v1/transform HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
-        )
-        .unwrap()
-        .unwrap();
-        assert_eq!(req.method, "POST");
-        assert_eq!(req.path, "/v1/transform");
+        let (head, buf) =
+            parse("POST /v1/transform HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd")
+                .unwrap();
+        let req = head.req(&buf);
+        assert_eq!(req.method(), "POST");
+        assert_eq!(req.path(), "/v1/transform");
         assert_eq!(req.header("HOST"), Some("x"));
-        assert_eq!(req.body, b"abcd".to_vec());
+        assert_eq!(req.body(), b"abcd");
         assert_eq!(req.body_str().unwrap(), "abcd");
     }
 
     #[test]
     fn parses_get_without_body() {
-        let req = parse("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
-        assert_eq!(req.method, "GET");
-        assert!(req.body.is_empty());
+        let (head, buf) = parse("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let req = head.req(&buf);
+        assert_eq!(req.method(), "GET");
+        assert!(req.body().is_empty());
     }
 
     #[test]
-    fn clean_eof_is_none() {
-        assert!(parse("").unwrap().is_none());
+    fn incremental_parse_waits_for_the_blank_line() {
+        let raw = b"POST /v1/transform HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let mut head = Head::default();
+        let mut buf = Vec::new();
+        for (i, &b) in raw.iter().enumerate() {
+            buf.push(b);
+            let status = head.parse(&mut buf).unwrap();
+            // Head completes at the final `\n` of the blank line.
+            let head_done = i + 1 >= raw.len() - 2;
+            assert_eq!(status == Parse::Complete, head_done, "byte {i}");
+        }
+        assert_eq!(head.content_length, 2);
+        assert_eq!(head.req(&buf).body(), b"hi");
+    }
+
+    #[test]
+    fn head_reuse_across_pipelined_requests() {
+        let mut buf = b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\nX: y\r\n\r\n".to_vec();
+        let mut head = Head::default();
+        assert_eq!(head.parse(&mut buf).unwrap(), Parse::Complete);
+        assert_eq!(head.req(&buf).path(), "/healthz");
+        // The state machine consumes the framed request, then re-parses.
+        buf.drain(..head.total_len());
+        assert_eq!(head.parse(&mut buf).unwrap(), Parse::Complete);
+        let req = head.req(&buf);
+        assert_eq!(req.path(), "/metrics");
+        assert_eq!(req.header("x"), Some("y"));
     }
 
     #[test]
     fn rejects_malformed_request_line() {
         assert!(parse("GETS-NO-PATH\r\n\r\n").is_err());
         assert!(parse("GET / SMTP/1.0\r\n\r\n").is_err());
+        assert!(parse("\r\n\r\n").is_err());
     }
 
     #[test]
-    fn rejects_truncated_body_and_oversized_length() {
-        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    fn rejects_bad_content_length_and_oversized_length() {
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n").is_err());
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n").is_err());
         let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 1 << 30);
         assert!(parse(&huge).is_err());
     }
@@ -298,29 +551,60 @@ mod tests {
 
     #[test]
     fn keep_alive_semantics_follow_http_version_and_connection_header() {
-        let req = |raw: &str| parse(raw).unwrap().unwrap();
+        let wants = |raw: &str| {
+            let (head, buf) = parse(raw).unwrap();
+            head.req(&buf).wants_keep_alive()
+        };
         // HTTP/1.1 defaults to keep-alive.
-        assert!(req("GET / HTTP/1.1\r\nHost: x\r\n\r\n").wants_keep_alive());
-        assert!(!req("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").wants_keep_alive());
+        assert!(wants("GET / HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert!(!wants("GET / HTTP/1.1\r\nConnection: close\r\n\r\n"));
         // HTTP/1.0 defaults to close.
-        assert!(!req("GET / HTTP/1.0\r\nHost: x\r\n\r\n").wants_keep_alive());
-        assert!(req("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").wants_keep_alive());
+        assert!(!wants("GET / HTTP/1.0\r\nHost: x\r\n\r\n"));
+        assert!(wants("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n"));
         // Case-insensitive header values.
-        assert!(!req("GET / HTTP/1.1\r\nConnection: Close\r\n\r\n").wants_keep_alive());
+        assert!(!wants("GET / HTTP/1.1\r\nConnection: Close\r\n\r\n"));
+    }
+
+    #[test]
+    fn connection_header_token_lists_follow_rfc_9112() {
+        // Membership is per comma-separated token, not whole-string.
+        assert!(connection_keep_alive(Some("keep-alive, upgrade"), true));
+        assert!(connection_keep_alive(Some("upgrade, keep-alive"), false));
+        assert!(connection_keep_alive(Some("Keep-Alive , Upgrade"), false));
+        // `close` anywhere in the list wins, in either order.
+        assert!(!connection_keep_alive(Some("keep-alive, close"), true));
+        assert!(!connection_keep_alive(Some("close, keep-alive"), true));
+        assert!(!connection_keep_alive(Some("upgrade, Close"), true));
+        // Unknown tokens alone fall back to the HTTP-version default.
+        assert!(connection_keep_alive(Some("upgrade"), true));
+        assert!(!connection_keep_alive(Some("upgrade"), false));
+        // Degenerate values.
+        assert!(connection_keep_alive(Some(""), true));
+        assert!(!connection_keep_alive(Some(",,"), false));
+        assert!(connection_keep_alive(None, true));
+        assert!(!connection_keep_alive(None, false));
     }
 
     #[test]
     fn response_advertises_keep_alive_when_asked() {
         let mut out = Vec::new();
-        Response::text(200, "ok\n")
-            .write_to_with(&mut out, true)
-            .unwrap();
+        Response::text(200, "ok\n").write_to_with(&mut out, true).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
         let mut out = Vec::new();
         Response::text(200, "ok\n").write_to(&mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn serialize_parts_matches_response_serialization() {
+        let resp = Response::json(200, &crate::util::json::parse(r#"{"y":[1,2]}"#).unwrap());
+        let mut whole = Vec::new();
+        resp.serialize_into(true, &mut whole);
+        let mut parts = Vec::new();
+        serialize_parts_into(200, "application/json", &[], &resp.body, true, &mut parts);
+        assert_eq!(whole, parts);
     }
 
     #[test]

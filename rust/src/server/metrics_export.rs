@@ -105,12 +105,29 @@ fn backend_features() -> &'static str {
     }
 }
 
-/// Render the full exposition document.
+/// Render the full exposition document into a fresh `String`.
+///
+/// Tests and one-shot callers only; the serving path uses
+/// [`render_into`] with a per-reactor scratch buffer so a scrape costs
+/// zero steady-state allocation.
 pub(crate) fn render(state: &ServerState) -> String {
+    let mut out = String::new();
+    render_into(state, &mut out);
+    out
+}
+
+/// Render the full exposition document into `out` (cleared first).
+///
+/// The buffer is reused across scrapes — after the first scrape its
+/// capacity covers the whole document and rendering allocates nothing.
+/// The observed capacity feeds the `repro_metrics_buffer_bytes` gauge
+/// (reported one scrape behind, since the document renders before its
+/// own final size is known).
+pub(crate) fn render_into(state: &ServerState, out: &mut String) {
+    out.clear();
     let coord = state.shard_metrics.merged();
     let per_shard = state.shard_metrics.per_shard();
     let e2e = state.e2e_latency.lock().expect("latency poisoned").clone();
-    let mut out = String::new();
 
     // Build/process identity.
     let _ = writeln!(
@@ -126,13 +143,13 @@ pub(crate) fn render(state: &ServerState) -> String {
         backend_features(),
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_process_start_time_seconds",
         "Unix time the server process started.",
         state.started_unix_s,
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_process_uptime_seconds",
         "Seconds since the server process started.",
         state.started.elapsed().as_secs_f64(),
@@ -140,67 +157,67 @@ pub(crate) fn render(state: &ServerState) -> String {
 
     // Accelerator accounting, merged across the shard set.
     counter_u64(
-        &mut out,
+        out,
         "repro_requests_total",
         "Transform slices completed across the shard set (one per request per shard lane touched).",
         coord.requests,
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_pool_jobs_total",
         "Pool jobs executed across the shard set; requests/jobs is the router's slice-fusion factor.",
         coord.jobs,
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_planes_issued_total",
         "Tile-level bitplane operations issued.",
         coord.planes_issued,
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_row_cycles_total",
         "Row-cycles executed (energy-relevant granularity).",
         coord.row_cycles,
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_row_cycles_saved_total",
         "Row-cycles skipped by predictive early termination vs the no-ET baseline.",
         coord.row_cycles_saved(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_elements_total",
         "Output elements produced.",
         coord.cycles.total_elements,
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_elements_terminated_early_total",
         "Output elements that terminated before their last bitplane.",
         coord.cycles.terminated_early,
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_avg_bitplane_cycles",
         "Average executed bitplane cycles per output element (paper Fig. 9c).",
         coord.average_cycles(),
     );
     counter_f64(
-        &mut out,
+        out,
         "repro_energy_femtojoules_total",
         "Modelled crossbar energy for the work served (fJ).",
         coord.energy_fj(&state.energy),
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_tops_per_watt",
         "Effective TOPS/W of the work served (paper Table I headline).",
         coord.tops_per_watt(&state.energy),
     );
     counter_f64(
-        &mut out,
+        out,
         "repro_worker_busy_seconds_total",
         "Cumulative worker busy time across every shard's tile pool.",
         coord.busy.as_secs_f64(),
@@ -209,19 +226,19 @@ pub(crate) fn render(state: &ServerState) -> String {
     // Per-shard breakdown (slot-indexed; poisoned shards keep reporting
     // what they served before dying).
     gauge_f64(
-        &mut out,
+        out,
         "repro_shards_healthy",
         "Shards currently accepting work.",
         state.shards_healthy.load(Ordering::Acquire) as f64,
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_shards_total",
         "Shards the set was started with.",
         state.shard_metrics.shards() as f64,
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_shard_respawns_total",
         "Poisoned shards respawned by the serve loop's health tick.",
         state.shard_respawns.load(Ordering::Acquire),
@@ -301,19 +318,19 @@ pub(crate) fn render(state: &ServerState) -> String {
 
     // HTTP front-end counters.
     counter_u64(
-        &mut out,
+        out,
         "repro_http_requests_ok_total",
         "Transform requests answered with 200.",
         state.requests_ok.load(Ordering::Relaxed),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_http_bad_requests_total",
         "Requests rejected with 400 (malformed payloads).",
         state.bad_requests.load(Ordering::Relaxed),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_http_admitted_total",
         "Requests admitted past admission control.",
         state.admission.admitted_total(),
@@ -334,31 +351,58 @@ pub(crate) fn render(state: &ServerState) -> String {
         state.admission.shed_ratelimited_total()
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_inflight_requests",
         "Requests currently between admission and reply.",
         state.admission.inflight() as f64,
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_batches_total",
         "Micro-batches dispatched into the coordinator.",
         state.batches_total.load(Ordering::Relaxed),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_stale_dropped_total",
         "Queued requests dropped because their client timed out first.",
         state.stale_dropped_total.load(Ordering::Relaxed),
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_open_connections",
         "Currently open HTTP connections.",
         state.connections.load(Ordering::Relaxed) as f64,
     );
+    // Event-loop connection accounting (repro_connections_open repeats
+    // repro_open_connections under the family's canonical name; the old
+    // gauge stays for dashboard compatibility).
     gauge_f64(
-        &mut out,
+        out,
+        "repro_connections_open",
+        "Connections currently registered with the reactors.",
+        state.connections.load(Ordering::Relaxed) as f64,
+    );
+    counter_u64(
+        out,
+        "repro_connections_accepted_total",
+        "Connections accepted and registered by the reactors.",
+        state.connections_accepted.load(Ordering::Relaxed),
+    );
+    counter_u64(
+        out,
+        "repro_connections_timed_out_total",
+        "Connections closed by an idle, slowloris or write deadline.",
+        state.connections_timed_out.load(Ordering::Relaxed),
+    );
+    gauge_f64(
+        out,
+        "repro_metrics_buffer_bytes",
+        "High-water capacity of the reused /metrics render buffer (previous scrapes).",
+        state.metrics_buf_hwm.load(Ordering::Relaxed) as f64,
+    );
+    gauge_f64(
+        out,
         "repro_ratelimit_tracked_clients",
         "Client token buckets currently tracked by the rate limiter.",
         state.admission.tracked_clients() as f64,
@@ -366,19 +410,19 @@ pub(crate) fn render(state: &ServerState) -> String {
 
     // NN inference over the hosted model (/v1/infer).
     counter_u64(
-        &mut out,
+        out,
         "repro_infer_requests_total",
         "Inference requests answered with 200.",
         state.infer_requests_ok.load(Ordering::Relaxed),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_infer_samples_total",
         "Samples pushed through the hosted model.",
         state.infer_samples_total.load(Ordering::Relaxed),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_infer_batches_total",
         "Coalesced model forward passes dispatched by the batcher.",
         state.infer_batches_total.load(Ordering::Relaxed),
@@ -386,13 +430,13 @@ pub(crate) fn render(state: &ServerState) -> String {
 
     // Latency distributions.
     histogram(
-        &mut out,
+        out,
         "repro_request_latency_seconds",
         "End-to-end request latency (enqueue to reply fan-out).",
         &e2e,
     );
     histogram(
-        &mut out,
+        out,
         "repro_infer_latency_seconds",
         "End-to-end inference latency (enqueue to logits fan-out).",
         &state
@@ -402,7 +446,7 @@ pub(crate) fn render(state: &ServerState) -> String {
             .clone(),
     );
     histogram(
-        &mut out,
+        out,
         "repro_worker_latency_seconds",
         "Per-request worker busy time inside the tile pool.",
         &coord.latency,
@@ -441,31 +485,31 @@ pub(crate) fn render(state: &ServerState) -> String {
         );
     }
     counter_u64(
-        &mut out,
+        out,
         "repro_traces_sampled_total",
         "Requests that drew an active trace at admission.",
         state.tracer.sampled_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_trace_slow_requests_total",
         "Traced requests that exceeded the --slow-ms threshold.",
         state.tracer.slow_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_trace_planes_total",
         "Bitplane operations observed inside traced execute spans.",
         state.tracer.planes_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_trace_elements_total",
         "Output elements observed inside traced execute spans.",
         state.tracer.elements_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_trace_elements_terminated_total",
         "Traced output elements that early-terminated before their last bitplane.",
         state.tracer.terminated_total(),
@@ -477,49 +521,49 @@ pub(crate) fn render(state: &ServerState) -> String {
     // exposition shape is stable across configurations.
     let monitor = &state.monitor;
     gauge_f64(
-        &mut out,
+        out,
         "repro_fidelity_enabled",
         "Whether the fidelity monitor is active (1) or disabled (0).",
         f64::from(u8::from(monitor.is_enabled())),
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_fidelity_sample_every",
         "Shadow-verify 1 in this many slices served by non-digital shards (0 = off).",
         f64::from(monitor.sample_every()),
     );
     gauge_f64(
-        &mut out,
+        out,
         "repro_fidelity_drift_threshold",
         "Drift threshold on the per-slot divergence EWMA (quantizer LSBs).",
         monitor.drift_threshold(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_fidelity_checked_total",
         "Sampled slices re-executed through the digital golden path.",
         monitor.checked_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_fidelity_dropped_total",
         "Sampled slices dropped because the shadow queue was full (oldest first).",
         monitor.dropped_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_fidelity_flagged_total",
         "Shard slots flagged as drifting by the EWMA detector.",
         monitor.flagged_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_fidelity_check_errors_total",
         "Shadow checks that failed to execute (golden-path errors).",
         monitor.check_errors_total(),
     );
     counter_u64(
-        &mut out,
+        out,
         "repro_shard_drift_respawns_total",
         "Drifting shard slots recycled (poisoned + respawned) by the health tick.",
         monitor.drift_respawns_total(),
@@ -553,18 +597,20 @@ pub(crate) fn render(state: &ServerState) -> String {
     }
     let (delta_hist, mismatch_hist) = monitor.histograms();
     fixed_histogram(
-        &mut out,
+        out,
         "repro_fidelity_mean_abs_dq",
         "Mean |dq| per element of shadow-checked slices (quantizer LSBs).",
         &delta_hist,
     );
     fixed_histogram(
-        &mut out,
+        out,
         "repro_fidelity_block_mismatch_fraction",
         "Per-block fraction of elements off the golden lattice by more than half an LSB.",
         &mismatch_hist,
     );
-    out
+    state
+        .metrics_buf_hwm
+        .fetch_max(out.capacity(), Ordering::Relaxed);
 }
 
 #[cfg(test)]
@@ -807,6 +853,39 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("# TYPE repro_fidelity_drift_ewma gauge"));
+    }
+
+    #[test]
+    fn render_into_reuses_the_buffer_and_tracks_connection_series() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            MetricsAggregator::new(vec![coord.metrics_handle()], 8),
+            Arc::new(AtomicUsize::new(1)),
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(vec![AtomicBool::new(true)]),
+            EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
+        ));
+        coord.shutdown();
+        state.connections.fetch_add(2, Ordering::Relaxed);
+        state.connections_accepted.fetch_add(3, Ordering::Relaxed);
+        state.connections_timed_out.fetch_add(1, Ordering::Relaxed);
+        let mut buf = String::new();
+        render_into(&state, &mut buf);
+        let cap = buf.capacity();
+        assert_eq!(metric_value(&buf, "repro_connections_open"), 2.0, "{buf}");
+        assert_eq!(metric_value(&buf, "repro_open_connections"), 2.0);
+        assert_eq!(metric_value(&buf, "repro_connections_accepted_total"), 3.0);
+        assert_eq!(metric_value(&buf, "repro_connections_timed_out_total"), 1.0);
+        // The first scrape reports a zero high-water (nothing recorded
+        // yet when the gauge rendered); the second reports the first's
+        // capacity, and the buffer is reused rather than regrown.
+        assert_eq!(metric_value(&buf, "repro_metrics_buffer_bytes"), 0.0);
+        render_into(&state, &mut buf);
+        assert_eq!(metric_value(&buf, "repro_metrics_buffer_bytes"), cap as f64);
+        assert!(buf.capacity() >= cap);
     }
 
     #[cfg(not(feature = "monitor-off"))]

@@ -3,14 +3,28 @@
 //! long-running inference service (`repro serve --listen ADDR`).
 //!
 //! ```text
-//!   clients ──▶ accept loop (thread per keep-alive connection)
+//!   clients ──▶ epoll reactors (N threads, EPOLLEXCLUSIVE accept)
+//!                  │  per-connection state machine, zero-copy parsing
 //!                  │  admission control: in-flight cap + token buckets
 //!                  ▼
 //!              dynamic micro-batcher (max_batch / max_wait coalescing)
 //!                  │  one scatter–gather dispatch per coalesced batch
+//!                  │  completions ──▶ eventfd waker ──▶ reactor resumes
 //!                  ▼
 //!              ShardSet (N coordinator pools) ──▶ per-request replies
 //! ```
+//!
+//! The front end is **event-driven**: a few reactor threads
+//! (`event_loop`) multiplex every connection over nonblocking sockets
+//! with a hand-rolled epoll binding ([`reactor`]; the build box is
+//! offline, so no tokio/mio).  Each connection is a bounded state
+//! machine (`ReadHead → ReadBody → Dispatched → Write → KeepAlive/
+//! Close`) over reusable read/write buffers; request heads parse
+//! zero-copy as byte spans ([`http::Head`]) and bodies are framed by
+//! `Content-Length` in place.  Dispatched requests park the connection
+//! — no thread blocks — and the batcher's reply re-enters the loop
+//! through an eventfd-backed completion queue.  Idle, slowloris, write
+//! and in-flight deadlines all come from one coarse timer wheel.
 //!
 //! Endpoints:
 //! * `POST /v1/transform` — `{"x": [...], "thresholds": [...]}` →
@@ -23,8 +37,8 @@
 //!   bit-identical to `Mlp::forward` with `Backend::Quantized`;
 //! * `GET /metrics` — Prometheus text format (cycle/energy accounting,
 //!   admission counters, `repro_infer_*` series, p50/p95/p99 latency,
-//!   per-stage `repro_stage_seconds{stage=...}` attribution and build
-//!   info);
+//!   per-stage `repro_stage_seconds{stage=...}` attribution, connection
+//!   gauges and build info);
 //! * `GET /healthz` — liveness probe;
 //! * `GET /readyz` — shard-health-aware readiness: 503 with a per-shard
 //!   JSON body while any shard slot is poisoned/respawning;
@@ -41,19 +55,22 @@
 //! permanently shrinking capacity.
 //!
 //! Everything is `std`-only (the build box is offline): hand-rolled HTTP
-//! in [`http`], batching in [`batcher`], shedding in [`admission`] and
-//! the exposition format in [`metrics_export`].
+//! in [`http`], the epoll/eventfd/timer-wheel bindings in [`reactor`],
+//! the connection state machine in `event_loop`, batching in
+//! [`batcher`], shedding in [`admission`] and the exposition format in
+//! [`metrics_export`].
 
 pub mod admission;
 pub mod batcher;
+mod event_loop;
 pub mod http;
 pub mod metrics_export;
+pub mod reactor;
 
 use std::collections::BTreeMap;
-use std::io::BufReader;
-use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Sender};
+use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
@@ -71,10 +88,11 @@ use crate::shard::{MetricsAggregator, ShardSet, ShardSetConfig};
 use crate::trace::{self, Stage, TraceConfig, TraceHandle, Tracer};
 use crate::util::json::{self, Json};
 
-use admission::Admission;
+use admission::{Admission, InflightPermit};
 pub use admission::{AdmissionConfig, Rejection};
-use batcher::{BatchItem, BatchPayload};
+use batcher::{BatchItem, BatchPayload, ReplyResult};
 pub use batcher::BatchReply;
+use reactor::{Completions, Waker};
 
 /// Serving configuration.
 #[derive(Debug, Clone)]
@@ -95,19 +113,29 @@ pub struct ServerConfig {
     pub max_wait_us: u64,
     /// Largest accepted input width.
     pub max_dim: usize,
-    /// Concurrent-connection cap (slowloris guard; excess gets 503).
+    /// Concurrent-connection cap (excess gets a best-effort 503).  The
+    /// event loop multiplexes connections over a few reactor threads,
+    /// so each one costs two buffers, not an OS thread.
     pub max_connections: usize,
+    /// Reactor (event loop) threads sharing the listener via
+    /// `EPOLLEXCLUSIVE`.  The front end is epoll-multiplexed, so a
+    /// couple of threads drive tens of thousands of connections; the
+    /// batcher and pool workers do the heavy lifting.
+    pub reactor_threads: usize,
     /// Supply voltage for the `/metrics` energy model.
     pub vdd: f64,
     /// How long a connection waits for its batch reply; older work is
     /// dropped by the batcher instead of executed.
     pub request_timeout: Duration,
     /// Requests served per keep-alive connection before the server
-    /// closes it (bounds per-connection thread residency).
+    /// closes it (bounds per-connection state residency).
     pub keepalive_max_requests: usize,
     /// How long an idle keep-alive connection is held open waiting for
     /// its next request.
     pub keepalive_idle: Duration,
+    /// How long a fresh connection may take to deliver its first
+    /// request (slowloris guard; also bounds half-sent heads).
+    pub first_byte_timeout: Duration,
     /// Model served by `POST /v1/infer` (loaded from `--weights` by the
     /// CLI).  When set, the shard set's tile width is raised (if needed)
     /// to the model's widest BWHT block; narrower blocks of a mixed
@@ -156,10 +184,12 @@ impl Default for ServerConfig {
             max_wait_us: 200,
             max_dim: 1 << 16,
             max_connections: 512,
+            reactor_threads: 2,
             vdd: 0.8,
             request_timeout: Duration::from_secs(5),
             keepalive_max_requests: 64,
             keepalive_idle: Duration::from_secs(5),
+            first_byte_timeout: Duration::from_secs(10),
             model: None,
             max_infer_batch: 64,
             auto_respawn: true,
@@ -173,10 +203,12 @@ impl Default for ServerConfig {
     }
 }
 
-/// State shared between the accept loop, connection handlers, the
-/// batcher and the metrics exporter.
+/// State shared between the reactors, the batcher and the metrics
+/// exporter.
 pub(crate) struct ServerState {
-    pub admission: Admission,
+    /// Admission gates; `Arc` so connections can hold owned in-flight
+    /// permits across the asynchronous dispatch.
+    pub admission: Arc<Admission>,
     pub e2e_latency: Mutex<LatencyHistogram>,
     /// End-to-end `/v1/infer` latency (enqueue to logits fan-out).
     pub infer_latency: Mutex<LatencyHistogram>,
@@ -198,8 +230,14 @@ pub(crate) struct ServerState {
     pub infer_batches_total: AtomicU64,
     /// Items the batcher discarded because their client timed out.
     pub stale_dropped_total: AtomicU64,
-    /// Currently open connections (slowloris guard).
+    /// Currently open connections across every reactor.
     pub connections: AtomicUsize,
+    /// Lifetime accepted connections.
+    pub connections_accepted: AtomicU64,
+    /// Connections closed by an idle/slowloris/write deadline.
+    pub connections_timed_out: AtomicU64,
+    /// High-water mark of the reused `/metrics` render buffer, in bytes.
+    pub metrics_buf_hwm: AtomicUsize,
     /// Per-shard-slot health flags for `/readyz` (slot-granular, kept
     /// current by the [`ShardSet`] through poison/respawn/shutdown).
     pub slot_health: Arc<Vec<AtomicBool>>,
@@ -228,7 +266,7 @@ impl ServerState {
         monitor: Arc<Monitor>,
     ) -> ServerState {
         ServerState {
-            admission: Admission::new(admission),
+            admission: Arc::new(Admission::new(admission)),
             e2e_latency: Mutex::new(LatencyHistogram::new()),
             infer_latency: Mutex::new(LatencyHistogram::new()),
             shard_metrics,
@@ -243,6 +281,9 @@ impl ServerState {
             infer_batches_total: AtomicU64::new(0),
             stale_dropped_total: AtomicU64::new(0),
             connections: AtomicUsize::new(0),
+            connections_accepted: AtomicU64::new(0),
+            connections_timed_out: AtomicU64::new(0),
+            metrics_buf_hwm: AtomicUsize::new(0),
             slot_health,
             tracer,
             monitor,
@@ -274,17 +315,21 @@ pub struct Server {
     /// Actual bound address (useful with an ephemeral `:0` bind).
     pub addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    accept_thread: JoinHandle<()>,
+    reactor_threads: Vec<JoinHandle<()>>,
+    /// One completion queue (with its eventfd waker) per reactor, kept
+    /// to ring the reactors out of `epoll_wait` at shutdown.
+    completions: Vec<Arc<Completions>>,
     batcher_thread: JoinHandle<Metrics>,
     state: Arc<ServerState>,
 }
 
 impl Server {
-    /// Bind, spawn the batcher and the accept loop, and return.
+    /// Bind, spawn the batcher and the reactor threads, and return.
     pub fn start(config: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(&config.listen)
             .with_context(|| format!("binding {}", config.listen))?;
         let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
 
         // A hosted model only constrains the tile geometry from below:
         // the tile must be at least as wide as the model's widest BWHT
@@ -376,17 +421,36 @@ impl Server {
         });
 
         let shutdown = Arc::new(AtomicBool::new(false));
-        let accept_thread = {
-            let shutdown = Arc::clone(&shutdown);
-            let state = Arc::clone(&state);
-            let config = Arc::new(config);
-            std::thread::spawn(move || accept_loop(listener, batch_tx, state, config, shutdown))
-        };
+        let config = Arc::new(config);
+        let n_reactors = config.reactor_threads.clamp(1, 64);
+        let mut reactor_threads = Vec::with_capacity(n_reactors);
+        let mut completions = Vec::with_capacity(n_reactors);
+        for i in 0..n_reactors {
+            let queue = Arc::new(Completions::new(Waker::new()?));
+            completions.push(Arc::clone(&queue));
+            let reactor = event_loop::Reactor::new(
+                listener.try_clone()?,
+                queue,
+                Arc::clone(&state),
+                Arc::clone(&config),
+                batch_tx.clone(),
+                Arc::clone(&shutdown),
+            )?;
+            reactor_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("reactor-{i}"))
+                    .spawn(move || reactor.run())?,
+            );
+        }
+        // The reactors hold the only live senders now: when they exit at
+        // shutdown, the batcher drains its queue and exits too.
+        drop(batch_tx);
 
         Ok(Server {
             addr,
             shutdown,
-            accept_thread,
+            reactor_threads,
+            completions,
             batcher_thread,
             state,
         })
@@ -397,157 +461,155 @@ impl Server {
         self.state.shard_metrics.merged()
     }
 
-    /// Graceful shutdown: stop accepting, join in-flight connections,
+    /// Graceful shutdown: stop the reactors (closing their connections),
     /// drain the batcher, shut the pool down, and return the merged
     /// worker metrics.
     pub fn shutdown(self) -> Metrics {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the accept() call.
-        let _ = TcpStream::connect(self.addr);
-        let _ = self.accept_thread.join();
+        for queue in &self.completions {
+            queue.waker().wake();
+        }
+        for thread in self.reactor_threads {
+            let _ = thread.join();
+        }
         self.batcher_thread
             .join()
             .expect("batcher thread panicked")
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    batch_tx: Sender<BatchItem>,
-    state: Arc<ServerState>,
-    config: Arc<ServerConfig>,
-    shutdown: Arc<AtomicBool>,
-) {
-    // Handler threads plus a read-half clone of each socket, so shutdown
-    // can wake keep-alive connections parked in a blocking read.
-    let mut connections: Vec<(JoinHandle<()>, TcpStream)> = Vec::new();
-    for incoming in listener.incoming() {
-        if shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        let Ok(stream) = incoming else { continue };
-        // Slowloris guard: admission control only runs once a request
-        // is parsed, so cap raw connections (each costs an OS thread)
-        // before spawning anything.
-        if state.connections.load(Ordering::Acquire) >= config.max_connections.max(1) {
-            let mut stream = stream;
-            let _ = http::Response::json(503, &error_json("too many connections"))
-                .with_header("Retry-After", "1")
-                .write_to(&mut stream);
-            continue;
-        }
-        let Ok(wake_handle) = stream.try_clone() else {
-            continue;
-        };
-        state.connections.fetch_add(1, Ordering::AcqRel);
-        let tx = batch_tx.clone();
-        let state = Arc::clone(&state);
-        let config = Arc::clone(&config);
-        let handle = std::thread::spawn(move || {
-            handle_connection(stream, tx, Arc::clone(&state), config);
-            state.connections.fetch_sub(1, Ordering::AcqRel);
-        });
-        connections.push((handle, wake_handle));
-        connections.retain(|(handle, _)| !handle.is_finished());
-    }
-    for (handle, wake) in connections {
-        // A persistent connection may be idling in read_request for up
-        // to keepalive_idle; closing the read half makes that read
-        // return EOF now while letting an in-flight response finish.
-        let _ = wake.shutdown(std::net::Shutdown::Read);
-        let _ = handle.join();
-    }
-    // `batch_tx` (and every handler clone) is dropped here, which lets
-    // the batcher drain its queue and exit.
+/// What routing one parsed request produced.
+pub(crate) enum RouteOutcome {
+    /// Immediately serializable response (sync endpoints and errors).
+    Response(http::Response),
+    /// The body was rendered into the reactor's reused scratch buffer
+    /// (the `/metrics` fast path): serialize from parts, no body copy.
+    Scratch,
+    /// Admitted work for the batcher; the connection parks until the
+    /// completion queue delivers the reply.
+    Dispatch(Dispatch),
 }
 
-/// Whether a request-read error is an idle-connection timeout (the
-/// socket's read deadline fired) rather than a malformed request.
-fn is_read_timeout(e: &anyhow::Error) -> bool {
-    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-        matches!(
-            io.kind(),
-            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-        )
-    })
+/// An admitted request on its way into the batcher.
+pub(crate) struct Dispatch {
+    pub payload: BatchPayload,
+    pub kind: PendingKind,
+    pub trace: TraceHandle,
+    pub permit: InflightPermit,
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    tx: Sender<BatchItem>,
-    state: Arc<ServerState>,
-    config: Arc<ServerConfig>,
-) {
-    let peer = stream
-        .peer_addr()
-        .map(|a| a.ip())
-        .unwrap_or(IpAddr::V4(Ipv4Addr::LOCALHOST));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    let mut reader = BufReader::new(read_half);
-    let mut writer = stream;
-    // Persistent-connection loop: serve up to `keepalive_max_requests`
-    // requests per connection, closing after `keepalive_idle` without a
-    // new request.  The read timeout applies to the shared socket, so it
-    // also bounds how long a half-sent request can stall the thread.
-    let max_requests = config.keepalive_max_requests.max(1);
-    let mut served = 0usize;
-    while served < max_requests {
-        let idle = if served == 0 {
-            // First request: the client connected to talk; allow the
-            // original (longer) request deadline.
-            Duration::from_secs(10)
-        } else {
-            config.keepalive_idle
-        };
-        let _ = writer.set_read_timeout(Some(idle));
-        let request = match http::read_request(&mut reader) {
-            Ok(None) => return,
-            Ok(Some(request)) => request,
-            Err(e) => {
-                // An idle keep-alive connection timing out is a normal
-                // close, not a protocol error.
-                if !is_read_timeout(&e) {
-                    state.bad_requests.fetch_add(1, Ordering::Relaxed);
-                    let response =
-                        http::Response::json(400, &error_json(&format!("bad request: {e}")));
-                    let _ = response.write_to_with(&mut writer, false);
-                }
-                return;
-            }
-        };
-        served += 1;
-        let keep_alive = request.wants_keep_alive() && served < max_requests;
-        let response = route(&request, peer, &tx, &state, &config);
-        if response.write_to_with(&mut writer, keep_alive).is_err() || !keep_alive {
-            return;
-        }
-    }
+/// Which endpoint a parked connection is waiting on, with what it needs
+/// to render the reply.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PendingKind {
+    Transform,
+    Infer {
+        nested: bool,
+        classes: usize,
+        samples: usize,
+    },
 }
 
-fn route(
-    request: &http::Request,
+/// Route one request.  Synchronous endpoints answer inline; `/metrics`
+/// renders into `scratch` (reused across scrapes); POST endpoints
+/// validate + admit here and hand back a [`Dispatch`] for the batcher.
+pub(crate) fn route_request(
+    req: &http::Req<'_>,
     peer: IpAddr,
-    tx: &Sender<BatchItem>,
     state: &ServerState,
     config: &ServerConfig,
-) -> http::Response {
-    let (path, query) = request.path_and_query();
-    match (request.method.as_str(), path) {
-        ("GET", "/healthz") => http::Response::text(200, "ok\n"),
-        ("GET", "/readyz") => readyz_response(state),
-        ("GET", "/metrics") => http::Response::text(200, &metrics_export::render(state)),
-        ("GET", "/debug/traces") => handle_traces(state, query),
-        ("GET", "/debug/fidelity") => handle_fidelity(state, query),
-        ("POST", "/v1/transform") => handle_transform(request, peer, tx, state, config),
-        ("POST", "/v1/infer") => handle_infer(request, peer, tx, state, config),
+    scratch: &mut String,
+) -> RouteOutcome {
+    let (path, query) = req.path_and_query();
+    match (req.method(), path) {
+        ("GET", "/healthz") => RouteOutcome::Response(http::Response::text(200, "ok\n")),
+        ("GET", "/readyz") => RouteOutcome::Response(readyz_response(state)),
+        ("GET", "/metrics") => {
+            metrics_export::render_into(state, scratch);
+            RouteOutcome::Scratch
+        }
+        ("GET", "/debug/traces") => RouteOutcome::Response(handle_traces(state, query)),
+        ("GET", "/debug/fidelity") => RouteOutcome::Response(handle_fidelity(state, query)),
+        ("POST", "/v1/transform") => match transform_dispatch(req, peer, state, config) {
+            Ok(dispatch) => RouteOutcome::Dispatch(dispatch),
+            Err(response) => RouteOutcome::Response(response),
+        },
+        ("POST", "/v1/infer") => match infer_dispatch(req, peer, state, config) {
+            Ok(dispatch) => RouteOutcome::Dispatch(dispatch),
+            Err(response) => RouteOutcome::Response(response),
+        },
         (_, "/v1/transform") | (_, "/v1/infer") | (_, "/metrics") | (_, "/healthz")
         | (_, "/readyz") | (_, "/debug/traces") | (_, "/debug/fidelity") => {
-            http::Response::json(405, &error_json("method not allowed"))
+            RouteOutcome::Response(http::Response::json(405, &error_json("method not allowed")))
         }
-        _ => http::Response::json(404, &error_json("not found")),
+        _ => RouteOutcome::Response(http::Response::json(404, &error_json("not found"))),
+    }
+}
+
+/// Render the reply for a parked request once its completion arrives.
+/// `result` is `None` when the batcher dropped the item (stale shed) or
+/// the in-flight deadline fired first — a 504 either way, exactly like
+/// the old blocking handler's `recv_timeout` path.
+pub(crate) fn render_reply(
+    kind: PendingKind,
+    result: Option<ReplyResult>,
+    state: &ServerState,
+) -> http::Response {
+    match kind {
+        PendingKind::Transform => match result {
+            Some(Ok(reply)) => {
+                state.requests_ok.fetch_add(1, Ordering::Relaxed);
+                let mut obj = BTreeMap::new();
+                obj.insert(
+                    "y".to_string(),
+                    Json::Arr(reply.values.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+                obj.insert(
+                    "padded_dim".to_string(),
+                    Json::Num(reply.values.len() as f64),
+                );
+                obj.insert(
+                    "latency_us".to_string(),
+                    Json::Num(reply.latency.as_micros() as f64),
+                );
+                http::Response::json(200, &Json::Obj(obj))
+            }
+            Some(Err(message)) => http::Response::json(500, &error_json(&message)),
+            None => http::Response::json(504, &error_json("timed out waiting for the tile pool")),
+        },
+        PendingKind::Infer {
+            nested,
+            classes,
+            samples,
+        } => match result {
+            Some(Ok(reply)) => {
+                state.infer_requests_ok.fetch_add(1, Ordering::Relaxed);
+                let logits_json = if nested {
+                    Json::Arr(
+                        reply
+                            .values
+                            .chunks_exact(classes)
+                            .map(|row| {
+                                Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect())
+                            })
+                            .collect(),
+                    )
+                } else {
+                    Json::Arr(reply.values.iter().map(|&v| Json::Num(v as f64)).collect())
+                };
+                let mut obj = BTreeMap::new();
+                obj.insert("logits".to_string(), logits_json);
+                obj.insert("classes".to_string(), Json::Num(classes as f64));
+                obj.insert("samples".to_string(), Json::Num(samples as f64));
+                obj.insert(
+                    "latency_us".to_string(),
+                    Json::Num(reply.latency.as_micros() as f64),
+                );
+                http::Response::json(200, &Json::Obj(obj))
+            }
+            Some(Err(message)) => http::Response::json(500, &error_json(&message)),
+            None => http::Response::json(504, &error_json("timed out waiting for the model")),
+        },
     }
 }
 
@@ -608,7 +670,7 @@ fn handle_fidelity(state: &ServerState, query: &str) -> http::Response {
     http::Response::json(200, &state.monitor.fidelity_json(n))
 }
 
-fn error_json(message: &str) -> Json {
+pub(crate) fn error_json(message: &str) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("error".to_string(), Json::Str(message.to_string()));
     Json::Obj(obj)
@@ -619,120 +681,99 @@ fn bad_request(state: &ServerState, message: &str) -> http::Response {
     http::Response::json(400, &error_json(message))
 }
 
-/// Parse, admit, enqueue into the batcher, and wait for the reply.
-fn handle_transform(
-    request: &http::Request,
+/// Admit a parsed request, mapping rejections to 429s.
+fn admit(
+    state: &ServerState,
     peer: IpAddr,
-    tx: &Sender<BatchItem>,
+) -> std::result::Result<InflightPermit, http::Response> {
+    match state.admission.try_acquire(peer, Instant::now()) {
+        Ok(permit) => Ok(permit),
+        Err(Rejection::Overloaded) => Err(http::Response::json(
+            429,
+            &error_json("overloaded: in-flight limit reached"),
+        )
+        .with_header("Retry-After", "1")),
+        Err(Rejection::RateLimited) => {
+            Err(http::Response::json(429, &error_json("rate limited"))
+                .with_header("Retry-After", "1"))
+        }
+    }
+}
+
+/// Parse + admit one `POST /v1/transform`; the event loop enqueues the
+/// returned dispatch and parks the connection.
+fn transform_dispatch(
+    req: &http::Req<'_>,
+    peer: IpAddr,
     state: &ServerState,
     config: &ServerConfig,
-) -> http::Response {
+) -> std::result::Result<Dispatch, http::Response> {
     let t0 = Instant::now();
-    let body = match request.body_str() {
-        Ok(s) => s,
-        Err(_) => return bad_request(state, "body must be UTF-8 JSON"),
-    };
-    let parsed = match json::parse(body) {
-        Ok(v) => v,
-        Err(e) => return bad_request(state, &format!("invalid JSON: {e}")),
-    };
+    let body = req
+        .body_str()
+        .map_err(|_| bad_request(state, "body must be UTF-8 JSON"))?;
+    let parsed = json::parse(body)
+        .map_err(|e| bad_request(state, &format!("invalid JSON: {e}")))?;
     let Some(xs) = parsed.get("x").and_then(Json::as_arr) else {
-        return bad_request(state, "missing \"x\" array");
+        return Err(bad_request(state, "missing \"x\" array"));
     };
     if xs.is_empty() {
-        return bad_request(state, "\"x\" must be non-empty");
+        return Err(bad_request(state, "\"x\" must be non-empty"));
     }
     if xs.len() > config.max_dim {
-        return bad_request(
+        return Err(bad_request(
             state,
             &format!(
                 "\"x\" has {} elements; the limit is {}",
                 xs.len(),
                 config.max_dim
             ),
-        );
+        ));
     }
     let mut x = Vec::with_capacity(xs.len());
     for v in xs {
         match v.as_f64() {
             Some(f) if f.is_finite() => x.push(f as f32),
-            _ => return bad_request(state, "\"x\" must contain finite numbers"),
+            _ => return Err(bad_request(state, "\"x\" must contain finite numbers")),
         }
     }
     let thresholds_units = match parsed.get("thresholds") {
         None => vec![0.0; x.len()],
         Some(t) => {
             let Some(arr) = t.as_arr() else {
-                return bad_request(state, "\"thresholds\" must be an array");
+                return Err(bad_request(state, "\"thresholds\" must be an array"));
             };
             if arr.len() != x.len() {
-                return bad_request(state, "\"thresholds\" length must match \"x\"");
+                return Err(bad_request(state, "\"thresholds\" length must match \"x\""));
             }
             let mut th = Vec::with_capacity(arr.len());
             for v in arr {
                 match v.as_f64() {
                     Some(f) if f.is_finite() => th.push(f.abs()),
-                    _ => return bad_request(state, "\"thresholds\" must contain finite numbers"),
+                    _ => {
+                        return Err(bad_request(
+                            state,
+                            "\"thresholds\" must contain finite numbers",
+                        ))
+                    }
                 }
             }
             th
         }
     };
 
-    let permit = match state.admission.try_acquire(peer, Instant::now()) {
-        Ok(p) => p,
-        Err(Rejection::Overloaded) => {
-            return http::Response::json(429, &error_json("overloaded: in-flight limit reached"))
-                .with_header("Retry-After", "1");
-        }
-        Err(Rejection::RateLimited) => {
-            return http::Response::json(429, &error_json("rate limited"))
-                .with_header("Retry-After", "1");
-        }
-    };
-
+    let permit = admit(state, peer)?;
     let trace = trace_admitted(state, "/v1/transform", t0);
-    let (reply_tx, reply_rx) = mpsc::channel();
-    let item = BatchItem {
+    Ok(Dispatch {
         payload: BatchPayload::Transform(TransformRequest {
             x,
             thresholds_units,
             scale: None,
         }),
-        reply: reply_tx,
-        enqueued: Instant::now(),
-        trace: trace.clone(),
-    };
-    if tx.send(item).is_err() {
-        state.tracer.finish(trace);
-        return http::Response::json(503, &error_json("server shutting down"));
-    }
-    let result = reply_rx.recv_timeout(config.request_timeout);
-    let respond_start = if trace.is_active() { trace::now_us() } else { 0 };
-    let response = match result {
-        Ok(Ok(reply)) => {
-            state.requests_ok.fetch_add(1, Ordering::Relaxed);
-            let mut obj = BTreeMap::new();
-            obj.insert(
-                "y".to_string(),
-                Json::Arr(reply.values.iter().map(|&v| Json::Num(v as f64)).collect()),
-            );
-            obj.insert(
-                "padded_dim".to_string(),
-                Json::Num(reply.values.len() as f64),
-            );
-            obj.insert(
-                "latency_us".to_string(),
-                Json::Num(reply.latency.as_micros() as f64),
-            );
-            http::Response::json(200, &Json::Obj(obj))
-        }
-        Ok(Err(message)) => http::Response::json(500, &error_json(&message)),
-        Err(_) => http::Response::json(504, &error_json("timed out waiting for the tile pool")),
-    };
-    finish_trace(state, trace, respond_start);
-    drop(permit);
-    response
+        kind: PendingKind::Transform,
+        trace,
+        permit,
+    })
 }
 
 /// Mint the request's trace handle right after admission and record the
@@ -748,7 +789,7 @@ fn trace_admitted(state: &ServerState, endpoint: &'static str, t0: Instant) -> T
 
 /// Record the respond span (reply received → response serialized) and
 /// retire the trace into the recent-trace ring.
-fn finish_trace(state: &ServerState, trace: TraceHandle, respond_start: u64) {
+pub(crate) fn finish_trace(state: &ServerState, trace: TraceHandle, respond_start: u64) {
     if trace.is_active() {
         trace.record(
             Stage::Respond,
@@ -760,7 +801,7 @@ fn finish_trace(state: &ServerState, trace: TraceHandle, respond_start: u64) {
 }
 
 /// Parse one finite-f32 row out of a JSON array.
-fn parse_row(values: &[Json], din: usize) -> Result<Vec<f32>, String> {
+fn parse_row(values: &[Json], din: usize) -> std::result::Result<Vec<f32>, String> {
     if values.len() != din {
         return Err(format!(
             "each sample needs {din} features, got {}",
@@ -777,42 +818,38 @@ fn parse_row(values: &[Json], din: usize) -> Result<Vec<f32>, String> {
     Ok(row)
 }
 
-/// Parse, admit, enqueue into the batcher, and reply with model logits.
+/// Parse + admit one `POST /v1/infer`.
 ///
 /// Accepts `{"x": [f, ...]}` (one sample, flat logits back) or
 /// `{"x": [[f, ...], ...]}` (a batch, nested logits back).  The batcher
 /// coalesces concurrent infer requests into one model forward whose BWHT
 /// transforms scatter–gather across the shard set.
-fn handle_infer(
-    request: &http::Request,
+fn infer_dispatch(
+    req: &http::Req<'_>,
     peer: IpAddr,
-    tx: &Sender<BatchItem>,
     state: &ServerState,
     config: &ServerConfig,
-) -> http::Response {
+) -> std::result::Result<Dispatch, http::Response> {
     let t0 = Instant::now();
     let Some(model) = &config.model else {
-        return http::Response::json(
+        return Err(http::Response::json(
             503,
             &error_json("no model loaded; start the server with --weights PATH"),
-        );
+        ));
     };
     let din = model.din();
     let classes = model.classes;
 
-    let body = match request.body_str() {
-        Ok(s) => s,
-        Err(_) => return bad_request(state, "body must be UTF-8 JSON"),
-    };
-    let parsed = match json::parse(body) {
-        Ok(v) => v,
-        Err(e) => return bad_request(state, &format!("invalid JSON: {e}")),
-    };
+    let body = req
+        .body_str()
+        .map_err(|_| bad_request(state, "body must be UTF-8 JSON"))?;
+    let parsed = json::parse(body)
+        .map_err(|e| bad_request(state, &format!("invalid JSON: {e}")))?;
     let Some(xs) = parsed.get("x").and_then(Json::as_arr) else {
-        return bad_request(state, "missing \"x\" array");
+        return Err(bad_request(state, "missing \"x\" array"));
     };
     if xs.is_empty() {
-        return bad_request(state, "\"x\" must be non-empty");
+        return Err(bad_request(state, "\"x\" must be non-empty"));
     }
 
     // Shape sniff: an array of arrays is a batch; an array of numbers is
@@ -821,89 +858,45 @@ fn handle_infer(
     let mut x = Vec::new();
     let samples = if nested {
         if xs.len() > config.max_infer_batch.max(1) {
-            return bad_request(
+            return Err(bad_request(
                 state,
                 &format!(
                     "batch of {} samples exceeds the limit of {}",
                     xs.len(),
                     config.max_infer_batch.max(1)
                 ),
-            );
+            ));
         }
         for row in xs {
             let Some(row) = row.as_arr() else {
-                return bad_request(state, "\"x\" rows must all be arrays");
+                return Err(bad_request(state, "\"x\" rows must all be arrays"));
             };
             match parse_row(row, din) {
                 Ok(mut r) => x.append(&mut r),
-                Err(e) => return bad_request(state, &e),
+                Err(e) => return Err(bad_request(state, &e)),
             }
         }
         xs.len()
     } else {
         match parse_row(xs, din) {
             Ok(r) => x = r,
-            Err(e) => return bad_request(state, &e),
+            Err(e) => return Err(bad_request(state, &e)),
         }
         1
     };
 
-    let permit = match state.admission.try_acquire(peer, Instant::now()) {
-        Ok(p) => p,
-        Err(Rejection::Overloaded) => {
-            return http::Response::json(429, &error_json("overloaded: in-flight limit reached"))
-                .with_header("Retry-After", "1");
-        }
-        Err(Rejection::RateLimited) => {
-            return http::Response::json(429, &error_json("rate limited"))
-                .with_header("Retry-After", "1");
-        }
-    };
-
+    let permit = admit(state, peer)?;
     let trace = trace_admitted(state, "/v1/infer", t0);
-    let (reply_tx, reply_rx) = mpsc::channel();
-    let item = BatchItem {
+    Ok(Dispatch {
         payload: BatchPayload::Infer { x, samples },
-        reply: reply_tx,
-        enqueued: Instant::now(),
-        trace: trace.clone(),
-    };
-    if tx.send(item).is_err() {
-        state.tracer.finish(trace);
-        return http::Response::json(503, &error_json("server shutting down"));
-    }
-    let result = reply_rx.recv_timeout(config.request_timeout);
-    let respond_start = if trace.is_active() { trace::now_us() } else { 0 };
-    let response = match result {
-        Ok(Ok(reply)) => {
-            state.infer_requests_ok.fetch_add(1, Ordering::Relaxed);
-            let logits_json = if nested {
-                Json::Arr(
-                    reply
-                        .values
-                        .chunks_exact(classes)
-                        .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v as f64)).collect()))
-                        .collect(),
-                )
-            } else {
-                Json::Arr(reply.values.iter().map(|&v| Json::Num(v as f64)).collect())
-            };
-            let mut obj = BTreeMap::new();
-            obj.insert("logits".to_string(), logits_json);
-            obj.insert("classes".to_string(), Json::Num(classes as f64));
-            obj.insert("samples".to_string(), Json::Num(samples as f64));
-            obj.insert(
-                "latency_us".to_string(),
-                Json::Num(reply.latency.as_micros() as f64),
-            );
-            http::Response::json(200, &Json::Obj(obj))
-        }
-        Ok(Err(message)) => http::Response::json(500, &error_json(&message)),
-        Err(_) => http::Response::json(504, &error_json("timed out waiting for the model")),
-    };
-    finish_trace(state, trace, respond_start);
-    drop(permit);
-    response
+        kind: PendingKind::Infer {
+            nested,
+            classes,
+            samples,
+        },
+        trace,
+        permit,
+    })
 }
 
 #[cfg(test)]
@@ -987,5 +980,79 @@ mod tests {
         let chrome = handle_traces(&state, "n=8&format=chrome");
         let parsed = json::parse(std::str::from_utf8(&chrome.body).unwrap()).unwrap();
         assert!(parsed.get("traceEvents").and_then(Json::as_arr).is_some());
+    }
+
+    #[test]
+    fn route_request_parses_and_admits_through_the_dispatch_seam() {
+        let state = test_state(vec![true]);
+        let config = ServerConfig::default();
+        let peer = IpAddr::V4(std::net::Ipv4Addr::LOCALHOST);
+        let mut scratch = String::new();
+        let raw = |body: &str| {
+            format!(
+                "POST /v1/transform HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+        };
+        let route = |raw: &str, scratch: &mut String| {
+            let mut buf = raw.as_bytes().to_vec();
+            let mut head = http::Head::default();
+            assert_eq!(head.parse(&mut buf).unwrap(), http::Parse::Complete);
+            let req = head.req(&buf);
+            route_request(&req, peer, &state, &config, scratch)
+        };
+        // A valid body dispatches with a held permit.
+        let outcome = route(&raw(r#"{"x": [0.5, -0.25]}"#), &mut scratch);
+        let RouteOutcome::Dispatch(dispatch) = outcome else {
+            panic!("valid transform must dispatch");
+        };
+        assert!(matches!(dispatch.kind, PendingKind::Transform));
+        assert_eq!(state.admission.inflight(), 1);
+        drop(dispatch);
+        assert_eq!(state.admission.inflight(), 0, "permit released on drop");
+        // Bad JSON answers 400 inline and counts.
+        let outcome = route(&raw("this is not json"), &mut scratch);
+        let RouteOutcome::Response(resp) = outcome else {
+            panic!("bad JSON must answer inline");
+        };
+        assert_eq!(resp.status, 400);
+        assert_eq!(state.bad_requests.load(Ordering::Relaxed), 1);
+        // /metrics renders into the reused scratch buffer.
+        let outcome = route("GET /metrics HTTP/1.1\r\n\r\n", &mut scratch);
+        assert!(matches!(outcome, RouteOutcome::Scratch));
+        assert!(scratch.contains("repro_connections_open"), "{scratch}");
+    }
+
+    #[test]
+    fn render_reply_maps_outcomes_to_statuses_and_counters() {
+        let state = test_state(vec![true]);
+        let ok = render_reply(
+            PendingKind::Transform,
+            Some(Ok(BatchReply {
+                values: vec![1.0, -1.0],
+                latency: Duration::from_micros(7),
+            })),
+            &state,
+        );
+        assert_eq!(ok.status, 200);
+        assert_eq!(state.requests_ok.load(Ordering::Relaxed), 1);
+        let body = json::parse(std::str::from_utf8(&ok.body).unwrap()).unwrap();
+        assert_eq!(body.get("padded_dim").and_then(Json::as_f64), Some(2.0));
+        let failed = render_reply(PendingKind::Transform, Some(Err("boom".into())), &state);
+        assert_eq!(failed.status, 500);
+        let timed_out = render_reply(PendingKind::Transform, None, &state);
+        assert_eq!(timed_out.status, 504);
+        assert!(std::str::from_utf8(&timed_out.body).unwrap().contains("tile pool"));
+        let infer_timeout = render_reply(
+            PendingKind::Infer {
+                nested: false,
+                classes: 3,
+                samples: 1,
+            },
+            None,
+            &state,
+        );
+        assert!(std::str::from_utf8(&infer_timeout.body).unwrap().contains("model"));
+        assert_eq!(state.requests_ok.load(Ordering::Relaxed), 1, "only the 200 counted");
     }
 }

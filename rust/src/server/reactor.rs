@@ -1,0 +1,418 @@
+//! Readiness primitives for the event-driven serving core.
+//!
+//! The build box is offline (no tokio/mio/libc crates), so this module
+//! binds the three syscalls the reactor needs — `epoll`, `eventfd` and
+//! raw `read`/`write` on the eventfd — directly against the platform
+//! libc, and layers the small abstractions the connection state
+//! machine composes:
+//!
+//! * [`Epoll`] — a level-triggered epoll instance.  Level-triggered
+//!   keeps the state machine simple (no drain-to-`EAGAIN` obligations
+//!   on every wakeup); write interest is registered only while a
+//!   response is partially flushed, so the loop never spins on
+//!   always-writable sockets.
+//! * [`Waker`] — an `eventfd` that other threads (the batcher, via
+//!   [`Completions`]) ring to get the reactor out of `epoll_wait`.
+//! * [`TimerWheel`] — a coarse hashed wheel for idle/slowloris/request
+//!   deadlines.  Entries are *hints* `(slot, gen)`; the reactor
+//!   validates them against the connection's live deadline at expiry
+//!   and re-arms if the deadline moved, so stale hints are harmless
+//!   and cancellation is free.
+//! * [`Completions`] — the asynchronous reply path: the batcher pushes
+//!   a completion token + result and rings the waker; the reactor
+//!   drains the queue and resumes the owning connection.
+//!
+//! Everything here is `std`-only; the `unsafe` is confined to the
+//! syscall shims in [`sys`].
+
+use std::io;
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Raw syscall bindings.  Signatures mirror the glibc prototypes; all
+/// callers live in this module.
+mod sys {
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLLEXCLUSIVE: u32 = 1 << 28;
+
+    pub const EFD_CLOEXEC: i32 = 0o2000000;
+    pub const EFD_NONBLOCK: i32 = 0o4000;
+
+    /// Matches the kernel ABI: packed on x86-64, natural elsewhere.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn eventfd(initval: u32, flags: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut core::ffi::c_void, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const core::ffi::c_void, count: usize) -> isize;
+    }
+}
+
+/// Readiness interest/event bits, re-exported for the event loop.
+pub mod interest {
+    pub const READ: u32 = super::sys::EPOLLIN | super::sys::EPOLLRDHUP;
+    pub const WRITE: u32 = super::sys::EPOLLOUT;
+    /// No readiness interest; errors/hangups are still delivered.
+    pub const NONE: u32 = 0;
+}
+
+/// One decoded readiness event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer shut down its write half (`EPOLLRDHUP`): reads will drain
+    /// to EOF, writes may still succeed.
+    pub rdhup: bool,
+    /// Hard error or full hangup (`EPOLLERR`/`EPOLLHUP`).
+    pub error: bool,
+}
+
+const MAX_EVENTS: usize = 256;
+
+/// A level-triggered epoll instance.
+pub struct Epoll {
+    fd: OwnedFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.fd.as_raw_fd(), op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Register a listener shared by several reactor threads:
+    /// `EPOLLEXCLUSIVE` wakes one waiter per connection burst instead
+    /// of thundering every reactor.
+    pub fn add_exclusive(&self, fd: RawFd, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, sys::EPOLLIN | sys::EPOLLEXCLUSIVE, token)
+    }
+
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for readiness, decoding into `out` (cleared first).
+    /// `timeout` of `None` blocks indefinitely.  EINTR reads as an
+    /// empty wakeup.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let timeout_ms: i32 = match timeout {
+            // Round up so a 0.4ms deadline doesn't busy-poll at 0ms.
+            Some(t) => t.as_millis().saturating_add(1).min(i32::MAX as u128) as i32,
+            None => -1,
+        };
+        let mut buf = [sys::EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+        let n = unsafe {
+            sys::epoll_wait(self.fd.as_raw_fd(), buf.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms)
+        };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(err);
+        }
+        for ev in buf.iter().take(n as usize) {
+            // Copy out of the (possibly packed) struct before use.
+            let bits = ev.events;
+            let token = ev.data;
+            out.push(Event {
+                token,
+                readable: bits & sys::EPOLLIN != 0,
+                writable: bits & sys::EPOLLOUT != 0,
+                rdhup: bits & sys::EPOLLRDHUP != 0,
+                error: bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Cross-thread wakeup for a blocked `epoll_wait`, built on `eventfd`.
+pub struct Waker {
+    fd: OwnedFd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { fd: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    pub fn as_raw_fd(&self) -> RawFd {
+        self.fd.as_raw_fd()
+    }
+
+    /// Ring the waker.  Idempotent while unread (the eventfd counter
+    /// saturates); failure is impossible short of fd exhaustion, and
+    /// then the reactor's periodic timeout still delivers progress.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        unsafe {
+            sys::write(self.fd.as_raw_fd(), (&one as *const u64).cast(), 8);
+        }
+    }
+
+    /// Clear the pending wakeup count.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        unsafe {
+            sys::read(self.fd.as_raw_fd(), (&mut buf as *mut u64).cast(), 8);
+        }
+    }
+}
+
+/// Coarse hashed timer wheel: buckets of `(slot, gen)` hints.
+///
+/// Insertion rounds deadlines *up* to the next bucket boundary, so a
+/// hint never fires before its deadline; deadlines beyond the wheel
+/// horizon clamp to the last bucket and simply get revalidated (and
+/// re-armed) early.  The reactor re-checks the owning connection's
+/// actual deadline when a hint fires, which makes re-arming a deadline
+/// (every request on a keep-alive connection) free: the stale hint is
+/// ignored when it surfaces.
+pub struct TimerWheel {
+    buckets: Vec<Vec<(u32, u16)>>,
+    granularity: Duration,
+    cursor: usize,
+    /// Start time of the bucket at `cursor`.
+    cursor_time: Instant,
+}
+
+impl TimerWheel {
+    pub fn new(granularity: Duration, buckets: usize, now: Instant) -> TimerWheel {
+        assert!(buckets >= 2 && granularity > Duration::ZERO);
+        TimerWheel {
+            buckets: (0..buckets).map(|_| Vec::new()).collect(),
+            granularity,
+            cursor: 0,
+            cursor_time: now,
+        }
+    }
+
+    /// Arm a hint for `deadline`.
+    pub fn insert(&mut self, deadline: Instant, slot: u32, gen: u16) {
+        let delta = deadline.saturating_duration_since(self.cursor_time);
+        let gran = self.granularity.as_nanos().max(1);
+        let ticks = (delta.as_nanos().div_ceil(gran)).max(1) as usize;
+        let ticks = ticks.min(self.buckets.len() - 1);
+        let idx = (self.cursor + ticks) % self.buckets.len();
+        self.buckets[idx].push((slot, gen));
+    }
+
+    /// Advance the wheel to `now`, draining expired hints into `out`.
+    pub fn advance(&mut self, now: Instant, out: &mut Vec<(u32, u16)>) {
+        while now.saturating_duration_since(self.cursor_time) >= self.granularity {
+            self.cursor_time += self.granularity;
+            self.cursor = (self.cursor + 1) % self.buckets.len();
+            out.append(&mut self.buckets[self.cursor]);
+        }
+    }
+
+    /// Time until the nearest armed hint could fire, if any.
+    pub fn next_timeout(&self, now: Instant) -> Option<Duration> {
+        let n = self.buckets.len();
+        (1..n)
+            .find(|off| !self.buckets[(self.cursor + off) % n].is_empty())
+            .map(|off| {
+                let fires = self.cursor_time + self.granularity * off as u32;
+                fires.saturating_duration_since(now)
+            })
+    }
+}
+
+/// One asynchronous reply routed back into a reactor.
+pub struct Completion {
+    /// Packed `(slot, gen, seq)` minted by the dispatching connection.
+    pub token: u64,
+    /// `None` when the batcher dropped the reply without sending (the
+    /// stale-shed path) — surfaced to the client as a 504.
+    pub result: Option<crate::server::batcher::ReplyResult>,
+}
+
+/// The batcher-to-reactor completion queue: a mutexed vector plus the
+/// reactor's waker.  Contention is one short critical section per
+/// reply on each side.
+pub struct Completions {
+    queue: Mutex<Vec<Completion>>,
+    waker: Waker,
+}
+
+impl Completions {
+    pub fn new(waker: Waker) -> Completions {
+        Completions { queue: Mutex::new(Vec::new()), waker }
+    }
+
+    pub fn waker(&self) -> &Waker {
+        &self.waker
+    }
+
+    /// Push a completion and ring the reactor (only on the empty→
+    /// non-empty edge: one wake covers a whole batch fan-out).
+    pub fn push(&self, completion: Completion) {
+        let was_empty = {
+            let mut queue = self.queue.lock().unwrap();
+            let was_empty = queue.is_empty();
+            queue.push(completion);
+            was_empty
+        };
+        if was_empty {
+            self.waker.wake();
+        }
+    }
+
+    /// Move all pending completions into `out` (appended).
+    pub fn drain_into(&self, out: &mut Vec<Completion>) {
+        out.append(&mut self.queue.lock().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn waker_rings_epoll() {
+        let epoll = Epoll::new().unwrap();
+        let waker = Waker::new().unwrap();
+        epoll.add(waker.as_raw_fd(), interest::READ, 7).unwrap();
+        let mut events = Vec::new();
+        // Nothing pending: times out empty.
+        epoll.wait(&mut events, Some(Duration::from_millis(1))).unwrap();
+        assert!(events.is_empty());
+        waker.wake();
+        waker.wake(); // coalesces
+        epoll.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        waker.drain();
+        epoll.wait(&mut events, Some(Duration::from_millis(1))).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn epoll_reports_socket_readiness_and_interest_changes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let epoll = Epoll::new().unwrap();
+        epoll.add(server.as_raw_fd(), interest::READ, 1).unwrap();
+        let mut events = Vec::new();
+        epoll.wait(&mut events, Some(Duration::from_millis(1))).unwrap();
+        assert!(events.is_empty(), "no data yet");
+
+        use std::io::Write as _;
+        client.write_all(b"ping").unwrap();
+        epoll.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+
+        // Switch to write interest: an idle socket is instantly writable.
+        epoll.modify(server.as_raw_fd(), interest::WRITE, 2).unwrap();
+        epoll.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert!(events.iter().any(|e| e.token == 2 && e.writable));
+
+        // Peer close surfaces as rdhup once read interest is back.
+        epoll.modify(server.as_raw_fd(), interest::READ, 3).unwrap();
+        drop(client);
+        epoll.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && (e.rdhup || e.readable)));
+
+        epoll.delete(server.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn timer_wheel_fires_hints_no_earlier_than_their_deadline() {
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(Duration::from_millis(10), 64, t0);
+        wheel.insert(t0 + Duration::from_millis(25), 3, 1);
+        let mut fired = Vec::new();
+        wheel.advance(t0 + Duration::from_millis(20), &mut fired);
+        assert!(fired.is_empty(), "hint must not fire before its deadline");
+        wheel.advance(t0 + Duration::from_millis(40), &mut fired);
+        assert_eq!(fired, vec![(3, 1)]);
+        // Beyond-horizon deadlines clamp and fire early (reactor
+        // revalidates and re-arms).
+        wheel.insert(t0 + Duration::from_secs(3600), 9, 2);
+        assert!(wheel.next_timeout(t0 + Duration::from_millis(40)).is_some());
+        fired.clear();
+        wheel.advance(t0 + Duration::from_millis(700), &mut fired);
+        assert_eq!(fired, vec![(9, 2)]);
+    }
+
+    #[test]
+    fn timer_wheel_next_timeout_tracks_nearest_bucket() {
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(Duration::from_millis(10), 64, t0);
+        assert!(wheel.next_timeout(t0).is_none());
+        wheel.insert(t0 + Duration::from_millis(50), 1, 1);
+        let next = wheel.next_timeout(t0).unwrap();
+        assert!(next >= Duration::from_millis(40) && next <= Duration::from_millis(60));
+    }
+
+    #[test]
+    fn completions_wake_once_per_batch() {
+        let completions = Completions::new(Waker::new().unwrap());
+        let epoll = Epoll::new().unwrap();
+        epoll
+            .add(completions.waker().as_raw_fd(), interest::READ, 0)
+            .unwrap();
+        completions.push(Completion { token: 1, result: None });
+        completions.push(Completion { token: 2, result: None });
+        let mut events = Vec::new();
+        epoll.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert_eq!(events.len(), 1);
+        let mut out = Vec::new();
+        completions.drain_into(&mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].token, 1);
+    }
+}

@@ -1,0 +1,272 @@
+//! Malformed-framing and connection-lifecycle coverage for the epoll
+//! front end: oversized header blocks, bad/absent `Content-Length`,
+//! partial-header stalls against the first-byte timeout, pipelined
+//! back-to-back requests, and HTTP/1.0 close-by-default semantics.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use repro::server::{Server, ServerConfig};
+
+fn start_default() -> Server {
+    Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .expect("server start")
+}
+
+/// Write raw bytes, then read until the server closes the connection.
+fn raw_roundtrip(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream.write_all(raw).unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read response");
+    buf
+}
+
+fn status_of(response: &str) -> u16 {
+    response
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status")
+}
+
+/// Read one framed HTTP response off a persistent connection.
+fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("header line");
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().expect("content length");
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    (status, String::from_utf8(body).expect("utf-8 body"))
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|line| {
+            let rest = line.strip_prefix(name)?;
+            let rest = rest.strip_prefix(' ')?;
+            rest.trim().parse::<f64>().ok()
+        })
+        .unwrap_or(f64::NAN)
+}
+
+fn scrape_metrics(addr: SocketAddr) -> String {
+    let response = raw_roundtrip(
+        addr,
+        b"GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status_of(&response), 200);
+    response.split("\r\n\r\n").nth(1).unwrap_or("").to_string()
+}
+
+/// Write `first` (which must keep the server below its framing caps),
+/// give the reactor time to consume it, then write `second` (which
+/// crosses a cap) and read the rejection.  The pause guarantees the
+/// server has drained everything it was sent before it errors, so the
+/// 400 arrives on a clean close instead of being lost to a reset.
+fn paced_rejection(addr: SocketAddr, first: &[u8], second: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream.write_all(first).unwrap();
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let _ = stream.write_all(second);
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read response");
+    buf
+}
+
+#[test]
+fn oversized_header_block_is_rejected_with_400() {
+    let server = start_default();
+    let addr = server.addr;
+
+    // Well-formed header lines whose total crosses the 16 KiB cap.
+    let mut under_cap = b"GET /healthz HTTP/1.1\r\n".to_vec();
+    for i in 0..170 {
+        under_cap.extend_from_slice(format!("X-Pad-{i}: {}\r\n", "a".repeat(80)).as_bytes());
+    }
+    let mut over_cap = Vec::new();
+    for i in 170..220 {
+        over_cap.extend_from_slice(format!("X-Pad-{i}: {}\r\n", "a".repeat(80)).as_bytes());
+    }
+    over_cap.extend_from_slice(b"\r\n");
+    let response = paced_rejection(addr, &under_cap, &over_cap);
+    assert_eq!(status_of(&response), 400, "{response}");
+    assert!(response.contains("bad request"), "{response}");
+
+    // A newline-free flood must also error at the cap instead of
+    // buffering without bound.
+    let flood = vec![b'A'; 15 << 10];
+    let tail = vec![b'A'; 4 << 10];
+    let response = paced_rejection(addr, &flood, &tail);
+    assert_eq!(status_of(&response), 400, "{response}");
+
+    let metrics = scrape_metrics(addr);
+    assert!(
+        metric_value(&metrics, "repro_http_bad_requests_total") >= 2.0,
+        "{metrics}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn bad_and_oversized_content_length_are_rejected() {
+    let server = start_default();
+    let addr = server.addr;
+
+    let response = raw_roundtrip(
+        addr,
+        b"POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: banana\r\n\r\n",
+    );
+    assert_eq!(status_of(&response), 400, "{response}");
+    assert!(response.contains("Content-Length"), "{response}");
+
+    let huge = format!(
+        "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        1u64 << 30
+    );
+    let response = raw_roundtrip(addr, huge.as_bytes());
+    assert_eq!(status_of(&response), 400, "{response}");
+    server.shutdown();
+}
+
+#[test]
+fn post_without_content_length_reads_as_empty_body() {
+    let server = start_default();
+    let addr = server.addr;
+    // No Content-Length: the framed body is empty, which fails JSON
+    // parsing in the handler — a clean 400, not a hang or a 500.
+    let response = raw_roundtrip(
+        addr,
+        b"POST /v1/transform HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(status_of(&response), 400, "{response}");
+    server.shutdown();
+}
+
+#[test]
+fn partial_header_stall_hits_the_first_byte_timeout_silently() {
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        first_byte_timeout: Duration::from_millis(150),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    // A slowloris-style stall: half a request line, then silence.
+    stream.write_all(b"GET /healthz HT").unwrap();
+    let start = Instant::now();
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).expect("server closes");
+    assert!(rest.is_empty(), "stalled connection must close silently");
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "close must come from the timeout wheel, not the read deadline"
+    );
+
+    let metrics = scrape_metrics(addr);
+    assert!(
+        metric_value(&metrics, "repro_connections_timed_out_total") >= 1.0,
+        "{metrics}"
+    );
+    assert!(
+        metric_value(&metrics, "repro_connections_accepted_total") >= 2.0,
+        "{metrics}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_requests_are_served_back_to_back() {
+    let server = start_default();
+    let addr = server.addr;
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Two POSTs and a GET in one write: the state machine must frame
+    // and serve them in order off the same buffered bytes.
+    let body = "{\"x\":[1,-1,0.5,0.25]}";
+    let post = format!(
+        "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let mut raw = Vec::new();
+    raw.extend_from_slice(post.as_bytes());
+    raw.extend_from_slice(post.as_bytes());
+    raw.extend_from_slice(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    writer.write_all(&raw).unwrap();
+    writer.flush().unwrap();
+
+    for i in 0..2 {
+        let (status, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "pipelined request {i}: {body}");
+        assert!(body.contains("\"y\""), "pipelined request {i}: {body}");
+    }
+    let (status, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+
+    // The connection is still usable for a framed follow-up.
+    writer
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let (status, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after Connection: close");
+    server.shutdown();
+}
+
+#[test]
+fn http10_without_keep_alive_closes_after_one_response() {
+    let server = start_default();
+    let addr = server.addr;
+    let response = raw_roundtrip(addr, b"GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n");
+    assert_eq!(status_of(&response), 200, "{response}");
+    assert!(response.contains("Connection: close"), "{response}");
+    assert!(response.ends_with("ok\n"), "{response}");
+    server.shutdown();
+}
