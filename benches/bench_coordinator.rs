@@ -30,6 +30,7 @@ fn main() {
                     x: (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect(),
                     thresholds_units: vec![0.0; dim],
                     scale: None,
+                    deadline: None,
                 })
                 .collect();
             let r = bench(
@@ -53,6 +54,7 @@ fn main() {
         x: (0..dim).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect(),
         thresholds_units: vec![0.0; dim],
         scale: None,
+        deadline: None,
     };
 
     let mut single = Coordinator::new(CoordinatorConfig {

@@ -141,6 +141,7 @@ fn main() {
                         TransformRequest {
                             thresholds_units: vec![t_units; width],
                             scale: None,
+                            deadline: None,
                             x,
                         }
                     })
@@ -265,6 +266,7 @@ fn router_fusion_gate() {
             TransformRequest {
                 thresholds_units: vec![0.0; width],
                 scale: Some(Quantizer::new(8).scale_for(&x)),
+                deadline: None,
                 x,
             }
         })
@@ -363,6 +365,7 @@ fn trace_overhead_gate(batch: usize) {
                 .collect(),
             thresholds_units: vec![0.0; width],
             scale: None,
+            deadline: None,
         })
         .collect();
     let mut tile = Tile::new(width, &TileKind::Digital, 0);
@@ -466,6 +469,7 @@ fn monitor_overhead_gate(batch: usize) {
                 .collect(),
             thresholds_units: vec![0.0; width],
             scale: None,
+            deadline: None,
         })
         .collect();
     let mut tile = Tile::new(width, &TileKind::Digital, 0);

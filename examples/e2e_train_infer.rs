@@ -125,6 +125,7 @@ fn main() -> Result<()> {
             x: h.clone(),
             thresholds_units: th_units,
             scale: None,
+            deadline: None,
         })?;
         let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
         soft_threshold(&mut freq, tvec);
@@ -132,6 +133,7 @@ fn main() -> Result<()> {
             x: freq,
             thresholds_units: vec![0.0; hidden],
             scale: None,
+            deadline: None,
         })?;
         let spatial: Vec<f32> = f2.iter().map(|v| v * norm).collect();
         logits_all.extend(fc2.forward(&spatial[..hidden], 1));
@@ -183,6 +185,7 @@ fn main() -> Result<()> {
                 x: h.clone(),
                 thresholds_units: th_units,
                 scale: None,
+                deadline: None,
             })?;
             let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
             soft_threshold(&mut freq, tvec_et);
@@ -190,6 +193,7 @@ fn main() -> Result<()> {
                 x: freq,
                 thresholds_units: vec![0.0; hidden],
                 scale: None,
+                deadline: None,
             })?;
             let spatial: Vec<f32> = f2.iter().map(|v| v * norm).collect();
             logits.extend(mlp_et.fc2.forward(&spatial[..hidden], 1));

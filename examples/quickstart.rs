@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         x: x.clone(),
         thresholds_units: vec![0.0; dim],
         scale: None,
+        deadline: None,
     })?;
     println!(
         "analog tiles @0.9V:            cosine vs golden = {:.3}",
@@ -76,6 +77,7 @@ fn main() -> anyhow::Result<()> {
         x: x.clone(),
         thresholds_units: th,
         scale: None,
+        deadline: None,
     })?;
     let m = coord.metrics();
     let model = EnergyModel::new(16, 0.8);

@@ -1,0 +1,448 @@
+//! Deterministic fault injection for chaos-engineered serving.
+//!
+//! The paper targets always-on edge deployment where analog CiM
+//! hardware degrades, stalls and dies in the field; this module is the
+//! test harness for that reality.  A [`ChaosPlan`] names *injection
+//! points* — stable string keys compiled into the serving vertical
+//! (pool workers, the shard router, the shard set, the batcher, the
+//! connection event loop) — and arms each with a firing rate and a
+//! seed.  Every decision is a pure function of `(seed, call index)`,
+//! so a chaos run is exactly reproducible: the same spec produces the
+//! same kills, stalls and drops in the same order on every run.
+//!
+//! Compiled out by default.  Without the `chaos` cargo feature
+//! (mirroring `trace-off` / `monitor-off`, but opt-*in* rather than
+//! opt-out) [`ChaosPoint::fire`] is a constant `false` the optimizer
+//! deletes, [`ChaosPlan`] is a zero-sized token, and a non-empty
+//! `--chaos-spec` is rejected at startup with a clear error instead of
+//! being silently ignored.
+//!
+//! Spec grammar (CLI `--chaos-spec` or env `REPRO_CHAOS_SPEC`):
+//!
+//! ```text
+//! point=rate[,seed][;point=rate[,seed]]...
+//! ```
+//!
+//! e.g. `pool.worker.panic=0.02,7;shard.kill=0.005`.  `rate` is the
+//! per-call firing probability in `[0, 1]`; `seed` defaults to a hash
+//! of the point name so two points with the same rate still fire on
+//! different calls.  Unknown point names are rejected — the registry
+//! in [`POINTS`] is the single source of truth.
+
+#[cfg(feature = "chaos")]
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+#[cfg(feature = "chaos")]
+use anyhow::{bail, Context};
+
+/// Registry of every injection point compiled into the serving
+/// vertical, in dependency order (deepest seam first).  `--chaos-spec`
+/// validates against this list so a typo fails startup instead of
+/// silently injecting nothing.
+pub const POINTS: &[&str] = &[
+    // coordinator/pool.rs — worker thread, around `schedule_batch`.
+    "pool.worker.panic",
+    "pool.worker.stall",
+    "pool.worker.slow",
+    // shard/router.rs — the drain side of the scatter–gather loop.
+    "router.drain.drop",
+    "router.drain.delay",
+    // shard/set.rs — whole-shard lifecycle faults.
+    "shard.kill",
+    "shard.flap",
+    // server/batcher.rs — the micro-batching loop.
+    "batcher.stall",
+    "batcher.reply.drop",
+    // server/event_loop.rs — the connection state machine.
+    "conn.reset",
+    "conn.short_read",
+    "conn.short_write",
+];
+
+/// How long an injected `pool.worker.stall` / `batcher.stall` sleeps.
+pub const STALL: std::time::Duration = std::time::Duration::from_millis(50);
+/// How long an injected `pool.worker.slow` / `router.drain.delay`
+/// sleeps (a degraded-but-alive component, not a dead one).
+pub const SLOWDOWN: std::time::Duration = std::time::Duration::from_millis(2);
+
+/// SplitMix64 — the same finalizer the analog simulator's RNG family
+/// uses; full-period, passes BigCrush, and two calls with different
+/// inputs are statistically independent.
+#[cfg_attr(not(feature = "chaos"), allow(dead_code))]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to a uniform double in `[0, 1)` (53 mantissa bits).
+#[cfg_attr(not(feature = "chaos"), allow(dead_code))]
+fn unit(z: u64) -> f64 {
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// FNV-1a over the point name — the default per-point seed, so
+/// distinct points never share a decision stream by accident.
+#[cfg(feature = "chaos")]
+fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A parsed, validated chaos plan: which injection points are armed,
+/// at what rate, under which seed.  Cloning a plan is cheap and the
+/// clones stay in agreement — a plan is pure configuration; the
+/// per-point call counters live in the [`ChaosPoint`] handles resolved
+/// from it, one per consumer, so each consumer's decision stream is
+/// independently deterministic regardless of thread interleaving.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    #[cfg(feature = "chaos")]
+    points: Vec<ArmedPoint>,
+}
+
+#[cfg(feature = "chaos")]
+#[derive(Clone, Debug)]
+struct ArmedPoint {
+    name: String,
+    rate: f64,
+    seed: u64,
+}
+
+impl ChaosPlan {
+    /// The no-faults plan (also what `Default` gives you).
+    pub fn disabled() -> ChaosPlan {
+        ChaosPlan::default()
+    }
+
+    /// Whether any injection point is armed.  Always `false` when the
+    /// `chaos` feature is compiled out.
+    pub fn is_enabled(&self) -> bool {
+        #[cfg(feature = "chaos")]
+        {
+            !self.points.is_empty()
+        }
+        #[cfg(not(feature = "chaos"))]
+        {
+            false
+        }
+    }
+
+    /// Human-readable summary of the armed points, for startup banners
+    /// and logs ("pool.worker.panic=0.01@seed=7; shard.kill=0.001@seed=9").
+    pub fn describe(&self) -> String {
+        #[cfg(feature = "chaos")]
+        {
+            if self.points.is_empty() {
+                "no points armed".to_string()
+            } else {
+                self.points
+                    .iter()
+                    .map(|p| format!("{}={}@seed={}", p.name, p.rate, p.seed))
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            }
+        }
+        #[cfg(not(feature = "chaos"))]
+        {
+            "compiled out".to_string()
+        }
+    }
+
+    /// Parse a `point=rate[,seed];...` spec.  An empty (or
+    /// all-whitespace) spec is the disabled plan.  With the `chaos`
+    /// feature compiled out, a non-empty spec is an error — silently
+    /// ignoring a requested fault plan would make a chaos run report
+    /// a falsely green result.
+    pub fn parse(spec: &str) -> Result<ChaosPlan> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(ChaosPlan::default());
+        }
+        #[cfg(not(feature = "chaos"))]
+        {
+            anyhow::bail!(
+                "chaos spec {spec:?} given but fault injection is compiled out; \
+                 rebuild with `--features chaos`"
+            );
+        }
+        #[cfg(feature = "chaos")]
+        {
+            let mut points: Vec<ArmedPoint> = Vec::new();
+            for entry in spec.split(';') {
+                let entry = entry.trim();
+                if entry.is_empty() {
+                    continue;
+                }
+                let (name, rest) = entry.split_once('=').with_context(|| {
+                    format!("chaos spec entry {entry:?}: expected point=rate[,seed]")
+                })?;
+                let name = name.trim();
+                if !POINTS.contains(&name) {
+                    bail!(
+                        "chaos spec names unknown injection point {name:?}; known points: {}",
+                        POINTS.join(", ")
+                    );
+                }
+                let (rate_s, seed_s) = match rest.split_once(',') {
+                    Some((r, s)) => (r.trim(), Some(s.trim())),
+                    None => (rest.trim(), None),
+                };
+                let rate: f64 = rate_s
+                    .parse()
+                    .with_context(|| format!("chaos point {name}: bad rate {rate_s:?}"))?;
+                if !(0.0..=1.0).contains(&rate) {
+                    bail!("chaos point {name}: rate {rate} outside [0, 1]");
+                }
+                let seed: u64 = match seed_s {
+                    Some(s) => s
+                        .parse()
+                        .with_context(|| format!("chaos point {name}: bad seed {s:?}"))?,
+                    None => fnv1a(name),
+                };
+                if points.iter().any(|p| p.name == name) {
+                    bail!("chaos point {name} armed twice in one spec");
+                }
+                points.push(ArmedPoint {
+                    name: name.to_string(),
+                    rate,
+                    seed,
+                });
+            }
+            Ok(ChaosPlan { points })
+        }
+    }
+
+    /// Resolve an injection point by name.  Done once at setup — the
+    /// hot path holds the returned handle and never hashes or scans.
+    /// Unarmed (or unknown) names resolve to the inactive point whose
+    /// `fire()` is always `false`.
+    pub fn point(&self, name: &str) -> ChaosPoint {
+        self.point_indexed(name, 0)
+    }
+
+    /// Resolve an injection point for one lane of a parallel consumer
+    /// (e.g. pool worker `w` of `N`): same rate, lane-mixed seed, own
+    /// call counter — so each lane's fault sequence is deterministic
+    /// on its own, independent of how the lanes interleave.
+    pub fn point_indexed(&self, name: &str, lane: u64) -> ChaosPoint {
+        #[cfg(feature = "chaos")]
+        {
+            for p in &self.points {
+                if p.name == name {
+                    return ChaosPoint {
+                        inner: Some(PointInner {
+                            rate: p.rate,
+                            seed: p.seed ^ splitmix64(0xC0FF_EE00 ^ lane),
+                            calls: AtomicU64::new(0),
+                        }),
+                    };
+                }
+            }
+            ChaosPoint::default()
+        }
+        #[cfg(not(feature = "chaos"))]
+        {
+            let _ = (name, lane);
+            ChaosPoint::default()
+        }
+    }
+}
+
+/// A resolved injection point: one consumer's handle on one armed
+/// fault.  `fire()` advances the point's private call counter and
+/// returns whether this call is a fault — a pure, reproducible
+/// function of `(seed, call index)`.
+#[derive(Debug, Default)]
+pub struct ChaosPoint {
+    #[cfg(feature = "chaos")]
+    inner: Option<PointInner>,
+}
+
+#[cfg(feature = "chaos")]
+#[derive(Debug)]
+struct PointInner {
+    rate: f64,
+    seed: u64,
+    calls: AtomicU64,
+}
+
+impl ChaosPoint {
+    /// The never-fires point (also what `Default` gives you).
+    pub fn inactive() -> ChaosPoint {
+        ChaosPoint::default()
+    }
+
+    /// Whether this handle is armed at all — lets a consumer skip
+    /// setup work (victim selection, clock reads) on the common path.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        #[cfg(feature = "chaos")]
+        {
+            self.inner.is_some()
+        }
+        #[cfg(not(feature = "chaos"))]
+        {
+            false
+        }
+    }
+
+    /// Should this call inject the fault?  Deterministic per handle:
+    /// call `i` fires iff `unit(mix(seed, i)) < rate`.  Compiles to a
+    /// constant `false` without the `chaos` feature.
+    #[inline]
+    pub fn fire(&self) -> bool {
+        #[cfg(feature = "chaos")]
+        {
+            if let Some(inner) = &self.inner {
+                let i = inner.calls.fetch_add(1, Ordering::Relaxed);
+                return unit(splitmix64(inner.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+                    < inner.rate;
+            }
+            false
+        }
+        #[cfg(not(feature = "chaos"))]
+        {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_disabled_everywhere() {
+        let plan = ChaosPlan::parse("").unwrap();
+        assert!(!plan.is_enabled());
+        assert!(!plan.point("shard.kill").fire());
+        let plan = ChaosPlan::parse("   ").unwrap();
+        assert!(!plan.is_enabled());
+    }
+
+    #[test]
+    fn inactive_point_never_fires() {
+        let p = ChaosPoint::inactive();
+        assert!(!p.is_active());
+        for _ in 0..64 {
+            assert!(!p.fire());
+        }
+    }
+
+    #[cfg(not(feature = "chaos"))]
+    #[test]
+    fn non_empty_spec_errors_when_compiled_out() {
+        let err = ChaosPlan::parse("shard.kill=0.5").unwrap_err();
+        assert!(err.to_string().contains("--features chaos"), "{err}");
+    }
+
+    #[cfg(feature = "chaos")]
+    mod armed {
+        use crate::chaos::{ChaosPlan, POINTS};
+
+        #[test]
+        fn parses_rates_and_seeds() {
+            let plan = ChaosPlan::parse("pool.worker.panic=0.25,42; shard.kill=1.0").unwrap();
+            assert!(plan.is_enabled());
+            assert!(plan.point("shard.kill").is_active());
+            assert!(plan.point("shard.kill").fire(), "rate 1.0 always fires");
+            assert!(!plan.point("batcher.stall").is_active(), "unarmed point");
+        }
+
+        #[test]
+        fn rejects_malformed_specs() {
+            for bad in [
+                "no.such.point=0.5",
+                "shard.kill",
+                "shard.kill=1.5",
+                "shard.kill=-0.1",
+                "shard.kill=x",
+                "shard.kill=0.5,notaseed",
+                "shard.kill=0.1;shard.kill=0.2",
+            ] {
+                assert!(ChaosPlan::parse(bad).is_err(), "{bad:?} should not parse");
+            }
+        }
+
+        #[test]
+        fn every_registered_point_parses() {
+            let spec = POINTS
+                .iter()
+                .map(|p| format!("{p}=0.5"))
+                .collect::<Vec<_>>()
+                .join(";");
+            let plan = ChaosPlan::parse(&spec).unwrap();
+            for p in POINTS {
+                assert!(plan.point(p).is_active(), "{p} should be armed");
+            }
+        }
+
+        #[test]
+        fn decision_stream_is_reproducible() {
+            let plan = ChaosPlan::parse("conn.reset=0.3,7").unwrap();
+            let a = plan.point("conn.reset");
+            let b = plan.point("conn.reset");
+            let seq_a: Vec<bool> = (0..256).map(|_| a.fire()).collect();
+            let seq_b: Vec<bool> = (0..256).map(|_| b.fire()).collect();
+            assert_eq!(seq_a, seq_b, "same point, same seed, same stream");
+            assert!(seq_a.iter().any(|&f| f), "rate 0.3 fires somewhere in 256");
+            assert!(!seq_a.iter().all(|&f| f), "rate 0.3 must not always fire");
+        }
+
+        #[test]
+        fn lanes_decorrelate_but_stay_deterministic() {
+            let plan = ChaosPlan::parse("pool.worker.panic=0.5,9").unwrap();
+            let lane0: Vec<bool> = {
+                let p = plan.point_indexed("pool.worker.panic", 0);
+                (0..128).map(|_| p.fire()).collect()
+            };
+            let lane1: Vec<bool> = {
+                let p = plan.point_indexed("pool.worker.panic", 1);
+                (0..128).map(|_| p.fire()).collect()
+            };
+            assert_ne!(lane0, lane1, "lanes must not share a stream");
+            let lane0_again: Vec<bool> = {
+                let p = plan.point_indexed("pool.worker.panic", 0);
+                (0..128).map(|_| p.fire()).collect()
+            };
+            assert_eq!(lane0, lane0_again);
+        }
+
+        #[test]
+        fn default_seed_comes_from_the_point_name() {
+            let plan = ChaosPlan::parse("conn.reset=0.5;conn.short_read=0.5").unwrap();
+            let a = plan.point("conn.reset");
+            let b = plan.point("conn.short_read");
+            let seq_a: Vec<bool> = (0..128).map(|_| a.fire()).collect();
+            let seq_b: Vec<bool> = (0..128).map(|_| b.fire()).collect();
+            assert_ne!(seq_a, seq_b, "same rate, different name, different stream");
+        }
+
+        #[test]
+        fn empirical_rate_tracks_the_spec() {
+            let plan = ChaosPlan::parse("batcher.reply.drop=0.2,1234").unwrap();
+            let p = plan.point("batcher.reply.drop");
+            let n = 20_000;
+            let fired = (0..n).filter(|_| p.fire()).count();
+            let rate = fired as f64 / n as f64;
+            assert!((rate - 0.2).abs() < 0.02, "empirical rate {rate} vs 0.2");
+        }
+
+        #[test]
+        fn rate_zero_never_fires() {
+            let plan = ChaosPlan::parse("shard.flap=0.0").unwrap();
+            let p = plan.point("shard.flap");
+            assert!(p.is_active());
+            for _ in 0..256 {
+                assert!(!p.fire());
+            }
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //! contend on shared state — the hot loop is allocation-light.
 
 use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -26,8 +27,10 @@ use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
 use super::plan::TilePlan;
-use super::scheduler::{schedule_batch, SampleStats, ScratchArena};
+use super::scheduler::{schedule_batch, BatchOutcome, SampleStats, ScratchArena};
 use super::tile::{Tile, TileKind};
+use crate::bitplane::early_term::CycleStats;
+use crate::chaos::ChaosPlan;
 use crate::wht;
 
 /// Pool configuration.
@@ -45,6 +48,10 @@ pub struct CoordinatorConfig {
     pub kind: TileKind,
     /// RNG seed (variability sampling + analog noise).
     pub seed: u64,
+    /// Fault-injection plan for chaos testing (worker panic / stall /
+    /// slow-down points).  Disabled by default, and a compile-time
+    /// no-op without the `chaos` cargo feature.
+    pub chaos: ChaosPlan,
 }
 
 impl Default for CoordinatorConfig {
@@ -56,6 +63,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 256,
             kind: TileKind::Digital,
             seed: 0,
+            chaos: ChaosPlan::disabled(),
         }
     }
 }
@@ -73,16 +81,25 @@ pub struct TransformRequest {
     /// global scale here so the tiled transform is bit-identical to the
     /// whole-width golden model (see [`crate::exec`]).
     pub scale: Option<f32>,
+    /// Absolute end-to-end deadline, propagated from the serving layer
+    /// (`X-Deadline-Ms`).  A worker cancels samples whose deadline has
+    /// already passed *before* scheduling them — the reply slot at the
+    /// connection has already 504'd, so executing would burn tile
+    /// cycles on an answer nobody is waiting for.  `None` (the
+    /// library/bench default) never expires.
+    pub deadline: Option<Instant>,
 }
 
 impl TransformRequest {
-    /// A request with per-block quantization and no early termination.
+    /// A request with per-block quantization, no early termination and
+    /// no deadline.
     pub fn plain(x: Vec<f32>) -> TransformRequest {
         let thresholds_units = vec![0.0; x.len()];
         TransformRequest {
             x,
             thresholds_units,
             scale: None,
+            deadline: None,
         }
     }
 }
@@ -108,13 +125,77 @@ struct TileResult {
     request_id: u64,
     /// One output vector per request in the job, in request order.
     values: Vec<Vec<f32>>,
-    outcome_stats: crate::bitplane::early_term::CycleStats,
+    outcome_stats: CycleStats,
     planes_issued: u32,
     row_cycles: u64,
     /// Engine counters attributed per request of the job, in request
     /// order (aligned with `values`).
     per_sample: Vec<SampleStats>,
+    /// Per-request deadline-cancellation flags, aligned with `values`:
+    /// `true` samples were never scheduled (their deadline had passed
+    /// when the worker picked the job up) and carry zeroed outputs.
+    expired: Vec<bool>,
     elapsed: std::time::Duration,
+}
+
+/// Run one job on a worker's tile, cancelling samples whose deadline
+/// has already passed.  The live subset streams through
+/// [`schedule_batch`] — the engine's RNG streams are batching-invariant
+/// (PR 5), so executing a subset of a fused job stays bit-identical to
+/// the full run — and expired samples come back zero-filled with their
+/// flag set, so the drain side reports the cancellation instead of
+/// inventing data.
+fn execute_job(
+    tile: &mut Tile,
+    job: &TileJob,
+    bits: u32,
+    arena: &mut ScratchArena,
+) -> (BatchOutcome, Vec<bool>) {
+    let now = Instant::now();
+    let expired: Vec<bool> = job
+        .reqs
+        .iter()
+        .map(|r| r.deadline.is_some_and(|d| now >= d))
+        .collect();
+    if !expired.iter().any(|&e| e) {
+        let out = schedule_batch(tile, &job.plan, &job.reqs, bits, arena);
+        return (out, expired);
+    }
+    let width = job.plan.width();
+    let live: Vec<TransformRequest> = job
+        .reqs
+        .iter()
+        .zip(&expired)
+        .filter(|&(_, &e)| !e)
+        .map(|(r, _)| r.clone())
+        .collect();
+    let mut out = if live.is_empty() {
+        BatchOutcome {
+            values: Vec::new(),
+            stats: CycleStats::new(bits),
+            planes_issued: 0,
+            row_cycles: 0,
+            per_sample: Vec::new(),
+        }
+    } else {
+        schedule_batch(tile, &job.plan, &live, bits, arena)
+    };
+    // Scatter live outputs back into request order; expired slots get
+    // zeroed outputs and default (all-zero) engine counters.
+    let mut live_values = out.values.into_iter();
+    let mut live_stats = out.per_sample.into_iter();
+    out.values = Vec::with_capacity(job.reqs.len());
+    out.per_sample = Vec::with_capacity(job.reqs.len());
+    for &e in &expired {
+        if e {
+            out.values.push(vec![0.0; width]);
+            out.per_sample.push(SampleStats::default());
+        } else {
+            out.values.push(live_values.next().expect("live output per live request"));
+            out.per_sample.push(live_stats.next().expect("live stats per live request"));
+        }
+    }
+    (out, expired)
 }
 
 /// One completed request from [`Coordinator::drain_one`] /
@@ -138,6 +219,12 @@ pub struct CompletedTransform {
     pub elements: u64,
     /// Elements that resolved before their final bitplane (ET depth).
     pub terminated_early: u64,
+    /// The sample's deadline had passed when the worker picked its job
+    /// up: it was cancelled before scheduling and `values` is zeros.
+    /// The serving layer has already 504'd the reply slot by the time
+    /// this drains, so the router drops the payload instead of
+    /// gathering it.
+    pub expired: bool,
 }
 
 /// One completed *job* from [`Coordinator::drain_batch`]: the fused
@@ -159,7 +246,9 @@ pub struct CompletedBatch {
 pub struct Coordinator {
     config: CoordinatorConfig,
     job_tx: SyncSender<TileJob>,
-    result_rx: Receiver<TileResult>,
+    /// Worker results; `Err` is a worker that died mid-job (panic) —
+    /// the job's failure is delivered instead of stranding the drain.
+    result_rx: Receiver<Result<TileResult, String>>,
     workers: Vec<JoinHandle<Metrics>>,
     next_request: u64,
     /// Requests submitted via [`Coordinator::submit`]/`try_submit` whose
@@ -188,7 +277,7 @@ impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Coordinator {
         assert!(config.workers >= 1);
         let (job_tx, job_rx) = sync_channel::<TileJob>(config.queue_depth);
-        let (result_tx, result_rx) = sync_channel::<TileResult>(config.queue_depth);
+        let (result_tx, result_rx) = sync_channel::<Result<TileResult, String>>(config.queue_depth);
         let job_rx = Arc::new(Mutex::new(job_rx));
         let metrics = Arc::new(Mutex::new(Metrics::new(config.bits)));
         let mut workers = Vec::new();
@@ -199,6 +288,9 @@ impl Coordinator {
             let tile_n = config.tile_n;
             let bits = config.bits;
             let seed = config.seed.wrapping_add(w as u64 * 0x9E37);
+            let chaos_panic = config.chaos.point_indexed("pool.worker.panic", w as u64);
+            let chaos_stall = config.chaos.point_indexed("pool.worker.stall", w as u64);
+            let chaos_slow = config.chaos.point_indexed("pool.worker.slow", w as u64);
             workers.push(std::thread::spawn(move || {
                 let mut tile = Tile::new(tile_n, &kind, seed);
                 // The worker's long-lived scratch: the engine's plane
@@ -211,25 +303,56 @@ impl Coordinator {
                         guard.recv()
                     };
                     let Ok(job) = job else { break };
+                    if chaos_stall.fire() {
+                        std::thread::sleep(crate::chaos::STALL);
+                    }
+                    if chaos_slow.fire() {
+                        std::thread::sleep(crate::chaos::SLOWDOWN);
+                    }
                     let t0 = Instant::now();
-                    let out = schedule_batch(&mut tile, &job.plan, &job.reqs, bits, &mut arena);
+                    // A panic inside the engine used to strand the job:
+                    // its result never arrived, so the drain side blocked
+                    // forever on a channel other workers kept alive.  Now
+                    // the unwinding is caught, the job fails loudly (the
+                    // router turns the error into poisoned-shard
+                    // failover) and the worker exits like the crashed
+                    // thread it just became.
+                    let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        if chaos_panic.fire() {
+                            panic!("chaos: injected pool worker panic");
+                        }
+                        execute_job(&mut tile, &job, bits, &mut arena)
+                    }));
                     let elapsed = t0.elapsed();
-                    local.record_job(
-                        &out.stats,
-                        out.planes_issued,
-                        out.row_cycles,
-                        job.reqs.len(),
-                        elapsed,
-                    );
-                    let _ = result_tx.send(TileResult {
-                        request_id: job.request_id,
-                        values: out.values,
-                        outcome_stats: out.stats,
-                        planes_issued: out.planes_issued,
-                        row_cycles: out.row_cycles,
-                        per_sample: out.per_sample,
-                        elapsed,
-                    });
+                    match outcome {
+                        Ok((out, expired)) => {
+                            let served = expired.iter().filter(|&&e| !e).count();
+                            local.record_job(
+                                &out.stats,
+                                out.planes_issued,
+                                out.row_cycles,
+                                served,
+                                elapsed,
+                            );
+                            let _ = result_tx.send(Ok(TileResult {
+                                request_id: job.request_id,
+                                values: out.values,
+                                outcome_stats: out.stats,
+                                planes_issued: out.planes_issued,
+                                row_cycles: out.row_cycles,
+                                per_sample: out.per_sample,
+                                expired,
+                                elapsed,
+                            }));
+                        }
+                        Err(_) => {
+                            let _ = result_tx.send(Err(format!(
+                                "worker {w} panicked executing job {}",
+                                job.request_id
+                            )));
+                            break;
+                        }
+                    }
                 }
                 local
             }));
@@ -366,6 +489,7 @@ impl Coordinator {
                 x,
                 thresholds_units: thresholds,
                 scale: req.scale,
+                deadline: req.deadline,
             }],
             plan,
         })
@@ -406,7 +530,8 @@ impl Coordinator {
                 let r = self
                     .result_rx
                     .recv()
-                    .map_err(|_| anyhow!("workers disconnected"))?;
+                    .map_err(|_| anyhow!("workers disconnected"))?
+                    .map_err(|e| anyhow!(e))?;
                 self.record(&r);
                 results.push(r);
             }
@@ -678,18 +803,21 @@ impl Coordinator {
             .result_rx
             .recv()
             .map_err(|_| anyhow!("workers disconnected"))?;
-        self.record(&r);
         self.pending_async = self.pending_async.saturating_sub(1);
+        let r = r.map_err(|e| anyhow!(e))?;
+        self.record(&r);
         let request_id = r.request_id;
         let elapsed = r.elapsed;
         let n = r.values.len();
         debug_assert_eq!(r.per_sample.len(), n);
+        debug_assert_eq!(r.expired.len(), n);
         let total_rc: u64 = r.per_sample.iter().map(|s| s.row_cycles).sum();
         let samples = r
             .values
             .into_iter()
             .zip(r.per_sample)
-            .map(|(values, s)| {
+            .zip(r.expired)
+            .map(|((values, s), expired)| {
                 let busy = if total_rc == 0 {
                     elapsed / (n.max(1) as u32)
                 } else {
@@ -703,6 +831,7 @@ impl Coordinator {
                     row_cycles: s.row_cycles,
                     elements: s.elements,
                     terminated_early: s.terminated_early,
+                    expired,
                 }
             })
             .collect();
@@ -791,6 +920,7 @@ mod tests {
                 x: x.clone(),
                 thresholds_units: vec![0.0; 16],
                 scale: None,
+                deadline: None,
             })
             .unwrap();
         let golden = QuantBwht::new(16, 128, 8).transform(&x);
@@ -807,6 +937,7 @@ mod tests {
                 x: x.clone(),
                 thresholds_units: vec![0.0; 64],
                 scale: None,
+                deadline: None,
             })
             .unwrap();
         // blockwise golden: each 16-slice transformed independently
@@ -824,6 +955,7 @@ mod tests {
                 x: sample(32, 10 + i),
                 thresholds_units: vec![0.0; 32],
                 scale: None,
+                deadline: None,
             })
             .collect();
         let mut c1 = Coordinator::new(CoordinatorConfig::default());
@@ -845,6 +977,7 @@ mod tests {
                 x: sample(20, 3),
                 thresholds_units: vec![0.0; 20],
                 scale: None,
+                deadline: None,
             })
             .unwrap();
         assert_eq!(out.len(), 32);
@@ -865,6 +998,7 @@ mod tests {
                     x: x.clone(),
                     thresholds_units: vec![0.0; 20],
                     scale: Some(scale),
+                    deadline: None,
                 },
                 &[16, 4],
             )
@@ -904,6 +1038,7 @@ mod tests {
                 x: sample(16, 20 + i),
                 thresholds_units: vec![0.0; 16],
                 scale: None,
+                deadline: None,
             })
             .unwrap();
         }
@@ -921,6 +1056,7 @@ mod tests {
             x: sample(16, 30),
             thresholds_units: vec![1e9; 16],
             scale: None,
+            deadline: None,
         })
         .unwrap();
         let m = c.metrics();
@@ -941,6 +1077,7 @@ mod tests {
                 TransformRequest {
                     thresholds_units: vec![2.0; 20],
                     scale: Some(crate::quant::Quantizer::new(8).scale_for(&x)),
+                    deadline: None,
                     x,
                 }
             })
@@ -1068,6 +1205,7 @@ mod tests {
                 TransformRequest {
                     thresholds_units: vec![1.5; 20],
                     scale: Some(crate::quant::Quantizer::new(8).scale_for(&x)),
+                    deadline: None,
                     x,
                 }
             })
@@ -1165,6 +1303,7 @@ mod tests {
                 x: sample(16, 50),
                 thresholds_units: vec![0.0; 16],
                 scale: None,
+                deadline: None,
             })
             .is_err());
         assert!(c.drain_one().is_err(), "no buffered results after abort");
@@ -1184,11 +1323,105 @@ mod tests {
                     x: x.clone(),
                     thresholds_units: vec![0.0; 48],
                     scale: None,
+                    deadline: None,
                 })
                 .unwrap();
             c.shutdown();
             out
         };
         assert_eq!(run(1), run(4), "digital path must be worker-count invariant");
+    }
+
+    #[test]
+    fn expired_deadline_cancels_before_scheduling() {
+        let mut c = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let x = sample(16, 900);
+        let mut req = TransformRequest::plain(x.clone());
+        req.deadline = Some(Instant::now() - std::time::Duration::from_millis(1));
+        let live = TransformRequest::plain(sample(16, 901));
+        let plan = Arc::new(TilePlan::new(16, &[16]).unwrap());
+        c.try_submit_batch_planned(&[req, live.clone()], &plan)
+            .unwrap()
+            .expect("queue empty");
+        let batch = c.drain_batch().unwrap();
+        assert_eq!(batch.samples.len(), 2);
+        assert!(batch.samples[0].expired, "past-deadline sample is cancelled");
+        assert_eq!(batch.samples[0].values, vec![0.0; 16], "cancelled output is zeros");
+        assert_eq!(batch.samples[0].row_cycles, 0, "no tile cycles billed");
+        assert!(!batch.samples[1].expired);
+        let golden = QuantBwht::new(16, 128, 8).transform(&live.x);
+        assert_eq!(
+            batch.samples[1].values, golden,
+            "live sample of a partially-expired job stays bit-identical"
+        );
+        assert_eq!(c.metrics().requests, 1, "only the served sample is counted");
+        c.shutdown();
+    }
+
+    #[test]
+    fn future_deadline_executes_normally() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let x = sample(16, 902);
+        let mut req = TransformRequest::plain(x.clone());
+        req.deadline = Some(Instant::now() + std::time::Duration::from_secs(60));
+        let out = c.transform(&req).unwrap();
+        assert_eq!(out, QuantBwht::new(16, 128, 8).transform(&x));
+        c.shutdown();
+    }
+
+    #[test]
+    fn fully_expired_job_drains_without_touching_the_tile() {
+        let mut c = Coordinator::new(CoordinatorConfig::default());
+        let mut req = TransformRequest::plain(sample(16, 903));
+        req.deadline = Some(Instant::now() - std::time::Duration::from_millis(1));
+        let plan = Arc::new(TilePlan::new(16, &[16]).unwrap());
+        c.try_submit_batch_planned(std::slice::from_ref(&req), &plan)
+            .unwrap()
+            .expect("queue empty");
+        let batch = c.drain_batch().unwrap();
+        assert!(batch.samples[0].expired);
+        assert_eq!(c.metrics().row_cycles, 0);
+        assert_eq!(c.metrics().requests, 0);
+        c.shutdown();
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn injected_worker_panic_fails_the_job_instead_of_stranding_it() {
+        // Before the catch_unwind in the worker loop, a panic stranded
+        // the in-flight job: drain blocked forever on a channel the
+        // surviving workers kept alive.  Now the panic comes back as a
+        // clean drain error the router can turn into failover.
+        let chaos = crate::chaos::ChaosPlan::parse("pool.worker.panic=1.0,1").unwrap();
+        let mut c = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            chaos,
+            ..Default::default()
+        });
+        c.submit(&TransformRequest::plain(sample(16, 910))).unwrap();
+        let err = c.drain_one().unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert_eq!(c.pending_async(), 0, "failed job still consumed its slot");
+        c.shutdown();
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn injected_stall_slows_but_does_not_corrupt() {
+        let chaos = crate::chaos::ChaosPlan::parse("pool.worker.stall=1.0,2").unwrap();
+        let mut c = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            chaos,
+            ..Default::default()
+        });
+        let x = sample(16, 911);
+        let t0 = Instant::now();
+        let out = c.transform(&TransformRequest::plain(x.clone())).unwrap();
+        assert!(t0.elapsed() >= crate::chaos::STALL, "stall point must bite");
+        assert_eq!(out, QuantBwht::new(16, 128, 8).transform(&x));
+        c.shutdown();
     }
 }

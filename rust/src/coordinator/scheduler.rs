@@ -727,6 +727,7 @@ mod tests {
                 TransformRequest {
                     thresholds_units: vec![thresh; width],
                     scale: None,
+                    deadline: None,
                     x,
                 }
             })

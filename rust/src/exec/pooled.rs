@@ -88,6 +88,7 @@ mod tests {
                 TransformRequest {
                     thresholds_units: vec![0.0; 64],
                     scale: Some(Quantizer::new(8).scale_for(&x)),
+                    deadline: None,
                     x,
                 }
             })
@@ -114,6 +115,7 @@ mod tests {
                 TransformRequest {
                     thresholds_units: vec![0.0; 20],
                     scale: Some(Quantizer::new(8).scale_for(&x)),
+                    deadline: None,
                     x,
                 }
             })

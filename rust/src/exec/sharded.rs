@@ -83,6 +83,7 @@ mod tests {
         let req = TransformRequest {
             thresholds_units: vec![0.0; 96],
             scale: Some(Quantizer::new(8).scale_for(&x)),
+            deadline: None,
             x,
         };
         let out = ex
@@ -111,6 +112,7 @@ mod tests {
         let req = TransformRequest {
             thresholds_units: vec![0.0; 68],
             scale: Some(Quantizer::new(8).scale_for(&x)),
+            deadline: None,
             x,
         };
         let out = ex

@@ -17,6 +17,12 @@
 //!   per-stage latency histograms in `/metrics`, recent traces at
 //!   `GET /debug/traces` (plain JSON or Chrome `trace_event`) and
 //!   slow-request structured logs.
+//! * **Fault-tolerance seam ([`chaos`], [`shard::breaker`])** —
+//!   deterministic fault injection (seeded, named injection points at
+//!   every seam, compiled out unless the `chaos` feature is on),
+//!   end-to-end request deadlines, and per-shard circuit breakers
+//!   with exponential open windows + respawn backoff, so the serving
+//!   vertical degrades and recovers instead of hanging or storming.
 //! * **Fidelity seam ([`monitor`])** — sampled shadow verification of
 //!   noisy/analog shards: 1-in-K served slices re-execute through a
 //!   private digital golden pool with the same pinned quantization
@@ -49,6 +55,7 @@
 
 pub mod analog;
 pub mod bitplane;
+pub mod chaos;
 pub mod coordinator;
 pub mod energy;
 pub mod exec;

@@ -16,6 +16,8 @@
 //!                 [--trace-sample K] [--slow-ms MS]
 //!                 [--fidelity-sample K] [--drift-threshold X]
 //!                 [--reactor-threads N] [--first-byte-timeout-ms MS]
+//!                 [--default-deadline-ms MS] [--max-deadline-ms MS]
+//!                 [--drain-timeout-ms MS] [--chaos-spec SPEC]
 //! repro report    [--vdd V] [--avg-cycles C]
 //! ```
 //!
@@ -143,6 +145,47 @@ fn drift_threshold_flag(flags: &HashMap<String, String>) -> Result<f64> {
     Ok(threshold)
 }
 
+/// SIGTERM/SIGINT → graceful drain.  Hand-rolled `signal(2)` binding
+/// (the build box is offline: no signal-hook crate); the handler only
+/// stores to an atomic, which is async-signal-safe.
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn handle(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, handle as extern "C" fn(i32) as usize);
+            signal(SIGTERM, handle as extern "C" fn(i32) as usize);
+        }
+    }
+}
+
+/// `--chaos-spec SPEC` (or the `REPRO_CHAOS_SPEC` env var):
+/// `point=rate[,seed][;point=rate...]` deterministic fault injection.
+/// Parsing fails loudly when the binary was built without
+/// `--features chaos`, so a requested fault plan is never silently
+/// ignored.
+fn chaos_flag(flags: &HashMap<String, String>) -> Result<repro::chaos::ChaosPlan> {
+    let spec = flags
+        .get("chaos-spec")
+        .cloned()
+        .or_else(|| std::env::var("REPRO_CHAOS_SPEC").ok())
+        .unwrap_or_default();
+    repro::chaos::ChaosPlan::parse(&spec)
+}
+
 fn backend_from_flags(flags: &HashMap<String, String>) -> Backend {
     match flags.get("backend").map(|s| s.as_str()).unwrap_or("quantized") {
         "float" => Backend::Float,
@@ -192,6 +235,7 @@ fn cmd_transform(flags: &HashMap<String, String>) -> Result<()> {
         x: x.clone(),
         thresholds_units: vec![0.0; dim],
         scale: None,
+        deadline: None,
     })?;
     let dt = t0.elapsed();
     let exact = {
@@ -418,6 +462,7 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         Some(m) => required_tile(m.bwht.transform_blocks())?.max(tile),
         None => tile,
     };
+    let chaos = chaos_flag(flags)?;
     let config = ServerConfig {
         listen: listen.to_string(),
         coordinator: CoordinatorConfig {
@@ -426,6 +471,7 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
             workers: flag(flags, "workers", 4),
             seed: flag(flags, "seed", 0),
             kind: tile_kind_from_flags(flags, effective_tile, vdd),
+            chaos: chaos.clone(),
             ..Default::default()
         },
         shards: shards.max(1),
@@ -452,10 +498,15 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
         slow_ms: flag(flags, "slow-ms", 0u64),
         fidelity_sample: fidelity_sample_flag(flags)?,
         drift_threshold: drift_threshold_flag(flags)?,
+        default_deadline_ms: flags.get("default-deadline-ms").and_then(|v| v.parse().ok()),
+        max_deadline_ms: flag(flags, "max-deadline-ms", 60_000u64),
+        drain_timeout_ms: flag(flags, "drain-timeout-ms", 5_000u64),
         ..Default::default()
     };
     let has_model = config.model.is_some();
     let duration_s: u64 = flag(flags, "duration-s", 0);
+    let drain_timeout = std::time::Duration::from_millis(config.drain_timeout_ms.max(1));
+    signals::install();
     let server = Server::start(config)?;
     println!("repro serve listening on http://{}", server.addr);
     println!(
@@ -475,13 +526,22 @@ fn cmd_serve_network(listen: &str, flags: &HashMap<String, String>) -> Result<()
     println!("  GET  /readyz        readiness probe (503 + per-shard JSON when degraded)");
     println!("  GET  /debug/traces  recent request traces (?n=K, ?format=chrome)");
     println!("  GET  /debug/fidelity  shadow-verification snapshot (?n=K recent checks)");
-    if duration_s == 0 {
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
-        }
+    if chaos.is_enabled() {
+        println!("  CHAOS: deterministic fault injection armed ({})", chaos.describe());
     }
-    std::thread::sleep(std::time::Duration::from_secs(duration_s));
-    let m = server.shutdown();
+    // Serve until SIGTERM/SIGINT (or --duration-s elapses), then drain
+    // gracefully: stop accepting, fail /readyz, let in-flight requests
+    // finish (bounded by --drain-timeout-ms) and exit 0.
+    let until = (duration_s > 0)
+        .then(|| Instant::now() + std::time::Duration::from_secs(duration_s));
+    while !signals::SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst) {
+        if until.is_some_and(|t| Instant::now() >= t) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    eprintln!("repro serve: draining (up to {drain_timeout:?})...");
+    let m = server.drain(drain_timeout);
     println!(
         "served {} transform slices | avg bitplane cycles {:.2} | worker p50 {:.0} us",
         m.requests,
@@ -530,6 +590,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 x,
                 thresholds_units: th,
                 scale: None,
+                deadline: None,
             }
         })
         .collect();
@@ -640,6 +701,16 @@ SUBCOMMANDS:
               the front end is an epoll event loop (--reactor-threads N
               parallel reactors; --first-byte-timeout-ms MS bounds how
               long a fresh connection may sit without a request);
+              requests carry end-to-end deadlines (X-Deadline-Ms header,
+              clamped by --max-deadline-ms, defaulted by
+              --default-deadline-ms); expired work is cancelled before
+              it executes and answered 504; per-shard circuit breakers
+              shed routing away from failing slots (see /readyz and
+              repro_shard_breaker_state); SIGTERM/SIGINT drain
+              gracefully (--drain-timeout-ms bounds the wait, exit 0);
+              --chaos-spec point=rate[,seed];... arms deterministic
+              fault injection (REPRO_CHAOS_SPEC env works too; needs a
+              build with --features chaos);
               without --listen: offline batch benchmark
   report      energy model: Table I, Fig. 12 power breakdown
   help        this text

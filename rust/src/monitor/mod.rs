@@ -723,6 +723,7 @@ mod tests {
                 x,
                 thresholds_units: thresholds,
                 scale,
+                deadline: None,
             };
             let config = CoordinatorConfig {
                 bits,

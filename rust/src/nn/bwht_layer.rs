@@ -127,6 +127,7 @@ impl BwhtLayer {
                 x: padded,
                 thresholds_units,
                 scale,
+                deadline: None,
             });
             streams.push((sample_offset + bi as u64) * 2);
         }
@@ -149,6 +150,7 @@ impl BwhtLayer {
                 x: freq,
                 thresholds_units: vec![0.0; self.width],
                 scale,
+                deadline: None,
             });
             streams2.push((sample_offset + bi as u64) * 2 + 1);
         }

@@ -27,18 +27,29 @@
 //! `max_wait` of coalescing delay.
 //!
 //! The batcher doubles as the shard-health loop: before each batch and
-//! on an idle `health_tick` it respawns poisoned shards
-//! ([`ShardSet::respawn_poisoned`]), so a dead pool heals instead of
-//! permanently shrinking capacity.  The same pass recycles slots the
-//! fidelity monitor flagged as drifting: the pool still answers, but its
-//! numbers are wrong, so it is poisoned and respawned like a dead one
-//! (counted separately as `repro_shard_drift_respawns_total`).
+//! on an idle `health_tick` it respawns poisoned shards through the
+//! per-slot respawn backoff ([`ShardSet::respawn_backed_off`]) — the
+//! first heal of a slot is free, repeat heals without intervening
+//! served traffic double their wait, so a permanently sick shard
+//! converges to open-breaker shedding instead of a respawn storm.  The
+//! same pass recycles slots the fidelity monitor flagged as drifting:
+//! the pool still answers, but its numbers are wrong, so it is poisoned
+//! (tripping its breaker — the drift side of the breaker's inputs) and
+//! respawned like a dead one (counted separately as
+//! `repro_shard_drift_respawns_total`).
+//!
+//! Deadlines: a [`BatchItem`] may carry an absolute deadline (captured
+//! at the connection front end from `X-Deadline-Ms`).  Expired items
+//! are dropped *before* dispatch — their sink's drop delivers the 504 —
+//! and the deadline rides the [`TransformRequest`] into the pool so a
+//! worker can cancel samples that expire while queued behind a batch.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::chaos::ChaosPoint;
 use crate::coordinator::{Metrics, TransformRequest};
 use crate::exec::Sharded;
 use crate::monitor::Monitor;
@@ -138,6 +149,12 @@ pub struct BatchItem {
     pub payload: BatchPayload,
     pub reply: ReplySink,
     pub enqueued: Instant,
+    /// Absolute end-to-end deadline (from `X-Deadline-Ms`, clamped by
+    /// the server config).  `None` means only the stale-shed window
+    /// bounds the item.  An item that expires in the queue is dropped
+    /// before dispatch; for transform items the deadline also rides the
+    /// [`TransformRequest`] so the pool worker can cancel it mid-batch.
+    pub deadline: Option<Instant>,
     /// Sampled request trace, inactive for unsampled requests.  The
     /// batcher records the queue span here and threads the handle into
     /// the shard set's trace scope for the dispatch.
@@ -162,15 +179,22 @@ pub struct BatchReply {
 /// genuinely dead slots.  The monitor's per-slot drift state resets once
 /// the fresh pool is up, so a recycled slot starts with a clean EWMA.
 fn heal_shards(shards: &mut ShardSet, auto_respawn: bool, monitor: &Monitor) {
+    // Chaos disruption fires on the same tick cadence as healing, so a
+    // `shard.kill` this pass is healed (backoff permitting) on a later
+    // one — the full kill → shed → probe → recover loop runs under the
+    // batcher's own clock.  A constant no-op without `--features chaos`.
+    shards.chaos_disrupt();
     if !auto_respawn {
         return;
     }
     let drifting = monitor.flagged_slots();
     for &slot in &drifting {
+        // Poisoning force-opens the slot's breaker: drift is the second
+        // input (besides failures) that trips it.
         shards.poison(slot);
     }
     if shards.healthy_count() < shards.len() {
-        shards.respawn_poisoned();
+        shards.respawn_backed_off(Instant::now());
     }
     for &slot in &drifting {
         if shards.is_healthy(slot) {
@@ -178,6 +202,18 @@ fn heal_shards(shards: &mut ShardSet, auto_respawn: bool, monitor: &Monitor) {
             monitor.reset_slot(slot);
         }
     }
+}
+
+/// Deliver a reply through the `batcher.reply.drop` injection point:
+/// when it fires the sink is dropped unsent, which the event front end
+/// surfaces as a 504 with `Connection: close` (exactly the failure mode
+/// of a reply lost between batcher and connection).
+fn deliver(reply: ReplySink, result: ReplyResult, chaos_drop: &ChaosPoint) {
+    if chaos_drop.fire() {
+        drop(reply);
+        return;
+    }
+    reply.send(result);
 }
 
 /// Run the batching loop until every [`BatchItem`] sender is dropped,
@@ -206,6 +242,8 @@ pub(crate) fn run_batcher(
     // not the `infer_samples_total` metric: failed forwards advance the
     // offset but must not count as served samples.
     let mut stream_offset: u64 = 0;
+    let chaos_stall = shards.config().coordinator.chaos.point("batcher.stall");
+    let chaos_reply_drop = shards.config().coordinator.chaos.point("batcher.reply.drop");
     loop {
         let first = match rx.recv_timeout(health_tick) {
             Ok(item) => item,
@@ -216,6 +254,12 @@ pub(crate) fn run_batcher(
             }
             Err(RecvTimeoutError::Disconnected) => break,
         };
+        if chaos_stall.fire() {
+            // Injected batcher stall: the whole serving pipeline behind
+            // the batch queue stops for a beat, exactly like a long GC
+            // pause or scheduler hiccup would look to clients.
+            std::thread::sleep(crate::chaos::STALL);
+        }
         heal_shards(&mut shards, auto_respawn, &state.monitor);
         let mut batch = vec![first];
         let deadline = Instant::now() + max_wait;
@@ -229,13 +273,29 @@ pub(crate) fn run_batcher(
             }
         }
         let now = Instant::now();
-        let before = batch.len();
-        batch.retain(|item| now.saturating_duration_since(item.enqueued) < stale_after);
-        let dropped = (before - batch.len()) as u64;
-        if dropped > 0 {
+        let mut expired = 0u64;
+        let mut stale = 0u64;
+        batch.retain(|item| {
+            // Expired work is cancelled *before* it can occupy the
+            // pool: the client's deadline has passed, so executing it
+            // would be pure waste under overload.
+            if item.deadline.is_some_and(|d| now >= d) {
+                expired += 1;
+                return false;
+            }
+            if now.saturating_duration_since(item.enqueued) >= stale_after {
+                stale += 1;
+                return false;
+            }
+            true
+        });
+        if expired > 0 {
+            state.deadline_expired_total.fetch_add(expired, Ordering::Relaxed);
+        }
+        if stale > 0 {
             // Dropping the reply sender wakes any still-blocked handler
             // with a disconnect, which it reports as a 504.
-            state.stale_dropped_total.fetch_add(dropped, Ordering::Relaxed);
+            state.stale_dropped_total.fetch_add(stale, Ordering::Relaxed);
         }
         if batch.is_empty() {
             continue;
@@ -256,6 +316,7 @@ pub(crate) fn run_batcher(
                 payload,
                 reply,
                 enqueued,
+                deadline,
                 trace,
             } = item;
             if trace.is_active() {
@@ -264,9 +325,14 @@ pub(crate) fn run_batcher(
                 trace.record(Stage::Queue, start, trace::now_us().saturating_sub(start));
             }
             match payload {
-                BatchPayload::Transform(req) => {
+                BatchPayload::Transform(mut req) => {
+                    // The item-level deadline rides the request into the
+                    // pool so a worker can cancel it mid-batch.
+                    if req.deadline.is_none() {
+                        req.deadline = deadline;
+                    }
                     transform_reqs.push(req);
-                    transform_waiters.push((reply, enqueued));
+                    transform_waiters.push((reply, enqueued, deadline));
                     transform_traces.push(trace);
                 }
                 BatchPayload::Infer { x, samples } => {
@@ -277,7 +343,7 @@ pub(crate) fn run_batcher(
                     for _ in 0..samples {
                         infer_traces.push(trace.clone());
                     }
-                    infer_waiters.push((reply, enqueued, samples));
+                    infer_waiters.push((reply, enqueued, samples, deadline));
                 }
             }
         }
@@ -293,21 +359,33 @@ pub(crate) fn run_batcher(
             }
             match result {
                 Ok(outputs) => {
-                    for ((reply, enqueued), values) in
+                    let now = Instant::now();
+                    for ((reply, enqueued, deadline), values) in
                         transform_waiters.into_iter().zip(outputs)
                     {
+                        // A request that expired *during* execution was
+                        // cancelled by the worker (its values are
+                        // placeholder zeros) or simply missed its
+                        // deadline; either way the client gets the 504,
+                        // never a fabricated payload.
+                        if deadline.is_some_and(|d| now >= d) {
+                            state.deadline_expired_total.fetch_add(1, Ordering::Relaxed);
+                            drop(reply);
+                            continue;
+                        }
                         let latency = enqueued.elapsed();
                         state.record_latency(latency);
-                        reply.send(Ok(BatchReply { values, latency }));
+                        deliver(reply, Ok(BatchReply { values, latency }), &chaos_reply_drop);
                     }
                 }
                 Err(e) => {
                     // Requests are validated before enqueueing, so this
-                    // is a set-level failure (every shard poisoned):
-                    // report it to every waiter.
+                    // is a set-level failure (every shard poisoned or a
+                    // retry budget exhausted): report it to every
+                    // waiter.
                     let msg = format!("batch execution failed: {e}");
-                    for (reply, _) in transform_waiters {
-                        reply.send(Err(msg.clone()));
+                    for (reply, _, _) in transform_waiters {
+                        deliver(reply, Err(msg.clone()), &chaos_reply_drop);
                     }
                 }
             }
@@ -316,8 +394,8 @@ pub(crate) fn run_batcher(
         if infer_samples > 0 {
             match &model {
                 None => {
-                    for (reply, _, _) in infer_waiters {
-                        reply.send(Err("no model loaded".to_string()));
+                    for (reply, _, _, _) in infer_waiters {
+                        deliver(reply, Err("no model loaded".to_string()), &chaos_reply_drop);
                     }
                 }
                 Some(mlp) => {
@@ -342,19 +420,31 @@ pub(crate) fn run_batcher(
                                 .infer_samples_total
                                 .fetch_add(infer_samples as u64, Ordering::Relaxed);
                             let mut row = 0usize;
-                            for (reply, enqueued, samples) in infer_waiters {
+                            let now = Instant::now();
+                            for (reply, enqueued, samples, deadline) in infer_waiters {
                                 let values =
                                     logits[row * classes..(row + samples) * classes].to_vec();
                                 row += samples;
+                                if deadline.is_some_and(|d| now >= d) {
+                                    state
+                                        .deadline_expired_total
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    drop(reply);
+                                    continue;
+                                }
                                 let latency = enqueued.elapsed();
                                 state.record_infer_latency(latency);
-                                reply.send(Ok(BatchReply { values, latency }));
+                                deliver(
+                                    reply,
+                                    Ok(BatchReply { values, latency }),
+                                    &chaos_reply_drop,
+                                );
                             }
                         }
                         Err(e) => {
                             let msg = format!("inference failed: {e}");
-                            for (reply, _, _) in infer_waiters {
-                                reply.send(Err(msg.clone()));
+                            for (reply, _, _, _) in infer_waiters {
+                                deliver(reply, Err(msg.clone()), &chaos_reply_drop);
                             }
                         }
                     }
@@ -425,9 +515,11 @@ mod tests {
                 x,
                 thresholds_units,
                 scale: None,
+                deadline: None,
             }),
             reply: ReplySink::channel(reply),
             enqueued: Instant::now(),
+            deadline: None,
             trace: TraceHandle::inactive(),
         }
     }
@@ -508,6 +600,103 @@ mod tests {
         }
     }
 
+    #[test]
+    fn expired_deadline_items_are_dropped_before_dispatch() {
+        let set = test_set(1);
+        let state = test_state(&set);
+        let (tx, rx) = mpsc::channel();
+        // One live item, one whose deadline has already passed.
+        let (live_tx, live_rx) = mpsc::channel();
+        tx.send(transform_item(vec![0.5; 16], live_tx)).unwrap();
+        let (dead_tx, dead_rx) = mpsc::channel();
+        let mut dead = transform_item(vec![0.25; 16], dead_tx);
+        dead.deadline = Some(Instant::now() - Duration::from_millis(1));
+        tx.send(dead).unwrap();
+        drop(tx);
+        let metrics = run(rx, set, None, 8, Duration::from_secs(5), Arc::clone(&state));
+        assert!(live_rx.recv().unwrap().is_ok(), "the live item still serves");
+        assert!(dead_rx.recv().is_err(), "expired sink is dropped, not answered");
+        assert_eq!(state.deadline_expired_total.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            state.stale_dropped_total.load(Ordering::Relaxed),
+            0,
+            "deadline expiry is its own counter, not a stale drop"
+        );
+        assert_eq!(metrics.requests, 1, "expired work never reaches the pool");
+    }
+
+    #[test]
+    fn future_deadline_rides_through_to_a_normal_reply() {
+        let set = test_set(1);
+        let state = test_state(&set);
+        let (tx, rx) = mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let x = vec![0.5; 16];
+        let mut item = transform_item(x.clone(), reply_tx);
+        item.deadline = Some(Instant::now() + Duration::from_secs(30));
+        tx.send(item).unwrap();
+        drop(tx);
+        run(rx, set, None, 8, Duration::from_secs(5), Arc::clone(&state));
+        let reply = reply_rx.recv().unwrap().unwrap();
+        assert_eq!(reply.values, QuantBwht::new(16, 16, 8).transform(&x));
+        assert_eq!(state.deadline_expired_total.load(Ordering::Relaxed), 0);
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn injected_batcher_stall_slows_replies_without_corrupting_them() {
+        use crate::chaos::ChaosPlan;
+        let set = ShardSet::new(ShardSetConfig {
+            shards: 1,
+            coordinator: crate::coordinator::CoordinatorConfig {
+                chaos: ChaosPlan::parse("batcher.stall=1.0,11").unwrap(),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let state = test_state(&set);
+        let (tx, rx) = mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let x = vec![0.5; 16];
+        tx.send(transform_item(x.clone(), reply_tx)).unwrap();
+        drop(tx);
+        let t0 = Instant::now();
+        run(rx, set, None, 8, Duration::from_secs(5), state);
+        assert!(
+            t0.elapsed() >= crate::chaos::STALL,
+            "the stall point must actually stall the batch loop"
+        );
+        let reply = reply_rx.recv().unwrap().unwrap();
+        assert_eq!(reply.values, QuantBwht::new(16, 16, 8).transform(&x));
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn injected_reply_drop_loses_the_reply_not_the_server() {
+        use crate::chaos::ChaosPlan;
+        let set = ShardSet::new(ShardSetConfig {
+            shards: 1,
+            coordinator: crate::coordinator::CoordinatorConfig {
+                chaos: ChaosPlan::parse("batcher.reply.drop=1.0,12").unwrap(),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let state = test_state(&set);
+        let (tx, rx) = mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(transform_item(vec![0.5; 16], reply_tx)).unwrap();
+        drop(tx);
+        let metrics = run(rx, set, None, 8, Duration::from_secs(5), state);
+        assert!(
+            reply_rx.recv().is_err(),
+            "a dropped reply surfaces as a disconnected sink (the 504 path)"
+        );
+        assert_eq!(metrics.requests, 1, "the work itself still executed");
+    }
+
     fn tiny_mlp(hidden: usize) -> Mlp {
         let mut r = Rng::seed_from_u64(5);
         let din = 8;
@@ -542,6 +731,7 @@ mod tests {
                 payload: BatchPayload::Infer { x, samples: 1 },
                 reply: ReplySink::channel(reply_tx),
                 enqueued: Instant::now(),
+                deadline: None,
                 trace: TraceHandle::inactive(),
             })
             .unwrap();
@@ -591,6 +781,7 @@ mod tests {
             },
             reply: ReplySink::channel(reply_tx),
             enqueued: Instant::now(),
+            deadline: None,
             trace: TraceHandle::inactive(),
         })
         .unwrap();

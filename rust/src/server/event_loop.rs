@@ -48,6 +48,7 @@ use super::{
     error_json, finish_trace, render_reply, route_request, Dispatch, PendingKind, RouteOutcome,
     ServerConfig, ServerState,
 };
+use crate::chaos::ChaosPoint;
 use crate::server::admission::InflightPermit;
 use crate::trace::{self, TraceHandle};
 
@@ -109,6 +110,10 @@ struct Conn {
     served: usize,
     /// Live deadline; wheel hints revalidate against this.
     deadline: Instant,
+    /// When the in-flight request's first byte arrived — the anchor for
+    /// its end-to-end deadline (`X-Deadline-Ms` counts from here, not
+    /// from admission, so slow uploads spend their own budget).
+    req_start: Option<Instant>,
     /// Currently registered epoll interest.
     interest: u32,
     /// Peer shut down its write half: serve what is buffered, then close.
@@ -144,6 +149,15 @@ pub(crate) struct Reactor {
     /// Reused `/metrics` render buffer (satellite perf fix: the
     /// exposition no longer allocates a fresh `String` per scrape).
     scratch: String,
+    /// Latched once `state.draining` is observed: the listener is
+    /// deregistered, idle connections closed, and replies carry
+    /// `Connection: close` while in-flight work finishes.
+    draining: bool,
+    /// Fault injection at the socket seams (inert unless the binary is
+    /// built with `--features chaos` and a spec names them).
+    chaos_reset: ChaosPoint,
+    chaos_short_read: ChaosPoint,
+    chaos_short_write: ChaosPoint,
 }
 
 impl Reactor {
@@ -163,6 +177,10 @@ impl Reactor {
             interest::READ,
             TOKEN_WAKER,
         )?;
+        let chaos = &config.coordinator.chaos;
+        let chaos_reset = chaos.point("conn.reset");
+        let chaos_short_read = chaos.point("conn.short_read");
+        let chaos_short_write = chaos.point("conn.short_write");
         Ok(Reactor {
             epoll,
             listener,
@@ -175,6 +193,10 @@ impl Reactor {
             free: Vec::new(),
             wheel: TimerWheel::new(WHEEL_GRANULARITY, WHEEL_BUCKETS, Instant::now()),
             scratch: String::new(),
+            draining: false,
+            chaos_reset,
+            chaos_short_read,
+            chaos_short_write,
         })
     }
 
@@ -183,6 +205,9 @@ impl Reactor {
         let mut done: Vec<Completion> = Vec::new();
         let mut fired: Vec<(u32, u16)> = Vec::new();
         while !self.shutdown.load(Ordering::SeqCst) {
+            if !self.draining && self.state.draining.load(Ordering::Acquire) {
+                self.begin_drain();
+            }
             let timeout = self.wheel.next_timeout(Instant::now());
             if self.epoll.wait(&mut events, timeout).is_err() {
                 break;
@@ -214,7 +239,31 @@ impl Reactor {
         // letting the batcher drain and exit once all reactors stop.
     }
 
+    /// Graceful drain: stop accepting (deregister the listener), close
+    /// connections with nothing in flight, and let the rest finish
+    /// their current request — `write_done` closes them afterwards
+    /// because `keep_alive` is forced off while draining.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        let _ = self.epoll.delete(self.listener.as_raw_fd());
+        let idle: Vec<u32> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, entry)| {
+                let conn = entry.conn.as_ref()?;
+                (conn.state == ConnState::ReadHead && conn.rbuf.is_empty()).then_some(slot as u32)
+            })
+            .collect();
+        for slot in idle {
+            self.close(slot, false);
+        }
+    }
+
     fn accept_burst(&mut self) {
+        if self.draining {
+            return;
+        }
         loop {
             match self.listener.accept() {
                 Ok((stream, addr)) => self.admit_conn(stream, addr.ip()),
@@ -273,6 +322,7 @@ impl Reactor {
             keep_alive: true,
             served: 0,
             deadline,
+            req_start: None,
             interest: interest::READ,
             peer_eof: false,
             pending: None,
@@ -316,6 +366,14 @@ impl Reactor {
     /// Read everything the socket has into the connection's buffer,
     /// then run the parse/dispatch loop.
     fn fill(&mut self, slot: u32) {
+        // Injected connection reset: the peer vanishes mid-request.
+        if self.chaos_reset.fire() {
+            self.close(slot, false);
+            return;
+        }
+        // Injected short read: take one byte and yield, exercising the
+        // incremental parser (level-triggered epoll re-fires readable).
+        let short_read = self.chaos_short_read.fire();
         let mut failed = false;
         {
             let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
@@ -323,14 +381,18 @@ impl Reactor {
             };
             let mut buf = [0u8; 16 << 10];
             loop {
-                match conn.stream.read(&mut buf) {
+                let cap = if short_read { 1 } else { buf.len() };
+                match conn.stream.read(&mut buf[..cap]) {
                     Ok(0) => {
                         conn.peer_eof = true;
                         break;
                     }
                     Ok(n) => {
                         conn.rbuf.extend_from_slice(&buf[..n]);
-                        if n < buf.len() {
+                        if conn.req_start.is_none() {
+                            conn.req_start = Some(Instant::now());
+                        }
+                        if short_read || n < cap {
                             break;
                         }
                     }
@@ -420,9 +482,10 @@ impl Reactor {
         enum Routed {
             Inline(http::Response, bool),
             Metrics(bool),
-            Enqueue(Box<Dispatch>, bool),
+            Enqueue(Box<Dispatch>, bool, Instant),
         }
         let gen = self.slots[slot as usize].gen;
+        let draining = self.draining;
         let routed = {
             let state = &self.state;
             let config = &self.config;
@@ -433,16 +496,24 @@ impl Reactor {
             let total = conn.head.total_len();
             conn.served += 1;
             let req = conn.head.req(&conn.rbuf);
-            let keep_alive =
-                req.wants_keep_alive() && conn.served < config.keepalive_max_requests.max(1);
+            let keep_alive = req.wants_keep_alive()
+                && conn.served < config.keepalive_max_requests.max(1)
+                && !draining;
             let outcome = route_request(&req, conn.peer, state, config, scratch);
             // The request is consumed: drop its framed bytes so the
             // buffer fronts the next pipelined request (if any).
             conn.rbuf.drain(..total);
+            // The consumed request's first byte anchors its deadline;
+            // pipelined bytes already buffered count from now.
+            let now = Instant::now();
+            let anchor = conn.req_start.take().unwrap_or(now);
+            conn.req_start = (!conn.rbuf.is_empty()).then_some(now);
             match outcome {
                 RouteOutcome::Response(response) => Routed::Inline(response, keep_alive),
                 RouteOutcome::Scratch => Routed::Metrics(keep_alive),
-                RouteOutcome::Dispatch(dispatch) => Routed::Enqueue(Box::new(dispatch), keep_alive),
+                RouteOutcome::Dispatch(dispatch) => {
+                    Routed::Enqueue(Box::new(dispatch), keep_alive, anchor)
+                }
             }
         };
         match routed {
@@ -471,20 +542,30 @@ impl Reactor {
                 self.flush(slot);
                 self.can_continue(slot)
             }
-            Routed::Enqueue(dispatch, keep_alive) => {
-                self.enqueue(slot, gen, *dispatch, keep_alive);
+            Routed::Enqueue(dispatch, keep_alive, anchor) => {
+                self.enqueue(slot, gen, *dispatch, keep_alive, anchor);
                 false
             }
         }
     }
 
     /// Hand admitted work to the batcher and park the connection.
-    fn enqueue(&mut self, slot: u32, gen: u16, dispatch: Dispatch, keep_alive: bool) {
+    /// `anchor` is when the request's first byte arrived — its
+    /// `X-Deadline-Ms` budget counts from there.
+    fn enqueue(
+        &mut self,
+        slot: u32,
+        gen: u16,
+        dispatch: Dispatch,
+        keep_alive: bool,
+        anchor: Instant,
+    ) {
         let Dispatch {
             payload,
             kind,
             trace,
             permit,
+            deadline_budget,
         } = dispatch;
         let seq = {
             let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
@@ -494,10 +575,13 @@ impl Reactor {
             conn.keep_alive = keep_alive;
             conn.seq
         };
+        let now = Instant::now();
+        let hard_deadline = deadline_budget.map(|budget| anchor + budget);
         let item = BatchItem {
             payload,
             reply: ReplySink::event(Arc::clone(&self.completions), pack(slot, gen, seq)),
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: hard_deadline,
             trace: trace.clone(),
         };
         if self.batch_tx.send(item).is_err() {
@@ -507,7 +591,10 @@ impl Reactor {
             self.start_write(slot, &response, false);
             return;
         }
-        let deadline = Instant::now() + self.config.request_timeout;
+        // The connection waits until the request's own deadline (when it
+        // has one) or the server-wide in-flight timeout; whichever path
+        // fires first takes `pending` and the other is a no-op.
+        let deadline = hard_deadline.unwrap_or(now + self.config.request_timeout);
         if let Some(conn) = self.slots[slot as usize].conn.as_mut() {
             conn.pending = Some(Pending {
                 kind,
@@ -547,12 +634,23 @@ impl Reactor {
                 None => return,
             }
         };
+        if completion.result.is_none() {
+            // The batcher dropped the reply sink without answering
+            // (stale/deadline shed, worker failure, injected fault).
+            self.state
+                .dropped_reply_total
+                .fetch_add(1, Ordering::Relaxed);
+        }
         self.resolve(slot, pending, completion.result);
     }
 
     /// Render the reply for a request that left the batcher (result) or
-    /// hit its in-flight deadline (`None` → 504), then write it out.
+    /// hit its in-flight deadline (`None` → 504), then write it out.  A
+    /// dropped reply closes the connection after the 504: the server
+    /// cannot know whether the batcher side-effects for this request
+    /// ever happened, so the keep-alive stream is not reusable.
     fn resolve(&mut self, slot: u32, pending: Pending, result: Option<ReplyResult>) {
+        let dropped = result.is_none();
         let respond_start = if pending.trace.is_active() {
             trace::now_us()
         } else {
@@ -561,10 +659,12 @@ impl Reactor {
         let response = render_reply(pending.kind, result, &self.state);
         finish_trace(&self.state, pending.trace, respond_start);
         drop(pending.permit);
-        let keep_alive = self.slots[slot as usize]
-            .conn
-            .as_ref()
-            .is_some_and(|c| c.keep_alive);
+        let keep_alive = !dropped
+            && !self.draining
+            && self.slots[slot as usize]
+                .conn
+                .as_ref()
+                .is_some_and(|c| c.keep_alive);
         self.start_write(slot, &response, keep_alive);
         if self.can_continue(slot) {
             self.advance(slot);
@@ -588,6 +688,9 @@ impl Reactor {
     }
 
     fn flush(&mut self, slot: u32) {
+        // Injected short write: put one byte on the wire and report
+        // Blocked, exercising the write-interest/stall-deadline path.
+        let short_write = self.chaos_short_write.fire();
         let result = {
             let Some(conn) = self.slots[slot as usize].conn.as_mut() else {
                 return;
@@ -596,9 +699,19 @@ impl Reactor {
                 if conn.wpos >= conn.wbuf.len() {
                     break FlushResult::Done;
                 }
-                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                let end = if short_write {
+                    conn.wpos + 1
+                } else {
+                    conn.wbuf.len()
+                };
+                match conn.stream.write(&conn.wbuf[conn.wpos..end]) {
                     Ok(0) => break FlushResult::Close,
-                    Ok(n) => conn.wpos += n,
+                    Ok(n) => {
+                        conn.wpos += n;
+                        if short_write {
+                            break FlushResult::Blocked;
+                        }
+                    }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => break FlushResult::Blocked,
                     Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                     Err(_) => break FlushResult::Close,
@@ -641,7 +754,7 @@ impl Reactor {
             conn.wpos = 0;
             conn.keep_alive && !conn.peer_eof
         };
-        if !keep {
+        if !keep || self.draining {
             self.close(slot, false);
             return;
         }
@@ -705,6 +818,12 @@ impl Reactor {
                 // handler's recv_timeout.  A late batcher reply for
                 // this request is ignored (pending is gone, and any
                 // newer request on the connection has a newer seq).
+                self.state
+                    .deadline_expired_total
+                    .fetch_add(1, Ordering::Relaxed);
+                self.state
+                    .dropped_deadline_total
+                    .fetch_add(1, Ordering::Relaxed);
                 self.resolve(slot, pending, None);
             }
         }

@@ -93,15 +93,24 @@ fn backend_features() -> &'static str {
         cfg!(feature = "pjrt"),
         cfg!(feature = "trace-off"),
         cfg!(feature = "monitor-off"),
+        cfg!(feature = "chaos"),
     ) {
-        (true, true, true) => "pjrt,trace-off,monitor-off",
-        (true, true, false) => "pjrt,trace-off",
-        (true, false, true) => "pjrt,monitor-off",
-        (true, false, false) => "pjrt",
-        (false, true, true) => "trace-off,monitor-off",
-        (false, true, false) => "trace-off",
-        (false, false, true) => "monitor-off",
-        (false, false, false) => "default",
+        (true, true, true, true) => "pjrt,trace-off,monitor-off,chaos",
+        (true, true, true, false) => "pjrt,trace-off,monitor-off",
+        (true, true, false, true) => "pjrt,trace-off,chaos",
+        (true, true, false, false) => "pjrt,trace-off",
+        (true, false, true, true) => "pjrt,monitor-off,chaos",
+        (true, false, true, false) => "pjrt,monitor-off",
+        (true, false, false, true) => "pjrt,chaos",
+        (true, false, false, false) => "pjrt",
+        (false, true, true, true) => "trace-off,monitor-off,chaos",
+        (false, true, true, false) => "trace-off,monitor-off",
+        (false, true, false, true) => "trace-off,chaos",
+        (false, true, false, false) => "trace-off",
+        (false, false, true, true) => "monitor-off,chaos",
+        (false, false, true, false) => "monitor-off",
+        (false, false, false, true) => "chaos",
+        (false, false, false, false) => "default",
     }
 }
 
@@ -243,6 +252,46 @@ pub(crate) fn render_into(state: &ServerState, out: &mut String) {
         "Poisoned shards respawned by the serve loop's health tick.",
         state.shard_respawns.load(Ordering::Acquire),
     );
+    // Circuit-breaker state machine, per shard slot: 0 = closed,
+    // 1 = half-open (probing), 2 = open (shedding), plus the current
+    // respawn backoff the heal pass honours for the slot.
+    let breakers = state.breakers.snapshot();
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_breaker_state Circuit breaker state, by shard (0=closed, 1=half-open, 2=open)."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_breaker_state gauge");
+    for (s, b) in breakers.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_breaker_state{{shard=\"{s}\"}} {}",
+            b.state.code()
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_breaker_failure_ewma Failure-rate EWMA driving the breaker, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_breaker_failure_ewma gauge");
+    for (s, b) in breakers.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_breaker_failure_ewma{{shard=\"{s}\"}} {}",
+            fmt_f64(b.failure_ewma)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP repro_shard_respawn_backoff_seconds Current respawn backoff the heal pass honours, by shard."
+    );
+    let _ = writeln!(out, "# TYPE repro_shard_respawn_backoff_seconds gauge");
+    for (s, b) in breakers.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "repro_shard_respawn_backoff_seconds{{shard=\"{s}\"}} {}",
+            fmt_f64(b.respawn_backoff.as_secs_f64())
+        );
+    }
     let _ = writeln!(
         out,
         "# HELP repro_shard_requests_total Transform slices completed, by shard."
@@ -367,6 +416,33 @@ pub(crate) fn render_into(state: &ServerState, out: &mut String) {
         "repro_stale_dropped_total",
         "Queued requests dropped because their client timed out first.",
         state.stale_dropped_total.load(Ordering::Relaxed),
+    );
+    counter_u64(
+        out,
+        "repro_requests_deadline_expired_total",
+        "Requests whose end-to-end deadline expired before a reply (queue shed, post-execution discard or connection timeout).",
+        state.deadline_expired_total.load(Ordering::Relaxed),
+    );
+    let _ = writeln!(
+        out,
+        "# HELP repro_requests_dropped_total Requests answered 504 without a real reply, by reason."
+    );
+    let _ = writeln!(out, "# TYPE repro_requests_dropped_total counter");
+    let _ = writeln!(
+        out,
+        "repro_requests_dropped_total{{reason=\"reply_dropped\"}} {}",
+        state.dropped_reply_total.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "repro_requests_dropped_total{{reason=\"deadline\"}} {}",
+        state.dropped_deadline_total.load(Ordering::Relaxed)
+    );
+    gauge_f64(
+        out,
+        "repro_server_draining",
+        "Whether a graceful drain is in progress (1) or not (0).",
+        f64::from(u8::from(state.draining.load(Ordering::Acquire))),
     );
     gauge_f64(
         out,
@@ -656,6 +732,7 @@ mod tests {
                 x: x.clone(),
                 thresholds_units: vec![0.0; 16],
                 scale: None,
+                deadline: None,
             })
             .unwrap();
         coord
@@ -663,6 +740,7 @@ mod tests {
                 x,
                 thresholds_units: vec![1e9; 16],
                 scale: None,
+                deadline: None,
             })
             .unwrap();
         state.record_latency(Duration::from_micros(300));
@@ -787,6 +865,7 @@ mod tests {
                 x,
                 thresholds_units: vec![0.0; 64],
                 scale: None,
+                deadline: None,
             },
         )
         .unwrap();
@@ -886,6 +965,57 @@ mod tests {
         render_into(&state, &mut buf);
         assert_eq!(metric_value(&buf, "repro_metrics_buffer_bytes"), cap as f64);
         assert!(buf.capacity() >= cap);
+    }
+
+    #[test]
+    fn renders_breaker_deadline_and_drop_families() {
+        use std::time::Instant;
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let state = Arc::new(ServerState::new(
+            AdmissionConfig::default(),
+            MetricsAggregator::new(vec![coord.metrics_handle()], 8),
+            Arc::new(AtomicUsize::new(2)),
+            Arc::new(AtomicU64::new(0)),
+            Arc::new(vec![AtomicBool::new(true), AtomicBool::new(true)]),
+            EnergyModel::new(16, 0.8),
+            Arc::new(Tracer::new(TraceConfig::default())),
+            Arc::new(Monitor::disabled()),
+        ));
+        coord.shutdown();
+        state.deadline_expired_total.fetch_add(3, Ordering::Relaxed);
+        state.dropped_reply_total.fetch_add(2, Ordering::Relaxed);
+        state.dropped_deadline_total.fetch_add(1, Ordering::Relaxed);
+        state.breakers.force_open(1, Instant::now());
+        let text = render(&state);
+        assert_eq!(
+            metric_value(&text, "repro_requests_deadline_expired_total"),
+            3.0,
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_requests_dropped_total{reason=\"reply_dropped\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_requests_dropped_total{reason=\"deadline\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_shard_breaker_state{shard=\"0\"} 0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_shard_breaker_state{shard=\"1\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("repro_shard_respawn_backoff_seconds{shard=\"0\"} 0"),
+            "{text}"
+        );
+        assert_eq!(metric_value(&text, "repro_server_draining"), 0.0);
+        state.draining.store(true, Ordering::SeqCst);
+        let text = render(&state);
+        assert_eq!(metric_value(&text, "repro_server_draining"), 1.0);
     }
 
     #[cfg(not(feature = "monitor-off"))]

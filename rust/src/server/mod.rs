@@ -84,7 +84,7 @@ use crate::coordinator::{
 use crate::energy::EnergyModel;
 use crate::monitor::{Monitor, MonitorConfig};
 use crate::nn::Mlp;
-use crate::shard::{MetricsAggregator, ShardSet, ShardSetConfig};
+use crate::shard::{BreakerSet, MetricsAggregator, ShardSet, ShardSetConfig};
 use crate::trace::{self, Stage, TraceConfig, TraceHandle, Tracer};
 use crate::util::json::{self, Json};
 
@@ -171,6 +171,16 @@ pub struct ServerConfig {
     /// canary slot among digital shards).  `None` gives every shard
     /// `coordinator.kind`.  Length must equal `shards`.
     pub shard_kinds: Option<Vec<TileKind>>,
+    /// Deadline applied to requests that send no `X-Deadline-Ms` header
+    /// (`None` = such requests are bounded only by `request_timeout`).
+    pub default_deadline_ms: Option<u64>,
+    /// Upper clamp on any per-request deadline, header-supplied or
+    /// defaulted — clients cannot buy unbounded queueing time.
+    pub max_deadline_ms: u64,
+    /// How long a graceful drain ([`Server::drain`], SIGTERM/SIGINT in
+    /// the CLI) waits for in-flight requests to finish before forcing
+    /// shutdown.
+    pub drain_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -199,6 +209,9 @@ impl Default for ServerConfig {
             fidelity_sample: 16,
             drift_threshold: 1.0,
             shard_kinds: None,
+            default_deadline_ms: None,
+            max_deadline_ms: 60_000,
+            drain_timeout_ms: 5_000,
         }
     }
 }
@@ -230,6 +243,17 @@ pub(crate) struct ServerState {
     pub infer_batches_total: AtomicU64,
     /// Items the batcher discarded because their client timed out.
     pub stale_dropped_total: AtomicU64,
+    /// Requests whose end-to-end deadline expired before a reply could
+    /// be delivered — shed in the batcher queue, discarded after
+    /// execution, or timed out at the connection.  Each expiry counts
+    /// exactly once (the paths are disjoint).
+    pub deadline_expired_total: AtomicU64,
+    /// 504s delivered because the batcher dropped the reply sink
+    /// (stale/deadline shed, worker failure or injected fault).
+    pub dropped_reply_total: AtomicU64,
+    /// 504s delivered because the connection's in-flight deadline fired
+    /// before any completion arrived.
+    pub dropped_deadline_total: AtomicU64,
     /// Currently open connections across every reactor.
     pub connections: AtomicUsize,
     /// Lifetime accepted connections.
@@ -241,6 +265,14 @@ pub(crate) struct ServerState {
     /// Per-shard-slot health flags for `/readyz` (slot-granular, kept
     /// current by the [`ShardSet`] through poison/respawn/shutdown).
     pub slot_health: Arc<Vec<AtomicBool>>,
+    /// Per-shard circuit breakers shared with the [`ShardSet`] router;
+    /// feeds `/readyz` breaker labels and the `repro_shard_breaker_state`
+    /// / `repro_shard_respawn_backoff_seconds` gauge families.
+    pub breakers: Arc<BreakerSet>,
+    /// Set once a graceful drain begins: `/readyz` fails and the
+    /// reactors stop accepting new connections while in-flight work
+    /// finishes.
+    pub draining: AtomicBool,
     /// Request tracer feeding `repro_stage_seconds`, `/debug/traces`
     /// and slow-request logging.
     pub tracer: Arc<Tracer>,
@@ -280,10 +312,17 @@ impl ServerState {
             infer_samples_total: AtomicU64::new(0),
             infer_batches_total: AtomicU64::new(0),
             stale_dropped_total: AtomicU64::new(0),
+            deadline_expired_total: AtomicU64::new(0),
+            dropped_reply_total: AtomicU64::new(0),
+            dropped_deadline_total: AtomicU64::new(0),
             connections: AtomicUsize::new(0),
             connections_accepted: AtomicU64::new(0),
             connections_timed_out: AtomicU64::new(0),
             metrics_buf_hwm: AtomicUsize::new(0),
+            // A standalone breaker set sized to the slots; `Server::start`
+            // swaps in the one shared with the ShardSet's router.
+            breakers: Arc::new(BreakerSet::new(slot_health.len(), 0)),
+            draining: AtomicBool::new(false),
             slot_health,
             tracer,
             monitor,
@@ -387,7 +426,7 @@ impl Server {
             slow_us: config.slow_ms.saturating_mul(1000),
             ..TraceConfig::default()
         }));
-        let state = Arc::new(ServerState::new(
+        let mut server_state = ServerState::new(
             config.admission.clone(),
             shards.aggregator(),
             shards.health_handle(),
@@ -396,7 +435,11 @@ impl Server {
             EnergyModel::new(coordinator.tile_n, config.vdd),
             tracer,
             monitor,
-        ));
+        );
+        // Share the shard set's breakers so /readyz and /metrics report
+        // the same state machine the router consults.
+        server_state.breakers = Arc::clone(shards.breakers());
+        let state = Arc::new(server_state);
 
         let (batch_tx, batch_rx) = mpsc::channel::<BatchItem>();
         let max_batch = config.max_batch.max(1);
@@ -461,6 +504,37 @@ impl Server {
         self.state.shard_metrics.merged()
     }
 
+    /// Begin a graceful drain: `/readyz` starts answering 503 (so load
+    /// balancers steer new traffic away), the reactors stop accepting
+    /// connections and close idle keep-alive ones, and every in-flight
+    /// request keeps being served to completion with
+    /// `Connection: close` on its reply.
+    pub fn begin_drain(&self) {
+        self.state.draining.store(true, Ordering::SeqCst);
+        // Ring every reactor out of epoll_wait so it notices the flag,
+        // deregisters the listener and sweeps idle connections.
+        for queue in &self.completions {
+            queue.waker().wake();
+        }
+    }
+
+    /// Gracefully drain and shut down: stop accepting, wait up to
+    /// `timeout` for in-flight requests *and* their response writes to
+    /// finish, then stop the reactors and batcher.  In-flight clients
+    /// get their real replies, not resets — the integration tests
+    /// assert zero dropped responses across a drain.
+    pub fn drain(self, timeout: Duration) -> Metrics {
+        self.begin_drain();
+        let give_up = Instant::now() + timeout;
+        while (self.state.admission.inflight() > 0
+            || self.state.connections.load(Ordering::Acquire) > 0)
+            && Instant::now() < give_up
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.shutdown()
+    }
+
     /// Graceful shutdown: stop the reactors (closing their connections),
     /// drain the batcher, shut the pool down, and return the merged
     /// worker metrics.
@@ -496,6 +570,11 @@ pub(crate) struct Dispatch {
     pub kind: PendingKind,
     pub trace: TraceHandle,
     pub permit: InflightPermit,
+    /// End-to-end deadline budget (`X-Deadline-Ms` clamped, or the
+    /// configured default).  The event loop anchors it at the request's
+    /// first byte and threads the absolute deadline through the batcher
+    /// into the tile pool.
+    pub deadline_budget: Option<Duration>,
 }
 
 /// Which endpoint a parked connection is waiting on, with what it needs
@@ -613,11 +692,16 @@ pub(crate) fn render_reply(
     }
 }
 
-/// Shard-health-aware readiness: 200 when every shard slot is healthy,
-/// 503 (with the same per-shard body) while any slot is poisoned or
-/// mid-respawn — load balancers keep draining the node without killing
-/// it, since `/healthz` stays green.
+/// Shard-health-aware readiness: 200 when every shard slot is healthy
+/// and the server is not draining, 503 (with the same per-shard body)
+/// while any slot is poisoned/mid-respawn or a graceful drain is in
+/// progress — load balancers keep draining the node without killing it,
+/// since `/healthz` stays green.  Each shard entry carries its circuit
+/// breaker state (`closed`/`half-open`/`open`) so operators can tell a
+/// shedding slot from a dead one.
 fn readyz_response(state: &ServerState) -> http::Response {
+    let draining = state.draining.load(Ordering::Acquire);
+    let breakers = state.breakers.snapshot();
     let mut all_healthy = true;
     let mut shards = Vec::with_capacity(state.slot_health.len());
     for (slot, flag) in state.slot_health.iter().enumerate() {
@@ -626,12 +710,19 @@ fn readyz_response(state: &ServerState) -> http::Response {
         let mut obj = BTreeMap::new();
         obj.insert("shard".to_string(), Json::Num(slot as f64));
         obj.insert("healthy".to_string(), Json::Bool(healthy));
+        let breaker = breakers
+            .get(slot)
+            .map(|b| b.state.label())
+            .unwrap_or("closed");
+        obj.insert("breaker".to_string(), Json::Str(breaker.to_string()));
         shards.push(Json::Obj(obj));
     }
+    let ready = all_healthy && !draining;
     let mut obj = BTreeMap::new();
-    obj.insert("ready".to_string(), Json::Bool(all_healthy));
+    obj.insert("ready".to_string(), Json::Bool(ready));
+    obj.insert("draining".to_string(), Json::Bool(draining));
     obj.insert("shards".to_string(), Json::Arr(shards));
-    http::Response::json(if all_healthy { 200 } else { 503 }, &Json::Obj(obj))
+    http::Response::json(if ready { 200 } else { 503 }, &Json::Obj(obj))
 }
 
 /// First value of `key` in a URL query string (no percent-decoding —
@@ -679,6 +770,51 @@ pub(crate) fn error_json(message: &str) -> Json {
 fn bad_request(state: &ServerState, message: &str) -> http::Response {
     state.bad_requests.fetch_add(1, Ordering::Relaxed);
     http::Response::json(400, &error_json(message))
+}
+
+/// Effective per-request deadline budget: the client's `X-Deadline-Ms`
+/// (if sent) clamped to `[1, max_ms]`, else the configured default
+/// (same clamp), else `None` — in which case only `request_timeout`
+/// bounds the request.  Pure so the arithmetic is unit-testable.
+pub(crate) fn deadline_budget(
+    header_ms: Option<u64>,
+    default_ms: Option<u64>,
+    max_ms: u64,
+) -> Option<Duration> {
+    let ms = header_ms.or(default_ms)?;
+    Some(Duration::from_millis(ms.clamp(1, max_ms.max(1))))
+}
+
+/// Parse `X-Deadline-Ms` into a millisecond count.  Absent is fine
+/// (`Ok(None)`); present-but-garbage (non-numeric, zero) is a client
+/// error the caller maps to a 400.
+fn parse_deadline_header(req: &http::Req<'_>) -> std::result::Result<Option<u64>, ()> {
+    match req.header("x-deadline-ms") {
+        None => Ok(None),
+        Some(v) => match v.trim().parse::<u64>() {
+            Ok(ms) if ms > 0 => Ok(Some(ms)),
+            _ => Err(()),
+        },
+    }
+}
+
+/// Deadline budget for one parsed request, or the 400 to answer with.
+fn request_deadline_budget(
+    req: &http::Req<'_>,
+    state: &ServerState,
+    config: &ServerConfig,
+) -> std::result::Result<Option<Duration>, http::Response> {
+    match parse_deadline_header(req) {
+        Ok(header_ms) => Ok(deadline_budget(
+            header_ms,
+            config.default_deadline_ms,
+            config.max_deadline_ms,
+        )),
+        Err(()) => Err(bad_request(
+            state,
+            "X-Deadline-Ms must be a positive integer (milliseconds)",
+        )),
+    }
 }
 
 /// Admit a parsed request, mapping rejections to 429s.
@@ -762,6 +898,7 @@ fn transform_dispatch(
         }
     };
 
+    let deadline_budget = request_deadline_budget(req, state, config)?;
     let permit = admit(state, peer)?;
     let trace = trace_admitted(state, "/v1/transform", t0);
     Ok(Dispatch {
@@ -769,10 +906,12 @@ fn transform_dispatch(
             x,
             thresholds_units,
             scale: None,
+            deadline: None,
         }),
         kind: PendingKind::Transform,
         trace,
         permit,
+        deadline_budget,
     })
 }
 
@@ -885,6 +1024,7 @@ fn infer_dispatch(
         1
     };
 
+    let deadline_budget = request_deadline_budget(req, state, config)?;
     let permit = admit(state, peer)?;
     let trace = trace_admitted(state, "/v1/infer", t0);
     Ok(Dispatch {
@@ -896,6 +1036,7 @@ fn infer_dispatch(
         },
         trace,
         permit,
+        deadline_budget,
     })
 }
 
@@ -954,6 +1095,99 @@ mod tests {
         assert_eq!(body.get("checked").and_then(Json::as_f64), Some(0.0));
         assert!(body.get("slots").and_then(Json::as_arr).is_some());
         assert!(body.get("recent").and_then(Json::as_arr).is_some());
+    }
+
+    #[test]
+    fn deadline_budget_clamps_header_and_falls_back_to_the_default() {
+        // Header wins over the default and is clamped to max.
+        assert_eq!(
+            deadline_budget(Some(250), Some(1_000), 60_000),
+            Some(Duration::from_millis(250))
+        );
+        assert_eq!(
+            deadline_budget(Some(120_000), None, 60_000),
+            Some(Duration::from_millis(60_000)),
+            "header above max clamps down"
+        );
+        // No header: the configured default applies (same clamp).
+        assert_eq!(
+            deadline_budget(None, Some(90_000), 60_000),
+            Some(Duration::from_millis(60_000))
+        );
+        // Neither: no deadline at all.
+        assert_eq!(deadline_budget(None, None, 60_000), None);
+        // Degenerate max never produces a zero-length budget.
+        assert_eq!(
+            deadline_budget(Some(5), None, 0),
+            Some(Duration::from_millis(1))
+        );
+    }
+
+    #[test]
+    fn garbage_deadline_header_answers_400() {
+        let state = test_state(vec![true]);
+        let config = ServerConfig::default();
+        let peer = IpAddr::V4(std::net::Ipv4Addr::LOCALHOST);
+        let mut scratch = String::new();
+        let body = r#"{"x": [0.5, -0.25]}"#;
+        let raw = format!(
+            "POST /v1/transform HTTP/1.1\r\nX-Deadline-Ms: soon\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let mut buf = raw.into_bytes();
+        let mut head = http::Head::default();
+        assert_eq!(head.parse(&mut buf).unwrap(), http::Parse::Complete);
+        let req = head.req(&buf);
+        let RouteOutcome::Response(resp) = route_request(&req, peer, &state, &config, &mut scratch)
+        else {
+            panic!("a garbage deadline header must answer inline");
+        };
+        assert_eq!(resp.status, 400);
+        assert_eq!(state.bad_requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn valid_deadline_header_rides_into_the_dispatch() {
+        let state = test_state(vec![true]);
+        let config = ServerConfig::default();
+        let peer = IpAddr::V4(std::net::Ipv4Addr::LOCALHOST);
+        let mut scratch = String::new();
+        let body = r#"{"x": [0.5, -0.25]}"#;
+        let raw = format!(
+            "POST /v1/transform HTTP/1.1\r\nX-Deadline-Ms: 750\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let mut buf = raw.into_bytes();
+        let mut head = http::Head::default();
+        assert_eq!(head.parse(&mut buf).unwrap(), http::Parse::Complete);
+        let req = head.req(&buf);
+        let RouteOutcome::Dispatch(dispatch) =
+            route_request(&req, peer, &state, &config, &mut scratch)
+        else {
+            panic!("a valid transform must dispatch");
+        };
+        assert_eq!(dispatch.deadline_budget, Some(Duration::from_millis(750)));
+    }
+
+    #[test]
+    fn readyz_reports_draining_and_breaker_states() {
+        let state = test_state(vec![true, true]);
+        // A tripped breaker shows up by label even while the slot flag
+        // is still healthy (shedding, not dead).
+        state.breakers.force_open(1, Instant::now());
+        let resp = readyz_response(&state);
+        assert_eq!(resp.status, 200, "open breaker alone does not fail readiness");
+        let body = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let shards = body.get("shards").and_then(Json::as_arr).unwrap();
+        assert!(matches!(shards[0].get("breaker"), Some(Json::Str(s)) if s == "closed"));
+        assert!(matches!(shards[1].get("breaker"), Some(Json::Str(s)) if s == "open"));
+        // Draining fails readiness even with every slot healthy.
+        state.draining.store(true, Ordering::SeqCst);
+        let resp = readyz_response(&state);
+        assert_eq!(resp.status, 503);
+        let body = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert!(matches!(body.get("ready"), Some(Json::Bool(false))));
+        assert!(matches!(body.get("draining"), Some(Json::Bool(true))));
     }
 
     #[test]

@@ -1,0 +1,549 @@
+//! Per-shard circuit breakers and failover backoff.
+//!
+//! A shard that keeps failing should stop receiving traffic *before*
+//! every request through it has paid the failure latency, and a shard
+//! that keeps dying should stop being respawned on every health tick.
+//! This module is the shared state machine for both decisions:
+//!
+//! ```text
+//!             failure EWMA ≥ threshold, or
+//!             OPEN_CONSECUTIVE_FAILURES in a row
+//!   Closed ────────────────────────────────────▶ Open (until = now + d)
+//!     ▲                                            │ d doubles per trip,
+//!     │ probe succeeds                             │ ± deterministic jitter
+//!     │                                            ▼ open window elapses
+//!   HalfOpen ◀────────────────────────────────── (first allow() is the probe)
+//!     │ probe fails → Open again, window doubled
+//! ```
+//!
+//! The router consults [`BreakerSet::allow`] when picking a scatter or
+//! reroute target, reports outcomes through `record_success` /
+//! `record_failure`, and the batcher's heal pass gates pool respawns on
+//! [`BreakerSet::respawn_allowed`] — exponential per-slot backoff so a
+//! permanently sick shard converges to open-breaker shedding instead of
+//! a respawn storm.  Drift detections from the fidelity monitor feed
+//! the same failure EWMA, so a silently-diverging analog shard trips
+//! the breaker just like a dying one.
+//!
+//! Every method takes `now: Instant` explicitly: the state machine is a
+//! pure function of its inputs, which keeps chaos runs reproducible and
+//! lets tests drive the clock instead of sleeping.  Thresholds and
+//! backoff constants are derived in `DESIGN.md`.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// EWMA smoothing factor for the per-shard failure rate.  With
+/// `α = 0.25` the EWMA crosses [`OPEN_FAILURE_THRESHOLD`] after ~3
+/// consecutive failures from a clean history (`1-(1-α)^3 ≈ 0.58`),
+/// aligning the rate trigger with the streak trigger.
+pub const FAILURE_EWMA_ALPHA: f64 = 0.25;
+
+/// Failure-rate EWMA at or above which a closed breaker trips.
+pub const OPEN_FAILURE_THRESHOLD: f64 = 0.5;
+
+/// Consecutive-failure streak that trips a closed breaker regardless
+/// of the EWMA (fast path for a shard that dies outright).
+pub const OPEN_CONSECUTIVE_FAILURES: u32 = 3;
+
+/// Open window after the first trip; doubles on every consecutive
+/// trip.  One window covers a few health ticks (250 ms default), so a
+/// respawned-and-healthy pool reopens for traffic within ~2 ticks.
+pub const OPEN_BASE: Duration = Duration::from_millis(500);
+
+/// Ceiling on the open window (a flapping shard is retried at least
+/// this often).
+pub const OPEN_CAP: Duration = Duration::from_secs(8);
+
+/// Jitter fraction applied to each open window (deterministic, seeded
+/// per slot + trip count) so shards tripped together do not re-probe
+/// in lockstep.
+pub const OPEN_JITTER: f64 = 0.10;
+
+/// Probes admitted while half-open before the breaker decides.
+pub const HALF_OPEN_PROBES: u32 = 2;
+
+/// Backoff after the *second* respawn of the same slot (the first is
+/// free so a one-off pool death heals on the next tick); doubles per
+/// consecutive respawn.
+pub const RESPAWN_BACKOFF_BASE: Duration = Duration::from_millis(250);
+
+/// Ceiling on the per-slot respawn backoff.
+pub const RESPAWN_BACKOFF_CAP: Duration = Duration::from_secs(10);
+
+/// Breaker position, exported as `repro_shard_breaker_state`
+/// (0 = closed, 1 = half-open, 2 = open).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    HalfOpen,
+    Open,
+}
+
+impl BreakerState {
+    /// Gauge encoding for `/metrics`.
+    pub fn code(self) -> u8 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+
+    /// Human label for `/readyz`.
+    pub fn label(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Open => "open",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    state: BreakerState,
+    /// When an open breaker may admit its first half-open probe.
+    open_until: Option<Instant>,
+    /// Probes still admitted in the current half-open window.
+    probes_left: u32,
+    failure_ewma: f64,
+    consecutive_failures: u32,
+    /// Consecutive trips without an intervening close (drives the
+    /// exponential open window).
+    open_streak: u32,
+    /// Consecutive respawns without the slot proving healthy (drives
+    /// the exponential respawn backoff).
+    respawn_streak: u32,
+    /// Earliest instant the next respawn of this slot is allowed.
+    respawn_not_before: Option<Instant>,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            state: BreakerState::Closed,
+            open_until: None,
+            probes_left: 0,
+            failure_ewma: 0.0,
+            consecutive_failures: 0,
+            open_streak: 0,
+            respawn_streak: 0,
+            respawn_not_before: None,
+        }
+    }
+}
+
+/// Point-in-time view of one slot's breaker, for `/readyz` and the
+/// `/metrics` exporter.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerSnapshot {
+    pub state: BreakerState,
+    /// Smoothed failure rate in `[0, 1]`.
+    pub failure_ewma: f64,
+    /// The backoff the *next* respawn of this slot must wait out,
+    /// exported as `repro_shard_respawn_backoff_seconds`.
+    pub respawn_backoff: Duration,
+}
+
+/// One breaker per shard slot, shared (`Arc`) between the router, the
+/// batcher's heal pass, `/readyz` and the metrics exporter.  Slots are
+/// independently locked; none of the operations are on the per-sample
+/// hot path (they run per drained job, per failure, per health tick,
+/// per scrape).
+#[derive(Debug)]
+pub struct BreakerSet {
+    slots: Vec<Mutex<Slot>>,
+    seed: u64,
+}
+
+pub(crate) fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Exponential-with-cap schedule shared by the open window and the
+/// respawn backoff: `base * 2^(streak-1)`, saturating at `cap`.
+pub(crate) fn backoff(base: Duration, cap: Duration, streak: u32) -> Duration {
+    if streak == 0 {
+        return Duration::ZERO;
+    }
+    let exp = streak.saturating_sub(1).min(30);
+    base.checked_mul(1u32 << exp).map_or(cap, |d| d.min(cap))
+}
+
+impl BreakerSet {
+    /// One closed breaker per slot.  `seed` drives the deterministic
+    /// open-window jitter (the serving config seed, so a chaos run's
+    /// breaker timing reproduces with the rest of the system).
+    pub fn new(slots: usize, seed: u64) -> BreakerSet {
+        BreakerSet {
+            slots: (0..slots).map(|_| Mutex::new(Slot::new())).collect(),
+            seed,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    fn slot(&self, shard: usize) -> std::sync::MutexGuard<'_, Slot> {
+        self.slots[shard].lock().expect("breaker state poisoned")
+    }
+
+    /// Deterministic jitter in `[-OPEN_JITTER, +OPEN_JITTER]` for slot
+    /// `shard`'s `streak`-th trip.
+    fn jitter(&self, shard: usize, streak: u32) -> f64 {
+        let z = splitmix64(self.seed ^ ((shard as u64) << 32) ^ streak as u64);
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        (2.0 * u - 1.0) * OPEN_JITTER
+    }
+
+    fn trip(&self, shard: usize, slot: &mut Slot, now: Instant) {
+        slot.open_streak = slot.open_streak.saturating_add(1);
+        let window = backoff(OPEN_BASE, OPEN_CAP, slot.open_streak);
+        let jittered = window.mul_f64(1.0 + self.jitter(shard, slot.open_streak));
+        slot.state = BreakerState::Open;
+        slot.open_until = Some(now + jittered.min(OPEN_CAP));
+        slot.probes_left = 0;
+    }
+
+    /// May traffic be routed to this shard right now?  Consults and
+    /// *advances* the state machine: the call that finds an elapsed
+    /// open window becomes the first half-open probe, and each
+    /// half-open `true` spends one probe slot — so concurrent callers
+    /// cannot all pile onto a recovering shard (the half-open probe
+    /// race from the issue checklist).
+    pub fn allow(&self, shard: usize, now: Instant) -> bool {
+        let mut s = self.slot(shard);
+        match s.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if s.open_until.is_some_and(|t| now >= t) {
+                    s.state = BreakerState::HalfOpen;
+                    s.open_until = None;
+                    s.probes_left = HALF_OPEN_PROBES.saturating_sub(1);
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if s.probes_left > 0 {
+                    s.probes_left -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A job on this shard completed cleanly.  Decays the failure
+    /// EWMA; a half-open shard closes (and its open window resets) on
+    /// its first success, and the slot's respawn streak is forgiven —
+    /// it proved itself.
+    pub fn record_success(&self, shard: usize) {
+        let mut s = self.slot(shard);
+        s.failure_ewma *= 1.0 - FAILURE_EWMA_ALPHA;
+        s.consecutive_failures = 0;
+        s.respawn_streak = 0;
+        s.respawn_not_before = None;
+        if s.state == BreakerState::HalfOpen {
+            s.state = BreakerState::Closed;
+            s.open_streak = 0;
+            s.probes_left = 0;
+        }
+    }
+
+    /// A job on this shard failed (pool submit/drain error, worker
+    /// panic, or a drift detection from the fidelity monitor).  Trips
+    /// the breaker when the EWMA or the streak crosses its threshold;
+    /// a failed half-open probe reopens immediately with a doubled
+    /// window.
+    pub fn record_failure(&self, shard: usize, now: Instant) {
+        let mut s = self.slot(shard);
+        s.failure_ewma = s.failure_ewma * (1.0 - FAILURE_EWMA_ALPHA) + FAILURE_EWMA_ALPHA;
+        s.consecutive_failures = s.consecutive_failures.saturating_add(1);
+        match s.state {
+            BreakerState::HalfOpen => self.trip(shard, &mut s, now),
+            BreakerState::Closed
+                if s.failure_ewma >= OPEN_FAILURE_THRESHOLD
+                    || s.consecutive_failures >= OPEN_CONSECUTIVE_FAILURES =>
+            {
+                self.trip(shard, &mut s, now)
+            }
+            _ => {}
+        }
+    }
+
+    /// Force the breaker open (shard poisoned: its pool is gone, no
+    /// probabilistic judgement needed).
+    pub fn force_open(&self, shard: usize, now: Instant) {
+        let mut s = self.slot(shard);
+        s.failure_ewma = 1.0;
+        s.consecutive_failures = s.consecutive_failures.max(OPEN_CONSECUTIVE_FAILURES);
+        self.trip(shard, &mut s, now);
+    }
+
+    /// The slot was respawned with a fresh pool: move to half-open
+    /// probation — the new pool earns its way back to closed through
+    /// successful probes rather than inheriting full traffic.
+    pub fn on_respawn(&self, shard: usize) {
+        let mut s = self.slot(shard);
+        s.state = BreakerState::HalfOpen;
+        s.open_until = None;
+        s.probes_left = HALF_OPEN_PROBES;
+        s.consecutive_failures = 0;
+    }
+
+    /// May the heal pass respawn this slot now?  The first respawn is
+    /// always allowed; later ones wait out the exponential backoff
+    /// recorded by [`BreakerSet::note_respawn`].
+    pub fn respawn_allowed(&self, shard: usize, now: Instant) -> bool {
+        self.slot(shard).respawn_not_before.is_none_or(|t| now >= t)
+    }
+
+    /// Record that the heal pass respawned this slot, pushing the next
+    /// respawn out by the doubled backoff.
+    pub fn note_respawn(&self, shard: usize, now: Instant) {
+        let mut s = self.slot(shard);
+        s.respawn_streak = s.respawn_streak.saturating_add(1);
+        let delay = backoff(RESPAWN_BACKOFF_BASE, RESPAWN_BACKOFF_CAP, s.respawn_streak);
+        s.respawn_not_before = Some(now + delay);
+    }
+
+    /// Current breaker position for one slot.
+    pub fn state(&self, shard: usize) -> BreakerState {
+        self.slot(shard).state
+    }
+
+    /// Point-in-time view of every slot, for `/readyz` and `/metrics`.
+    pub fn snapshot(&self) -> Vec<BreakerSnapshot> {
+        (0..self.slots.len())
+            .map(|i| {
+                let s = self.slot(i);
+                BreakerSnapshot {
+                    state: s.state,
+                    failure_ewma: s.failure_ewma,
+                    respawn_backoff: backoff(
+                        RESPAWN_BACKOFF_BASE,
+                        RESPAWN_BACKOFF_CAP,
+                        s.respawn_streak,
+                    ),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn closed_allows_and_single_failures_do_not_trip() {
+        let b = BreakerSet::new(2, 1);
+        let now = t0();
+        assert!(b.allow(0, now));
+        b.record_failure(0, now);
+        b.record_success(0);
+        b.record_failure(0, now);
+        assert_eq!(b.state(0), BreakerState::Closed);
+        assert!(b.allow(0, now), "isolated failures keep the breaker closed");
+    }
+
+    #[test]
+    fn consecutive_failures_trip_then_recover_through_half_open() {
+        let b = BreakerSet::new(1, 7);
+        let now = t0();
+        for _ in 0..OPEN_CONSECUTIVE_FAILURES {
+            b.record_failure(0, now);
+        }
+        assert_eq!(b.state(0), BreakerState::Open);
+        assert!(!b.allow(0, now), "open breaker sheds traffic");
+        // The open window elapses: the next allow() is the probe.
+        let later = now + 2 * OPEN_CAP;
+        assert!(b.allow(0, later), "first post-window call is the probe");
+        assert_eq!(b.state(0), BreakerState::HalfOpen);
+        b.record_success(0);
+        assert_eq!(b.state(0), BreakerState::Closed);
+        assert!(b.allow(0, later));
+    }
+
+    #[test]
+    fn half_open_probe_budget_bounds_the_race() {
+        let b = BreakerSet::new(1, 7);
+        let now = t0();
+        b.force_open(0, now);
+        let later = now + 2 * OPEN_CAP;
+        let mut admitted = 0;
+        for _ in 0..16 {
+            if b.allow(0, later) {
+                admitted += 1;
+            }
+        }
+        assert_eq!(
+            admitted, HALF_OPEN_PROBES as usize,
+            "only the probe budget gets through while half-open"
+        );
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_doubled_window() {
+        let b = BreakerSet::new(1, 3);
+        let mut now = t0();
+        b.force_open(0, now);
+        // First window: just past base (with jitter margin) is enough.
+        now += OPEN_BASE.mul_f64(1.0 + OPEN_JITTER) + Duration::from_millis(1);
+        assert!(b.allow(0, now), "window elapsed, probe admitted");
+        b.record_failure(0, now);
+        assert_eq!(b.state(0), BreakerState::Open);
+        // Second window is doubled: base (even jittered) is not enough.
+        let probe_at = now + OPEN_BASE.mul_f64(1.0 + OPEN_JITTER);
+        assert!(!b.allow(0, probe_at), "doubled window still open");
+        let probe_at = now + 2 * OPEN_CAP;
+        assert!(b.allow(0, probe_at), "doubled window eventually elapses");
+    }
+
+    #[test]
+    fn ewma_trip_threshold_matches_derivation() {
+        // From a clean history, exactly OPEN_CONSECUTIVE_FAILURES
+        // back-to-back failures cross OPEN_FAILURE_THRESHOLD.
+        let mut ewma: f64 = 0.0;
+        for _ in 0..OPEN_CONSECUTIVE_FAILURES {
+            ewma = ewma * (1.0 - FAILURE_EWMA_ALPHA) + FAILURE_EWMA_ALPHA;
+        }
+        assert!(ewma > OPEN_FAILURE_THRESHOLD);
+    }
+
+    #[test]
+    fn mixed_traffic_with_high_failure_rate_trips_via_ewma() {
+        let b = BreakerSet::new(1, 11);
+        let now = t0();
+        // 2 failures : 1 success sustained — streak never reaches 3,
+        // but the smoothed rate climbs past the threshold.
+        for _ in 0..8 {
+            b.record_failure(0, now);
+            b.record_failure(0, now);
+            b.record_success(0);
+            if b.state(0) == BreakerState::Open {
+                return;
+            }
+        }
+        panic!("sustained 2/3 failure rate should trip the breaker");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let a = BreakerSet::new(4, 99);
+        let b = BreakerSet::new(4, 99);
+        for shard in 0..4 {
+            for streak in 1..8 {
+                let ja = a.jitter(shard, streak);
+                assert_eq!(ja, b.jitter(shard, streak), "same seed, same jitter");
+                assert!(ja.abs() <= OPEN_JITTER, "jitter {ja} out of range");
+            }
+        }
+        assert_ne!(a.jitter(0, 1), a.jitter(1, 1), "slots decorrelate");
+    }
+
+    #[test]
+    fn open_window_is_monotone_in_the_streak_and_capped() {
+        for streak in 1..32 {
+            let w = backoff(OPEN_BASE, OPEN_CAP, streak);
+            let w_next = backoff(OPEN_BASE, OPEN_CAP, streak + 1);
+            assert!(w_next >= w);
+            assert!(w <= OPEN_CAP);
+        }
+        assert_eq!(backoff(OPEN_BASE, OPEN_CAP, 31), OPEN_CAP);
+        assert_eq!(backoff(OPEN_BASE, OPEN_CAP, 0), Duration::ZERO);
+    }
+
+    #[test]
+    fn respawn_backoff_first_free_then_exponential_then_forgiven() {
+        let b = BreakerSet::new(1, 5);
+        let now = t0();
+        assert!(b.respawn_allowed(0, now), "first respawn is free");
+        b.note_respawn(0, now);
+        assert!(
+            !b.respawn_allowed(0, now + RESPAWN_BACKOFF_BASE / 2),
+            "second respawn waits out the base backoff"
+        );
+        assert!(b.respawn_allowed(0, now + RESPAWN_BACKOFF_BASE));
+        b.note_respawn(0, now);
+        let snap = b.snapshot();
+        assert_eq!(snap[0].respawn_backoff, 2 * RESPAWN_BACKOFF_BASE);
+        assert!(!b.respawn_allowed(0, now + RESPAWN_BACKOFF_BASE));
+        // A success forgives the streak entirely.
+        b.record_success(0);
+        assert!(b.respawn_allowed(0, now));
+        assert_eq!(b.snapshot()[0].respawn_backoff, Duration::ZERO);
+    }
+
+    #[test]
+    fn respawn_backoff_caps() {
+        let b = BreakerSet::new(1, 5);
+        let now = t0();
+        for _ in 0..64 {
+            b.note_respawn(0, now);
+        }
+        assert_eq!(b.snapshot()[0].respawn_backoff, RESPAWN_BACKOFF_CAP);
+        assert!(b.respawn_allowed(0, now + RESPAWN_BACKOFF_CAP));
+    }
+
+    #[test]
+    fn on_respawn_enters_probation_not_full_traffic() {
+        let b = BreakerSet::new(1, 2);
+        let now = t0();
+        b.force_open(0, now);
+        b.on_respawn(0);
+        assert_eq!(b.state(0), BreakerState::HalfOpen);
+        assert!(b.allow(0, now), "probation admits probes immediately");
+        b.record_success(0);
+        assert_eq!(b.state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn clock_never_runs_backwards_through_the_api() {
+        // Callers pass `now` explicitly; feeding a *stale* now (e.g. a
+        // scatter loop that cached the clock before a long drain) must
+        // degrade gracefully: an open breaker just stays open.
+        let b = BreakerSet::new(1, 13);
+        let now = t0();
+        let stale = now;
+        b.force_open(0, now + Duration::from_secs(1));
+        assert!(!b.allow(0, stale), "stale clock cannot reopen the breaker");
+        assert_eq!(b.state(0), BreakerState::Open);
+        b.record_failure(0, stale); // must not panic or reset the window
+        assert_eq!(b.state(0), BreakerState::Open);
+    }
+
+    #[test]
+    fn snapshot_and_codes_cover_every_state() {
+        let b = BreakerSet::new(3, 1);
+        let now = t0();
+        b.force_open(1, now);
+        b.force_open(2, now);
+        b.on_respawn(2);
+        let snap = b.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].state.code(), 0);
+        assert_eq!(snap[1].state.code(), 2);
+        assert_eq!(snap[2].state.code(), 1);
+        assert_eq!(snap[0].state.label(), "closed");
+        assert_eq!(snap[1].state.label(), "open");
+        assert_eq!(snap[2].state.label(), "half-open");
+        assert!(snap[1].failure_ewma >= OPEN_FAILURE_THRESHOLD);
+    }
+}

@@ -30,14 +30,19 @@
 //!   execute under [`crate::coordinator::plan::TilePlan`] masking;
 //! * [`set`] — shard lifecycle: per-shard seed/backend config, health
 //!   tracking, retirement of dead pools;
+//! * [`breaker`] — per-shard circuit breakers (closed/open/half-open,
+//!   failure-rate + drift EWMAs, exponential open windows) and the
+//!   heal pass's per-slot respawn backoff;
 //! * [`metrics_agg`] — merged + per-shard [`crate::coordinator::Metrics`]
 //!   snapshots for the serving `/metrics` exporter.
 
+pub mod breaker;
 pub mod metrics_agg;
 pub mod planner;
 pub mod router;
 pub mod set;
 
+pub use breaker::{BreakerSet, BreakerSnapshot, BreakerState};
 pub use metrics_agg::MetricsAggregator;
 pub use planner::{estimate_block_cost, plan_blocks, BlockPlan, ShardAssignment};
 pub use set::{ShardSet, ShardSetConfig, RESPAWN_SEED_STRIDE, SHARD_SEED_STRIDE};

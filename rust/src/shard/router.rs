@@ -29,13 +29,23 @@
 //! Failure isolation stays per-slice: a shard whose pool errors on
 //! submit or drain is poisoned and its in-flight fused jobs are
 //! re-queued as their per-request constituent slices, re-routed to the
-//! surviving shards.  A request only fails once *every* shard is gone.
-//! Re-executed slices are harmless: a poisoned shard is never drained
-//! again, so a duplicate result can never be observed.
+//! surviving shards.  Re-executed slices are harmless: a poisoned shard
+//! is never drained again, so a duplicate result can never be observed.
+//!
+//! Rerouting is *budgeted*, not explode-and-pray: every requeue bumps
+//! the slice's attempt count, a retried slice waits out a short
+//! exponential backoff (deterministic jitter) before resubmitting, and
+//! a slice that exhausts [`MAX_SLICE_ATTEMPTS`] fails the batch with a
+//! clean error after the in-flight work drains.  Target selection
+//! consults the per-shard circuit breakers ([`super::breaker`]): an
+//! open breaker sheds the slice to a sibling, a half-open one admits
+//! probe traffic, and only when every healthy shard is breaker-blocked
+//! does the router serve degraded through the least-loaded one.
 
 use std::borrow::Cow;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -43,8 +53,33 @@ use crate::coordinator::{CompletedBatch, TilePlan, TransformRequest};
 use crate::monitor::{MonitorHandle, ShadowSample};
 use crate::trace::{self, ExecStats, Stage, TraceHandle};
 
+use super::breaker::{self, BreakerSet};
 use super::planner::{estimate_block_cost, plan_blocks};
 use super::set::ShardSet;
+
+/// A slice that has been re-queued this many times fails the whole
+/// batch instead of bouncing between shards forever.  Derivation in
+/// DESIGN.md: the only legitimate requeue causes are a shard death
+/// (bounded by the shard count) and an injected drain drop, so three
+/// strikes distinguishes "unlucky" from "systemically broken".
+pub const MAX_SLICE_ATTEMPTS: u32 = 3;
+
+/// Base/cap of the per-retry backoff.  The router runs on the batcher
+/// thread, so the schedule stays in the sub-millisecond range: enough
+/// to let a flapping pool settle, never enough to blow a deadline.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_micros(200);
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(5);
+
+/// Exponential backoff with deterministic jitter (±25%) for a slice on
+/// its `attempts`-th retry.  Jitter is keyed by the slice's first
+/// request index so concurrent retried slices de-synchronise without
+/// any wall-clock randomness.
+fn retry_backoff(attempts: u32, key: u64) -> Duration {
+    let base = breaker::backoff(RETRY_BACKOFF_BASE, RETRY_BACKOFF_CAP, attempts);
+    let z = breaker::splitmix64(key ^ (u64::from(attempts) << 32));
+    let jitter = ((z >> 11) as f64 / (1u64 << 53) as f64 - 0.5) * 0.5;
+    base.mul_f64(1.0 + jitter)
+}
 
 /// One request resolved onto its block partition: the routing unit of
 /// work is a *block*, identified by its index into the plan's slots.
@@ -59,6 +94,9 @@ struct PlannedReq<'a> {
     x: Cow<'a, [f32]>,
     th: Cow<'a, [f64]>,
     scale: Option<f32>,
+    /// End-to-end deadline inherited by every slice of the request, so
+    /// the pool worker can cancel expired samples before scheduling.
+    deadline: Option<Instant>,
     plan: Arc<TilePlan>,
 }
 
@@ -85,6 +123,9 @@ struct Slice {
     shard: usize,
     /// Ascending block indices of the requests' shared partition.
     blocks: Vec<usize>,
+    /// How many times this work has been re-queued; bounded by
+    /// [`MAX_SLICE_ATTEMPTS`] and backed off exponentially.
+    attempts: u32,
 }
 
 /// Concatenate `blocks` of the request into one sub-request plus the
@@ -108,6 +149,7 @@ fn sub_request(preq: &PlannedReq<'_>, blocks: &[usize]) -> (TransformRequest, Ve
             x: sx,
             thresholds_units: sth,
             scale: preq.scale,
+            deadline: preq.deadline,
         },
         widths,
     )
@@ -161,11 +203,28 @@ fn any_traced(scope: &[TraceHandle], reqs: &[usize]) -> bool {
 /// the pool-queue span at drain time.
 type InFlight = (Slice, u64);
 
-/// Healthy shard with the fewest outstanding jobs (re-route target).
-fn reroute_target(set: &ShardSet, outstanding: &[HashMap<u64, InFlight>]) -> Result<usize> {
-    set.healthy()
-        .into_iter()
-        .min_by_key(|&s| outstanding[s].len())
+/// Pick a routing target among the healthy shards, least-loaded first,
+/// honouring the circuit breakers: the first candidate whose breaker
+/// admits traffic (closed, or half-open with probe budget) wins.  When
+/// *every* healthy shard is breaker-blocked the router serves degraded
+/// through the least-loaded one rather than failing the request — the
+/// breakers shape load, the health map decides liveness.
+fn reroute_target(
+    set: &ShardSet,
+    outstanding: &[HashMap<u64, InFlight>],
+    breakers: &BreakerSet,
+    now: Instant,
+) -> Result<usize> {
+    let mut order = set.healthy();
+    order.sort_by_key(|&s| outstanding[s].len());
+    for &s in &order {
+        if breakers.allow(s, now) {
+            return Ok(s);
+        }
+    }
+    order
+        .first()
+        .copied()
         .ok_or_else(|| anyhow!("every shard is poisoned; request cannot be served"))
 }
 
@@ -186,10 +245,13 @@ fn poison_and_requeue(
 
 /// Failover granularity is the *slice*, not the fused job: work lost to
 /// a poisoned shard is re-queued as per-request slices so the survivors
-/// can re-balance (and re-fail) each sample independently.
+/// can re-balance (and re-fail) each sample independently.  Every
+/// requeue costs one attempt; the scatter loop enforces the budget and
+/// the backoff.
 fn requeue_split(slice: Slice, queue: &mut VecDeque<Slice>) {
+    let attempts = slice.attempts + 1;
     if slice.reqs.len() <= 1 {
-        queue.push_back(slice);
+        queue.push_back(Slice { attempts, ..slice });
         return;
     }
     for &ri in &slice.reqs {
@@ -197,6 +259,7 @@ fn requeue_split(slice: Slice, queue: &mut VecDeque<Slice>) {
             reqs: vec![ri],
             shard: slice.shard,
             blocks: slice.blocks.clone(),
+            attempts,
         });
     }
 }
@@ -239,8 +302,10 @@ fn finish_job(
         // (non-digital) shard are copied off to the shadow checker
         // before the gather.  An inactive monitor is one dead branch;
         // digital slots are filtered by the handle without touching the
-        // sample counter.
-        if monitor.wants_sample(shard) {
+        // sample counter.  Deadline-expired samples carry zeroed
+        // placeholder values, not transform output — shadow-checking
+        // them would report phantom drift.
+        if !done.expired && monitor.wants_sample(shard) {
             let (sub, widths) = sub_request(&planned[ri], &slice.blocks);
             monitor.enqueue(ShadowSample {
                 shard,
@@ -345,7 +410,7 @@ pub fn transform_batch(set: &mut ShardSet, reqs: &[TransformRequest]) -> Result<
             th.resize(plan.width(), 0.0);
             (Cow::Owned(x), Cow::Owned(th))
         };
-        planned.push(PlannedReq { x, th, scale: req.scale, plan });
+        planned.push(PlannedReq { x, th, scale: req.scale, deadline: req.deadline, plan });
     }
     run(set, planned)
 }
@@ -378,6 +443,7 @@ pub fn transform_batch_planned(
             x: Cow::Borrowed(&req.x[..]),
             th: Cow::Borrowed(&req.thresholds_units[..]),
             scale: req.scale,
+            deadline: req.deadline,
             plan: Arc::clone(&plan),
         });
     }
@@ -395,6 +461,8 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq<'_>>) -> Result<Vec<Vec<f32>>
     let traced = scope.iter().any(TraceHandle::is_active);
     // One clone per batch; the handle is a single `Option<Arc>`.
     let monitor = set.monitor().clone();
+    // Shared breaker state: routing consults it, drains feed it.
+    let breakers = Arc::clone(set.breakers());
 
     let healthy = set.healthy();
     if healthy.is_empty() {
@@ -459,6 +527,7 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq<'_>>) -> Result<Vec<Vec<f32>>
                         reqs: chunk,
                         shard: a.shard,
                         blocks: blocks.clone(),
+                        attempts: 0,
                     });
                 }
             }
@@ -477,6 +546,10 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq<'_>>) -> Result<Vec<Vec<f32>>
     // their pools idle) while shard 0 finishes; the cursor spreads the
     // blocking drain across shards round-robin.
     let mut gather_from = 0usize;
+    // First retry-budget exhaustion; the loop keeps draining in-flight
+    // work (the router contract: nothing outstanding on return) and the
+    // error surfaces once the set is quiet.
+    let mut fail: Option<anyhow::Error> = None;
 
     loop {
         // Scatter phase: submit everything queued, shedding poisoned
@@ -485,8 +558,25 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq<'_>>) -> Result<Vec<Vec<f32>>
         // from deadlocking the scatter against the undrained result
         // queue: on backpressure we drain one finished job first.
         while let Some(mut slice) = queue.pop_front() {
-            if !set.is_healthy(slice.shard) {
-                slice.shard = reroute_target(set, &outstanding)?;
+            if fail.is_some() {
+                continue; // draining only; queued work is moot
+            }
+            if slice.attempts > MAX_SLICE_ATTEMPTS {
+                fail = Some(anyhow!(
+                    "slice for requests {:?} exhausted its retry budget \
+                     ({MAX_SLICE_ATTEMPTS} attempts); shards are systemically failing",
+                    slice.reqs
+                ));
+                continue;
+            }
+            if slice.attempts > 0 {
+                // Budgeted retry: wait out the backoff so a flapping
+                // shard gets a beat to settle before the resubmit.
+                std::thread::sleep(retry_backoff(slice.attempts, slice.reqs[0] as u64));
+            }
+            let now = Instant::now();
+            if !set.is_healthy(slice.shard) || !breakers.allow(slice.shard, now) {
+                slice.shard = reroute_target(set, &outstanding, &breakers, now)?;
             }
             let shard = slice.shard;
             let active = traced && any_traced(&scope, &slice.reqs);
@@ -535,16 +625,26 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq<'_>>) -> Result<Vec<Vec<f32>>
                             let finished = outstanding[shard]
                                 .remove(&batch.request_id)
                                 .expect("drained id was submitted by this router");
-                            finish_job(
-                                &scope,
-                                &monitor,
-                                &mut outs,
-                                &planned,
-                                shard,
-                                batch,
-                                finished,
-                                drain_start,
-                            );
+                            if set.chaos_drain_drop().fire() {
+                                // Injected lost completion: the result
+                                // is discarded and the slice recomputed
+                                // (bit-identical), the breaker sees it
+                                // as a shard failure.
+                                breakers.record_failure(shard, Instant::now());
+                                requeue_split(finished.0, &mut queue);
+                            } else {
+                                breakers.record_success(shard);
+                                finish_job(
+                                    &scope,
+                                    &monitor,
+                                    &mut outs,
+                                    &planned,
+                                    shard,
+                                    batch,
+                                    finished,
+                                    drain_start,
+                                );
+                            }
                         }
                         Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
                     }
@@ -572,26 +672,39 @@ fn run(set: &mut ShardSet, planned: Vec<PlannedReq<'_>>) -> Result<Vec<Vec<f32>>
         };
         gather_from = (shard + 1) % len;
         let drain_start = if traced { trace::now_us() } else { 0 };
+        if set.chaos_drain_delay().fire() {
+            // Injected slow drain: latency only, results untouched.
+            std::thread::sleep(crate::chaos::SLOWDOWN);
+        }
         match set.coordinator_mut(shard).expect("outstanding implies healthy").drain_batch() {
             Ok(batch) => {
                 let in_flight = outstanding[shard]
                     .remove(&batch.request_id)
                     .expect("drained id was submitted by this router");
-                finish_job(
-                    &scope,
-                    &monitor,
-                    &mut outs,
-                    &planned,
-                    shard,
-                    batch,
-                    in_flight,
-                    drain_start,
-                );
+                if set.chaos_drain_drop().fire() {
+                    breakers.record_failure(shard, Instant::now());
+                    requeue_split(in_flight.0, &mut queue);
+                } else {
+                    breakers.record_success(shard);
+                    finish_job(
+                        &scope,
+                        &monitor,
+                        &mut outs,
+                        &planned,
+                        shard,
+                        batch,
+                        in_flight,
+                        drain_start,
+                    );
+                }
             }
             Err(_) => poison_and_requeue(set, shard, &mut outstanding, &mut queue),
         }
     }
 
+    if let Some(e) = fail {
+        return Err(e);
+    }
     Ok(outs)
 }
 
@@ -630,6 +743,7 @@ mod tests {
             x: Cow::Owned(vec![0.0; width]),
             th: Cow::Owned(vec![0.0; width]),
             scale: None,
+            deadline: None,
             plan: Arc::new(TilePlan::new(16, blocks).unwrap()),
         }
     }
@@ -664,6 +778,7 @@ mod tests {
             x: sample(96, 11),
             thresholds_units: vec![0.0; 96],
             scale: None,
+            deadline: None,
         };
         let out = transform(&mut set, &req).unwrap();
         assert_eq!(out, golden(&req));
@@ -685,6 +800,7 @@ mod tests {
         let req = TransformRequest {
             thresholds_units: vec![0.0; 20],
             scale: Some(Quantizer::new(8).scale_for(&x)),
+            deadline: None,
             x,
         };
         let outs = transform_batch_planned(&mut set, &[16, 4], std::slice::from_ref(&req)).unwrap();
@@ -720,6 +836,7 @@ mod tests {
                 x: sample(48, 20 + i),
                 thresholds_units: vec![0.0; 48],
                 scale: None,
+                deadline: None,
             })
             .collect();
         let outs = transform_batch(&mut set, &reqs).unwrap();
@@ -746,6 +863,7 @@ mod tests {
                 x: sample(96, 500 + i),
                 thresholds_units: vec![0.0; 96],
                 scale: None,
+                deadline: None,
             })
             .collect();
         let outs = transform_batch(&mut set, &reqs).unwrap();
@@ -776,6 +894,7 @@ mod tests {
                 x: vec![],
                 thresholds_units: vec![],
                 scale: None,
+                deadline: None,
             }
         )
         .is_err());
@@ -785,6 +904,7 @@ mod tests {
                 x: vec![1.0; 8],
                 thresholds_units: vec![0.0; 4],
                 scale: None,
+                deadline: None,
             }
         )
         .is_err());
@@ -802,6 +922,7 @@ mod tests {
             x: sample(128, 31),
             thresholds_units: vec![0.0; 128],
             scale: None,
+            deadline: None,
         };
         // Kill shard 1's pool before routing: its submits fail, the
         // router poisons it and the survivors absorb the blocks.
@@ -828,6 +949,7 @@ mod tests {
                 x: sample(64, 700 + i),
                 thresholds_units: vec![0.0; 64],
                 scale: None,
+                deadline: None,
             })
             .collect();
         let outs = transform_batch(&mut set, &reqs).unwrap();
@@ -852,6 +974,7 @@ mod tests {
             x: sample(64, 90),
             thresholds_units: vec![0.0; 64],
             scale: None,
+            deadline: None,
         };
         let handle = tracer.begin("/v1/transform");
         set.set_trace_scope(vec![handle.clone()]);
@@ -901,6 +1024,7 @@ mod tests {
                 x: sample(32, 800 + i as u64),
                 thresholds_units: vec![0.0; 32],
                 scale: None,
+                deadline: None,
             })
             .collect();
         let handle = tracer.begin("/v1/transform");
@@ -942,6 +1066,7 @@ mod tests {
             x: sample(64, 91),
             thresholds_units: vec![0.0; 64],
             scale: None,
+            deadline: None,
         };
         set.set_trace_scope(vec![crate::trace::TraceHandle::inactive()]);
         let out = transform_batch(&mut set, std::slice::from_ref(&req)).unwrap();
@@ -984,6 +1109,7 @@ mod tests {
                 x: sample(96, 400 + i),
                 thresholds_units: vec![0.0; 96],
                 scale: None,
+                deadline: None,
             })
             .collect();
         transform_batch(&mut set, &reqs).unwrap();
@@ -1005,6 +1131,112 @@ mod tests {
     }
 
     #[test]
+    fn open_breaker_sheds_routing_to_siblings() {
+        // Both shards healthy, shard 0's breaker forced open: every
+        // slice re-routes to shard 1 and the output stays golden.
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        set.breakers().force_open(0, std::time::Instant::now());
+        let req = TransformRequest {
+            x: sample(96, 55),
+            thresholds_units: vec![0.0; 96],
+            scale: None,
+            deadline: None,
+        };
+        let out = transform(&mut set, &req).unwrap();
+        assert_eq!(out, golden(&req));
+        assert_eq!(
+            set.aggregator().per_shard()[0].requests,
+            0,
+            "an open breaker admits no traffic inside its window"
+        );
+        assert!(set.aggregator().per_shard()[1].requests > 0);
+        set.shutdown();
+    }
+
+    #[test]
+    fn all_breakers_open_still_serves_degraded() {
+        // Breakers shape load; they must never turn a healthy set into
+        // a hard outage.  With every breaker open the router serves
+        // through the least-loaded healthy shard anyway.
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let now = std::time::Instant::now();
+        set.breakers().force_open(0, now);
+        set.breakers().force_open(1, now);
+        let req = TransformRequest {
+            x: sample(64, 56),
+            thresholds_units: vec![0.0; 64],
+            scale: None,
+            deadline: None,
+        };
+        let out = transform(&mut set, &req).unwrap();
+        assert_eq!(out, golden(&req));
+        set.shutdown();
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn injected_drain_drop_exhausts_the_retry_budget_cleanly() {
+        use crate::chaos::ChaosPlan;
+        // Every completion dropped: the slice recomputes until its
+        // budget runs out, then the batch fails with a clean error
+        // instead of spinning forever.
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            coordinator: crate::coordinator::CoordinatorConfig {
+                chaos: ChaosPlan::parse("router.drain.drop=1.0,3").unwrap(),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let req = TransformRequest {
+            x: sample(64, 57),
+            thresholds_units: vec![0.0; 64],
+            scale: None,
+            deadline: None,
+        };
+        let err = transform(&mut set, &req).unwrap_err();
+        assert!(err.to_string().contains("retry budget"), "{err}");
+        set.shutdown();
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn injected_drain_delay_keeps_results_bit_identical() {
+        use crate::chaos::ChaosPlan;
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            coordinator: crate::coordinator::CoordinatorConfig {
+                chaos: ChaosPlan::parse("router.drain.delay=1.0,7").unwrap(),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let reqs: Vec<TransformRequest> = (0..4)
+            .map(|i| TransformRequest {
+                x: sample(96, 900 + i),
+                thresholds_units: vec![0.0; 96],
+                scale: None,
+                deadline: None,
+            })
+            .collect();
+        let outs = transform_batch(&mut set, &reqs).unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(outs[i], golden(req), "request {i}");
+        }
+        set.shutdown();
+    }
+
+    #[test]
     fn all_shards_poisoned_is_a_clean_error() {
         let mut set = ShardSet::new(ShardSetConfig {
             shards: 2,
@@ -1017,6 +1249,7 @@ mod tests {
             x: sample(32, 40),
             thresholds_units: vec![0.0; 32],
             scale: None,
+            deadline: None,
         };
         let err = transform(&mut set, &req).unwrap_err();
         assert!(err.to_string().contains("poisoned"), "{err}");

@@ -17,16 +17,27 @@
 //! variability) is spun up and folded back into the healthy set — the
 //! serving loop calls this on a health tick so a transient pool death
 //! does not permanently shrink capacity.
+//!
+//! Every slot carries a circuit breaker ([`super::breaker`]): poisoning
+//! forces it open, a respawn puts it on half-open probation, and the
+//! serving health tick heals through [`ShardSet::respawn_backed_off`]
+//! so a permanently sick slot backs off exponentially instead of
+//! respawn-storming.  Under the `chaos` feature the `shard.kill` and
+//! `shard.flap` injection points ([`ShardSet::chaos_disrupt`]) drive
+//! exactly those paths deterministically.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::chaos::ChaosPoint;
 use crate::coordinator::{Coordinator, CoordinatorConfig, Metrics, TileKind};
 use crate::monitor::MonitorHandle;
 use crate::trace::TraceHandle;
 
+use super::breaker::BreakerSet;
 use super::metrics_agg::{HandleSlots, MetricsAggregator};
 
 /// Per-shard seed stride (large odd constant, well clear of the
@@ -101,6 +112,20 @@ pub struct ShardSet {
     /// it once per drained slice and enqueues sampled slices for shadow
     /// verification.
     monitor: MonitorHandle,
+    /// Per-slot circuit breakers: routing consults them, drains and
+    /// lifecycle events (poison/respawn) feed them.  Shared so the
+    /// serving front-end can export breaker state without holding the
+    /// set.
+    breakers: Arc<BreakerSet>,
+    /// Injection points owned by the set so their decision counters
+    /// persist across router invocations (a fresh counter per batch
+    /// would replay the same prefix of the decision stream forever).
+    chaos_drain_drop: ChaosPoint,
+    chaos_drain_delay: ChaosPoint,
+    chaos_kill: ChaosPoint,
+    chaos_flap: ChaosPoint,
+    /// Rotating victim cursor for [`ShardSet::chaos_disrupt`].
+    chaos_cursor: usize,
     config: ShardSetConfig,
 }
 
@@ -157,6 +182,7 @@ impl ShardSet {
         let healthy_gauge = Arc::new(AtomicUsize::new(config.shards));
         let slot_health =
             Arc::new((0..config.shards).map(|_| AtomicBool::new(true)).collect::<Vec<_>>());
+        let chaos = &config.coordinator.chaos;
         Ok(ShardSet {
             slots,
             handles: Arc::new(Mutex::new(handle_slots)),
@@ -167,6 +193,12 @@ impl ShardSet {
             slot_health,
             trace_scope: Vec::new(),
             monitor: MonitorHandle::inactive(),
+            breakers: Arc::new(BreakerSet::new(config.shards, config.coordinator.seed)),
+            chaos_drain_drop: chaos.point("router.drain.drop"),
+            chaos_drain_delay: chaos.point("router.drain.delay"),
+            chaos_kill: chaos.point("shard.kill"),
+            chaos_flap: chaos.point("shard.flap"),
+            chaos_cursor: 0,
             config,
         })
     }
@@ -291,6 +323,10 @@ impl ShardSet {
             self.retired.merge(&coord.shutdown());
             self.healthy_gauge.fetch_sub(1, Ordering::AcqRel);
             self.slot_health[shard].store(false, Ordering::Release);
+            // A dead pool is the definition of a tripped breaker: force
+            // it open so routing (and `/readyz`) reflect the loss even
+            // before the health tick notices.
+            self.breakers.force_open(shard, Instant::now());
         }
     }
 
@@ -321,6 +357,9 @@ impl ShardSet {
         self.healthy_gauge.fetch_add(1, Ordering::AcqRel);
         self.respawns.fetch_add(1, Ordering::AcqRel);
         self.slot_health[shard].store(true, Ordering::Release);
+        // The fresh pool starts on probation, not at full traffic: the
+        // breaker goes half-open and closes only after clean probes.
+        self.breakers.on_respawn(shard);
         Ok(())
     }
 
@@ -335,6 +374,86 @@ impl ShardSet {
             }
         }
         brought_back
+    }
+
+    /// Backoff-aware heal pass: respawn the poisoned slots whose
+    /// per-slot respawn backoff has elapsed.  The first respawn of a
+    /// slot is free; each one after that (without intervening served
+    /// traffic) doubles the wait, so a permanently sick shard converges
+    /// to open-breaker shedding instead of a respawn storm.  Returns
+    /// how many shards were brought back.
+    pub fn respawn_backed_off(&mut self, now: Instant) -> usize {
+        let mut brought_back = 0;
+        for s in self.poisoned() {
+            if !self.breakers.respawn_allowed(s, now) {
+                continue;
+            }
+            if self.respawn(s).is_ok() {
+                self.breakers.note_respawn(s, now);
+                brought_back += 1;
+            }
+        }
+        brought_back
+    }
+
+    /// Per-slot circuit breakers (shared with the router and the
+    /// serving front-end's exporter).
+    pub fn breakers(&self) -> &Arc<BreakerSet> {
+        &self.breakers
+    }
+
+    /// The `router.drain.drop` injection point (lost completions).
+    pub fn chaos_drain_drop(&self) -> &ChaosPoint {
+        &self.chaos_drain_drop
+    }
+
+    /// The `router.drain.delay` injection point (slow drains).
+    pub fn chaos_drain_delay(&self) -> &ChaosPoint {
+        &self.chaos_drain_delay
+    }
+
+    /// Fire the `shard.kill` / `shard.flap` injection points (called by
+    /// the serving health tick, before healing).  A kill aborts and
+    /// poisons a rotating healthy victim — recovery then flows through
+    /// the normal breaker + respawn-backoff machinery.  A flap kills
+    /// and *immediately* respawns, bypassing the heal tick, so the
+    /// breaker sees a bouncing pool.  The last healthy shard is never
+    /// targeted (chaos degrades the set; emptying it would just turn
+    /// every request into an error).  Returns the slots disturbed.
+    pub fn chaos_disrupt(&mut self) -> usize {
+        let mut hits = 0;
+        if self.chaos_kill.fire() {
+            if let Some(victim) = self.next_chaos_victim() {
+                if let Some(c) = self.coordinator_mut(victim) {
+                    c.abort();
+                }
+                self.poison(victim);
+                hits += 1;
+            }
+        }
+        if self.chaos_flap.fire() {
+            if let Some(victim) = self.next_chaos_victim() {
+                if let Some(c) = self.coordinator_mut(victim) {
+                    c.abort();
+                }
+                self.poison(victim);
+                let _ = self.respawn(victim);
+                hits += 1;
+            }
+        }
+        hits
+    }
+
+    /// Rotating healthy victim for [`ShardSet::chaos_disrupt`]; `None`
+    /// when only one healthy shard remains.
+    fn next_chaos_victim(&mut self) -> Option<usize> {
+        let healthy = self.healthy();
+        if healthy.len() <= 1 {
+            return None;
+        }
+        let victim = healthy[self.chaos_cursor % healthy.len()];
+        self.chaos_cursor = self.chaos_cursor.wrapping_add(1);
+        Some(victim)
     }
 
     /// Aggregator over every slot's live metrics handles (poisoned
@@ -426,6 +545,7 @@ mod tests {
             x,
             thresholds_units: vec![0.0; 16],
             scale: None,
+            deadline: None,
         };
         let id = set.coordinator_mut(0).unwrap().submit(&req).unwrap();
         let done = set.coordinator_mut(0).unwrap().drain_one().unwrap();
@@ -457,6 +577,7 @@ mod tests {
             x: (0..16).map(|i| (i as f32 * 0.23).sin()).collect(),
             thresholds_units: vec![0.0; 16],
             scale: None,
+            deadline: None,
         };
         // Serve one request on shard 0, then kill and respawn it.
         set.coordinator_mut(0).unwrap().submit(&mk_req()).unwrap();
@@ -560,6 +681,114 @@ mod tests {
         .unwrap();
         assert_eq!(noisy.non_digital_slots(), vec![true, true]);
         noisy.shutdown();
+    }
+
+    #[test]
+    fn poison_trips_the_breaker_and_respawn_probates() {
+        use crate::shard::breaker::BreakerState;
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(set.breakers().state(0), BreakerState::Closed);
+        set.coordinator_mut(0).unwrap().abort();
+        set.poison(0);
+        assert_eq!(set.breakers().state(0), BreakerState::Open, "poison forces open");
+        set.respawn(0).unwrap();
+        assert_eq!(
+            set.breakers().state(0),
+            BreakerState::HalfOpen,
+            "a respawned slot starts on probation"
+        );
+        set.shutdown();
+    }
+
+    #[test]
+    fn permanently_sick_slot_backs_off_exponentially_and_sheds() {
+        use crate::shard::breaker::{BreakerState, RESPAWN_BACKOFF_BASE};
+        use std::time::Duration;
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut now = Instant::now();
+        // A slot that dies after every heal: the recorded backoff must
+        // double each round (250ms, 500ms, 1s, 2s), converging toward
+        // open-breaker shedding instead of a respawn storm.
+        for round in 0..4u32 {
+            set.coordinator_mut(0).unwrap().abort();
+            set.poison(0);
+            now += Duration::from_secs(30); // past any earlier backoff
+            assert_eq!(set.respawn_backed_off(now), 1, "round {round} heals");
+            assert_eq!(
+                set.breakers().snapshot()[0].respawn_backoff,
+                RESPAWN_BACKOFF_BASE * (1u32 << round),
+                "round {round} backoff"
+            );
+        }
+        // Mid-backoff the slot sheds: the heal pass declines, the slot
+        // stays poisoned, its breaker stays open.
+        set.coordinator_mut(0).unwrap().abort();
+        set.poison(0);
+        assert_eq!(set.respawn_backed_off(now), 0, "backoff not elapsed");
+        assert_eq!(set.healthy(), vec![1]);
+        assert_eq!(set.breakers().state(0), BreakerState::Open);
+        // Once the window passes, the heal goes through again.
+        now += RESPAWN_BACKOFF_BASE * 16;
+        assert_eq!(set.respawn_backed_off(now), 1);
+        assert_eq!(set.healthy(), vec![0, 1]);
+        set.shutdown();
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn chaos_kill_rotates_victims_but_spares_the_last_shard() {
+        use crate::chaos::ChaosPlan;
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 3,
+            coordinator: CoordinatorConfig {
+                chaos: ChaosPlan::parse("shard.kill=1.0,9").unwrap(),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(set.chaos_disrupt(), 1);
+        assert_eq!(set.healthy_count(), 2);
+        assert_eq!(set.chaos_disrupt(), 1);
+        assert_eq!(set.healthy_count(), 1);
+        assert_eq!(set.chaos_disrupt(), 0, "never kills the last shard");
+        assert_eq!(set.healthy_count(), 1);
+        set.shutdown();
+    }
+
+    #[cfg(feature = "chaos")]
+    #[test]
+    fn chaos_flap_bounces_a_slot_through_the_breaker() {
+        use crate::chaos::ChaosPlan;
+        use crate::shard::breaker::BreakerState;
+        let mut set = ShardSet::new(ShardSetConfig {
+            shards: 2,
+            coordinator: CoordinatorConfig {
+                chaos: ChaosPlan::parse("shard.flap=1.0,4").unwrap(),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(set.chaos_disrupt(), 1);
+        assert_eq!(set.healthy_count(), 2, "a flap comes straight back");
+        assert_eq!(set.respawns_handle().load(Ordering::Acquire), 1);
+        let flapped = set
+            .breakers()
+            .snapshot()
+            .iter()
+            .filter(|b| b.state == BreakerState::HalfOpen)
+            .count();
+        assert_eq!(flapped, 1, "the flapped slot sits on probation");
+        set.shutdown();
     }
 
     #[test]

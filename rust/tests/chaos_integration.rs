@@ -1,0 +1,454 @@
+//! Chaos-engineered serving integration: seeded fault injection driven
+//! end-to-end through the HTTP front end.  Every scenario arms a
+//! deterministic [`ChaosPlan`] (the same spec grammar `--chaos-spec`
+//! accepts), drives real sockets against it, and asserts the paper's
+//! serving invariants hold under fire: digital results stay
+//! bit-identical, failures surface as clean statuses instead of hangs,
+//! and the breaker + respawn machinery converges back to health.
+//!
+//! Compiled only with `--features chaos` — the injection points these
+//! tests arm do not exist in a default build.
+#![cfg(feature = "chaos")]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use repro::bitplane::QuantBwht;
+use repro::chaos::ChaosPlan;
+use repro::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use repro::nn::{Backend, Mlp};
+use repro::server::{Server, ServerConfig};
+use repro::util::json::{self, Json};
+use repro::util::rng::Rng;
+
+fn send_request(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).expect("read response");
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+fn post_json(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    send_request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    send_request(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn transform_body(x: &[f32]) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"x\":[{}]}}", xs.join(","))
+}
+
+/// Read one framed HTTP response off a persistent connection.
+fn read_response(
+    reader: &mut BufReader<TcpStream>,
+) -> (u16, Vec<(String, String)>, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("header line");
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        let (name, value) = trimmed.split_once(':').expect("header colon");
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim().to_string();
+        if name == "content-length" {
+            content_length = value.parse().expect("content length");
+        }
+        headers.push((name, value));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    (status, headers, String::from_utf8(body).expect("utf-8 body"))
+}
+
+fn header_value<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|line| {
+            let rest = line.strip_prefix(name)?;
+            let rest = rest.strip_prefix(' ')?;
+            rest.trim().parse::<f64>().ok()
+        })
+        .unwrap_or(f64::NAN)
+}
+
+fn parse_y(body: &str) -> Vec<f32> {
+    json::parse(body)
+        .expect("response json")
+        .get("y")
+        .and_then(Json::as_arr)
+        .expect("y array")
+        .iter()
+        .map(|v| v.as_f64().expect("numeric y") as f32)
+        .collect()
+}
+
+fn chaos_server(spec: &str, mutate: impl FnOnce(&mut ServerConfig)) -> Server {
+    let mut config = ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        coordinator: CoordinatorConfig {
+            chaos: ChaosPlan::parse(spec).expect("chaos spec"),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    mutate(&mut config);
+    Server::start(config).expect("server start")
+}
+
+fn test_mlp() -> Mlp {
+    let mut r = Rng::seed_from_u64(77);
+    let (din, hidden, classes) = (8usize, 16usize, 3usize);
+    Mlp::from_flat(
+        din,
+        hidden,
+        classes,
+        r.normal_vec_f32(din * hidden, 0.0, 0.5),
+        vec![0.0; hidden],
+        vec![0.06; hidden],
+        r.normal_vec_f32(hidden * classes, 0.0, 0.5),
+        vec![0.0; classes],
+    )
+}
+
+#[test]
+fn slowdowns_stalls_and_short_io_leave_transforms_bit_identical() {
+    // Degraded-but-alive faults everywhere at once: every pool job is
+    // slowed, every socket read and write is truncated to one byte
+    // (exercising the level-triggered re-arm paths), and one batch in
+    // five stalls the whole pipeline.  Nothing may corrupt a result.
+    let server = chaos_server(
+        "pool.worker.slow=1.0;conn.short_read=1.0;conn.short_write=1.0;batcher.stall=0.2,3",
+        |_| {},
+    );
+    let addr = server.addr;
+
+    let mut clients = Vec::new();
+    for client in 0..4u64 {
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(5000 + client);
+            for _ in 0..3 {
+                let x: Vec<f32> = (0..16)
+                    .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+                    .collect();
+                let (status, body) = post_json(addr, "/v1/transform", &transform_body(&x));
+                assert_eq!(status, 200, "body: {body}");
+                assert_eq!(
+                    parse_y(&body),
+                    QuantBwht::new(16, 16, 8).transform(&x),
+                    "slow/short-IO serving must stay bit-identical"
+                );
+            }
+        }));
+    }
+    for handle in clients {
+        handle.join().expect("client thread");
+    }
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+    let m = server.shutdown();
+    assert_eq!(m.requests, 12);
+}
+
+#[test]
+fn worker_panics_surface_as_clean_500s_not_hangs() {
+    // Every pool job panics.  The catch_unwind seam must convert that
+    // into a failed batch, the router must exhaust its shards, and the
+    // client must see a clean 500 — never a hung connection.
+    let server = chaos_server("pool.worker.panic=1.0", |_| {});
+    let addr = server.addr;
+
+    let (status, body) = post_json(addr, "/v1/transform", &transform_body(&[0.5; 16]));
+    assert_eq!(status, 500, "body: {body}");
+    assert!(body.contains("failed"), "{body}");
+
+    // The control plane outlives the data-plane failure.
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200, "{body}");
+    let (status, metrics) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(metrics.contains("repro_shard_breaker_state"), "{metrics}");
+    server.shutdown();
+}
+
+#[test]
+fn shard_kills_under_concurrent_infer_load_stay_bit_identical() {
+    // The health tick murders a rotating healthy shard more often than
+    // not, sparing only the last one.  Inference must keep returning
+    // logits bit-identical to the golden quantized forward, and the
+    // respawn machinery must bring killed shards back.
+    let mlp = test_mlp();
+    let golden_mlp = mlp.clone();
+    let server = chaos_server("shard.kill=0.6,11", |c| {
+        c.shards = 3;
+        c.model = Some(mlp);
+        c.auto_respawn = true;
+        c.health_tick = Duration::from_millis(20);
+    });
+    let addr = server.addr;
+
+    let mut clients = Vec::new();
+    for client in 0..4u64 {
+        let mlp = golden_mlp.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(6000 + client);
+            for _ in 0..6 {
+                let x: Vec<f32> = (0..8)
+                    .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+                    .collect();
+                let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+                let (status, body) = post_json(
+                    addr,
+                    "/v1/infer",
+                    &format!("{{\"x\":[{}]}}", xs.join(",")),
+                );
+                assert_eq!(status, 200, "body: {body}");
+                let parsed = json::parse(&body).unwrap();
+                let logits: Vec<f32> = parsed
+                    .get("logits")
+                    .and_then(Json::as_arr)
+                    .expect("logits")
+                    .iter()
+                    .map(|v| v.as_f64().expect("number") as f32)
+                    .collect();
+                let want = mlp.forward(
+                    &x,
+                    1,
+                    Backend::Quantized { bits: 8 },
+                    &mut Rng::seed_from_u64(0),
+                );
+                assert_eq!(logits, want, "failover must preserve bit-identity");
+            }
+        }));
+    }
+    for handle in clients {
+        handle.join().expect("client thread");
+    }
+
+    // The kills really happened and the heal pass brought shards back.
+    let give_up = Instant::now() + Duration::from_secs(10);
+    let mut respawned = false;
+    while Instant::now() < give_up {
+        let (_, metrics) = get(addr, "/metrics");
+        if metric_value(&metrics, "repro_shard_respawns_total") >= 1.0 {
+            assert!(metric_value(&metrics, "repro_shards_healthy") >= 1.0, "{metrics}");
+            assert!(metrics.contains("repro_shard_breaker_state{shard=\"0\"}"));
+            assert!(metrics.contains("repro_shard_respawn_backoff_seconds{shard=\"0\"}"));
+            respawned = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(respawned, "chaos kills must flow through the respawn machinery");
+    server.shutdown();
+}
+
+#[test]
+fn flapped_shards_recover_through_half_open_probes_to_full_health() {
+    // A flap bounces a shard (kill + immediate respawn), leaving its
+    // breaker half-open.  Wide requests span slices across every shard,
+    // so probe traffic reaches the bounced one and its breaker must
+    // walk half-open -> closed; between flaps the whole set converges
+    // back to 3 healthy shards with every breaker closed.
+    let server = chaos_server("shard.flap=0.35,5", |c| {
+        c.shards = 3;
+        c.auto_respawn = true;
+        c.health_tick = Duration::from_millis(20);
+    });
+    let addr = server.addr;
+
+    let mut rng = Rng::seed_from_u64(7000);
+    let x: Vec<f32> = (0..200)
+        .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+        .collect();
+    let golden = {
+        // A chaos-free single pool is the reference; the flapping
+        // 3-shard server must match it bit-for-bit.
+        let mut single = Coordinator::new(CoordinatorConfig::default());
+        let y = single
+            .transform(&TransformRequest {
+                x: x.clone(),
+                thresholds_units: vec![0.0; 200],
+                scale: None,
+                deadline: None,
+            })
+            .unwrap();
+        single.shutdown();
+        y
+    };
+
+    // Load phase: every response bit-identical while shards bounce.
+    for i in 0..12 {
+        let (status, body) = post_json(addr, "/v1/transform", &transform_body(&x));
+        assert_eq!(status, 200, "request {i}: {body}");
+        assert_eq!(parse_y(&body), golden, "request {i}");
+    }
+
+    // Recovery phase: keep probing until a scrape shows full health
+    // with every breaker closed (flaps are bounded-rate, so clean
+    // windows recur; a breaker stuck open would never satisfy this).
+    let give_up = Instant::now() + Duration::from_secs(15);
+    let mut recovered = false;
+    while Instant::now() < give_up {
+        let (status, body) = post_json(addr, "/v1/transform", &transform_body(&x));
+        assert_eq!(status, 200, "{body}");
+        let (_, metrics) = get(addr, "/metrics");
+        let healthy = metric_value(&metrics, "repro_shards_healthy");
+        let all_closed = (0..3).all(|s| {
+            metric_value(
+                &metrics,
+                &format!("repro_shard_breaker_state{{shard=\"{s}\"}}"),
+            ) == 0.0
+        });
+        if healthy == 3.0 && all_closed {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        recovered,
+        "flapped shards must recover to closed breakers under probe traffic"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn stalled_workers_with_a_tight_deadline_answer_504_and_close() {
+    // Every pool job stalls 50ms; the request carries a 5ms end-to-end
+    // deadline.  The connection's deadline timer must fire first: a 504
+    // with Connection: close (the server cannot know whether the
+    // batcher's side effects happened), and the deadline counters tick.
+    let server = chaos_server("pool.worker.stall=1.0", |_| {});
+    let addr = server.addr;
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let body = transform_body(&[0.5; 16]);
+    write!(
+        writer,
+        "POST /v1/transform HTTP/1.1\r\nHost: t\r\nX-Deadline-Ms: 5\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, headers, body) = read_response(&mut reader);
+    assert_eq!(status, 504, "{body}");
+    assert_eq!(
+        header_value(&headers, "connection"),
+        Some("close"),
+        "an expired request must not reuse the keep-alive stream"
+    );
+    assert!(body.contains("timed out"), "{body}");
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after the 504");
+
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(
+        metric_value(&metrics, "repro_requests_deadline_expired_total") >= 1.0,
+        "{metrics}"
+    );
+    assert!(
+        metric_value(
+            &metrics,
+            "repro_requests_dropped_total{reason=\"deadline\"}"
+        ) >= 1.0,
+        "{metrics}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn dropped_replies_answer_504_close_and_count() {
+    // Every batcher reply is dropped before it reaches the connection.
+    // The sink's drop guard must surface a prompt 504 (not a hang until
+    // the request timeout), close the stream, and count the loss.
+    let server = chaos_server("batcher.reply.drop=1.0", |_| {});
+    let addr = server.addr;
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let body = transform_body(&[0.25; 16]);
+    let started = Instant::now();
+    write!(
+        writer,
+        "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let (status, headers, body) = read_response(&mut reader);
+    assert_eq!(status, 504, "{body}");
+    assert!(
+        started.elapsed() < Duration::from_secs(5),
+        "a dropped reply must fail fast, not wait out the request timeout"
+    );
+    assert_eq!(header_value(&headers, "connection"), Some("close"));
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+
+    let (_, metrics) = get(addr, "/metrics");
+    assert!(
+        metric_value(
+            &metrics,
+            "repro_requests_dropped_total{reason=\"reply_dropped\"}"
+        ) >= 1.0,
+        "{metrics}"
+    );
+    server.shutdown();
+}

@@ -20,11 +20,13 @@ fn full_queue_rejects_instead_of_deadlocking() {
         x: vec![0.25; big_dim],
         thresholds_units: vec![0.0; big_dim],
         scale: None,
+        deadline: None,
     };
     let small = TransformRequest {
         x: vec![0.5; 16],
         thresholds_units: vec![0.0; 16],
         scale: None,
+        deadline: None,
     };
     let mut submitted = vec![c.submit(&big).unwrap()];
     let mut rejected = false;
@@ -60,6 +62,7 @@ fn zero_vector_terminates_on_the_first_plane() {
             x: vec![0.0; 16],
             thresholds_units: vec![0.0; 16],
             scale: None,
+            deadline: None,
         })
         .unwrap();
     assert!(out.iter().all(|&v| v == 0.0));
@@ -80,6 +83,7 @@ fn threshold_length_mismatch_is_a_clean_error() {
             x: vec![0.1; 16],
             thresholds_units: vec![0.0; 8],
             scale: None,
+            deadline: None,
         })
         .unwrap_err();
     assert!(
@@ -92,6 +96,7 @@ fn threshold_length_mismatch_is_a_clean_error() {
             x: vec![0.1; 16],
             thresholds_units: vec![0.0; 16],
             scale: None,
+            deadline: None,
         })
         .unwrap();
     assert_eq!(ok.len(), 16);
@@ -106,12 +111,14 @@ fn empty_input_is_a_clean_error() {
             x: Vec::new(),
             thresholds_units: Vec::new(),
             scale: None,
+            deadline: None,
         })
         .is_err());
     assert!(c.submit(&TransformRequest {
         x: Vec::new(),
         thresholds_units: Vec::new(),
         scale: None,
+        deadline: None,
     })
     .is_err());
     c.shutdown();
@@ -124,11 +131,13 @@ fn batch_with_one_bad_request_fails_before_dispatch() {
         x: vec![0.3; 16],
         thresholds_units: vec![0.0; 16],
         scale: None,
+        deadline: None,
     };
     let bad = TransformRequest {
         x: vec![0.3; 16],
         thresholds_units: vec![0.0; 4],
         scale: None,
+        deadline: None,
     };
     assert!(c.transform_batch(&[good.clone(), bad]).is_err());
     // A clean batch afterwards still works.
@@ -145,6 +154,7 @@ fn sync_apis_refuse_to_run_with_undrained_submissions() {
         x: vec![0.5; 16],
         thresholds_units: vec![0.0; 16],
         scale: None,
+        deadline: None,
     };
     let id = c.submit(&req).unwrap();
     // transform() would steal the submitted result off the shared
@@ -166,6 +176,7 @@ fn submit_drain_matches_synchronous_transform() {
         x,
         thresholds_units: vec![0.0; 32],
         scale: None,
+        deadline: None,
     };
     let mut sync = Coordinator::new(CoordinatorConfig::default());
     let want = sync.transform(&req).unwrap();

@@ -472,6 +472,7 @@ fn random_batch(r: &mut Rng) -> (usize, Vec<usize>, Vec<TransformRequest>) {
             x,
             thresholds_units,
             scale,
+            deadline: None,
         });
     }
     (tile_n, blocks, reqs)
@@ -543,6 +544,7 @@ fn analog_tile_rng_stream_is_batching_invariant() {
             x,
             thresholds_units,
             scale: None,
+            deadline: None,
         });
     }
     let mut batched_tile = Tile::new(16, &kind, 31);

@@ -26,6 +26,7 @@ fn coordinator_digital_equals_nn_quantized_backend_per_tile() {
             x: x.clone(),
             thresholds_units: vec![0.0; 16],
             scale: None,
+            deadline: None,
         })
         .unwrap();
     assert_eq!(direct, pooled);
@@ -51,6 +52,7 @@ fn analog_tiles_track_digital_at_nominal_vdd() {
                 x: x.clone(),
                 thresholds_units: vec![0.0; x_width],
                 scale: None,
+                deadline: None,
             })
             .unwrap();
         c.shutdown();
@@ -114,6 +116,7 @@ fn layer_roundtrip_through_coordinator_tiles() {
             x: x.clone(),
             thresholds_units: vec![0.0; width],
             scale: None,
+            deadline: None,
         })
         .unwrap();
     let mut freq: Vec<f32> = f1.iter().map(|v| v * norm).collect();
@@ -127,6 +130,7 @@ fn layer_roundtrip_through_coordinator_tiles() {
             x: freq,
             thresholds_units: vec![0.0; width],
             scale: None,
+            deadline: None,
         })
         .unwrap();
     let got: Vec<f32> = f2.iter().map(|v| v * norm).collect();
@@ -158,6 +162,7 @@ fn property_early_termination_never_changes_results() {
                     x: x.clone(),
                     thresholds_units: vec![*t; 16],
                     scale: None,
+                    deadline: None,
                 })
                 .unwrap();
             c_et.shutdown();
@@ -170,6 +175,7 @@ fn property_early_termination_never_changes_results() {
                     x: x.clone(),
                     thresholds_units: vec![0.0; 16],
                     scale: None,
+                    deadline: None,
                 })
                 .unwrap();
             c_full.shutdown();
@@ -251,6 +257,7 @@ fn serve_et_improves_tops_per_watt() {
                     x,
                     thresholds_units: th,
                     scale: None,
+                    deadline: None,
                 }
             })
             .collect()

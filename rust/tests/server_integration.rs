@@ -377,6 +377,7 @@ fn sharded_server_is_bit_identical_to_a_single_pool() {
             x,
             thresholds_units: vec![0.0; 200],
             scale: None,
+            deadline: None,
         })
         .unwrap();
     single.shutdown();
@@ -657,4 +658,83 @@ fn rejects_malformed_requests_cleanly_and_stays_up() {
     let (_, metrics) = get(addr, "/metrics");
     assert!(metric_value(&metrics, "repro_http_bad_requests_total") >= 4.0);
     server.shutdown();
+}
+
+#[test]
+fn graceful_drain_serves_every_inflight_request_then_closes() {
+    // A wide batch window parks the 8 requests inside the batcher, so
+    // the drain begins while they are genuinely in flight — a drain
+    // that dropped parked work would fail the 200 assertions below.
+    let server = Server::start(ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_batch: 9,
+        max_wait_us: 300_000,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+
+    let (sent_tx, sent_rx) = std::sync::mpsc::channel::<()>();
+    let mut clients = Vec::new();
+    for client in 0..8u64 {
+        let sent = sent_tx.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(3100 + client);
+            let x: Vec<f32> = (0..16)
+                .map(|_| rng.uniform_range(-1.0, 1.0) as f32)
+                .collect();
+            let stream = TcpStream::connect(addr).unwrap();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(30)))
+                .unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let body = transform_body(&x, None);
+            // A keep-alive request: the drain must still deliver the
+            // real reply, then close the stream instead of re-arming.
+            write!(
+                writer,
+                "POST /v1/transform HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .unwrap();
+            writer.flush().unwrap();
+            sent.send(()).unwrap();
+            let mut reader = BufReader::new(stream);
+            let (status, _, body) = read_response(&mut reader);
+            assert_eq!(status, 200, "drain must not drop in-flight work: {body}");
+            let parsed = json::parse(&body).expect("response json");
+            let y: Vec<f32> = parsed
+                .get("y")
+                .and_then(Json::as_arr)
+                .expect("y array")
+                .iter()
+                .map(|v| v.as_f64().expect("numeric y") as f32)
+                .collect();
+            assert_eq!(y, QuantBwht::new(16, 16, 8).transform(&x));
+            let mut rest = Vec::new();
+            reader.read_to_end(&mut rest).unwrap();
+            assert!(rest.is_empty(), "drain must close the keep-alive stream");
+        }));
+    }
+
+    // Wait until every request is written, give the reactors a beat to
+    // consume them into the batcher's accumulation window, then start
+    // the drain underneath the parked work.
+    for _ in 0..8 {
+        sent_rx.recv().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    server.begin_drain();
+
+    for handle in clients {
+        handle.join().expect("client thread");
+    }
+
+    let started = std::time::Instant::now();
+    let m = server.drain(Duration::from_secs(10));
+    assert!(
+        started.elapsed() < Duration::from_secs(9),
+        "drain must converge well before its timeout"
+    );
+    assert_eq!(m.requests, 8, "every in-flight request must be served");
 }

@@ -28,6 +28,8 @@ fn sample_request(width: usize, rng: &mut Rng, threshold_mode: usize) -> Transfo
         x,
         thresholds_units,
         scale: None,
+        deadline: None,
+        deadline: None,
     }
 }
 
@@ -138,6 +140,7 @@ fn planned_mixed_partitions_are_bit_identical_across_shard_counts() {
         let req = TransformRequest {
             thresholds_units: vec![0.0; width],
             scale: Some(Quantizer::new(8).scale_for(&x)),
+            deadline: None,
             x,
         };
         let golden = QuantBwht::new(width, 128, 8).transform(&req.x);
@@ -213,6 +216,7 @@ fn fused_routing_is_bit_identical_across_shards_partitions_and_batch_sizes() {
                         (0..width).map(|_| rng.uniform_range(0.0, 40.0)).collect();
                     TransformRequest {
                         scale: Some(Quantizer::new(8).scale_for(&x)),
+                        deadline: None,
                         x,
                         thresholds_units,
                     }
@@ -280,6 +284,7 @@ fn fused_noisy_batches_keep_rng_stream_alignment() {
                 .collect();
             TransformRequest {
                 scale: Some(Quantizer::new(8).scale_for(&x)),
+                deadline: None,
                 x,
                 thresholds_units: vec![0.0; width],
             }
@@ -324,6 +329,7 @@ fn fused_batches_survive_shard_loss_with_per_slice_reroute() {
                 .collect();
             TransformRequest {
                 scale: Some(Quantizer::new(8).scale_for(&x)),
+                deadline: None,
                 x,
                 thresholds_units: vec![0.0; width],
             }
